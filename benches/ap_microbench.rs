@@ -1,0 +1,84 @@
+//! Fig 13 — Adapter Parallelism microbenchmark: speedup over FSDP across
+//! per-adapter batch sizes on 4×H100 (8 adapters, seq 256), vs TP, mLoRA
+//! and LoRAFusion.  AP peaks in the small-batch regime (paper: 4.7× at
+//! bs=2) and keeps its edge at bs=8.
+
+use alto::bench::{banner, f, Table};
+use alto::cluster::gpu::GpuSpec;
+use alto::config::MODEL_FAMILY;
+use alto::parallel::baselines::{Alto, Fsdp, LoraFusion, MLora, TensorParallel};
+use alto::parallel::workload::{Strategy, Workload};
+
+fn main() {
+    let gpu = GpuSpec::h100_sxm5();
+    let model = MODEL_FAMILY.get("llama-8b").unwrap();
+    banner("Fig 13: step time (ms) for 8 adapters, seq 256, 4×H100");
+    let mut t = Table::new(&[
+        "per-adapter bs", "FSDP", "TP", "mLoRA", "LoRAFusion", "AP (ours)",
+        "AP vs FSDP",
+    ]);
+    let mut peak: (usize, f64) = (0, 0.0);
+    for bs in [1usize, 2, 4, 8] {
+        let w = Workload {
+            model: model.clone(),
+            ranks: vec![16; 8],
+            batch_per_adapter: bs,
+            seq_len: 256,
+        };
+        let ms = |s: &dyn Strategy| s.step_time(&w, &gpu, 4).total() * 1e3;
+        let fsdp = ms(&Fsdp);
+        let ap = ms(&Alto);
+        let speed = fsdp / ap;
+        if speed > peak.1 {
+            peak = (bs, speed);
+        }
+        t.row(vec![
+            format!("{bs}{}", if bs < 4 { " (FSDP padded)" } else { "" }),
+            f(fsdp, 1),
+            f(ms(&TensorParallel), 1),
+            f(ms(&MLora), 1),
+            f(ms(&LoraFusion), 1),
+            f(ap, 1),
+            format!("{speed:.1}x"),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nAP peak speedup: {:.1}x at per-adapter batch {} \
+         (paper: 4.7x at bs=2; FSDP cannot run bs<4 on 4 ranks — padded, \
+         dashed bars in the paper)",
+        peak.1, peak.0
+    );
+
+    banner("breakdown at bs=2 (where AP peaks)");
+    let w = Workload {
+        model: model.clone(),
+        ranks: vec![16; 8],
+        batch_per_adapter: 2,
+        seq_len: 256,
+    };
+    let mut t = Table::new(&["strategy", "compute", "memory", "lora", "comm", "launch", "bubble", "idle%"]);
+    let rows: Vec<(&str, Box<dyn Strategy>)> = vec![
+        ("FSDP", Box::new(Fsdp)),
+        ("TP", Box::new(TensorParallel)),
+        ("mLoRA", Box::new(MLora)),
+        ("LoRAFusion", Box::new(LoraFusion)),
+        ("AP (ours)", Box::new(Alto)),
+    ];
+    for (name, s) in rows {
+        let b = s.step_time(&w, &gpu, 4);
+        t.row(vec![
+            name.into(),
+            f(b.compute_s * 1e3, 2),
+            f(b.memory_s * 1e3, 2),
+            f(b.lora_s * 1e3, 2),
+            f(b.comm_s * 1e3, 2),
+            f(b.launch_s * 1e3, 2),
+            f(b.bubble_s * 1e3, 2),
+            f(b.idle_frac * 100.0, 0),
+        ]);
+    }
+    t.print();
+    println!("(all ms; AP pays the weight all-gather once per step but \
+              never idles a rank and never communicates adapter gradients)");
+}

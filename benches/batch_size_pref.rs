@@ -1,0 +1,64 @@
+//! Fig 3 — LoRA fine-tuning prefers small batch sizes: best val loss vs
+//! per-adapter batch size across five learning rates (SFT), and DPO
+//! reward accuracy vs batch size.  Peaks at ≤ 16, degrades beyond 32.
+
+use alto::bench::{banner, f, pct, Table};
+use alto::config::HyperParams;
+use alto::data::synth::dataset_profile;
+use alto::trajsim::SimJob;
+
+const BATCHES: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+const LRS: [f64; 5] = [1e-5, 5e-5, 2e-4, 3e-4, 5e-4];
+
+fn mean_best_val(ds: &str, lr: f64, bs: usize, seeds: u64) -> f64 {
+    let prof = dataset_profile(ds).unwrap();
+    let mut tot = 0.0;
+    for s in 0..seeds {
+        let hp = HyperParams { lr, rank: 16, batch_size: bs };
+        tot += SimJob::new(&hp, prof, 400, s * 131 + 7).best_val_loss();
+    }
+    tot / seeds as f64
+}
+
+fn main() {
+    let seeds = if alto::bench::quick() { 3 } else { 10 };
+    for ds in ["gsm-syn", "instr-syn", "reason-syn"] {
+        banner(&format!("Fig 3 (SFT, llama-8b analog on {ds}): val loss vs batch"));
+        let mut t = Table::new(&["lr \\ batch", "1", "2", "4", "8", "16", "32", "64"]);
+        for lr in LRS {
+            let mut row = vec![format!("{lr:.0e}")];
+            for bs in BATCHES {
+                row.push(f(mean_best_val(ds, lr, bs, seeds), 3));
+            }
+            t.row(row);
+        }
+        t.print();
+        // the headline check: batch 64 worse than batch ≤ 8 at the good lr
+        let small = mean_best_val(ds, 2e-4, 4, seeds);
+        let large = mean_best_val(ds, 2e-4, 64, seeds);
+        println!(
+            "at lr=2e-4: batch 4 → {:.3}, batch 64 → {:.3} ({} degradation)",
+            small,
+            large,
+            pct(large / small - 1.0)
+        );
+    }
+
+    banner("Fig 3(d) (DPO, qwen-32b analog on pref-syn): reward acc vs batch");
+    let prof = dataset_profile("pref-syn").unwrap();
+    let mut t = Table::new(&["lr \\ batch", "2", "4", "8", "16", "32", "64"]);
+    for lr in LRS {
+        let mut row = vec![format!("{lr:.0e}")];
+        for bs in [2usize, 4, 8, 16, 32, 64] {
+            let mut tot = 0.0;
+            for s in 0..seeds {
+                let hp = HyperParams { lr, rank: 32, batch_size: bs };
+                tot += SimJob::new(&hp, prof, 300, s * 57 + 3).reward_accuracy();
+            }
+            row.push(pct(tot / seeds as f64));
+        }
+        t.row(row);
+    }
+    t.print();
+    println!("(paper: performance peaks at small batch sizes ≤ 16 across all lrs)");
+}

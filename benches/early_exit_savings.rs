@@ -1,0 +1,80 @@
+//! Fig 15 — training samples saved by each early-exit pattern across
+//! seven model–dataset combinations (six SFT + one DPO), with the
+//! identical detector parameters the paper uses (w=2, p=2, τ_gap=0.1,
+//! τ_slope=0.001, 5% warmup, 25% retention), plus the best-val-loss
+//! quality ratio w/ vs w/o early exit (≈ 1.0 = no quality loss).
+
+use alto::bench::{banner, f, pct, Table};
+use alto::config::{SearchSpace, TaskSpec};
+use alto::coordinator::service::{Service, ServiceConfig};
+use alto::coordinator::task_runner::RunConfig;
+
+fn spec(model: &str, ds: &str, seed: u64, samples: usize) -> TaskSpec {
+    TaskSpec {
+        name: format!("{model}/{ds}"),
+        model: model.into(),
+        dataset: ds.into(),
+        search_space: SearchSpace::paper_single_gpu(),
+        train_samples: samples,
+        seq_len: 512,
+        seed,
+        ..TaskSpec::default()
+    }
+}
+
+fn main() {
+    let samples = if alto::bench::quick() { 96 } else { 256 };
+    let combos = [
+        spec("llama-8b", "gsm-syn", 1, samples),
+        spec("llama-8b", "instr-syn", 2, samples),
+        spec("llama-8b", "reason-syn", 3, samples),
+        spec("qwen-7b", "gsm-syn", 4, samples),
+        spec("qwen-7b", "instr-syn", 5, samples),
+        spec("qwen-7b", "reason-syn", 6, samples),
+        spec("qwen-32b", "pref-syn", 7, samples),
+    ];
+
+    banner("Fig 15: samples saved by detector (identical thresholds everywhere)");
+    let mut t = Table::new(&[
+        "model/dataset", "saved total", "underperf", "overfit", "diverge",
+        "quality ratio",
+    ]);
+    let svc = Service::new(ServiceConfig::default());
+    let svc_off = Service::new(ServiceConfig {
+        run: RunConfig {
+            enable_early_exit: false,
+            enable_warmup_selection: false,
+            ..RunConfig::default()
+        },
+        ..ServiceConfig::default()
+    });
+    let mut sft_under_share = vec![];
+    for s in &combos {
+        let on = svc.run_task_simulated(s).unwrap();
+        let off = svc_off.run_task_simulated(s).unwrap();
+        let saved_total: usize = on.saved_by_reason.values().sum();
+        let get = |k: &str| *on.saved_by_reason.get(k).unwrap_or(&0) as f64;
+        let share = |k: &str| {
+            if saved_total == 0 { 0.0 } else { get(k) / saved_total as f64 }
+        };
+        if s.dataset != "pref-syn" {
+            sft_under_share.push(share("underperforming"));
+        }
+        t.row(vec![
+            s.name.clone(),
+            pct(saved_total as f64 / on.samples_budget as f64),
+            pct(share("underperforming")),
+            pct(share("overfitting")),
+            pct(share("diverging")),
+            f(on.best_val / off.best_val, 3),
+        ]);
+    }
+    t.print();
+    let mean_under = sft_under_share.iter().sum::<f64>() / sft_under_share.len() as f64;
+    println!(
+        "\nmean SFT underperformance share of savings: {} \
+         (paper: ~66%; overfit+divergence contribute proportionally more \
+         in DPO; quality ratios at or near 1.0 confirm no quality loss)",
+        pct(mean_under)
+    );
+}

@@ -1,0 +1,124 @@
+//! Fig 1 — hyperparameter sensitivity: best-val-loss distribution across
+//! the paper's 60/165-config spaces, GSM-style accuracy spread, and DPO
+//! reward-accuracy spread.  Sweep-scale rows run on the calibrated
+//! trajectory simulator; a real tiny-family sweep (PJRT) anchors the
+//! small-scale analog when artifacts are present.
+
+use alto::bench::{banner, f, pct, Table};
+use alto::config::SearchSpace;
+use alto::data::synth::dataset_profile;
+use alto::stats;
+use alto::trajsim::SimJob;
+
+fn main() {
+    banner("Fig 1(a): best validation loss across hyperparameter configs");
+    let mut t = Table::new(&[
+        "model/dataset", "configs", "min", "p25", "median", "p75", "max", "max/min",
+    ]);
+    let combos = [
+        ("llama-8b", "gsm-syn", 41u64),
+        ("llama-8b", "instr-syn", 42),
+        ("llama-8b", "reason-syn", 43),
+        ("qwen-7b", "gsm-syn", 44),
+        ("qwen-7b", "instr-syn", 45),
+        ("qwen-7b", "reason-syn", 46),
+    ];
+    for (model, ds, seed) in combos {
+        let prof = dataset_profile(ds).unwrap();
+        let vals: Vec<f64> = SearchSpace::paper_single_gpu()
+            .expand()
+            .iter()
+            .map(|hp| SimJob::new(hp, prof, 600, seed).best_val_loss())
+            .collect();
+        let s = stats::summarize(&vals);
+        t.row(vec![
+            format!("{model}/{ds}"),
+            format!("{}", vals.len()),
+            f(s.min, 3),
+            f(s.p25, 3),
+            f(s.median, 3),
+            f(s.p75, 3),
+            f(s.max, 3),
+            f(s.max / s.min, 1),
+        ]);
+    }
+    t.print();
+
+    banner("Fig 1(b): GSM accuracy spread of best checkpoint per config");
+    let mut t = Table::new(&["model", "best", "median", "worst", "spread"]);
+    for (model, seed) in [("llama-8b", 41u64), ("qwen-7b", 44)] {
+        let prof = dataset_profile("gsm-syn").unwrap();
+        let accs: Vec<f64> = SearchSpace::paper_single_gpu()
+            .expand()
+            .iter()
+            .map(|hp| SimJob::new(hp, prof, 600, seed).final_accuracy())
+            .collect();
+        let s = stats::summarize(&accs);
+        t.row(vec![
+            model.into(),
+            pct(s.max),
+            pct(s.median),
+            pct(s.min),
+            pct(s.max - s.min),
+        ]);
+    }
+    t.print();
+    println!("(paper: best 42.8% / 73.9%, worst ≈ 0%, spread up to 73.9%)");
+
+    banner("Fig 1(c): DPO reward-accuracy spread (qwen-32b / pref-syn)");
+    let prof = dataset_profile("pref-syn").unwrap();
+    let accs: Vec<f64> = SearchSpace::paper_multi_gpu()
+        .expand()
+        .iter()
+        .take(60)
+        .map(|hp| SimJob::new(hp, prof, 400, 7).reward_accuracy())
+        .collect();
+    let s = stats::summarize(&accs);
+    let mut t = Table::new(&["configs", "best", "worst", "spread"]);
+    t.row(vec![
+        format!("{}", accs.len()),
+        pct(s.max),
+        pct(s.min),
+        pct(s.max - s.min),
+    ]);
+    t.print();
+    println!("(paper: ~80% → ~53%, spread 26.7%)");
+
+    // real anchor (PJRT tiny sweep), when artifacts exist
+    if std::path::Path::new("artifacts/manifest.json").exists() && !alto::bench::quick() {
+        banner("real anchor: nano sweep on PJRT (8 configs × 60 steps)");
+        real_anchor();
+    }
+}
+
+fn real_anchor() {
+    use alto::config::HyperParams;
+    use alto::coordinator::task_runner::RunConfig;
+    use alto::data::corpus::Corpus;
+    use alto::runtime::{Manifest, Runtime};
+    use alto::train::run_real_sweep;
+
+    let rt = Runtime::cpu().unwrap();
+    let m = Manifest::load("artifacts").unwrap();
+    let key = "sft_nano_n4_b2_t32_r8";
+    let corpus = Corpus::build("gsm-syn", 512, 32, 32, 7).unwrap();
+    let configs: Vec<HyperParams> = [1e-4, 5e-4, 2e-3, 5e-3, 1e-2, 3e-2, 1e-3, 2e-2]
+        .iter()
+        .map(|&lr| HyperParams { lr, rank: 8, batch_size: 2 })
+        .collect();
+    let cfg = RunConfig {
+        enable_early_exit: false,
+        enable_warmup_selection: false,
+        eval_every: 10,
+        ..RunConfig::default()
+    };
+    let out = run_real_sweep(&rt, &m, key, corpus, &configs, 60, &cfg, 3).unwrap();
+    let mut t = Table::new(&["lr", "best val loss"]);
+    for j in &out.result.jobs {
+        t.row(vec![format!("{:.0e}", j.hp.lr), f(j.best_val, 4)]);
+    }
+    t.print();
+    let vals: Vec<f64> = out.result.jobs.iter().map(|j| j.best_val).collect();
+    let s = alto::stats::summarize(&vals);
+    println!("real spread: {:.3} .. {:.3} ({:.2}x)", s.min, s.max, s.max / s.min);
+}

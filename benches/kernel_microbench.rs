@@ -1,0 +1,120 @@
+//! Table 2 — kernel microbenchmark.  Two parts:
+//!
+//! (a) REAL (CPU PJRT): the batched N=4 grouped-kernel train step vs four
+//!     sequential N=1 steps through the actual compiled artifacts — the
+//!     measured analog of "Fused vs Sequential" on this host.
+//! (b) ANALYTIC (H100 constants): the paper's exact setting — llama-1b
+//!     scale, 32 adapters, ranks {16,32,64} mixed — Fused (ALTO grouped)
+//!     vs PyTorch back-to-back (batched backbone + per-adapter LoRA
+//!     kernels) vs fully Sequential, at per-adapter batch ∈ {1, 2, 4}.
+
+use alto::bench::{banner, f, time_median, Table};
+use alto::cluster::gpu::GpuSpec;
+use alto::config::MODEL_FAMILY;
+use alto::parallel::baselines::{Alto, MLora, Sequential};
+use alto::parallel::workload::{Strategy, Workload};
+
+fn analytic() {
+    let gpu = GpuSpec::h100_sxm5();
+    let model = MODEL_FAMILY.get("llama-1b").unwrap();
+    banner("Table 2 (analytic, H100): 32 adapters, ranks 16/32/64 mixed, seq 256");
+    let mut ranks = vec![];
+    for i in 0..32 {
+        ranks.push([16, 32, 64][i % 3]);
+    }
+    let mut t = Table::new(&[
+        "per-adapter BS", "PyTorch (s)", "Sequential (s)", "Fused (s)",
+        "vs PyTorch", "vs Sequential",
+    ]);
+    let steps = 200.0; // arbitrary fixed step count; ratios are the result
+    for bs in [1usize, 2, 4] {
+        let w = Workload {
+            model: model.clone(),
+            ranks: ranks.clone(),
+            batch_per_adapter: bs,
+            seq_len: 256,
+        };
+        let fused = Alto.step_time(&w, &gpu, 1).total() * steps;
+        let pytorch = MLora.step_time(&w, &gpu, 1).total() * steps;
+        let seq = Sequential.step_time(&w, &gpu, 1).total() * steps;
+        t.row(vec![
+            format!("{bs}"),
+            f(pytorch, 1),
+            f(seq, 1),
+            f(fused, 1),
+            format!("{:.2}x", pytorch / fused),
+            format!("{:.1}x", seq / fused),
+        ]);
+    }
+    t.print();
+    println!(
+        "(paper Table 2: fused 1.91x/1.74x/1.36x over PyTorch and \
+         5.1x/3.7x/2.5x over Sequential at BS 1/2/4 — gains scale \
+         inversely with batch size as the LoRA path's share shrinks)"
+    );
+}
+
+fn real() -> anyhow::Result<()> {
+    use alto::config::HyperParams;
+    use alto::coordinator::executor::{Backend, XlaBackend};
+    use alto::data::corpus::Corpus;
+    use alto::runtime::{Manifest, Runtime};
+
+    let rt = Runtime::cpu()?;
+    let m = Manifest::load("artifacts")?;
+    let (batched_key, single_key) = ("sft_nano_n4_b2_t32_r8", "sft_nano_n1_b2_t32_r8");
+    if !m.artifacts.contains_key(batched_key) || !m.artifacts.contains_key(single_key) {
+        println!("(real part skipped: need {batched_key} + {single_key})");
+        return Ok(());
+    }
+    banner("Table 2 (REAL, CPU PJRT): batched N=4 grouped step vs 4 × N=1 steps");
+    let corpus = Corpus::build("gsm-syn", 256, 16, 32, 7)?;
+    let hp = |r: usize| HyperParams { lr: 1e-3, rank: r, batch_size: 2 };
+
+    let mut batched = XlaBackend::new_sft(&rt, &m, batched_key, corpus.clone(), 1)?;
+    for (slot, r) in [8usize, 8, 4, 2].iter().enumerate() {
+        batched.onload(slot, &hp(*r), 100, slot as u64)?;
+    }
+    let runs = if alto::bench::quick() { 5 } else { 15 };
+    let t_batched = time_median(2, runs, || {
+        batched.step().unwrap();
+    });
+
+    let mut singles: Vec<XlaBackend> = [8usize, 8, 4, 2]
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let mut b =
+                XlaBackend::new_sft(&rt, &m, single_key, corpus.clone(), 1).unwrap();
+            b.onload(0, &hp(*r), 100, i as u64).unwrap();
+            b
+        })
+        .collect();
+    let t_seq = time_median(2, runs, || {
+        for b in singles.iter_mut() {
+            b.step().unwrap();
+        }
+    });
+
+    let mut t = Table::new(&["variant", "ms/step (4 adapters)", "speedup"]);
+    t.row(vec!["sequential (4 × N=1)".into(), f(t_seq * 1e3, 2), "1.00x".into()]);
+    t.row(vec![
+        "ALTO batched (N=4 grouped)".into(),
+        f(t_batched * 1e3, 2),
+        format!("{:.2}x", t_seq / t_batched),
+    ]);
+    t.print();
+    println!(
+        "(measured through the full stack: Pallas grouped kernels → HLO → \
+         PJRT CPU; absolute times are CPU-bound, the *ratio* is the \
+         batching effect)"
+    );
+    Ok(())
+}
+
+fn main() {
+    analytic();
+    if let Err(e) = real() {
+        println!("(real part failed: {e:#})");
+    }
+}

@@ -1,0 +1,87 @@
+//! Fig 12 — component ablation on 8-GPU cluster makespan with 11
+//! heterogeneous tasks (2×70B/4-GPU, 3×32B/2-GPU, 6×{8B,7B}/1-GPU):
+//! B = batched LoRA, S = inter-task scheduler, EE = early exit.
+//! The full system (B+S+EE) vs batching alone (paper: 5.2× reduction,
+//! with EE the largest single contributor).
+
+use alto::bench::{banner, f, Table};
+use alto::config::{SearchSpace, TaskSpec};
+use alto::coordinator::service::{Service, ServiceConfig};
+use alto::coordinator::task_runner::RunConfig;
+use alto::sched::inter::Policy;
+
+fn task(name: &str, model: &str, gpus: usize, samples: usize, seed: u64) -> TaskSpec {
+    TaskSpec {
+        name: name.into(),
+        model: model.into(),
+        dataset: "gsm-syn".into(),
+        num_gpus: gpus,
+        search_space: SearchSpace {
+            lrs: vec![5e-5, 2e-4, 5e-4],
+            ranks: vec![16, 64],
+            batch_sizes: vec![1, 2, 4, 8],
+        },
+        train_samples: samples,
+        seq_len: 512,
+        seed,
+        ..TaskSpec::default()
+    }
+}
+
+fn main() {
+    let scale = if alto::bench::quick() { 64 } else { 192 };
+    // the paper's 11-task mix at varied batch sizes, in multi-tenant
+    // arrival order (interleaved — tenants submit independently, so the
+    // queue is not conveniently sorted; this is what FCFS actually sees)
+    let specs = vec![
+        task("8b-a", "llama-8b", 1, scale * 2, 6),
+        task("70b-a", "llama-70b", 4, scale, 1),
+        task("7b-a", "qwen-7b", 1, scale * 2, 9),
+        task("32b-a", "qwen-32b", 2, scale, 3),
+        task("8b-b", "llama-8b", 1, scale * 3 / 2, 7),
+        task("70b-b", "llama-70b", 4, scale * 3 / 4, 2),
+        task("7b-b", "qwen-7b", 1, scale * 3 / 2, 10),
+        task("32b-b", "qwen-32b", 2, scale * 3 / 4, 4),
+        task("8b-c", "llama-8b", 1, scale, 8),
+        task("32b-c", "qwen-32b", 2, scale / 2, 5),
+        task("7b-c", "qwen-7b", 1, scale, 11),
+    ];
+
+    let run_with = |ee: bool, policy: Policy| -> f64 {
+        let run = if ee {
+            RunConfig::default()
+        } else {
+            RunConfig {
+                enable_early_exit: false,
+                enable_warmup_selection: false,
+                ..RunConfig::default()
+            }
+        };
+        let svc = Service::new(ServiceConfig {
+            policy,
+            run,
+            ..ServiceConfig::default()
+        });
+        svc.run_service(&specs).unwrap().makespan
+    };
+
+    banner("Fig 12: 8-GPU makespan by component (11 heterogeneous tasks)");
+    let b = run_with(false, Policy::Fcfs);
+    let bs = run_with(false, Policy::Optimal);
+    let bee = run_with(true, Policy::Fcfs);
+    let bsee = run_with(true, Policy::Optimal);
+    let mut t = Table::new(&["configuration", "makespan (s)", "vs B"]);
+    t.row(vec!["B   (batched only, FCFS)".into(), f(b, 0), "1.00x".into()]);
+    t.row(vec!["B+S (batched + scheduler)".into(), f(bs, 0), format!("{:.2}x", b / bs)]);
+    t.row(vec!["B+EE (batched + early exit)".into(), f(bee, 0), format!("{:.2}x", b / bee)]);
+    t.row(vec!["B+S+EE (full ALTO)".into(), f(bsee, 0), format!("{:.2}x", b / bsee)]);
+    t.print();
+    println!(
+        "\nreduction of full system vs batching alone: {:.1}x (paper: 5.2x; \
+         early exit is the largest single contributor: {:.1}x alone)",
+        b / bsee,
+        b / bee
+    );
+    assert!(bee < b, "early exit must shrink makespan");
+    assert!(bsee <= bee * 1.02, "scheduler must not hurt");
+}

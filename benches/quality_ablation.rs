@@ -1,0 +1,94 @@
+//! Fig 14 — single-GPU quality ablation (llama-8b analog / gsm-syn):
+//! per-adapter accuracies across the full sweep (the grey dots — high
+//! variance, many near zero), best found by batching alone vs batching +
+//! early exit, and best val loss confirming no quality degradation.
+
+use alto::bench::{banner, f, pct, Table};
+use alto::config::{SearchSpace, TaskSpec};
+use alto::coordinator::service::{Service, ServiceConfig};
+use alto::coordinator::task_runner::RunConfig;
+use alto::data::synth::dataset_profile;
+use alto::stats;
+use alto::trajsim::SimJob;
+
+fn main() {
+    let samples = if alto::bench::quick() { 96 } else { 256 };
+    let prof = dataset_profile("gsm-syn").unwrap();
+
+    banner("Fig 14 (left): accuracy by per-adapter batch size");
+    let mut t = Table::new(&[
+        "batch", "sweep min", "sweep median", "sweep max",
+        "batched best", "batched+EE best",
+    ]);
+    let mut t2 = Table::new(&["batch", "best val (no EE)", "best val (EE)", "ratio"]);
+    for bs in [1usize, 2, 4, 8] {
+        let space = SearchSpace {
+            batch_sizes: vec![bs],
+            ..SearchSpace::paper_single_gpu()
+        };
+        // the grey dots: every config's final accuracy, full training
+        let seed = 100 + bs as u64;
+        let accs: Vec<f64> = space
+            .expand()
+            .iter()
+            .map(|hp| {
+                SimJob::new(hp, prof, (3 * samples / bs).max(1), seed).final_accuracy()
+            })
+            .collect();
+        let s = stats::summarize(&accs);
+
+        let run = |ee: bool| {
+            let spec = TaskSpec {
+                name: format!("b{bs}"),
+                model: "llama-8b".into(),
+                dataset: "gsm-syn".into(),
+                search_space: space.clone(),
+                train_samples: samples,
+                seed,
+                ..TaskSpec::default()
+            };
+            let cfg = if ee {
+                RunConfig::default()
+            } else {
+                RunConfig {
+                    enable_early_exit: false,
+                    enable_warmup_selection: false,
+                    ..RunConfig::default()
+                }
+            };
+            let svc = Service::new(ServiceConfig { run: cfg, ..ServiceConfig::default() });
+            let o = svc.run_task_simulated(&spec).unwrap();
+            // accuracy of the best-val job
+            let g = &o.group_results[0];
+            let hp = &g.jobs[g.best_job].hp;
+            (
+                SimJob::new(hp, prof, (3 * samples / bs).max(1), seed).final_accuracy(),
+                o.best_val,
+            )
+        };
+        let (acc_no_ee, val_no_ee) = run(false);
+        let (acc_ee, val_ee) = run(true);
+        t.row(vec![
+            format!("{bs}"),
+            pct(s.min),
+            pct(s.median),
+            pct(s.max),
+            pct(acc_no_ee),
+            pct(acc_ee),
+        ]);
+        t2.row(vec![
+            format!("{bs}"),
+            f(val_no_ee, 4),
+            f(val_ee, 4),
+            f(val_ee / val_no_ee, 3),
+        ]);
+    }
+    t.print();
+    banner("Fig 14 (right): best validation loss with vs without early exit");
+    t2.print();
+    println!(
+        "\n(paper: individual accuracies vary wildly with many near zero; \
+         early exit preserves or improves the best result by concentrating \
+         resources — val-loss ratios ≈ 1.0)"
+    );
+}

@@ -1,0 +1,101 @@
+//! Fig 10 — quality of the best configuration ALTO finds vs
+//! expert-recommended fixed hyperparameters (the paper's Unsloth / Tinker
+//! rows): GSM accuracy (higher better) and completion loss on the other
+//! datasets (lower better).  ALTO's search matches or beats the fixed
+//! recipes, and expert defaults often miss the best config.
+
+use alto::bench::{banner, f, pct, Table};
+use alto::config::{HyperParams, SearchSpace, TaskSpec};
+use alto::coordinator::service::{Service, ServiceConfig};
+use alto::data::synth::dataset_profile;
+use alto::trajsim::SimJob;
+
+/// Published default recipes, mapped onto the search dimensions.
+/// (Unsloth docs: lr 2e-4, r 16, small batch; Tinker-style: lr 1e-4,
+/// r 32, batch 4.)
+const EXPERTS: [(&str, HyperParams); 2] = [
+    ("unsloth-default", HyperParams { lr: 2e-4, rank: 16, batch_size: 8 }),
+    ("tinker-default", HyperParams { lr: 1e-4, rank: 32, batch_size: 4 }),
+];
+
+fn main() {
+    let samples = if alto::bench::quick() { 96 } else { 256 };
+    banner("Fig 10(a): GSM accuracy — ALTO search vs expert defaults");
+    let mut t = Table::new(&["model", "ALTO best", "unsloth", "tinker"]);
+    for (model, seed) in [("llama-8b", 21u64), ("qwen-7b", 24)] {
+        let spec = TaskSpec {
+            name: model.into(),
+            model: model.into(),
+            dataset: "gsm-syn".into(),
+            search_space: SearchSpace::paper_single_gpu(),
+            train_samples: samples,
+            seed,
+            ..TaskSpec::default()
+        };
+        let svc = Service::new(ServiceConfig::default());
+        let outcome = svc.run_task_simulated(&spec).unwrap();
+        // map the winning job's best-val to accuracy via the same
+        // trajectory object the executor sampled
+        let prof = dataset_profile("gsm-syn").unwrap();
+        let total = 3 * samples; // epochs × samples at bs=1 granularity
+        let acc_of = |hp: &HyperParams, s: u64| {
+            SimJob::new(hp, prof, total / hp.batch_size.max(1), s).final_accuracy()
+        };
+        // ALTO: accuracy of the best-val job it retained
+        let best_hp = {
+            let mut best: Option<(&HyperParams, f64)> = None;
+            for g in &outcome.group_results {
+                let j = &g.jobs[g.best_job];
+                if best.is_none() || j.best_val < best.as_ref().unwrap().1 {
+                    best = Some((&j.hp, j.best_val));
+                }
+            }
+            best.unwrap().0.clone()
+        };
+        t.row(vec![
+            model.into(),
+            pct(acc_of(&best_hp, seed)),
+            pct(acc_of(&EXPERTS[0].1, seed)),
+            pct(acc_of(&EXPERTS[1].1, seed)),
+        ]);
+    }
+    t.print();
+
+    banner("Fig 10(b,c): completion loss — ALTO search vs expert defaults");
+    let mut t = Table::new(&["model/dataset", "ALTO best", "unsloth", "tinker"]);
+    for (model, ds, seed) in [
+        ("llama-8b", "instr-syn", 31u64),
+        ("llama-8b", "reason-syn", 32),
+        ("qwen-7b", "instr-syn", 33),
+        ("qwen-7b", "reason-syn", 34),
+    ] {
+        let spec = TaskSpec {
+            name: model.into(),
+            model: model.into(),
+            dataset: ds.into(),
+            search_space: SearchSpace::paper_single_gpu(),
+            train_samples: samples,
+            seed,
+            ..TaskSpec::default()
+        };
+        let svc = Service::new(ServiceConfig::default());
+        let outcome = svc.run_task_simulated(&spec).unwrap();
+        let prof = dataset_profile(ds).unwrap();
+        let total = 3 * samples;
+        let loss_of = |hp: &HyperParams, s: u64| {
+            SimJob::new(hp, prof, total / hp.batch_size.max(1), s).best_val_loss()
+        };
+        t.row(vec![
+            format!("{model}/{ds}"),
+            f(outcome.best_val, 4),
+            f(loss_of(&EXPERTS[0].1, seed), 4),
+            f(loss_of(&EXPERTS[1].1, seed), 4),
+        ]);
+    }
+    t.print();
+    println!(
+        "\n(paper: ALTO matches or exceeds expert-recommended settings on \
+         every model–dataset combination; fixed recipes frequently miss \
+         the best configuration — the motivation for systematic search)"
+    );
+}

@@ -1,0 +1,81 @@
+//! Fig 5 — shortest-job-first vs makespan-aware inter-task scheduling:
+//! the didactic instance where SJF fragments the cluster, plus solver
+//! quality/latency statistics on random paper-scale instances.
+
+use alto::bench::{banner, f, time_median, Table};
+use alto::sched::solver::{
+    fcfs_schedule, lower_bound, lpt_schedule, sjf_schedule, solve, SchedTask, Schedule,
+};
+use alto::util::rng::Pcg32;
+
+fn gantt(label: &str, tasks: &[SchedTask], s: &Schedule) {
+    println!("{label}: makespan {:.1}s", s.makespan);
+    let scale = 40.0 / s.makespan.max(1e-9);
+    let mut placements = s.placements.clone();
+    placements.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap().then(a.id.cmp(&b.id)));
+    for p in &placements {
+        let d = tasks.iter().find(|t| t.id == p.id).unwrap().duration;
+        let pre = (p.start * scale) as usize;
+        let len = ((d * scale) as usize).max(1);
+        println!(
+            "  task{:<2} {}{} ({} GPUs, {:.1}s @ {:.1}s)",
+            p.id,
+            " ".repeat(pre),
+            "#".repeat(len),
+            p.gpus,
+            d,
+            p.start
+        );
+    }
+}
+
+fn main() {
+    banner("Fig 5: SJF vs makespan-aware packing (2-GPU didactic instance)");
+    let tasks = [
+        SchedTask { id: 0, duration: 1.0, gpus: 1 },
+        SchedTask { id: 1, duration: 1.0, gpus: 1 },
+        SchedTask { id: 2, duration: 1.5, gpus: 1 },
+        SchedTask { id: 3, duration: 2.0, gpus: 2 },
+    ];
+    gantt("(a) SJF", &tasks, &sjf_schedule(&tasks, 2));
+    gantt("(b) ALTO (exact B&B)", &tasks, &solve(&tasks, 2).unwrap());
+
+    banner("solver quality + latency on random 8-GPU instances");
+    let mut t = Table::new(&["n tasks", "opt/LB", "SJF/opt", "FCFS/opt", "LPT/opt", "solve ms"]);
+    let trials = if alto::bench::quick() { 5 } else { 20 };
+    for n in [4usize, 6, 8, 10, 12] {
+        let mut rng = Pcg32::seeded(n as u64);
+        let (mut r_lb, mut r_sjf, mut r_fcfs, mut r_lpt, mut ms) =
+            (0.0, 0.0, 0.0, 0.0, 0.0);
+        for _ in 0..trials {
+            let tasks: Vec<SchedTask> = (0..n)
+                .map(|i| SchedTask {
+                    id: i,
+                    duration: rng.uniform(1.0, 20.0),
+                    gpus: *rng.choice(&[1, 1, 1, 2, 2, 4]),
+                })
+                .collect();
+            let tm = time_median(0, 1, || {
+                let _ = solve(&tasks, 8).unwrap();
+            });
+            let opt = solve(&tasks, 8).unwrap().makespan;
+            r_lb += opt / lower_bound(&tasks, 8);
+            r_sjf += sjf_schedule(&tasks, 8).makespan / opt;
+            r_fcfs += fcfs_schedule(&tasks, 8).makespan / opt;
+            r_lpt += lpt_schedule(&tasks, 8).makespan / opt;
+            ms += tm * 1e3;
+        }
+        let k = trials as f64;
+        t.row(vec![
+            format!("{n}"),
+            f(r_lb / k, 3),
+            f(r_sjf / k, 3),
+            f(r_fcfs / k, 3),
+            f(r_lpt / k, 3),
+            f(ms / k, 2),
+        ]);
+    }
+    t.print();
+    println!("(paper §7.2: the CP solver finds the optimum in < 1 s for all \
+              tested instances — ours solves n ≤ 12 in milliseconds)");
+}

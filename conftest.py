@@ -1,0 +1,7 @@
+"""Make `pytest python/tests/` work from the repo root: the build-time
+Python package (`compile`) lives under python/."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,74 @@
+//! DPO hyperparameter tuning on the *real* PJRT path (paper §8.2 "RL
+//! End-to-end results"): batched multi-adapter DPO training over a shared
+//! frozen backbone, loss-aware early exit, preference accuracy reported
+//! per configuration.
+//!
+//! Requires `make artifacts` (test preset is enough).
+//!
+//!     cargo run --release --example dpo_tuning
+
+use alto::data::corpus::PrefCorpus;
+use alto::runtime::{Manifest, Runtime, Session};
+
+const KEY: &str = "dpo_nano_n2_b2_t32_r8";
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load("artifacts")?;
+    let spec = manifest.get(KEY)?.clone();
+    println!(
+        "DPO tuning on {} ({} params), {} adapters/executor, batch {}",
+        spec.model.name, spec.model.param_count, spec.n, spec.b
+    );
+
+    let corpus = PrefCorpus::build(512, spec.t, 11);
+    // two waves of configurations through the 2-slot executor
+    let waves: [&[(usize, f64)]; 2] =
+        [&[(8, 5e-3), (8, 1e-3)], &[(4, 5e-3), (2, 2e-2)]];
+    let steps = 120usize;
+    let mut results: Vec<(String, f64, f64)> = vec![];
+
+    for (w, wave) in waves.iter().enumerate() {
+        let ranks: Vec<usize> = wave.iter().map(|&(r, _)| r).collect();
+        let lrs: Vec<f64> = wave.iter().map(|&(_, lr)| lr).collect();
+        let mut sess = Session::new(&rt, &manifest, KEY, &ranks, &lrs, 40 + w as u64)?;
+        let mut best_acc = vec![0.0f64; spec.n];
+        for step in 0..steps as u64 {
+            let b = corpus.train_batch(spec.n, spec.b, step, 5);
+            let (losses, _) = sess.dpo_step(&b)?;
+            if step % 20 == 19 {
+                let vb = corpus.val_batch(spec.n, spec.b);
+                let (vl, va) = sess.dpo_eval(&vb)?;
+                for i in 0..spec.n {
+                    best_acc[i] = best_acc[i].max(va[i] as f64);
+                }
+                println!(
+                    "  wave {w} step {:>3}: train {:?} val {:?} acc {:?}",
+                    step + 1,
+                    losses.iter().map(|l| (l * 1e3).round() / 1e3).collect::<Vec<_>>(),
+                    vl.iter().map(|l| (l * 1e3).round() / 1e3).collect::<Vec<_>>(),
+                    va
+                );
+            }
+        }
+        for i in 0..spec.n {
+            results.push((
+                format!("r{}_lr{:.0e}", ranks[i], lrs[i]),
+                best_acc[i],
+                lrs[i],
+            ));
+        }
+    }
+
+    println!("\nconfig           best preference accuracy");
+    results.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for (label, acc, _) in &results {
+        println!("  {label:<14} {:.1}%", 100.0 * acc);
+    }
+    println!(
+        "\nbest configuration: {} at {:.1}% preference accuracy",
+        results[0].0,
+        100.0 * results[0].1
+    );
+    Ok(())
+}

@@ -1,0 +1,329 @@
+"""AOT lowering: jax train/eval/decode/DPO steps → HLO **text** artifacts.
+
+The interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Each artifact *variant* is one (model config, N adapters, per-adapter
+batch B, seq T, r_max) tuple — the paper's homogeneous batch grouping
+(§A.1) makes one compiled step per batch-size group the natural unit.
+``manifest.json`` records every input/output (name, shape, dtype) in the
+exact flat order the Rust runtime must feed literals.
+
+Usage:  python -m compile.aot --out ../artifacts [--preset test|default|full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+@dataclass(frozen=True)
+class Variant:
+    """One artifact variant; ``key`` names the files and manifest entry."""
+
+    kind: str  # "sft" | "dpo"
+    model: str
+    n: int       # co-located adapters
+    b: int       # per-adapter batch size
+    t: int       # sequence length
+    r_max: int   # rank-padding width
+
+    @property
+    def key(self) -> str:
+        return f"{self.kind}_{self.model}_n{self.n}_b{self.b}_t{self.t}_r{self.r_max}"
+
+
+# Variant presets.  "test" is what CI / pytest / cargo test need; "default"
+# adds the sweep + e2e models; "full" adds the 25M-param medium config.
+PRESETS: Dict[str, List[Variant]] = {
+    "test": [
+        Variant("sft", "nano", 4, 2, 32, 8),
+        Variant("sft", "nano", 1, 2, 32, 8),
+        Variant("dpo", "nano", 2, 2, 32, 8),
+    ],
+    "default": [
+        Variant("sft", "nano", 4, 2, 32, 8),
+        Variant("sft", "nano", 1, 2, 32, 8),
+        Variant("dpo", "nano", 2, 2, 32, 8),
+        Variant("sft", "micro", 4, 2, 64, 16),
+        Variant("sft", "micro", 4, 4, 64, 16),
+        Variant("dpo", "micro", 4, 2, 64, 16),
+        Variant("sft", "small", 4, 2, 64, 16),
+    ],
+    "full": [],  # filled below: default + medium
+}
+PRESETS["full"] = PRESETS["default"] + [
+    Variant("sft", "medium", 2, 2, 64, 16),
+]
+
+
+def _spec(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _entry(name: str, shape, dtype) -> dict:
+    return {"name": name, "shape": [int(s) for s in shape],
+            "dtype": jnp.dtype(dtype).name}
+
+
+def _base_specs(cfg: M.ModelConfig) -> List[Tuple[str, tuple, object]]:
+    L, d, f, V = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab
+    shapes = {
+        "embed": (V, d), "wq": (L, d, d), "wk": (L, d, d), "wv": (L, d, d),
+        "wo": (L, d, d), "wgate": (L, d, f), "wup": (L, d, f),
+        "wdown": (L, f, d), "ln1": (L, d), "ln2": (L, d), "lnf": (d,),
+    }
+    return [(k, shapes[k], jnp.float32) for k in M.BASE_PARAM_ORDER]
+
+
+def _adapter_specs(cfg: M.ModelConfig, n: int, r_max: int, prefix: str):
+    out = []
+    for key in M.ADAPTER_PARAM_ORDER:
+        mode, proj = key.split("_", 1)
+        d_in, d_out = cfg.proj_dims(proj)
+        shape = ((cfg.n_layers, n, d_in, r_max) if mode == "a"
+                 else (cfg.n_layers, n, r_max, d_out))
+        out.append((f"{prefix}{key}", shape, jnp.float32))
+    return out
+
+
+def _dicts_from_flat(names: List[str], args: List, groups: Dict[str, int]):
+    """Split positional args back into the dicts model.py expects."""
+    out, i = {}, 0
+    for gname, count in groups.items():
+        d = {}
+        for _ in range(count):
+            key = names[i].split(".", 1)[1] if "." in names[i] else names[i]
+            d[key] = args[i]
+            i += 1
+        out[gname] = d
+    return out, i
+
+
+def build_sft(cfg: M.ModelConfig, v: Variant):
+    """Flat-signature wrappers + specs for train/eval/decode."""
+    n, b, t, r = v.n, v.b, v.t, v.r_max
+    base_s = _base_specs(cfg)
+    ad_s = _adapter_specs(cfg, n, r, "ad.")
+    m_s = _adapter_specs(cfg, n, r, "m.")
+    v_s = _adapter_specs(cfg, n, r, "v.")
+    nb = len(base_s)
+    na = len(ad_s)
+
+    train_inputs = (base_s + ad_s + m_s + v_s + [
+        ("t", (), jnp.float32),
+        ("tokens", (n, b, t), jnp.int32),
+        ("targets", (n, b, t), jnp.int32),
+        ("lr", (n,), jnp.float32),
+        ("active", (n,), jnp.float32),
+        ("scale", (n,), jnp.float32),
+        ("rank_mask", (n, r), jnp.float32),
+    ])
+
+    def train_flat(*args):
+        names = [s[0] for s in train_inputs]
+        dicts, i = _dicts_from_flat(
+            names, list(args),
+            {"base": nb, "ad": na, "m": na, "v": na})
+        tt, tokens, targets, lr, active, scale, rmask = args[i:]
+        new_ad, new_m, new_v, losses = M.train_step(
+            cfg, dicts["base"], dicts["ad"], dicts["m"], dicts["v"], tt,
+            tokens, targets, lr, active, scale, rmask)
+        outs = tuple(new_ad[k] for k in M.ADAPTER_PARAM_ORDER)
+        outs += tuple(new_m[k] for k in M.ADAPTER_PARAM_ORDER)
+        outs += tuple(new_v[k] for k in M.ADAPTER_PARAM_ORDER)
+        return outs + (losses,)
+
+    # state outputs mirror the state inputs, in the same flat order
+    train_outputs = (ad_s + m_s + v_s + [("losses", (n,), jnp.float32)])
+
+    eval_inputs = (base_s + ad_s + [
+        ("tokens", (n, b, t), jnp.int32),
+        ("targets", (n, b, t), jnp.int32),
+        ("scale", (n,), jnp.float32),
+        ("rank_mask", (n, r), jnp.float32),
+    ])
+
+    def eval_flat(*args):
+        names = [s[0] for s in eval_inputs]
+        dicts, i = _dicts_from_flat(names, list(args),
+                                    {"base": nb, "ad": na})
+        tokens, targets, scale, rmask = args[i:]
+        return (M.eval_step(cfg, dicts["base"], dicts["ad"], tokens,
+                            targets, scale, rmask),)
+
+    eval_outputs = [("losses", (n,), jnp.float32)]
+
+    decode_inputs = (base_s + ad_s + [
+        ("tokens", (n, b, t), jnp.int32),
+        ("pos", (n, b), jnp.int32),
+        ("scale", (n,), jnp.float32),
+        ("rank_mask", (n, r), jnp.float32),
+    ])
+
+    def decode_flat(*args):
+        names = [s[0] for s in decode_inputs]
+        dicts, i = _dicts_from_flat(names, list(args),
+                                    {"base": nb, "ad": na})
+        tokens, pos, scale, rmask = args[i:]
+        return (M.decode_step(cfg, dicts["base"], dicts["ad"], tokens, pos,
+                              scale, rmask),)
+
+    decode_outputs = [("next_tokens", (n, b), jnp.int32)]
+
+    return {
+        "train": (train_flat, train_inputs, train_outputs),
+        "eval": (eval_flat, eval_inputs, eval_outputs),
+        "decode": (decode_flat, decode_inputs, decode_outputs),
+    }
+
+
+def build_dpo(cfg: M.ModelConfig, v: Variant):
+    n, b, t, r = v.n, v.b, v.t, v.r_max
+    base_s = _base_specs(cfg)
+    ad_s = _adapter_specs(cfg, n, r, "ad.")
+    m_s = _adapter_specs(cfg, n, r, "m.")
+    v_s = _adapter_specs(cfg, n, r, "v.")
+    nb, na = len(base_s), len(ad_s)
+
+    train_inputs = (base_s + ad_s + m_s + v_s + [
+        ("t", (), jnp.float32),
+        ("tok_c", (n, b, t), jnp.int32),
+        ("tgt_c", (n, b, t), jnp.int32),
+        ("tok_r", (n, b, t), jnp.int32),
+        ("tgt_r", (n, b, t), jnp.int32),
+        ("beta", (), jnp.float32),
+        ("lr", (n,), jnp.float32),
+        ("active", (n,), jnp.float32),
+        ("scale", (n,), jnp.float32),
+        ("rank_mask", (n, r), jnp.float32),
+    ])
+
+    def train_flat(*args):
+        names = [s[0] for s in train_inputs]
+        dicts, i = _dicts_from_flat(
+            names, list(args), {"base": nb, "ad": na, "m": na, "v": na})
+        tt, tok_c, tgt_c, tok_r, tgt_r, beta, lr, act, scale, rmask = args[i:]
+        new_ad, new_m, new_v, losses, acc = M.dpo_step(
+            cfg, dicts["base"], dicts["ad"], dicts["m"], dicts["v"], tt,
+            tok_c, tgt_c, tok_r, tgt_r, beta, lr, act, scale, rmask)
+        outs = tuple(new_ad[k] for k in M.ADAPTER_PARAM_ORDER)
+        outs += tuple(new_m[k] for k in M.ADAPTER_PARAM_ORDER)
+        outs += tuple(new_v[k] for k in M.ADAPTER_PARAM_ORDER)
+        return outs + (losses, acc)
+
+    train_outputs = (ad_s + m_s + v_s + [
+        ("losses", (n,), jnp.float32),
+        ("reward_acc", (n,), jnp.float32),
+    ])
+
+    eval_inputs = (base_s + ad_s + [
+        ("tok_c", (n, b, t), jnp.int32),
+        ("tgt_c", (n, b, t), jnp.int32),
+        ("tok_r", (n, b, t), jnp.int32),
+        ("tgt_r", (n, b, t), jnp.int32),
+        ("beta", (), jnp.float32),
+        ("scale", (n,), jnp.float32),
+        ("rank_mask", (n, r), jnp.float32),
+    ])
+
+    def eval_flat(*args):
+        names = [s[0] for s in eval_inputs]
+        dicts, i = _dicts_from_flat(names, list(args),
+                                    {"base": nb, "ad": na})
+        tok_c, tgt_c, tok_r, tgt_r, beta, scale, rmask = args[i:]
+        _, (losses, acc) = M.dpo_loss(cfg, dicts["base"], dicts["ad"],
+                                      tok_c, tgt_c, tok_r, tgt_r, beta,
+                                      scale, rmask)
+        return (losses, acc)
+
+    eval_outputs = [("losses", (n,), jnp.float32),
+                    ("reward_acc", (n,), jnp.float32)]
+
+    return {
+        "train": (train_flat, train_inputs, train_outputs),
+        "eval": (eval_flat, eval_inputs, eval_outputs),
+    }
+
+
+def lower_variant(v: Variant, out_dir: str, manifest: dict) -> None:
+    cfg = M.MODEL_FAMILY[v.model]
+    steps = build_sft(cfg, v) if v.kind == "sft" else build_dpo(cfg, v)
+    entry = {
+        "kind": v.kind,
+        "model": {
+            "name": cfg.name, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "vocab": cfg.vocab,
+            "param_count": cfg.param_count(),
+        },
+        "n": v.n, "b": v.b, "t": v.t, "r_max": v.r_max,
+        "files": {}, "io": {},
+    }
+    for step_name, (fn, inputs, outputs) in steps.items():
+        specs = [_spec(s, d) for (_, s, d) in inputs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{v.key}.{step_name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry["files"][step_name] = fname
+        entry["io"][step_name] = {
+            "inputs": [_entry(nm, s, d) for (nm, s, d) in inputs],
+            "outputs": [_entry(nm, s, d) for (nm, s, d) in outputs],
+        }
+        print(f"  {fname}: {len(text)} chars, "
+              f"{len(inputs)} in / {len(outputs)} out")
+    manifest["artifacts"][v.key] = entry
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--preset", default=os.environ.get("ARTIFACT_PRESET",
+                                                      "default"),
+                   choices=sorted(PRESETS))
+    args = p.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "preset": args.preset,
+        "vocab": M.VOCAB_SIZE,
+        "pad_id": M.PAD_ID, "bos_id": M.BOS_ID, "eos_id": M.EOS_ID,
+        "sep_id": M.SEP_ID,
+        "adapter_param_order": list(M.ADAPTER_PARAM_ORDER),
+        "base_param_order": list(M.BASE_PARAM_ORDER),
+        "artifacts": {},
+    }
+    for v in PRESETS[args.preset]:
+        print(f"lowering {v.key} ...")
+        lower_variant(v, args.out, manifest)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest.json: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,340 @@
+"""Pallas grouped-LoRA GEMM kernels (ALTO §6.1, §A.1) — the L1 hot path.
+
+Multiple LoRA adapters share one frozen backbone; the base GEMM
+``Y_base = X W`` is compute-bound and stays on XLA's native ``dot_general``
+(the cuBLAS analog), while the memory-bandwidth-bound low-rank path runs in
+the grouped kernels below, one launch per layer regardless of the number of
+co-resident adapters.
+
+TPU adaptation of the paper's Triton design (DESIGN.md §2):
+
+* the paper's CPU-built ``(adapter_idx, block_idx)`` schedule table becomes
+  a 2-D Pallas grid ``(adapter, m_block)``;
+* the paper's ``offs_m < end_token`` boundary masks become iota row masks
+  driven by a per-adapter token-count vector (ragged batches without
+  padding the activation buffer);
+* rank-only padding: A stacked ``[N, d_in, r_max]``, B ``[N, r_max, d_out]``
+  with a ``[N, r_max]`` column mask (``offs_r < r_i`` in the paper);
+* the fused base-output addition (``Y = S B + Y_base``) happens in the
+  store phase of the expand kernel, saving one full read-write pass over Y.
+
+All kernels run ``interpret=True``: CPU PJRT cannot execute Mosaic
+custom-calls, so interpret mode is the correctness path and the lowered HLO
+is what the Rust runtime executes.  Numerics are validated against
+``ref.py`` (pure jnp, per-adapter loop) in python/tests/.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size along the token (m) dimension.  128 matches both the MXU tile
+# and the paper's BLOCK_M; callers with fewer tokens get a single block.
+DEFAULT_BLOCK_M = 128
+
+_INTERPRET = True  # CPU path; real-TPU lowering would flip this off.
+
+
+def _block_m(m: int, block_m: Optional[int]) -> int:
+    bm = block_m or DEFAULT_BLOCK_M
+    return min(bm, m) if m > 0 else 1
+
+
+def _pad_m(x: jnp.ndarray, bm: int) -> jnp.ndarray:
+    """Pad the token dimension of [N, M, D] up to a multiple of bm."""
+    m = x.shape[1]
+    pad = (-m) % bm
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+
+
+# ---------------------------------------------------------------------------
+# Forward: shrink  S_i = X_i @ A_i   (grouped, rank-masked)
+# ---------------------------------------------------------------------------
+
+
+def _shrink_kernel(x_ref, a_ref, rmask_ref, msize_ref, s_ref, *, bm):
+    """One (adapter, m-block) grid step of S = X A with rank+row masks."""
+    x = x_ref[0].astype(jnp.float32)          # [bm, d_in]
+    a = a_ref[0].astype(jnp.float32)          # [d_in, r_max]
+    s = jnp.dot(x, a, preferred_element_type=jnp.float32)
+    # rank mask: zero the padded low-rank columns (offs_r < r_i).
+    s = s * rmask_ref[0][None, :]
+    # row mask: zero rows past this adapter's token count (offs_m < end).
+    mb = pl.program_id(1)
+    offs = mb * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+    s = jnp.where(offs < msize_ref[0], s, 0.0)
+    s_ref[0] = s.astype(s_ref.dtype)
+
+
+def grouped_lora_shrink(
+    x: jnp.ndarray,        # [N, M, d_in]
+    a_stack: jnp.ndarray,  # [N, d_in, r_max]
+    rank_mask: jnp.ndarray,  # [N, r_max] (float, 1.0 for live columns)
+    m_sizes: Optional[jnp.ndarray] = None,  # [N] int32 live-token counts
+    *,
+    block_m: Optional[int] = None,
+) -> jnp.ndarray:
+    """Grouped S_i = X_i @ A_i in one launch; returns [N, M, r_max] f32.
+
+    Only the diagonal blocks are computed (zero wasted FLOPs vs a wide
+    GEMM over the concatenated adapters).
+    """
+    n, m, d_in = x.shape
+    r_max = a_stack.shape[-1]
+    bm = _block_m(m, block_m)
+    xp = _pad_m(x, bm)
+    mp = xp.shape[1]
+    if m_sizes is None:
+        m_sizes = jnp.full((n,), m, dtype=jnp.int32)
+    grid = (n, mp // bm)
+    out = pl.pallas_call(
+        functools.partial(_shrink_kernel, bm=bm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, d_in), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, d_in, r_max), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, r_max), lambda i, j: (i, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, r_max), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, mp, r_max), jnp.float32),
+        interpret=_INTERPRET,
+    )(xp, a_stack, rank_mask.astype(jnp.float32), m_sizes.astype(jnp.int32))
+    return out[:, :m, :]
+
+
+# ---------------------------------------------------------------------------
+# Forward: expand + fused base add   Y_i = scale_i * (S_i @ B_i) + Y_base_i
+# ---------------------------------------------------------------------------
+
+
+def _expand_kernel(s_ref, b_ref, scale_ref, ybase_ref, msize_ref, y_ref, *, bm):
+    s = s_ref[0].astype(jnp.float32)           # [bm, r_max]
+    b = b_ref[0].astype(jnp.float32)           # [r_max, d_out]
+    y = jnp.dot(s, b, preferred_element_type=jnp.float32) * scale_ref[0]
+    mb = pl.program_id(1)
+    offs = mb * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+    y = jnp.where(offs < msize_ref[0], y, 0.0)
+    # fused base-output addition in the store phase (saves one RW pass).
+    y = y + ybase_ref[0].astype(jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def grouped_lora_expand_add(
+    s: jnp.ndarray,        # [N, M, r_max] (rank-masked shrink output)
+    b_stack: jnp.ndarray,  # [N, r_max, d_out]
+    scale: jnp.ndarray,    # [N] per-adapter alpha/r
+    y_base: jnp.ndarray,   # [N, M, d_out] frozen-backbone output
+    m_sizes: Optional[jnp.ndarray] = None,
+    *,
+    block_m: Optional[int] = None,
+) -> jnp.ndarray:
+    """Grouped Y_i = scale_i * S_i B_i + Y_base_i in one launch."""
+    n, m, r_max = s.shape
+    d_out = b_stack.shape[-1]
+    bm = _block_m(m, block_m)
+    sp = _pad_m(s, bm)
+    yb = _pad_m(y_base, bm)
+    mp = sp.shape[1]
+    if m_sizes is None:
+        m_sizes = jnp.full((n,), m, dtype=jnp.int32)
+    grid = (n, mp // bm)
+    out = pl.pallas_call(
+        functools.partial(_expand_kernel, bm=bm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, r_max), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, r_max, d_out), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1, bm, d_out), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, d_out), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, mp, d_out), y_base.dtype),
+        interpret=_INTERPRET,
+    )(sp, b_stack, scale.astype(jnp.float32), yb,
+      m_sizes.astype(jnp.int32))
+    return out[:, :m, :]
+
+
+# ---------------------------------------------------------------------------
+# Backward: fused input gradients  dS = scale * dY Bᵀ ;  dX = dS Aᵀ
+# ---------------------------------------------------------------------------
+
+
+def _bwd_input_kernel(dy_ref, b_ref, a_ref, scale_ref, rmask_ref, msize_ref,
+                      ds_ref, dx_ref, *, bm):
+    dy = dy_ref[0].astype(jnp.float32)         # [bm, d_out]
+    b = b_ref[0].astype(jnp.float32)           # [r_max, d_out]
+    a = a_ref[0].astype(jnp.float32)           # [d_in, r_max]
+    ds = jnp.dot(dy, b.T, preferred_element_type=jnp.float32) * scale_ref[0]
+    ds = ds * rmask_ref[0][None, :]            # keep padded rank cols at 0
+    mb = pl.program_id(1)
+    offs = mb * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+    ds = jnp.where(offs < msize_ref[0], ds, 0.0)
+    dx = jnp.dot(ds, a.T, preferred_element_type=jnp.float32)
+    ds_ref[0] = ds.astype(ds_ref.dtype)
+    dx_ref[0] = dx.astype(dx_ref.dtype)
+
+
+def grouped_lora_bwd_input(
+    dy: jnp.ndarray,       # [N, M, d_out] upstream grad (LoRA branch)
+    a_stack: jnp.ndarray,  # [N, d_in, r_max]
+    b_stack: jnp.ndarray,  # [N, r_max, d_out]
+    scale: jnp.ndarray,    # [N]
+    rank_mask: jnp.ndarray,  # [N, r_max]
+    m_sizes: Optional[jnp.ndarray] = None,
+    *,
+    block_m: Optional[int] = None,
+):
+    """Single-launch fused input-gradient pass.
+
+    Returns ``(ds, dx)`` with ``ds = scale · dY Bᵀ`` (cached for the weight
+    grads) and ``dx = ds Aᵀ`` (flows to the backbone).  Reuses the forward's
+    O(1)-launch (adapter, m-block) schedule.
+    """
+    n, m, d_out = dy.shape
+    d_in, r_max = a_stack.shape[1], a_stack.shape[2]
+    bm = _block_m(m, block_m)
+    dyp = _pad_m(dy, bm)
+    mp = dyp.shape[1]
+    if m_sizes is None:
+        m_sizes = jnp.full((n,), m, dtype=jnp.int32)
+    grid = (n, mp // bm)
+    ds, dx = pl.pallas_call(
+        functools.partial(_bwd_input_kernel, bm=bm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, d_out), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, r_max, d_out), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, d_in, r_max), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1, r_max), lambda i, j: (i, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm, r_max), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bm, d_in), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, mp, r_max), jnp.float32),
+            jax.ShapeDtypeStruct((n, mp, d_in), dy.dtype),
+        ],
+        interpret=_INTERPRET,
+    )(dyp, b_stack, a_stack, scale.astype(jnp.float32),
+      rank_mask.astype(jnp.float32), m_sizes.astype(jnp.int32))
+    return ds[:, :m, :], dx[:, :m, :]
+
+
+# ---------------------------------------------------------------------------
+# Backward: grouped weight gradients (the paper's bmm / grouped_mm path)
+# ---------------------------------------------------------------------------
+
+
+def grouped_lora_weight_grads(
+    x: jnp.ndarray,   # [N, M, d_in]
+    s: jnp.ndarray,   # [N, M, r_max] cached shrink output
+    dy: jnp.ndarray,  # [N, M, d_out]
+    ds: jnp.ndarray,  # [N, M, r_max] from grouped_lora_bwd_input
+    scale: jnp.ndarray,  # [N]
+):
+    """dA_i = X_iᵀ dS_i and dB_i = scale_i · S_iᵀ dY_i, two grouped GEMMs.
+
+    Homogeneous per-adapter token counts let both reduce to a single
+    batched contraction each — exactly the paper's bmm fast path; 2 launches
+    total regardless of N.  (s is pre-masked, so padded rank columns and
+    dead rows contribute zero automatically.)
+    """
+    f32 = jnp.float32
+    da = jnp.einsum("nmk,nmr->nkr", x.astype(f32), ds.astype(f32))
+    db = jnp.einsum("nmr,nmd->nrd", s.astype(f32), dy.astype(f32))
+    db = db * scale[:, None, None]
+    return da, db
+
+
+# ---------------------------------------------------------------------------
+# Differentiable grouped LoRA linear (custom VJP tying it all together)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def grouped_lora_linear(x, a_stack, b_stack, scale, rank_mask, y_base):
+    """Y_i = Y_base_i + scale_i · (X_i A_i) B_i, grouped over adapters.
+
+    Differentiable w.r.t. x, a_stack, b_stack and y_base.  The forward
+    caches S (the paper: "trading modest memory for a saved kernel launch
+    per layer").
+    """
+    y, _ = _glin_fwd(x, a_stack, b_stack, scale, rank_mask, y_base)
+    return y
+
+
+def _glin_fwd(x, a_stack, b_stack, scale, rank_mask, y_base):
+    s = grouped_lora_shrink(x, a_stack, rank_mask)
+    y = grouped_lora_expand_add(s, b_stack, scale, y_base)
+    return y, (x, s, a_stack, b_stack, scale, rank_mask)
+
+
+def _glin_bwd(res, dy):
+    x, s, a_stack, b_stack, scale, rank_mask = res
+    ds, dx = grouped_lora_bwd_input(dy, a_stack, b_stack, scale, rank_mask)
+    da, db = grouped_lora_weight_grads(x, s, dy, ds, scale)
+    # y_base enters additively → its cotangent is dy unchanged; scale and
+    # rank_mask are non-trainable (None cotangents).
+    return (dx.astype(x.dtype), da.astype(a_stack.dtype),
+            db.astype(b_stack.dtype), None, None, dy)
+
+
+grouped_lora_linear.defvjp(_glin_fwd, _glin_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Structural perf accounting (L1 §Perf: VMEM footprint / MXU utilization)
+# ---------------------------------------------------------------------------
+
+
+def vmem_footprint_bytes(block_m: int, d_in: int, d_out: int, r_max: int,
+                         dtype_bytes: int = 4) -> dict:
+    """Per-grid-step VMEM residency of each kernel (DESIGN.md §7).
+
+    interpret=True gives no TPU timings, so optimization is structural:
+    every block must fit the ~16 MiB VMEM budget with double-buffering
+    headroom.
+    """
+    shrink = (block_m * d_in + d_in * r_max + block_m * r_max) * dtype_bytes
+    expand = (block_m * r_max + r_max * d_out + 2 * block_m * d_out) * dtype_bytes
+    bwd = (block_m * d_out + r_max * d_out + d_in * r_max
+           + block_m * r_max + block_m * d_in) * dtype_bytes
+    return {"shrink": shrink, "expand": expand, "bwd_input": bwd,
+            "budget": 16 * 1024 * 1024}
+
+
+def mxu_utilization_estimate(m: int, d_in: int, d_out: int,
+                             ranks, r_max: int) -> dict:
+    """Useful vs MXU-padded FLOPs for the grouped LoRA path.
+
+    The MXU processes 128×128 tiles; the low-rank contraction dimension
+    r ≤ 128 pads up to 128.  Also reports the FLOP waste a LoRAFusion-style
+    wide GEMM would incur ((ΣL_i)(Σr_i) vs ΣL_i·r_i) — the paper's §6.1
+    argument, checked analytically.
+    """
+    ranks = list(ranks)
+    n = len(ranks)
+    useful = sum(2 * m * d_in * r + 2 * m * r * d_out for r in ranks)
+    pad_r = max(r_max, 128)
+    padded = n * (2 * m * d_in * pad_r + 2 * m * pad_r * d_out)
+    wide = 2 * (n * m) * d_in * sum(ranks) + 2 * (n * m) * sum(ranks) * d_out
+    return {
+        "useful_flops": useful,
+        "mxu_padded_flops": padded,
+        "mxu_utilization": useful / padded if padded else 0.0,
+        "wide_gemm_flops": wide,
+        "wide_gemm_waste": (wide - useful) / wide if wide else 0.0,
+    }

@@ -1,0 +1,71 @@
+"""Pure-jnp correctness oracle for the grouped LoRA kernels.
+
+Per-adapter Python loop, no Pallas, no fusion — the unambiguous semantics
+the kernels in grouped_lora.py must match (python/tests/test_kernel.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _rowmask(m: int, size) -> jnp.ndarray:
+    return (jnp.arange(m) < size).astype(jnp.float32)[:, None]
+
+
+def shrink_ref(x, a_stack, rank_mask, m_sizes=None):
+    """S_i = X_i @ A_i with rank-column and live-row masking. [N,M,r_max]."""
+    n, m, _ = x.shape
+    outs = []
+    for i in range(n):
+        s = x[i].astype(jnp.float32) @ a_stack[i].astype(jnp.float32)
+        s = s * rank_mask[i][None, :]
+        if m_sizes is not None:
+            s = s * _rowmask(m, m_sizes[i])
+        outs.append(s)
+    return jnp.stack(outs)
+
+
+def expand_add_ref(s, b_stack, scale, y_base, m_sizes=None):
+    """Y_i = scale_i * S_i @ B_i + Y_base_i. [N,M,d_out]."""
+    n, m, _ = s.shape
+    outs = []
+    for i in range(n):
+        y = s[i].astype(jnp.float32) @ b_stack[i].astype(jnp.float32)
+        y = y * scale[i]
+        if m_sizes is not None:
+            y = y * _rowmask(m, m_sizes[i])
+        outs.append((y + y_base[i].astype(jnp.float32)).astype(y_base.dtype))
+    return jnp.stack(outs)
+
+
+def bwd_input_ref(dy, a_stack, b_stack, scale, rank_mask, m_sizes=None):
+    """(dS, dX) with dS = scale·dY Bᵀ·mask, dX = dS Aᵀ."""
+    n, m, _ = dy.shape
+    dss, dxs = [], []
+    for i in range(n):
+        ds = dy[i].astype(jnp.float32) @ b_stack[i].astype(jnp.float32).T
+        ds = ds * scale[i] * rank_mask[i][None, :]
+        if m_sizes is not None:
+            ds = ds * _rowmask(m, m_sizes[i])
+        dx = ds @ a_stack[i].astype(jnp.float32).T
+        dss.append(ds)
+        dxs.append(dx.astype(dy.dtype))
+    return jnp.stack(dss), jnp.stack(dxs)
+
+
+def weight_grads_ref(x, s, dy, ds, scale):
+    """dA_i = X_iᵀ dS_i ; dB_i = scale_i · S_iᵀ dY_i."""
+    n = x.shape[0]
+    das, dbs = [], []
+    for i in range(n):
+        das.append(x[i].astype(jnp.float32).T @ ds[i].astype(jnp.float32))
+        dbs.append(scale[i] * (s[i].astype(jnp.float32).T
+                               @ dy[i].astype(jnp.float32)))
+    return jnp.stack(das), jnp.stack(dbs)
+
+
+def lora_linear_ref(x, a_stack, b_stack, scale, rank_mask, y_base):
+    """End-to-end reference for grouped_lora_linear."""
+    s = shrink_ref(x, a_stack, rank_mask)
+    return expand_add_ref(s, b_stack, scale, y_base)

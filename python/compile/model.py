@@ -1,0 +1,373 @@
+"""L2: multi-adapter LoRA transformer (jax), lowered AOT to HLO text.
+
+A Llama-style decoder (RMSNorm, RoPE, SwiGLU MLP, tied embeddings) with
+**N LoRA adapters trained concurrently over one frozen backbone** — the
+paper's batched multi-LoRA execution (§6.1).  Every linear projection
+(q, k, v, o, gate, up, down — the paper's 7 targets, §A.4) runs its base
+GEMM once on the shared weights via XLA ``dot_general`` (compute-bound,
+the cuBLAS analog) and its low-rank path through the Pallas grouped
+kernels (memory-bound, one launch per layer regardless of N).
+
+Adapters are stacked with rank-only padding: ``A [L, N, d_in, r_max]``,
+``B [L, N, r_max, d_out]``, a ``[N, r_max]`` column mask realizing
+heterogeneous ranks, a ``[N]`` per-adapter scale (α/r), per-adapter
+learning rates and an active mask — so one compiled train step serves a
+whole co-located job group with mixed hyperparameters.
+
+This module is build-time only.  ``aot.py`` lowers ``train_step`` /
+``eval_step`` / ``decode_step`` / ``dpo_step`` to HLO text artifacts; the
+Rust runtime executes them through PJRT and Python never runs again.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.grouped_lora import grouped_lora_linear
+
+# ---------------------------------------------------------------------------
+# Tokenizer constants (byte-level; mirrored by rust/src/data/tokenizer.rs)
+# ---------------------------------------------------------------------------
+
+PAD_ID = 256
+BOS_ID = 257
+EOS_ID = 258
+SEP_ID = 259
+VOCAB_SIZE = 272  # 256 bytes + 4 specials, rounded up to a multiple of 16
+
+# The 7 LoRA target projections (paper §A.4: all attention + MLP).
+PROJS = ("q", "k", "v", "o", "gate", "up", "down")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Backbone hyperparameters for one member of the TinyLlama family."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int = 128
+    vocab: int = VOCAB_SIZE
+    rope_base: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def proj_dims(self, proj: str) -> Tuple[int, int]:
+        d, f = self.d_model, self.d_ff
+        return {"q": (d, d), "k": (d, d), "v": (d, d), "o": (d, d),
+                "gate": (d, f), "up": (d, f), "down": (f, d)}[proj]
+
+    def param_count(self) -> int:
+        d, f, L = self.d_model, self.d_ff, self.n_layers
+        per_layer = 4 * d * d + 3 * d * f + 2 * d  # attn + mlp + 2 norms
+        return self.vocab * d + L * per_layer + d
+
+
+# The family replacing Llama/Qwen at 0.1M–100M scale (DESIGN.md §3).
+MODEL_FAMILY: Dict[str, ModelConfig] = {
+    cfg.name: cfg
+    for cfg in [
+        ModelConfig("nano", d_model=64, n_layers=2, n_heads=4, d_ff=176),
+        ModelConfig("micro", d_model=128, n_layers=4, n_heads=4, d_ff=352),
+        ModelConfig("small", d_model=256, n_layers=6, n_heads=8, d_ff=704),
+        ModelConfig("medium", d_model=512, n_layers=8, n_heads=8, d_ff=1408),
+        ModelConfig("base100m", d_model=768, n_layers=12, n_heads=12,
+                    d_ff=2112),
+    ]
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+
+def init_base_params(cfg: ModelConfig, key) -> Dict[str, jnp.ndarray]:
+    """Frozen backbone, layers stacked [L, ...] for lax.scan."""
+    L, d, f, V = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab
+    ks = jax.random.split(key, 8)
+    sd = 1.0 / math.sqrt(d)
+    sf = 1.0 / math.sqrt(f)
+    return {
+        "embed": jax.random.normal(ks[0], (V, d), jnp.float32) * 0.02,
+        "wq": jax.random.normal(ks[1], (L, d, d)) * sd,
+        "wk": jax.random.normal(ks[2], (L, d, d)) * sd,
+        "wv": jax.random.normal(ks[3], (L, d, d)) * sd,
+        "wo": jax.random.normal(ks[4], (L, d, d)) * sd,
+        "wgate": jax.random.normal(ks[5], (L, d, f)) * sd,
+        "wup": jax.random.normal(ks[6], (L, d, f)) * sd,
+        "wdown": jax.random.normal(ks[7], (L, f, d)) * sf,
+        "ln1": jnp.ones((L, d)),
+        "ln2": jnp.ones((L, d)),
+        "lnf": jnp.ones((d,)),
+    }
+
+
+BASE_PARAM_ORDER = ("embed", "wq", "wk", "wv", "wo", "wgate", "wup",
+                    "wdown", "ln1", "ln2", "lnf")
+
+
+def init_adapters(cfg: ModelConfig, n_adapters: int, r_max: int, key,
+                  ranks=None) -> Dict[str, jnp.ndarray]:
+    """LoRA stacks: A ~ N(0, 1/d_in) (live columns), B = 0 (paper init)."""
+    L, N = cfg.n_layers, n_adapters
+    out: Dict[str, jnp.ndarray] = {}
+    keys = jax.random.split(key, len(PROJS))
+    for proj, k in zip(PROJS, keys):
+        d_in, d_out = cfg.proj_dims(proj)
+        a = jax.random.normal(k, (L, N, d_in, r_max)) / math.sqrt(d_in)
+        if ranks is not None:
+            col = jnp.arange(r_max)[None, :] < jnp.asarray(ranks)[:, None]
+            a = a * col[None, :, None, :]
+        out[f"a_{proj}"] = a.astype(jnp.float32)
+        out[f"b_{proj}"] = jnp.zeros((L, N, r_max, d_out), jnp.float32)
+    return out
+
+
+ADAPTER_PARAM_ORDER = tuple(f"{m}_{p}" for p in PROJS for m in ("a", "b"))
+
+
+def rank_mask(ranks, r_max: int) -> jnp.ndarray:
+    """[N, r_max] float mask with 1.0 on the live low-rank columns."""
+    r = jnp.asarray(ranks, jnp.int32)
+    return (jnp.arange(r_max)[None, :] < r[:, None]).astype(jnp.float32)
+
+
+def adapter_scale(n_adapters: int, alpha_over_r: float = 2.0) -> jnp.ndarray:
+    """Per-adapter α/r.  Paper uses α = 2r, i.e. a constant scale of 2."""
+    return jnp.full((n_adapters,), alpha_over_r, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _rms_norm(x, g, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def _rope(x, base: float):
+    """Rotary embeddings over [..., T, H, hd]."""
+    *_, t, _, hd = x.shape
+    half = hd // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = jnp.arange(t, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)  # [T, half]
+    x1, x2 = x[..., :half], x[..., half:]
+    shp = (1,) * (x.ndim - 3) + (t, 1, half)
+    cos, sin = cos.reshape(shp), sin.reshape(shp)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def _lora_proj(x_flat, w, a, b, scale, rmask):
+    """Base GEMM on shared W + grouped Pallas low-rank path.
+
+    x_flat: [N, M, d_in]; w: [d_in, d_out]; a: [N, d_in, r_max];
+    b: [N, r_max, d_out].  Decoupled execution (paper §6.1): the base dot
+    is one XLA GEMM over the concatenated batch, the LoRA path one grouped
+    kernel launch.
+    """
+    y_base = jnp.einsum("nmd,df->nmf", x_flat, w)
+    return grouped_lora_linear(x_flat, a, b, scale, rmask, y_base)
+
+
+def forward(cfg: ModelConfig, base, adapters, tokens, scale, rmask):
+    """Logits [N, B, T, V] for N adapters over one frozen backbone.
+
+    tokens: [N, B, T] int32.  Layers run under ``lax.scan`` so the lowered
+    HLO stays one layer long regardless of depth.
+    """
+    n, bsz, t = tokens.shape
+    m = bsz * t
+    h = cfg.n_heads
+    hd = cfg.head_dim
+    x = jnp.take(base["embed"], tokens, axis=0)  # [N, B, T, d]
+
+    def layer(x, lp):
+        xf = _rms_norm(x, lp["ln1"]).reshape(n, m, cfg.d_model)
+        q = _lora_proj(xf, lp["wq"], lp["a_q"], lp["b_q"], scale, rmask)
+        k = _lora_proj(xf, lp["wk"], lp["a_k"], lp["b_k"], scale, rmask)
+        v = _lora_proj(xf, lp["wv"], lp["a_v"], lp["b_v"], scale, rmask)
+        q = _rope(q.reshape(n, bsz, t, h, hd), cfg.rope_base)
+        k = _rope(k.reshape(n, bsz, t, h, hd), cfg.rope_base)
+        v = v.reshape(n, bsz, t, h, hd)
+        att = jnp.einsum("nbqhd,nbkhd->nbhqk", q, k) / math.sqrt(hd)
+        causal = jnp.tril(jnp.ones((t, t), bool))
+        att = jnp.where(causal[None, None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("nbhqk,nbkhd->nbqhd", att, v)
+        ctx = ctx.reshape(n, m, cfg.d_model)
+        o = _lora_proj(ctx, lp["wo"], lp["a_o"], lp["b_o"], scale, rmask)
+        x = x + o.reshape(n, bsz, t, cfg.d_model)
+
+        xf = _rms_norm(x, lp["ln2"]).reshape(n, m, cfg.d_model)
+        g = _lora_proj(xf, lp["wgate"], lp["a_gate"], lp["b_gate"], scale,
+                       rmask)
+        u = _lora_proj(xf, lp["wup"], lp["a_up"], lp["b_up"], scale, rmask)
+        hmid = jax.nn.silu(g) * u
+        dn = _lora_proj(hmid, lp["wdown"], lp["a_down"], lp["b_down"],
+                        scale, rmask)
+        x = x + dn.reshape(n, bsz, t, cfg.d_model)
+        return x, None
+
+    layer_params = {k: base[k] for k in ("wq", "wk", "wv", "wo", "wgate",
+                                         "wup", "wdown", "ln1", "ln2")}
+    layer_params.update(adapters)
+    x, _ = jax.lax.scan(layer, x, layer_params)
+    x = _rms_norm(x, base["lnf"])
+    return jnp.einsum("nbtd,vd->nbtv", x, base["embed"])  # tied head
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def per_adapter_ce(logits, targets):
+    """Mean next-token CE per adapter, PAD-masked.  [N]."""
+    v = logits.shape[-1]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tgt = jnp.clip(targets, 0, v - 1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    mask = (targets != PAD_ID).astype(jnp.float32)
+    tok = jnp.maximum(mask.sum(axis=(1, 2)), 1.0)
+    return (nll * mask).sum(axis=(1, 2)) / tok
+
+
+def sequence_logprob(logits, targets):
+    """Sum log p(target) over non-PAD positions, per sequence. [N, B]."""
+    v = logits.shape[-1]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tgt = jnp.clip(targets, 0, v - 1)
+    ll = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    mask = (targets != PAD_ID).astype(jnp.float32)
+    return (ll * mask).sum(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# AdamW on the adapter stacks (per-adapter lr, active mask)
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS, WEIGHT_DECAY = 0.9, 0.999, 1e-8, 0.01
+
+
+def adamw_update(params, grads, m, v, t, lr_n, active_n):
+    """One AdamW step over adapter stacks keyed [L, N, ...].
+
+    ``lr_n`` and ``active_n`` are [N]: every co-located job trains under
+    its own learning rate, and early-exited slots (active = 0) are frozen
+    in place — the paper's batched-execution requirement.
+    """
+    b1t = 1.0 - ADAM_B1 ** t
+    b2t = 1.0 - ADAM_B2 ** t
+
+    def upd(p, g, m_, v_):
+        gate = active_n.reshape((1, -1) + (1,) * (p.ndim - 2))
+        lr = lr_n.reshape((1, -1) + (1,) * (p.ndim - 2))
+        m2 = ADAM_B1 * m_ + (1 - ADAM_B1) * g
+        v2 = ADAM_B2 * v_ + (1 - ADAM_B2) * jnp.square(g)
+        mh = m2 / b1t
+        vh = v2 / b2t
+        step = lr * (mh / (jnp.sqrt(vh) + ADAM_EPS) + WEIGHT_DECAY * p)
+        p2 = p - gate * step
+        m2 = gate * m2 + (1 - gate) * m_
+        v2 = gate * v2 + (1 - gate) * v_
+        return p2, m2, v2
+
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        new_p[k], new_m[k], new_v[k] = upd(params[k], grads[k], m[k], v[k])
+    return new_p, new_m, new_v
+
+
+def zeros_like_opt(adapters):
+    return {k: jnp.zeros_like(p) for k, p in adapters.items()}
+
+
+# ---------------------------------------------------------------------------
+# Steps (the AOT surface — fixed flat signatures, see aot.py manifest)
+# ---------------------------------------------------------------------------
+
+
+def sft_loss(cfg, base, adapters, tokens, targets, scale, rmask):
+    logits = forward(cfg, base, adapters, tokens, scale, rmask)
+    losses = per_adapter_ce(logits, targets)
+    return losses.sum(), losses
+
+
+def train_step(cfg, base, adapters, m, v, t, tokens, targets, lr_n,
+               active_n, scale, rmask):
+    """SFT step: grads only on adapter stacks; returns per-adapter loss."""
+    grad_fn = jax.grad(lambda ad: sft_loss(cfg, base, ad, tokens, targets,
+                                           scale, rmask), has_aux=True)
+    grads, losses = grad_fn(adapters)
+    new_ad, new_m, new_v = adamw_update(adapters, grads, m, v, t, lr_n,
+                                        active_n)
+    return new_ad, new_m, new_v, losses
+
+
+def eval_step(cfg, base, adapters, tokens, targets, scale, rmask):
+    """Per-adapter validation loss (no update). [N]."""
+    logits = forward(cfg, base, adapters, tokens, scale, rmask)
+    return per_adapter_ce(logits, targets)
+
+
+def decode_step(cfg, base, adapters, tokens, pos, scale, rmask):
+    """Greedy next token per sequence at per-sequence position ``pos-1``.
+
+    ``pos`` is `[N, B] i32` (sequences have different prompt lengths); the
+    Rust driver loops this for answer generation (no KV cache: fixed-T
+    full forward per step — fine at family scale, documented in DESIGN.md).
+    Returns `[N, B] i32`.
+    """
+    logits = forward(cfg, base, adapters, tokens, scale, rmask)
+    idx = jnp.clip(pos - 1, 0, tokens.shape[-1] - 1)  # [N, B]
+    last = jnp.take_along_axis(
+        logits, idx[..., None, None], axis=2
+    )[:, :, 0, :]  # [N, B, V]
+    return jnp.argmax(last, axis=-1).astype(jnp.int32)
+
+
+def dpo_loss(cfg, base, adapters, tok_c, tgt_c, tok_r, tgt_r, beta, scale,
+             rmask):
+    """DPO over stacked adapters; frozen backbone doubles as the reference.
+
+    The frozen base (adapters scaled to zero) is the reference policy —
+    exact, since LoRA starts at B = 0 and the backbone never moves.
+    Returns (sum loss, (per-adapter loss [N], reward accuracy [N])).
+    """
+    pol_c = sequence_logprob(
+        forward(cfg, base, adapters, tok_c, scale, rmask), tgt_c)
+    pol_r = sequence_logprob(
+        forward(cfg, base, adapters, tok_r, scale, rmask), tgt_r)
+    zero_scale = jnp.zeros_like(scale)
+    ref_c = sequence_logprob(
+        forward(cfg, base, adapters, tok_c, zero_scale, rmask), tgt_c)
+    ref_r = sequence_logprob(
+        forward(cfg, base, adapters, tok_r, zero_scale, rmask), tgt_r)
+    margin = beta * ((pol_c - ref_c) - (pol_r - ref_r))  # [N, B]
+    loss = -jax.nn.log_sigmoid(margin).mean(axis=-1)     # [N]
+    acc = (margin > 0).astype(jnp.float32).mean(axis=-1)
+    return loss.sum(), (loss, acc)
+
+
+def dpo_step(cfg, base, adapters, m, v, t, tok_c, tgt_c, tok_r, tgt_r,
+             beta, lr_n, active_n, scale, rmask):
+    grad_fn = jax.grad(lambda ad: dpo_loss(cfg, base, ad, tok_c, tgt_c,
+                                           tok_r, tgt_r, beta, scale,
+                                           rmask), has_aux=True)
+    grads, (losses, acc) = grad_fn(adapters)
+    new_ad, new_m, new_v = adamw_update(adapters, grads, m, v, t, lr_n,
+                                        active_n)
+    return new_ad, new_m, new_v, losses, acc

@@ -1,0 +1,194 @@
+"""L1 correctness: Pallas grouped-LoRA kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, ranks, batch raggedness and dtypes; every
+property asserts allclose against ref.py — the core correctness signal of
+the kernel layer.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import grouped_lora as gk
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def make_case(rng, n, m, d_in, d_out, r_max, dtype, ragged):
+    x = jnp.asarray(rng.normal(size=(n, m, d_in)), dtype)
+    a = jnp.asarray(rng.normal(size=(n, d_in, r_max)) * 0.2, dtype)
+    b = jnp.asarray(rng.normal(size=(n, r_max, d_out)) * 0.2, dtype)
+    ranks = rng.integers(1, r_max + 1, size=n)
+    rmask = jnp.asarray(
+        (np.arange(r_max)[None, :] < ranks[:, None]).astype(np.float32))
+    scale = jnp.asarray(rng.uniform(0.5, 2.5, size=n), jnp.float32)
+    ybase = jnp.asarray(rng.normal(size=(n, m, d_out)), dtype)
+    msizes = (jnp.asarray(rng.integers(1, m + 1, size=n), jnp.int32)
+              if ragged else None)
+    return x, a, b, rmask, scale, ybase, msizes
+
+
+shape_st = st.tuples(
+    st.integers(1, 5),        # n adapters
+    st.integers(1, 70),       # m tokens
+    st.sampled_from([4, 16, 24]),   # d_in
+    st.sampled_from([8, 16, 40]),   # d_out
+    st.sampled_from([2, 4, 8]),     # r_max
+    st.booleans(),            # ragged token counts
+    st.integers(0, 2**31 - 1),
+)
+
+
+@given(shape_st)
+def test_shrink_matches_ref(case):
+    n, m, d_in, d_out, r_max, ragged, seed = case
+    rng = np.random.default_rng(seed)
+    x, a, b, rmask, scale, ybase, msizes = make_case(
+        rng, n, m, d_in, d_out, r_max, jnp.float32, ragged)
+    out = gk.grouped_lora_shrink(x, a, rmask, msizes, block_m=16)
+    want = ref.shrink_ref(x, a, rmask, msizes)
+    np.testing.assert_allclose(out, want, atol=1e-5, rtol=1e-5)
+
+
+@given(shape_st)
+def test_expand_add_matches_ref(case):
+    n, m, d_in, d_out, r_max, ragged, seed = case
+    rng = np.random.default_rng(seed)
+    x, a, b, rmask, scale, ybase, msizes = make_case(
+        rng, n, m, d_in, d_out, r_max, jnp.float32, ragged)
+    s = ref.shrink_ref(x, a, rmask, msizes)
+    out = gk.grouped_lora_expand_add(s, b, scale, ybase, msizes, block_m=16)
+    want = ref.expand_add_ref(s, b, scale, ybase, msizes)
+    np.testing.assert_allclose(out, want, atol=1e-4, rtol=1e-4)
+
+
+@given(shape_st)
+def test_bwd_input_matches_ref(case):
+    n, m, d_in, d_out, r_max, ragged, seed = case
+    rng = np.random.default_rng(seed)
+    x, a, b, rmask, scale, ybase, msizes = make_case(
+        rng, n, m, d_in, d_out, r_max, jnp.float32, ragged)
+    dy = jnp.asarray(rng.normal(size=(n, m, d_out)), jnp.float32)
+    ds, dx = gk.grouped_lora_bwd_input(dy, a, b, scale, rmask, msizes,
+                                       block_m=16)
+    ds_r, dx_r = ref.bwd_input_ref(dy, a, b, scale, rmask, msizes)
+    np.testing.assert_allclose(ds, ds_r, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(dx, dx_r, atol=1e-4, rtol=1e-4)
+
+
+@given(shape_st)
+def test_weight_grads_match_ref(case):
+    n, m, d_in, d_out, r_max, _, seed = case
+    rng = np.random.default_rng(seed)
+    x, a, b, rmask, scale, ybase, _ = make_case(
+        rng, n, m, d_in, d_out, r_max, jnp.float32, False)
+    dy = jnp.asarray(rng.normal(size=(n, m, d_out)), jnp.float32)
+    s = ref.shrink_ref(x, a, rmask)
+    ds, _ = ref.bwd_input_ref(dy, a, b, scale, rmask)
+    da, db = gk.grouped_lora_weight_grads(x, s, dy, ds, scale)
+    da_r, db_r = ref.weight_grads_ref(x, s, dy, ds, scale)
+    np.testing.assert_allclose(da, da_r, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(db, db_r, atol=1e-4, rtol=1e-4)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_custom_vjp_matches_autodiff_of_ref(seed):
+    """The full differentiable op: grads wrt x, A, B, y_base must equal
+    jax autodiff of the per-adapter reference."""
+    rng = np.random.default_rng(seed)
+    n, m, d_in, d_out, r_max = 3, 20, 8, 12, 4
+    x, a, b, rmask, scale, ybase, _ = make_case(
+        rng, n, m, d_in, d_out, r_max, jnp.float32, False)
+
+    def f_kernel(x_, a_, b_, y_):
+        return (gk.grouped_lora_linear(x_, a_, b_, scale, rmask, y_) ** 2).sum()
+
+    def f_ref(x_, a_, b_, y_):
+        return (ref.lora_linear_ref(x_, a_, b_, scale, rmask, y_) ** 2).sum()
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2, 3))(x, a, b, ybase)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2, 3))(x, a, b, ybase)
+    for u, v, name in zip(g1, g2, ["x", "a", "b", "ybase"]):
+        np.testing.assert_allclose(u, v, atol=2e-4, rtol=2e-4,
+                                   err_msg=f"grad {name}")
+
+
+def test_bfloat16_inputs_supported():
+    rng = np.random.default_rng(0)
+    x, a, b, rmask, scale, ybase, _ = make_case(
+        rng, 2, 16, 8, 8, 4, jnp.bfloat16, False)
+    out = gk.grouped_lora_linear(x, a, b, scale, rmask, ybase)
+    want = ref.lora_linear_ref(x, a, b, scale, rmask, ybase)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=0.1, rtol=0.1)
+
+
+def test_zero_rank_adapter_is_identity():
+    """rank mask all-zero ⇒ the LoRA path contributes nothing."""
+    rng = np.random.default_rng(1)
+    x, a, b, _, scale, ybase, _ = make_case(
+        rng, 2, 8, 4, 8, 4, jnp.float32, False)
+    rmask = jnp.zeros((2, 4), jnp.float32)
+    out = gk.grouped_lora_linear(x, a, b, scale, rmask, ybase)
+    np.testing.assert_allclose(out, ybase, atol=1e-6)
+
+
+def test_padded_rank_columns_do_not_leak():
+    """Garbage in padded A/B regions must not affect outputs (rank-only
+    padding, paper §A.1)."""
+    rng = np.random.default_rng(2)
+    n, m, d_in, d_out, r_max = 2, 12, 6, 10, 8
+    x, a, b, rmask, scale, ybase, _ = make_case(
+        rng, n, m, d_in, d_out, r_max, jnp.float32, False)
+    ranks = np.array([3, 5])
+    rmask = jnp.asarray((np.arange(r_max)[None, :] < ranks[:, None])
+                        .astype(np.float32))
+    out1 = gk.grouped_lora_linear(x, a, b, scale, rmask, ybase)
+    # poison the padded columns
+    a2 = np.asarray(a).copy()
+    b2 = np.asarray(b).copy()
+    for i, r in enumerate(ranks):
+        a2[i, :, r:] = 1e6
+        b2[i, r:, :] = -1e6
+    out2 = gk.grouped_lora_linear(x, jnp.asarray(a2), jnp.asarray(b2),
+                                  scale, rmask, ybase)
+    np.testing.assert_allclose(out1, out2, atol=1e-4)
+
+
+def test_block_m_invariance():
+    """Results must not depend on the VMEM tile size."""
+    rng = np.random.default_rng(3)
+    x, a, b, rmask, scale, ybase, msizes = make_case(
+        rng, 3, 50, 8, 8, 4, jnp.float32, True)
+    outs = [
+        gk.grouped_lora_shrink(x, a, rmask, msizes, block_m=bm)
+        for bm in (8, 16, 64, 128)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, atol=1e-5)
+
+
+def test_vmem_footprint_within_budget():
+    """Structural perf check (DESIGN.md §7): default blocking fits VMEM
+    with double-buffering headroom for every family member."""
+    from compile.model import MODEL_FAMILY
+    for cfg in MODEL_FAMILY.values():
+        for proj in ("q", "down"):
+            d_in, d_out = cfg.proj_dims(proj)
+            fp = gk.vmem_footprint_bytes(gk.DEFAULT_BLOCK_M, d_in, d_out, 128)
+            for k in ("shrink", "expand", "bwd_input"):
+                assert fp[k] * 2 <= fp["budget"], (
+                    f"{cfg.name}/{proj}/{k}: {fp[k]} bytes x2 exceeds VMEM")
+
+
+def test_mxu_estimate_reports_wide_gemm_waste():
+    est = gk.mxu_utilization_estimate(512, 4096, 4096, [16] * 32, 16)
+    assert est["useful_flops"] > 0
+    # LoRAFusion-style wide GEMM wastes (N-1)/N of its FLOPs here
+    assert est["wide_gemm_waste"] > 0.9
+    assert 0.0 < est["mxu_utilization"] <= 1.0

@@ -1,0 +1,184 @@
+//! The declarative API surface (paper Listing 1), Rust-native:
+//!
+//! ```no_run
+//! use alto::api::{Engine, EarlyExit};
+//! use alto::config::{SearchSpace, TaskSpec};
+//!
+//! let engine = Engine::new("adapter_parallel", 8);
+//! let tasks = vec![TaskSpec {
+//!     name: "math".into(),
+//!     model: "llama-70b".into(),
+//!     dataset: "gsm-syn".into(),
+//!     num_gpus: 4,
+//!     search_space: SearchSpace {
+//!         lrs: vec![1e-5],
+//!         ranks: vec![16],
+//!         batch_sizes: vec![1, 2],
+//!     },
+//!     ..TaskSpec::default()
+//! }];
+//! let early_exit = EarlyExit::new().warmup_ratio(0.10);
+//! let schedule = engine.schedule(&tasks).unwrap();
+//! let best = engine.batched_execution(&tasks, early_exit).unwrap();
+//! println!("{} tasks, makespan plan {:.1}s, best[0] val loss {:.3}",
+//!          best.len(), schedule.makespan, best[0].best_val);
+//! ```
+
+use anyhow::Result;
+
+use crate::cluster::gpu::GpuSpec;
+use crate::config::{TaskSpec, MODEL_FAMILY};
+use crate::coordinator::service::{Service, ServiceConfig, TaskOutcome};
+use crate::coordinator::task_runner::RunConfig;
+use crate::coordinator::Profiler;
+use crate::sched::inter::Policy;
+use crate::sched::solver::{self, SchedTask, Schedule};
+
+/// Early-exit strategy builder (Listing 1's `alto.EarlyExit`).
+#[derive(Debug, Clone)]
+pub struct EarlyExit {
+    run: RunConfig,
+}
+
+impl Default for EarlyExit {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EarlyExit {
+    pub fn new() -> EarlyExit {
+        EarlyExit {
+            run: RunConfig::default(),
+        }
+    }
+
+    /// Fraction of total steps used as warmup (paper default 0.05).
+    pub fn warmup_ratio(mut self, r: f64) -> EarlyExit {
+        self.run.warmup.warmup_ratio = r;
+        self
+    }
+
+    /// Fraction of candidates retained at the warmup boundary.
+    pub fn select_ratio(mut self, r: f64) -> EarlyExit {
+        self.run.warmup.select_ratio = r;
+        self
+    }
+
+    /// Disable everything (the ablation baseline).
+    pub fn disabled() -> EarlyExit {
+        EarlyExit {
+            run: RunConfig {
+                enable_early_exit: false,
+                enable_warmup_selection: false,
+                ..RunConfig::default()
+            },
+        }
+    }
+
+    pub fn into_run_config(self) -> RunConfig {
+        self.run
+    }
+}
+
+/// The engine (Listing 1's `alto.Engine`).
+pub struct Engine {
+    pub strategy: String,
+    pub total_gpus: usize,
+    pub gpu: GpuSpec,
+    pub n_slots: usize,
+}
+
+impl Engine {
+    /// `strategy` is currently `"adapter_parallel"` (the only multi-GPU
+    /// execution mode ALTO ships; baselines live in `alto::parallel`).
+    pub fn new(strategy: &str, total_gpus: usize) -> Engine {
+        Engine {
+            strategy: strategy.to_string(),
+            total_gpus,
+            gpu: GpuSpec::h100_sxm5(),
+            n_slots: 4,
+        }
+    }
+
+    /// Plan task placement (Listing 1's `engine.schedule(tasks,
+    /// method="MILP")`) — exact makespan optimization via the B&B solver.
+    pub fn schedule(&self, tasks: &[TaskSpec]) -> Result<Schedule> {
+        let mut profiler = Profiler::new(self.gpu.clone());
+        let sched_tasks: Vec<SchedTask> = tasks
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let model = MODEL_FAMILY
+                    .get(&t.model)
+                    .ok_or_else(|| anyhow::anyhow!("unknown model {}", t.model))?;
+                Ok(SchedTask {
+                    id: i,
+                    duration: profiler.estimate_duration(&model, t, self.n_slots),
+                    gpus: t.num_gpus,
+                })
+            })
+            .collect::<Result<_>>()?;
+        solver::solve(&sched_tasks, self.total_gpus)
+    }
+
+    /// Execute all tasks under the hierarchical scheduler with batched
+    /// multi-LoRA executors + early exit; returns per-task outcomes
+    /// (best adapter config + quality + accounting).
+    pub fn batched_execution(
+        &self,
+        tasks: &[TaskSpec],
+        early_exit: EarlyExit,
+    ) -> Result<Vec<TaskOutcome>> {
+        let svc = Service::new(ServiceConfig {
+            total_gpus: self.total_gpus,
+            policy: Policy::Optimal,
+            run: early_exit.into_run_config(),
+            gpu: self.gpu.clone(),
+            n_slots: self.n_slots,
+        });
+        Ok(svc.run_service(tasks)?.outcomes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SearchSpace;
+
+    #[test]
+    fn listing_one_flow() {
+        let engine = Engine::new("adapter_parallel", 8);
+        let tasks = vec![TaskSpec {
+            name: "math-70b".into(),
+            model: "llama-70b".into(),
+            dataset: "gsm-syn".into(),
+            num_gpus: 4,
+            search_space: SearchSpace {
+                lrs: vec![1e-5],
+                ranks: vec![16],
+                batch_sizes: vec![1, 2],
+            },
+            train_samples: 64,
+            ..TaskSpec::default()
+        }];
+        let schedule = engine.schedule(&tasks).unwrap();
+        assert!(schedule.makespan > 0.0);
+        let outcomes = engine
+            .batched_execution(&tasks, EarlyExit::new().warmup_ratio(0.10))
+            .unwrap();
+        assert_eq!(outcomes.len(), 1);
+        assert!(outcomes[0].best_val.is_finite());
+    }
+
+    #[test]
+    fn early_exit_builder() {
+        let ee = EarlyExit::new().warmup_ratio(0.2).select_ratio(0.5);
+        let rc = ee.into_run_config();
+        assert_eq!(rc.warmup.warmup_ratio, 0.2);
+        assert_eq!(rc.warmup.select_ratio, 0.5);
+        assert!(rc.enable_early_exit);
+        let off = EarlyExit::disabled().into_run_config();
+        assert!(!off.enable_early_exit);
+    }
+}

@@ -1,0 +1,84 @@
+//! Collective-communication cost model (ring algorithms over NVLink).
+//!
+//! Standard α–β model: a ring collective over P ranks moves
+//! `(P−1)/P · bytes` per rank through the slowest link and pays
+//! `(P−1)` hop latencies.  These are the terms FSDP/TP/AP pay per layer
+//! (paper §2.2, §6.2).
+
+use super::gpu::GpuSpec;
+
+/// Ring all-gather of `bytes` total (sharded 1/P per rank before the op).
+pub fn allgather_time(gpu: &GpuSpec, bytes: f64, p: usize) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let pf = p as f64;
+    (pf - 1.0) / pf * bytes / gpu.link_bw + (pf - 1.0) * gpu.link_latency
+}
+
+/// Ring all-reduce of `bytes` (reduce-scatter + all-gather → 2× volume).
+pub fn allreduce_time(gpu: &GpuSpec, bytes: f64, p: usize) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let pf = p as f64;
+    2.0 * (pf - 1.0) / pf * bytes / gpu.link_bw + 2.0 * (pf - 1.0) * gpu.link_latency
+}
+
+/// Ring reduce-scatter (half of all-reduce).
+pub fn reduce_scatter_time(gpu: &GpuSpec, bytes: f64, p: usize) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let pf = p as f64;
+    (pf - 1.0) / pf * bytes / gpu.link_bw + (pf - 1.0) * gpu.link_latency
+}
+
+/// Point-to-point activation transfer (pipeline stage boundary).
+pub fn p2p_time(gpu: &GpuSpec, bytes: f64) -> f64 {
+    bytes / gpu.link_bw + gpu.link_latency
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_rank_free() {
+        let g = GpuSpec::h100_sxm5();
+        assert_eq!(allgather_time(&g, 1e9, 1), 0.0);
+        assert_eq!(allreduce_time(&g, 1e9, 1), 0.0);
+    }
+
+    #[test]
+    fn allreduce_twice_allgather_volume() {
+        let g = GpuSpec::h100_sxm5();
+        let bytes = 1e9;
+        let ag = allgather_time(&g, bytes, 4);
+        let ar = allreduce_time(&g, bytes, 4);
+        assert!((ar / ag - 2.0).abs() < 0.01, "ratio {}", ar / ag);
+    }
+
+    #[test]
+    fn scales_with_bytes() {
+        let g = GpuSpec::h100_sxm5();
+        assert!(allgather_time(&g, 2e9, 8) > allgather_time(&g, 1e9, 8));
+    }
+
+    #[test]
+    fn p_scaling_saturates() {
+        // (P-1)/P → bandwidth term approaches bytes/link_bw as P grows
+        let g = GpuSpec::h100_sxm5();
+        let t2 = allgather_time(&g, 1e9, 2) - 1.0 * g.link_latency;
+        let t8 = allgather_time(&g, 1e9, 8) - 7.0 * g.link_latency;
+        assert!(t8 < 2.0 * t2);
+        assert!(t8 > t2);
+    }
+
+    #[test]
+    fn latency_term_visible_for_tiny_messages() {
+        let g = GpuSpec::h100_sxm5();
+        let t = allreduce_time(&g, 1e3, 8); // 1 KB
+        assert!(t > 13.0 * g.link_latency, "latency should dominate: {t}");
+    }
+}

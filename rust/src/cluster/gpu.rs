@@ -1,0 +1,109 @@
+//! GPU device model (substrate replacing the paper's H100 testbed).
+//!
+//! All simulated timing derives from four numbers per device — peak
+//! matmul throughput, HBM bandwidth, HBM capacity and interconnect
+//! bandwidth — plus a kernel-launch overhead.  Speedup *ratios* between
+//! strategies come from arithmetic-intensity and communication-volume
+//! arithmetic over these constants (DESIGN.md §3).
+
+/// One accelerator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: String,
+    pub hbm_bytes: f64,
+    pub hbm_bw: f64,        // bytes/s
+    pub peak_flops: f64,    // matmul flops/s (bf16 w/ fp32 accum)
+    pub link_bw: f64,       // bytes/s per direction (NVLink)
+    pub link_latency: f64,  // s per collective hop
+    pub launch_overhead: f64, // s per kernel launch
+    pub sm_count: usize,
+}
+
+impl GpuSpec {
+    /// NVIDIA H100 SXM5 80GB — the paper's testbed device.
+    pub fn h100_sxm5() -> GpuSpec {
+        GpuSpec {
+            name: "H100-SXM5-80GB".into(),
+            hbm_bytes: 80.0e9,
+            hbm_bw: 3.35e12,
+            peak_flops: 989e12, // dense bf16
+            link_bw: 450e9,     // NVLink4 per direction
+            link_latency: 10e-6,
+            launch_overhead: 5e-6,
+            sm_count: 132,
+        }
+    }
+
+    /// The CPU host running real PJRT steps — used by the calibration
+    /// path that anchors the simulator against measured wall-clock.
+    pub fn cpu_host(measured_gflops: f64, measured_bw_gbs: f64) -> GpuSpec {
+        GpuSpec {
+            name: "cpu-host".into(),
+            hbm_bytes: 32.0e9,
+            hbm_bw: measured_bw_gbs * 1e9,
+            peak_flops: measured_gflops * 1e9,
+            link_bw: 10e9,
+            link_latency: 1e-6,
+            launch_overhead: 2e-6,
+            sm_count: 1,
+        }
+    }
+
+    /// Roofline time for one kernel: max(compute, memory) + launch.
+    pub fn kernel_time(&self, flops: f64, bytes: f64) -> f64 {
+        (flops / self.peak_flops).max(bytes / self.hbm_bw) + self.launch_overhead
+    }
+
+    /// Achieved-FLOPs fraction of a kernel (SM utilization proxy).
+    pub fn utilization(&self, flops: f64, bytes: f64) -> f64 {
+        let t = self.kernel_time(flops, bytes);
+        if t <= 0.0 {
+            0.0
+        } else {
+            (flops / self.peak_flops) / t
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h100_constants_sane() {
+        let g = GpuSpec::h100_sxm5();
+        assert!(g.peak_flops > 9e14);
+        assert!(g.hbm_bw > 3e12);
+        // machine balance ≈ 295 flops/byte
+        let balance = g.peak_flops / g.hbm_bw;
+        assert!(balance > 200.0 && balance < 400.0, "balance {balance}");
+    }
+
+    #[test]
+    fn compute_bound_vs_memory_bound() {
+        let g = GpuSpec::h100_sxm5();
+        // big square GEMM: compute-bound
+        let n = 8192f64;
+        let flops = 2.0 * n * n * n;
+        let bytes = 3.0 * n * n * 2.0;
+        assert!(flops / g.peak_flops > bytes / g.hbm_bw);
+        // LoRA-like skinny GEMM (M=512, K=4096, N=16): memory-bound
+        let flops_l = 2.0 * 512.0 * 4096.0 * 16.0;
+        let bytes_l = 2.0 * (512.0 * 4096.0 + 4096.0 * 16.0 + 512.0 * 16.0);
+        assert!(flops_l / g.peak_flops < bytes_l / g.hbm_bw);
+    }
+
+    #[test]
+    fn utilization_between_zero_and_one() {
+        let g = GpuSpec::h100_sxm5();
+        let u = g.utilization(1e12, 1e9);
+        assert!((0.0..=1.0).contains(&u));
+    }
+
+    #[test]
+    fn launch_overhead_dominates_tiny_kernels() {
+        let g = GpuSpec::h100_sxm5();
+        let t = g.kernel_time(1e6, 1e4); // microscopic kernel
+        assert!(t > 0.9 * g.launch_overhead);
+    }
+}

@@ -1,0 +1,93 @@
+//! Cluster simulator substrate: device model, collective cost model,
+//! memory footprint model and the multi-GPU cluster state used by the
+//! inter-task scheduler experiments.
+
+pub mod comm;
+pub mod gpu;
+pub mod memory;
+
+pub use gpu::GpuSpec;
+pub use memory::{estimate as memory_estimate, MemoryEstimate};
+
+/// A cluster of identical devices with an allocation bitmap — the
+/// inter-task scheduler's resource view.
+#[derive(Debug, Clone)]
+pub struct SimCluster {
+    pub gpu: GpuSpec,
+    pub free: Vec<bool>,
+}
+
+impl SimCluster {
+    pub fn new(gpu: GpuSpec, n_gpus: usize) -> SimCluster {
+        SimCluster {
+            gpu,
+            free: vec![true; n_gpus],
+        }
+    }
+
+    pub fn h100s(n_gpus: usize) -> SimCluster {
+        SimCluster::new(GpuSpec::h100_sxm5(), n_gpus)
+    }
+
+    pub fn total(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn available(&self) -> usize {
+        self.free.iter().filter(|&&f| f).count()
+    }
+
+    /// Allocate `k` GPUs; returns their indices or None if unavailable.
+    pub fn allocate(&mut self, k: usize) -> Option<Vec<usize>> {
+        if self.available() < k {
+            return None;
+        }
+        let mut got = Vec::with_capacity(k);
+        for (i, f) in self.free.iter_mut().enumerate() {
+            if *f {
+                *f = false;
+                got.push(i);
+                if got.len() == k {
+                    break;
+                }
+            }
+        }
+        Some(got)
+    }
+
+    pub fn release(&mut self, gpus: &[usize]) {
+        for &g in gpus {
+            assert!(!self.free[g], "double release of GPU {g}");
+            self.free[g] = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_release_cycle() {
+        let mut c = SimCluster::h100s(8);
+        assert_eq!(c.available(), 8);
+        let a = c.allocate(4).unwrap();
+        assert_eq!(a.len(), 4);
+        assert_eq!(c.available(), 4);
+        assert!(c.allocate(5).is_none());
+        let b = c.allocate(4).unwrap();
+        assert_eq!(c.available(), 0);
+        c.release(&a);
+        c.release(&b);
+        assert_eq!(c.available(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "double release")]
+    fn double_release_panics() {
+        let mut c = SimCluster::h100s(2);
+        let a = c.allocate(1).unwrap();
+        c.release(&a);
+        c.release(&a);
+    }
+}

@@ -1,0 +1,10 @@
+//! Model shapes, hyperparameter search spaces and task specifications —
+//! the declarative surface a user submits to the engine (paper Listing 1).
+
+pub mod model_shape;
+pub mod search;
+pub mod task_spec;
+
+pub use model_shape::{ModelShape, MODEL_FAMILY};
+pub use search::{HyperParams, SearchSpace};
+pub use task_spec::{Objective, TaskSpec};

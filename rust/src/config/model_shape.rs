@@ -1,0 +1,172 @@
+//! Backbone model shapes — the Rust mirror of `python/compile/model.py`'s
+//! `ModelConfig` plus the analytic FLOP/byte accounting the cluster
+//! simulator and parallelism cost models consume.
+//!
+//! The family replaces Llama-3.1-8B/70B and Qwen2.5-7B/32B at laptop scale
+//! (DESIGN.md §3); the *simulated* H100 experiments additionally use the
+//! paper's original model sizes, which are pure arithmetic here.
+
+/// Shape of a TinyLlama-family backbone (or a simulated big model).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelShape {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+}
+
+impl ModelShape {
+    pub fn new(
+        name: &str,
+        d_model: usize,
+        n_layers: usize,
+        n_heads: usize,
+        d_ff: usize,
+        vocab: usize,
+    ) -> ModelShape {
+        ModelShape {
+            name: name.to_string(),
+            d_model,
+            n_layers,
+            n_heads,
+            d_ff,
+            vocab,
+        }
+    }
+
+    /// Frozen-backbone parameter count (matches model.py param_count()).
+    pub fn param_count(&self) -> usize {
+        let (d, f, l) = (self.d_model, self.d_ff, self.n_layers);
+        let per_layer = 4 * d * d + 3 * d * f + 2 * d;
+        self.vocab * d + l * per_layer + d
+    }
+
+    /// Trainable LoRA parameters for one adapter of rank `r` on all 7
+    /// projections (q,k,v,o: d→d; gate,up: d→f; down: f→d).
+    pub fn lora_param_count(&self, r: usize) -> usize {
+        let (d, f, l) = (self.d_model, self.d_ff, self.n_layers);
+        let attn = 4 * (d * r + r * d);
+        let mlp = 2 * (d * r + r * f) + (f * r + r * d);
+        l * (attn + mlp)
+    }
+
+    /// Dense-path FLOPs for one token, forward only (≈ 2 · params_matmul).
+    pub fn flops_per_token_fwd(&self) -> f64 {
+        let (d, f, l) = (self.d_model as f64, self.d_ff as f64, self.n_layers as f64);
+        let attn_proj = 4.0 * 2.0 * d * d;
+        let mlp = 2.0 * 3.0 * d * f;
+        let head = 2.0 * self.vocab as f64 * d;
+        l * (attn_proj + mlp) + head
+    }
+
+    /// fwd + bwd ≈ 3× forward (activations + weight grads), the standard
+    /// 6·params·tokens rule; LoRA-only training skips base weight grads so
+    /// the backward over the frozen path is ~2× fwd (dX only).
+    pub fn flops_per_token_train_lora(&self) -> f64 {
+        3.0 * self.flops_per_token_fwd()
+    }
+
+    /// LoRA-path FLOPs per token per adapter at rank r (fwd; shrink+expand
+    /// over 7 projections).
+    pub fn lora_flops_per_token_fwd(&self, r: usize) -> f64 {
+        2.0 * self.lora_param_count(r) as f64 / self.n_layers as f64
+            * self.n_layers as f64
+    }
+
+    /// Bytes of base weights streamed HBM→SRAM for one forward pass
+    /// (each weight read once), fp16/bf16.
+    pub fn base_weight_bytes(&self) -> f64 {
+        2.0 * self.param_count() as f64
+    }
+
+    /// Bytes of one adapter's weights (read per pass on each rank that
+    /// hosts it — the redundancy AP eliminates), fp16.
+    pub fn lora_weight_bytes(&self, r: usize) -> f64 {
+        2.0 * self.lora_param_count(r) as f64
+    }
+}
+
+/// The real (runnable) family — must match model.py MODEL_FAMILY.
+pub fn model_family() -> Vec<ModelShape> {
+    vec![
+        ModelShape::new("nano", 64, 2, 4, 176, 272),
+        ModelShape::new("micro", 128, 4, 4, 352, 272),
+        ModelShape::new("small", 256, 6, 8, 704, 272),
+        ModelShape::new("medium", 512, 8, 8, 1408, 272),
+        ModelShape::new("base100m", 768, 12, 12, 2112, 272),
+    ]
+}
+
+/// Paper-scale shapes used only inside the cluster simulator
+/// (Fig 9 / 12 / 13 — pure arithmetic, never executed).
+pub fn paper_scale_family() -> Vec<ModelShape> {
+    vec![
+        // (name, d, L, H, d_ff, vocab) per the public model cards
+        ModelShape::new("llama-1b", 2048, 16, 32, 8192, 128256),
+        ModelShape::new("llama-8b", 4096, 32, 32, 14336, 128256),
+        ModelShape::new("qwen-7b", 3584, 28, 28, 18944, 152064),
+        ModelShape::new("qwen-32b", 5120, 64, 40, 27648, 152064),
+        ModelShape::new("llama-70b", 8192, 80, 64, 28672, 128256),
+    ]
+}
+
+pub struct ModelFamily;
+pub static MODEL_FAMILY: ModelFamily = ModelFamily;
+
+impl ModelFamily {
+    pub fn get(&self, name: &str) -> Option<ModelShape> {
+        model_family()
+            .into_iter()
+            .chain(paper_scale_family())
+            .find(|m| m.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_python_formula() {
+        let nano = MODEL_FAMILY.get("nano").unwrap();
+        // vocab*d + L*(4d² + 3df + 2d) + d
+        let expect = 272 * 64 + 2 * (4 * 64 * 64 + 3 * 64 * 176 + 2 * 64) + 64;
+        assert_eq!(nano.param_count(), expect);
+    }
+
+    #[test]
+    fn base100m_is_about_100m() {
+        let m = MODEL_FAMILY.get("base100m").unwrap();
+        let p = m.param_count();
+        assert!(p > 80_000_000 && p < 120_000_000, "params {p}");
+    }
+
+    #[test]
+    fn llama8b_is_about_8b() {
+        let m = MODEL_FAMILY.get("llama-8b").unwrap();
+        let p = m.param_count();
+        assert!(p > 6_000_000_000 && p < 9_000_000_000, "params {p}");
+    }
+
+    #[test]
+    fn lora_fraction_below_one_percent_at_paper_scale() {
+        // the paper's "<1% additional parameters" claim, checked on the
+        // simulated 8B shape with rank 16
+        let m = MODEL_FAMILY.get("llama-8b").unwrap();
+        let frac = m.lora_param_count(16) as f64 / m.param_count() as f64;
+        assert!(frac < 0.01, "fraction {frac}");
+    }
+
+    #[test]
+    fn lora_params_scale_linearly_in_rank() {
+        let m = MODEL_FAMILY.get("small").unwrap();
+        assert_eq!(m.lora_param_count(32), 2 * m.lora_param_count(16));
+    }
+
+    #[test]
+    fn unknown_model_is_none() {
+        assert!(MODEL_FAMILY.get("gpt-5").is_none());
+    }
+}

@@ -1,0 +1,178 @@
+//! Hyperparameter configurations and search spaces.
+//!
+//! A LoRA *task* owns a search space; each point in it is one *job*
+//! (paper §1: "a LoRA fine-tuning job = training under a specific
+//! hyperparameter configuration").
+
+use crate::util::json::Json;
+
+/// One hyperparameter configuration = one job's settings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HyperParams {
+    pub lr: f64,
+    pub rank: usize,
+    pub batch_size: usize,
+}
+
+impl HyperParams {
+    pub fn label(&self) -> String {
+        format!("lr{:.0e}_r{}_b{}", self.lr, self.rank, self.batch_size)
+    }
+}
+
+/// Grid search space (paper §A.4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchSpace {
+    pub lrs: Vec<f64>,
+    pub ranks: Vec<usize>,
+    pub batch_sizes: Vec<usize>,
+}
+
+impl SearchSpace {
+    /// Paper's single-GPU (7B–8B) space: 5 lrs × 3 ranks × 4 batch sizes
+    /// = 60 configurations.
+    pub fn paper_single_gpu() -> SearchSpace {
+        SearchSpace {
+            lrs: vec![1e-5, 5e-5, 2e-4, 3e-4, 5e-4],
+            ranks: vec![16, 32, 64],
+            batch_sizes: vec![1, 2, 4, 8],
+        }
+    }
+
+    /// Paper's multi-GPU (32B–70B) space: 4 × 4 × 4 = 64 configurations.
+    pub fn paper_multi_gpu() -> SearchSpace {
+        SearchSpace {
+            lrs: vec![1e-5, 5e-5, 1e-4, 3e-4],
+            ranks: vec![16, 32, 64, 128],
+            batch_sizes: vec![1, 2, 4, 8],
+        }
+    }
+
+    /// Scaled-down space for real CPU-PJRT sweeps (same structure,
+    /// laptop-scale lrs adapted to the tiny family).
+    pub fn tiny_sweep() -> SearchSpace {
+        SearchSpace {
+            lrs: vec![1e-4, 5e-4, 2e-3, 5e-3, 2e-2],
+            ranks: vec![2, 4, 8],
+            batch_sizes: vec![1, 2, 4, 8],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.lrs.len() * self.ranks.len() * self.batch_sizes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Full grid expansion, batch-size-major so homogeneous batch groups
+    /// (paper §A.1) are contiguous.
+    pub fn expand(&self) -> Vec<HyperParams> {
+        let mut out = Vec::with_capacity(self.len());
+        for &batch_size in &self.batch_sizes {
+            for &rank in &self.ranks {
+                for &lr in &self.lrs {
+                    out.push(HyperParams {
+                        lr,
+                        rank,
+                        batch_size,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    pub fn max_rank(&self) -> usize {
+        self.ranks.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("lr", Json::arr_f64(&self.lrs)),
+            (
+                "rank",
+                Json::Arr(self.ranks.iter().map(|&r| Json::Num(r as f64)).collect()),
+            ),
+            (
+                "batch_size",
+                Json::Arr(
+                    self.batch_sizes
+                        .iter()
+                        .map(|&b| Json::Num(b as f64))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<SearchSpace> {
+        let nums = |key: &str| -> anyhow::Result<Vec<f64>> {
+            Ok(j.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("{key} not an array"))?
+                .iter()
+                .filter_map(|v| v.as_f64())
+                .collect())
+        };
+        Ok(SearchSpace {
+            lrs: nums("lr")?,
+            ranks: nums("rank")?.into_iter().map(|v| v as usize).collect(),
+            batch_sizes: nums("batch_size")?
+                .into_iter()
+                .map(|v| v as usize)
+                .collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_spaces_have_paper_sizes() {
+        assert_eq!(SearchSpace::paper_single_gpu().len(), 60);
+        assert_eq!(SearchSpace::paper_multi_gpu().len(), 64);
+    }
+
+    #[test]
+    fn expand_covers_grid_batch_major() {
+        let s = SearchSpace {
+            lrs: vec![1e-4, 1e-3],
+            ranks: vec![4, 8],
+            batch_sizes: vec![1, 2],
+        };
+        let grid = s.expand();
+        assert_eq!(grid.len(), 8);
+        // batch-size-major: first half all bs=1
+        assert!(grid[..4].iter().all(|h| h.batch_size == 1));
+        assert!(grid[4..].iter().all(|h| h.batch_size == 2));
+        // all distinct
+        for i in 0..grid.len() {
+            for j in i + 1..grid.len() {
+                assert_ne!(grid[i], grid[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = SearchSpace::paper_single_gpu();
+        let j = s.to_json();
+        let s2 = SearchSpace::from_json(&Json::parse(&j.to_string()).unwrap())
+            .unwrap();
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn label_is_readable() {
+        let h = HyperParams {
+            lr: 2e-4,
+            rank: 16,
+            batch_size: 4,
+        };
+        assert_eq!(h.label(), "lr2e-4_r16_b4");
+    }
+}

@@ -1,0 +1,170 @@
+//! Task specification — what a tenant submits to the service
+//! (paper Listing 1: base model, dataset, search space, GPU count).
+
+use crate::util::json::Json;
+
+use super::search::SearchSpace;
+
+/// Training objective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Supervised fine-tuning (causal LM cross-entropy).
+    Sft,
+    /// Direct preference optimization.
+    Dpo,
+}
+
+impl Objective {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Objective::Sft => "sft",
+            Objective::Dpo => "dpo",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Objective> {
+        match s {
+            "sft" => Ok(Objective::Sft),
+            "dpo" => Ok(Objective::Dpo),
+            other => anyhow::bail!("unknown objective '{other}'"),
+        }
+    }
+}
+
+/// A LoRA fine-tuning task: one (model, dataset, search space) triple that
+/// expands into `search_space.len()` jobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskSpec {
+    pub name: String,
+    pub model: String,
+    pub dataset: String,
+    pub objective: Objective,
+    pub search_space: SearchSpace,
+    pub epochs: usize,
+    pub num_gpus: usize,
+    pub seq_len: usize,
+    /// Training-set size in samples (drives the duration estimate d_i).
+    pub train_samples: usize,
+    pub seed: u64,
+}
+
+impl TaskSpec {
+    pub fn num_jobs(&self) -> usize {
+        self.search_space.len()
+    }
+
+    /// Total samples the naive grid search would consume (all jobs × all
+    /// epochs) — the denominator of the paper's "samples saved" metric.
+    pub fn total_samples(&self) -> usize {
+        self.num_jobs() * self.epochs * self.train_samples
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("objective", Json::Str(self.objective.as_str().into())),
+            ("search_space", self.search_space.to_json()),
+            ("epochs", Json::Num(self.epochs as f64)),
+            ("num_gpus", Json::Num(self.num_gpus as f64)),
+            ("seq_len", Json::Num(self.seq_len as f64)),
+            ("train_samples", Json::Num(self.train_samples as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<TaskSpec> {
+        let s = |key: &str| -> anyhow::Result<String> {
+            Ok(j.req(key)?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("{key} not a string"))?
+                .to_string())
+        };
+        let u = |key: &str, default: usize| -> usize {
+            j.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+        };
+        Ok(TaskSpec {
+            name: s("name")?,
+            model: s("model")?,
+            dataset: s("dataset")?,
+            objective: Objective::parse(
+                j.get("objective").and_then(|v| v.as_str()).unwrap_or("sft"),
+            )?,
+            search_space: SearchSpace::from_json(j.req("search_space")?)?,
+            epochs: u("epochs", 3),
+            num_gpus: u("num_gpus", 1),
+            seq_len: u("seq_len", 64),
+            train_samples: u("train_samples", 1024),
+            seed: j.get("seed").and_then(|v| v.as_i64()).unwrap_or(0) as u64,
+        })
+    }
+
+    /// Parse a file containing either one task object or an array of them.
+    pub fn load_file(path: &str) -> anyhow::Result<Vec<TaskSpec>> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        match &j {
+            Json::Arr(items) => items.iter().map(TaskSpec::from_json).collect(),
+            _ => Ok(vec![TaskSpec::from_json(&j)?]),
+        }
+    }
+}
+
+impl Default for TaskSpec {
+    fn default() -> Self {
+        TaskSpec {
+            name: "task".into(),
+            model: "nano".into(),
+            dataset: "gsm-syn".into(),
+            objective: Objective::Sft,
+            search_space: SearchSpace::tiny_sweep(),
+            epochs: 3,
+            num_gpus: 1,
+            seq_len: 32,
+            train_samples: 1024,
+            seed: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let t = TaskSpec {
+            name: "math".into(),
+            model: "micro".into(),
+            dataset: "gsm-syn".into(),
+            objective: Objective::Dpo,
+            search_space: SearchSpace::paper_single_gpu(),
+            epochs: 3,
+            num_gpus: 4,
+            seq_len: 128,
+            train_samples: 9000,
+            seed: 7,
+        };
+        let j = Json::parse(&t.to_json().to_string()).unwrap();
+        assert_eq!(TaskSpec::from_json(&j).unwrap(), t);
+    }
+
+    #[test]
+    fn totals() {
+        let t = TaskSpec {
+            epochs: 3,
+            train_samples: 100,
+            ..Default::default()
+        };
+        assert_eq!(t.num_jobs(), t.search_space.len());
+        assert_eq!(t.total_samples(), t.num_jobs() * 300);
+    }
+
+    #[test]
+    fn objective_parse() {
+        assert_eq!(Objective::parse("sft").unwrap(), Objective::Sft);
+        assert_eq!(Objective::parse("dpo").unwrap(), Objective::Dpo);
+        assert!(Objective::parse("ppo").is_err());
+    }
+}

@@ -1,0 +1,287 @@
+//! Loss-aware pattern detection — the paper's Algorithm 1, verbatim.
+//!
+//! Streaming per-job detector: EMA-smoothed train losses + raw val
+//! losses; OLS slopes over the last `w` evaluations detect divergence,
+//! the (val − EMA-train)/EMA-train gap ratio detects overfitting, each
+//! behind a patience counter that resets on transient recovery.
+//! Underperformance is decided at the warmup boundary by cross-adapter
+//! ranking (`warmup.rs`), not here.
+
+use crate::stats::ema::Ema;
+use crate::stats::linreg::slope_tail;
+
+use super::job::ExitReason;
+
+/// Detector hyperparameters.  Defaults are the paper's (§8.3: w = 2,
+/// patience = 2, τ_gap = 0.1, τ_slope = 0.001, EMA α = 0.3).
+#[derive(Debug, Clone)]
+pub struct DetectorConfig {
+    pub ema_alpha: f64,
+    pub window: usize,
+    pub tau_slope: f64,
+    pub tau_gap: f64,
+    pub patience_div: usize,
+    pub patience_ovf: usize,
+}
+
+impl Default for DetectorConfig {
+    fn default() -> Self {
+        DetectorConfig {
+            ema_alpha: 0.3,
+            window: 2,
+            tau_slope: 0.001,
+            tau_gap: 0.1,
+            patience_div: 2,
+            patience_ovf: 2,
+        }
+    }
+}
+
+/// Streaming implementation of Algorithm 1 for one job.
+#[derive(Debug, Clone)]
+pub struct PatternDetector {
+    cfg: DetectorConfig,
+    ema: Ema,
+    /// EMA-smoothed train loss at each *evaluation point*.
+    ema_train_at_eval: Vec<f64>,
+    val_losses: Vec<f64>,
+    cnt_div: usize,
+    cnt_ovf: usize,
+}
+
+/// A detector verdict.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Continue,
+    Exit(ExitReason),
+}
+
+impl PatternDetector {
+    pub fn new(cfg: DetectorConfig) -> PatternDetector {
+        let alpha = cfg.ema_alpha;
+        PatternDetector {
+            cfg,
+            ema: Ema::new(alpha),
+            ema_train_at_eval: Vec::new(),
+            val_losses: Vec::new(),
+            cnt_div: 0,
+            cnt_ovf: 0,
+        }
+    }
+
+    /// Feed one raw training loss (every step).
+    pub fn observe_train(&mut self, loss: f64) {
+        self.ema.update(loss);
+    }
+
+    /// Feed one raw validation loss (every evaluation step); returns the
+    /// verdict per Algorithm 1.
+    pub fn observe_val(&mut self, val_loss: f64) -> Verdict {
+        let ema_train = self.ema.value().unwrap_or(val_loss);
+        self.ema_train_at_eval.push(ema_train);
+        self.val_losses.push(val_loss);
+        let w = self.cfg.window;
+
+        // Pattern 1: divergence — both slopes above τ_slope, with patience
+        if self.ema_train_at_eval.len() >= w && self.val_losses.len() >= w {
+            let s_train = slope_tail(&self.ema_train_at_eval, w);
+            let s_val = slope_tail(&self.val_losses, w);
+            if s_train >= self.cfg.tau_slope && s_val >= self.cfg.tau_slope {
+                self.cnt_div += 1;
+            } else {
+                self.cnt_div = 0;
+            }
+            if self.cnt_div >= self.cfg.patience_div {
+                return Verdict::Exit(ExitReason::Diverging);
+            }
+        }
+
+        // Pattern 2: overfitting — sustained gap ratio above τ_gap
+        let g = (val_loss - ema_train) / ema_train.max(1e-9);
+        if g > self.cfg.tau_gap {
+            self.cnt_ovf += 1;
+        } else {
+            self.cnt_ovf = 0;
+        }
+        if self.cnt_ovf >= self.cfg.patience_ovf {
+            return Verdict::Exit(ExitReason::Overfitting);
+        }
+
+        Verdict::Continue
+    }
+
+    pub fn ema_train(&self) -> Option<f64> {
+        self.ema.value()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_series(
+        cfg: DetectorConfig,
+        train: &[f64],
+        evals: &[(usize, f64)], // (after step index, val loss)
+    ) -> (Verdict, usize) {
+        let mut det = PatternDetector::new(cfg);
+        let mut ei = 0;
+        for (i, &t) in train.iter().enumerate() {
+            det.observe_train(t);
+            while ei < evals.len() && evals[ei].0 == i {
+                let v = det.observe_val(evals[ei].1);
+                if v != Verdict::Continue {
+                    return (v, i);
+                }
+                ei += 1;
+            }
+        }
+        (Verdict::Continue, train.len())
+    }
+
+    #[test]
+    fn healthy_convergence_never_exits() {
+        let train: Vec<f64> = (0..200).map(|i| 3.0 * (-0.02 * i as f64).exp() + 0.5).collect();
+        let evals: Vec<(usize, f64)> = (0..20)
+            .map(|k| (k * 10, 3.1 * (-0.02 * (k * 10) as f64).exp() + 0.52))
+            .collect();
+        let (v, _) = run_series(DetectorConfig::default(), &train, &evals);
+        assert_eq!(v, Verdict::Continue);
+    }
+
+    #[test]
+    fn divergence_detected_when_both_rise() {
+        // falls then blows up at step 100
+        let train: Vec<f64> = (0..200)
+            .map(|i| {
+                if i < 100 {
+                    2.0 - 0.01 * i as f64
+                } else {
+                    1.0 + 0.2 * (i - 100) as f64
+                }
+            })
+            .collect();
+        let evals: Vec<(usize, f64)> = (0..20).map(|k| (k * 10, train[k * 10] + 0.05)).collect();
+        let (v, step) = run_series(DetectorConfig::default(), &train, &evals);
+        assert_eq!(v, Verdict::Exit(ExitReason::Diverging));
+        assert!(step > 100 && step < 160, "detected at {step}");
+    }
+
+    #[test]
+    fn overfitting_detected_when_val_departs() {
+        // train keeps falling; val turns up at step 80
+        let train: Vec<f64> = (0..200).map(|i| 2.0 * (-0.02 * i as f64).exp() + 0.4).collect();
+        let evals: Vec<(usize, f64)> = (0..20)
+            .map(|k| {
+                let s = k * 10;
+                let base = 2.0 * (-0.02 * s as f64).exp() + 0.42;
+                let v = if s > 80 { base + 0.012 * (s - 80) as f64 } else { base };
+                (s, v)
+            })
+            .collect();
+        let (v, step) = run_series(DetectorConfig::default(), &train, &evals);
+        assert_eq!(v, Verdict::Exit(ExitReason::Overfitting));
+        assert!(step > 80, "detected at {step}");
+    }
+
+    #[test]
+    fn transient_spike_resets_patience() {
+        // one bad eval then recovery: patience must reset, no exit
+        let train: Vec<f64> = (0..100).map(|i| 2.0 - 0.005 * i as f64).collect();
+        let mut evals: Vec<(usize, f64)> = (0..10).map(|k| (k * 10, 2.0 - 0.005 * (k * 10) as f64)).collect();
+        evals[4].1 += 0.8; // single spike (gap > τ_gap once)
+        let (v, _) = run_series(DetectorConfig::default(), &train, &evals);
+        assert_eq!(v, Verdict::Continue);
+    }
+
+    #[test]
+    fn patience_one_is_trigger_happy() {
+        let cfg = DetectorConfig {
+            patience_ovf: 1,
+            ..DetectorConfig::default()
+        };
+        let train: Vec<f64> = (0..100).map(|_| 1.0).collect();
+        let mut evals: Vec<(usize, f64)> = (0..10).map(|k| (k * 10, 1.02)).collect();
+        evals[4].1 = 1.5; // one spike now exits
+        let (v, _) = run_series(cfg, &train, &evals);
+        assert_eq!(v, Verdict::Exit(ExitReason::Overfitting));
+    }
+
+    #[test]
+    fn flat_noisy_losses_mostly_survive() {
+        // The paper's detector is deliberately tight (w = 2, patience 2);
+        // plateaued-but-noisy jobs must survive in the large majority of
+        // trials (occasional false exits are backfilled, not fatal).
+        use crate::util::rng::Pcg32;
+        let mut false_exits = 0;
+        for seed in 0..20u64 {
+            let mut rng = Pcg32::seeded(seed);
+            let train: Vec<f64> = (0..300).map(|_| 1.0 + 0.004 * rng.normal()).collect();
+            let evals: Vec<(usize, f64)> =
+                (0..30).map(|k| (k * 10, 1.02 + 0.004 * rng.normal())).collect();
+            let (v, _) = run_series(DetectorConfig::default(), &train, &evals);
+            if v != Verdict::Continue {
+                false_exits += 1;
+            }
+        }
+        assert!(false_exits <= 4, "{false_exits}/20 flat jobs were killed");
+    }
+
+    #[test]
+    fn detector_on_simulated_trajectories() {
+        // end-to-end: the detector catches most simulated divergers well
+        // before their budget and spares most converging configs
+        use crate::config::HyperParams;
+        use crate::data::synth::dataset_profile;
+        use crate::trajsim::{Regime, SimJob};
+        let prof = dataset_profile("gsm-syn").unwrap();
+        let total = 300;
+        let mut caught = 0;
+        let mut div_total = 0;
+        let mut false_pos = 0;
+        let mut conv_total = 0;
+        for seed in 0..40u64 {
+            for &(lr, expect_div) in &[(5e-4, true), (1e-4, false)] {
+                let hp = HyperParams { lr, rank: 16, batch_size: 4 };
+                let job = SimJob::new(&hp, prof, total, seed);
+                let mut det = PatternDetector::new(DetectorConfig::default());
+                let mut exited = false;
+                for s in 0..total {
+                    det.observe_train(job.train_loss(s));
+                    if s % 10 == 9 {
+                        if let Verdict::Exit(ExitReason::Diverging) =
+                            det.observe_val(job.val_loss(s))
+                        {
+                            exited = true;
+                            break;
+                        }
+                    }
+                }
+                match (job.regime, expect_div) {
+                    (Regime::Diverging, _) => {
+                        div_total += 1;
+                        if exited {
+                            caught += 1;
+                        }
+                    }
+                    (Regime::Converging, false) => {
+                        conv_total += 1;
+                        if exited {
+                            false_pos += 1;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        assert!(div_total > 10, "need divergers in the pool: {div_total}");
+        assert!(
+            caught as f64 / div_total as f64 > 0.8,
+            "caught {caught}/{div_total}"
+        );
+        assert!(
+            (false_pos as f64) < 0.2 * conv_total as f64,
+            "false positives {false_pos}/{conv_total}"
+        );
+    }
+}

@@ -1,0 +1,378 @@
+//! Executor backends: the task runner drives N adapter slots through
+//! train/eval steps without knowing whether compute is the real PJRT
+//! artifact path (`XlaBackend`) or the calibrated simulator
+//! (`SimBackend`) standing in for the H100 testbed.
+
+use std::any::Any;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::gpu::GpuSpec;
+use crate::config::HyperParams;
+use crate::data::corpus::{Corpus, PrefCorpus};
+use crate::data::synth::DatasetProfile;
+use crate::parallel::baselines::Alto;
+use crate::parallel::workload::{Strategy, Workload};
+use crate::runtime::{Manifest, Runtime, Session};
+use crate::trajsim::SimJob;
+
+/// Opaque per-slot checkpoint (optimizer state + adapter weights), used
+/// for warmup rotation: retained candidates resume continue-training
+/// "carrying over their optimizer states" (paper §5.2).
+pub struct Snapshot(pub Box<dyn Any + Send>);
+
+/// An executor hosting `n_slots` co-located adapters on one GPU group.
+pub trait Backend {
+    fn n_slots(&self) -> usize;
+
+    /// Load a fresh job into `slot` (resetting its adapter + optimizer).
+    fn onload(&mut self, slot: usize, hp: &HyperParams, total_steps: usize, seed: u64)
+        -> Result<()>;
+
+    /// Freeze a slot (early exit / empty).
+    fn deactivate(&mut self, slot: usize);
+
+    /// Advance every active slot one optimizer step; per-slot train loss
+    /// (None = inactive slot).
+    fn step(&mut self) -> Result<Vec<Option<f64>>>;
+
+    /// Validation loss per slot.
+    fn eval(&mut self) -> Result<Vec<Option<f64>>>;
+
+    /// Wall-clock seconds consumed by the last `step()` (simulated time
+    /// for SimBackend, measured for XlaBackend).
+    fn last_step_seconds(&self) -> f64;
+
+    /// Capture a slot's training state for later restore.
+    fn snapshot(&mut self, slot: usize) -> Result<Snapshot>;
+
+    /// Restore a previously captured state into `slot`.
+    fn restore(&mut self, slot: usize, snap: &Snapshot) -> Result<()>;
+}
+
+// ---------------------------------------------------------------------------
+// Simulated backend
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+struct SimSlot {
+    job: SimJob,
+    local_step: usize,
+    active: bool,
+}
+
+/// Simulator executor: loss trajectories from `trajsim`, step timing from
+/// the ALTO strategy cost model on a configurable device.
+pub struct SimBackend {
+    profile: DatasetProfile,
+    slots: Vec<Option<SimSlot>>,
+    gpu: GpuSpec,
+    n_gpus: usize,
+    seq_len: usize,
+    batch_size: usize,
+    last_step_s: f64,
+    model: crate::config::ModelShape,
+}
+
+impl SimBackend {
+    pub fn new(
+        model: crate::config::ModelShape,
+        profile: DatasetProfile,
+        n_slots: usize,
+        batch_size: usize,
+        seq_len: usize,
+        gpu: GpuSpec,
+        n_gpus: usize,
+    ) -> SimBackend {
+        SimBackend {
+            profile,
+            slots: (0..n_slots).map(|_| None).collect(),
+            gpu,
+            n_gpus,
+            seq_len,
+            batch_size,
+            last_step_s: 0.0,
+            model,
+        }
+    }
+
+    fn active_ranks(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .flatten()
+            .filter(|s| s.active)
+            .map(|s| s.job.hp.rank)
+            .collect()
+    }
+}
+
+impl Backend for SimBackend {
+    fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn onload(
+        &mut self,
+        slot: usize,
+        hp: &HyperParams,
+        total_steps: usize,
+        seed: u64,
+    ) -> Result<()> {
+        self.slots[slot] = Some(SimSlot {
+            job: SimJob::new(hp, &self.profile, total_steps, seed),
+            local_step: 0,
+            active: true,
+        });
+        Ok(())
+    }
+
+    fn deactivate(&mut self, slot: usize) {
+        if let Some(s) = &mut self.slots[slot] {
+            s.active = false;
+        }
+    }
+
+    fn step(&mut self) -> Result<Vec<Option<f64>>> {
+        let ranks = self.active_ranks();
+        if ranks.is_empty() {
+            self.last_step_s = 0.0;
+            return Ok(vec![None; self.slots.len()]);
+        }
+        let w = Workload {
+            model: self.model.clone(),
+            ranks,
+            batch_per_adapter: self.batch_size,
+            seq_len: self.seq_len,
+        };
+        self.last_step_s = Alto.step_time(&w, &self.gpu, self.n_gpus).total();
+        Ok(self
+            .slots
+            .iter_mut()
+            .map(|s| match s {
+                Some(s) if s.active => {
+                    let l = s.job.train_loss(s.local_step);
+                    s.local_step += 1;
+                    Some(l)
+                }
+                _ => None,
+            })
+            .collect())
+    }
+
+    fn eval(&mut self) -> Result<Vec<Option<f64>>> {
+        Ok(self
+            .slots
+            .iter()
+            .map(|s| match s {
+                Some(s) if s.active => Some(s.job.val_loss(s.local_step.saturating_sub(1))),
+                _ => None,
+            })
+            .collect())
+    }
+
+    fn last_step_seconds(&self) -> f64 {
+        self.last_step_s
+    }
+
+    fn snapshot(&mut self, slot: usize) -> Result<Snapshot> {
+        let s = self.slots[slot].clone().context("empty slot")?;
+        Ok(Snapshot(Box::new(s)))
+    }
+
+    fn restore(&mut self, slot: usize, snap: &Snapshot) -> Result<()> {
+        let s = snap
+            .0
+            .downcast_ref::<SimSlot>()
+            .context("snapshot is not a SimSlot")?;
+        self.slots[slot] = Some(SimSlot {
+            active: true,
+            ..s.clone()
+        });
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Real PJRT backend
+// ---------------------------------------------------------------------------
+
+/// Checkpointed slot state for the XLA backend.
+struct XlaSnapshot {
+    tensors: Vec<(String, Vec<f32>)>,
+    rank: usize,
+    lr: f32,
+}
+
+/// Real executor: drives the AOT artifacts through `runtime::Session`.
+pub struct XlaBackend {
+    session: Session,
+    corpus: Corpus,
+    pref: Option<PrefCorpus>,
+    data_seed: u64,
+    last_step_s: f64,
+    occupied: Vec<bool>,
+}
+
+impl XlaBackend {
+    pub fn new_sft(
+        rt: &Runtime,
+        manifest: &Manifest,
+        artifact_key: &str,
+        corpus: Corpus,
+        data_seed: u64,
+    ) -> Result<XlaBackend> {
+        let spec = manifest.get(artifact_key)?;
+        let n = spec.n;
+        let r = spec.r_max.min(2).max(1);
+        let session = Session::new(rt, manifest, artifact_key, &vec![r; n], &vec![1e-3; n], 7)?;
+        Ok(XlaBackend {
+            session,
+            corpus,
+            pref: None,
+            data_seed,
+            last_step_s: 0.0,
+            occupied: vec![false; n],
+        })
+    }
+
+    pub fn new_dpo(
+        rt: &Runtime,
+        manifest: &Manifest,
+        artifact_key: &str,
+        corpus: Corpus,
+        pref: PrefCorpus,
+        data_seed: u64,
+    ) -> Result<XlaBackend> {
+        let mut b = Self::new_sft(rt, manifest, artifact_key, corpus, data_seed)?;
+        b.pref = Some(pref);
+        Ok(b)
+    }
+
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+
+    fn adapter_state_names(&self) -> Vec<String> {
+        // all [L, N, ...] stacked state inputs
+        let mut names = vec![];
+        for proj in ["q", "k", "v", "o", "gate", "up", "down"] {
+            for m in ["ad", "m", "v"] {
+                names.push(format!("{m}.a_{proj}"));
+                names.push(format!("{m}.b_{proj}"));
+            }
+        }
+        names
+    }
+}
+
+impl Backend for XlaBackend {
+    fn n_slots(&self) -> usize {
+        self.session.spec().n
+    }
+
+    fn onload(
+        &mut self,
+        slot: usize,
+        hp: &HyperParams,
+        _total_steps: usize,
+        seed: u64,
+    ) -> Result<()> {
+        if hp.batch_size != self.session.spec().b {
+            bail!(
+                "job batch {} does not match executor batch {} (homogeneous \
+                 grouping violated)",
+                hp.batch_size,
+                self.session.spec().b
+            );
+        }
+        self.session.reset_slot(slot, hp.rank, hp.lr, seed)?;
+        self.occupied[slot] = true;
+        Ok(())
+    }
+
+    fn deactivate(&mut self, slot: usize) {
+        self.session.set_active(slot, false);
+    }
+
+    fn step(&mut self) -> Result<Vec<Option<f64>>> {
+        let spec = self.session.spec().clone();
+        let start = Instant::now();
+        let losses: Vec<f32> = if let Some(pref) = &self.pref {
+            let b = pref.train_batch(spec.n, spec.b, self.session.step_count(), self.data_seed);
+            self.session.dpo_step(&b)?.0
+        } else {
+            let b = self
+                .corpus
+                .train_batch(spec.n, spec.b, self.session.step_count(), self.data_seed);
+            self.session.train_step(&b)?
+        };
+        self.last_step_s = start.elapsed().as_secs_f64();
+        Ok(losses
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| {
+                if self.occupied[i] && self.session.slots()[i].active {
+                    Some(l as f64)
+                } else {
+                    None
+                }
+            })
+            .collect())
+    }
+
+    fn eval(&mut self) -> Result<Vec<Option<f64>>> {
+        let spec = self.session.spec().clone();
+        let losses: Vec<f32> = if let Some(pref) = &self.pref {
+            let b = pref.val_batch(spec.n, spec.b);
+            self.session.dpo_eval(&b)?.0
+        } else {
+            let b = self.corpus.val_batch(spec.n, spec.b);
+            self.session.eval(&b)?
+        };
+        Ok(losses
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| {
+                if self.occupied[i] && self.session.slots()[i].active {
+                    Some(l as f64)
+                } else {
+                    None
+                }
+            })
+            .collect())
+    }
+
+    fn last_step_seconds(&self) -> f64 {
+        self.last_step_s
+    }
+
+    fn snapshot(&mut self, slot: usize) -> Result<Snapshot> {
+        let names = self.adapter_state_names();
+        let mut tensors = Vec::with_capacity(names.len());
+        for name in names {
+            let data = self.session.slot_slice(&name, slot)?;
+            tensors.push((name, data));
+        }
+        let s = &self.session.slots()[slot];
+        Ok(Snapshot(Box::new(XlaSnapshot {
+            tensors,
+            rank: s.rank,
+            lr: s.lr,
+        })))
+    }
+
+    fn restore(&mut self, slot: usize, snap: &Snapshot) -> Result<()> {
+        let s = snap
+            .0
+            .downcast_ref::<XlaSnapshot>()
+            .context("snapshot is not an XlaSnapshot")?;
+        self.session
+            .reset_slot(slot, s.rank, s.lr as f64, 0)?;
+        for (name, data) in &s.tensors {
+            self.session.write_slot_slice(name, slot, data)?;
+        }
+        self.occupied[slot] = true;
+        Ok(())
+    }
+}

@@ -1,0 +1,149 @@
+//! Jobs: one hyperparameter configuration's training lifecycle.
+
+use crate::config::HyperParams;
+
+/// Why a job stopped before its full budget (paper Fig 6 / Algorithm 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExitReason {
+    Diverging,
+    Overfitting,
+    Underperforming,
+    /// Ran its full budget.
+    Completed,
+}
+
+impl ExitReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExitReason::Diverging => "diverging",
+            ExitReason::Overfitting => "overfitting",
+            ExitReason::Underperforming => "underperforming",
+            ExitReason::Completed => "completed",
+        }
+    }
+}
+
+/// Lifecycle state of a job.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobState {
+    Queued,
+    Warmup,
+    Training,
+    Exited(ExitReason),
+}
+
+/// One LoRA fine-tuning job (a point in the task's search space).
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: usize,
+    pub hp: HyperParams,
+    pub state: JobState,
+    /// Raw train losses at every step executed.
+    pub train_losses: Vec<f64>,
+    /// (step, val loss) at every evaluation.
+    pub val_losses: Vec<(usize, f64)>,
+    /// Lowest validation loss observed (checkpoint-at-best).
+    pub best_val: f64,
+    pub steps_run: usize,
+    pub total_steps: usize,
+    pub seed: u64,
+}
+
+impl Job {
+    pub fn new(id: usize, hp: HyperParams, total_steps: usize, seed: u64) -> Job {
+        Job {
+            id,
+            hp,
+            state: JobState::Queued,
+            train_losses: Vec::new(),
+            val_losses: Vec::new(),
+            best_val: f64::INFINITY,
+            steps_run: 0,
+            total_steps,
+            seed,
+        }
+    }
+
+    pub fn record_train(&mut self, loss: f64) {
+        self.train_losses.push(loss);
+        self.steps_run += 1;
+    }
+
+    pub fn record_val(&mut self, step: usize, loss: f64) {
+        self.val_losses.push((step, loss));
+        if loss < self.best_val {
+            self.best_val = loss;
+        }
+    }
+
+    pub fn samples_used(&self) -> usize {
+        self.steps_run * self.hp.batch_size
+    }
+
+    pub fn samples_budget(&self) -> usize {
+        self.total_steps * self.hp.batch_size
+    }
+
+    pub fn is_exited(&self) -> bool {
+        matches!(self.state, JobState::Exited(_))
+    }
+
+    pub fn exit_reason(&self) -> Option<ExitReason> {
+        match self.state {
+            JobState::Exited(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn last_val(&self) -> Option<f64> {
+        self.val_losses.last().map(|&(_, l)| l)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job() -> Job {
+        Job::new(
+            0,
+            HyperParams {
+                lr: 1e-3,
+                rank: 8,
+                batch_size: 4,
+            },
+            100,
+            0,
+        )
+    }
+
+    #[test]
+    fn best_val_tracks_minimum() {
+        let mut j = job();
+        j.record_val(10, 2.0);
+        j.record_val(20, 1.5);
+        j.record_val(30, 1.8);
+        assert_eq!(j.best_val, 1.5);
+        assert_eq!(j.last_val(), Some(1.8));
+    }
+
+    #[test]
+    fn sample_accounting() {
+        let mut j = job();
+        for _ in 0..25 {
+            j.record_train(1.0);
+        }
+        assert_eq!(j.samples_used(), 100);
+        assert_eq!(j.samples_budget(), 400);
+    }
+
+    #[test]
+    fn exit_states() {
+        let mut j = job();
+        assert!(!j.is_exited());
+        j.state = JobState::Exited(ExitReason::Diverging);
+        assert!(j.is_exited());
+        assert_eq!(j.exit_reason(), Some(ExitReason::Diverging));
+        assert_eq!(ExitReason::Overfitting.as_str(), "overfitting");
+    }
+}

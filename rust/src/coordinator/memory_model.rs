@@ -1,0 +1,153 @@
+//! Automatic memory profiling + the fitted M̂(B) = k0 + k1·B·L linear
+//! model the intra-task scheduler queries before every admission
+//! (paper §7.1, Appendix A.3).
+
+use crate::cluster::gpu::GpuSpec;
+use crate::cluster::memory;
+use crate::config::ModelShape;
+use crate::stats::linreg::fit_xy;
+
+/// Fitted peak-memory predictor.
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    pub k0: f64,
+    pub k1: f64,
+    pub seq_len: usize,
+    /// HBM capacity × safety margin the scheduler admits against.
+    pub budget: f64,
+}
+
+/// Safety margin (fraction of HBM the scheduler may fill) — §A.3.
+pub const SAFETY_MARGIN: f64 = 0.92;
+
+impl MemoryModel {
+    /// Predicted peak bytes at total batch B.
+    pub fn predict(&self, total_batch: usize) -> f64 {
+        self.k0 + self.k1 * total_batch as f64 * self.seq_len as f64
+    }
+
+    /// Would a configuration of `total_batch` fit within the margin?
+    pub fn fits(&self, total_batch: usize) -> bool {
+        self.predict(total_batch) <= self.budget
+    }
+
+    /// Largest total batch size that fits (the profiler's B_max).
+    pub fn max_batch(&self) -> usize {
+        if self.k1 <= 0.0 {
+            return usize::MAX;
+        }
+        let b = (self.budget - self.k0) / (self.k1 * self.seq_len as f64);
+        b.max(0.0) as usize
+    }
+}
+
+/// Profile a (model, rank, n-adapters, seq) configuration against a device
+/// and fit the linear model, exactly mirroring §A.3's two-phase procedure:
+/// binary-search B_max with N = 1, then sweep (N, b) grid points and fit.
+///
+/// Measurements come from the analytic footprint model (the simulated
+/// testbed); on the real CPU path the same fit runs over measured RSS
+/// (see `train::calibrate`).
+pub fn profile(
+    model: &ModelShape,
+    gpu: &GpuSpec,
+    rank: usize,
+    n_adapters: usize,
+    seq_len: usize,
+    p: usize,
+) -> MemoryModel {
+    let budget = gpu.hbm_bytes * SAFETY_MARGIN;
+    // Phase 1: binary search B_max at N = 1
+    let measure = |n: usize, total_batch: usize| -> f64 {
+        memory::estimate(model, &vec![rank; n], total_batch, seq_len, p).total()
+    };
+    let mut lo = 0usize;
+    let mut hi = 4096usize;
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        if measure(1, mid) <= budget {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    let b_max = lo.max(1);
+    // Phase 2: sweep (N, b) with N·b ≤ B_max, fit M̂(B) = k0 + k1·B·L
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for &b in &[1usize, 2, 4, 8, 16, 32] {
+        for n in [1, 2, n_adapters.max(1)] {
+            let total = n * b;
+            if total <= b_max {
+                xs.push((total * seq_len) as f64);
+                ys.push(measure(n, total));
+            }
+        }
+    }
+    if xs.len() < 2 {
+        xs.push(0.0);
+        ys.push(measure(1, 0));
+        xs.push(seq_len as f64);
+        ys.push(measure(1, 1));
+    }
+    let (k0, k1) = fit_xy(&xs, &ys);
+    MemoryModel {
+        k0,
+        k1,
+        seq_len,
+        budget,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MODEL_FAMILY;
+
+    #[test]
+    fn fit_predicts_analytic_model() {
+        let m = MODEL_FAMILY.get("llama-8b").unwrap();
+        let g = GpuSpec::h100_sxm5();
+        let mm = profile(&m, &g, 16, 4, 1024, 1);
+        // prediction within 5% of the analytic truth at an unseen batch
+        let truth = memory::estimate(&m, &[16; 4], 24, 1024, 1).total();
+        let pred = mm.predict(24);
+        assert!(
+            (pred - truth).abs() / truth < 0.05,
+            "pred {pred:.3e} vs truth {truth:.3e}"
+        );
+    }
+
+    #[test]
+    fn fits_monotone_and_consistent() {
+        let m = MODEL_FAMILY.get("llama-8b").unwrap();
+        let g = GpuSpec::h100_sxm5();
+        let mm = profile(&m, &g, 64, 8, 1024, 1);
+        assert!(mm.fits(1));
+        let bmax = mm.max_batch();
+        assert!(mm.fits(bmax));
+        assert!(!mm.fits(bmax + 1));
+    }
+
+    #[test]
+    fn seventy_b_has_no_single_gpu_room() {
+        let m = MODEL_FAMILY.get("llama-70b").unwrap();
+        let g = GpuSpec::h100_sxm5();
+        let mm = profile(&m, &g, 16, 1, 1024, 1);
+        // k0 (weights + states) alone exceeds the budget
+        assert!(mm.k0 > mm.budget);
+        assert!(!mm.fits(1));
+        // sharded across 4, it fits
+        let mm4 = profile(&m, &g, 16, 1, 1024, 4);
+        assert!(mm4.fits(4), "70B/4 should admit a small batch");
+    }
+
+    #[test]
+    fn positive_slope() {
+        let m = MODEL_FAMILY.get("qwen-32b").unwrap();
+        let g = GpuSpec::h100_sxm5();
+        let mm = profile(&m, &g, 32, 4, 512, 2);
+        assert!(mm.k1 > 0.0);
+        assert!(mm.predict(8) < mm.predict(16));
+    }
+}

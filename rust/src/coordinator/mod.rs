@@ -1,0 +1,22 @@
+//! The ALTO coordinator (L3): jobs, the Algorithm-1 pattern detectors,
+//! warmup selection, executor backends (real PJRT + simulator), the
+//! intra-task runner, throughput/memory profilers and the multi-task
+//! service loop.
+
+pub mod early_exit;
+pub mod executor;
+pub mod job;
+pub mod memory_model;
+pub mod profiler;
+pub mod service;
+pub mod task_runner;
+pub mod warmup;
+
+pub use early_exit::{DetectorConfig, PatternDetector, Verdict};
+pub use executor::{Backend, SimBackend, Snapshot, XlaBackend};
+pub use job::{ExitReason, Job, JobState};
+pub use memory_model::MemoryModel;
+pub use profiler::Profiler;
+pub use service::{Service, ServiceConfig, ServiceReport};
+pub use task_runner::{make_jobs, run_task, RunConfig, TaskResult};
+pub use warmup::{select_top_k, WarmupConfig};

@@ -1,0 +1,128 @@
+//! Lightweight throughput profiling + task-duration estimation
+//! (paper §7.2): a short measured run yields samples/second; combined
+//! with the task's total sample count this gives the d_i the inter-task
+//! scheduler plans with.  Results are cached per (model, batch, gpus).
+
+use std::collections::BTreeMap;
+
+use crate::cluster::gpu::GpuSpec;
+use crate::config::{ModelShape, TaskSpec};
+use crate::parallel::baselines::Alto;
+use crate::parallel::workload::{Strategy, Workload};
+
+/// Cached throughput entry.
+#[derive(Debug, Clone, Copy)]
+pub struct ThroughputProfile {
+    pub samples_per_s: f64,
+}
+
+/// Profiler with a per-configuration cache (paper: "profiling results are
+/// cached per task to avoid redundant measurements").
+pub struct Profiler {
+    gpu: GpuSpec,
+    cache: BTreeMap<String, ThroughputProfile>,
+    pub profile_runs: usize,
+}
+
+impl Profiler {
+    pub fn new(gpu: GpuSpec) -> Profiler {
+        Profiler {
+            gpu,
+            cache: BTreeMap::new(),
+            profile_runs: 0,
+        }
+    }
+
+    fn key(model: &ModelShape, n: usize, b: usize, seq: usize, gpus: usize) -> String {
+        format!("{}|{n}|{b}|{seq}|{gpus}", model.name)
+    }
+
+    /// Samples/second of the batched executor on this configuration.
+    pub fn throughput(
+        &mut self,
+        model: &ModelShape,
+        n_adapters: usize,
+        rank: usize,
+        batch: usize,
+        seq: usize,
+        gpus: usize,
+    ) -> ThroughputProfile {
+        let key = Self::key(model, n_adapters, batch, seq, gpus);
+        if let Some(hit) = self.cache.get(&key) {
+            return *hit;
+        }
+        // the "short training run": one modeled step of the ALTO executor
+        self.profile_runs += 1;
+        let w = Workload {
+            model: model.clone(),
+            ranks: vec![rank; n_adapters.max(1)],
+            batch_per_adapter: batch,
+            seq_len: seq,
+        };
+        let t = Alto.step_time(&w, &self.gpu, gpus).total();
+        let prof = ThroughputProfile {
+            samples_per_s: (n_adapters.max(1) * batch) as f64 / t,
+        };
+        self.cache.insert(key, prof);
+        prof
+    }
+
+    /// Worst-case duration estimate d_i for a task: total samples over
+    /// sustained throughput at the task's dominant configuration.
+    pub fn estimate_duration(&mut self, model: &ModelShape, task: &TaskSpec, n_slots: usize) -> f64 {
+        let b = *task
+            .search_space
+            .batch_sizes
+            .iter()
+            .min()
+            .unwrap_or(&1);
+        let rank = task.search_space.ranks.iter().copied().max().unwrap_or(16);
+        let tput = self.throughput(model, n_slots, rank, b, task.seq_len, task.num_gpus);
+        task.total_samples() as f64 / tput.samples_per_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SearchSpace, MODEL_FAMILY};
+
+    #[test]
+    fn caching_avoids_remeasurement() {
+        let mut p = Profiler::new(GpuSpec::h100_sxm5());
+        let m = MODEL_FAMILY.get("llama-8b").unwrap();
+        let a = p.throughput(&m, 4, 16, 2, 512, 1);
+        let runs = p.profile_runs;
+        let b = p.throughput(&m, 4, 16, 2, 512, 1);
+        assert_eq!(p.profile_runs, runs);
+        assert_eq!(a.samples_per_s, b.samples_per_s);
+        p.throughput(&m, 4, 16, 4, 512, 1);
+        assert_eq!(p.profile_runs, runs + 1);
+    }
+
+    #[test]
+    fn duration_scales_with_samples() {
+        let mut p = Profiler::new(GpuSpec::h100_sxm5());
+        let m = MODEL_FAMILY.get("llama-8b").unwrap();
+        let mut t1 = TaskSpec {
+            search_space: SearchSpace::paper_single_gpu(),
+            train_samples: 1000,
+            ..TaskSpec::default()
+        };
+        let d1 = p.estimate_duration(&m, &t1, 4);
+        t1.train_samples = 2000;
+        let d2 = p.estimate_duration(&m, &t1, 4);
+        assert!((d2 / d1 - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn bigger_model_is_slower() {
+        let mut p = Profiler::new(GpuSpec::h100_sxm5());
+        let small = MODEL_FAMILY.get("llama-8b").unwrap();
+        let big = MODEL_FAMILY.get("llama-70b").unwrap();
+        let t = TaskSpec::default();
+        let ds = p.estimate_duration(&small, &t, 4);
+        let db = p.estimate_duration(&big, &t, 4);
+        assert!(db > ds * 3.0, "{db} vs {ds}");
+    }
+}

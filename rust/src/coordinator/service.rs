@@ -1,0 +1,258 @@
+//! LoRA-as-a-Service (paper §4, §7.2): accepts declarative task specs,
+//! profiles them, runs each task's search through the batched executor
+//! with early exit, and packs tasks onto the shared cluster with the
+//! inter-task scheduler — the full Fig 12 pipeline.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::cluster::gpu::GpuSpec;
+use crate::config::{TaskSpec, MODEL_FAMILY};
+use crate::data::synth::dataset_profile;
+use crate::sched::inter::{InterTaskScheduler, Policy};
+
+use super::executor::SimBackend;
+use super::profiler::Profiler;
+use super::task_runner::{make_jobs, run_task, RunConfig, TaskResult};
+
+/// Service-wide configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub total_gpus: usize,
+    pub policy: Policy,
+    pub run: RunConfig,
+    pub gpu: GpuSpec,
+    /// Co-located adapter slots per executor.
+    pub n_slots: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            total_gpus: 8,
+            policy: Policy::Optimal,
+            run: RunConfig::default(),
+            gpu: GpuSpec::h100_sxm5(),
+            n_slots: 4,
+        }
+    }
+}
+
+/// Per-task outcome.
+#[derive(Debug)]
+pub struct TaskOutcome {
+    pub name: String,
+    pub gpus: usize,
+    pub est_duration: f64,
+    pub actual_duration: f64,
+    pub best_val: f64,
+    pub samples_used: usize,
+    pub samples_budget: usize,
+    pub saved_by_reason: BTreeMap<&'static str, usize>,
+    pub group_results: Vec<TaskResult>,
+}
+
+/// Whole-service report.
+#[derive(Debug)]
+pub struct ServiceReport {
+    pub makespan: f64,
+    pub outcomes: Vec<TaskOutcome>,
+}
+
+impl ServiceReport {
+    pub fn total_saved_ratio(&self) -> f64 {
+        let used: usize = self.outcomes.iter().map(|o| o.samples_used).sum();
+        let budget: usize = self.outcomes.iter().map(|o| o.samples_budget).sum();
+        1.0 - used as f64 / budget.max(1) as f64
+    }
+}
+
+/// The service front end.
+pub struct Service {
+    pub cfg: ServiceConfig,
+}
+
+impl Service {
+    pub fn new(cfg: ServiceConfig) -> Service {
+        Service { cfg }
+    }
+
+    /// Execute one task end to end on the simulator: one executor per
+    /// homogeneous batch-size group (paper §A.1), groups sharing the
+    /// task's GPU allocation sequentially.  Returns the outcome with the
+    /// *actual* duration (early exits included).
+    pub fn run_task_simulated(&self, spec: &TaskSpec) -> Result<TaskOutcome> {
+        let model = MODEL_FAMILY
+            .get(&spec.model)
+            .with_context(|| format!("unknown model '{}'", spec.model))?;
+        let profile = *dataset_profile(&spec.dataset)
+            .with_context(|| format!("unknown dataset '{}'", spec.dataset))?;
+        let jobs = make_jobs(
+            &spec.search_space.expand(),
+            spec.epochs,
+            spec.train_samples,
+            spec.seed,
+        );
+        // homogeneous groups, descending batch size
+        let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, j) in jobs.iter().enumerate() {
+            groups.entry(j.hp.batch_size).or_default().push(i);
+        }
+        let mut group_results = Vec::new();
+        let mut actual = 0.0;
+        let mut best_val = f64::INFINITY;
+        let mut used = 0;
+        let mut budget = 0;
+        let mut saved: BTreeMap<&'static str, usize> = BTreeMap::new();
+        for (&bs, members) in groups.iter().rev() {
+            let gjobs: Vec<_> = members.iter().map(|&i| jobs[i].clone()).collect();
+            let mut backend = SimBackend::new(
+                model.clone(),
+                profile,
+                self.cfg.n_slots,
+                bs,
+                (spec.seq_len as f64 * profile.seq_scale) as usize,
+                self.cfg.gpu.clone(),
+                spec.num_gpus,
+            );
+            let res = run_task(&mut backend, gjobs, &self.cfg.run)?;
+            actual += res.wall_seconds;
+            best_val = best_val.min(res.best_val());
+            used += res.samples_used;
+            budget += res.samples_budget;
+            for (k, v) in &res.saved_by_reason {
+                *saved.entry(k).or_insert(0) += v;
+            }
+            group_results.push(res);
+        }
+        Ok(TaskOutcome {
+            name: spec.name.clone(),
+            gpus: spec.num_gpus,
+            est_duration: 0.0, // filled by run_service
+            actual_duration: actual,
+            best_val,
+            samples_used: used,
+            samples_budget: budget,
+            saved_by_reason: saved,
+            group_results,
+        })
+    }
+
+    /// Full multi-task service run (simulated cluster): profile → solve →
+    /// event-driven timeline with completion-triggered backfill.
+    pub fn run_service(&self, specs: &[TaskSpec]) -> Result<ServiceReport> {
+        let mut profiler = Profiler::new(self.cfg.gpu.clone());
+        let mut outcomes = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let model = MODEL_FAMILY
+                .get(&spec.model)
+                .with_context(|| format!("unknown model '{}'", spec.model))?;
+            let mut o = self.run_task_simulated(spec)?;
+            o.est_duration = profiler.estimate_duration(&model, spec, self.cfg.n_slots);
+            outcomes.push(o);
+        }
+        let mut sched = InterTaskScheduler::new(self.cfg.total_gpus, self.cfg.policy);
+        for (i, o) in outcomes.iter().enumerate() {
+            sched.submit(i, o.gpus, o.est_duration, o.actual_duration);
+        }
+        let makespan = sched.run_to_completion();
+        Ok(ServiceReport { makespan, outcomes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SearchSpace;
+
+    fn small_task(name: &str, model: &str, gpus: usize, samples: usize) -> TaskSpec {
+        TaskSpec {
+            name: name.into(),
+            model: model.into(),
+            dataset: "gsm-syn".into(),
+            search_space: SearchSpace {
+                lrs: vec![5e-5, 2e-4, 5e-4],
+                ranks: vec![16, 64],
+                batch_sizes: vec![2, 4],
+            },
+            epochs: 3,
+            num_gpus: gpus,
+            seq_len: 256,
+            train_samples: samples,
+            seed: 1,
+            ..TaskSpec::default()
+        }
+    }
+
+    #[test]
+    fn single_task_outcome_sane() {
+        let svc = Service::new(ServiceConfig::default());
+        let o = svc.run_task_simulated(&small_task("t", "llama-8b", 1, 128)).unwrap();
+        assert!(o.actual_duration > 0.0);
+        assert!(o.best_val.is_finite());
+        assert!(o.samples_used < o.samples_budget);
+    }
+
+    #[test]
+    fn early_exit_shortens_duration() {
+        let mut cfg = ServiceConfig::default();
+        let svc = Service::new(cfg.clone());
+        let with_ee = svc.run_task_simulated(&small_task("t", "llama-8b", 1, 128)).unwrap();
+        cfg.run.enable_early_exit = false;
+        cfg.run.enable_warmup_selection = false;
+        let svc2 = Service::new(cfg);
+        let no_ee = svc2.run_task_simulated(&small_task("t", "llama-8b", 1, 128)).unwrap();
+        assert!(
+            with_ee.actual_duration < 0.6 * no_ee.actual_duration,
+            "{} vs {}",
+            with_ee.actual_duration,
+            no_ee.actual_duration
+        );
+    }
+
+    #[test]
+    fn service_schedules_heterogeneous_tasks() {
+        // a miniature Fig-12-shaped workload
+        let specs = vec![
+            small_task("70b", "llama-70b", 4, 64),
+            small_task("32b", "qwen-32b", 2, 64),
+            small_task("8b-1", "llama-8b", 1, 64),
+            small_task("8b-2", "llama-8b", 1, 64),
+        ];
+        let svc = Service::new(ServiceConfig::default());
+        let report = svc.run_service(&specs).unwrap();
+        assert!(report.makespan > 0.0);
+        assert_eq!(report.outcomes.len(), 4);
+        // makespan ≥ longest single task, ≤ sum of all
+        let longest = report
+            .outcomes
+            .iter()
+            .map(|o| o.actual_duration)
+            .fold(0.0, f64::max);
+        let total: f64 = report.outcomes.iter().map(|o| o.actual_duration).sum();
+        assert!(report.makespan >= longest - 1e-9);
+        assert!(report.makespan <= total + 1e-9);
+        assert!(report.total_saved_ratio() > 0.3);
+    }
+
+    #[test]
+    fn optimal_policy_no_worse_than_fcfs() {
+        let specs = vec![
+            small_task("a", "llama-8b", 1, 96),
+            small_task("b", "llama-8b", 1, 64),
+            small_task("c", "qwen-32b", 2, 64),
+            small_task("d", "llama-70b", 4, 48),
+        ];
+        let mk = |policy| {
+            let svc = Service::new(ServiceConfig {
+                policy,
+                ..ServiceConfig::default()
+            });
+            svc.run_service(&specs).unwrap().makespan
+        };
+        let opt = mk(Policy::Optimal);
+        let fcfs = mk(Policy::Fcfs);
+        assert!(opt <= fcfs * 1.05, "opt {opt} vs fcfs {fcfs}");
+    }
+}

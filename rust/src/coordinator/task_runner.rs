@@ -1,0 +1,470 @@
+//! The intra-task engine: warmup with candidate rotation, warmup-boundary
+//! top-k selection, continue-training with online pattern detection, and
+//! slot backfill — §5 + §7.1 of the paper, orchestrated over an executor
+//! backend.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::HyperParams;
+
+use super::early_exit::{DetectorConfig, PatternDetector, Verdict};
+use super::executor::{Backend, Snapshot};
+use super::job::{ExitReason, Job, JobState};
+use super::warmup::{select_top_k, WarmupConfig};
+
+/// Intra-task run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub detector: DetectorConfig,
+    pub warmup: WarmupConfig,
+    /// Steps between validation evaluations.
+    pub eval_every: usize,
+    /// Master switches for the ablations (Fig 12 / 14).
+    pub enable_early_exit: bool,
+    pub enable_warmup_selection: bool,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            detector: DetectorConfig::default(),
+            warmup: WarmupConfig::default(),
+            eval_every: 10,
+            enable_early_exit: true,
+            enable_warmup_selection: true,
+            seed: 0,
+        }
+    }
+}
+
+/// Outcome of one task (all jobs of one search space).
+#[derive(Debug)]
+pub struct TaskResult {
+    pub jobs: Vec<Job>,
+    /// Job with the lowest best-val loss.
+    pub best_job: usize,
+    /// Simulated/measured wall-clock of the whole task.
+    pub wall_seconds: f64,
+    /// Σ samples consumed across jobs.
+    pub samples_used: usize,
+    /// Σ samples the naive full grid would consume.
+    pub samples_budget: usize,
+    /// samples saved per exit reason (Fig 15 decomposition).
+    pub saved_by_reason: BTreeMap<&'static str, usize>,
+}
+
+impl TaskResult {
+    pub fn best_val(&self) -> f64 {
+        self.jobs[self.best_job].best_val
+    }
+
+    pub fn savings_ratio(&self) -> f64 {
+        1.0 - self.samples_used as f64 / self.samples_budget.max(1) as f64
+    }
+}
+
+/// Per-slot bookkeeping while a job occupies an executor slot.
+struct SlotCtx {
+    job_idx: usize,
+    detector: PatternDetector,
+    local_step: usize,
+    stop_at: usize,
+}
+
+/// Run one task's full job queue over one executor backend.  All jobs
+/// must share the executor's per-adapter batch size (homogeneous batch
+/// grouping, §A.1); callers with mixed batch sizes run one group per
+/// backend (see `service.rs`).
+pub fn run_task(
+    backend: &mut dyn Backend,
+    mut jobs: Vec<Job>,
+    cfg: &RunConfig,
+) -> Result<TaskResult> {
+    let n_slots = backend.n_slots();
+    let mut wall = 0.0f64;
+    let samples_budget: usize = jobs.iter().map(|j| j.samples_budget()).sum();
+
+    // ---- Phase A: warmup with rotation --------------------------------
+    // Every candidate runs warmup_ratio of its budget; diverging ones are
+    // killed online; finished/killed slots rotate the next candidate in.
+    let mut snapshots: BTreeMap<usize, Snapshot> = BTreeMap::new();
+    let mut boundary_val: Vec<f64> = vec![f64::INFINITY; jobs.len()];
+    {
+        let mut queue: Vec<usize> = (0..jobs.len()).collect();
+        queue.reverse(); // pop() serves in submission order
+        let mut slots: Vec<Option<SlotCtx>> = (0..n_slots).map(|_| None).collect();
+        loop {
+            // fill free slots
+            for (si, slot) in slots.iter_mut().enumerate() {
+                if slot.is_none() {
+                    if let Some(ji) = queue.pop() {
+                        let job = &mut jobs[ji];
+                        job.state = JobState::Warmup;
+                        let stop = cfg.warmup.warmup_steps(job.total_steps);
+                        backend.onload(si, &job.hp, job.total_steps, job.seed)?;
+                        *slot = Some(SlotCtx {
+                            job_idx: ji,
+                            detector: PatternDetector::new(cfg.detector.clone()),
+                            local_step: 0,
+                            stop_at: stop,
+                        });
+                    }
+                }
+            }
+            if slots.iter().all(|s| s.is_none()) {
+                break;
+            }
+            // advance
+            let losses = backend.step()?;
+            wall += backend.last_step_seconds();
+            let mut to_eval = false;
+            for (si, slot) in slots.iter_mut().enumerate() {
+                if let Some(ctx) = slot {
+                    if let Some(l) = losses[si] {
+                        jobs[ctx.job_idx].record_train(l);
+                        ctx.detector.observe_train(l);
+                        ctx.local_step += 1;
+                        if ctx.local_step % cfg.eval_every == 0 || ctx.local_step >= ctx.stop_at
+                        {
+                            to_eval = true;
+                        }
+                    }
+                }
+            }
+            if !to_eval {
+                continue;
+            }
+            let vals = backend.eval()?;
+            for (si, slot) in slots.iter_mut().enumerate() {
+                let Some(ctx) = slot else { continue };
+                let Some(v) = vals[si] else { continue };
+                let job = &mut jobs[ctx.job_idx];
+                job.record_val(ctx.local_step, v);
+                let verdict = ctx.detector.observe_val(v);
+                // during warmup only divergence kills (paper §5.2)
+                if cfg.enable_early_exit
+                    && verdict == Verdict::Exit(ExitReason::Diverging)
+                {
+                    job.state = JobState::Exited(ExitReason::Diverging);
+                    backend.deactivate(si);
+                    *slot = None;
+                    continue;
+                }
+                if ctx.local_step >= ctx.stop_at {
+                    // warmup boundary for this candidate: record its
+                    // ranking signal + checkpoint for continue-training
+                    boundary_val[ctx.job_idx] = v;
+                    snapshots.insert(ctx.job_idx, backend.snapshot(si)?);
+                    backend.deactivate(si);
+                    *slot = None;
+                }
+            }
+        }
+    }
+
+    // ---- warmup boundary: underperformance filtering ------------------
+    let survivors: Vec<usize> = jobs
+        .iter()
+        .enumerate()
+        .filter(|(_, j)| !j.is_exited())
+        .map(|(i, _)| i)
+        .collect();
+    let retained: Vec<usize> = if cfg.enable_warmup_selection && !survivors.is_empty() {
+        let vals: Vec<f64> = survivors.iter().map(|&i| boundary_val[i]).collect();
+        let k = cfg.warmup.retained(survivors.len());
+        let (keep, evict) = select_top_k(&vals, k);
+        for &e in &evict {
+            jobs[survivors[e]].state = JobState::Exited(ExitReason::Underperforming);
+        }
+        keep.iter().map(|&i| survivors[i]).collect()
+    } else {
+        survivors
+    };
+
+    // ---- Phase B: continue-training with backfill ----------------------
+    {
+        let mut queue: Vec<usize> = retained.clone();
+        queue.reverse();
+        let mut slots: Vec<Option<SlotCtx>> = (0..n_slots).map(|_| None).collect();
+        loop {
+            for (si, slot) in slots.iter_mut().enumerate() {
+                if slot.is_none() {
+                    if let Some(ji) = queue.pop() {
+                        let job = &mut jobs[ji];
+                        job.state = JobState::Training;
+                        let warm = cfg.warmup.warmup_steps(job.total_steps);
+                        // resume from the warmup checkpoint, optimizer
+                        // state carried over (paper §5.2)
+                        if let Some(snap) = snapshots.get(&ji) {
+                            backend.restore(si, snap)?;
+                        } else {
+                            backend.onload(si, &job.hp, job.total_steps, job.seed)?;
+                        }
+                        *slot = Some(SlotCtx {
+                            job_idx: ji,
+                            detector: PatternDetector::new(cfg.detector.clone()),
+                            local_step: warm.min(job.total_steps),
+                            stop_at: job.total_steps,
+                        });
+                    }
+                }
+            }
+            if slots.iter().all(|s| s.is_none()) {
+                break;
+            }
+            let losses = backend.step()?;
+            wall += backend.last_step_seconds();
+            let mut to_eval = false;
+            for (si, slot) in slots.iter_mut().enumerate() {
+                if let Some(ctx) = slot {
+                    if let Some(l) = losses[si] {
+                        jobs[ctx.job_idx].record_train(l);
+                        ctx.detector.observe_train(l);
+                        ctx.local_step += 1;
+                        if ctx.local_step % cfg.eval_every == 0 || ctx.local_step >= ctx.stop_at
+                        {
+                            to_eval = true;
+                        }
+                    }
+                }
+            }
+            if !to_eval {
+                continue;
+            }
+            let vals = backend.eval()?;
+            for (si, slot) in slots.iter_mut().enumerate() {
+                let Some(ctx) = slot else { continue };
+                let Some(v) = vals[si] else { continue };
+                let job = &mut jobs[ctx.job_idx];
+                job.record_val(ctx.local_step, v);
+                let verdict = ctx.detector.observe_val(v);
+                let exit = match verdict {
+                    Verdict::Exit(r) if cfg.enable_early_exit => Some(r),
+                    _ if ctx.local_step >= ctx.stop_at => Some(ExitReason::Completed),
+                    _ => None,
+                };
+                if let Some(reason) = exit {
+                    // overfitting exit checkpoints the best model — our
+                    // best_val already tracks checkpoint-at-best
+                    job.state = JobState::Exited(reason);
+                    backend.deactivate(si);
+                    *slot = None; // backfilled on the next loop turn
+                }
+            }
+        }
+    }
+
+    // any job never run to a verdict (e.g. early-exit disabled paths)
+    for j in jobs.iter_mut() {
+        if !j.is_exited() {
+            j.state = JobState::Exited(ExitReason::Completed);
+        }
+    }
+
+    // ---- accounting -----------------------------------------------------
+    let samples_used: usize = jobs.iter().map(|j| j.samples_used()).sum();
+    let mut saved: BTreeMap<&'static str, usize> = BTreeMap::new();
+    for j in &jobs {
+        let left = j.samples_budget().saturating_sub(j.samples_used());
+        if left > 0 {
+            if let Some(r) = j.exit_reason() {
+                *saved.entry(r.as_str()).or_insert(0) += left;
+            }
+        }
+    }
+    let best_job = jobs
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.best_val.partial_cmp(&b.1.best_val).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    Ok(TaskResult {
+        jobs,
+        best_job,
+        wall_seconds: wall,
+        samples_used,
+        samples_budget,
+        saved_by_reason: saved,
+    })
+}
+
+/// Expand a search space into jobs with per-batch-size step budgets:
+/// total_steps = epochs · train_samples / batch_size.
+pub fn make_jobs(
+    space: &[HyperParams],
+    epochs: usize,
+    train_samples: usize,
+    seed: u64,
+) -> Vec<Job> {
+    space
+        .iter()
+        .enumerate()
+        .map(|(i, hp)| {
+            let steps = (epochs * train_samples / hp.batch_size).max(1);
+            Job::new(i, hp.clone(), steps, seed.wrapping_add(i as u64 * 7919))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::gpu::GpuSpec;
+    use crate::config::{SearchSpace, MODEL_FAMILY};
+    use crate::coordinator::executor::SimBackend;
+    use crate::data::synth::dataset_profile;
+
+    fn sim_backend(n_slots: usize, batch: usize) -> SimBackend {
+        SimBackend::new(
+            MODEL_FAMILY.get("llama-8b").unwrap(),
+            *dataset_profile("gsm-syn").unwrap(),
+            n_slots,
+            batch,
+            256,
+            GpuSpec::h100_sxm5(),
+            1,
+        )
+    }
+
+    fn uniform_jobs(n: usize, lr: f64, batch: usize, steps: usize) -> Vec<Job> {
+        (0..n)
+            .map(|i| {
+                Job::new(
+                    i,
+                    HyperParams {
+                        lr,
+                        rank: 16,
+                        batch_size: batch,
+                    },
+                    steps,
+                    i as u64,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_jobs_reach_a_verdict() {
+        let mut be = sim_backend(4, 2);
+        let jobs = uniform_jobs(10, 2e-4, 2, 200);
+        let res = run_task(&mut be, jobs, &RunConfig::default()).unwrap();
+        assert!(res.jobs.iter().all(|j| j.is_exited()));
+        assert!(res.best_val().is_finite());
+        assert!(res.wall_seconds > 0.0);
+    }
+
+    #[test]
+    fn early_exit_saves_samples() {
+        let space = SearchSpace::paper_single_gpu().expand();
+        // group to one batch size (homogeneous executor)
+        let space: Vec<_> = space.into_iter().filter(|h| h.batch_size == 2).collect();
+        let jobs = make_jobs(&space, 3, 256, 0);
+        let mut be = sim_backend(4, 2);
+        let res = run_task(&mut be, jobs, &RunConfig::default()).unwrap();
+        // paper Fig 15: 72–83% of samples saved
+        let ratio = res.savings_ratio();
+        assert!(ratio > 0.5, "only {ratio:.2} saved");
+        assert!(ratio < 0.95, "implausible savings {ratio:.2}");
+        // underperformance should dominate savings in SFT (paper ~66%)
+        let under = *res.saved_by_reason.get("underperforming").unwrap_or(&0);
+        let total: usize = res.saved_by_reason.values().sum();
+        assert!(
+            under as f64 > 0.3 * total as f64,
+            "underperf share {}/{total}",
+            under
+        );
+    }
+
+    #[test]
+    fn no_early_exit_uses_full_budget() {
+        let jobs = uniform_jobs(6, 2e-4, 2, 100);
+        let mut be = sim_backend(3, 2);
+        let cfg = RunConfig {
+            enable_early_exit: false,
+            enable_warmup_selection: false,
+            ..RunConfig::default()
+        };
+        let res = run_task(&mut be, jobs, &cfg).unwrap();
+        assert_eq!(res.samples_used, res.samples_budget);
+        assert_eq!(res.savings_ratio(), 0.0);
+    }
+
+    #[test]
+    fn early_exit_preserves_best_quality() {
+        // Fig 14: best val loss with EE ≈ without EE (ratio ≈ 1.0)
+        let space = SearchSpace::paper_single_gpu().expand();
+        let space: Vec<_> = space.into_iter().filter(|h| h.batch_size == 4).collect();
+        let mk = || make_jobs(&space, 3, 128, 3);
+        let full = run_task(
+            &mut sim_backend(4, 4),
+            mk(),
+            &RunConfig {
+                enable_early_exit: false,
+                enable_warmup_selection: false,
+                ..RunConfig::default()
+            },
+        )
+        .unwrap();
+        let ee = run_task(&mut sim_backend(4, 4), mk(), &RunConfig::default()).unwrap();
+        let ratio = ee.best_val() / full.best_val();
+        assert!(
+            ratio < 1.15,
+            "early exit degraded best val by {ratio:.3} ({} vs {})",
+            ee.best_val(),
+            full.best_val()
+        );
+        // and it must actually be cheaper
+        assert!(ee.samples_used < full.samples_used / 2);
+    }
+
+    #[test]
+    fn makespan_shrinks_with_early_exit() {
+        let space = SearchSpace::paper_single_gpu().expand();
+        let space: Vec<_> = space.into_iter().filter(|h| h.batch_size == 2).collect();
+        let mk = || make_jobs(&space, 3, 128, 1);
+        let full = run_task(
+            &mut sim_backend(4, 2),
+            mk(),
+            &RunConfig {
+                enable_early_exit: false,
+                enable_warmup_selection: false,
+                ..RunConfig::default()
+            },
+        )
+        .unwrap();
+        let ee = run_task(&mut sim_backend(4, 2), mk(), &RunConfig::default()).unwrap();
+        assert!(
+            ee.wall_seconds < full.wall_seconds * 0.6,
+            "EE {} vs full {}",
+            ee.wall_seconds,
+            full.wall_seconds
+        );
+    }
+
+    #[test]
+    fn rotation_handles_more_jobs_than_slots() {
+        let jobs = uniform_jobs(9, 2e-4, 1, 60);
+        let mut be = sim_backend(2, 1);
+        let res = run_task(&mut be, jobs, &RunConfig::default()).unwrap();
+        // every job got at least its warmup steps
+        for j in &res.jobs {
+            assert!(j.steps_run >= 1, "job {} never ran", j.id);
+        }
+    }
+
+    #[test]
+    fn make_jobs_budgets_scale_with_batch() {
+        let space = vec![
+            HyperParams { lr: 1e-4, rank: 8, batch_size: 1 },
+            HyperParams { lr: 1e-4, rank: 8, batch_size: 4 },
+        ];
+        let jobs = make_jobs(&space, 3, 120, 0);
+        assert_eq!(jobs[0].total_steps, 360);
+        assert_eq!(jobs[1].total_steps, 90);
+        // equal sample budgets regardless of batch size
+        assert_eq!(jobs[0].samples_budget(), jobs[1].samples_budget());
+    }
+}

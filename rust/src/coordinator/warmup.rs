@@ -1,0 +1,96 @@
+//! Warmup-based exiting (paper §5.2): run every candidate briefly, rank by
+//! validation loss at the warmup boundary, keep the top quartile.
+
+/// Warmup policy.  Defaults are the paper's (5% warmup, 25% retention —
+/// Appendix A.2 shows these are where rank correlation stabilizes).
+#[derive(Debug, Clone)]
+pub struct WarmupConfig {
+    /// Fraction of total steps run before the selection boundary.
+    pub warmup_ratio: f64,
+    /// Fraction of candidates retained into continue-training.
+    pub select_ratio: f64,
+}
+
+impl Default for WarmupConfig {
+    fn default() -> Self {
+        WarmupConfig {
+            warmup_ratio: 0.05,
+            select_ratio: 0.25,
+        }
+    }
+}
+
+impl WarmupConfig {
+    pub fn warmup_steps(&self, total_steps: usize) -> usize {
+        ((total_steps as f64 * self.warmup_ratio).ceil() as usize).max(1)
+    }
+
+    /// k = ⌈select_ratio · n⌉ (Algorithm 1, pattern 3).
+    pub fn retained(&self, n_candidates: usize) -> usize {
+        ((n_candidates as f64 * self.select_ratio).ceil() as usize)
+            .clamp(1, n_candidates.max(1))
+    }
+}
+
+/// Rank candidates by warmup-boundary val loss (lower = better) and split
+/// into (retained indices, evicted indices).  NaN/∞ losses (diverged
+/// before the boundary) always rank last.
+pub fn select_top_k(val_losses: &[f64], k: usize) -> (Vec<usize>, Vec<usize>) {
+    let mut idx: Vec<usize> = (0..val_losses.len()).collect();
+    idx.sort_by(|&a, &b| {
+        let (x, y) = (val_losses[a], val_losses[b]);
+        match (x.is_finite(), y.is_finite()) {
+            (true, true) => x.partial_cmp(&y).unwrap(),
+            (true, false) => std::cmp::Ordering::Less,
+            (false, true) => std::cmp::Ordering::Greater,
+            (false, false) => std::cmp::Ordering::Equal,
+        }
+    });
+    let k = k.min(idx.len());
+    let retained = idx[..k].to_vec();
+    let evicted = idx[k..].to_vec();
+    (retained, evicted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults() {
+        let c = WarmupConfig::default();
+        assert_eq!(c.warmup_steps(1000), 50);
+        assert_eq!(c.retained(60), 15); // 25% of the paper's 60 configs
+        assert_eq!(c.retained(3), 1);
+    }
+
+    #[test]
+    fn warmup_steps_at_least_one() {
+        let c = WarmupConfig::default();
+        assert_eq!(c.warmup_steps(5), 1);
+    }
+
+    #[test]
+    fn selection_keeps_lowest() {
+        let vals = [3.0, 1.0, 2.0, 5.0, 0.5];
+        let (keep, evict) = select_top_k(&vals, 2);
+        assert_eq!(keep, vec![4, 1]);
+        assert_eq!(evict.len(), 3);
+        assert!(evict.contains(&3));
+    }
+
+    #[test]
+    fn nan_and_inf_rank_last() {
+        let vals = [f64::NAN, 1.0, f64::INFINITY, 2.0];
+        let (keep, _) = select_top_k(&vals, 2);
+        assert_eq!(keep, vec![1, 3]);
+    }
+
+    #[test]
+    fn k_larger_than_n_is_clamped() {
+        let vals = [1.0, 2.0];
+        let (keep, evict) = select_top_k(&vals, 10);
+        assert_eq!(keep.len(), 2);
+        assert!(evict.is_empty());
+    }
+}

@@ -1,0 +1,332 @@
+//! Tokenized datasets with train/val/test splits and the [N, B, T] batch
+//! builder the executor feeds to the AOT train step.
+
+use crate::util::rng::Pcg32;
+
+use super::synth::{self, Example, PrefExample};
+use super::tokenizer;
+
+/// One tokenized SFT example.
+#[derive(Debug, Clone)]
+pub struct Encoded {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    /// Raw strings retained for decode-time accuracy evaluation.
+    pub prompt: String,
+    pub answer: String,
+}
+
+/// A split dataset of fixed-length sequences.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub name: String,
+    pub seq_len: usize,
+    pub train: Vec<Encoded>,
+    pub val: Vec<Encoded>,
+    pub test: Vec<Encoded>,
+}
+
+impl Corpus {
+    /// Build a seeded corpus.  Splits follow the paper's GSM8K recipe:
+    /// 90% train / 10% val of the "training set", plus a held-out test set.
+    pub fn build(
+        dataset: &str,
+        n_train_pool: usize,
+        n_test: usize,
+        seq_len: usize,
+        seed: u64,
+    ) -> anyhow::Result<Corpus> {
+        let gen = sft_generator(dataset)?;
+        let mut rng = Pcg32::seeded(seed ^ dataset_hash(dataset));
+        let mut pool: Vec<Encoded> = (0..n_train_pool)
+            .map(|_| encode_one(&gen(&mut rng), seq_len))
+            .collect();
+        let n_val = (n_train_pool / 10).max(1);
+        let val = pool.split_off(n_train_pool - n_val);
+        let test = (0..n_test)
+            .map(|_| encode_one(&gen(&mut rng), seq_len))
+            .collect();
+        Ok(Corpus {
+            name: dataset.to_string(),
+            seq_len,
+            train: pool,
+            val,
+            test,
+        })
+    }
+
+    /// Batch of shape [n_adapters, batch, seq]: adapter `i` draws its own
+    /// reproducible sample stream (fork per adapter), so co-located jobs
+    /// see independent data — matching per-job dataloaders in the paper.
+    pub fn train_batch(
+        &self,
+        n_adapters: usize,
+        batch: usize,
+        step: u64,
+        seed: u64,
+    ) -> Batch {
+        let mut tokens = Vec::with_capacity(n_adapters * batch * self.seq_len);
+        let mut targets = Vec::with_capacity(n_adapters * batch * self.seq_len);
+        for a in 0..n_adapters {
+            let mut rng =
+                Pcg32::new(seed ^ (a as u64) << 32 ^ step, 0x5eed ^ a as u64);
+            for _ in 0..batch {
+                let ex = &self.train[rng.below(self.train.len() as u64) as usize];
+                tokens.extend_from_slice(&ex.tokens);
+                targets.extend_from_slice(&ex.targets);
+            }
+        }
+        Batch {
+            n: n_adapters,
+            b: batch,
+            t: self.seq_len,
+            tokens,
+            targets,
+        }
+    }
+
+    /// Deterministic validation batch (same for every adapter and step, so
+    /// val losses are comparable across jobs — required by warmup ranking).
+    pub fn val_batch(&self, n_adapters: usize, batch: usize) -> Batch {
+        let mut tokens = Vec::new();
+        let mut targets = Vec::new();
+        for _ in 0..n_adapters {
+            for i in 0..batch {
+                let ex = &self.val[i % self.val.len()];
+                tokens.extend_from_slice(&ex.tokens);
+                targets.extend_from_slice(&ex.targets);
+            }
+        }
+        Batch {
+            n: n_adapters,
+            b: batch,
+            t: self.seq_len,
+            tokens,
+            targets,
+        }
+    }
+}
+
+/// Flat [N, B, T] token + target buffers, row-major.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub n: usize,
+    pub b: usize,
+    pub t: usize,
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+}
+
+impl Batch {
+    pub fn dims(&self) -> [usize; 3] {
+        [self.n, self.b, self.t]
+    }
+}
+
+/// Preference corpus for DPO.
+#[derive(Debug, Clone)]
+pub struct PrefCorpus {
+    pub seq_len: usize,
+    pub train: Vec<PrefEncoded>,
+    pub val: Vec<PrefEncoded>,
+}
+
+#[derive(Debug, Clone)]
+pub struct PrefEncoded {
+    pub tok_c: Vec<i32>,
+    pub tgt_c: Vec<i32>,
+    pub tok_r: Vec<i32>,
+    pub tgt_r: Vec<i32>,
+}
+
+impl PrefCorpus {
+    pub fn build(n_train: usize, seq_len: usize, seed: u64) -> PrefCorpus {
+        let mut rng = Pcg32::seeded(seed ^ 0x9ef);
+        let mut pool: Vec<PrefEncoded> = (0..n_train + n_train / 10)
+            .map(|_| encode_pref(&synth::pref_syn(&mut rng), seq_len))
+            .collect();
+        let val = pool.split_off(n_train);
+        PrefCorpus {
+            seq_len,
+            train: pool,
+            val,
+        }
+    }
+
+    pub fn train_batch(&self, n_adapters: usize, batch: usize, step: u64, seed: u64) -> PrefBatch {
+        let mut out = PrefBatch::empty(n_adapters, batch, self.seq_len);
+        for a in 0..n_adapters {
+            let mut rng = Pcg32::new(seed ^ ((a as u64) << 32) ^ step, 0xd9 ^ a as u64);
+            for _ in 0..batch {
+                let ex = &self.train[rng.below(self.train.len() as u64) as usize];
+                out.push(ex);
+            }
+        }
+        out
+    }
+
+    pub fn val_batch(&self, n_adapters: usize, batch: usize) -> PrefBatch {
+        let mut out = PrefBatch::empty(n_adapters, batch, self.seq_len);
+        for _ in 0..n_adapters {
+            for i in 0..batch {
+                out.push(&self.val[i % self.val.len()]);
+            }
+        }
+        out
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PrefBatch {
+    pub n: usize,
+    pub b: usize,
+    pub t: usize,
+    pub tok_c: Vec<i32>,
+    pub tgt_c: Vec<i32>,
+    pub tok_r: Vec<i32>,
+    pub tgt_r: Vec<i32>,
+}
+
+impl PrefBatch {
+    fn empty(n: usize, b: usize, t: usize) -> PrefBatch {
+        let cap = n * b * t;
+        PrefBatch {
+            n,
+            b,
+            t,
+            tok_c: Vec::with_capacity(cap),
+            tgt_c: Vec::with_capacity(cap),
+            tok_r: Vec::with_capacity(cap),
+            tgt_r: Vec::with_capacity(cap),
+        }
+    }
+
+    fn push(&mut self, ex: &PrefEncoded) {
+        self.tok_c.extend_from_slice(&ex.tok_c);
+        self.tgt_c.extend_from_slice(&ex.tgt_c);
+        self.tok_r.extend_from_slice(&ex.tok_r);
+        self.tgt_r.extend_from_slice(&ex.tgt_r);
+    }
+}
+
+fn encode_one(ex: &Example, seq_len: usize) -> Encoded {
+    let (tokens, targets) = tokenizer::encode_example(&ex.prompt, &ex.answer, seq_len);
+    Encoded {
+        tokens,
+        targets,
+        prompt: ex.prompt.clone(),
+        answer: ex.answer.clone(),
+    }
+}
+
+fn encode_pref(p: &PrefExample, seq_len: usize) -> PrefEncoded {
+    let (tok_c, tgt_c) = tokenizer::encode_example(&p.prompt, &p.chosen, seq_len);
+    let (tok_r, tgt_r) = tokenizer::encode_example(&p.prompt, &p.rejected, seq_len);
+    PrefEncoded {
+        tok_c,
+        tgt_c,
+        tok_r,
+        tgt_r,
+    }
+}
+
+type SftGen = Box<dyn Fn(&mut Pcg32) -> Example>;
+
+fn sft_generator(dataset: &str) -> anyhow::Result<SftGen> {
+    match dataset {
+        "gsm-syn" => Ok(Box::new(synth::gsm_syn)),
+        "instr-syn" => Ok(Box::new(synth::instr_syn)),
+        "reason-syn" => Ok(Box::new(synth::reason_syn)),
+        other => anyhow::bail!("unknown SFT dataset '{other}'"),
+    }
+}
+
+/// Stable per-dataset seed tweak (FNV-1a) so two datasets built with the
+/// same user seed still produce disjoint sample streams.
+fn dataset_hash(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_sizes() {
+        let c = Corpus::build("gsm-syn", 100, 20, 32, 0).unwrap();
+        assert_eq!(c.train.len(), 90);
+        assert_eq!(c.val.len(), 10);
+        assert_eq!(c.test.len(), 20);
+    }
+
+    #[test]
+    fn deterministic_across_builds() {
+        let a = Corpus::build("instr-syn", 50, 5, 32, 7).unwrap();
+        let b = Corpus::build("instr-syn", 50, 5, 32, 7).unwrap();
+        assert_eq!(a.train[0].tokens, b.train[0].tokens);
+        assert_eq!(a.test[4].prompt, b.test[4].prompt);
+    }
+
+    #[test]
+    fn different_datasets_differ() {
+        let a = Corpus::build("gsm-syn", 20, 2, 32, 7).unwrap();
+        let b = Corpus::build("instr-syn", 20, 2, 32, 7).unwrap();
+        assert_ne!(a.train[0].prompt, b.train[0].prompt);
+    }
+
+    #[test]
+    fn batch_shape_and_padding() {
+        let c = Corpus::build("gsm-syn", 64, 8, 40, 1).unwrap();
+        let b = c.train_batch(3, 4, 0, 99);
+        assert_eq!(b.dims(), [3, 4, 40]);
+        assert_eq!(b.tokens.len(), 3 * 4 * 40);
+        assert_eq!(b.targets.len(), 3 * 4 * 40);
+        // all tokens in vocab range
+        assert!(b.tokens.iter().all(|&t| (0..tokenizer::VOCAB_SIZE as i32).contains(&t)));
+    }
+
+    #[test]
+    fn adapters_see_different_data() {
+        let c = Corpus::build("gsm-syn", 64, 8, 40, 1).unwrap();
+        let b = c.train_batch(2, 4, 0, 99);
+        let per = 4 * 40;
+        assert_ne!(&b.tokens[..per], &b.tokens[per..2 * per]);
+    }
+
+    #[test]
+    fn val_batch_same_for_all_adapters() {
+        let c = Corpus::build("gsm-syn", 64, 8, 40, 1).unwrap();
+        let b = c.val_batch(2, 4);
+        let per = 4 * 40;
+        assert_eq!(&b.tokens[..per], &b.tokens[per..2 * per]);
+    }
+
+    #[test]
+    fn train_batches_vary_with_step() {
+        let c = Corpus::build("gsm-syn", 64, 8, 40, 1).unwrap();
+        let b0 = c.train_batch(1, 4, 0, 5);
+        let b1 = c.train_batch(1, 4, 1, 5);
+        assert_ne!(b0.tokens, b1.tokens);
+    }
+
+    #[test]
+    fn pref_corpus_batches() {
+        let p = PrefCorpus::build(40, 32, 3);
+        assert_eq!(p.train.len(), 40);
+        assert_eq!(p.val.len(), 4);
+        let b = p.train_batch(2, 3, 0, 1);
+        assert_eq!(b.tok_c.len(), 2 * 3 * 32);
+        assert_eq!(b.tok_r.len(), 2 * 3 * 32);
+        assert_ne!(b.tgt_c, b.tgt_r);
+    }
+
+    #[test]
+    fn unknown_dataset_errors() {
+        assert!(Corpus::build("bogus", 10, 2, 16, 0).is_err());
+    }
+}

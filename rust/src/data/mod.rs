@@ -1,0 +1,10 @@
+//! Synthetic workloads: the byte-level tokenizer, the four seeded
+//! datasets replacing GSM8K / Tulu-3 / OpenThoughts3 / UltraFeedback, and
+//! the [N, B, T] batch builders the executors feed to the AOT train step.
+
+pub mod corpus;
+pub mod synth;
+pub mod tokenizer;
+
+pub use corpus::{Batch, Corpus, Encoded, PrefBatch, PrefCorpus};
+pub use synth::{dataset_profile, DatasetProfile, Example, PrefExample, DATASETS};

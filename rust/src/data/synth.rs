@@ -1,0 +1,293 @@
+//! Synthetic datasets replacing GSM8K / Tulu-3 / OpenThoughts3 /
+//! UltraFeedback (DESIGN.md §3).  All are seeded grammars, so every split
+//! is reproducible and `gsm-syn` has *parseable exact answers*, which
+//! gives the quality experiments (Fig 10/14) a real accuracy metric.
+
+use crate::util::rng::Pcg32;
+
+/// One supervised example.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Example {
+    pub prompt: String,
+    pub answer: String,
+}
+
+/// One preference example (DPO).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefExample {
+    pub prompt: String,
+    pub chosen: String,
+    pub rejected: String,
+}
+
+const NAMES: &[&str] = &[
+    "Tom", "Mia", "Sam", "Ava", "Leo", "Zoe", "Max", "Ivy", "Ben", "Amy",
+];
+const ITEMS: &[&str] = &[
+    "apples", "pens", "books", "coins", "cards", "cups", "keys", "hats",
+];
+const COLORS: &[&str] = &["red", "blue", "green", "gold", "pink", "gray"];
+const ANIMALS: &[&str] = &["cat", "dog", "fox", "owl", "bee", "ant"];
+
+/// gsm-syn: 1–3-step arithmetic word problems with integer answers.
+/// The GSM8K stand-in: answers parse exactly, so "strict answer parsing"
+/// accuracy (paper §8.1) is computable.
+pub fn gsm_syn(rng: &mut Pcg32) -> Example {
+    let name = *rng.choice(NAMES);
+    let item = *rng.choice(ITEMS);
+    let steps = rng.range_usize(1, 3);
+    let mut total = rng.range_i64(2, 9);
+    let mut prompt = format!("{name} has {total} {item}.");
+    for _ in 0..steps {
+        // losing is only available while there is something to lose
+        let op = if total >= 2 { rng.range_usize(0, 2) } else { 0 };
+        match op {
+            0 => {
+                let k = rng.range_i64(1, 9);
+                prompt.push_str(&format!(" {name} gets {k} more."));
+                total += k;
+            }
+            1 => {
+                let k = rng.range_i64(1, total - 1);
+                prompt.push_str(&format!(" {name} loses {k}."));
+                total -= k;
+            }
+            _ => {
+                let k = rng.range_i64(2, 3);
+                prompt.push_str(&format!(" The {item} double {k_text}.", k_text = if k == 2 { "once" } else { "twice" }));
+                for _ in 0..(k - 1) {
+                    total *= 2;
+                }
+            }
+        }
+    }
+    prompt.push_str(&format!(" How many {item} now?"));
+    Example {
+        prompt,
+        answer: total.to_string(),
+    }
+}
+
+/// instr-syn: short instruction-following pairs (the Tulu-3 stand-in;
+/// evaluated by completion loss only, like the paper).
+pub fn instr_syn(rng: &mut Pcg32) -> Example {
+    match rng.range_usize(0, 3) {
+        0 => {
+            let n = rng.range_usize(2, 4);
+            let mut items: Vec<&str> = COLORS.to_vec();
+            rng.shuffle(&mut items);
+            Example {
+                prompt: format!("List {n} colors."),
+                answer: items[..n].join(", "),
+            }
+        }
+        1 => {
+            let a = *rng.choice(ANIMALS);
+            Example {
+                prompt: format!("Repeat the word {a} twice."),
+                answer: format!("{a} {a}"),
+            }
+        }
+        2 => {
+            let w = *rng.choice(ITEMS);
+            Example {
+                prompt: format!("Spell {w} backwards."),
+                answer: w.chars().rev().collect(),
+            }
+        }
+        _ => {
+            let x = rng.range_i64(1, 20);
+            Example {
+                prompt: format!("Count from {x} to {}.", x + 3),
+                answer: (x..=x + 3)
+                    .map(|v| v.to_string())
+                    .collect::<Vec<_>>()
+                    .join(" "),
+            }
+        }
+    }
+}
+
+/// reason-syn: longer multi-step chains (the OpenThoughts3 stand-in;
+/// roughly 2× the sequence length of the other sets, like OT3's 2048 vs
+/// 1024 in the paper).
+pub fn reason_syn(rng: &mut Pcg32) -> Example {
+    let mut v = rng.range_i64(1, 9);
+    let steps = rng.range_usize(3, 6);
+    let mut chain = format!("Start with {v}.");
+    let mut work = String::new();
+    for _ in 0..steps {
+        let op = rng.range_usize(0, 2);
+        let k = rng.range_i64(1, 5);
+        match op {
+            0 => {
+                chain.push_str(&format!(" Add {k}."));
+                v += k;
+            }
+            1 => {
+                chain.push_str(&format!(" Subtract {k}."));
+                v -= k;
+            }
+            _ => {
+                chain.push_str(&format!(" Multiply by {k}."));
+                v *= k;
+            }
+        }
+        work.push_str(&format!("{v} "));
+    }
+    chain.push_str(" Show each intermediate value.");
+    Example {
+        prompt: chain,
+        answer: work.trim().to_string(),
+    }
+}
+
+/// pref-syn: preference pairs (the UltraFeedback stand-in).  Chosen = the
+/// correct arithmetic continuation; rejected = corrupted (wrong value or
+/// garbled) — a learnable preference signal on the same loss scale as SFT,
+/// matching the paper's observation that SFT/DPO detectors share
+/// thresholds.
+pub fn pref_syn(rng: &mut Pcg32) -> PrefExample {
+    let base = gsm_syn(rng);
+    let correct: i64 = base.answer.parse().unwrap();
+    let rejected = match rng.range_usize(0, 2) {
+        0 => (correct + rng.range_i64(1, 9)).to_string(),
+        1 => (correct.saturating_sub(rng.range_i64(1, 9)).max(0)).to_string(),
+        _ => format!("{correct}{}", rng.range_i64(0, 9)),
+    };
+    PrefExample {
+        prompt: base.prompt,
+        chosen: base.answer,
+        rejected,
+    }
+}
+
+/// Dataset registry entry: name → generator + relative difficulty profile
+/// consumed by the loss-trajectory simulator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DatasetProfile {
+    pub name: &'static str,
+    /// Irreducible loss floor under the best configuration (tiny-family
+    /// scale; calibrated from real runs, see EXPERIMENTS.md).
+    pub loss_floor: f64,
+    /// Initial loss at random-adapter init (byte vocab → ~ln(vocab_eff)).
+    pub loss_init: f64,
+    /// Overfit propensity multiplier (small data ⇒ higher).
+    pub overfit_propensity: f64,
+    /// Sequence length multiplier vs task default (OT3 uses 2×).
+    pub seq_scale: f64,
+}
+
+pub const DATASETS: &[DatasetProfile] = &[
+    DatasetProfile {
+        name: "gsm-syn",
+        loss_floor: 0.55,
+        loss_init: 5.6,
+        overfit_propensity: 1.0,
+        seq_scale: 1.0,
+    },
+    DatasetProfile {
+        name: "instr-syn",
+        loss_floor: 0.85,
+        loss_init: 5.6,
+        overfit_propensity: 1.3,
+        seq_scale: 1.0,
+    },
+    DatasetProfile {
+        name: "reason-syn",
+        loss_floor: 0.70,
+        loss_init: 5.6,
+        overfit_propensity: 1.1,
+        seq_scale: 2.0,
+    },
+    DatasetProfile {
+        name: "pref-syn",
+        loss_floor: 0.45,
+        loss_init: 0.6931, // DPO loss starts at ln 2
+        overfit_propensity: 1.6,
+        seq_scale: 1.0,
+    },
+];
+
+pub fn dataset_profile(name: &str) -> Option<&'static DatasetProfile> {
+    DATASETS.iter().find(|d| d.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gsm_answers_parse_and_are_consistent() {
+        let mut rng = Pcg32::seeded(1);
+        for _ in 0..200 {
+            let ex = gsm_syn(&mut rng);
+            let v: i64 = ex.answer.parse().expect("answer must be an integer");
+            assert!(v >= 0, "negative answer {v} from '{}'", ex.prompt);
+            assert!(ex.prompt.contains("How many"));
+        }
+    }
+
+    #[test]
+    fn gsm_deterministic_per_seed() {
+        let a: Vec<Example> = {
+            let mut r = Pcg32::seeded(9);
+            (0..20).map(|_| gsm_syn(&mut r)).collect()
+        };
+        let b: Vec<Example> = {
+            let mut r = Pcg32::seeded(9);
+            (0..20).map(|_| gsm_syn(&mut r)).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn gsm_has_variety() {
+        let mut rng = Pcg32::seeded(2);
+        let prompts: Vec<String> = (0..50).map(|_| gsm_syn(&mut rng).prompt).collect();
+        let mut uniq = prompts.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert!(uniq.len() > 30, "only {} unique prompts", uniq.len());
+    }
+
+    #[test]
+    fn instr_nonempty() {
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..100 {
+            let ex = instr_syn(&mut rng);
+            assert!(!ex.prompt.is_empty() && !ex.answer.is_empty());
+        }
+    }
+
+    #[test]
+    fn reason_chains_longer_than_instr() {
+        let mut rng = Pcg32::seeded(4);
+        let r: f64 = (0..50)
+            .map(|_| reason_syn(&mut rng).prompt.len() as f64)
+            .sum::<f64>()
+            / 50.0;
+        let i: f64 = (0..50)
+            .map(|_| instr_syn(&mut rng).prompt.len() as f64)
+            .sum::<f64>()
+            / 50.0;
+        assert!(r > i, "reason {r} vs instr {i}");
+    }
+
+    #[test]
+    fn pref_chosen_differs_from_rejected() {
+        let mut rng = Pcg32::seeded(5);
+        for _ in 0..100 {
+            let p = pref_syn(&mut rng);
+            assert_ne!(p.chosen, p.rejected);
+        }
+    }
+
+    #[test]
+    fn profiles_exist_for_all_datasets() {
+        for name in ["gsm-syn", "instr-syn", "reason-syn", "pref-syn"] {
+            assert!(dataset_profile(name).is_some(), "{name}");
+        }
+        assert!(dataset_profile("imagenet").is_none());
+    }
+}

@@ -1,0 +1,125 @@
+//! Byte-level tokenizer, mirrored exactly by `python/compile/model.py`
+//! (PAD/BOS/EOS/SEP ids and vocab size are asserted against the artifact
+//! manifest at load time).
+
+pub const PAD_ID: i32 = 256;
+pub const BOS_ID: i32 = 257;
+pub const EOS_ID: i32 = 258;
+pub const SEP_ID: i32 = 259;
+pub const VOCAB_SIZE: usize = 272;
+
+/// Encode raw text as byte tokens (no specials).
+pub fn encode(text: &str) -> Vec<i32> {
+    text.bytes().map(|b| b as i32).collect()
+}
+
+/// Decode byte tokens back to text; specials are dropped.
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter(|&&t| (0..256).contains(&t))
+        .map(|&t| t as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Build a training sequence `BOS prompt SEP answer EOS` padded/truncated
+/// to `seq_len`, plus next-token targets with the prompt region masked to
+/// PAD (completion-only loss, the paper's Tulu-3/OT3 metric).
+///
+/// Returns `(tokens, targets)` each of length `seq_len`.
+pub fn encode_example(prompt: &str, answer: &str, seq_len: usize) -> (Vec<i32>, Vec<i32>) {
+    // If the full sequence would overflow, truncate the *prompt* (keep its
+    // tail) so the answer — the part the loss is computed on — survives.
+    let ans = encode(answer);
+    let budget = seq_len.saturating_sub(ans.len() + 3); // BOS + SEP + EOS
+    let mut p = encode(prompt);
+    if p.len() > budget {
+        p.drain(..p.len() - budget);
+    }
+    let mut toks = Vec::with_capacity(seq_len);
+    toks.push(BOS_ID);
+    toks.extend(p);
+    toks.push(SEP_ID);
+    let answer_start = toks.len(); // first answer position
+    toks.extend(ans);
+    toks.push(EOS_ID);
+    toks.truncate(seq_len);
+    while toks.len() < seq_len {
+        toks.push(PAD_ID);
+    }
+    // next-token targets: target[i] = toks[i+1]; mask positions whose
+    // *predicted* token is still inside the prompt (i + 1 < answer_start)
+    let mut targets = vec![PAD_ID; seq_len];
+    for i in 0..seq_len - 1 {
+        if i + 1 >= answer_start {
+            targets[i] = toks[i + 1];
+        }
+    }
+    (toks, targets)
+}
+
+/// Position where the answer begins for a given prompt (used by the
+/// decode-time driver to know where to start generation).
+pub fn answer_start(prompt: &str) -> usize {
+    1 + prompt.len() + 1 // BOS + prompt bytes + SEP
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = encode("Q: 2+2?");
+        assert_eq!(decode(&t), "Q: 2+2?");
+    }
+
+    #[test]
+    fn specials_dropped_in_decode() {
+        let toks = vec![BOS_ID, 65, SEP_ID, 66, EOS_ID, PAD_ID];
+        assert_eq!(decode(&toks), "AB");
+    }
+
+    #[test]
+    fn example_layout() {
+        let (toks, targets) = encode_example("ab", "7", 10);
+        assert_eq!(toks[0], BOS_ID);
+        assert_eq!(&toks[1..3], &[97, 98]);
+        assert_eq!(toks[3], SEP_ID);
+        assert_eq!(toks[4], b'7' as i32);
+        assert_eq!(toks[5], EOS_ID);
+        assert_eq!(toks[6], PAD_ID);
+        // prompt region masked: targets before answer are PAD
+        assert_eq!(targets[0], PAD_ID);
+        assert_eq!(targets[1], PAD_ID);
+        assert_eq!(targets[2], PAD_ID);
+        // position 3 (SEP) predicts the first answer byte
+        assert_eq!(targets[3], b'7' as i32);
+        assert_eq!(targets[4], EOS_ID);
+        assert_eq!(targets[5], PAD_ID);
+    }
+
+    #[test]
+    fn truncation_and_padding() {
+        let (toks, _) = encode_example("abcdefghij", "12345", 8);
+        assert_eq!(toks.len(), 8);
+        let (toks2, _) = encode_example("a", "b", 16);
+        assert_eq!(toks2.len(), 16);
+        assert!(toks2[5..].iter().all(|&t| t == PAD_ID));
+    }
+
+    #[test]
+    fn answer_start_matches_layout() {
+        let (toks, _) = encode_example("xy", "9", 10);
+        let s = answer_start("xy");
+        assert_eq!(toks[s], b'9' as i32);
+    }
+
+    #[test]
+    fn utf8_passthrough_bytes() {
+        let t = encode("é"); // 2 bytes
+        assert_eq!(t.len(), 2);
+        assert_eq!(decode(&t), "é");
+    }
+}

@@ -1,0 +1,30 @@
+//! # ALTO-RS — Adaptive LoRA Tuning and Orchestration
+//!
+//! Rust + JAX + Pallas reproduction of *ALTO: Adaptive LoRA Tuning and
+//! Orchestration for Heterogeneous LoRA Training Workloads* (CS.LG 2026).
+//!
+//! Three layers (DESIGN.md §1.3):
+//! * **L3 (this crate)** — coordinator: loss-aware early exit, batched
+//!   multi-LoRA executors, hierarchical (intra + inter task) scheduling,
+//!   the PJRT runtime, and every substrate (cluster simulator, parallelism
+//!   cost models, synthetic workloads, CP solver, JSON/RNG/CLI/prop).
+//! * **L2** — `python/compile/model.py`: the multi-adapter LoRA
+//!   transformer and its AdamW train step, AOT-lowered to HLO text.
+//! * **L1** — `python/compile/kernels/grouped_lora.py`: Pallas grouped
+//!   LoRA GEMM kernels, lowered into the same HLO.
+//!
+//! Python is build-time only; the request path is pure Rust + PJRT.
+
+pub mod api;
+pub mod bench;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod parallel;
+pub mod runtime;
+pub mod sched;
+pub mod stats;
+pub mod train;
+pub mod trajsim;
+pub mod util;

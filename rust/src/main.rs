@@ -1,0 +1,213 @@
+//! `alto` — the leader binary: task intake, scheduling, batched
+//! multi-LoRA execution with early exit, over real PJRT artifacts or the
+//! simulated H100 cluster.
+//!
+//! Subcommands:
+//!   info                         runtime + artifact inventory
+//!   run    --tasks <spec.json>   multi-task service (simulated cluster)
+//!   train  --artifact <key>      real PJRT sweep on a tiny-family model
+//!   sched  --tasks <spec.json>   plan placement only (prints the Gantt)
+//!   calibrate --artifact <key>   measure real step time / host GFLOPs
+
+use alto::api::{EarlyExit, Engine};
+use alto::config::TaskSpec;
+use alto::coordinator::task_runner::RunConfig;
+use alto::data::corpus::Corpus;
+use alto::runtime::{Manifest, Runtime};
+use alto::train::{calibrate_step_time, run_real_sweep};
+use alto::util::cli::Args;
+
+use anyhow::{Context, Result};
+
+const USAGE: &str = "usage: alto <info|run|train|sched|calibrate> [options]
+  info                              list artifacts + runtime platform
+  run    --tasks spec.json [--gpus 8] [--no-early-exit]
+  train  --artifact sft_nano_n4_b2_t32_r8 [--steps 100] [--configs 8]
+  sched  --tasks spec.json [--gpus 8] [--policy optimal|sjf|fcfs|lpt]
+  calibrate --artifact sft_nano_n4_b2_t32_r8 [--steps 20]";
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["no-early-exit", "help"]);
+    if args.has_flag("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("run") => cmd_run(&args),
+        Some("train") => cmd_train(&args),
+        Some("sched") => cmd_sched(&args),
+        Some("calibrate") => cmd_calibrate(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get_or("artifacts", "artifacts").to_string()
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    println!("platform: {}", rt.platform());
+    match Manifest::load(artifacts_dir(args)) {
+        Ok(m) => {
+            println!("artifacts ({}):", m.artifacts.len());
+            for (key, a) in &m.artifacts {
+                println!(
+                    "  {key}: {} {} params={} N={} B={} T={} r_max={}",
+                    a.kind,
+                    a.model.name,
+                    a.model.param_count,
+                    a.n,
+                    a.b,
+                    a.t,
+                    a.r_max
+                );
+            }
+        }
+        Err(e) => println!("no artifacts: {e:#}"),
+    }
+    Ok(())
+}
+
+fn load_tasks(args: &Args) -> Result<Vec<TaskSpec>> {
+    let path = args.get("tasks").context("--tasks <spec.json> required")?;
+    TaskSpec::load_file(path)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let tasks = load_tasks(args)?;
+    let gpus = args.get_usize("gpus", 8);
+    let engine = Engine::new("adapter_parallel", gpus);
+    let ee = if args.has_flag("no-early-exit") {
+        EarlyExit::disabled()
+    } else {
+        EarlyExit::new()
+    };
+    let outcomes = engine.batched_execution(&tasks, ee)?;
+    println!(
+        "{:<16} {:>5} {:>12} {:>10} {:>8}",
+        "task", "gpus", "duration(s)", "best-val", "saved%"
+    );
+    for o in &outcomes {
+        println!(
+            "{:<16} {:>5} {:>12.1} {:>10.4} {:>8.1}",
+            o.name,
+            o.gpus,
+            o.actual_duration,
+            o.best_val,
+            100.0 * (1.0 - o.samples_used as f64 / o.samples_budget.max(1) as f64)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sched(args: &Args) -> Result<()> {
+    use alto::sched::solver::{fcfs_schedule, lpt_schedule, sjf_schedule, solve, SchedTask};
+    let tasks = load_tasks(args)?;
+    let gpus = args.get_usize("gpus", 8);
+    let engine = Engine::new("adapter_parallel", gpus);
+    let mut profiler = alto::coordinator::Profiler::new(engine.gpu.clone());
+    let st: Vec<SchedTask> = tasks
+        .iter()
+        .enumerate()
+        .map(|(i, t)| SchedTask {
+            id: i,
+            duration: profiler.estimate_duration(
+                &alto::config::MODEL_FAMILY.get(&t.model).expect("model"),
+                t,
+                engine.n_slots,
+            ),
+            gpus: t.num_gpus,
+        })
+        .collect();
+    let plan = match args.get_or("policy", "optimal") {
+        "sjf" => sjf_schedule(&st, gpus),
+        "fcfs" => fcfs_schedule(&st, gpus),
+        "lpt" => lpt_schedule(&st, gpus),
+        _ => solve(&st, gpus)?,
+    };
+    println!("makespan: {:.1}s", plan.makespan);
+    for p in &plan.placements {
+        let t = &tasks[p.id];
+        println!(
+            "  [{:>8.1}s + {:>8.1}s] {:<16} ({} GPUs)",
+            p.start, st[p.id].duration, t.name, p.gpus
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(artifacts_dir(args))?;
+    let key = args.get_or("artifact", "sft_nano_n4_b2_t32_r8").to_string();
+    let spec = manifest.get(&key)?.clone();
+    let steps = args.get_usize("steps", 100);
+    let n_cfg = args.get_usize("configs", 8);
+    let corpus = Corpus::build("gsm-syn", 512, 64, spec.t, 7)?;
+    let lrs = [1e-4, 5e-4, 2e-3, 5e-3];
+    let ranks = [2usize, 4, 8];
+    let configs: Vec<_> = (0..n_cfg)
+        .map(|i| alto::config::HyperParams {
+            lr: lrs[i % lrs.len()],
+            rank: ranks[(i / lrs.len()) % ranks.len()].min(spec.r_max),
+            batch_size: spec.b,
+        })
+        .collect();
+    println!(
+        "real sweep: {} configs × {steps} steps on {key}",
+        configs.len()
+    );
+    let out = run_real_sweep(
+        &rt,
+        &manifest,
+        &key,
+        corpus,
+        &configs,
+        steps,
+        &RunConfig::default(),
+        42,
+    )?;
+    let res = &out.result;
+    println!(
+        "best: job {} ({}) val {:.4}; samples used {}/{} ({:.0}% saved)",
+        res.best_job,
+        res.jobs[res.best_job].hp.label(),
+        res.best_val(),
+        res.samples_used,
+        res.samples_budget,
+        100.0 * res.savings_ratio()
+    );
+    for j in &res.jobs {
+        println!(
+            "  job {:>2} {:<18} steps {:>5} best-val {:>8.4} exit {:?}",
+            j.id,
+            j.hp.label(),
+            j.steps_run,
+            j.best_val,
+            j.exit_reason().map(|r| r.as_str()).unwrap_or("-")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(artifacts_dir(args))?;
+    let key = args.get_or("artifact", "sft_nano_n4_b2_t32_r8").to_string();
+    let spec = manifest.get(&key)?.clone();
+    let corpus = Corpus::build("gsm-syn", 256, 16, spec.t, 7)?;
+    let steps = args.get_usize("steps", 20);
+    let cal = calibrate_step_time(&rt, &manifest, &key, corpus, steps)?;
+    println!(
+        "{key}: {:.2} ms/step, {:.2e} flops/step, {:.2} effective GFLOP/s",
+        cal.step_seconds * 1e3,
+        cal.model_flops_per_step,
+        cal.effective_gflops
+    );
+    Ok(())
+}

@@ -1,0 +1,16 @@
+//! Per-strategy step-time models: ALTO's batched grouped-GEMM executor and
+//! Adapter Parallelism vs. the baselines the paper compares against
+//! (Sequential, mLoRA, LoRAFusion, FSDP, TP, PP — §8.1, Fig 9/13,
+//! Table 2).
+//!
+//! Every strategy answers one question: *how long does it take to advance
+//! all N adapters by one optimizer step* on `p` GPUs.  The breakdowns are
+//! roofline + α-β collective arithmetic over `GpuSpec` constants, so the
+//! *ratios* between strategies (who wins, where the crossovers fall) are
+//! hardware-parametric — the property the paper's figures measure.
+
+pub mod baselines;
+pub mod workload;
+
+pub use baselines::{all_strategies, strategy_by_name};
+pub use workload::{StepBreakdown, Strategy, Workload};

@@ -1,0 +1,282 @@
+//! Workload description + shared cost primitives for strategy models.
+
+use crate::cluster::gpu::GpuSpec;
+use crate::config::ModelShape;
+
+/// A multi-LoRA training workload: N adapters over one frozen backbone.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub model: ModelShape,
+    pub ranks: Vec<usize>,
+    pub batch_per_adapter: usize,
+    pub seq_len: usize,
+}
+
+impl Workload {
+    pub fn n_adapters(&self) -> usize {
+        self.ranks.len()
+    }
+
+    pub fn tokens_per_adapter(&self) -> f64 {
+        (self.batch_per_adapter * self.seq_len) as f64
+    }
+
+    pub fn total_tokens(&self) -> f64 {
+        self.tokens_per_adapter() * self.n_adapters() as f64
+    }
+}
+
+/// Step-time decomposition (seconds).  `total` is the critical path:
+/// compute and memory overlap inside the roofline; communication, launch
+/// overhead and pipeline bubbles serialize on top.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StepBreakdown {
+    pub compute_s: f64,
+    pub memory_s: f64,
+    /// LoRA-path roofline time (serializes with the base path per layer).
+    pub lora_s: f64,
+    pub comm_s: f64,
+    pub launch_s: f64,
+    pub bubble_s: f64,
+    /// Fraction of rank-steps spent idle (FSDP with global batch < P).
+    pub idle_frac: f64,
+}
+
+impl StepBreakdown {
+    pub fn total(&self) -> f64 {
+        self.compute_s.max(self.memory_s)
+            + self.lora_s
+            + self.comm_s
+            + self.launch_s
+            + self.bubble_s
+    }
+}
+
+/// A parallel-execution strategy: time to advance every adapter one step.
+pub trait Strategy {
+    fn name(&self) -> &'static str;
+    fn step_time(&self, w: &Workload, gpu: &GpuSpec, p: usize) -> StepBreakdown;
+
+    /// Samples/second the strategy sustains on this workload.
+    fn throughput(&self, w: &Workload, gpu: &GpuSpec, p: usize) -> f64 {
+        let t = self.step_time(w, gpu, p).total();
+        (w.n_adapters() * w.batch_per_adapter) as f64 / t
+    }
+}
+
+// --- shared cost primitives -------------------------------------------------
+
+/// Dense backbone fwd+bwd(dX-only) compute time over `tokens`, split
+/// across `p` ranks.  LoRA training skips base weight grads, so backward
+/// through the frozen path is ~2× forward ⇒ 3× forward total.
+pub fn base_compute_time(
+    model: &ModelShape,
+    gpu: &GpuSpec,
+    tokens: f64,
+    p: usize,
+    efficiency: f64,
+) -> f64 {
+    let flops = 3.0 * model.flops_per_token_fwd() * tokens;
+    flops / (gpu.peak_flops * efficiency.max(1e-6)) / p.max(1) as f64
+}
+
+/// HBM time to stream the (possibly sharded) base weights for fwd + bwd.
+/// Weights are read once per pass from this rank's HBM; `reads` counts
+/// passes (fwd + bwd ⇒ 2; re-materialization adds more).
+pub fn base_weight_stream_time(model: &ModelShape, gpu: &GpuSpec, p: usize, reads: f64) -> f64 {
+    reads * model.base_weight_bytes() / p.max(1) as f64 / gpu.hbm_bw
+}
+
+/// How the LoRA path is executed — determines launch structure, device
+/// occupancy and FLOP waste (paper §6.1's three-way comparison).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LoraExec {
+    /// ALTO: one grouped kernel; thread blocks concatenate across adapters
+    /// (full occupancy), only diagonal blocks computed (zero FLOP waste).
+    Grouped,
+    /// mLoRA / PyTorch back-to-back: one kernel per adapter per GEMM —
+    /// each too small to fill the device or saturate HBM.
+    PerAdapter { bw_eff: f64 },
+    /// LoRAFusion wide GEMM: single kernel but (ΣL_i)(Σr_i) FLOPs.
+    WideFused,
+}
+
+/// LoRA-path FLOPs for one adapter: shrink+expand fwd (2·params·tok),
+/// backward input grads and weight grads each the same again ⇒ 6·params·tok.
+pub fn lora_flops(model: &ModelShape, rank: usize, tokens: f64) -> f64 {
+    6.0 * model.lora_param_count(rank) as f64 * tokens
+}
+
+/// LoRA-path HBM bytes for one adapter: A/B weights ×3 passes ×replication
+/// plus activation traffic (X in, Y out, S cache in/out per projection).
+pub fn lora_bytes(model: &ModelShape, rank: usize, tokens: f64, replication: f64) -> f64 {
+    let weights = 3.0 * model.lora_weight_bytes(rank) * replication;
+    // per token per layer: q,k,v,o (d+d each) + gate,up (d+f) + down (f+d)
+    // = 11d + 3f, plus 2r per projection for the cached S
+    let (d, f) = (model.d_model as f64, model.d_ff as f64);
+    let act_per_tok = (11.0 * d + 3.0 * f + 14.0 * rank as f64) * 2.0;
+    weights + 3.0 * act_per_tok * model.n_layers as f64 * tokens
+}
+
+/// Roofline time of the whole LoRA path for a set of co-resident adapters.
+pub fn lora_path_time(
+    model: &ModelShape,
+    gpu: &GpuSpec,
+    ranks: &[usize],
+    tokens_per_adapter: f64,
+    exec: LoraExec,
+    replication: f64,
+) -> f64 {
+    match exec {
+        LoraExec::Grouped => {
+            // thread blocks concatenate across adapters → occupancy from
+            // the union of tiles
+            let tiles: f64 = ranks.len() as f64 * (tokens_per_adapter / 128.0).ceil();
+            let eff = (tiles / gpu.sm_count as f64).min(1.0).max(0.02);
+            let flops: f64 = ranks
+                .iter()
+                .map(|&r| lora_flops(model, r, tokens_per_adapter))
+                .sum();
+            let bytes: f64 = ranks
+                .iter()
+                .map(|&r| lora_bytes(model, r, tokens_per_adapter, replication))
+                .sum();
+            (flops / (gpu.peak_flops * eff)).max(bytes / gpu.hbm_bw)
+        }
+        LoraExec::PerAdapter { bw_eff } => ranks
+            .iter()
+            .map(|&r| {
+                let tiles = (tokens_per_adapter / 128.0).ceil();
+                let eff = (tiles / gpu.sm_count as f64).min(1.0).max(0.02);
+                let flops = lora_flops(model, r, tokens_per_adapter);
+                let bytes = lora_bytes(model, r, tokens_per_adapter, replication);
+                (flops / (gpu.peak_flops * eff)).max(bytes / (gpu.hbm_bw * bw_eff))
+            })
+            .sum(),
+        LoraExec::WideFused => {
+            let n = ranks.len() as f64;
+            let tiles: f64 = n * (tokens_per_adapter / 128.0).ceil();
+            let eff = (tiles / gpu.sm_count as f64).min(1.0).max(0.02);
+            // every token multiplies against every adapter's columns
+            let flops: f64 = ranks
+                .iter()
+                .map(|&r| lora_flops(model, r, tokens_per_adapter) * n)
+                .sum();
+            let bytes: f64 = ranks
+                .iter()
+                .map(|&r| lora_bytes(model, r, tokens_per_adapter, replication))
+                .sum();
+            (flops / (gpu.peak_flops * eff)).max(bytes / gpu.hbm_bw)
+        }
+    }
+}
+
+/// Activation HBM traffic per token (reads+writes through the layers) —
+/// matters at tiny batch where weight streaming dominates anyway; a fixed
+/// small coefficient keeps the model simple.
+pub fn activation_stream_time(model: &ModelShape, gpu: &GpuSpec, tokens: f64, p: usize) -> f64 {
+    let bytes_per_tok = 2.0 * 8.0 * model.d_model as f64 * model.n_layers as f64;
+    bytes_per_tok * tokens / p.max(1) as f64 / gpu.hbm_bw
+}
+
+/// GEMM efficiency from tile occupancy: an (M × N_out) GEMM decomposes
+/// into ⌈M/128⌉·⌈N_out/128⌉ MXU/tensor-core tiles; the device saturates
+/// once there is at least one tile per SM.  Small-batch GEMMs underfill
+/// the device — the Fig 4 SM-occupancy effect.
+pub fn gemm_efficiency(m_rows: f64, n_cols: f64, gpu: &GpuSpec) -> f64 {
+    let tiles = (m_rows / 128.0).ceil().max(1.0) * (n_cols / 128.0).ceil().max(1.0);
+    (tiles / gpu.sm_count as f64).min(1.0).max(0.02)
+}
+
+/// Efficiency of the backbone GEMMs at a given token count (output width
+/// = d_model, the dominant projection shape).
+pub fn base_gemm_efficiency(model: &ModelShape, tokens: f64, gpu: &GpuSpec) -> f64 {
+    gemm_efficiency(tokens, model.d_model as f64, gpu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MODEL_FAMILY;
+
+    fn w8() -> Workload {
+        Workload {
+            model: MODEL_FAMILY.get("llama-8b").unwrap(),
+            ranks: vec![16; 8],
+            batch_per_adapter: 2,
+            seq_len: 256,
+        }
+    }
+
+    #[test]
+    fn workload_totals() {
+        let w = w8();
+        assert_eq!(w.n_adapters(), 8);
+        assert_eq!(w.tokens_per_adapter(), 512.0);
+        assert_eq!(w.total_tokens(), 4096.0);
+    }
+
+    #[test]
+    fn lora_path_memory_bound_base_compute_bound() {
+        // the paper's central asymmetry (§6.1): the base GEMM has high
+        // arithmetic intensity (compute-bound at scale) while the LoRA
+        // kernels sit far below the machine balance (bandwidth-bound)
+        let w = w8();
+        let g = GpuSpec::h100_sxm5();
+        let balance = g.peak_flops / g.hbm_bw;
+        let lora_ai = lora_flops(&w.model, 16, 512.0)
+            / lora_bytes(&w.model, 16, 512.0, 1.0);
+        assert!(lora_ai < balance, "LoRA AI {lora_ai} vs balance {balance}");
+        // grouped path bounded by bytes, not flops, at full occupancy
+        let t = lora_path_time(&w.model, &g, &w.ranks, 512.0, LoraExec::Grouped, 1.0);
+        let bytes: f64 = w.ranks.iter().map(|&r| lora_bytes(&w.model, r, 512.0, 1.0)).sum();
+        assert!((t - bytes / g.hbm_bw).abs() / t < 0.5, "should be ~memory-bound");
+        let base_c = base_compute_time(&w.model, &g, w.total_tokens(), 1, 1.0);
+        let base_m = base_weight_stream_time(&w.model, &g, 1, 2.0);
+        assert!(base_c > 0.0 && base_m > 0.0);
+    }
+
+    #[test]
+    fn grouped_faster_than_per_adapter_and_wide() {
+        // §6.1: grouped beats 3N-launch per-adapter execution AND the
+        // wide-GEMM fused formulation
+        let g = GpuSpec::h100_sxm5();
+        let m = MODEL_FAMILY.get("llama-1b").unwrap();
+        let ranks = vec![16usize; 32];
+        let grouped = lora_path_time(&m, &g, &ranks, 256.0, LoraExec::Grouped, 1.0);
+        let per = lora_path_time(&m, &g, &ranks, 256.0,
+                                 LoraExec::PerAdapter { bw_eff: 0.5 }, 1.0);
+        let wide = lora_path_time(&m, &g, &ranks, 256.0, LoraExec::WideFused, 1.0);
+        assert!(per > grouped, "per-adapter {per} vs grouped {grouped}");
+        assert!(wide > grouped, "wide {wide} vs grouped {grouped}");
+    }
+
+    #[test]
+    fn efficiency_saturates() {
+        let g = GpuSpec::h100_sxm5();
+        assert_eq!(gemm_efficiency(1e6, 4096.0, &g), 1.0);
+        // LoRA-shaped GEMM (narrow output) underfills badly
+        assert!(gemm_efficiency(64.0, 16.0, &g) < 0.05);
+        // wider batch fills more tiles
+        assert!(
+            gemm_efficiency(256.0, 4096.0, &g) < gemm_efficiency(2048.0, 4096.0, &g)
+        );
+        let m = MODEL_FAMILY.get("llama-8b").unwrap();
+        let e = base_gemm_efficiency(&m, 1024.0, &g);
+        assert!(e > 0.9, "1024 tokens should nearly saturate, got {e}");
+    }
+
+    #[test]
+    fn breakdown_total_is_critical_path() {
+        let b = StepBreakdown {
+            compute_s: 2.0,
+            memory_s: 3.0,
+            lora_s: 0.5,
+            comm_s: 1.0,
+            launch_s: 0.5,
+            bubble_s: 0.25,
+            idle_frac: 0.0,
+        };
+        assert_eq!(b.total(), 3.0 + 0.5 + 1.0 + 0.5 + 0.25);
+    }
+}

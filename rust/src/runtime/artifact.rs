@@ -1,0 +1,278 @@
+//! Artifact manifest: the L2→L3 contract (`artifacts/manifest.json`).
+//!
+//! `python/compile/aot.py` records every artifact's input/output names,
+//! shapes and dtypes in the exact flat order the HLO entry computation
+//! expects; this module parses and validates it, and is the only place
+//! the two layers agree on tensor ordering.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::tensor::DType;
+
+/// One input/output slot of an artifact step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// I/O signature of one compiled step (train / eval / decode).
+#[derive(Debug, Clone, Default)]
+pub struct StepIo {
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl StepIo {
+    /// Index of an input by name (manifest order = execution order).
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|s| s.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|s| s.name == name)
+    }
+}
+
+/// Backbone metadata embedded per artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMeta {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub param_count: usize,
+}
+
+/// One artifact variant (a compiled (model, N, B, T, r_max) tuple).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub key: String,
+    pub kind: String, // "sft" | "dpo"
+    pub model: ModelMeta,
+    pub n: usize,
+    pub b: usize,
+    pub t: usize,
+    pub r_max: usize,
+    /// step name → HLO filename
+    pub files: BTreeMap<String, String>,
+    /// step name → I/O signature
+    pub io: BTreeMap<String, StepIo>,
+}
+
+impl ArtifactSpec {
+    pub fn hlo_path(&self, dir: &Path, step: &str) -> Result<PathBuf> {
+        let f = self
+            .files
+            .get(step)
+            .with_context(|| format!("artifact {} has no step '{step}'", self.key))?;
+        Ok(dir.join(f))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab: usize,
+    pub pad_id: i32,
+    pub bos_id: i32,
+    pub eos_id: i32,
+    pub sep_id: i32,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: PathBuf) -> Result<Manifest> {
+        let usize_of = |key: &str| -> Result<usize> {
+            j.req(key)?
+                .as_usize()
+                .with_context(|| format!("{key} not a usize"))
+        };
+        let vocab = usize_of("vocab")?;
+        // the Rust tokenizer must agree with the compiled model
+        if vocab != crate::data::tokenizer::VOCAB_SIZE {
+            bail!(
+                "manifest vocab {vocab} != tokenizer vocab {} — \
+                 artifacts were built against a different model.py",
+                crate::data::tokenizer::VOCAB_SIZE
+            );
+        }
+        let mut artifacts = BTreeMap::new();
+        let arts = j.req("artifacts")?.as_obj().context("artifacts not an object")?;
+        for (key, aj) in arts {
+            artifacts.insert(key.clone(), parse_artifact(key, aj)?);
+        }
+        Ok(Manifest {
+            dir,
+            vocab,
+            pad_id: usize_of("pad_id")? as i32,
+            bos_id: usize_of("bos_id")? as i32,
+            eos_id: usize_of("eos_id")? as i32,
+            sep_id: usize_of("sep_id")? as i32,
+            artifacts,
+        })
+    }
+
+    pub fn get(&self, key: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(key)
+            .with_context(|| format!("unknown artifact '{key}'; have: {:?}",
+                                     self.artifacts.keys().collect::<Vec<_>>()))
+    }
+
+    /// Find an artifact matching (kind, model, n, b) — the lookup the
+    /// intra-task scheduler performs when forming a batch group.
+    pub fn find(&self, kind: &str, model: &str, n: usize, b: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .values()
+            .find(|a| a.kind == kind && a.model.name == model && a.n == n && a.b == b)
+    }
+}
+
+fn parse_artifact(key: &str, j: &Json) -> Result<ArtifactSpec> {
+    let u = |node: &Json, k: &str| -> Result<usize> {
+        node.req(k)?.as_usize().with_context(|| format!("{k} not usize"))
+    };
+    let mj = j.req("model")?;
+    let model = ModelMeta {
+        name: mj.req("name")?.as_str().context("name")?.to_string(),
+        d_model: u(mj, "d_model")?,
+        n_layers: u(mj, "n_layers")?,
+        n_heads: u(mj, "n_heads")?,
+        d_ff: u(mj, "d_ff")?,
+        vocab: u(mj, "vocab")?,
+        param_count: u(mj, "param_count")?,
+    };
+    let mut files = BTreeMap::new();
+    for (step, f) in j.req("files")?.as_obj().context("files")? {
+        files.insert(step.clone(), f.as_str().context("file name")?.to_string());
+    }
+    let mut io = BTreeMap::new();
+    for (step, ioj) in j.req("io")?.as_obj().context("io")? {
+        io.insert(
+            step.clone(),
+            StepIo {
+                inputs: parse_io_list(ioj.req("inputs")?)?,
+                outputs: parse_io_list(ioj.req("outputs")?)?,
+            },
+        );
+    }
+    Ok(ArtifactSpec {
+        key: key.to_string(),
+        kind: j.req("kind")?.as_str().context("kind")?.to_string(),
+        model,
+        n: u(j, "n")?,
+        b: u(j, "b")?,
+        t: u(j, "t")?,
+        r_max: u(j, "r_max")?,
+        files,
+        io,
+    })
+}
+
+fn parse_io_list(j: &Json) -> Result<Vec<IoSpec>> {
+    j.as_arr()
+        .context("io list")?
+        .iter()
+        .map(|e| {
+            Ok(IoSpec {
+                name: e.req("name")?.as_str().context("io name")?.to_string(),
+                shape: e
+                    .req("shape")?
+                    .as_arr()
+                    .context("shape")?
+                    .iter()
+                    .map(|v| v.as_usize().context("dim"))
+                    .collect::<Result<_>>()?,
+                dtype: DType::parse(e.req("dtype")?.as_str().context("dtype")?)?,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest_json() -> String {
+        r#"{
+          "version": 1, "vocab": 272,
+          "pad_id": 256, "bos_id": 257, "eos_id": 258, "sep_id": 259,
+          "artifacts": {
+            "sft_nano_n2_b1_t8_r4": {
+              "kind": "sft",
+              "model": {"name": "nano", "d_model": 64, "n_layers": 2,
+                        "n_heads": 4, "d_ff": 176, "vocab": 272,
+                        "param_count": 123},
+              "n": 2, "b": 1, "t": 8, "r_max": 4,
+              "files": {"train": "x.train.hlo.txt"},
+              "io": {"train": {
+                "inputs": [{"name": "tokens", "shape": [2,1,8],
+                            "dtype": "int32"}],
+                "outputs": [{"name": "losses", "shape": [2],
+                             "dtype": "float32"}]
+              }}
+            }
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let j = Json::parse(&tiny_manifest_json()).unwrap();
+        let m = Manifest::from_json(&j, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.pad_id, 256);
+        let a = m.get("sft_nano_n2_b1_t8_r4").unwrap();
+        assert_eq!(a.n, 2);
+        assert_eq!(a.model.d_model, 64);
+        let io = &a.io["train"];
+        assert_eq!(io.inputs[0].shape, vec![2, 1, 8]);
+        assert_eq!(io.inputs[0].dtype, DType::I32);
+        assert_eq!(io.input_index("tokens"), Some(0));
+        assert_eq!(io.output_index("losses"), Some(0));
+        assert_eq!(io.output_index("nonexistent"), None);
+    }
+
+    #[test]
+    fn find_by_shape() {
+        let j = Json::parse(&tiny_manifest_json()).unwrap();
+        let m = Manifest::from_json(&j, PathBuf::from("/tmp")).unwrap();
+        assert!(m.find("sft", "nano", 2, 1).is_some());
+        assert!(m.find("sft", "nano", 4, 1).is_none());
+        assert!(m.find("dpo", "nano", 2, 1).is_none());
+    }
+
+    #[test]
+    fn vocab_mismatch_rejected() {
+        let text = tiny_manifest_json().replace("\"vocab\": 272", "\"vocab\": 999");
+        let j = Json::parse(&text).unwrap();
+        assert!(Manifest::from_json(&j, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_error_lists_known() {
+        let j = Json::parse(&tiny_manifest_json()).unwrap();
+        let m = Manifest::from_json(&j, PathBuf::from("/tmp")).unwrap();
+        let err = format!("{:#}", m.get("nope").unwrap_err());
+        assert!(err.contains("sft_nano_n2_b1_t8_r4"));
+    }
+}

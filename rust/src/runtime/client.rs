@@ -1,0 +1,83 @@
+//! PJRT client wrapper: load HLO text artifacts, compile once, execute.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::
+//! from_text_file` → `XlaComputation::from_proto` → `client.compile`.
+//! HLO *text* is the interchange format (64-bit-id protos from jax ≥ 0.5
+//! are rejected by xla_extension 0.5.1; the text parser reassigns ids).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT CPU client + executable cache keyed by HLO path.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<BTreeMap<PathBuf, std::sync::Arc<Executable>>>,
+}
+
+/// A compiled artifact step.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached).
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<std::sync::Arc<Executable>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(hit) = self.cache.lock().unwrap().get(&path) {
+            return Ok(hit.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        let arc = std::sync::Arc::new(Executable {
+            exe,
+            path: path.clone(),
+        });
+        self.cache.lock().unwrap().insert(path, arc.clone());
+        Ok(arc)
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+impl Executable {
+    /// Execute with literal inputs (by value or reference — literals are
+    /// only borrowed); artifacts are lowered with `return_tuple=True`, so
+    /// the single result buffer is a tuple that we decompose into
+    /// per-output literals.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<L>(inputs)
+            .with_context(|| format!("executing {:?}", self.path))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result tuple")?;
+        lit.to_tuple().context("decomposing result tuple")
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//! Python never runs here — the Rust binary is self-contained once
+//! `artifacts/` exists.
+
+pub mod artifact;
+pub mod client;
+pub mod params;
+pub mod session;
+pub mod tensor;
+
+pub use artifact::{ArtifactSpec, IoSpec, Manifest, StepIo};
+pub use client::{Executable, Runtime};
+pub use session::{Session, SlotState};
+pub use tensor::{DType, HostTensor};

@@ -1,0 +1,201 @@
+//! Parameter initialization on the Rust side.
+//!
+//! The AOT artifacts are pure functions — backbone weights, adapter
+//! stacks and optimizer state are *inputs* — so the coordinator owns
+//! parameter construction.  Distributions mirror `model.py`'s
+//! `init_base_params` / `init_adapters` (embed σ=0.02, projections
+//! σ=1/√d_in, LoRA A σ=1/√d_in on live columns, B = 0).
+//!
+//! The backbone is random-initialized: we have no pretrained checkpoint
+//! (DESIGN.md §3) — hyperparameter *sensitivity* and system behaviour are
+//! preserved; absolute quality numbers are tiny-scale analogs.
+
+use crate::runtime::artifact::{ArtifactSpec, IoSpec};
+use crate::runtime::tensor::{DType, HostTensor};
+use crate::util::rng::Pcg32;
+
+use anyhow::Result;
+
+/// Build one base/adapter/opt input tensor for `spec`, dispatching on the
+/// manifest name.  `ranks` gives each adapter slot's LoRA rank (used to
+/// zero padded A columns, mirroring model.py).
+pub fn init_input(
+    io: &IoSpec,
+    spec: &ArtifactSpec,
+    ranks: &[usize],
+    rng: &mut Pcg32,
+) -> Result<HostTensor> {
+    let n_el: usize = io.shape.iter().product();
+    let d = |i: usize| io.shape[i];
+    let name = io.name.as_str();
+
+    let normal = |rng: &mut Pcg32, n: usize, std: f64| -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * std) as f32).collect()
+    };
+
+    let t = match name {
+        "embed" => HostTensor::f32(&io.shape, normal(rng, n_el, 0.02))?,
+        "wq" | "wk" | "wv" | "wo" | "wgate" | "wup" | "wdown" => {
+            // stacked [L, d_in, d_out]: σ = 1/√d_in
+            let std = 1.0 / (d(1) as f64).sqrt();
+            HostTensor::f32(&io.shape, normal(rng, n_el, std))?
+        }
+        "ln1" | "ln2" | "lnf" => HostTensor::f32(&io.shape, vec![1.0; n_el])?,
+        _ if name.starts_with("ad.a_") => {
+            // [L, N, d_in, r_max]: live columns ~ N(0, 1/√d_in), padded 0
+            let (l, n, din, rmax) = (d(0), d(1), d(2), d(3));
+            let std = 1.0 / (din as f64).sqrt();
+            let mut data = vec![0.0f32; n_el];
+            for li in 0..l {
+                for ni in 0..n {
+                    let rank = ranks.get(ni).copied().unwrap_or(rmax);
+                    for ki in 0..din {
+                        for ri in 0..rank.min(rmax) {
+                            let idx = ((li * n + ni) * din + ki) * rmax + ri;
+                            data[idx] = (rng.normal() * std) as f32;
+                        }
+                    }
+                }
+            }
+            HostTensor::f32(&io.shape, data)?
+        }
+        _ if name.starts_with("ad.b_") => HostTensor::f32(&io.shape, vec![0.0; n_el])?,
+        _ if name.starts_with("m.") || name.starts_with("v.") => {
+            HostTensor::f32(&io.shape, vec![0.0; n_el])?
+        }
+        "rank_mask" => {
+            // [N, r_max]
+            let (n, rmax) = (d(0), d(1));
+            let mut data = vec![0.0f32; n_el];
+            for ni in 0..n {
+                let rank = ranks.get(ni).copied().unwrap_or(rmax);
+                for ri in 0..rank.min(rmax) {
+                    data[ni * rmax + ri] = 1.0;
+                }
+            }
+            HostTensor::f32(&io.shape, data)?
+        }
+        "scale" => HostTensor::f32(&io.shape, vec![2.0; n_el])?, // α = 2r ⇒ α/r = 2
+        "active" => HostTensor::f32(&io.shape, vec![1.0; n_el])?,
+        other => anyhow::bail!("no initializer for input '{other}' of {}", spec.key),
+    };
+    match io.dtype {
+        DType::F32 => {}
+        DType::I32 => anyhow::bail!("init_input only builds f32 state, got {name}"),
+    }
+    Ok(t)
+}
+
+/// Names of the inputs `init_input` knows how to build (everything except
+/// the per-step data/control inputs fed by the session).
+pub fn is_state_input(name: &str) -> bool {
+    matches!(
+        name,
+        "embed" | "wq" | "wk" | "wv" | "wo" | "wgate" | "wup" | "wdown" | "ln1" | "ln2"
+            | "lnf" | "rank_mask" | "scale" | "active"
+    ) || name.starts_with("ad.")
+        || name.starts_with("m.")
+        || name.starts_with("v.")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{ArtifactSpec, ModelMeta};
+    use std::collections::BTreeMap;
+
+    fn dummy_spec() -> ArtifactSpec {
+        ArtifactSpec {
+            key: "k".into(),
+            kind: "sft".into(),
+            model: ModelMeta {
+                name: "nano".into(),
+                d_model: 8,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 16,
+                vocab: 272,
+                param_count: 0,
+            },
+            n: 2,
+            b: 1,
+            t: 8,
+            r_max: 4,
+            files: BTreeMap::new(),
+            io: BTreeMap::new(),
+        }
+    }
+
+    fn io(name: &str, shape: &[usize]) -> IoSpec {
+        IoSpec {
+            name: name.into(),
+            shape: shape.to_vec(),
+            dtype: DType::F32,
+        }
+    }
+
+    #[test]
+    fn adapter_a_padded_columns_zero() {
+        let spec = dummy_spec();
+        let mut rng = Pcg32::seeded(0);
+        let t = init_input(&io("ad.a_q", &[2, 2, 8, 4]), &spec, &[4, 2], &mut rng).unwrap();
+        let data = t.as_f32().unwrap();
+        // adapter 1 has rank 2: columns 2,3 must be zero
+        for li in 0..2 {
+            for ki in 0..8 {
+                for ri in 2..4 {
+                    let idx = ((li * 2 + 1) * 8 + ki) * 4 + ri;
+                    assert_eq!(data[idx], 0.0, "padded col not zero at {idx}");
+                }
+            }
+        }
+        // adapter 0 live columns mostly nonzero
+        let nz = (0..8).filter(|&ki| data[ki * 4] != 0.0).count();
+        assert!(nz > 4);
+    }
+
+    #[test]
+    fn b_and_opt_states_zero() {
+        let spec = dummy_spec();
+        let mut rng = Pcg32::seeded(0);
+        for name in ["ad.b_q", "m.a_q", "v.b_down"] {
+            let t = init_input(&io(name, &[2, 2, 4, 8]), &spec, &[4, 4], &mut rng).unwrap();
+            assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0), "{name}");
+        }
+    }
+
+    #[test]
+    fn rank_mask_matches_ranks() {
+        let spec = dummy_spec();
+        let mut rng = Pcg32::seeded(0);
+        let t = init_input(&io("rank_mask", &[2, 4]), &spec, &[3, 1], &mut rng).unwrap();
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 1.0, 1.0, 0.0, 1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn norms_ones_scale_two() {
+        let spec = dummy_spec();
+        let mut rng = Pcg32::seeded(0);
+        let t = init_input(&io("ln1", &[2, 8]), &spec, &[], &mut rng).unwrap();
+        assert!(t.as_f32().unwrap().iter().all(|&x| x == 1.0));
+        let s = init_input(&io("scale", &[2]), &spec, &[], &mut rng).unwrap();
+        assert_eq!(s.as_f32().unwrap(), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn state_input_classifier() {
+        for s in ["embed", "ad.a_q", "m.b_down", "rank_mask", "active"] {
+            assert!(is_state_input(s), "{s}");
+        }
+        for s in ["tokens", "targets", "lr", "t", "pos", "beta"] {
+            assert!(!is_state_input(s), "{s}");
+        }
+    }
+
+    #[test]
+    fn unknown_input_errors() {
+        let spec = dummy_spec();
+        let mut rng = Pcg32::seeded(0);
+        assert!(init_input(&io("mystery", &[2]), &spec, &[], &mut rng).is_err());
+    }
+}

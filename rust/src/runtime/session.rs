@@ -1,0 +1,534 @@
+//! Training session: owns the persistent device state (backbone, adapter
+//! stacks, optimizer moments) for one artifact variant and drives the
+//! compiled train/eval/decode steps.
+//!
+//! This is the L3 hot path: literals returned by one step are fed
+//! straight back into the next (no host re-materialization of unchanged
+//! state); only slot mutations (early-exit deactivation, job onloading)
+//! touch host memory.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::corpus::{Batch, PrefBatch};
+use crate::util::rng::Pcg32;
+
+use super::artifact::{ArtifactSpec, Manifest, StepIo};
+use super::client::{Executable, Runtime};
+use super::params::{init_input, is_state_input};
+use super::tensor::HostTensor;
+
+/// Build an i32 literal straight from a borrowed slice (hot path: avoids
+/// the Vec clone a HostTensor would need).
+fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Per-slot job control state.
+#[derive(Debug, Clone)]
+pub struct SlotState {
+    pub rank: usize,
+    pub lr: f32,
+    pub active: bool,
+}
+
+/// A live multi-adapter training session over one compiled variant.
+pub struct Session {
+    spec: ArtifactSpec,
+    train_exe: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+    decode_exe: Option<Arc<Executable>>,
+    io_train: StepIo,
+    io_eval: StepIo,
+    io_decode: Option<StepIo>,
+    /// name → literal for every state input (base, ad.*, m.*, v.*).
+    state: BTreeMap<String, xla::Literal>,
+    /// Cached control literals (lr/active/scale/rank_mask) — rebuilt only
+    /// when a slot mutates, not every step (hot-path optimization, see
+    /// EXPERIMENTS.md §Perf).
+    control_cache: BTreeMap<String, xla::Literal>,
+    slots: Vec<SlotState>,
+    step: u64,
+    /// DPO inverse-temperature (unused by SFT artifacts).
+    pub beta: f32,
+}
+
+impl Session {
+    /// Create a session: loads + compiles the artifact's steps, builds the
+    /// frozen backbone (seeded) and fresh adapter slots.
+    pub fn new(
+        rt: &Runtime,
+        manifest: &Manifest,
+        key: &str,
+        ranks: &[usize],
+        lrs: &[f64],
+        seed: u64,
+    ) -> Result<Session> {
+        let spec = manifest.get(key)?.clone();
+        if ranks.len() != spec.n || lrs.len() != spec.n {
+            bail!(
+                "artifact {key} hosts {} adapters, got {} ranks / {} lrs",
+                spec.n,
+                ranks.len(),
+                lrs.len()
+            );
+        }
+        if let Some(&r) = ranks.iter().find(|&&r| r > spec.r_max) {
+            bail!("rank {r} exceeds artifact r_max {}", spec.r_max);
+        }
+        let train_exe = rt.load_hlo(spec.hlo_path(&manifest.dir, "train")?)?;
+        let eval_exe = rt.load_hlo(spec.hlo_path(&manifest.dir, "eval")?)?;
+        let decode_exe = if spec.files.contains_key("decode") {
+            Some(rt.load_hlo(spec.hlo_path(&manifest.dir, "decode")?)?)
+        } else {
+            None
+        };
+        let io_train = spec.io.get("train").context("train io")?.clone();
+        let io_eval = spec.io.get("eval").context("eval io")?.clone();
+        let io_decode = spec.io.get("decode").cloned();
+
+        let mut rng = Pcg32::seeded(seed);
+        let mut state = BTreeMap::new();
+        for io in &io_train.inputs {
+            if is_state_input(&io.name)
+                && !matches!(io.name.as_str(), "rank_mask" | "scale" | "active")
+            {
+                let t = init_input(io, &spec, ranks, &mut rng)?;
+                state.insert(io.name.clone(), t.to_literal()?);
+            }
+        }
+        let slots = ranks
+            .iter()
+            .zip(lrs)
+            .map(|(&rank, &lr)| SlotState {
+                rank,
+                lr: lr as f32,
+                active: true,
+            })
+            .collect();
+        Ok(Session {
+            spec,
+            train_exe,
+            eval_exe,
+            decode_exe,
+            io_train,
+            io_eval,
+            io_decode,
+            state,
+            control_cache: BTreeMap::new(),
+            slots,
+            step: 0,
+            beta: 0.1,
+        })
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    pub fn slots(&self) -> &[SlotState] {
+        &self.slots
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.slots.iter().filter(|s| s.active).count()
+    }
+
+    /// Deactivate a slot (early exit): its parameters freeze in place and
+    /// its gradient contribution is masked out on-device.
+    pub fn set_active(&mut self, slot: usize, active: bool) {
+        self.slots[slot].active = active;
+        self.control_cache.clear();
+    }
+
+    pub fn set_lr(&mut self, slot: usize, lr: f64) {
+        self.slots[slot].lr = lr as f32;
+        self.control_cache.clear();
+    }
+
+    /// Onload a fresh job into `slot` (paper §5.2 candidate rotation):
+    /// re-initializes A (live columns), zeroes B and the AdamW moments for
+    /// that slot only, host-patching the stacked literals.
+    pub fn reset_slot(&mut self, slot: usize, rank: usize, lr: f64, seed: u64) -> Result<()> {
+        if rank > self.spec.r_max {
+            bail!("rank {rank} exceeds r_max {}", self.spec.r_max);
+        }
+        let mut rng = Pcg32::seeded(seed ^ 0x510f);
+        let names: Vec<String> = self.state.keys().cloned().collect();
+        for name in names {
+            if !(name.starts_with("ad.") || name.starts_with("m.") || name.starts_with("v.")) {
+                continue;
+            }
+            let io = self
+                .io_train
+                .inputs
+                .iter()
+                .find(|i| i.name == name)
+                .context("state io")?
+                .clone();
+            let lit = self.state.get(&name).unwrap();
+            let mut data = lit.to_vec::<f32>()?;
+            // shape [L, N, d0, d1]; zero the slot, then re-init A's live cols
+            let (l, n, d0, d1) = (io.shape[0], io.shape[1], io.shape[2], io.shape[3]);
+            for li in 0..l {
+                for x in 0..d0 {
+                    for y in 0..d1 {
+                        data[((li * n + slot) * d0 + x) * d1 + y] = 0.0;
+                    }
+                }
+            }
+            if name.starts_with("ad.a_") {
+                let std = 1.0 / (d0 as f64).sqrt();
+                for li in 0..l {
+                    for x in 0..d0 {
+                        for y in 0..rank.min(d1) {
+                            data[((li * n + slot) * d0 + x) * d1 + y] =
+                                (rng.normal() * std) as f32;
+                        }
+                    }
+                }
+            }
+            let t = HostTensor::f32(&io.shape, data)?;
+            self.state.insert(name, t.to_literal()?);
+        }
+        self.slots[slot] = SlotState {
+            rank,
+            lr: lr as f32,
+            active: true,
+        };
+        self.control_cache.clear();
+        Ok(())
+    }
+
+    /// Extract one slot's slice of a stacked [L, N, d0, d1] state tensor
+    /// (adapter checkpointing for warmup rotation).
+    pub fn slot_slice(&self, name: &str, slot: usize) -> Result<Vec<f32>> {
+        let io = self
+            .io_train
+            .inputs
+            .iter()
+            .find(|i| i.name == name)
+            .with_context(|| format!("no state tensor '{name}'"))?;
+        let lit = self.state.get(name).context("state literal")?;
+        let data = lit.to_vec::<f32>()?;
+        let (l, n, d0, d1) = (io.shape[0], io.shape[1], io.shape[2], io.shape[3]);
+        let mut out = Vec::with_capacity(l * d0 * d1);
+        for li in 0..l {
+            let base = (li * n + slot) * d0 * d1;
+            out.extend_from_slice(&data[base..base + d0 * d1]);
+        }
+        Ok(out)
+    }
+
+    /// Write one slot's slice back into a stacked state tensor.
+    pub fn write_slot_slice(&mut self, name: &str, slot: usize, slice: &[f32]) -> Result<()> {
+        let io = self
+            .io_train
+            .inputs
+            .iter()
+            .find(|i| i.name == name)
+            .with_context(|| format!("no state tensor '{name}'"))?
+            .clone();
+        let lit = self.state.get(name).context("state literal")?;
+        let mut data = lit.to_vec::<f32>()?;
+        let (l, n, d0, d1) = (io.shape[0], io.shape[1], io.shape[2], io.shape[3]);
+        if slice.len() != l * d0 * d1 {
+            bail!("slice len {} != {}", slice.len(), l * d0 * d1);
+        }
+        for li in 0..l {
+            let base = (li * n + slot) * d0 * d1;
+            data[base..base + d0 * d1]
+                .copy_from_slice(&slice[li * d0 * d1..(li + 1) * d0 * d1]);
+        }
+        let t = HostTensor::f32(&io.shape, data)?;
+        self.state.insert(name.to_string(), t.to_literal()?);
+        Ok(())
+    }
+
+    // -- control tensors -----------------------------------------------------
+
+    fn lr_vec(&self) -> Vec<f32> {
+        self.slots.iter().map(|s| s.lr).collect()
+    }
+
+    fn active_vec(&self) -> Vec<f32> {
+        self.slots
+            .iter()
+            .map(|s| if s.active { 1.0 } else { 0.0 })
+            .collect()
+    }
+
+    fn scale_vec(&self) -> Vec<f32> {
+        vec![2.0; self.spec.n] // α = 2r ⇒ α/r = 2 (paper §A.4)
+    }
+
+    fn rank_mask_vec(&self) -> Vec<f32> {
+        let r = self.spec.r_max;
+        let mut out = vec![0.0; self.spec.n * r];
+        for (i, s) in self.slots.iter().enumerate() {
+            for ri in 0..s.rank.min(r) {
+                out[i * r + ri] = 1.0;
+            }
+        }
+        out
+    }
+
+    /// Fetch a slot-dependent control literal through the cache (`t` is
+    /// excluded — it changes every step and is a cheap scalar).
+    fn cached_control(&mut self, name: &str, shape: &[usize]) -> Result<&xla::Literal> {
+        if !self.control_cache.contains_key(name) {
+            let lit = self.control_literal(name, shape)?;
+            self.control_cache.insert(name.to_string(), lit);
+        }
+        Ok(self.control_cache.get(name).unwrap())
+    }
+
+    fn control_literal(&self, name: &str, shape: &[usize]) -> Result<xla::Literal> {
+        let t = match name {
+            "lr" => HostTensor::f32(shape, self.lr_vec())?,
+            "active" => HostTensor::f32(shape, self.active_vec())?,
+            "scale" => HostTensor::f32(shape, self.scale_vec())?,
+            "rank_mask" => HostTensor::f32(shape, self.rank_mask_vec())?,
+            "t" => HostTensor::scalar_f32((self.step + 1) as f32),
+            "beta" => HostTensor::scalar_f32(self.beta),
+            other => bail!("unknown control input '{other}'"),
+        };
+        t.to_literal()
+    }
+
+    // -- steps ----------------------------------------------------------------
+
+    /// Assemble the input list for a step: per-call literals (data +
+    /// control) come from `extra`; persistent state is passed by
+    /// reference (never copied on the hot path).
+    fn gather<'a>(
+        &'a self,
+        io: &StepIo,
+        extra: &'a BTreeMap<String, xla::Literal>,
+    ) -> Result<Vec<&'a xla::Literal>> {
+        io.inputs
+            .iter()
+            .map(|spec| {
+                extra
+                    .get(&spec.name)
+                    .or_else(|| self.state.get(&spec.name))
+                    .or_else(|| self.control_cache.get(&spec.name))
+                    .with_context(|| format!("missing input '{}'", spec.name))
+            })
+            .collect()
+    }
+
+    /// One SFT optimizer step over all active slots; returns per-adapter
+    /// train losses.
+    pub fn train_step(&mut self, batch: &Batch) -> Result<Vec<f32>> {
+        self.check_batch(batch.n, batch.b, batch.t)?;
+        let io = self.io_train.clone();
+        let mut extra = BTreeMap::new();
+        for spec in &io.inputs {
+            match spec.name.as_str() {
+                "tokens" => {
+                    extra.insert(spec.name.clone(), lit_i32(&spec.shape, &batch.tokens)?);
+                }
+                "targets" => {
+                    extra.insert(spec.name.clone(), lit_i32(&spec.shape, &batch.targets)?);
+                }
+                "t" => {
+                    extra.insert(spec.name.clone(), self.control_literal("t", &spec.shape)?);
+                }
+                name if self.state.contains_key(name) => {}
+                name => {
+                    self.cached_control(name, &spec.shape)?;
+                }
+            }
+        }
+        let inputs = self.gather(&io, &extra)?;
+        let outputs = self.train_exe.run(&inputs)?;
+        self.absorb_outputs(&io, outputs)
+    }
+
+    /// One DPO optimizer step; returns (losses, reward accuracies).
+    pub fn dpo_step(&mut self, batch: &PrefBatch) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.check_batch(batch.n, batch.b, batch.t)?;
+        let io = self.io_train.clone();
+        let mut extra = BTreeMap::new();
+        for spec in &io.inputs {
+            let data: Option<&[i32]> = match spec.name.as_str() {
+                "tok_c" => Some(&batch.tok_c),
+                "tgt_c" => Some(&batch.tgt_c),
+                "tok_r" => Some(&batch.tok_r),
+                "tgt_r" => Some(&batch.tgt_r),
+                _ => None,
+            };
+            if let Some(d) = data {
+                extra.insert(spec.name.clone(), lit_i32(&spec.shape, d)?);
+            } else if matches!(spec.name.as_str(), "t" | "beta") {
+                extra.insert(
+                    spec.name.clone(),
+                    self.control_literal(&spec.name, &spec.shape)?,
+                );
+            } else if !self.state.contains_key(&spec.name) {
+                self.cached_control(&spec.name, &spec.shape)?;
+            }
+        }
+        let inputs = self.gather(&io, &extra)?;
+        let outputs = self.train_exe.run(&inputs)?;
+        // absorb state + read losses and reward_acc
+        let mut losses = vec![];
+        let mut acc = vec![];
+        for (spec, lit) in io.outputs.iter().zip(outputs) {
+            match spec.name.as_str() {
+                "losses" => losses = lit.to_vec::<f32>()?,
+                "reward_acc" => acc = lit.to_vec::<f32>()?,
+                _ => {
+                    self.state.insert(spec.name.clone(), lit);
+                }
+            }
+        }
+        self.step += 1;
+        Ok((losses, acc))
+    }
+
+    /// Validation losses for all slots (no state change).
+    pub fn eval(&self, batch: &Batch) -> Result<Vec<f32>> {
+        let io = self.io_eval.clone();
+        let mut extra = BTreeMap::new();
+        for spec in &io.inputs {
+            match spec.name.as_str() {
+                "tokens" => {
+                    extra.insert(
+                        spec.name.clone(),
+                        HostTensor::i32(&spec.shape, batch.tokens.clone())?.to_literal()?,
+                    );
+                }
+                "targets" => {
+                    extra.insert(
+                        spec.name.clone(),
+                        HostTensor::i32(&spec.shape, batch.targets.clone())?.to_literal()?,
+                    );
+                }
+                name if self.state.contains_key(name) => {}
+                name => {
+                    extra.insert(name.to_string(), self.control_literal(name, &spec.shape)?);
+                }
+            }
+        }
+        let inputs = self.gather(&io, &extra)?;
+        let outputs = self.eval_exe.run(&inputs)?;
+        Ok(outputs[0].to_vec::<f32>()?)
+    }
+
+    /// DPO validation: (losses, reward accuracies), no state change.
+    pub fn dpo_eval(&self, batch: &PrefBatch) -> Result<(Vec<f32>, Vec<f32>)> {
+        let io = self.io_eval.clone();
+        let mut extra = BTreeMap::new();
+        for spec in &io.inputs {
+            let data: Option<&[i32]> = match spec.name.as_str() {
+                "tok_c" => Some(&batch.tok_c),
+                "tgt_c" => Some(&batch.tgt_c),
+                "tok_r" => Some(&batch.tok_r),
+                "tgt_r" => Some(&batch.tgt_r),
+                _ => None,
+            };
+            if let Some(d) = data {
+                extra.insert(
+                    spec.name.clone(),
+                    HostTensor::i32(&spec.shape, d.to_vec())?.to_literal()?,
+                );
+            } else if !self.state.contains_key(&spec.name) {
+                extra.insert(
+                    spec.name.clone(),
+                    self.control_literal(&spec.name, &spec.shape)?,
+                );
+            }
+        }
+        let inputs = self.gather(&io, &extra)?;
+        let outputs = self.eval_exe.run(&inputs)?;
+        let mut losses = vec![];
+        let mut acc = vec![];
+        for (spec, lit) in io.outputs.iter().zip(outputs) {
+            match spec.name.as_str() {
+                "losses" => losses = lit.to_vec::<f32>()?,
+                "reward_acc" => acc = lit.to_vec::<f32>()?,
+                _ => {}
+            }
+        }
+        Ok((losses, acc))
+    }
+
+    /// Greedy next-token prediction for every (slot, sequence) at its own
+    /// position.  `tokens` is a full [N, B, T] buffer, `pos` is [N * B]
+    /// (per-sequence prompt lengths); returns [N * B] token ids.
+    pub fn decode_step(&self, tokens: &[i32], pos: &[i32]) -> Result<Vec<i32>> {
+        let exe = self.decode_exe.as_ref().context("artifact has no decode step")?;
+        let io = self.io_decode.clone().unwrap();
+        let mut extra = BTreeMap::new();
+        for spec in &io.inputs {
+            match spec.name.as_str() {
+                "tokens" => {
+                    extra.insert(
+                        spec.name.clone(),
+                        HostTensor::i32(&spec.shape, tokens.to_vec())?.to_literal()?,
+                    );
+                }
+                "pos" => {
+                    extra.insert(
+                        spec.name.clone(),
+                        HostTensor::i32(&spec.shape, pos.to_vec())?.to_literal()?,
+                    );
+                }
+                name if self.state.contains_key(name) => {}
+                name => {
+                    extra.insert(name.to_string(), self.control_literal(name, &spec.shape)?);
+                }
+            }
+        }
+        let inputs = self.gather(&io, &extra)?;
+        let outputs = exe.run(&inputs)?;
+        Ok(outputs[0].to_vec::<i32>()?)
+    }
+
+    // -- helpers ---------------------------------------------------------------
+
+    fn check_batch(&self, n: usize, b: usize, t: usize) -> Result<()> {
+        if (n, b, t) != (self.spec.n, self.spec.b, self.spec.t) {
+            bail!(
+                "batch [{n},{b},{t}] does not match artifact [{},{},{}]",
+                self.spec.n,
+                self.spec.b,
+                self.spec.t
+            );
+        }
+        Ok(())
+    }
+
+    fn absorb_outputs(
+        &mut self,
+        io: &StepIo,
+        outputs: Vec<xla::Literal>,
+    ) -> Result<Vec<f32>> {
+        let mut losses = vec![];
+        for (spec, lit) in io.outputs.iter().zip(outputs) {
+            if spec.name == "losses" {
+                losses = lit.to_vec::<f32>()?;
+            } else {
+                self.state.insert(spec.name.clone(), lit);
+            }
+        }
+        self.step += 1;
+        if losses.is_empty() {
+            bail!("train step returned no losses");
+        }
+        Ok(losses)
+    }
+}

@@ -1,0 +1,172 @@
+//! Host-side tensors and conversion to/from `xla::Literal` — the boundary
+//! between the coordinator's Rust state and the PJRT executables.
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of an artifact input/output (matches manifest dtypes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" | "f32" => Ok(DType::F32),
+            "int32" | "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// A host tensor with shape + typed data.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(dims: &[usize], data: Vec<f32>) -> Result<HostTensor> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {n} elements, got {}", dims, data.len());
+        }
+        Ok(HostTensor::F32 {
+            dims: dims.to_vec(),
+            data,
+        })
+    }
+
+    pub fn i32(dims: &[usize], data: Vec<i32>) -> Result<HostTensor> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {n} elements, got {}", dims, data.len());
+        }
+        Ok(HostTensor::I32 {
+            dims: dims.to_vec(),
+            data,
+        })
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32 {
+            dims: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::I32 {
+            dims: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { dims, .. } | HostTensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Convert to an XLA literal (host copy).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims_i64: Vec<i64> = self.dims().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { dims, data } => {
+                if dims.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(&dims_i64)?
+                }
+            }
+            HostTensor::I32 { dims, data } => {
+                if dims.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(&dims_i64)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Read back from an XLA literal of known dtype/shape.
+    pub fn from_literal(lit: &xla::Literal, dims: &[usize], dtype: DType) -> Result<HostTensor> {
+        match dtype {
+            DType::F32 => {
+                let data = lit.to_vec::<f32>().context("literal→f32")?;
+                HostTensor::f32(dims, data)
+            }
+            DType::I32 => {
+                let data = lit.to_vec::<i32>().context("literal→i32")?;
+                HostTensor::i32(dims, data)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checked() {
+        assert!(HostTensor::f32(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::f32(&[2, 3], vec![0.0; 5]).is_err());
+        assert!(HostTensor::i32(&[4], vec![1, 2, 3, 4]).is_ok());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("bfloat16").is_err());
+    }
+
+    #[test]
+    fn accessors() {
+        let t = HostTensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(t.dims(), &[2, 2]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dtype(), DType::F32);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+    }
+
+    // literal round-trips are covered by the integration tests (they need
+    // the PJRT runtime linked and an available CPU client)
+}

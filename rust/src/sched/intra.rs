@@ -1,0 +1,219 @@
+//! Online greedy intra-task scheduling (paper §7.1, §A.3): group jobs by
+//! per-adapter batch size, admit greedily in decreasing batch-size order
+//! against the fitted memory model, and backfill vacated slots preferring
+//! the same batch size.
+
+use std::collections::BTreeMap;
+
+use crate::config::HyperParams;
+use crate::coordinator::memory_model::MemoryModel;
+
+/// An admission decision for one executor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionPlan {
+    /// Indices (into the submitted job list) admitted, in order.
+    pub admitted: Vec<usize>,
+    /// Total batch after admission.
+    pub total_batch: usize,
+    /// Whether the plan mixes batch sizes (degraded mode, §A.3).
+    pub mixed: bool,
+}
+
+/// Group job indices by per-adapter batch size, descending batch size —
+/// the paper's homogeneous grouping, which also maximizes the bmm-based
+/// grouped backward (§A.1).
+pub fn group_by_batch(jobs: &[HyperParams]) -> Vec<(usize, Vec<usize>)> {
+    let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (i, j) in jobs.iter().enumerate() {
+        groups.entry(j.batch_size).or_default().push(i);
+    }
+    groups.into_iter().rev().collect()
+}
+
+/// Greedy admission (paper §A.3): admit jobs in decreasing batch-size
+/// order while M̂(B + b_new) stays inside the safety margin and slots
+/// remain.  Homogeneity preferred, not enforced: if `allow_mixed`, other
+/// batch sizes may fill leftover capacity.
+pub fn admit(
+    jobs: &[HyperParams],
+    mem: &MemoryModel,
+    max_slots: usize,
+    allow_mixed: bool,
+) -> AdmissionPlan {
+    let groups = group_by_batch(jobs);
+    let mut admitted = Vec::new();
+    let mut total_batch = 0usize;
+    let mut first_batch: Option<usize> = None;
+    let mut mixed = false;
+    for (bs, members) in groups {
+        if let Some(fb) = first_batch {
+            if bs != fb && !allow_mixed {
+                break;
+            }
+        }
+        for idx in members {
+            if admitted.len() >= max_slots {
+                break;
+            }
+            if !mem.fits(total_batch + bs) {
+                continue;
+            }
+            if let Some(fb) = first_batch {
+                if bs != fb {
+                    mixed = true;
+                }
+            } else {
+                first_batch = Some(bs);
+            }
+            admitted.push(idx);
+            total_batch += bs;
+        }
+    }
+    AdmissionPlan {
+        admitted,
+        total_batch,
+        mixed,
+    }
+}
+
+/// Backfill one vacated slot: prefer a pending job with the same batch
+/// size as the departing one; fall back to any fitting job if allowed.
+/// Returns the chosen pending index.
+pub fn backfill(
+    pending: &[HyperParams],
+    departing_batch: usize,
+    current_total_batch: usize,
+    mem: &MemoryModel,
+    allow_mixed: bool,
+) -> Option<usize> {
+    let fits = |b: usize| mem.fits(current_total_batch - departing_batch + b);
+    // same batch size first (preserves homogeneous packing)
+    if let Some(i) = pending
+        .iter()
+        .position(|j| j.batch_size == departing_batch && fits(j.batch_size))
+    {
+        return Some(i);
+    }
+    if allow_mixed {
+        // largest fitting batch size next (greedy, §A.3)
+        let mut best: Option<(usize, usize)> = None;
+        for (i, j) in pending.iter().enumerate() {
+            if fits(j.batch_size) {
+                match best {
+                    Some((_, bb)) if j.batch_size <= bb => {}
+                    _ => best = Some((i, j.batch_size)),
+                }
+            }
+        }
+        return best.map(|(i, _)| i);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hp(batch_size: usize) -> HyperParams {
+        HyperParams {
+            lr: 1e-4,
+            rank: 16,
+            batch_size,
+        }
+    }
+
+    fn mem(budget_batches: usize) -> MemoryModel {
+        // k0 = 0, k1·seq = 1 per unit batch → budget in "batch units"
+        MemoryModel {
+            k0: 0.0,
+            k1: 1.0,
+            seq_len: 1,
+            budget: budget_batches as f64,
+        }
+    }
+
+    #[test]
+    fn groups_sorted_descending() {
+        let jobs = vec![hp(1), hp(4), hp(2), hp(4), hp(1)];
+        let g = group_by_batch(&jobs);
+        let sizes: Vec<usize> = g.iter().map(|(b, _)| *b).collect();
+        assert_eq!(sizes, vec![4, 2, 1]);
+        assert_eq!(g[0].1, vec![1, 3]);
+    }
+
+    #[test]
+    fn admits_largest_batch_first_within_memory() {
+        let jobs = vec![hp(1), hp(8), hp(8), hp(4)];
+        let plan = admit(&jobs, &mem(16), 8, false);
+        // homogeneous: two b=8 jobs fill the 16-batch budget
+        assert_eq!(plan.admitted, vec![1, 2]);
+        assert_eq!(plan.total_batch, 16);
+        assert!(!plan.mixed);
+    }
+
+    #[test]
+    fn mixed_fills_leftover_capacity() {
+        let jobs = vec![hp(8), hp(8), hp(4), hp(2)];
+        let plan = admit(&jobs, &mem(14), 8, true);
+        // 8 admitted; second 8 doesn't fit; 4 then 2 fill to 14
+        assert_eq!(plan.total_batch, 14);
+        assert!(plan.mixed);
+        assert_eq!(plan.admitted, vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn slot_limit_respected() {
+        let jobs = vec![hp(1); 10];
+        let plan = admit(&jobs, &mem(100), 4, false);
+        assert_eq!(plan.admitted.len(), 4);
+    }
+
+    #[test]
+    fn backfill_prefers_same_batch() {
+        let pending = vec![hp(2), hp(4), hp(4)];
+        let pick = backfill(&pending, 4, 12, &mem(16), true);
+        assert_eq!(pick, Some(1));
+    }
+
+    #[test]
+    fn backfill_falls_back_to_mixed() {
+        let pending = vec![hp(2), hp(1)];
+        let pick = backfill(&pending, 4, 12, &mem(16), true);
+        assert_eq!(pick, Some(0)); // largest fitting
+        let none = backfill(&pending, 4, 12, &mem(16), false);
+        assert_eq!(none, None);
+    }
+
+    #[test]
+    fn backfill_respects_memory() {
+        let pending = vec![hp(8)];
+        // departing 1, current 16, budget 16 → 16-1+8 = 23 > 16
+        assert_eq!(backfill(&pending, 1, 16, &mem(16), true), None);
+    }
+
+    #[test]
+    fn admission_never_exceeds_memory_property() {
+        use crate::util::prop::{prop_assert, prop_check};
+        prop_check("admission fits memory + slots", 300, |g| {
+            let jobs: Vec<HyperParams> =
+                (0..g.usize(1..=24)).map(|_| hp(*g.choice(&[1, 2, 4, 8, 16]))).collect();
+            let budget = g.usize(1..=64);
+            let slots = g.usize(1..=8);
+            let m = mem(budget);
+            let plan = admit(&jobs, &m, slots, g.bool());
+            prop_assert(
+                plan.total_batch as f64 <= m.budget && plan.admitted.len() <= slots,
+                format!("plan {plan:?} budget {budget} slots {slots}"),
+            )?;
+            // admitted indices unique and in range
+            let mut seen = plan.admitted.clone();
+            seen.sort_unstable();
+            seen.dedup();
+            prop_assert(
+                seen.len() == plan.admitted.len()
+                    && plan.admitted.iter().all(|&i| i < jobs.len()),
+                "indices invalid",
+            )
+        });
+    }
+}

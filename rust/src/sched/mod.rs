@@ -1,0 +1,14 @@
+//! Hierarchical scheduling (paper §7): the exact inter-task makespan
+//! solver (CP-SAT replacement), the event-driven cluster scheduler, and
+//! the greedy intra-task admission/backfill policies.
+
+pub mod inter;
+pub mod intra;
+pub mod solver;
+
+pub use inter::{InterTaskScheduler, Policy};
+pub use intra::{admit, backfill, group_by_batch, AdmissionPlan};
+pub use solver::{
+    fcfs_schedule, lower_bound, lpt_schedule, sjf_schedule, solve, Placement, SchedTask,
+    Schedule,
+};

@@ -1,0 +1,130 @@
+//! Descriptive statistics for experiment reporting (mean/std/quantiles),
+//! replacing scipy/numpy on the Rust side.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p25: f64,
+    pub median: f64,
+    pub p75: f64,
+    pub max: f64,
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n−1 denominator).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+/// Linear-interpolated quantile, q in [0, 1].
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    Summary {
+        n: xs.len(),
+        mean: mean(xs),
+        std: std_dev(xs),
+        min: quantile(xs, 0.0),
+        p25: quantile(xs, 0.25),
+        median: quantile(xs, 0.5),
+        p75: quantile(xs, 0.75),
+        max: quantile(xs, 1.0),
+    }
+}
+
+pub fn argmin(xs: &[f64]) -> Option<usize> {
+    xs.iter()
+        .enumerate()
+        .filter(|(_, v)| !v.is_nan())
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+}
+
+pub fn argmax(xs: &[f64]) -> Option<usize> {
+    xs.iter()
+        .enumerate()
+        .filter(|(_, v)| !v.is_nan())
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_is_consistent() {
+        let xs: Vec<f64> = (1..=101).map(|i| i as f64).collect();
+        let s = summarize(&xs);
+        assert_eq!(s.n, 101);
+        assert_eq!(s.median, 51.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 101.0);
+        assert_eq!(s.p25, 26.0);
+        assert_eq!(s.p75, 76.0);
+    }
+
+    #[test]
+    fn arg_extrema() {
+        let xs = [3.0, 1.0, 2.0];
+        assert_eq!(argmin(&xs), Some(1));
+        assert_eq!(argmax(&xs), Some(0));
+        assert_eq!(argmin(&[]), None);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert!(mean(&[]).is_nan());
+        assert_eq!(std_dev(&[5.0]), 0.0);
+        assert_eq!(quantile(&[7.0], 0.5), 7.0);
+    }
+
+    #[test]
+    fn nan_skipped_in_argmin() {
+        let xs = [f64::NAN, 2.0, 1.0];
+        assert_eq!(argmin(&xs), Some(2));
+    }
+}

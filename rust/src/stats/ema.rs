@@ -1,0 +1,93 @@
+//! Exponential moving average — the paper's training-loss smoother
+//! (§5.1): `ℓ̂_t = α·ℓ_t + (1−α)·ℓ̂_{t−1}`.
+
+/// Streaming EMA.  The first observation initializes the average.
+#[derive(Debug, Clone)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Ema {
+        assert!(
+            (0.0..=1.0).contains(&alpha) && alpha > 0.0,
+            "alpha must be in (0, 1], got {alpha}"
+        );
+        Ema { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+}
+
+/// Smooth a whole series (used when replaying stored loss histories).
+pub fn ema_series(xs: &[f64], alpha: f64) -> Vec<f64> {
+    let mut e = Ema::new(alpha);
+    xs.iter().map(|&x| e.update(x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_value_passthrough() {
+        let mut e = Ema::new(0.3);
+        assert_eq!(e.update(5.0), 5.0);
+    }
+
+    #[test]
+    fn recurrence_matches_paper_formula() {
+        let mut e = Ema::new(0.25);
+        e.update(4.0);
+        let v = e.update(8.0);
+        assert!((v - (0.25 * 8.0 + 0.75 * 4.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_one_tracks_input() {
+        let mut e = Ema::new(1.0);
+        e.update(1.0);
+        assert_eq!(e.update(9.0), 9.0);
+    }
+
+    #[test]
+    fn converges_to_constant() {
+        let mut e = Ema::new(0.2);
+        for _ in 0..200 {
+            e.update(3.0);
+        }
+        assert!((e.value().unwrap() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn series_matches_streaming() {
+        let xs = [1.0, 2.0, 0.5, 3.0];
+        let s = ema_series(&xs, 0.4);
+        let mut e = Ema::new(0.4);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(s[i], e.update(x));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_alpha() {
+        Ema::new(0.0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Ordinary least-squares slope over a window — the paper's
+//! `linregSlope(ℓ[-w:])` divergence detector primitive (Algorithm 1).
+
+/// Slope of the OLS fit of `ys` against x = 0..n-1.
+/// Returns 0.0 for fewer than 2 points (no trend information).
+pub fn slope(ys: &[f64]) -> f64 {
+    let n = ys.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    let mean_x = (nf - 1.0) / 2.0;
+    let mean_y = ys.iter().sum::<f64>() / nf;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (i, &y) in ys.iter().enumerate() {
+        let dx = i as f64 - mean_x;
+        num += dx * (y - mean_y);
+        den += dx * dx;
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+/// Slope over the most recent `w` values (`linregSlope(xs[-w:])`).
+pub fn slope_tail(ys: &[f64], w: usize) -> f64 {
+    let start = ys.len().saturating_sub(w);
+    slope(&ys[start..])
+}
+
+/// Full OLS fit y = a + b·x over arbitrary x — used by the memory model
+/// M̂(B) = k0 + k1·B·L (paper §A.3).  Returns (intercept, slope).
+pub fn fit_xy(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        den += (x - mx) * (x - mx);
+    }
+    let b = if den == 0.0 { 0.0 } else { num / den };
+    (my - b * mx, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line() {
+        let ys: Vec<f64> = (0..10).map(|i| 3.0 + 2.0 * i as f64).collect();
+        assert!((slope(&ys) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn negative_slope() {
+        let ys: Vec<f64> = (0..5).map(|i| 10.0 - 0.5 * i as f64).collect();
+        assert!((slope(&ys) + 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_series_zero() {
+        assert_eq!(slope(&[4.0; 8]), 0.0);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(slope(&[]), 0.0);
+        assert_eq!(slope(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn tail_window() {
+        // flat then rising: tail slope over last 3 sees the rise
+        let ys = [1.0, 1.0, 1.0, 1.0, 2.0, 3.0, 4.0];
+        assert!(slope_tail(&ys, 3) > 0.9);
+        assert!(slope(&ys) > 0.0);
+        // window larger than series = full series
+        assert_eq!(slope_tail(&ys, 100), slope(&ys));
+    }
+
+    #[test]
+    fn fit_xy_recovers_line() {
+        let xs: Vec<f64> = vec![1.0, 2.0, 4.0, 8.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 0.5 + 3.0 * x).collect();
+        let (a, b) = fit_xy(&xs, &ys);
+        assert!((a - 0.5).abs() < 1e-9);
+        assert!((b - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fit_xy_noise_robust() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        // deterministic "noise"
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| 2.0 + 0.1 * x + 0.01 * (x * 7.0).sin())
+            .collect();
+        let (a, b) = fit_xy(&xs, &ys);
+        assert!((b - 0.1).abs() < 1e-3, "b={b}");
+        assert!((a - 2.0).abs() < 0.05, "a={a}");
+    }
+}

@@ -1,0 +1,12 @@
+//! Statistics primitives used by the early-exit detectors (EMA, OLS slope)
+//! and the evaluation harness (Spearman ρ, summaries).
+
+pub mod describe;
+pub mod ema;
+pub mod linreg;
+pub mod spearman;
+
+pub use describe::{argmax, argmin, mean, quantile, std_dev, summarize, Summary};
+pub use ema::{ema_series, Ema};
+pub use linreg::{fit_xy, slope, slope_tail};
+pub use spearman::{best_in_topk, pearson, ranks, spearman, topk_coverage};

@@ -1,0 +1,146 @@
+//! Spearman rank correlation (ties handled by average ranks) — used for
+//! the warmup-vs-final loss correlation analysis (paper Fig. 7 / Fig. 16).
+
+/// Average ranks (1-based); ties share the mean of their positions.
+pub fn ranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut out = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            out[k] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Pearson correlation.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        0.0
+    } else {
+        sxy / (sxx * syy).sqrt()
+    }
+}
+
+/// Spearman ρ = Pearson over average ranks.
+pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    pearson(&ranks(xs), &ranks(ys))
+}
+
+/// Fraction of the true bottom-q quantile (by `final_vals`, lower=better)
+/// that is captured by the predicted bottom-q (by `early_vals`) — the
+/// paper's "top-25% coverage" metric (Fig. 16 middle).
+pub fn topk_coverage(early_vals: &[f64], final_vals: &[f64], q: f64) -> f64 {
+    let n = early_vals.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let k = ((n as f64 * q).ceil() as usize).clamp(1, n);
+    let bottom = |vals: &[f64]| -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| vals[a].partial_cmp(&vals[b]).unwrap());
+        idx.truncate(k);
+        idx
+    };
+    let pred = bottom(early_vals);
+    let truth = bottom(final_vals);
+    let hit = truth.iter().filter(|t| pred.contains(t)).count();
+    hit as f64 / k as f64
+}
+
+/// Whether the single best (lowest final) config is inside the predicted
+/// bottom-q set (Fig. 16 right).
+pub fn best_in_topk(early_vals: &[f64], final_vals: &[f64], q: f64) -> bool {
+    let n = final_vals.len();
+    if n == 0 {
+        return false;
+    }
+    let k = ((n as f64 * q).ceil() as usize).clamp(1, n);
+    let best = final_vals
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| early_vals[a].partial_cmp(&early_vals[b]).unwrap());
+    idx[..k].contains(&best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_monotone() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [10.0, 20.0, 30.0, 40.0];
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+        let yrev = [40.0, 30.0, 20.0, 10.0];
+        assert!((spearman(&x, &yrev) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nonlinear_monotone_still_one() {
+        let x: [f64; 5] = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let y: Vec<f64> = x.iter().map(|v| v.exp()).collect();
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ties_average() {
+        let r = ranks(&[3.0, 1.0, 3.0]);
+        assert_eq!(r, vec![2.5, 1.0, 2.5]);
+    }
+
+    #[test]
+    fn independent_near_zero() {
+        let x: Vec<f64> = (0..200).map(|i| ((i * 37) % 101) as f64).collect();
+        let y: Vec<f64> = (0..200).map(|i| ((i * 53) % 97) as f64).collect();
+        assert!(spearman(&x, &y).abs() < 0.2);
+    }
+
+    #[test]
+    fn coverage_perfect_predictor() {
+        let fin = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8];
+        assert_eq!(topk_coverage(&fin, &fin, 0.25), 1.0);
+        assert!(best_in_topk(&fin, &fin, 0.25));
+    }
+
+    #[test]
+    fn coverage_inverted_predictor() {
+        let fin = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8];
+        let early: Vec<f64> = fin.iter().map(|v| -v).collect();
+        assert_eq!(topk_coverage(&early, &fin, 0.25), 0.0);
+        assert!(!best_in_topk(&early, &fin, 0.25));
+    }
+
+    #[test]
+    fn constant_series_zero_rho() {
+        assert_eq!(spearman(&[1.0; 5], &[1.0, 2.0, 3.0, 4.0, 5.0]), 0.0);
+    }
+}

@@ -1,0 +1,104 @@
+//! Simulator calibration: measure real CPU-PJRT step times and derive the
+//! host's effective GFLOPs, anchoring the cluster model's absolute scale
+//! (the speedup *ratios* are hardware-parametric; calibration pins the
+//! time axis — DESIGN.md §3, EXPERIMENTS.md records the constants).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::executor::{Backend, XlaBackend};
+use crate::data::corpus::Corpus;
+use crate::runtime::{Manifest, Runtime};
+
+/// Measured host characteristics.
+#[derive(Debug, Clone, Copy)]
+pub struct Calibration {
+    pub step_seconds: f64,
+    pub model_flops_per_step: f64,
+    pub effective_gflops: f64,
+}
+
+/// Analytic train-step FLOPs for an artifact (3 × fwd over N·B·T tokens).
+pub fn step_flops(manifest: &Manifest, key: &str) -> Result<f64> {
+    let spec = manifest.get(key)?;
+    let m = &spec.model;
+    let d = m.d_model as f64;
+    let f = m.d_ff as f64;
+    let l = m.n_layers as f64;
+    let v = m.vocab as f64;
+    let per_tok_fwd = l * (4.0 * 2.0 * d * d + 2.0 * 3.0 * d * f) + 2.0 * v * d;
+    let tokens = (spec.n * spec.b * spec.t) as f64;
+    Ok(3.0 * per_tok_fwd * tokens)
+}
+
+/// Run `steps` real steps (after one warmup) and report the averaged step
+/// time + the host's effective throughput on this workload.
+pub fn calibrate_step_time(
+    rt: &Runtime,
+    manifest: &Manifest,
+    artifact_key: &str,
+    corpus: Corpus,
+    steps: usize,
+) -> Result<Calibration> {
+    let spec = manifest.get(artifact_key)?.clone();
+    let mut backend = XlaBackend::new_sft(rt, manifest, artifact_key, corpus, 0)?;
+    for slot in 0..spec.n {
+        backend.onload(
+            slot,
+            &crate::config::HyperParams {
+                lr: 1e-3,
+                rank: spec.r_max.min(8),
+                batch_size: spec.b,
+            },
+            steps,
+            slot as u64,
+        )?;
+    }
+    backend.step()?; // compile/warmup step excluded from timing
+    let start = Instant::now();
+    for _ in 0..steps.max(1) {
+        backend.step()?;
+    }
+    let step_seconds = start.elapsed().as_secs_f64() / steps.max(1) as f64;
+    let flops = step_flops(manifest, artifact_key)?;
+    Ok(Calibration {
+        step_seconds,
+        model_flops_per_step: flops,
+        effective_gflops: flops / step_seconds / 1e9,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_flops_formula_scales() {
+        // pure arithmetic check against the nano shape: positive +
+        // linear in tokens
+        use crate::util::json::Json;
+        let mj = r#"{
+          "version":1,"vocab":272,"pad_id":256,"bos_id":257,"eos_id":258,
+          "sep_id":259,
+          "artifacts":{
+            "a":{"kind":"sft","model":{"name":"nano","d_model":64,
+              "n_layers":2,"n_heads":4,"d_ff":176,"vocab":272,
+              "param_count":1},
+              "n":4,"b":2,"t":32,"r_max":8,"files":{},"io":{}},
+            "b":{"kind":"sft","model":{"name":"nano","d_model":64,
+              "n_layers":2,"n_heads":4,"d_ff":176,"vocab":272,
+              "param_count":1},
+              "n":4,"b":4,"t":32,"r_max":8,"files":{},"io":{}}
+          }}"#;
+        let m = crate::runtime::Manifest::from_json(
+            &Json::parse(mj).unwrap(),
+            std::path::PathBuf::from("/tmp"),
+        )
+        .unwrap();
+        let fa = step_flops(&m, "a").unwrap();
+        let fb = step_flops(&m, "b").unwrap();
+        assert!(fa > 0.0);
+        assert!((fb / fa - 2.0).abs() < 1e-9, "flops linear in batch");
+    }
+}

@@ -1,0 +1,11 @@
+//! Real-training drivers over the PJRT runtime: hyperparameter sweeps,
+//! downstream accuracy evaluation, and calibration of the simulator
+//! against measured step times.
+
+pub mod accuracy;
+pub mod calibrate;
+pub mod sweep;
+
+pub use accuracy::gsm_accuracy;
+pub use calibrate::{calibrate_step_time, Calibration};
+pub use sweep::{collect_full_trajectories, run_real_sweep, SweepOutcome, TrajectoryRecord};

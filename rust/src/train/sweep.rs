@@ -1,0 +1,101 @@
+//! Real hyperparameter sweeps over the PJRT backend — the measured
+//! counterpart of the trajsim experiments (Fig 1/3/7/10/14 analogs run on
+//! the tiny family with real training).
+
+use anyhow::{Context, Result};
+
+use crate::config::HyperParams;
+use crate::coordinator::executor::XlaBackend;
+use crate::coordinator::job::Job;
+use crate::coordinator::task_runner::{run_task, RunConfig, TaskResult};
+use crate::data::corpus::Corpus;
+use crate::runtime::{Manifest, Runtime};
+
+/// Outcome of one real sweep over one batch-size group.
+pub struct SweepOutcome {
+    pub result: TaskResult,
+    /// Validation-loss trajectory per job: (step, val) pairs.
+    pub backend: XlaBackend,
+}
+
+/// Run a real sweep of `configs` (all sharing the artifact's batch size)
+/// for `steps_per_job` steps each, with or without early exit.
+#[allow(clippy::too_many_arguments)]
+pub fn run_real_sweep(
+    rt: &Runtime,
+    manifest: &Manifest,
+    artifact_key: &str,
+    corpus: Corpus,
+    configs: &[HyperParams],
+    steps_per_job: usize,
+    cfg: &RunConfig,
+    seed: u64,
+) -> Result<SweepOutcome> {
+    let spec = manifest.get(artifact_key)?.clone();
+    for c in configs {
+        anyhow::ensure!(
+            c.batch_size == spec.b,
+            "config batch {} != artifact batch {} — group jobs first",
+            c.batch_size,
+            spec.b
+        );
+        anyhow::ensure!(c.rank <= spec.r_max, "rank {} > r_max", c.rank);
+    }
+    let jobs: Vec<Job> = configs
+        .iter()
+        .enumerate()
+        .map(|(i, hp)| Job::new(i, hp.clone(), steps_per_job, seed.wrapping_add(i as u64)))
+        .collect();
+    let mut backend = XlaBackend::new_sft(rt, manifest, artifact_key, corpus, seed ^ 0xda7a)?;
+    let result = run_task(&mut backend, jobs, cfg).context("real sweep")?;
+    Ok(SweepOutcome { result, backend })
+}
+
+/// Record of a full (no-early-exit) reference trajectory per config —
+/// used by the warmup-correlation analysis (Fig 7/16): val loss at every
+/// eval step plus the final best.
+pub struct TrajectoryRecord {
+    pub hp: HyperParams,
+    pub vals: Vec<(usize, f64)>,
+    pub best_val: f64,
+}
+
+/// Run every config to completion (detectors off) and collect full
+/// trajectories.
+pub fn collect_full_trajectories(
+    rt: &Runtime,
+    manifest: &Manifest,
+    artifact_key: &str,
+    corpus: Corpus,
+    configs: &[HyperParams],
+    steps_per_job: usize,
+    eval_every: usize,
+    seed: u64,
+) -> Result<Vec<TrajectoryRecord>> {
+    let cfg = RunConfig {
+        enable_early_exit: false,
+        enable_warmup_selection: false,
+        eval_every,
+        ..RunConfig::default()
+    };
+    let out = run_real_sweep(
+        rt,
+        manifest,
+        artifact_key,
+        corpus,
+        configs,
+        steps_per_job,
+        &cfg,
+        seed,
+    )?;
+    Ok(out
+        .result
+        .jobs
+        .into_iter()
+        .map(|j| TrajectoryRecord {
+            hp: j.hp.clone(),
+            vals: j.val_losses.clone(),
+            best_val: j.best_val,
+        })
+        .collect())
+}

@@ -1,0 +1,143 @@
+//! Tiny CLI argument parser (substrate: clap is unavailable offline).
+//!
+//! Grammar: `prog <subcommand> [--flag] [--key value] [positional...]`.
+//! Every binary (main CLI, examples, benches) parses through this so flag
+//! handling is uniform and `--help` text is generated consistently.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding argv[0]).  `flag_names` lists options that
+    /// take no value; everything else starting with `--` consumes one.
+    pub fn parse(argv: &[String], flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else if let Some(v) = it.peek() {
+                    out.options.insert(name.to_string(), (*v).clone());
+                    it.next();
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg.clone());
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        out
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv, flag_names)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list: `--ranks 16,32,64`.
+    pub fn get_list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.get_list(name) {
+            Some(items) => items
+                .iter()
+                .filter_map(|s| s.parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get_list(name) {
+            Some(items) => items
+                .iter()
+                .filter_map(|s| s.parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(&argv("run --gpus 8 --verbose task1 task2"),
+                            &["verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("gpus"), Some("8"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["task1", "task2"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&argv("sweep --lr=0.001"), &[]);
+        assert_eq!(a.get_f64("lr", 0.0), 0.001);
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = Args::parse(&argv("x --ranks 16,32,64"), &[]);
+        assert_eq!(a.get_usize_list("ranks", &[]), vec![16, 32, 64]);
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert_eq!(a.get_or("absent", "d"), "d");
+    }
+
+    #[test]
+    fn trailing_valueless_option_becomes_flag() {
+        let a = Args::parse(&argv("cmd --dry-run"), &[]);
+        assert!(a.has_flag("dry-run"));
+    }
+}

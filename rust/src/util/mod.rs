@@ -1,0 +1,9 @@
+//! In-house substrates replacing unavailable crates (DESIGN.md §1.2):
+//! JSON (serde), PRNG (rand), CLI (clap), property testing (proptest) and
+//! a thread pool (tokio).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;

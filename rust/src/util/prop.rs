@@ -1,0 +1,171 @@
+//! Property-testing harness with shrinking (substrate: proptest is
+//! unavailable offline).
+//!
+//! Usage:
+//! ```ignore
+//! prop_check("admission never exceeds memory", 200, |g| {
+//!     let jobs = g.vec(1..=32, |g| g.usize(1..=8));
+//!     let plan = admit(&jobs);
+//!     prop_assert(plan.fits(), format!("{plan:?}"))
+//! });
+//! ```
+//! On failure the harness re-runs the failing case with progressively
+//! simpler inputs (halving sizes via seed replay) and always prints the
+//! seed so any case replays exactly.
+
+use super::rng::Pcg32;
+
+/// Generator handle passed to the property body.
+pub struct Gen {
+    rng: Pcg32,
+    /// Size budget in [0,1]; shrinking lowers it so ranges collapse toward
+    /// their minimum — replaying the same seed with a smaller budget yields
+    /// a structurally simpler case.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Gen {
+        Gen {
+            rng: Pcg32::seeded(seed),
+            size,
+        }
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+
+    /// Integer in an inclusive range, biased smaller as `size` shrinks.
+    pub fn usize(&mut self, range: std::ops::RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        let span = ((hi - lo) as f64 * self.size).round() as usize;
+        self.rng.range_usize(lo, lo + span)
+    }
+
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        let span = ((hi - lo) as f64 * self.size).round() as i64;
+        self.rng.range_i64(lo, lo + span)
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, lo + (hi - lo) * self.size.max(0.01))
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool_with(0.5)
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let n = ((xs.len() as f64 * self.size).ceil() as usize)
+            .clamp(1, xs.len());
+        &xs[self.rng.below(n as u64) as usize]
+    }
+
+    pub fn vec<T>(
+        &mut self,
+        len: std::ops::RangeInclusive<usize>,
+        mut f: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
+        let n = self.usize(len);
+        (0..n).map(|_| f(self)).collect()
+    }
+}
+
+/// Result of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `cases` random cases; on failure shrink by replaying the failing
+/// seed at smaller size budgets and report the smallest reproduction.
+/// Panics (test failure) with seed + message.
+pub fn prop_check(name: &str, cases: u64, body: impl Fn(&mut Gen) -> PropResult) {
+    // Base seed is stable per property name so failures reproduce across
+    // runs; override with PROP_SEED for exploration.
+    let base = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| fnv1a(name.as_bytes()));
+    for i in 0..cases {
+        let seed = base.wrapping_add(i).wrapping_mul(0x9e3779b97f4a7c15);
+        let mut g = Gen::new(seed, 1.0);
+        if let Err(msg) = body(&mut g) {
+            // shrink: same seed, smaller size budgets
+            let mut best = (1.0, msg);
+            for step in 1..=8 {
+                let size = 1.0 - step as f64 / 8.0;
+                let mut g = Gen::new(seed, size.max(0.0));
+                if let Err(m) = body(&mut g) {
+                    best = (size, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed}, shrunk size={:.2}):\n{}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        prop_check("sum is commutative", 100, |g| {
+            let a = g.i64(-1000, 1000);
+            let b = g.i64(-1000, 1000);
+            prop_assert(a + b == b + a, "commutativity")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        prop_check("always fails", 10, |g| {
+            let v = g.usize(0..=10);
+            prop_assert(v > 100, format!("v={v}"))
+        });
+    }
+
+    #[test]
+    fn shrinking_reduces_size() {
+        // A property failing only for vecs longer than 4: the shrunk case
+        // reported should still fail, proving replay determinism.
+        let result = std::panic::catch_unwind(|| {
+            prop_check("len<=4", 50, |g| {
+                let v = g.vec(0..=64, |g| g.bool());
+                prop_assert(v.len() <= 4, format!("len={}", v.len()))
+            });
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn gen_respects_ranges() {
+        let mut g = Gen::new(1, 1.0);
+        for _ in 0..100 {
+            let v = g.usize(3..=9);
+            assert!((3..=9).contains(&v));
+            let f = g.f64(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+    }
+}

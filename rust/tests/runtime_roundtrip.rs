@@ -1,0 +1,194 @@
+//! Integration: the full L2→L3 bridge.  Loads the AOT artifacts, runs real
+//! multi-adapter training steps through PJRT, and checks that losses
+//! behave like training (decrease for sane lrs, stay put for inactive
+//! slots, etc.).
+//!
+//! Requires `make artifacts` (preset `test` or wider).  Skips (with a loud
+//! message) if artifacts are missing so plain `cargo test` stays green in
+//! a fresh checkout.
+
+use alto::data::corpus::{Corpus, PrefCorpus};
+use alto::runtime::{Manifest, Runtime, Session};
+
+fn manifest_or_skip() -> Option<(Runtime, Manifest)> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts/manifest.json — run `make artifacts`");
+        return None;
+    }
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let m = Manifest::load(&dir).expect("manifest");
+    Some((rt, m))
+}
+
+const SFT_KEY: &str = "sft_nano_n4_b2_t32_r8";
+const DPO_KEY: &str = "dpo_nano_n2_b2_t32_r8";
+
+#[test]
+fn sft_training_reduces_loss() {
+    let Some((rt, m)) = manifest_or_skip() else { return };
+    let spec = m.get(SFT_KEY).expect("test artifact").clone();
+    let ranks = vec![8, 8, 4, 2];
+    let lrs = vec![5e-3, 1e-3, 5e-3, 5e-3];
+    let mut sess = Session::new(&rt, &m, SFT_KEY, &ranks, &lrs, 42).unwrap();
+    let corpus = Corpus::build("gsm-syn", 256, 16, spec.t, 7).unwrap();
+
+    let mut first = vec![];
+    let mut last = vec![];
+    for step in 0..40u64 {
+        let batch = corpus.train_batch(spec.n, spec.b, step, 1);
+        let losses = sess.train_step(&batch).unwrap();
+        assert_eq!(losses.len(), spec.n);
+        assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+        if step == 0 {
+            first = losses.clone();
+        }
+        last = losses;
+    }
+    for i in 0..spec.n {
+        assert!(
+            last[i] < first[i],
+            "adapter {i}: loss did not drop ({} -> {})",
+            first[i],
+            last[i]
+        );
+    }
+    assert_eq!(sess.step_count(), 40);
+}
+
+#[test]
+fn eval_is_pure_and_comparable() {
+    let Some((rt, m)) = manifest_or_skip() else { return };
+    let spec = m.get(SFT_KEY).unwrap().clone();
+    let ranks = vec![8; 4];
+    let lrs = vec![2e-3; 4];
+    let mut sess = Session::new(&rt, &m, SFT_KEY, &ranks, &lrs, 1).unwrap();
+    let corpus = Corpus::build("gsm-syn", 128, 8, spec.t, 3).unwrap();
+    let vb = corpus.val_batch(spec.n, spec.b);
+    let v1 = sess.eval(&vb).unwrap();
+    let v2 = sess.eval(&vb).unwrap();
+    assert_eq!(v1, v2, "eval must be deterministic / side-effect free");
+    // all adapters identical at init except A's random draw: losses close
+    let spread = v1.iter().cloned().fold(f64::MIN, |a, b| a.max(b as f64))
+        - v1.iter().cloned().fold(f64::MAX, |a, b| a.min(b as f64));
+    assert!(spread < 0.5, "fresh adapters should eval similarly: {v1:?}");
+    // training changes eval
+    for s in 0..10 {
+        let b = corpus.train_batch(spec.n, spec.b, s, 9);
+        sess.train_step(&b).unwrap();
+    }
+    let v3 = sess.eval(&vb).unwrap();
+    assert_ne!(v1, v3);
+}
+
+#[test]
+fn inactive_slot_is_frozen() {
+    let Some((rt, m)) = manifest_or_skip() else { return };
+    let spec = m.get(SFT_KEY).unwrap().clone();
+    let mut sess =
+        Session::new(&rt, &m, SFT_KEY, &[8; 4], &[5e-3; 4], 5).unwrap();
+    let corpus = Corpus::build("gsm-syn", 128, 8, spec.t, 3).unwrap();
+    let vb = corpus.val_batch(spec.n, spec.b);
+    // deactivate slot 2, train, its val loss must not move
+    sess.set_active(2, false);
+    let before = sess.eval(&vb).unwrap();
+    for s in 0..8 {
+        let b = corpus.train_batch(spec.n, spec.b, s, 11);
+        sess.train_step(&b).unwrap();
+    }
+    let after = sess.eval(&vb).unwrap();
+    assert!(
+        (before[2] - after[2]).abs() < 1e-5,
+        "frozen slot moved: {} -> {}",
+        before[2],
+        after[2]
+    );
+    // active slots moved
+    assert!((before[0] - after[0]).abs() > 1e-5);
+}
+
+#[test]
+fn reset_slot_onloads_fresh_job() {
+    let Some((rt, m)) = manifest_or_skip() else { return };
+    let spec = m.get(SFT_KEY).unwrap().clone();
+    let mut sess =
+        Session::new(&rt, &m, SFT_KEY, &[8; 4], &[5e-3; 4], 5).unwrap();
+    let corpus = Corpus::build("gsm-syn", 128, 8, spec.t, 3).unwrap();
+    let vb = corpus.val_batch(spec.n, spec.b);
+    for s in 0..10 {
+        let b = corpus.train_batch(spec.n, spec.b, s, 13);
+        sess.train_step(&b).unwrap();
+    }
+    let trained = sess.eval(&vb).unwrap();
+    sess.reset_slot(1, 4, 1e-3, 99).unwrap();
+    let reset = sess.eval(&vb).unwrap();
+    // slot 1 back to (near) init loss: higher than its trained loss
+    assert!(
+        reset[1] > trained[1],
+        "reset slot should lose training progress: {} vs {}",
+        reset[1],
+        trained[1]
+    );
+    // other slots untouched
+    assert!((reset[0] - trained[0]).abs() < 1e-5);
+    assert!((reset[3] - trained[3]).abs() < 1e-5);
+    assert_eq!(sess.slots()[1].rank, 4);
+}
+
+#[test]
+fn decode_produces_valid_tokens() {
+    let Some((rt, m)) = manifest_or_skip() else { return };
+    let spec = m.get(SFT_KEY).unwrap().clone();
+    let sess = Session::new(&rt, &m, SFT_KEY, &[8; 4], &[2e-3; 4], 5).unwrap();
+    let corpus = Corpus::build("gsm-syn", 64, 8, spec.t, 3).unwrap();
+    let batch = corpus.val_batch(spec.n, spec.b);
+    let pos = vec![10i32; spec.n * spec.b];
+    let next = sess.decode_step(&batch.tokens, &pos).unwrap();
+    assert_eq!(next.len(), spec.n * spec.b);
+    assert!(next
+        .iter()
+        .all(|&t| (0..m.vocab as i32).contains(&t)), "{next:?}");
+}
+
+#[test]
+fn dpo_training_improves_reward_accuracy() {
+    let Some((rt, m)) = manifest_or_skip() else { return };
+    let spec = m.get(DPO_KEY).expect("dpo artifact").clone();
+    let mut sess =
+        Session::new(&rt, &m, DPO_KEY, &[8, 4], &[5e-3, 2e-3], 17).unwrap();
+    let pc = PrefCorpus::build(128, spec.t, 3);
+    let vb = pc.val_batch(spec.n, spec.b);
+    let (l0, _a0) = sess.dpo_eval(&vb).unwrap();
+    let mut last_losses = vec![];
+    for s in 0..30 {
+        let b = pc.train_batch(spec.n, spec.b, s, 23);
+        let (losses, acc) = sess.dpo_step(&b).unwrap();
+        assert_eq!(losses.len(), spec.n);
+        assert_eq!(acc.len(), spec.n);
+        last_losses = losses;
+    }
+    let (l1, _a1) = sess.dpo_eval(&vb).unwrap();
+    // DPO loss starts at ln 2 and must drop for at least one adapter
+    assert!(l0.iter().all(|&l| (l - 0.6931).abs() < 0.05),
+            "DPO loss should start at ln2: {l0:?}");
+    assert!(
+        l1.iter().zip(&l0).any(|(a, b)| a < b),
+        "val loss should improve: {l0:?} -> {l1:?}"
+    );
+    assert!(last_losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn session_rejects_bad_shapes() {
+    let Some((rt, m)) = manifest_or_skip() else { return };
+    // wrong number of ranks
+    assert!(Session::new(&rt, &m, SFT_KEY, &[8; 3], &[1e-3; 3], 0).is_err());
+    // rank exceeding r_max
+    assert!(Session::new(&rt, &m, SFT_KEY, &[16; 4], &[1e-3; 4], 0).is_err());
+    // wrong batch shape
+    let spec = m.get(SFT_KEY).unwrap().clone();
+    let mut sess = Session::new(&rt, &m, SFT_KEY, &[8; 4], &[1e-3; 4], 0).unwrap();
+    let corpus = Corpus::build("gsm-syn", 64, 8, spec.t, 3).unwrap();
+    let bad = corpus.train_batch(spec.n, spec.b + 1, 0, 0);
+    assert!(sess.train_step(&bad).is_err());
+}

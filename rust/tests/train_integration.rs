@@ -1,0 +1,129 @@
+//! Integration over the `train` module: real sweeps with early exit,
+//! warmup-trajectory collection, decode-based accuracy evaluation and
+//! calibration — the measured halves of the Fig 1/7/10 analogs.
+//! Skips when artifacts are missing.
+
+use alto::config::HyperParams;
+use alto::coordinator::task_runner::RunConfig;
+use alto::data::corpus::Corpus;
+use alto::runtime::{Manifest, Runtime};
+use alto::stats::spearman;
+use alto::train::{
+    calibrate_step_time, collect_full_trajectories, gsm_accuracy, run_real_sweep,
+};
+
+const KEY: &str = "sft_nano_n4_b2_t32_r8";
+
+fn env_or_skip() -> Option<(Runtime, Manifest)> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return None;
+    }
+    Some((Runtime::cpu().unwrap(), Manifest::load(dir).unwrap()))
+}
+
+fn configs(lrs: &[f64]) -> Vec<HyperParams> {
+    lrs.iter()
+        .map(|&lr| HyperParams { lr, rank: 8, batch_size: 2 })
+        .collect()
+}
+
+#[test]
+fn real_sweep_separates_good_from_bad_lrs() {
+    let Some((rt, m)) = env_or_skip() else { return };
+    let corpus = Corpus::build("gsm-syn", 256, 16, 32, 7).unwrap();
+    // mix of sane and hopeless lrs
+    let cfgs = configs(&[2e-3, 5e-3, 1e-6, 1e-7]);
+    let cfg = RunConfig {
+        enable_early_exit: false,
+        enable_warmup_selection: false,
+        eval_every: 10,
+        ..RunConfig::default()
+    };
+    let out = run_real_sweep(&rt, &m, KEY, corpus, &cfgs, 60, &cfg, 1).unwrap();
+    let best = &out.result.jobs[out.result.best_job];
+    assert!(
+        best.hp.lr >= 1e-3,
+        "a sane lr must win, got {}",
+        best.hp.label()
+    );
+    // bad lrs barely move from init (~ln 272 ≈ 5.6)
+    for j in &out.result.jobs {
+        if j.hp.lr < 1e-5 {
+            assert!(j.best_val > 4.5, "lr {} val {}", j.hp.lr, j.best_val);
+        }
+    }
+}
+
+#[test]
+fn warmup_ranking_correlates_on_real_trajectories() {
+    let Some((rt, m)) = env_or_skip() else { return };
+    let corpus = Corpus::build("gsm-syn", 256, 16, 32, 7).unwrap();
+    let cfgs = configs(&[1e-4, 5e-4, 1e-3, 2e-3]);
+    let trajs =
+        collect_full_trajectories(&rt, &m, KEY, corpus, &cfgs, 80, 8, 5).unwrap();
+    assert_eq!(trajs.len(), 4);
+    // Fig 7 analog: early (first-eval) vs final ordering correlates
+    let early: Vec<f64> = trajs.iter().map(|t| t.vals[0].1).collect();
+    let fin: Vec<f64> = trajs.iter().map(|t| t.best_val).collect();
+    let rho = spearman(&early, &fin);
+    assert!(rho > 0.0, "real warmup correlation non-positive: {rho}");
+    for t in &trajs {
+        assert!(t.vals.len() >= 8, "trajectory too short: {}", t.vals.len());
+    }
+}
+
+#[test]
+fn accuracy_eval_runs_and_is_bounded() {
+    let Some((rt, m)) = env_or_skip() else { return };
+    let spec = m.get(KEY).unwrap().clone();
+    let corpus = Corpus::build("gsm-syn", 256, 16, spec.t, 7).unwrap();
+    let cfgs = configs(&[2e-3, 2e-3, 2e-3, 2e-3]);
+    let cfg = RunConfig {
+        enable_early_exit: false,
+        enable_warmup_selection: false,
+        eval_every: 20,
+        ..RunConfig::default()
+    };
+    let out = run_real_sweep(&rt, &m, KEY, corpus.clone(), &cfgs, 40, &cfg, 1).unwrap();
+    let accs = gsm_accuracy(out.backend.session(), &corpus, 8, 6).unwrap();
+    assert_eq!(accs.len(), spec.n);
+    assert!(accs.iter().all(|&a| (0.0..=1.0).contains(&a)), "{accs:?}");
+}
+
+#[test]
+fn calibration_produces_sane_throughput() {
+    let Some((rt, m)) = env_or_skip() else { return };
+    let corpus = Corpus::build("gsm-syn", 128, 8, 32, 7).unwrap();
+    let cal = calibrate_step_time(&rt, &m, KEY, corpus, 5).unwrap();
+    assert!(cal.step_seconds > 1e-5 && cal.step_seconds < 10.0);
+    assert!(cal.effective_gflops > 0.01 && cal.effective_gflops < 1e4,
+            "implausible GFLOPs {}", cal.effective_gflops);
+}
+
+#[test]
+fn early_exit_on_real_backend_saves_compute_and_keeps_best() {
+    let Some((rt, m)) = env_or_skip() else { return };
+    let corpus = Corpus::build("gsm-syn", 256, 16, 32, 7).unwrap();
+    let cfgs = configs(&[1e-4, 5e-4, 2e-3, 5e-3, 1e-2, 1e-3, 3e-3, 5e-4]);
+    let full_cfg = RunConfig {
+        enable_early_exit: false,
+        enable_warmup_selection: false,
+        eval_every: 10,
+        ..RunConfig::default()
+    };
+    let full =
+        run_real_sweep(&rt, &m, KEY, corpus.clone(), &cfgs, 50, &full_cfg, 1).unwrap();
+    let ee_cfg = RunConfig { eval_every: 5, ..RunConfig::default() };
+    let ee = run_real_sweep(&rt, &m, KEY, corpus, &cfgs, 50, &ee_cfg, 1).unwrap();
+    assert!(
+        ee.result.samples_used < full.result.samples_used / 2,
+        "EE {} vs full {}",
+        ee.result.samples_used,
+        full.result.samples_used
+    );
+    // quality preserved within a band (tiny-model noise): Fig 14 analog
+    let ratio = ee.result.best_val() / full.result.best_val();
+    assert!(ratio < 1.35, "EE degraded best val by {ratio:.3}");
+}
