@@ -1,20 +1,21 @@
-//! LoRA-as-a-Service (paper §4, §7.2): accepts declarative task specs,
-//! profiles them, runs each task's search through the batched executor
-//! with early exit, and packs tasks onto the shared cluster with the
-//! inter-task scheduler — the full Fig 12 pipeline.
+//! LoRA-as-a-Service (paper §4, §7.2): accepts declarative task specs and
+//! runs them through the `simharness` event engine — profile → solve →
+//! event-driven timeline with completion-triggered backfill — the full
+//! Fig 12 pipeline.  This front end owns the tenant-facing types
+//! (`TaskOutcome`, `ServiceReport`); the event loop itself lives in
+//! `crate::simharness::engine` so the same machinery powers traces with
+//! staggered arrivals, the sweep benches and the integration tests.
 
 use std::collections::BTreeMap;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::cluster::gpu::GpuSpec;
-use crate::config::{TaskSpec, MODEL_FAMILY};
-use crate::data::synth::dataset_profile;
-use crate::sched::inter::{InterTaskScheduler, Policy};
+use crate::config::TaskSpec;
+use crate::sched::inter::Policy;
+use crate::simharness::{EventLog, HarnessConfig, SimEngine};
 
-use super::executor::SimBackend;
-use super::profiler::Profiler;
-use super::task_runner::{make_jobs, run_task, RunConfig, TaskResult};
+use super::task_runner::{RunConfig, TaskResult};
 
 /// Service-wide configuration.
 #[derive(Debug, Clone)]
@@ -39,6 +40,19 @@ impl Default for ServiceConfig {
     }
 }
 
+impl ServiceConfig {
+    /// The harness view of this configuration.
+    pub fn harness(&self) -> HarnessConfig {
+        HarnessConfig {
+            total_gpus: self.total_gpus,
+            policy: self.policy,
+            run: self.run.clone(),
+            gpu: self.gpu.clone(),
+            n_slots: self.n_slots,
+        }
+    }
+}
+
 /// Per-task outcome.
 #[derive(Debug)]
 pub struct TaskOutcome {
@@ -50,6 +64,9 @@ pub struct TaskOutcome {
     pub samples_used: usize,
     pub samples_budget: usize,
     pub saved_by_reason: BTreeMap<&'static str, usize>,
+    /// (batch size, executor width) per homogeneous group — how many
+    /// adapters the memory model admitted to co-locate (paper §7.1).
+    pub group_slots: Vec<(usize, usize)>,
     pub group_results: Vec<TaskResult>,
 }
 
@@ -58,6 +75,8 @@ pub struct TaskOutcome {
 pub struct ServiceReport {
     pub makespan: f64,
     pub outcomes: Vec<TaskOutcome>,
+    /// The realized cluster timeline (arrivals / starts / completions).
+    pub events: EventLog,
 }
 
 impl ServiceReport {
@@ -78,86 +97,23 @@ impl Service {
         Service { cfg }
     }
 
-    /// Execute one task end to end on the simulator: one executor per
-    /// homogeneous batch-size group (paper §A.1), groups sharing the
-    /// task's GPU allocation sequentially.  Returns the outcome with the
+    /// Execute one task end to end on the simulator (see
+    /// `SimEngine::simulate_task`).  Returns the outcome with the
     /// *actual* duration (early exits included).
     pub fn run_task_simulated(&self, spec: &TaskSpec) -> Result<TaskOutcome> {
-        let model = MODEL_FAMILY
-            .get(&spec.model)
-            .with_context(|| format!("unknown model '{}'", spec.model))?;
-        let profile = *dataset_profile(&spec.dataset)
-            .with_context(|| format!("unknown dataset '{}'", spec.dataset))?;
-        let jobs = make_jobs(
-            &spec.search_space.expand(),
-            spec.epochs,
-            spec.train_samples,
-            spec.seed,
-        );
-        // homogeneous groups, descending batch size
-        let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
-        for (i, j) in jobs.iter().enumerate() {
-            groups.entry(j.hp.batch_size).or_default().push(i);
-        }
-        let mut group_results = Vec::new();
-        let mut actual = 0.0;
-        let mut best_val = f64::INFINITY;
-        let mut used = 0;
-        let mut budget = 0;
-        let mut saved: BTreeMap<&'static str, usize> = BTreeMap::new();
-        for (&bs, members) in groups.iter().rev() {
-            let gjobs: Vec<_> = members.iter().map(|&i| jobs[i].clone()).collect();
-            let mut backend = SimBackend::new(
-                model.clone(),
-                profile,
-                self.cfg.n_slots,
-                bs,
-                (spec.seq_len as f64 * profile.seq_scale) as usize,
-                self.cfg.gpu.clone(),
-                spec.num_gpus,
-            );
-            let res = run_task(&mut backend, gjobs, &self.cfg.run)?;
-            actual += res.wall_seconds;
-            best_val = best_val.min(res.best_val());
-            used += res.samples_used;
-            budget += res.samples_budget;
-            for (k, v) in &res.saved_by_reason {
-                *saved.entry(k).or_insert(0) += v;
-            }
-            group_results.push(res);
-        }
-        Ok(TaskOutcome {
-            name: spec.name.clone(),
-            gpus: spec.num_gpus,
-            est_duration: 0.0, // filled by run_service
-            actual_duration: actual,
-            best_val,
-            samples_used: used,
-            samples_budget: budget,
-            saved_by_reason: saved,
-            group_results,
-        })
+        SimEngine::new(self.cfg.harness()).simulate_task(spec)
     }
 
-    /// Full multi-task service run (simulated cluster): profile → solve →
-    /// event-driven timeline with completion-triggered backfill.
+    /// Full multi-task service run (simulated cluster): all tasks arrive
+    /// at t = 0 and the harness plays the event-driven timeline with
+    /// completion-triggered backfill.
     pub fn run_service(&self, specs: &[TaskSpec]) -> Result<ServiceReport> {
-        let mut profiler = Profiler::new(self.cfg.gpu.clone());
-        let mut outcomes = Vec::with_capacity(specs.len());
-        for spec in specs {
-            let model = MODEL_FAMILY
-                .get(&spec.model)
-                .with_context(|| format!("unknown model '{}'", spec.model))?;
-            let mut o = self.run_task_simulated(spec)?;
-            o.est_duration = profiler.estimate_duration(&model, spec, self.cfg.n_slots);
-            outcomes.push(o);
-        }
-        let mut sched = InterTaskScheduler::new(self.cfg.total_gpus, self.cfg.policy);
-        for (i, o) in outcomes.iter().enumerate() {
-            sched.submit(i, o.gpus, o.est_duration, o.actual_duration);
-        }
-        let makespan = sched.run_to_completion();
-        Ok(ServiceReport { makespan, outcomes })
+        let report = SimEngine::new(self.cfg.harness()).run_specs(specs)?;
+        Ok(ServiceReport {
+            makespan: report.makespan,
+            outcomes: report.outcomes,
+            events: report.log,
+        })
     }
 }
 
@@ -192,6 +148,7 @@ mod tests {
         assert!(o.actual_duration > 0.0);
         assert!(o.best_val.is_finite());
         assert!(o.samples_used < o.samples_budget);
+        assert!(!o.group_slots.is_empty());
     }
 
     #[test]
@@ -224,6 +181,8 @@ mod tests {
         let report = svc.run_service(&specs).unwrap();
         assert!(report.makespan > 0.0);
         assert_eq!(report.outcomes.len(), 4);
+        // one arrival + start + completion per task in the timeline
+        assert_eq!(report.events.len(), 3 * specs.len());
         // makespan ≥ longest single task, ≤ sum of all
         let longest = report
             .outcomes

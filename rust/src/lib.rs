@@ -8,6 +8,11 @@
 //!   multi-LoRA executors, hierarchical (intra + inter task) scheduling,
 //!   the PJRT runtime, and every substrate (cluster simulator, parallelism
 //!   cost models, synthetic workloads, CP solver, JSON/RNG/CLI/prop).
+//!   The `simharness` module ties these together: a deterministic
+//!   discrete-event engine replaying multi-tenant arrival traces through
+//!   the full early-exit → repack → reschedule loop (same (trace, seed)
+//!   ⇒ bit-identical event log; see `simharness` for the event model and
+//!   trace format).
 //! * **L2** — `python/compile/model.py`: the multi-adapter LoRA
 //!   transformer and its AdamW train step, AOT-lowered to HLO text.
 //! * **L1** — `python/compile/kernels/grouped_lora.py`: Pallas grouped
@@ -24,6 +29,7 @@ pub mod data;
 pub mod parallel;
 pub mod runtime;
 pub mod sched;
+pub mod simharness;
 pub mod stats;
 pub mod train;
 pub mod trajsim;

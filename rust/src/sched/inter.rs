@@ -2,6 +2,13 @@
 //! the exact makespan solver.  Triggered by (1) task arrival and (2) task
 //! completion — which frequently happens earlier than the worst-case d_i
 //! because of early exits — freed GPUs are instantly backfilled.
+//!
+//! The scheduler itself owns no event loop: callers drive it through
+//! `submit_at` (arrival at a virtual time), `peek_next_completion` /
+//! `complete_next` (the next completion event) and `drain_started`
+//! (start decisions made by the last replans).  `simharness::engine` is
+//! the canonical driver; `run_to_completion` remains as the degenerate
+//! all-arrive-at-zero loop.
 
 use std::collections::BTreeMap;
 
@@ -53,6 +60,8 @@ pub struct InterTaskScheduler {
     clock: f64,
     free_gpus: usize,
     running: Vec<(usize, f64)>, // (task id, completion time)
+    /// (task id, start time) decisions since the last `drain_started`.
+    started_log: Vec<(usize, f64)>,
     pub replans: usize,
 }
 
@@ -65,12 +74,29 @@ impl InterTaskScheduler {
             clock: 0.0,
             free_gpus: total_gpus,
             running: Vec::new(),
+            started_log: Vec::new(),
             replans: 0,
         }
     }
 
     /// Submit a task (arrival event at the current clock).
     pub fn submit(&mut self, id: usize, gpus: usize, est_duration: f64, actual_duration: f64) {
+        self.submit_at(id, gpus, est_duration, actual_duration, self.clock);
+    }
+
+    /// Submit a task arriving at virtual time `now` (must be
+    /// non-decreasing across calls; the clock never moves backward).
+    pub fn submit_at(
+        &mut self,
+        id: usize,
+        gpus: usize,
+        est_duration: f64,
+        actual_duration: f64,
+        now: f64,
+    ) {
+        if now > self.clock {
+            self.clock = now;
+        }
         self.tasks.insert(
             id,
             LiveTask {
@@ -82,6 +108,22 @@ impl InterTaskScheduler {
             },
         );
         self.replan();
+    }
+
+    /// Current virtual time (last processed event).
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// GPUs not currently held by a running task.
+    pub fn free_gpus(&self) -> usize {
+        self.free_gpus
+    }
+
+    /// Start decisions made since the last drain, in decision order —
+    /// the harness turns these into `Start` events.
+    pub fn drain_started(&mut self) -> Vec<(usize, f64)> {
+        std::mem::take(&mut self.started_log)
     }
 
     /// Waiting tasks, as solver inputs (estimated durations).
@@ -103,6 +145,7 @@ impl InterTaskScheduler {
         let completion = self.clock + t.actual_duration;
         self.free_gpus -= t.gpus;
         self.running.push((id, completion));
+        self.started_log.push((id, self.clock));
     }
 
     /// Re-plan the waiting queue and start whatever should run *now*.
@@ -193,26 +236,34 @@ impl InterTaskScheduler {
         }
     }
 
-    /// Advance the simulation to the next completion; returns false when
-    /// nothing is running.
-    pub fn step(&mut self) -> bool {
-        if self.running.is_empty() {
-            return false;
-        }
-        // pop the earliest completion
-        let (idx, _) = self
-            .running
+    /// The next completion event, if any: (task id, completion time).
+    /// Ties break on the lower task id for determinism.
+    pub fn peek_next_completion(&self) -> Option<(usize, f64)> {
+        self.running
             .iter()
-            .enumerate()
-            .min_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
-            .unwrap();
-        let (id, when) = self.running.remove(idx);
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)))
+            .copied()
+    }
+
+    /// Process the next completion event: advance the clock to it, free
+    /// the task's GPUs and replan (backfill instantly).  Returns the
+    /// completed (task id, time), or None when nothing is running.
+    pub fn complete_next(&mut self) -> Option<(usize, f64)> {
+        let (id, when) = self.peek_next_completion()?;
+        let idx = self.running.iter().position(|&(rid, _)| rid == id).unwrap();
+        self.running.remove(idx);
         self.clock = when;
         let t = self.tasks.get_mut(&id).unwrap();
         t.finished_at = Some(when);
         self.free_gpus += t.gpus;
         self.replan(); // completion event → backfill instantly
-        true
+        Some((id, when))
+    }
+
+    /// Advance the simulation to the next completion; returns false when
+    /// nothing is running.
+    pub fn step(&mut self) -> bool {
+        self.complete_next().is_some()
     }
 
     /// Play the timeline to completion; returns the realized makespan.
@@ -308,6 +359,26 @@ mod tests {
         let tasks = [(2, 10.0), (2, 10.0), (2, 10.0), (2, 10.0)];
         let mk = run(Policy::Optimal, &tasks, 8);
         assert!((mk - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timed_arrivals_and_event_api() {
+        let mut s = InterTaskScheduler::new(4, Policy::Optimal);
+        s.submit_at(0, 4, 10.0, 10.0, 0.0);
+        assert_eq!(s.drain_started(), vec![(0, 0.0)]);
+        // arrives while the cluster is full: queued, not started
+        s.submit_at(1, 4, 10.0, 10.0, 3.0);
+        assert!(s.drain_started().is_empty());
+        assert_eq!(s.free_gpus(), 0);
+        assert_eq!(s.peek_next_completion(), Some((0, 10.0)));
+        assert_eq!(s.complete_next(), Some((0, 10.0)));
+        // the completion freed the GPUs → task 1 starts at t = 10
+        assert_eq!(s.drain_started(), vec![(1, 10.0)]);
+        assert_eq!(s.clock(), 10.0);
+        assert!(s.complete_next().is_some());
+        assert!(s.complete_next().is_none());
+        assert!(s.all_done());
+        assert_eq!(s.makespan(), 20.0);
     }
 
     #[test]

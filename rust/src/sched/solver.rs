@@ -391,4 +391,74 @@ mod tests {
         assert!(solve(&[t(0, 1.0, 9)], 8).is_err());
         assert!(solve(&[t(0, 1.0, 1)], 0).is_err());
     }
+
+    #[test]
+    fn prop_optimal_no_worse_than_every_heuristic() {
+        use crate::util::prop::{prop_assert, prop_check};
+        prop_check("Optimal ≤ min(SJF, FCFS, LPT) and ≥ lower bound", 80, |g| {
+            let gpus = *g.choice(&[2usize, 4, 8]);
+            let n = g.usize(1..=7);
+            let tasks: Vec<SchedTask> = (0..n)
+                .map(|i| SchedTask {
+                    id: i,
+                    duration: g.f64(0.5, 12.0),
+                    gpus: (*g.choice(&[1usize, 1, 2, 4])).min(gpus),
+                })
+                .collect();
+            let opt = solve(&tasks, gpus).map_err(|e| e.to_string())?;
+            prop_assert(
+                opt.is_valid(&tasks, gpus),
+                format!("optimal schedule invalid: {opt:?}"),
+            )?;
+            for (name, h) in [
+                ("sjf", sjf_schedule(&tasks, gpus)),
+                ("fcfs", fcfs_schedule(&tasks, gpus)),
+                ("lpt", lpt_schedule(&tasks, gpus)),
+            ] {
+                prop_assert(
+                    opt.makespan <= h.makespan + 1e-9,
+                    format!(
+                        "optimal {} beaten by {name} {} on {tasks:?} / {gpus} GPUs",
+                        opt.makespan, h.makespan
+                    ),
+                )?;
+            }
+            prop_assert(
+                opt.makespan >= lower_bound(&tasks, gpus) - 1e-9,
+                format!("optimal {} below the area/longest bound", opt.makespan),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_all_schedules_respect_gpu_capacity() {
+        use crate::util::prop::{prop_assert, prop_check};
+        prop_check("every policy's schedule fits the cluster", 80, |g| {
+            let gpus = g.usize(1..=8);
+            let n = g.usize(1..=8);
+            let tasks: Vec<SchedTask> = (0..n)
+                .map(|i| SchedTask {
+                    id: i,
+                    duration: g.f64(0.1, 20.0),
+                    gpus: g.usize(1..=gpus.max(1)).min(gpus),
+                })
+                .collect();
+            for (name, s) in [
+                ("sjf", sjf_schedule(&tasks, gpus)),
+                ("fcfs", fcfs_schedule(&tasks, gpus)),
+                ("lpt", lpt_schedule(&tasks, gpus)),
+                ("optimal", solve(&tasks, gpus).map_err(|e| e.to_string())?),
+            ] {
+                prop_assert(
+                    s.is_valid(&tasks, gpus),
+                    format!("{name} violates capacity: {s:?} on {tasks:?} / {gpus} GPUs"),
+                )?;
+                prop_assert(
+                    s.placements.len() == tasks.len(),
+                    format!("{name} dropped tasks"),
+                )?;
+            }
+            Ok(())
+        });
+    }
 }

@@ -1,0 +1,432 @@
+//! The discrete-event engine: replays a [`Trace`] through the *existing*
+//! ALTO components end to end.
+//!
+//! For every arriving task the engine simulates its full intra-task
+//! search — `trajsim::SimJob` loss trajectories feeding the Algorithm-1
+//! `PatternDetector`s over batched `SimBackend` executor slots
+//! (`coordinator::task_runner`), with executor width chosen by the fitted
+//! memory model + greedy admission (`sched::intra`, "adapter repacking")
+//! — yielding the task's *actual* GPU occupancy time, usually far below
+//! its worst-case estimate because of early exits.  The cluster timeline
+//! then plays out event by event on the virtual clock: arrivals and
+//! completions trigger `sched::inter` replanning, freed capacity is
+//! backfilled instantly, and every decision lands in the [`EventLog`].
+//!
+//! Everything is a pure function of (config, trace): replaying the same
+//! trace yields a bit-identical event log and makespan, which the
+//! integration suite (`rust/tests/simharness_e2e.rs`) pins.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::cluster::gpu::GpuSpec;
+use crate::config::{HyperParams, TaskSpec, MODEL_FAMILY};
+use crate::coordinator::executor::SimBackend;
+use crate::coordinator::memory_model;
+use crate::coordinator::profiler::Profiler;
+use crate::coordinator::service::TaskOutcome;
+use crate::coordinator::task_runner::{make_jobs, run_task, RunConfig};
+use crate::data::synth::dataset_profile;
+use crate::sched::inter::{InterTaskScheduler, Policy};
+use crate::sched::intra::{admit, group_by_batch};
+
+use super::event::{EventKind, EventLog};
+use super::trace::Trace;
+
+/// Harness configuration: the cluster plus the per-task run switches.
+#[derive(Debug, Clone)]
+pub struct HarnessConfig {
+    pub total_gpus: usize,
+    pub policy: Policy,
+    pub run: RunConfig,
+    pub gpu: GpuSpec,
+    /// Upper bound on co-located adapter slots per executor; the fitted
+    /// memory model may admit fewer (see `simulate_task`).
+    pub n_slots: usize,
+}
+
+impl Default for HarnessConfig {
+    fn default() -> Self {
+        HarnessConfig {
+            total_gpus: 8,
+            policy: Policy::Optimal,
+            run: RunConfig::default(),
+            gpu: GpuSpec::h100_sxm5(),
+            n_slots: 4,
+        }
+    }
+}
+
+/// Outcome of one harness run.
+#[derive(Debug)]
+pub struct HarnessReport {
+    /// Last completion time on the virtual clock.
+    pub makespan: f64,
+    /// The full replay-stable cluster timeline.
+    pub log: EventLog,
+    /// Per-task outcomes, in trace order.
+    pub outcomes: Vec<TaskOutcome>,
+    /// Σ gpus · actual_duration — the cluster-time the workload consumed.
+    pub gpu_seconds: f64,
+    /// Inter-task replans triggered by arrivals + completions.
+    pub replans: usize,
+}
+
+/// Timeline-only result of `SimEngine::replay` (no per-task outcomes —
+/// the caller already holds them).
+#[derive(Debug)]
+pub struct Timeline {
+    pub makespan: f64,
+    pub log: EventLog,
+    pub gpu_seconds: f64,
+    pub replans: usize,
+}
+
+/// The event-driven cluster simulator.
+pub struct SimEngine {
+    pub cfg: HarnessConfig,
+}
+
+impl SimEngine {
+    pub fn new(cfg: HarnessConfig) -> SimEngine {
+        SimEngine { cfg }
+    }
+
+    /// Simulate one task's search end to end on the executor substrate:
+    /// one executor per homogeneous batch-size group (paper §A.1),
+    /// groups sharing the task's GPU allocation sequentially.  Executor
+    /// width per group comes from the fitted memory model + greedy
+    /// admission (§7.1) — a 70B task on too few GPUs co-locates fewer
+    /// adapters than `n_slots` allows.  Returns the outcome with the
+    /// *actual* duration (early exits included); `est_duration` is left
+    /// at 0.0 for the caller's profiler to fill.
+    pub fn simulate_task(&self, spec: &TaskSpec) -> Result<TaskOutcome> {
+        let model = MODEL_FAMILY
+            .get(&spec.model)
+            .with_context(|| format!("unknown model '{}'", spec.model))?;
+        let profile = *dataset_profile(&spec.dataset)
+            .with_context(|| format!("unknown dataset '{}'", spec.dataset))?;
+        let jobs = make_jobs(
+            &spec.search_space.expand(),
+            spec.epochs,
+            spec.train_samples,
+            spec.seed,
+        );
+        let seq_len = (spec.seq_len as f64 * profile.seq_scale) as usize;
+        let mem = memory_model::profile(
+            &model,
+            &self.cfg.gpu,
+            spec.search_space.max_rank().max(1),
+            self.cfg.n_slots,
+            seq_len,
+            spec.num_gpus,
+        );
+        let hps: Vec<HyperParams> = jobs.iter().map(|j| j.hp.clone()).collect();
+        let mut group_results = Vec::new();
+        let mut group_slots = Vec::new();
+        let mut actual = 0.0;
+        let mut best_val = f64::INFINITY;
+        let mut used = 0;
+        let mut budget = 0;
+        let mut saved: BTreeMap<&'static str, usize> = BTreeMap::new();
+        // homogeneous groups, descending batch size (paper §A.1)
+        for (bs, members) in group_by_batch(&hps) {
+            let group_hps: Vec<HyperParams> =
+                members.iter().map(|&i| hps[i].clone()).collect();
+            let plan = admit(&group_hps, &mem, self.cfg.n_slots, false);
+            // memory-aware repack: when even one adapter does not fit the
+            // margin, run width-1 anyway (the real system would fall back
+            // to gradient accumulation rather than reject the task)
+            let slots = plan.admitted.len().clamp(1, self.cfg.n_slots.max(1));
+            group_slots.push((bs, slots));
+            let gjobs: Vec<_> = members.iter().map(|&i| jobs[i].clone()).collect();
+            let mut backend = SimBackend::new(
+                model.clone(),
+                profile,
+                slots,
+                bs,
+                seq_len,
+                self.cfg.gpu.clone(),
+                spec.num_gpus,
+            );
+            let res = run_task(&mut backend, gjobs, &self.cfg.run)?;
+            actual += res.wall_seconds;
+            best_val = best_val.min(res.best_val());
+            used += res.samples_used;
+            budget += res.samples_budget;
+            for (&k, &v) in &res.saved_by_reason {
+                *saved.entry(k).or_insert(0) += v;
+            }
+            group_results.push(res);
+        }
+        Ok(TaskOutcome {
+            name: spec.name.clone(),
+            gpus: spec.num_gpus,
+            est_duration: 0.0, // filled from the profiler by `run`
+            actual_duration: actual,
+            best_val,
+            samples_used: used,
+            samples_budget: budget,
+            saved_by_reason: saved,
+            group_slots,
+            group_results,
+        })
+    }
+
+    /// Simulate every task body in trace order (the expensive half of a
+    /// run): actual durations from the executor substrate, estimated
+    /// durations from the profiler.  The result depends only on the run
+    /// switches (`cfg.run`, `cfg.gpu`, `cfg.n_slots`) — not on
+    /// `total_gpus` or `policy` — so sweeps over cluster sizes and
+    /// policies can simulate once and `replay` many times.
+    pub fn simulate_trace(&self, trace: &Trace) -> Result<Vec<TaskOutcome>> {
+        let mut profiler = Profiler::new(self.cfg.gpu.clone());
+        let mut outcomes = Vec::with_capacity(trace.len());
+        for entry in &trace.entries {
+            let model = MODEL_FAMILY
+                .get(&entry.spec.model)
+                .with_context(|| format!("unknown model '{}'", entry.spec.model))?;
+            let mut o = self.simulate_task(&entry.spec)?;
+            o.est_duration =
+                profiler.estimate_duration(&model, &entry.spec, self.cfg.n_slots);
+            outcomes.push(o);
+        }
+        Ok(outcomes)
+    }
+
+    /// Play the cluster timeline for pre-simulated outcomes, event by
+    /// event — arrivals and completions replan, freed GPUs backfill,
+    /// every decision is logged.  Errors if any task can never be placed
+    /// (more GPUs than the cluster has) or fails to complete.
+    pub fn replay(&self, trace: &Trace, outcomes: &[TaskOutcome]) -> Result<Timeline> {
+        anyhow::ensure!(
+            trace.len() == outcomes.len(),
+            "trace has {} entries but {} outcomes were supplied",
+            trace.len(),
+            outcomes.len()
+        );
+        for o in outcomes {
+            anyhow::ensure!(
+                o.gpus <= self.cfg.total_gpus,
+                "task '{}' needs {} GPUs but the cluster has {}",
+                o.name,
+                o.gpus,
+                self.cfg.total_gpus
+            );
+        }
+        let mut sched = InterTaskScheduler::new(self.cfg.total_gpus, self.cfg.policy);
+        let mut log = EventLog::new();
+        let mut next_arrival = 0usize;
+        loop {
+            let arrival = trace.entries.get(next_arrival).map(|e| e.arrival);
+            let completion = sched.peek_next_completion();
+            // completions win time ties: capacity frees before the
+            // arriving task replans over it
+            let take_arrival = match (arrival, completion) {
+                (None, None) => break,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (Some(at), Some((_, ct))) => at < ct,
+            };
+            if take_arrival {
+                let i = next_arrival;
+                next_arrival += 1;
+                let at = trace.entries[i].arrival;
+                let gpus = outcomes[i].gpus;
+                log.record(at, EventKind::Arrival { task: i, gpus });
+                sched.submit_at(
+                    i,
+                    gpus,
+                    outcomes[i].est_duration,
+                    outcomes[i].actual_duration,
+                    at,
+                );
+            } else {
+                let (id, at) = sched.complete_next().expect("peeked completion");
+                log.record(
+                    at,
+                    EventKind::Complete {
+                        task: id,
+                        gpus: outcomes[id].gpus,
+                    },
+                );
+            }
+            for (id, at) in sched.drain_started() {
+                log.record(
+                    at,
+                    EventKind::Start {
+                        task: id,
+                        gpus: outcomes[id].gpus,
+                    },
+                );
+            }
+        }
+
+        anyhow::ensure!(
+            sched.all_done(),
+            "timeline ended with unfinished tasks (policy {:?}, {} GPUs)",
+            self.cfg.policy,
+            self.cfg.total_gpus
+        );
+        let gpu_seconds = outcomes
+            .iter()
+            .map(|o| o.gpus as f64 * o.actual_duration)
+            .sum();
+        Ok(Timeline {
+            makespan: sched.makespan(),
+            log,
+            gpu_seconds,
+            replans: sched.replans,
+        })
+    }
+
+    /// Simulate + replay a whole trace.  Pure function of (cfg, trace):
+    /// same inputs ⇒ bit-identical event log and makespan.
+    pub fn run(&self, trace: &Trace) -> Result<HarnessReport> {
+        let outcomes = self.simulate_trace(trace)?;
+        let tl = self.replay(trace, &outcomes)?;
+        Ok(HarnessReport {
+            makespan: tl.makespan,
+            log: tl.log,
+            outcomes,
+            gpu_seconds: tl.gpu_seconds,
+            replans: tl.replans,
+        })
+    }
+
+    /// Convenience: replay `specs` all arriving at t = 0 (the Fig 12
+    /// batch-submission shape the service front end uses).
+    pub fn run_specs(&self, specs: &[TaskSpec]) -> Result<HarnessReport> {
+        self.run(&Trace::at_zero(specs.to_vec()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SearchSpace;
+    use crate::simharness::trace::hetero_mix;
+
+    fn tiny_spec(name: &str, model: &str, gpus: usize) -> TaskSpec {
+        TaskSpec {
+            name: name.into(),
+            model: model.into(),
+            dataset: "gsm-syn".into(),
+            num_gpus: gpus,
+            search_space: SearchSpace {
+                lrs: vec![5e-5, 2e-4, 5e-4],
+                ranks: vec![16, 64],
+                batch_sizes: vec![2, 4],
+            },
+            seq_len: 256,
+            train_samples: 48,
+            seed: 5,
+            ..TaskSpec::default()
+        }
+    }
+
+    #[test]
+    fn report_is_well_formed() {
+        let engine = SimEngine::new(HarnessConfig::default());
+        let specs = vec![
+            tiny_spec("a", "llama-8b", 1),
+            tiny_spec("b", "llama-8b", 1),
+            tiny_spec("c", "qwen-32b", 2),
+        ];
+        let report = engine.run_specs(&specs).unwrap();
+        assert_eq!(report.outcomes.len(), 3);
+        // one arrival + one start + one completion per task
+        assert_eq!(report.log.len(), 9);
+        let kinds: [fn(&EventKind) -> bool; 3] = [
+            |k| matches!(k, EventKind::Arrival { .. }),
+            |k| matches!(k, EventKind::Start { .. }),
+            |k| matches!(k, EventKind::Complete { .. }),
+        ];
+        for kind in kinds {
+            assert_eq!(report.log.count(kind), 3);
+        }
+        let longest = report
+            .outcomes
+            .iter()
+            .map(|o| o.actual_duration)
+            .fold(0.0, f64::max);
+        assert!(report.makespan >= longest - 1e-9);
+        assert!(report.gpu_seconds > 0.0);
+        assert!(report.replans >= specs.len());
+    }
+
+    #[test]
+    fn timed_arrivals_delay_starts() {
+        let engine = SimEngine::new(HarnessConfig::default());
+        let spec = tiny_spec("late", "llama-8b", 1);
+        let trace = Trace::with_arrivals(vec![(1000.0, spec)]);
+        let report = engine.run(&trace).unwrap();
+        let events = report.log.events();
+        assert!(events.iter().all(|e| e.time >= 1000.0), "{:?}", events);
+        assert!(report.makespan > 1000.0);
+    }
+
+    #[test]
+    fn memory_model_limits_colocation() {
+        let engine = SimEngine::new(HarnessConfig::default());
+        // a 70B model on one GPU cannot co-locate anything: every group
+        // must degrade to width 1
+        let starved = engine
+            .simulate_task(&tiny_spec("70b-starved", "llama-70b", 1))
+            .unwrap();
+        assert!(starved.group_slots.iter().all(|&(_, s)| s == 1), "{:?}", starved.group_slots);
+        // an 8B model on one GPU packs full width
+        let roomy = engine
+            .simulate_task(&tiny_spec("8b-roomy", "llama-8b", 1))
+            .unwrap();
+        assert!(
+            roomy.group_slots.iter().any(|&(_, s)| s > 1),
+            "{:?}",
+            roomy.group_slots
+        );
+    }
+
+    #[test]
+    fn oversized_task_is_an_error_not_a_silent_strand() {
+        let engine = SimEngine::new(HarnessConfig {
+            total_gpus: 2,
+            ..HarnessConfig::default()
+        });
+        // 4-GPU task on a 2-GPU cluster can never be placed
+        let err = engine
+            .run_specs(&[tiny_spec("wide", "llama-70b", 4)])
+            .unwrap_err();
+        assert!(err.to_string().contains("4 GPUs"), "{err}");
+    }
+
+    #[test]
+    fn replay_reuses_simulated_outcomes() {
+        let trace = Trace::at_zero(vec![
+            tiny_spec("a", "llama-8b", 1),
+            tiny_spec("b", "qwen-32b", 2),
+        ]);
+        let engine = SimEngine::new(HarnessConfig::default());
+        let outcomes = engine.simulate_trace(&trace).unwrap();
+        let full = engine.run(&trace).unwrap();
+        let tl = engine.replay(&trace, &outcomes).unwrap();
+        assert_eq!(tl.log.digest(), full.log.digest());
+        assert_eq!(tl.makespan.to_bits(), full.makespan.to_bits());
+        // a different cluster size replays the same bodies differently
+        let narrow = SimEngine::new(HarnessConfig {
+            total_gpus: 2,
+            ..HarnessConfig::default()
+        });
+        let tl2 = narrow.replay(&trace, &outcomes).unwrap();
+        assert!(tl2.makespan >= tl.makespan);
+    }
+
+    #[test]
+    fn same_trace_same_digest() {
+        let trace = Trace::poisson(hetero_mix(4, 48, 2), 500.0, 11);
+        let a = SimEngine::new(HarnessConfig::default()).run(&trace).unwrap();
+        let b = SimEngine::new(HarnessConfig::default()).run(&trace).unwrap();
+        assert_eq!(a.log.digest(), b.log.digest());
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    }
+}

@@ -1,0 +1,165 @@
+//! Cluster events and the replay-stable event log.
+//!
+//! Every run of the harness produces an [`EventLog`]: the totally ordered
+//! sequence of arrival / start / completion events the engine processed.
+//! The log is the determinism contract — replaying the same (trace, seed)
+//! must reproduce it *bit for bit*, which `digest()` checks by hashing
+//! the raw IEEE-754 bits of every timestamp (no epsilon anywhere).
+
+use std::fmt;
+
+use crate::util::hash::{fnv1a_mix, FNV_OFFSET};
+
+/// What happened on the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A tenant task entered the queue.
+    Arrival { task: usize, gpus: usize },
+    /// The scheduler placed the task onto `gpus` GPUs.
+    Start { task: usize, gpus: usize },
+    /// The task released its GPUs (its search finished, early exits
+    /// included).
+    Complete { task: usize, gpus: usize },
+}
+
+impl EventKind {
+    fn code(&self) -> (u64, u64, u64) {
+        match *self {
+            EventKind::Arrival { task, gpus } => (0, task as u64, gpus as u64),
+            EventKind::Start { task, gpus } => (1, task as u64, gpus as u64),
+            EventKind::Complete { task, gpus } => (2, task as u64, gpus as u64),
+        }
+    }
+}
+
+/// One timestamped event.  `seq` is the processing index, which breaks
+/// ties between events sharing a virtual timestamp.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    pub time: f64,
+    pub seq: usize,
+    pub kind: EventKind,
+}
+
+impl fmt::Display for Event {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let (label, task, gpus) = match self.kind {
+            EventKind::Arrival { task, gpus } => ("arrive", task, gpus),
+            EventKind::Start { task, gpus } => ("start", task, gpus),
+            EventKind::Complete { task, gpus } => ("complete", task, gpus),
+        };
+        write!(
+            f,
+            "[{:>12.3}s] #{:<4} {:<8} task={} gpus={}",
+            self.time, self.seq, label, task, gpus
+        )
+    }
+}
+
+/// Append-only, totally ordered event log.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EventLog {
+    events: Vec<Event>,
+}
+
+impl EventLog {
+    pub fn new() -> EventLog {
+        EventLog { events: Vec::new() }
+    }
+
+    pub fn record(&mut self, time: f64, kind: EventKind) {
+        let seq = self.events.len();
+        self.events.push(Event { time, seq, kind });
+    }
+
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Count events matching a predicate (e.g. completions).
+    pub fn count(&self, pred: impl Fn(&EventKind) -> bool) -> usize {
+        self.events.iter().filter(|e| pred(&e.kind)).count()
+    }
+
+    /// Time of the last event (0.0 for an empty log).
+    pub fn last_time(&self) -> f64 {
+        self.events.last().map(|e| e.time).unwrap_or(0.0)
+    }
+
+    /// FNV-1a over the exact bit patterns of every event — two logs with
+    /// the same digest are bit-identical timelines.
+    pub fn digest(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        for e in &self.events {
+            fnv1a_mix(&mut h, e.time.to_bits());
+            fnv1a_mix(&mut h, e.seq as u64);
+            let (k, t, g) = e.kind.code();
+            fnv1a_mix(&mut h, k);
+            fnv1a_mix(&mut h, t);
+            fnv1a_mix(&mut h, g);
+        }
+        h
+    }
+
+    /// Human-readable rendering, one line per event.
+    pub fn lines(&self) -> Vec<String> {
+        self.events.iter().map(|e| e.to_string()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> EventLog {
+        let mut log = EventLog::new();
+        log.record(0.0, EventKind::Arrival { task: 0, gpus: 2 });
+        log.record(0.0, EventKind::Start { task: 0, gpus: 2 });
+        log.record(5.5, EventKind::Complete { task: 0, gpus: 2 });
+        log
+    }
+
+    #[test]
+    fn digest_is_replay_stable() {
+        assert_eq!(sample().digest(), sample().digest());
+        assert_eq!(sample(), sample());
+    }
+
+    #[test]
+    fn digest_sees_every_field() {
+        let base = sample().digest();
+        let mut l = sample();
+        l.record(6.0, EventKind::Arrival { task: 1, gpus: 1 });
+        assert_ne!(l.digest(), base, "extra event must change the digest");
+
+        let mut m = EventLog::new();
+        m.record(0.0, EventKind::Arrival { task: 0, gpus: 2 });
+        m.record(0.0, EventKind::Start { task: 0, gpus: 2 });
+        // same shape, different timestamp bits
+        m.record(5.5 + 1e-12, EventKind::Complete { task: 0, gpus: 2 });
+        assert_ne!(m.digest(), base, "timestamp bits must be hashed");
+    }
+
+    #[test]
+    fn counting_and_rendering() {
+        let log = sample();
+        assert_eq!(log.len(), 3);
+        assert_eq!(
+            log.count(|k| matches!(k, EventKind::Complete { .. })),
+            1
+        );
+        assert_eq!(log.last_time(), 5.5);
+        let lines = log.lines();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("arrive"), "{}", lines[0]);
+        assert!(lines[2].contains("complete"), "{}", lines[2]);
+    }
+}

@@ -1,0 +1,55 @@
+//! # simharness — event-driven multi-tenant cluster harness
+//!
+//! A deterministic discrete-event simulator that drives the *existing*
+//! ALTO components end to end, reproducing the paper's headline
+//! multi-tenant claim (§8.2, Fig 12: up to 13.8× from early exit +
+//! adapter co-location + hierarchical scheduling) as a replayable
+//! experiment rather than isolated unit paths.
+//!
+//! ## Event model
+//!
+//! The engine owns a virtual clock and processes exactly three event
+//! kinds, totally ordered by (time, processing seq):
+//!
+//! * **Arrival** — a tenant task from the trace enters the queue; the
+//!   inter-task scheduler ([`crate::sched::inter`]) replans.
+//! * **Start** — the scheduler places the task onto its GPUs (plan
+//!   order + EASY backfilling under `Policy::Optimal`/`Lpt`, strict
+//!   queue order under `Fcfs`/`Sjf`).
+//! * **Complete** — the task's search finishes and releases its GPUs.
+//!   Because early exits (Algorithm 1 detectors over `trajsim`
+//!   trajectories) shorten the *actual* duration far below the
+//!   worst-case estimate the solver planned with, completions arrive
+//!   early and trigger immediate backfill replanning.
+//!
+//! Time ties resolve completions before arrivals (capacity frees before
+//! the arriving task plans over it); every decision is appended to an
+//! [`event::EventLog`] whose `digest()` hashes raw IEEE-754 timestamp
+//! bits — the bit-identical-replay contract tests pin.
+//!
+//! ## Trace format
+//!
+//! A [`trace::Trace`] is an arrival-ordered `Vec<TraceEntry>` of
+//! `(arrival time, TaskSpec)` pairs.  Generators — `at_zero` (Fig 12
+//! batch submission), `poisson` (exponential inter-arrivals), `bursty`
+//! (on/off tenant bursts) — and the [`trace::hetero_mix`] task-mix
+//! builder are pure functions of their seed, so `(generator args, seed)`
+//! fully determines a run; `Trace::fingerprint()` checks it cheaply.
+//!
+//! ## Determinism contract
+//!
+//! `SimEngine::run` is a pure function of (config, trace): same inputs ⇒
+//! bit-identical event log, makespan and per-task outcomes.  All
+//! randomness lives in the trace/task seeds (`util::rng::Pcg32`
+//! streams); the engine itself draws none.  This is what lets one engine
+//! power the Fig 9/12/15-style sweeps (`benches/harness_e2e.rs`), the
+//! makespan ablations and the integration suite
+//! (`rust/tests/simharness_e2e.rs`).
+
+pub mod engine;
+pub mod event;
+pub mod trace;
+
+pub use engine::{HarnessConfig, HarnessReport, SimEngine, Timeline};
+pub use event::{Event, EventKind, EventLog};
+pub use trace::{hetero_mix, Trace, TraceEntry};

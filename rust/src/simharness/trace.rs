@@ -1,0 +1,220 @@
+//! Arrival traces: *what* reaches the cluster and *when*.
+//!
+//! A [`Trace`] is an arrival-time-ordered list of (time, [`TaskSpec`])
+//! pairs — the whole workload a harness run replays.  Generators cover
+//! the paper's experiment shapes: everything-at-once batches (Fig 12),
+//! Poisson tenant arrivals and bursty on/off arrivals (the multi-tenant
+//! service regime), all pure functions of their seed, so a trace can be
+//! regenerated bit-identically from `(generator args, seed)` alone and
+//! checked cheaply via `fingerprint()`.
+
+use crate::config::{SearchSpace, TaskSpec};
+use crate::util::hash::{fnv1a_mix, fnv1a_mix_bytes, FNV_OFFSET};
+use crate::util::rng::Pcg32;
+
+/// One arrival: a tenant task hitting the queue at a virtual time.
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    pub arrival: f64,
+    pub spec: TaskSpec,
+}
+
+/// An arrival-ordered workload trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub entries: Vec<TraceEntry>,
+}
+
+impl Trace {
+    /// All tasks arrive at t = 0 (the Fig 12 batch-submission shape).
+    pub fn at_zero(specs: Vec<TaskSpec>) -> Trace {
+        Trace {
+            entries: specs
+                .into_iter()
+                .map(|spec| TraceEntry { arrival: 0.0, spec })
+                .collect(),
+        }
+    }
+
+    /// Explicit (arrival, spec) pairs; sorted by arrival (stable, so
+    /// equal-time arrivals keep their submission order).
+    pub fn with_arrivals(mut pairs: Vec<(f64, TaskSpec)>) -> Trace {
+        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        Trace {
+            entries: pairs
+                .into_iter()
+                .map(|(arrival, spec)| TraceEntry { arrival, spec })
+                .collect(),
+        }
+    }
+
+    /// Poisson arrivals: exponential inter-arrival gaps with the given
+    /// mean, applied to the specs in order.
+    pub fn poisson(specs: Vec<TaskSpec>, mean_interarrival: f64, seed: u64) -> Trace {
+        let mut rng = Pcg32::new(seed, 0x7eace);
+        let mut t = 0.0;
+        let entries = specs
+            .into_iter()
+            .map(|spec| {
+                t += -mean_interarrival * (1.0 - rng.f64()).ln();
+                TraceEntry { arrival: t, spec }
+            })
+            .collect();
+        Trace { entries }
+    }
+
+    /// Bursty arrivals: groups of `burst` tasks land together, bursts
+    /// separated by `gap · U[0.5, 1.5)` quiet periods — the on/off tenant
+    /// pattern that stresses replanning hardest.
+    pub fn bursty(specs: Vec<TaskSpec>, burst: usize, gap: f64, seed: u64) -> Trace {
+        let burst = burst.max(1);
+        let mut rng = Pcg32::new(seed, 0xb0257);
+        let mut t = 0.0;
+        let mut entries = Vec::with_capacity(specs.len());
+        for (i, spec) in specs.into_iter().enumerate() {
+            if i > 0 && i % burst == 0 {
+                t += gap * rng.uniform(0.5, 1.5);
+            }
+            entries.push(TraceEntry { arrival: t, spec });
+        }
+        Trace { entries }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total GPUs a trace ever requests at once if everything overlapped
+    /// (an upper bound useful for sizing sweeps).
+    pub fn peak_gpu_demand(&self) -> usize {
+        self.entries.iter().map(|e| e.spec.num_gpus).sum()
+    }
+
+    /// FNV-1a over arrival bits + the scheduling-relevant spec fields —
+    /// two traces with equal fingerprints replay identically.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        for e in &self.entries {
+            fnv1a_mix(&mut h, e.arrival.to_bits());
+            fnv1a_mix_bytes(&mut h, e.spec.name.as_bytes());
+            fnv1a_mix_bytes(&mut h, e.spec.model.as_bytes());
+            fnv1a_mix_bytes(&mut h, e.spec.dataset.as_bytes());
+            fnv1a_mix(&mut h, e.spec.num_gpus as u64);
+            fnv1a_mix(&mut h, e.spec.seq_len as u64);
+            fnv1a_mix(&mut h, e.spec.epochs as u64);
+            fnv1a_mix(&mut h, e.spec.train_samples as u64);
+            fnv1a_mix(&mut h, e.spec.seed);
+            for &lr in &e.spec.search_space.lrs {
+                fnv1a_mix(&mut h, lr.to_bits());
+            }
+            for &r in &e.spec.search_space.ranks {
+                fnv1a_mix(&mut h, r as u64);
+            }
+            for &b in &e.spec.search_space.batch_sizes {
+                fnv1a_mix(&mut h, b as u64);
+            }
+        }
+        h
+    }
+}
+
+/// The paper's heterogeneous tenant mix (§8.2): cycles 70B/4-GPU,
+/// 32B/2-GPU, 8B/1-GPU and 7B/1-GPU tasks with jittered training-set
+/// sizes, each carrying a compact 12-point search space so whole-cluster
+/// sweeps stay fast.  Pure function of (n_tasks, train_samples, seed).
+pub fn hetero_mix(n_tasks: usize, train_samples: usize, seed: u64) -> Vec<TaskSpec> {
+    const SHAPES: [(&str, &str, usize); 4] = [
+        ("70b", "llama-70b", 4),
+        ("32b", "qwen-32b", 2),
+        ("8b", "llama-8b", 1),
+        ("7b", "qwen-7b", 1),
+    ];
+    let mut rng = Pcg32::new(seed, 0x4e7e0);
+    (0..n_tasks)
+        .map(|i| {
+            let (tag, model, gpus) = SHAPES[i % SHAPES.len()];
+            let samples = (train_samples as f64 * rng.uniform(0.5, 1.5)) as usize;
+            TaskSpec {
+                name: format!("{tag}-{i}"),
+                model: model.into(),
+                dataset: (if i % 5 == 4 { "pref-syn" } else { "gsm-syn" }).into(),
+                num_gpus: gpus,
+                search_space: SearchSpace {
+                    lrs: vec![5e-5, 2e-4, 5e-4],
+                    ranks: vec![16, 64],
+                    batch_sizes: vec![2, 4],
+                },
+                seq_len: 512,
+                train_samples: samples.max(16),
+                seed: seed.wrapping_add(i as u64 * 101),
+                ..TaskSpec::default()
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_are_pure_functions_of_seed() {
+        let a = Trace::poisson(hetero_mix(6, 64, 3), 100.0, 9);
+        let b = Trace::poisson(hetero_mix(6, 64, 3), 100.0, 9);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let c = Trace::poisson(hetero_mix(6, 64, 3), 100.0, 10);
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn poisson_arrivals_increase() {
+        let t = Trace::poisson(hetero_mix(8, 64, 1), 50.0, 2);
+        assert_eq!(t.len(), 8);
+        for w in t.entries.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        assert!(t.entries[0].arrival > 0.0);
+    }
+
+    #[test]
+    fn bursty_groups_share_arrival() {
+        let t = Trace::bursty(hetero_mix(9, 64, 1), 3, 500.0, 4);
+        assert_eq!(t.entries[0].arrival, t.entries[2].arrival);
+        assert!(t.entries[3].arrival > t.entries[2].arrival + 100.0);
+        assert_eq!(t.entries[3].arrival, t.entries[5].arrival);
+    }
+
+    #[test]
+    fn at_zero_and_with_arrivals() {
+        let z = Trace::at_zero(hetero_mix(4, 64, 1));
+        assert!(z.entries.iter().all(|e| e.arrival == 0.0));
+        let mix = hetero_mix(3, 64, 1);
+        let t = Trace::with_arrivals(vec![
+            (5.0, mix[0].clone()),
+            (1.0, mix[1].clone()),
+            (3.0, mix[2].clone()),
+        ]);
+        let arr: Vec<f64> = t.entries.iter().map(|e| e.arrival).collect();
+        assert_eq!(arr, vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn hetero_mix_cycles_shapes() {
+        let mix = hetero_mix(8, 128, 7);
+        assert_eq!(mix[0].num_gpus, 4);
+        assert_eq!(mix[1].num_gpus, 2);
+        assert_eq!(mix[2].num_gpus, 1);
+        assert_eq!(mix[4].num_gpus, 4);
+        assert!(mix.iter().all(|s| s.train_samples >= 16));
+        assert!(mix.iter().any(|s| s.dataset == "pref-syn"));
+        // names unique
+        let mut names: Vec<&str> = mix.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 8);
+    }
+}

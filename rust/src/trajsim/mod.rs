@@ -366,6 +366,69 @@ mod tests {
         assert!(rho > 0.5, "warmup correlation too weak: {rho}");
     }
 
+    /// Interleave partial reads on `probe` the way a warmup detector
+    /// would (train every step, val every 10th), peek at post-warmup
+    /// steps, then check every prefix value against a fresh full replay
+    /// on `replay` — bit for bit.
+    fn assert_warmup_prefix_bit_identical(probe: &SimJob, replay: &SimJob, warmup: usize) {
+        let total = probe.total_steps;
+        let mut train = Vec::new();
+        let mut val = Vec::new();
+        for s in 0..warmup {
+            train.push(probe.train_loss(s));
+            if s % 10 == 9 {
+                val.push((s, probe.val_loss(s)));
+            }
+        }
+        // continue-training reads beyond the boundary must not perturb
+        // the prefix (pure functions of (seed, step))
+        let _ = probe.train_loss(total - 1);
+        let _ = probe.val_loss(total - 1);
+        for (s, &t) in train.iter().enumerate() {
+            assert_eq!(
+                t.to_bits(),
+                replay.train_loss(s).to_bits(),
+                "train prefix diverged at step {s}"
+            );
+        }
+        for &(s, v) in &val {
+            assert_eq!(
+                v.to_bits(),
+                replay.val_loss(s).to_bits(),
+                "val prefix diverged at step {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn warmup_prefix_bit_identical_for_all_regimes() {
+        // hunt one representative job per regime; each candidate pool is
+        // chosen so its target regime is likely (see `SimJob::new`)
+        let candidates: [(&str, f64, usize, Regime); 4] = [
+            ("gsm-syn", 2e-4, 16, Regime::Converging),
+            ("gsm-syn", 5e-4, 16, Regime::Diverging),
+            ("pref-syn", 3e-4, 128, Regime::Overfitting),
+            ("gsm-syn", 1e-5, 16, Regime::Underperforming),
+        ];
+        let total = 200;
+        for (ds, lr, rank, want) in candidates {
+            let prof = dataset_profile(ds).unwrap();
+            let hp = HyperParams {
+                lr,
+                rank,
+                batch_size: 2,
+            };
+            let job = (0..400u64)
+                .map(|seed| SimJob::new(&hp, prof, total, seed))
+                .find(|j| j.regime == want)
+                .unwrap_or_else(|| panic!("no {want:?} job in 400 seeds"));
+            let replay = SimJob::new(&hp, prof, total, job.seed);
+            assert_eq!(replay.regime, want, "regime itself must replay");
+            let warmup = (total / 20).max(1); // the paper's 5% boundary
+            assert_warmup_prefix_bit_identical(&job, &replay, warmup);
+        }
+    }
+
     #[test]
     fn dpo_reward_accuracy_in_paper_band() {
         let jobs = sweep("pref-syn", 300, 11);

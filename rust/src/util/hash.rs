@@ -1,0 +1,53 @@
+//! FNV-1a hashing shared by the replay-stability digests
+//! (`simharness::event`, `simharness::trace`) and any future
+//! fingerprinting — one implementation instead of per-module copies.
+
+/// FNV-1a offset basis (the canonical 64-bit seed).
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// Fold one u64 (as little-endian bytes) into the running hash.
+pub fn fnv1a_mix(h: &mut u64, v: u64) {
+    for b in v.to_le_bytes() {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+}
+
+/// Fold a byte slice into the running hash, length-prefixed so
+/// ("ab", "c") and ("a", "bc") hash differently.
+pub fn fnv1a_mix_bytes(h: &mut u64, bytes: &[u8]) {
+    fnv1a_mix(h, bytes.len() as u64);
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_input_sensitive() {
+        let mut a = FNV_OFFSET;
+        let mut b = FNV_OFFSET;
+        fnv1a_mix(&mut a, 42);
+        fnv1a_mix(&mut b, 42);
+        assert_eq!(a, b);
+        fnv1a_mix(&mut b, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn byte_runs_are_length_prefixed() {
+        let mut a = FNV_OFFSET;
+        fnv1a_mix_bytes(&mut a, b"ab");
+        fnv1a_mix_bytes(&mut a, b"c");
+        let mut b = FNV_OFFSET;
+        fnv1a_mix_bytes(&mut b, b"a");
+        fnv1a_mix_bytes(&mut b, b"bc");
+        assert_ne!(a, b);
+    }
+}

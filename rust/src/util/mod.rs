@@ -3,6 +3,7 @@
 //! a thread pool (tokio).
 
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;

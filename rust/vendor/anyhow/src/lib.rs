@@ -1,0 +1,175 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate (substrate:
+//! crates.io is unavailable offline).  Implements exactly the API subset
+//! the workspace uses: `Result`, `Error`, the `Context` extension trait
+//! for `Result` and `Option`, and the `anyhow!` / `bail!` / `ensure!`
+//! macros.  Error context is flattened into a single `": "`-joined
+//! message chain rather than a source chain — enough for every
+//! diagnostic surface in this repo (`{e}` / `{e:#}` / `Debug`).
+
+use std::fmt;
+
+/// Drop-in alias for `std::result::Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Flattened error: the full context chain as one message.
+pub struct Error(String);
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` lowers to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error(message.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e}` and `{e:#}` both print the whole flattened chain
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+// Any std error converts on `?`, with its source chain flattened.
+// (`Error` itself deliberately does not implement `std::error::Error`,
+// exactly like real anyhow, so this blanket impl cannot overlap the
+// reflexive `From<Error> for Error`.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(cause) = src {
+            msg.push_str(": ");
+            msg.push_str(&cause.to_string());
+            src = cause.source();
+        }
+        Error(msg)
+    }
+}
+
+/// Context-attachment extension (the `anyhow::Context` subset).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                let inner: Error = e.into();
+                Err(Error(format!("{ctx}: {}", inner.0)))
+            }
+        }
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                let inner: Error = e.into();
+                Err(Error(format!("{}: {}", f(), inner.0)))
+            }
+        }
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Early-return with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($t)+);
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 42)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "boom 42");
+        assert_eq!(format!("{e:#}"), "boom 42");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "missing",
+        ));
+        let e = r.context("opening file").unwrap_err();
+        assert!(e.to_string().starts_with("opening file: "), "{e}");
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("slot {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "slot 3");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse() -> Result<i32> {
+            let v: i32 = "not a number".parse()?;
+            Ok(v)
+        }
+        assert!(parse().is_err());
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(v: usize) -> Result<usize> {
+            ensure!(v < 10, "v too big: {v}");
+            Ok(v)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert_eq!(check(12).unwrap_err().to_string(), "v too big: 12");
+    }
+}
