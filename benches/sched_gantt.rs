@@ -1,15 +1,21 @@
 //! Fig 5 — shortest-job-first vs makespan-aware inter-task scheduling:
 //! the didactic instance where SJF fragments the cluster, plus solver
-//! quality/latency statistics on random paper-scale instances.
+//! quality/latency statistics on random paper-scale instances.  Gantt
+//! rows also show the *concrete* GPU indices each planned task pins
+//! (`Schedule::concretize` over the cluster topology).
 
 use alto::bench::{banner, f, time_median, Table};
+use alto::cluster::{PlacePolicy, Topology};
 use alto::sched::solver::{
     fcfs_schedule, lower_bound, lpt_schedule, sjf_schedule, solve, SchedTask, Schedule,
 };
 use alto::util::rng::Pcg32;
 
-fn gantt(label: &str, tasks: &[SchedTask], s: &Schedule) {
+fn gantt(label: &str, tasks: &[SchedTask], s: &Schedule, gpus: usize) {
     println!("{label}: makespan {:.1}s", s.makespan);
+    let concrete = s
+        .concretize(tasks, &Topology::h100_nodes(gpus), PlacePolicy::IslandFirst)
+        .unwrap();
     let scale = 40.0 / s.makespan.max(1e-9);
     let mut placements = s.placements.clone();
     placements.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap().then(a.id.cmp(&b.id)));
@@ -18,11 +24,12 @@ fn gantt(label: &str, tasks: &[SchedTask], s: &Schedule) {
         let pre = (p.start * scale) as usize;
         let len = ((d * scale) as usize).max(1);
         println!(
-            "  task{:<2} {}{} ({} GPUs, {:.1}s @ {:.1}s)",
+            "  task{:<2} {}{} ({} GPUs on {}, {:.1}s @ {:.1}s)",
             p.id,
             " ".repeat(pre),
             "#".repeat(len),
             p.gpus,
+            concrete.gpus_of(p.id).map(|g| g.to_string()).unwrap_or_default(),
             d,
             p.start
         );
@@ -37,8 +44,8 @@ fn main() {
         SchedTask { id: 2, duration: 1.5, gpus: 1 },
         SchedTask { id: 3, duration: 2.0, gpus: 2 },
     ];
-    gantt("(a) SJF", &tasks, &sjf_schedule(&tasks, 2));
-    gantt("(b) ALTO (exact B&B)", &tasks, &solve(&tasks, 2).unwrap());
+    gantt("(a) SJF", &tasks, &sjf_schedule(&tasks, 2), 2);
+    gantt("(b) ALTO (exact B&B)", &tasks, &solve(&tasks, 2).unwrap(), 2);
 
     banner("solver quality + latency on random 8-GPU instances");
     let mut t = Table::new(&["n tasks", "opt/LB", "SJF/opt", "FCFS/opt", "LPT/opt", "solve ms"]);

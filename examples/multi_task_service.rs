@@ -51,12 +51,12 @@ fn main() -> anyhow::Result<()> {
     println!("running {} tasks' searches (simulated executors)...", specs.len());
     let report = svc.run_service(&specs)?;
 
-    println!("\n{:<8} {:>5} {:>10} {:>10} {:>9} {:>7}",
-             "task", "gpus", "est(s)", "actual(s)", "best-val", "saved%");
-    for o in &report.outcomes {
+    println!("\n{:<8} {:>5} {:>12} {:>10} {:>10} {:>9} {:>7}",
+             "task", "gpus", "placed-on", "est(s)", "actual(s)", "best-val", "saved%");
+    for (o, p) in report.outcomes.iter().zip(&report.placements) {
         println!(
-            "{:<8} {:>5} {:>10.0} {:>10.0} {:>9.4} {:>7.1}",
-            o.name, o.gpus, o.est_duration, o.actual_duration, o.best_val,
+            "{:<8} {:>5} {:>12} {:>10.0} {:>10.0} {:>9.4} {:>7.1}",
+            o.name, o.gpus, p.to_string(), o.est_duration, o.actual_duration, o.best_val,
             100.0 * (1.0 - o.samples_used as f64 / o.samples_budget as f64)
         );
     }

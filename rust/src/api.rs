@@ -136,6 +136,7 @@ impl Engine {
             run: early_exit.into_run_config(),
             gpu: self.gpu.clone(),
             n_slots: self.n_slots,
+            ..ServiceConfig::default()
         });
         Ok(svc.run_service(tasks)?.outcomes)
     }

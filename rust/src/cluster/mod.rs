@@ -1,27 +1,45 @@
 //! Cluster simulator substrate: device model, collective cost model,
-//! memory footprint model and the multi-GPU cluster state used by the
-//! inter-task scheduler experiments.
+//! memory footprint model, the NVLink topology/placement layer and the
+//! multi-GPU cluster state used by the inter-task scheduler.
 
 pub mod comm;
 pub mod gpu;
 pub mod memory;
+pub mod topology;
 
 pub use gpu::GpuSpec;
 pub use memory::{estimate as memory_estimate, MemoryEstimate};
+pub use topology::{PlacePolicy, Placement, Topology};
 
-/// A cluster of identical devices with an allocation bitmap — the
-/// inter-task scheduler's resource view.
+/// A cluster of identical devices with an allocation bitmap and an
+/// NVLink island map — the inter-task scheduler's resource view.
+/// Allocations return concrete GPU indices ([`Placement`]) chosen by a
+/// [`PlacePolicy`] over the [`Topology`].
 #[derive(Debug, Clone)]
 pub struct SimCluster {
     pub gpu: GpuSpec,
-    pub free: Vec<bool>,
+    pub topo: Topology,
+    free: Vec<bool>,
 }
 
 impl SimCluster {
+    /// `n_gpus` devices in NVLink islands of 8 (the H100 SXM board
+    /// shape).  Use [`SimCluster::with_topology`] for other maps.
     pub fn new(gpu: GpuSpec, n_gpus: usize) -> SimCluster {
+        let topo = Topology::h100_nodes(n_gpus);
         SimCluster {
             gpu,
+            topo,
             free: vec![true; n_gpus],
+        }
+    }
+
+    pub fn with_topology(gpu: GpuSpec, topo: Topology) -> SimCluster {
+        let n = topo.len();
+        SimCluster {
+            gpu,
+            topo,
+            free: vec![true; n],
         }
     }
 
@@ -37,29 +55,51 @@ impl SimCluster {
         self.free.iter().filter(|&&f| f).count()
     }
 
-    /// Allocate `k` GPUs; returns their indices or None if unavailable.
-    pub fn allocate(&mut self, k: usize) -> Option<Vec<usize>> {
-        if self.available() < k {
-            return None;
-        }
-        let mut got = Vec::with_capacity(k);
-        for (i, f) in self.free.iter_mut().enumerate() {
-            if *f {
-                *f = false;
-                got.push(i);
-                if got.len() == k {
-                    break;
-                }
-            }
-        }
-        Some(got)
+    pub fn is_free(&self, gpu: usize) -> bool {
+        self.free[gpu]
     }
 
-    pub fn release(&mut self, gpus: &[usize]) {
-        for &g in gpus {
-            assert!(!self.free[g], "double release of GPU {g}");
+    /// The current free bitmap (true = free).
+    pub fn free_mask(&self) -> &[bool] {
+        &self.free
+    }
+
+    /// Allocate `k` GPUs island-aware (first island that holds the whole
+    /// allocation, spilling across the fewest islands otherwise); returns
+    /// their indices or None if unavailable.
+    pub fn allocate(&mut self, k: usize) -> Option<Placement> {
+        self.allocate_with(k, PlacePolicy::IslandFirst)
+    }
+
+    /// Allocate `k` GPUs under an explicit placement policy.
+    pub fn allocate_with(&mut self, k: usize, policy: PlacePolicy) -> Option<Placement> {
+        let p = self.topo.place(&self.free, k, policy)?;
+        for &g in p.gpus() {
+            debug_assert!(self.free[g], "placement chose busy GPU {g}");
+            self.free[g] = false;
+        }
+        Some(p)
+    }
+
+    /// Release a placement.  Double-release is a caller bug: it returns
+    /// an error in release builds (library code must not bring the
+    /// process down) and still panics under `debug_assertions` so tests
+    /// catch the misuse at the source.
+    pub fn release(&mut self, p: &Placement) -> anyhow::Result<()> {
+        for &g in p.gpus() {
+            if g >= self.free.len() {
+                debug_assert!(false, "release of out-of-range GPU {g}");
+                anyhow::bail!("release of out-of-range GPU {g}");
+            }
+            if self.free[g] {
+                debug_assert!(!self.free[g], "double release of GPU {g}");
+                anyhow::bail!("double release of GPU {g}");
+            }
+        }
+        for &g in p.gpus() {
             self.free[g] = true;
         }
+        Ok(())
     }
 }
 
@@ -77,17 +117,113 @@ mod tests {
         assert!(c.allocate(5).is_none());
         let b = c.allocate(4).unwrap();
         assert_eq!(c.available(), 0);
-        c.release(&a);
-        c.release(&b);
+        assert!(!a.overlaps(&b));
+        c.release(&a).unwrap();
+        c.release(&b).unwrap();
         assert_eq!(c.available(), 8);
     }
 
     #[test]
+    #[cfg(debug_assertions)]
     #[should_panic(expected = "double release")]
-    fn double_release_panics() {
+    fn double_release_panics_in_debug() {
         let mut c = SimCluster::h100s(2);
         let a = c.allocate(1).unwrap();
-        c.release(&a);
-        c.release(&a);
+        c.release(&a).unwrap();
+        let _ = c.release(&a);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn double_release_is_an_error_in_release() {
+        let mut c = SimCluster::h100s(2);
+        let a = c.allocate(1).unwrap();
+        c.release(&a).unwrap();
+        let err = c.release(&a).unwrap_err();
+        assert!(err.to_string().contains("double release"), "{err}");
+        // the error left the bitmap untouched and usable
+        assert_eq!(c.available(), 2);
+        assert!(c.allocate(2).is_some());
+    }
+
+    #[test]
+    fn allocation_prefers_one_island() {
+        // 16 GPUs in two islands; leave island 0 with 3 free and ask for 4
+        let mut c = SimCluster::h100s(16);
+        let head = c
+            .allocate_with(5, PlacePolicy::FirstFit)
+            .unwrap();
+        assert_eq!(head.gpus(), &[0, 1, 2, 3, 4]);
+        let wide = c.allocate(4).unwrap();
+        assert!(
+            !c.topo.is_cross_island(&wide),
+            "island-aware allocate spilled needlessly: {wide}"
+        );
+        assert_eq!(wide.gpus(), &[8, 9, 10, 11]);
+    }
+
+    #[test]
+    fn prop_allocator_invariants() {
+        use crate::util::prop::{prop_assert, prop_check};
+        // random allocate/release interleavings: no double-allocation,
+        // conservation of capacity, placements in bounds and pairwise
+        // disjoint across live tasks
+        prop_check("allocator conserves and never double-books", 120, |g| {
+            let n = g.usize(1..=24);
+            let mut c = SimCluster::with_topology(
+                GpuSpec::h100_sxm5(),
+                Topology::uniform(n, g.usize(1..=8)),
+            );
+            let mut live: Vec<Placement> = Vec::new();
+            for _ in 0..g.usize(1..=40) {
+                if g.bool() || live.is_empty() {
+                    let k = g.usize(1..=n);
+                    let before = c.available();
+                    match c.allocate_with(
+                        k,
+                        *g.choice(&[
+                            PlacePolicy::FirstFit,
+                            PlacePolicy::IslandFirst,
+                            PlacePolicy::BestFit,
+                            PlacePolicy::FragMin,
+                        ]),
+                    ) {
+                        Some(p) => {
+                            prop_assert(before >= k, "allocated beyond capacity")?;
+                            prop_assert(
+                                c.available() == before - k,
+                                format!("available {} after taking {k} of {before}", c.available()),
+                            )?;
+                            prop_assert(
+                                p.gpus().iter().all(|&gp| gp < n),
+                                format!("out of bounds: {p}"),
+                            )?;
+                            for q in &live {
+                                prop_assert(
+                                    !p.overlaps(q),
+                                    format!("double-allocation: {p} overlaps {q}"),
+                                )?;
+                            }
+                            live.push(p);
+                        }
+                        None => prop_assert(before < k, "refused a feasible allocation")?,
+                    }
+                } else {
+                    let idx = g.usize(0..=live.len() - 1);
+                    let p = live.swap_remove(idx);
+                    let before = c.available();
+                    c.release(&p).map_err(|e| e.to_string())?;
+                    prop_assert(
+                        c.available() == before + p.len(),
+                        "release must return exactly what was held",
+                    )?;
+                }
+            }
+            let held: usize = live.iter().map(|p| p.len()).sum();
+            prop_assert(
+                c.available() + held == n,
+                format!("conservation: {} free + {held} held != {n}", c.available()),
+            )
+        });
     }
 }

@@ -1,0 +1,488 @@
+//! NVLink topology model and concrete GPU placement.
+//!
+//! The paper's testbed (like every H100 deployment) is not a flat pool of
+//! interchangeable devices: GPUs live in *NVLink islands* (one SXM board /
+//! NVSwitch domain, typically 8 GPUs).  Collectives that stay inside one
+//! island ride NVLink at full `link_bw`; a placement that spans islands
+//! drags every ring step down to the inter-island fabric (IB/PCIe), an
+//! order of magnitude slower.  Which *physical* GPUs a task lands on —
+//! not just how many — therefore decides its communication cost, and
+//! fragmentation-blind allocation quietly turns 4-GPU jobs into
+//! cross-island stragglers (the PLoRA/tLoRA observation).
+//!
+//! This module owns:
+//!
+//! * [`Topology`] — the island map over a [`GpuSpec`] cluster plus the
+//!   inter-island bandwidth derating, and the comm-cost scoring built on
+//!   [`crate::cluster::comm`];
+//! * [`Placement`] — a first-class set of concrete GPU indices, the type
+//!   the solver, the inter-task scheduler, the simharness event log and
+//!   the service report all carry;
+//! * [`PlacePolicy`] — the placement disciplines: topology-blind
+//!   `FirstFit` (the old bitmap scan, kept as the ablation baseline),
+//!   island-aware `IslandFirst` / `BestFit`, and comm-cost-scored
+//!   `FragMin`.
+//!
+//! Everything here is deterministic: policies break ties on the lowest
+//! island id / lowest GPU index, so the same (free bitmap, k, policy)
+//! always yields the same indices — the property the simharness
+//! bit-identical-replay contract leans on.
+
+use super::comm;
+use super::gpu::GpuSpec;
+
+/// Concrete GPU indices held by (or proposed for) one task.  Indices are
+/// kept sorted and unique; `SimCluster` and the schedulers preserve that
+/// invariant.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Placement {
+    gpus: Vec<usize>,
+}
+
+impl Placement {
+    pub fn new(mut gpus: Vec<usize>) -> Placement {
+        gpus.sort_unstable();
+        gpus.dedup();
+        Placement { gpus }
+    }
+
+    pub fn gpus(&self) -> &[usize] {
+        &self.gpus
+    }
+
+    pub fn len(&self) -> usize {
+        self.gpus.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gpus.is_empty()
+    }
+
+    /// Do two placements share any GPU?
+    pub fn overlaps(&self, other: &Placement) -> bool {
+        // both sorted: linear merge scan
+        let (mut i, mut j) = (0, 0);
+        while i < self.gpus.len() && j < other.gpus.len() {
+            match self.gpus[i].cmp(&other.gpus[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => return true,
+            }
+        }
+        false
+    }
+}
+
+impl std::fmt::Display for Placement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[")?;
+        for (i, g) in self.gpus.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{g}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// How to pick concrete GPUs for a k-wide allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacePolicy {
+    /// Topology-blind lowest-free-index scan (the legacy `SimCluster`
+    /// behaviour; kept as the ablation baseline).
+    FirstFit,
+    /// Fill the first island that can hold the whole allocation; spill
+    /// across the fewest islands (most-free first) only when none can.
+    IslandFirst,
+    /// Like `IslandFirst`, but among islands that fit prefer the one with
+    /// the *least* free capacity left — packs islands tight, keeping
+    /// whole islands free for wide tasks (best-fit decreasing).
+    BestFit,
+    /// Enumerate candidate placements and take the one with the lowest
+    /// comm-cost score, tie-broken toward less leftover fragmentation —
+    /// the full `cluster::comm`-scored discipline.
+    FragMin,
+}
+
+/// NVLink island map over an n-GPU cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    /// Island id per GPU index.
+    island_of: Vec<usize>,
+    n_islands: usize,
+    /// Divisor applied to `GpuSpec::link_bw` when a collective crosses
+    /// islands (NVLink 450 GB/s vs ~50 GB/s IB ⇒ default 8×).
+    pub inter_island_penalty: f64,
+}
+
+impl Topology {
+    /// Consecutive islands of `island_size` GPUs (the last may be short).
+    /// `island_size == 0` is treated as one flat island.
+    pub fn uniform(n_gpus: usize, island_size: usize) -> Topology {
+        let size = if island_size == 0 { n_gpus.max(1) } else { island_size };
+        let island_of: Vec<usize> = (0..n_gpus).map(|g| g / size).collect();
+        let n_islands = island_of.last().map(|&i| i + 1).unwrap_or(0);
+        Topology {
+            island_of,
+            n_islands,
+            inter_island_penalty: 8.0,
+        }
+    }
+
+    /// One flat NVLink domain (every GPU a peer) — the seed's implicit
+    /// assumption, useful for ablations.
+    pub fn flat(n_gpus: usize) -> Topology {
+        Topology::uniform(n_gpus, 0)
+    }
+
+    /// H100 SXM boards: islands of 8.
+    pub fn h100_nodes(n_gpus: usize) -> Topology {
+        Topology::uniform(n_gpus, 8)
+    }
+
+    pub fn len(&self) -> usize {
+        self.island_of.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.island_of.is_empty()
+    }
+
+    pub fn n_islands(&self) -> usize {
+        self.n_islands
+    }
+
+    pub fn island_of(&self, gpu: usize) -> usize {
+        self.island_of[gpu]
+    }
+
+    /// GPU indices belonging to island `i`.
+    pub fn island_members(&self, i: usize) -> Vec<usize> {
+        (0..self.len()).filter(|&g| self.island_of[g] == i).collect()
+    }
+
+    /// Number of distinct islands a placement touches.
+    pub fn islands_spanned(&self, p: &Placement) -> usize {
+        let mut seen = vec![false; self.n_islands];
+        let mut n = 0;
+        for &g in p.gpus() {
+            if !seen[self.island_of[g]] {
+                seen[self.island_of[g]] = true;
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Does the placement cross an island boundary?
+    pub fn is_cross_island(&self, p: &Placement) -> bool {
+        self.islands_spanned(p) > 1
+    }
+
+    /// Effective per-direction link bandwidth for a collective over the
+    /// placement: full NVLink inside one island, derated by
+    /// `inter_island_penalty` once any ring step leaves the island.
+    pub fn effective_link_bw(&self, gpu: &GpuSpec, p: &Placement) -> f64 {
+        if self.islands_spanned(p) > 1 {
+            gpu.link_bw / self.inter_island_penalty
+        } else {
+            gpu.link_bw
+        }
+    }
+
+    /// Comm-cost score of a placement: ring all-reduce time of `bytes`
+    /// over the placement's ranks at the effective (slowest-link)
+    /// bandwidth — the α–β model of `cluster::comm` with the island
+    /// derating applied.  This is what `PlacePolicy::FragMin` minimizes
+    /// and what the harness sums into its fragmentation report.
+    pub fn placement_comm_cost(&self, gpu: &GpuSpec, p: &Placement, bytes: f64) -> f64 {
+        if p.len() <= 1 {
+            return 0.0;
+        }
+        let mut derated = gpu.clone();
+        derated.link_bw = self.effective_link_bw(gpu, p);
+        comm::allreduce_time(&derated, bytes, p.len())
+    }
+
+    /// Free-GPU count per island for a bitmap.
+    fn free_per_island(&self, free: &[bool]) -> Vec<usize> {
+        let mut per = vec![0usize; self.n_islands];
+        for (g, &f) in free.iter().enumerate() {
+            if f {
+                per[self.island_of[g]] += 1;
+            }
+        }
+        per
+    }
+
+    /// Lowest `k` free indices inside island `i` (caller checked count).
+    fn take_in_island(&self, free: &[bool], island: usize, k: usize) -> Vec<usize> {
+        free.iter()
+            .enumerate()
+            .filter(|&(g, &f)| f && self.island_of[g] == island)
+            .map(|(g, _)| g)
+            .take(k)
+            .collect()
+    }
+
+    /// Spill placement: islands by descending free count (ties: lower
+    /// island id), taking lowest free indices from each — touches the
+    /// fewest islands possible for the given bitmap.
+    fn spill(&self, free: &[bool], k: usize) -> Vec<usize> {
+        let per = self.free_per_island(free);
+        let mut islands: Vec<usize> = (0..self.n_islands).collect();
+        islands.sort_by(|&a, &b| per[b].cmp(&per[a]).then(a.cmp(&b)));
+        let mut got = Vec::with_capacity(k);
+        for i in islands {
+            if got.len() == k {
+                break;
+            }
+            got.extend(self.take_in_island(free, i, k - got.len()));
+        }
+        got.sort_unstable();
+        got
+    }
+
+    /// Choose `k` concrete GPUs from the free bitmap under `policy`.
+    /// Returns `None` when fewer than `k` GPUs are free.  The returned
+    /// indices are sorted and unique.
+    pub fn place(&self, free: &[bool], k: usize, policy: PlacePolicy) -> Option<Placement> {
+        debug_assert_eq!(free.len(), self.len(), "bitmap/topology size mismatch");
+        let total_free = free.iter().filter(|&&f| f).count();
+        if k == 0 || total_free < k {
+            return if k == 0 { Some(Placement::default()) } else { None };
+        }
+        let per = self.free_per_island(free);
+        let got = match policy {
+            PlacePolicy::FirstFit => free
+                .iter()
+                .enumerate()
+                .filter(|&(_, &f)| f)
+                .map(|(g, _)| g)
+                .take(k)
+                .collect(),
+            PlacePolicy::IslandFirst => {
+                match (0..self.n_islands).find(|&i| per[i] >= k) {
+                    Some(i) => self.take_in_island(free, i, k),
+                    None => self.spill(free, k),
+                }
+            }
+            PlacePolicy::BestFit => {
+                let best = (0..self.n_islands)
+                    .filter(|&i| per[i] >= k)
+                    .min_by(|&a, &b| per[a].cmp(&per[b]).then(a.cmp(&b)));
+                match best {
+                    Some(i) => self.take_in_island(free, i, k),
+                    None => self.spill(free, k),
+                }
+            }
+            PlacePolicy::FragMin => {
+                // candidates: every island that fits (packed tightest
+                // first) plus the minimal spill; score = comm cost, ties
+                // toward least leftover free capacity in touched islands,
+                // then lexicographically smallest indices.
+                //
+                // The score is computed against a fixed reference spec
+                // (H100) on purpose: all candidates have the same rank
+                // count, so their cost ordering reduces to the
+                // islands-spanned ordering, which is invariant to the
+                // actual GpuSpec — only the *relative* cost matters here.
+                // (The harness's reported `placement_comm_cost` metric
+                // does use the cluster's real spec.)
+                let mut cands: Vec<Vec<usize>> = (0..self.n_islands)
+                    .filter(|&i| per[i] >= k)
+                    .map(|i| self.take_in_island(free, i, k))
+                    .collect();
+                if cands.is_empty() {
+                    cands.push(self.spill(free, k));
+                }
+                let score = |c: &Vec<usize>| -> (f64, usize) {
+                    let p = Placement::new(c.clone());
+                    let cost = self.placement_comm_cost(
+                        &GpuSpec::h100_sxm5(),
+                        &p,
+                        PLACE_SCORE_BYTES,
+                    );
+                    let leftover: usize = {
+                        let mut touched = vec![false; self.n_islands];
+                        for &g in c {
+                            touched[self.island_of[g]] = true;
+                        }
+                        (0..self.n_islands)
+                            .filter(|&i| touched[i])
+                            .map(|i| per[i])
+                            .sum::<usize>()
+                            - k
+                    };
+                    (cost, leftover)
+                };
+                cands
+                    .into_iter()
+                    .min_by(|a, b| {
+                        let (ca, la) = score(a);
+                        let (cb, lb) = score(b);
+                        ca.partial_cmp(&cb)
+                            .unwrap()
+                            .then(la.cmp(&lb))
+                            .then(a.cmp(b))
+                    })
+                    .unwrap()
+            }
+        };
+        debug_assert_eq!(got.len(), k);
+        Some(Placement::new(got))
+    }
+}
+
+/// Nominal gradient-volume used when *scoring* candidate placements
+/// (absolute scale cancels out of the comparison; 1 GB ≈ one 8B-model
+/// LoRA optimizer step's collective traffic).
+pub const PLACE_SCORE_BYTES: f64 = 1.0e9;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bitmap(n: usize, busy: &[usize]) -> Vec<bool> {
+        let mut free = vec![true; n];
+        for &b in busy {
+            free[b] = false;
+        }
+        free
+    }
+
+    #[test]
+    fn uniform_islands() {
+        let t = Topology::uniform(16, 8);
+        assert_eq!(t.n_islands(), 2);
+        assert_eq!(t.island_of(0), 0);
+        assert_eq!(t.island_of(7), 0);
+        assert_eq!(t.island_of(8), 1);
+        assert_eq!(t.island_members(1), (8..16).collect::<Vec<_>>());
+        let flat = Topology::flat(16);
+        assert_eq!(flat.n_islands(), 1);
+        let ragged = Topology::uniform(10, 4);
+        assert_eq!(ragged.n_islands(), 3);
+        assert_eq!(ragged.island_members(2), vec![8, 9]);
+    }
+
+    #[test]
+    fn spanning_and_cost() {
+        let t = Topology::h100_nodes(16);
+        let g = GpuSpec::h100_sxm5();
+        let inside = Placement::new(vec![0, 1, 2, 3]);
+        let across = Placement::new(vec![6, 7, 8, 9]);
+        assert_eq!(t.islands_spanned(&inside), 1);
+        assert_eq!(t.islands_spanned(&across), 2);
+        assert!(!t.is_cross_island(&inside));
+        assert!(t.is_cross_island(&across));
+        let c_in = t.placement_comm_cost(&g, &inside, 1e9);
+        let c_x = t.placement_comm_cost(&g, &across, 1e9);
+        assert!(c_x > c_in, "cross-island must cost more: {c_x} vs {c_in}");
+        // single GPU: no collective
+        assert_eq!(t.placement_comm_cost(&g, &Placement::new(vec![3]), 1e9), 0.0);
+    }
+
+    #[test]
+    fn first_fit_is_the_legacy_scan() {
+        let t = Topology::h100_nodes(16);
+        let free = bitmap(16, &[0, 2]);
+        let p = t.place(&free, 4, PlacePolicy::FirstFit).unwrap();
+        assert_eq!(p.gpus(), &[1, 3, 4, 5]);
+    }
+
+    #[test]
+    fn island_first_avoids_needless_crossing() {
+        let t = Topology::h100_nodes(16);
+        // island 0 has 3 free (5,6,7); island 1 fully free
+        let free = bitmap(16, &[0, 1, 2, 3, 4]);
+        let blind = t.place(&free, 4, PlacePolicy::FirstFit).unwrap();
+        assert!(t.is_cross_island(&blind), "{blind}");
+        for pol in [PlacePolicy::IslandFirst, PlacePolicy::BestFit, PlacePolicy::FragMin] {
+            let aware = t.place(&free, 4, pol).unwrap();
+            assert!(!t.is_cross_island(&aware), "{pol:?} placed {aware}");
+            assert_eq!(aware.gpus(), &[8, 9, 10, 11]);
+        }
+    }
+
+    #[test]
+    fn best_fit_packs_tightest_island() {
+        let t = Topology::h100_nodes(24);
+        // free: island0→2, island1→8, island2→4
+        let mut free = vec![false; 24];
+        for g in [3, 4] {
+            free[g] = true;
+        }
+        for g in 8..16 {
+            free[g] = true;
+        }
+        for g in 20..24 {
+            free[g] = true;
+        }
+        // IslandFirst takes the first island that fits (island 1)...
+        let first = t.place(&free, 3, PlacePolicy::IslandFirst).unwrap();
+        assert_eq!(first.gpus(), &[8, 9, 10]);
+        // ...BestFit packs the tightest fitting island (island 2)
+        let best = t.place(&free, 3, PlacePolicy::BestFit).unwrap();
+        assert_eq!(best.gpus(), &[20, 21, 22]);
+    }
+
+    #[test]
+    fn spill_touches_fewest_islands() {
+        let t = Topology::h100_nodes(16);
+        // 3 free in island 0, 3 free in island 1: a 5-GPU task must span
+        let free = bitmap(16, &[0, 1, 2, 3, 4, 8, 9, 10, 11, 12, 13]);
+        for pol in [PlacePolicy::IslandFirst, PlacePolicy::BestFit, PlacePolicy::FragMin] {
+            let p = t.place(&free, 5, pol).unwrap();
+            assert_eq!(p.len(), 5);
+            assert_eq!(t.islands_spanned(&p), 2);
+        }
+        // infeasible: only 5 free
+        assert!(t.place(&free, 6, PlacePolicy::IslandFirst).is_none());
+    }
+
+    #[test]
+    fn placements_sorted_disjoint_and_sized() {
+        use crate::util::prop::{prop_assert, prop_check};
+        prop_check("place() returns k sorted free unique indices", 120, |g| {
+            let n = g.usize(1..=32);
+            let island = g.usize(1..=8);
+            let t = Topology::uniform(n, island);
+            let free: Vec<bool> = (0..n).map(|_| g.bool()).collect();
+            let navail = free.iter().filter(|&&f| f).count();
+            let k = g.usize(0..=n);
+            let pol = *g.choice(&[
+                PlacePolicy::FirstFit,
+                PlacePolicy::IslandFirst,
+                PlacePolicy::BestFit,
+                PlacePolicy::FragMin,
+            ]);
+            match t.place(&free, k, pol) {
+                None => prop_assert(k > navail, format!("refused feasible k={k} avail={navail}")),
+                Some(p) => {
+                    prop_assert(p.len() == k, format!("{pol:?} returned {} of {k}", p.len()))?;
+                    prop_assert(
+                        p.gpus().windows(2).all(|w| w[0] < w[1]),
+                        format!("unsorted/dup {p}"),
+                    )?;
+                    prop_assert(
+                        p.gpus().iter().all(|&gp| gp < n && free[gp]),
+                        format!("{pol:?} picked busy/out-of-range gpu in {p}"),
+                    )
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn overlap_detection() {
+        let a = Placement::new(vec![0, 2, 4]);
+        let b = Placement::new(vec![1, 3, 5]);
+        let c = Placement::new(vec![4, 5]);
+        assert!(!a.overlaps(&b));
+        assert!(a.overlaps(&c));
+        assert!(b.overlaps(&c));
+        assert!(!Placement::default().overlaps(&a));
+    }
+}

@@ -46,6 +46,9 @@ pub struct TaskSpec {
     /// Training-set size in samples (drives the duration estimate d_i).
     pub train_samples: usize,
     pub seed: u64,
+    /// Scheduling priority (higher wins; only consulted when the harness
+    /// runs with preemption-on-arrival enabled).  Defaults to 0.
+    pub priority: i64,
 }
 
 impl TaskSpec {
@@ -71,6 +74,7 @@ impl TaskSpec {
             ("seq_len", Json::Num(self.seq_len as f64)),
             ("train_samples", Json::Num(self.train_samples as f64)),
             ("seed", Json::Num(self.seed as f64)),
+            ("priority", Json::Num(self.priority as f64)),
         ])
     }
 
@@ -97,6 +101,7 @@ impl TaskSpec {
             seq_len: u("seq_len", 64),
             train_samples: u("train_samples", 1024),
             seed: j.get("seed").and_then(|v| v.as_i64()).unwrap_or(0) as u64,
+            priority: j.get("priority").and_then(|v| v.as_i64()).unwrap_or(0),
         })
     }
 
@@ -124,6 +129,7 @@ impl Default for TaskSpec {
             seq_len: 32,
             train_samples: 1024,
             seed: 0,
+            priority: 0,
         }
     }
 }
@@ -145,6 +151,7 @@ mod tests {
             seq_len: 128,
             train_samples: 9000,
             seed: 7,
+            priority: 2,
         };
         let j = Json::parse(&t.to_json().to_string()).unwrap();
         assert_eq!(TaskSpec::from_json(&j).unwrap(), t);

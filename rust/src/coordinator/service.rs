@@ -11,6 +11,7 @@ use std::collections::BTreeMap;
 use anyhow::Result;
 
 use crate::cluster::gpu::GpuSpec;
+use crate::cluster::{PlacePolicy, Placement};
 use crate::config::TaskSpec;
 use crate::sched::inter::Policy;
 use crate::simharness::{EventLog, HarnessConfig, SimEngine};
@@ -22,6 +23,12 @@ use super::task_runner::{RunConfig, TaskResult};
 pub struct ServiceConfig {
     pub total_gpus: usize,
     pub policy: Policy,
+    /// How concrete GPUs are chosen for each start.
+    pub place: PlacePolicy,
+    /// NVLink island width of the cluster topology (8 = H100 boards).
+    pub island_size: usize,
+    /// Let higher-priority tenants evict lower-priority runners.
+    pub preempt_on_arrival: bool,
     pub run: RunConfig,
     pub gpu: GpuSpec,
     /// Co-located adapter slots per executor.
@@ -33,6 +40,9 @@ impl Default for ServiceConfig {
         ServiceConfig {
             total_gpus: 8,
             policy: Policy::Optimal,
+            place: PlacePolicy::IslandFirst,
+            island_size: 8,
+            preempt_on_arrival: false,
             run: RunConfig::default(),
             gpu: GpuSpec::h100_sxm5(),
             n_slots: 4,
@@ -46,6 +56,9 @@ impl ServiceConfig {
         HarnessConfig {
             total_gpus: self.total_gpus,
             policy: self.policy,
+            place: self.place,
+            island_size: self.island_size,
+            preempt_on_arrival: self.preempt_on_arrival,
             run: self.run.clone(),
             gpu: self.gpu.clone(),
             n_slots: self.n_slots,
@@ -75,7 +88,11 @@ pub struct TaskOutcome {
 pub struct ServiceReport {
     pub makespan: f64,
     pub outcomes: Vec<TaskOutcome>,
-    /// The realized cluster timeline (arrivals / starts / completions).
+    /// Concrete GPU indices each task ended on, in submission order —
+    /// the tenant-visible answer to "where did my job run?".
+    pub placements: Vec<Placement>,
+    /// The realized cluster timeline (arrivals / starts / completions,
+    /// plus preempt/placed/migrate when preemption is enabled).
     pub events: EventLog,
 }
 
@@ -112,6 +129,7 @@ impl Service {
         Ok(ServiceReport {
             makespan: report.makespan,
             outcomes: report.outcomes,
+            placements: report.placements,
             events: report.log,
         })
     }
@@ -193,6 +211,31 @@ mod tests {
         assert!(report.makespan >= longest - 1e-9);
         assert!(report.makespan <= total + 1e-9);
         assert!(report.total_saved_ratio() > 0.3);
+        // the report names concrete GPU indices for every task
+        assert_eq!(report.placements.len(), specs.len());
+        for (o, p) in report.outcomes.iter().zip(&report.placements) {
+            assert_eq!(p.len(), o.gpus, "task '{}' placement {p}", o.name);
+        }
+        // tasks running concurrently never share a GPU: check the 70b
+        // (4-GPU) task against the log's other live placements
+        let ev = report.events.events();
+        for (i, a) in ev.iter().enumerate() {
+            if let crate::simharness::EventKind::Start { placement, .. } = &a.kind {
+                for b in &ev[..i] {
+                    if let crate::simharness::EventKind::Start {
+                        placement: other, ..
+                    } = &b.kind
+                    {
+                        let other_done = ev[..i].iter().any(|e| {
+                            matches!(e.kind, crate::simharness::EventKind::Complete { task, .. } if task == b.kind.task())
+                        });
+                        if !other_done {
+                            assert!(!placement.overlaps(other));
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -3,16 +3,29 @@
 //! completion — which frequently happens earlier than the worst-case d_i
 //! because of early exits — freed GPUs are instantly backfilled.
 //!
+//! Capacity is no longer a scalar: the scheduler owns a
+//! [`SimCluster`] whose allocation bitmap it keeps consistent at every
+//! event, so every start decision carries the *concrete* GPU indices the
+//! task runs on (a [`Placement`] chosen by the cluster's
+//! [`PlacePolicy`] over its NVLink [`crate::cluster::Topology`]).  With
+//! `enable_preemption` set, a higher-priority arrival that cannot fit
+//! evicts the youngest strictly-lower-priority running tasks; evicted
+//! work returns to the queue with its remaining duration and restarts —
+//! possibly on different GPUs (a migration) — at the next replan that
+//! fits it.
+//!
 //! The scheduler itself owns no event loop: callers drive it through
 //! `submit_at` (arrival at a virtual time), `peek_next_completion` /
-//! `complete_next` (the next completion event) and `drain_started`
-//! (start decisions made by the last replans).  `simharness::engine` is
-//! the canonical driver; `run_to_completion` remains as the degenerate
-//! all-arrive-at-zero loop.
+//! `complete_next` (the next completion event), `drain_started` and
+//! `drain_preempted` (decisions made by the last replans).
+//! `simharness::engine` is the canonical driver; `run_to_completion`
+//! remains as the degenerate all-arrive-at-zero loop.
 
 use std::collections::BTreeMap;
 
 use anyhow::Result;
+
+use crate::cluster::{PlacePolicy, Placement, SimCluster};
 
 use super::solver::{self, SchedTask, Schedule};
 
@@ -41,42 +54,108 @@ impl Policy {
 #[derive(Debug, Clone)]
 struct LiveTask {
     gpus: usize,
-    /// Estimated duration (the solver plans with this).
-    est_duration: f64,
-    /// Actual duration (revealed at completion; early exits make it
-    /// shorter than est_duration).
-    actual_duration: f64,
+    /// Estimated *remaining* duration (the solver plans with this;
+    /// shrinks when a preemption interrupts a run).
+    est_remaining: f64,
+    /// Actual remaining duration (revealed at completion; early exits
+    /// make it shorter than the estimate).
+    actual_remaining: f64,
+    priority: i64,
+    /// Start of the *current* run (None while queued or preempted).
     started_at: Option<f64>,
+    first_started_at: Option<f64>,
     finished_at: Option<f64>,
+    /// Concrete GPUs held while running.
+    placement: Option<Placement>,
+    /// GPUs held before the last preemption — lets the driver tell a
+    /// same-GPU resume from a migration.
+    last_placement: Option<Placement>,
+    preemptions: usize,
+}
+
+/// One start decision: the task, when, and the concrete GPUs it got.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StartDecision {
+    pub id: usize,
+    pub time: f64,
+    pub placement: Placement,
+    /// `Some(gpus held before preemption)` when this start resumes a
+    /// previously preempted task — equal to `placement` for a same-GPU
+    /// resume, different for a migration.
+    pub resumed_from: Option<Placement>,
+}
+
+/// One preemption decision: the task evicted and the GPUs it released.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PreemptDecision {
+    pub id: usize,
+    pub time: f64,
+    pub placement: Placement,
 }
 
 /// Event-driven cluster scheduler simulation: feed it tasks (arrival
 /// events) and it plays out the timeline, replanning on arrivals and
 /// completions, returning the realized makespan.
 pub struct InterTaskScheduler {
-    pub total_gpus: usize,
     pub policy: Policy,
+    /// How concrete GPUs are chosen for each start.
+    pub place: PlacePolicy,
+    /// Allow higher-priority arrivals to evict the youngest
+    /// strictly-lower-priority running tasks when they cannot fit.
+    pub enable_preemption: bool,
+    cluster: SimCluster,
     tasks: BTreeMap<usize, LiveTask>,
     clock: f64,
-    free_gpus: usize,
     running: Vec<(usize, f64)>, // (task id, completion time)
-    /// (task id, start time) decisions since the last `drain_started`.
-    started_log: Vec<(usize, f64)>,
+    /// Start decisions since the last `drain_started`.
+    started_log: Vec<StartDecision>,
+    /// Preemption decisions since the last `drain_preempted`.
+    preempted_log: Vec<PreemptDecision>,
     pub replans: usize,
+    /// Total evictions across the run.
+    pub preemptions: usize,
 }
 
 impl InterTaskScheduler {
+    /// `total_gpus` H100s in NVLink islands of 8, island-aware placement.
     pub fn new(total_gpus: usize, policy: Policy) -> InterTaskScheduler {
+        InterTaskScheduler::with_cluster(SimCluster::h100s(total_gpus), policy)
+    }
+
+    /// Schedule over an explicit cluster (topology included).
+    pub fn with_cluster(cluster: SimCluster, policy: Policy) -> InterTaskScheduler {
         InterTaskScheduler {
-            total_gpus,
             policy,
+            place: PlacePolicy::IslandFirst,
+            enable_preemption: false,
+            cluster,
             tasks: BTreeMap::new(),
             clock: 0.0,
-            free_gpus: total_gpus,
             running: Vec::new(),
             started_log: Vec::new(),
+            preempted_log: Vec::new(),
             replans: 0,
+            preemptions: 0,
         }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.cluster.total()
+    }
+
+    /// The cluster (bitmap + topology) as the scheduler sees it.
+    pub fn cluster(&self) -> &SimCluster {
+        &self.cluster
+    }
+
+    /// Concrete GPUs currently held by a running task.
+    pub fn placement_of(&self, id: usize) -> Option<&Placement> {
+        self.tasks.get(&id)?.placement.as_ref()
+    }
+
+    /// Times a task was preempted so far.
+    pub fn preemptions_of(&self, id: usize) -> usize {
+        self.tasks.get(&id).map(|t| t.preemptions).unwrap_or(0)
     }
 
     /// Submit a task (arrival event at the current clock).
@@ -94,6 +173,20 @@ impl InterTaskScheduler {
         actual_duration: f64,
         now: f64,
     ) {
+        self.submit_at_prio(id, gpus, est_duration, actual_duration, now, 0);
+    }
+
+    /// `submit_at` with an explicit priority (higher wins; only matters
+    /// when `enable_preemption` is set).
+    pub fn submit_at_prio(
+        &mut self,
+        id: usize,
+        gpus: usize,
+        est_duration: f64,
+        actual_duration: f64,
+        now: f64,
+        priority: i64,
+    ) {
         if now > self.clock {
             self.clock = now;
         }
@@ -101,13 +194,18 @@ impl InterTaskScheduler {
             id,
             LiveTask {
                 gpus,
-                est_duration,
-                actual_duration,
+                est_remaining: est_duration,
+                actual_remaining: actual_duration,
+                priority,
                 started_at: None,
+                first_started_at: None,
                 finished_at: None,
+                placement: None,
+                last_placement: None,
+                preemptions: 0,
             },
         );
-        self.replan();
+        self.replan(true); // arrival: preemption (if enabled) may fire
     }
 
     /// Current virtual time (last processed event).
@@ -117,35 +215,87 @@ impl InterTaskScheduler {
 
     /// GPUs not currently held by a running task.
     pub fn free_gpus(&self) -> usize {
-        self.free_gpus
+        self.cluster.available()
     }
 
     /// Start decisions made since the last drain, in decision order —
-    /// the harness turns these into `Start` events.
-    pub fn drain_started(&mut self) -> Vec<(usize, f64)> {
+    /// the harness turns these into `Start` / `Placed` / `Migrate`
+    /// events.
+    pub fn drain_started(&mut self) -> Vec<StartDecision> {
         std::mem::take(&mut self.started_log)
     }
 
-    /// Waiting tasks, as solver inputs (estimated durations).
+    /// Preemption decisions made since the last drain, in decision
+    /// order — the harness turns these into `Preempt` events.
+    pub fn drain_preempted(&mut self) -> Vec<PreemptDecision> {
+        std::mem::take(&mut self.preempted_log)
+    }
+
+    /// Waiting tasks, as solver inputs (estimated remaining durations).
     fn waiting(&self) -> Vec<SchedTask> {
         self.tasks
             .iter()
-            .filter(|(_, t)| t.started_at.is_none())
+            .filter(|(_, t)| t.started_at.is_none() && t.finished_at.is_none())
             .map(|(&id, t)| SchedTask {
                 id,
-                duration: t.est_duration,
+                duration: t.est_remaining,
                 gpus: t.gpus,
             })
             .collect()
     }
 
     fn start_task(&mut self, id: usize) {
+        let policy = self.place;
+        let clock = self.clock;
         let t = self.tasks.get_mut(&id).unwrap();
-        t.started_at = Some(self.clock);
-        let completion = self.clock + t.actual_duration;
-        self.free_gpus -= t.gpus;
+        t.started_at = Some(clock);
+        if t.first_started_at.is_none() {
+            t.first_started_at = Some(clock);
+        }
+        let completion = clock + t.actual_remaining;
+        let gpus = t.gpus;
+        let resumed_from = t.last_placement.take();
+        let p = self
+            .cluster
+            .allocate_with(gpus, policy)
+            .expect("replan checked capacity before starting");
+        let t = self.tasks.get_mut(&id).unwrap();
+        t.placement = Some(p.clone());
         self.running.push((id, completion));
-        self.started_log.push((id, self.clock));
+        self.started_log.push(StartDecision {
+            id,
+            time: clock,
+            placement: p,
+            resumed_from,
+        });
+    }
+
+    /// Evict a running task: release its GPUs, shrink its remaining
+    /// durations by the time it ran, and return it to the waiting queue.
+    fn evict(&mut self, id: usize) {
+        let idx = self
+            .running
+            .iter()
+            .position(|&(rid, _)| rid == id)
+            .expect("evicting a task that is not running");
+        self.running.remove(idx);
+        let clock = self.clock;
+        let t = self.tasks.get_mut(&id).unwrap();
+        let elapsed = clock - t.started_at.take().expect("running task has a start");
+        t.actual_remaining = (t.actual_remaining - elapsed).max(0.0);
+        t.est_remaining = (t.est_remaining - elapsed).max(1e-9);
+        t.preemptions += 1;
+        let p = t.placement.take().expect("running task holds a placement");
+        t.last_placement = Some(p.clone());
+        self.cluster
+            .release(&p)
+            .expect("scheduler-held placement releases cleanly");
+        self.preemptions += 1;
+        self.preempted_log.push(PreemptDecision {
+            id,
+            time: clock,
+            placement: p,
+        });
     }
 
     /// Re-plan the waiting queue and start whatever should run *now*.
@@ -155,8 +305,21 @@ impl InterTaskScheduler {
     /// (no lookahead, the behaviour of naive cluster queues) — while the
     /// makespan-aware policies (Optimal, LPT) place out of order per the
     /// solver plan and backfill on every event.
-    fn replan(&mut self) {
+    /// `allow_preempt` is true only for arrival-triggered replans —
+    /// preemption is an *arrival* policy (`preempt_on_arrival`);
+    /// completions free capacity and only backfill.
+    fn replan(&mut self, allow_preempt: bool) {
         self.replans += 1;
+        self.plan_pass();
+        if self.enable_preemption && allow_preempt && self.preempt_pass() {
+            // a preemption can free more than the preemptor took (a
+            // 4-GPU victim for a 1-GPU urgent): backfill the remainder
+            // now rather than letting it idle until the next event
+            self.plan_pass();
+        }
+    }
+
+    fn plan_pass(&mut self) {
         match self.policy {
             Policy::Fcfs | Policy::Sjf => {
                 let mut waiting = self.waiting();
@@ -168,7 +331,7 @@ impl InterTaskScheduler {
                     waiting.sort_by_key(|t| t.id);
                 }
                 for w in waiting {
-                    if w.gpus <= self.free_gpus {
+                    if w.gpus <= self.cluster.available() {
                         self.start_task(w.id);
                     } else {
                         break; // strict: the head blocks the queue
@@ -184,55 +347,117 @@ impl InterTaskScheduler {
                 // their estimated completion lands before that shadow
                 // time — wide tasks are never starved by narrow ones.
                 let waiting = self.waiting();
-                if waiting.is_empty() {
-                    return;
-                }
-                let plan = match self.policy.plan(&waiting, self.total_gpus) {
-                    Ok(p) => p,
-                    Err(_) => return,
-                };
-                let mut order: Vec<(f64, usize, usize)> = plan
-                    .placements
-                    .iter()
-                    .map(|p| (p.start, p.id, p.gpus))
-                    .collect();
-                order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
-                let mut shadow: Option<f64> = None;
-                for (_, id, gpus) in order {
-                    if let Some(sh) = shadow {
-                        // backfill window: must fit now AND finish (by
-                        // estimate) before the head's reservation
-                        let est = self.tasks[&id].est_duration;
-                        if gpus <= self.free_gpus && self.clock + est <= sh + 1e-9 {
-                            self.start_task(id);
-                        }
-                    } else if gpus <= self.free_gpus {
-                        self.start_task(id);
-                    } else {
-                        // head blocked: reserve at the earliest estimated
-                        // release time that frees enough GPUs
-                        let mut rel: Vec<(f64, usize)> = self
-                            .running
-                            .iter()
-                            .map(|&(rid, _)| {
-                                let t = &self.tasks[&rid];
-                                (t.started_at.unwrap() + t.est_duration, t.gpus)
-                            })
-                            .collect();
-                        rel.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-                        let mut virt_free = self.free_gpus;
-                        let mut sh = self.clock;
-                        for (when, g) in rel {
-                            if virt_free >= gpus {
-                                break;
-                            }
-                            virt_free += g;
-                            sh = when.max(self.clock);
-                        }
-                        shadow = Some(sh);
+                if !waiting.is_empty() {
+                    if let Ok(plan) = self.policy.plan(&waiting, self.cluster.total()) {
+                        self.start_per_plan(&plan);
                     }
                 }
             }
+        }
+    }
+
+    fn start_per_plan(&mut self, plan: &Schedule) {
+        let mut order: Vec<(f64, usize, usize)> = plan
+            .placements
+            .iter()
+            .map(|p| (p.start, p.id, p.gpus))
+            .collect();
+        order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let mut shadow: Option<f64> = None;
+        for (_, id, gpus) in order {
+            if let Some(sh) = shadow {
+                // backfill window: must fit now AND finish (by
+                // estimate) before the head's reservation
+                let est = self.tasks[&id].est_remaining;
+                if gpus <= self.cluster.available() && self.clock + est <= sh + 1e-9 {
+                    self.start_task(id);
+                }
+            } else if gpus <= self.cluster.available() {
+                self.start_task(id);
+            } else {
+                // head blocked: reserve at the earliest estimated
+                // release time that frees enough GPUs
+                let mut rel: Vec<(f64, usize)> = self
+                    .running
+                    .iter()
+                    .map(|&(rid, _)| {
+                        let t = &self.tasks[&rid];
+                        (t.started_at.unwrap() + t.est_remaining, t.gpus)
+                    })
+                    .collect();
+                rel.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                let mut virt_free = self.cluster.available();
+                let mut sh = self.clock;
+                for (when, g) in rel {
+                    if virt_free >= gpus {
+                        break;
+                    }
+                    virt_free += g;
+                    sh = when.max(self.clock);
+                }
+                shadow = Some(sh);
+            }
+        }
+    }
+
+    /// Priority preemption: while the highest-priority waiting task can
+    /// be satisfied by evicting strictly-lower-priority running tasks
+    /// (youngest first), do so and start it.  Each round starts exactly
+    /// one task whose priority strictly exceeds every task it displaces,
+    /// so the pass terminates.  Returns whether anything was started or
+    /// evicted (the caller backfills leftover freed capacity if so).
+    fn preempt_pass(&mut self) -> bool {
+        let mut acted = false;
+        loop {
+            // highest-priority waiting task (ties: lowest id)
+            let blocked = self
+                .tasks
+                .iter()
+                .filter(|(_, t)| t.started_at.is_none() && t.finished_at.is_none())
+                .map(|(&id, t)| (t.priority, id, t.gpus))
+                .max_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+            let Some((prio, id, need)) = blocked else { return acted };
+            // must outrank someone running to override the queue policy
+            let outranks_somebody = self
+                .running
+                .iter()
+                .any(|&(rid, _)| self.tasks[&rid].priority < prio);
+            if !outranks_somebody {
+                return acted;
+            }
+            if need <= self.cluster.available() {
+                self.start_task(id);
+                acted = true;
+                continue;
+            }
+            // Evict youngest strictly-lower-priority tasks until it
+            // fits.  Tasks started at this very instant (by the plan
+            // pass of this same replan) are never victims: evicting
+            // them would save zero run time and would put a Preempt
+            // ahead of the task's own Start in the drained event order.
+            let mut victims: Vec<(usize, f64)> = self
+                .running
+                .iter()
+                .filter(|&&(rid, _)| {
+                    let t = &self.tasks[&rid];
+                    t.priority < prio && t.started_at.unwrap() < self.clock
+                })
+                .map(|&(rid, _)| (rid, self.tasks[&rid].started_at.unwrap()))
+                .collect();
+            // youngest first: latest start, ties broken on higher id
+            victims.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(b.0.cmp(&a.0)));
+            let reclaimable: usize = victims.iter().map(|&(v, _)| self.tasks[&v].gpus).sum();
+            if self.cluster.available() + reclaimable < need {
+                return acted; // even a full purge cannot seat it
+            }
+            for (v, _) in victims {
+                if self.cluster.available() >= need {
+                    break;
+                }
+                self.evict(v);
+            }
+            self.start_task(id);
+            acted = true;
         }
     }
 
@@ -255,8 +480,11 @@ impl InterTaskScheduler {
         self.clock = when;
         let t = self.tasks.get_mut(&id).unwrap();
         t.finished_at = Some(when);
-        self.free_gpus += t.gpus;
-        self.replan(); // completion event → backfill instantly
+        let p = t.placement.take().expect("completed task held a placement");
+        self.cluster
+            .release(&p)
+            .expect("scheduler-held placement releases cleanly");
+        self.replan(false); // completion event → backfill instantly
         Some((id, when))
     }
 
@@ -283,10 +511,10 @@ impl InterTaskScheduler {
         self.tasks.values().all(|t| t.finished_at.is_some())
     }
 
-    /// (start, end) of a task, once scheduled.
+    /// (first start, end) of a task, once scheduled.
     pub fn span(&self, id: usize) -> Option<(f64, f64)> {
         let t = self.tasks.get(&id)?;
-        Some((t.started_at?, t.finished_at?))
+        Some((t.first_started_at?, t.finished_at?))
     }
 }
 
@@ -365,7 +593,11 @@ mod tests {
     fn timed_arrivals_and_event_api() {
         let mut s = InterTaskScheduler::new(4, Policy::Optimal);
         s.submit_at(0, 4, 10.0, 10.0, 0.0);
-        assert_eq!(s.drain_started(), vec![(0, 0.0)]);
+        let started = s.drain_started();
+        assert_eq!(started.len(), 1);
+        assert_eq!((started[0].id, started[0].time), (0, 0.0));
+        assert_eq!(started[0].placement.len(), 4);
+        assert!(started[0].resumed_from.is_none());
         // arrives while the cluster is full: queued, not started
         s.submit_at(1, 4, 10.0, 10.0, 3.0);
         assert!(s.drain_started().is_empty());
@@ -373,12 +605,30 @@ mod tests {
         assert_eq!(s.peek_next_completion(), Some((0, 10.0)));
         assert_eq!(s.complete_next(), Some((0, 10.0)));
         // the completion freed the GPUs → task 1 starts at t = 10
-        assert_eq!(s.drain_started(), vec![(1, 10.0)]);
+        let started = s.drain_started();
+        assert_eq!(started.len(), 1);
+        assert_eq!((started[0].id, started[0].time), (1, 10.0));
         assert_eq!(s.clock(), 10.0);
         assert!(s.complete_next().is_some());
         assert!(s.complete_next().is_none());
         assert!(s.all_done());
         assert_eq!(s.makespan(), 20.0);
+    }
+
+    #[test]
+    fn starts_carry_live_bitmap_placements() {
+        let mut s = InterTaskScheduler::new(8, Policy::Optimal);
+        s.submit(0, 4, 10.0, 10.0);
+        s.submit(1, 4, 10.0, 10.0);
+        let started = s.drain_started();
+        assert_eq!(started.len(), 2);
+        assert!(!started[0].placement.overlaps(&started[1].placement));
+        assert_eq!(s.free_gpus(), 0);
+        assert_eq!(s.placement_of(0).unwrap().len(), 4);
+        s.run_to_completion();
+        // completions released everything back to the bitmap
+        assert_eq!(s.free_gpus(), 8);
+        assert!(s.placement_of(0).is_none());
     }
 
     #[test]
@@ -389,5 +639,69 @@ mod tests {
         let before = s.replans;
         s.run_to_completion();
         assert!(s.replans > before, "completion must replan");
+    }
+
+    #[test]
+    fn high_priority_arrival_preempts_youngest() {
+        let mut s = InterTaskScheduler::new(4, Policy::Fcfs);
+        s.enable_preemption = true;
+        s.submit_at_prio(0, 4, 100.0, 100.0, 0.0, 0);
+        assert_eq!(s.drain_started().len(), 1);
+        // a higher-priority 4-GPU task lands at t=5 on a full cluster
+        s.submit_at_prio(1, 4, 10.0, 10.0, 5.0, 1);
+        let pre = s.drain_preempted();
+        assert_eq!(pre.len(), 1);
+        assert_eq!((pre[0].id, pre[0].time), (0, 5.0));
+        assert_eq!(pre[0].placement.len(), 4);
+        let started = s.drain_started();
+        assert_eq!(started.len(), 1);
+        assert_eq!((started[0].id, started[0].time), (1, 5.0));
+        assert_eq!(s.preemptions, 1);
+        assert_eq!(s.preemptions_of(0), 1);
+        // task 1 runs 5..15; task 0 resumes at 15 with 95s left → 110
+        let mk = s.run_to_completion();
+        assert!((mk - 110.0).abs() < 1e-9, "makespan {mk}");
+        assert!(s.all_done());
+        // the resume decision names the placement it held before eviction
+        let resumed: Vec<StartDecision> = s.drain_started();
+        assert_eq!(resumed.len(), 1);
+        assert_eq!(resumed[0].id, 0);
+        assert!(resumed[0].resumed_from.is_some());
+    }
+
+    #[test]
+    fn preemption_leftover_capacity_backfills_immediately() {
+        let mut s = InterTaskScheduler::new(8, Policy::Optimal);
+        s.enable_preemption = true;
+        s.submit_at_prio(0, 4, 100.0, 100.0, 0.0, 0);
+        s.submit_at_prio(1, 4, 100.0, 100.0, 0.0, 0);
+        s.submit_at_prio(2, 2, 10.0, 10.0, 0.0, 0); // queued: cluster full
+        s.drain_started();
+        // an urgent 1-GPU arrival evicts a 4-GPU victim; the 3 leftover
+        // GPUs must backfill the queued short 2-GPU task at the same
+        // instant, not idle until the next completion
+        s.submit_at_prio(3, 1, 50.0, 50.0, 5.0, 1);
+        assert_eq!(s.drain_preempted().len(), 1);
+        let started: Vec<usize> = s.drain_started().iter().map(|d| d.id).collect();
+        assert!(started.contains(&3), "urgent task must start: {started:?}");
+        assert!(
+            started.contains(&2),
+            "eviction leftovers must backfill the queued task: {started:?}"
+        );
+        let mk = s.run_to_completion();
+        assert!(s.all_done());
+        assert!(mk > 0.0);
+    }
+
+    #[test]
+    fn equal_priority_never_preempts() {
+        let mut s = InterTaskScheduler::new(4, Policy::Fcfs);
+        s.enable_preemption = true;
+        s.submit_at_prio(0, 4, 50.0, 50.0, 0.0, 1);
+        s.submit_at_prio(1, 4, 1.0, 1.0, 5.0, 1);
+        assert!(s.drain_preempted().is_empty());
+        let mk = s.run_to_completion();
+        assert!((mk - 51.0).abs() < 1e-9, "makespan {mk}");
+        assert_eq!(s.preemptions, 0);
     }
 }

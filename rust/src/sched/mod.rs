@@ -6,9 +6,9 @@ pub mod inter;
 pub mod intra;
 pub mod solver;
 
-pub use inter::{InterTaskScheduler, Policy};
+pub use inter::{InterTaskScheduler, Policy, PreemptDecision, StartDecision};
 pub use intra::{admit, backfill, group_by_batch, AdmissionPlan};
 pub use solver::{
-    fcfs_schedule, lower_bound, lpt_schedule, sjf_schedule, solve, Placement, SchedTask,
-    Schedule,
+    fcfs_schedule, lower_bound, lpt_schedule, sjf_schedule, solve, ConcreteSchedule,
+    Placement, SchedTask, Schedule,
 };

@@ -38,6 +38,26 @@ pub struct Schedule {
     pub makespan: f64,
 }
 
+/// A schedule made concrete: every planned placement pinned to physical
+/// GPU indices chosen over the cluster topology (see
+/// [`Schedule::concretize`]).
+#[derive(Debug, Clone)]
+pub struct ConcreteSchedule {
+    pub makespan: f64,
+    /// (task id, planned start, concrete GPU indices), in start order.
+    pub assignments: Vec<(usize, f64, crate::cluster::Placement)>,
+}
+
+impl ConcreteSchedule {
+    /// Concrete indices assigned to a task.
+    pub fn gpus_of(&self, id: usize) -> Option<&crate::cluster::Placement> {
+        self.assignments
+            .iter()
+            .find(|(tid, _, _)| *tid == id)
+            .map(|(_, _, p)| p)
+    }
+}
+
 impl Schedule {
     /// Verify: no instant exceeds G GPUs and all tasks are placed once.
     pub fn is_valid(&self, tasks: &[SchedTask], total_gpus: usize) -> bool {
@@ -70,6 +90,72 @@ impl Schedule {
             }
         }
         true
+    }
+
+    /// Pin the schedule to physical GPUs: replay the plan chronologically
+    /// (releases before acquires at time ties) against a fresh bitmap of
+    /// the topology, placing each task with `policy`.  Capacity-valid
+    /// schedules always concretize — the bitmap has enough free GPUs at
+    /// every acquire by construction — so an error means the schedule
+    /// itself was invalid for this topology size.
+    pub fn concretize(
+        &self,
+        tasks: &[SchedTask],
+        topo: &crate::cluster::Topology,
+        policy: crate::cluster::PlacePolicy,
+    ) -> anyhow::Result<ConcreteSchedule> {
+        use std::cmp::Ordering;
+        anyhow::ensure!(
+            self.is_valid(tasks, topo.len()),
+            "schedule does not fit a {}-GPU topology",
+            topo.len()
+        );
+        // (time, 0=release/1=acquire, task idx in placements)
+        let mut ops: Vec<(f64, u8, usize)> = Vec::with_capacity(self.placements.len() * 2);
+        for (i, p) in self.placements.iter().enumerate() {
+            let d = tasks.iter().find(|t| t.id == p.id).unwrap().duration;
+            ops.push((p.start, 1, i));
+            ops.push((p.start + d, 0, i));
+        }
+        ops.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap_or(Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+                .then(self.placements[a.2].id.cmp(&self.placements[b.2].id))
+        });
+        let mut free = vec![true; topo.len()];
+        let mut held: Vec<Option<crate::cluster::Placement>> =
+            vec![None; self.placements.len()];
+        let mut assignments = Vec::with_capacity(self.placements.len());
+        for (when, kind, i) in ops {
+            let plan = &self.placements[i];
+            if kind == 0 {
+                if let Some(p) = held[i].take() {
+                    for &g in p.gpus() {
+                        free[g] = true;
+                    }
+                }
+            } else {
+                let p = topo
+                    .place(&free, plan.gpus, policy)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "no {} free GPUs at t={when} for task {}",
+                            plan.gpus,
+                            plan.id
+                        )
+                    })?;
+                for &g in p.gpus() {
+                    free[g] = false;
+                }
+                held[i] = Some(p.clone());
+                assignments.push((plan.id, plan.start, p));
+            }
+        }
+        Ok(ConcreteSchedule {
+            makespan: self.makespan,
+            assignments,
+        })
     }
 }
 
@@ -428,6 +514,47 @@ mod tests {
                 format!("optimal {} below the area/longest bound", opt.makespan),
             )
         });
+    }
+
+    #[test]
+    fn concretize_assigns_disjoint_live_placements() {
+        use crate::cluster::{PlacePolicy, Topology};
+        let tasks = vec![
+            t(0, 10.0, 4),
+            t(1, 8.0, 4),
+            t(2, 6.0, 2),
+            t(3, 7.0, 2),
+            t(4, 5.0, 2),
+            t(5, 3.0, 1),
+            t(6, 2.5, 1),
+        ];
+        let s = solve(&tasks, 8).unwrap();
+        let topo = Topology::uniform(8, 4);
+        let c = s.concretize(&tasks, &topo, PlacePolicy::IslandFirst).unwrap();
+        assert_eq!(c.assignments.len(), tasks.len());
+        assert_eq!(c.makespan, s.makespan);
+        for task in &tasks {
+            let p = c.gpus_of(task.id).unwrap();
+            assert_eq!(p.len(), task.gpus);
+        }
+        // overlapping-in-time tasks hold disjoint GPUs
+        for (i, a) in c.assignments.iter().enumerate() {
+            for b in c.assignments.iter().skip(i + 1) {
+                let da = tasks.iter().find(|t| t.id == a.0).unwrap().duration;
+                let db = tasks.iter().find(|t| t.id == b.0).unwrap().duration;
+                let overlap_in_time = a.1 < b.1 + db - 1e-9 && b.1 < a.1 + da - 1e-9;
+                if overlap_in_time {
+                    assert!(
+                        !a.2.overlaps(&b.2),
+                        "tasks {} and {} share GPUs while co-running",
+                        a.0,
+                        b.0
+                    );
+                }
+            }
+        }
+        // a schedule that does not fit the topology is rejected
+        assert!(s.concretize(&tasks, &Topology::uniform(4, 4), PlacePolicy::FirstFit).is_err());
     }
 
     #[test]

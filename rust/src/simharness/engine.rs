@@ -21,6 +21,7 @@ use std::collections::BTreeMap;
 use anyhow::{Context, Result};
 
 use crate::cluster::gpu::GpuSpec;
+use crate::cluster::{PlacePolicy, Placement, SimCluster, Topology};
 use crate::config::{HyperParams, TaskSpec, MODEL_FAMILY};
 use crate::coordinator::executor::SimBackend;
 use crate::coordinator::memory_model;
@@ -39,6 +40,16 @@ use super::trace::Trace;
 pub struct HarnessConfig {
     pub total_gpus: usize,
     pub policy: Policy,
+    /// How concrete GPUs are chosen for each start (island-aware by
+    /// default; `PlacePolicy::FirstFit` is the topology-blind baseline).
+    pub place: PlacePolicy,
+    /// NVLink island width used to build the cluster [`Topology`]
+    /// (8 = H100 SXM boards; 0 = one flat island).
+    pub island_size: usize,
+    /// Let higher-priority arrivals evict (and later migrate) the
+    /// youngest strictly-lower-priority running task when they cannot
+    /// fit.  Priorities come from [`TaskSpec::priority`].
+    pub preempt_on_arrival: bool,
     pub run: RunConfig,
     pub gpu: GpuSpec,
     /// Upper bound on co-located adapter slots per executor; the fitted
@@ -51,10 +62,20 @@ impl Default for HarnessConfig {
         HarnessConfig {
             total_gpus: 8,
             policy: Policy::Optimal,
+            place: PlacePolicy::IslandFirst,
+            island_size: 8,
+            preempt_on_arrival: false,
             run: RunConfig::default(),
             gpu: GpuSpec::h100_sxm5(),
             n_slots: 4,
         }
+    }
+}
+
+impl HarnessConfig {
+    /// The NVLink island map this configuration replays over.
+    pub fn topology(&self) -> Topology {
+        Topology::uniform(self.total_gpus, self.island_size)
     }
 }
 
@@ -67,10 +88,22 @@ pub struct HarnessReport {
     pub log: EventLog,
     /// Per-task outcomes, in trace order.
     pub outcomes: Vec<TaskOutcome>,
+    /// Final concrete GPU indices per task, in trace order (the GPUs the
+    /// task held when it completed — post-migration if it was moved).
+    pub placements: Vec<Placement>,
     /// Σ gpus · actual_duration — the cluster-time the workload consumed.
     pub gpu_seconds: f64,
     /// Inter-task replans triggered by arrivals + completions.
     pub replans: usize,
+    /// Evictions performed by preemption-on-arrival.
+    pub preemptions: usize,
+    /// Restarts that landed on different GPUs than before.
+    pub migrations: usize,
+    /// Placement decisions that spanned more than one NVLink island.
+    pub cross_island_allocs: usize,
+    /// Σ comm-cost score over every placement decision (α–β all-reduce
+    /// at the island-derated bandwidth; see `Topology::placement_comm_cost`).
+    pub placement_comm_cost: f64,
 }
 
 /// Timeline-only result of `SimEngine::replay` (no per-task outcomes —
@@ -79,8 +112,14 @@ pub struct HarnessReport {
 pub struct Timeline {
     pub makespan: f64,
     pub log: EventLog,
+    /// Final concrete GPU indices per task, in trace order.
+    pub placements: Vec<Placement>,
     pub gpu_seconds: f64,
     pub replans: usize,
+    pub preemptions: usize,
+    pub migrations: usize,
+    pub cross_island_allocs: usize,
+    pub placement_comm_cost: f64,
 }
 
 /// The event-driven cluster simulator.
@@ -197,8 +236,10 @@ impl SimEngine {
 
     /// Play the cluster timeline for pre-simulated outcomes, event by
     /// event — arrivals and completions replan, freed GPUs backfill,
-    /// every decision is logged.  Errors if any task can never be placed
-    /// (more GPUs than the cluster has) or fails to complete.
+    /// every start pins concrete GPU indices on the cluster bitmap, and
+    /// every decision is logged (including `Preempt`/`Placed`/`Migrate`
+    /// when `preempt_on_arrival` is set).  Errors if any task can never
+    /// be placed (more GPUs than the cluster has) or fails to complete.
     pub fn replay(&self, trace: &Trace, outcomes: &[TaskOutcome]) -> Result<Timeline> {
         anyhow::ensure!(
             trace.len() == outcomes.len(),
@@ -215,8 +256,16 @@ impl SimEngine {
                 self.cfg.total_gpus
             );
         }
-        let mut sched = InterTaskScheduler::new(self.cfg.total_gpus, self.cfg.policy);
+        let topo = self.cfg.topology();
+        let cluster = SimCluster::with_topology(self.cfg.gpu.clone(), topo.clone());
+        let mut sched = InterTaskScheduler::with_cluster(cluster, self.cfg.policy);
+        sched.place = self.cfg.place;
+        sched.enable_preemption = self.cfg.preempt_on_arrival;
         let mut log = EventLog::new();
+        let mut placements: Vec<Placement> = vec![Placement::default(); outcomes.len()];
+        let mut migrations = 0usize;
+        let mut cross_island_allocs = 0usize;
+        let mut placement_comm_cost = 0.0f64;
         let mut next_arrival = 0usize;
         loop {
             let arrival = trace.entries.get(next_arrival).map(|e| e.arrival);
@@ -235,12 +284,13 @@ impl SimEngine {
                 let at = trace.entries[i].arrival;
                 let gpus = outcomes[i].gpus;
                 log.record(at, EventKind::Arrival { task: i, gpus });
-                sched.submit_at(
+                sched.submit_at_prio(
                     i,
                     gpus,
                     outcomes[i].est_duration,
                     outcomes[i].actual_duration,
                     at,
+                    trace.entries[i].spec.priority,
                 );
             } else {
                 let (id, at) = sched.complete_next().expect("peeked completion");
@@ -252,14 +302,49 @@ impl SimEngine {
                     },
                 );
             }
-            for (id, at) in sched.drain_started() {
+            for p in sched.drain_preempted() {
                 log.record(
-                    at,
-                    EventKind::Start {
-                        task: id,
-                        gpus: outcomes[id].gpus,
+                    p.time,
+                    EventKind::Preempt {
+                        task: p.id,
+                        gpus: outcomes[p.id].gpus,
+                        placement: p.placement,
                     },
                 );
+            }
+            for d in sched.drain_started() {
+                if topo.is_cross_island(&d.placement) {
+                    cross_island_allocs += 1;
+                }
+                placement_comm_cost += topo.placement_comm_cost(
+                    &self.cfg.gpu,
+                    &d.placement,
+                    crate::cluster::topology::PLACE_SCORE_BYTES,
+                );
+                placements[d.id] = d.placement.clone();
+                let gpus = outcomes[d.id].gpus;
+                let kind = match d.resumed_from {
+                    None => EventKind::Start {
+                        task: d.id,
+                        gpus,
+                        placement: d.placement,
+                    },
+                    Some(prev) if prev == d.placement => EventKind::Placed {
+                        task: d.id,
+                        gpus,
+                        placement: d.placement,
+                    },
+                    Some(prev) => {
+                        migrations += 1;
+                        EventKind::Migrate {
+                            task: d.id,
+                            gpus,
+                            from: prev,
+                            to: d.placement,
+                        }
+                    }
+                };
+                log.record(d.time, kind);
             }
         }
 
@@ -276,8 +361,13 @@ impl SimEngine {
         Ok(Timeline {
             makespan: sched.makespan(),
             log,
+            placements,
             gpu_seconds,
             replans: sched.replans,
+            preemptions: sched.preemptions,
+            migrations,
+            cross_island_allocs,
+            placement_comm_cost,
         })
     }
 
@@ -290,8 +380,13 @@ impl SimEngine {
             makespan: tl.makespan,
             log: tl.log,
             outcomes,
+            placements: tl.placements,
             gpu_seconds: tl.gpu_seconds,
             replans: tl.replans,
+            preemptions: tl.preemptions,
+            migrations: tl.migrations,
+            cross_island_allocs: tl.cross_island_allocs,
+            placement_comm_cost: tl.placement_comm_cost,
         })
     }
 
@@ -354,6 +449,28 @@ mod tests {
         assert!(report.makespan >= longest - 1e-9);
         assert!(report.gpu_seconds > 0.0);
         assert!(report.replans >= specs.len());
+    }
+
+    #[test]
+    fn report_carries_concrete_placements() {
+        let engine = SimEngine::new(HarnessConfig::default());
+        let specs = vec![tiny_spec("a", "llama-8b", 1), tiny_spec("c", "qwen-32b", 2)];
+        let report = engine.run_specs(&specs).unwrap();
+        assert_eq!(report.placements.len(), 2);
+        assert_eq!(report.placements[0].len(), 1);
+        assert_eq!(report.placements[1].len(), 2);
+        // both run from t=0 on an idle 8-GPU cluster: disjoint by bitmap
+        assert!(!report.placements[0].overlaps(&report.placements[1]));
+        // every Start event carries its concrete indices
+        for e in report.log.events() {
+            if let EventKind::Start { gpus, placement, .. } = &e.kind {
+                assert_eq!(placement.len(), *gpus);
+            }
+        }
+        assert_eq!(report.preemptions, 0);
+        assert_eq!(report.migrations, 0);
+        // 8 GPUs = one NVLink island: nothing can cross
+        assert_eq!(report.cross_island_allocs, 0);
     }
 
     #[test]

@@ -1,40 +1,145 @@
 //! Cluster events and the replay-stable event log.
 //!
 //! Every run of the harness produces an [`EventLog`]: the totally ordered
-//! sequence of arrival / start / completion events the engine processed.
-//! The log is the determinism contract — replaying the same (trace, seed)
-//! must reproduce it *bit for bit*, which `digest()` checks by hashing
-//! the raw IEEE-754 bits of every timestamp (no epsilon anywhere).
+//! sequence of arrival / start / completion (and, with preemption
+//! enabled, preempt / placed / migrate) events the engine processed.
+//! Starts and re-placements carry the *concrete GPU indices* the task
+//! holds, so the log is a complete record of the cluster bitmap over
+//! time.  The log is the determinism contract — replaying the same
+//! (trace, seed) must reproduce it *bit for bit*, which `digest()`
+//! checks by hashing the raw IEEE-754 bits of every timestamp and every
+//! placement index (no epsilon anywhere).  `to_jsonl`/`from_jsonl` dump
+//! and reload timelines losslessly (Rust's shortest-roundtrip f64
+//! formatting), so runs can be diffed offline.
 
 use std::fmt;
 
+use anyhow::Result;
+
+use crate::cluster::Placement;
 use crate::util::hash::{fnv1a_mix, FNV_OFFSET};
+use crate::util::json::Json;
 
 /// What happened on the cluster.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum EventKind {
     /// A tenant task entered the queue.
     Arrival { task: usize, gpus: usize },
-    /// The scheduler placed the task onto `gpus` GPUs.
-    Start { task: usize, gpus: usize },
+    /// The scheduler started the task on the concrete GPUs in
+    /// `placement` (`placement.len() == gpus`).
+    Start {
+        task: usize,
+        gpus: usize,
+        placement: Placement,
+    },
     /// The task released its GPUs (its search finished, early exits
     /// included).
     Complete { task: usize, gpus: usize },
+    /// A higher-priority arrival evicted the task; `placement` is what
+    /// it released.
+    Preempt {
+        task: usize,
+        gpus: usize,
+        placement: Placement,
+    },
+    /// A preempted task resumed on the *same* GPUs it held before.
+    Placed {
+        task: usize,
+        gpus: usize,
+        placement: Placement,
+    },
+    /// A preempted task resumed on *different* GPUs.
+    Migrate {
+        task: usize,
+        gpus: usize,
+        from: Placement,
+        to: Placement,
+    },
 }
 
 impl EventKind {
-    fn code(&self) -> (u64, u64, u64) {
+    fn label(&self) -> &'static str {
+        match self {
+            EventKind::Arrival { .. } => "arrive",
+            EventKind::Start { .. } => "start",
+            EventKind::Complete { .. } => "complete",
+            EventKind::Preempt { .. } => "preempt",
+            EventKind::Placed { .. } => "placed",
+            EventKind::Migrate { .. } => "migrate",
+        }
+    }
+
+    pub fn task(&self) -> usize {
         match *self {
-            EventKind::Arrival { task, gpus } => (0, task as u64, gpus as u64),
-            EventKind::Start { task, gpus } => (1, task as u64, gpus as u64),
-            EventKind::Complete { task, gpus } => (2, task as u64, gpus as u64),
+            EventKind::Arrival { task, .. }
+            | EventKind::Start { task, .. }
+            | EventKind::Complete { task, .. }
+            | EventKind::Preempt { task, .. }
+            | EventKind::Placed { task, .. }
+            | EventKind::Migrate { task, .. } => task,
+        }
+    }
+
+    pub fn gpus(&self) -> usize {
+        match *self {
+            EventKind::Arrival { gpus, .. }
+            | EventKind::Start { gpus, .. }
+            | EventKind::Complete { gpus, .. }
+            | EventKind::Preempt { gpus, .. }
+            | EventKind::Placed { gpus, .. }
+            | EventKind::Migrate { gpus, .. } => gpus,
+        }
+    }
+
+    /// The concrete GPUs the task holds *after* this event, if the event
+    /// pins any: `Start`/`Placed` and the `to` side of `Migrate`.
+    pub fn placement(&self) -> Option<&Placement> {
+        match self {
+            EventKind::Start { placement, .. } | EventKind::Placed { placement, .. } => {
+                Some(placement)
+            }
+            EventKind::Migrate { to, .. } => Some(to),
+            _ => None,
+        }
+    }
+
+    fn code(&self) -> u64 {
+        match self {
+            EventKind::Arrival { .. } => 0,
+            EventKind::Start { .. } => 1,
+            EventKind::Complete { .. } => 2,
+            EventKind::Preempt { .. } => 3,
+            EventKind::Placed { .. } => 4,
+            EventKind::Migrate { .. } => 5,
+        }
+    }
+
+    fn mix(&self, h: &mut u64) {
+        fnv1a_mix(h, self.code());
+        fnv1a_mix(h, self.task() as u64);
+        fnv1a_mix(h, self.gpus() as u64);
+        let mix_placement = |h: &mut u64, p: &Placement| {
+            fnv1a_mix(h, p.len() as u64);
+            for &g in p.gpus() {
+                fnv1a_mix(h, g as u64);
+            }
+        };
+        match self {
+            EventKind::Arrival { .. } | EventKind::Complete { .. } => {}
+            EventKind::Start { placement, .. }
+            | EventKind::Preempt { placement, .. }
+            | EventKind::Placed { placement, .. } => mix_placement(h, placement),
+            EventKind::Migrate { from, to, .. } => {
+                mix_placement(h, from);
+                mix_placement(h, to);
+            }
         }
     }
 }
 
 /// One timestamped event.  `seq` is the processing index, which breaks
 /// ties between events sharing a virtual timestamp.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Event {
     pub time: f64,
     pub seq: usize,
@@ -43,16 +148,23 @@ pub struct Event {
 
 impl fmt::Display for Event {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        let (label, task, gpus) = match self.kind {
-            EventKind::Arrival { task, gpus } => ("arrive", task, gpus),
-            EventKind::Start { task, gpus } => ("start", task, gpus),
-            EventKind::Complete { task, gpus } => ("complete", task, gpus),
-        };
         write!(
             f,
             "[{:>12.3}s] #{:<4} {:<8} task={} gpus={}",
-            self.time, self.seq, label, task, gpus
-        )
+            self.time,
+            self.seq,
+            self.kind.label(),
+            self.kind.task(),
+            self.kind.gpus()
+        )?;
+        match &self.kind {
+            EventKind::Start { placement, .. } | EventKind::Placed { placement, .. } => {
+                write!(f, " on={placement}")
+            }
+            EventKind::Preempt { placement, .. } => write!(f, " off={placement}"),
+            EventKind::Migrate { from, to, .. } => write!(f, " {from}->{to}"),
+            _ => Ok(()),
+        }
     }
 }
 
@@ -94,17 +206,24 @@ impl EventLog {
         self.events.last().map(|e| e.time).unwrap_or(0.0)
     }
 
+    /// The concrete GPUs a task holds after the whole timeline's last
+    /// placement-bearing event for it (None if it never started).
+    pub fn final_placement(&self, task: usize) -> Option<&Placement> {
+        self.events
+            .iter()
+            .rev()
+            .find(|e| e.kind.task() == task && e.kind.placement().is_some())
+            .and_then(|e| e.kind.placement())
+    }
+
     /// FNV-1a over the exact bit patterns of every event — two logs with
-    /// the same digest are bit-identical timelines.
+    /// the same digest are bit-identical timelines (placements included).
     pub fn digest(&self) -> u64 {
         let mut h = FNV_OFFSET;
         for e in &self.events {
             fnv1a_mix(&mut h, e.time.to_bits());
             fnv1a_mix(&mut h, e.seq as u64);
-            let (k, t, g) = e.kind.code();
-            fnv1a_mix(&mut h, k);
-            fnv1a_mix(&mut h, t);
-            fnv1a_mix(&mut h, g);
+            e.kind.mix(&mut h);
         }
         h
     }
@@ -113,17 +232,200 @@ impl EventLog {
     pub fn lines(&self) -> Vec<String> {
         self.events.iter().map(|e| e.to_string()).collect()
     }
+
+    // -- jsonl dump / reload -------------------------------------------------
+
+    fn placement_json(p: &Placement) -> Json {
+        Json::Arr(p.gpus().iter().map(|&g| Json::Num(g as f64)).collect())
+    }
+
+    /// Parse a GPU-index array that must hold exactly `want` sorted,
+    /// unique indices — the invariant every engine-produced event obeys,
+    /// enforced on reload so an edited/corrupt dump cannot reconstruct a
+    /// log no run could have emitted.
+    fn placement_from(j: &Json, key: &str, want: usize) -> Result<Placement> {
+        let arr = j
+            .req(key)?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'{key}' not an array"))?;
+        let gpus = arr
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("non-integer GPU index in '{key}'"))
+            })
+            .collect::<Result<Vec<usize>>>()?;
+        let n_raw = gpus.len();
+        let p = Placement::new(gpus);
+        anyhow::ensure!(
+            p.len() == n_raw,
+            "'{key}' contains duplicate GPU indices"
+        );
+        anyhow::ensure!(
+            p.len() == want,
+            "'{key}' has {} indices but the event says gpus={want}",
+            p.len()
+        );
+        Ok(p)
+    }
+
+    /// One JSON object per line (`{"time":…,"seq":…,"kind":…,…}`), in
+    /// log order.  `f64` timestamps use Rust's shortest-roundtrip
+    /// formatting, so `from_jsonl(to_jsonl())` is bit-identical (same
+    /// `digest()`), which the golden tests pin.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            let mut fields = vec![
+                ("time", Json::Num(e.time)),
+                ("seq", Json::Num(e.seq as f64)),
+                ("kind", Json::Str(e.kind.label().to_string())),
+                ("task", Json::Num(e.kind.task() as f64)),
+                ("gpus", Json::Num(e.kind.gpus() as f64)),
+            ];
+            match &e.kind {
+                EventKind::Arrival { .. } | EventKind::Complete { .. } => {}
+                EventKind::Start { placement, .. }
+                | EventKind::Preempt { placement, .. }
+                | EventKind::Placed { placement, .. } => {
+                    fields.push(("placement", Self::placement_json(placement)));
+                }
+                EventKind::Migrate { from, to, .. } => {
+                    fields.push(("from", Self::placement_json(from)));
+                    fields.push(("to", Self::placement_json(to)));
+                }
+            }
+            out.push_str(&Json::obj(fields).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a `to_jsonl` dump back into a log.  Validates that `seq`
+    /// values are the line index (the total order is part of the format).
+    pub fn from_jsonl(text: &str) -> Result<EventLog> {
+        let mut log = EventLog::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(line)
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            let time = j
+                .req("time")?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("line {}: 'time' not a number", lineno + 1))?;
+            let seq = j
+                .req("seq")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("line {}: 'seq' not an index", lineno + 1))?;
+            anyhow::ensure!(
+                seq == log.events.len(),
+                "line {}: seq {} out of order (expected {})",
+                lineno + 1,
+                seq,
+                log.events.len()
+            );
+            let task = j
+                .req("task")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("line {}: bad 'task'", lineno + 1))?;
+            let gpus = j
+                .req("gpus")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("line {}: bad 'gpus'", lineno + 1))?;
+            let kind = match j.req("kind")?.as_str() {
+                Some("arrive") => EventKind::Arrival { task, gpus },
+                Some("start") => EventKind::Start {
+                    task,
+                    gpus,
+                    placement: Self::placement_from(&j, "placement", gpus)?,
+                },
+                Some("complete") => EventKind::Complete { task, gpus },
+                Some("preempt") => EventKind::Preempt {
+                    task,
+                    gpus,
+                    placement: Self::placement_from(&j, "placement", gpus)?,
+                },
+                Some("placed") => EventKind::Placed {
+                    task,
+                    gpus,
+                    placement: Self::placement_from(&j, "placement", gpus)?,
+                },
+                Some("migrate") => EventKind::Migrate {
+                    task,
+                    gpus,
+                    from: Self::placement_from(&j, "from", gpus)?,
+                    to: Self::placement_from(&j, "to", gpus)?,
+                },
+                other => anyhow::bail!("line {}: unknown kind {:?}", lineno + 1, other),
+            };
+            log.record(time, kind);
+        }
+        Ok(log)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn p(gpus: &[usize]) -> Placement {
+        Placement::new(gpus.to_vec())
+    }
+
     fn sample() -> EventLog {
         let mut log = EventLog::new();
         log.record(0.0, EventKind::Arrival { task: 0, gpus: 2 });
-        log.record(0.0, EventKind::Start { task: 0, gpus: 2 });
+        log.record(
+            0.0,
+            EventKind::Start {
+                task: 0,
+                gpus: 2,
+                placement: p(&[0, 1]),
+            },
+        );
         log.record(5.5, EventKind::Complete { task: 0, gpus: 2 });
+        log
+    }
+
+    fn preemptive_sample() -> EventLog {
+        let mut log = sample();
+        log.record(6.0, EventKind::Arrival { task: 1, gpus: 2 });
+        log.record(
+            6.0,
+            EventKind::Start {
+                task: 1,
+                gpus: 2,
+                placement: p(&[0, 1]),
+            },
+        );
+        log.record(
+            7.0,
+            EventKind::Preempt {
+                task: 1,
+                gpus: 2,
+                placement: p(&[0, 1]),
+            },
+        );
+        log.record(
+            9.0,
+            EventKind::Migrate {
+                task: 1,
+                gpus: 2,
+                from: p(&[0, 1]),
+                to: p(&[2, 3]),
+            },
+        );
+        log.record(
+            11.0,
+            EventKind::Placed {
+                task: 1,
+                gpus: 2,
+                placement: p(&[2, 3]),
+            },
+        );
+        log.record(12.0, EventKind::Complete { task: 1, gpus: 2 });
         log
     }
 
@@ -131,6 +433,7 @@ mod tests {
     fn digest_is_replay_stable() {
         assert_eq!(sample().digest(), sample().digest());
         assert_eq!(sample(), sample());
+        assert_eq!(preemptive_sample().digest(), preemptive_sample().digest());
     }
 
     #[test]
@@ -142,24 +445,90 @@ mod tests {
 
         let mut m = EventLog::new();
         m.record(0.0, EventKind::Arrival { task: 0, gpus: 2 });
-        m.record(0.0, EventKind::Start { task: 0, gpus: 2 });
+        m.record(
+            0.0,
+            EventKind::Start {
+                task: 0,
+                gpus: 2,
+                placement: p(&[0, 1]),
+            },
+        );
         // same shape, different timestamp bits
         m.record(5.5 + 1e-12, EventKind::Complete { task: 0, gpus: 2 });
         assert_ne!(m.digest(), base, "timestamp bits must be hashed");
+
+        // same shape, different placement indices
+        let mut n = EventLog::new();
+        n.record(0.0, EventKind::Arrival { task: 0, gpus: 2 });
+        n.record(
+            0.0,
+            EventKind::Start {
+                task: 0,
+                gpus: 2,
+                placement: p(&[0, 3]),
+            },
+        );
+        n.record(5.5, EventKind::Complete { task: 0, gpus: 2 });
+        assert_ne!(n.digest(), base, "placement indices must be hashed");
     }
 
     #[test]
     fn counting_and_rendering() {
         let log = sample();
         assert_eq!(log.len(), 3);
-        assert_eq!(
-            log.count(|k| matches!(k, EventKind::Complete { .. })),
-            1
-        );
+        assert_eq!(log.count(|k| matches!(k, EventKind::Complete { .. })), 1);
         assert_eq!(log.last_time(), 5.5);
         let lines = log.lines();
         assert_eq!(lines.len(), 3);
         assert!(lines[0].contains("arrive"), "{}", lines[0]);
+        assert!(lines[1].contains("on=[0,1]"), "{}", lines[1]);
         assert!(lines[2].contains("complete"), "{}", lines[2]);
+        let pl = preemptive_sample().lines();
+        assert!(pl[5].contains("preempt") && pl[5].contains("off=[0,1]"), "{}", pl[5]);
+        assert!(pl[6].contains("[0,1]->[2,3]"), "{}", pl[6]);
+    }
+
+    #[test]
+    fn final_placement_follows_migrations() {
+        let log = preemptive_sample();
+        assert_eq!(log.final_placement(0), Some(&p(&[0, 1])));
+        assert_eq!(log.final_placement(1), Some(&p(&[2, 3])));
+        assert_eq!(log.final_placement(7), None);
+    }
+
+    #[test]
+    fn jsonl_roundtrip_is_bit_identical() {
+        for log in [sample(), preemptive_sample(), EventLog::new()] {
+            let dump = log.to_jsonl();
+            let back = EventLog::from_jsonl(&dump).unwrap();
+            assert_eq!(back, log);
+            assert_eq!(back.digest(), log.digest());
+        }
+        // awkward timestamps survive the text round-trip bit-for-bit
+        let mut log = EventLog::new();
+        log.record(0.1 + 0.2, EventKind::Arrival { task: 0, gpus: 1 });
+        log.record(1.0 / 3.0, EventKind::Complete { task: 0, gpus: 1 });
+        let back = EventLog::from_jsonl(&log.to_jsonl()).unwrap();
+        assert_eq!(back.digest(), log.digest());
+    }
+
+    #[test]
+    fn from_jsonl_rejects_malformed_input() {
+        assert!(EventLog::from_jsonl("not json\n").is_err());
+        // wrong seq order
+        let bad = r#"{"gpus":1,"kind":"arrive","seq":3,"task":0,"time":0}"#;
+        assert!(EventLog::from_jsonl(bad).is_err());
+        // start without placement
+        let bad = r#"{"gpus":1,"kind":"start","seq":0,"task":0,"time":0}"#;
+        assert!(EventLog::from_jsonl(bad).is_err());
+        // unknown kind
+        let bad = r#"{"gpus":1,"kind":"warp","seq":0,"task":0,"time":0}"#;
+        assert!(EventLog::from_jsonl(bad).is_err());
+        // placement width disagrees with the gpus field
+        let bad = r#"{"gpus":2,"kind":"start","placement":[3],"seq":0,"task":0,"time":0}"#;
+        assert!(EventLog::from_jsonl(bad).is_err());
+        // duplicate GPU indices (would silently dedup to the wrong width)
+        let bad = r#"{"gpus":2,"kind":"start","placement":[3,3],"seq":0,"task":0,"time":0}"#;
+        assert!(EventLog::from_jsonl(bad).is_err());
     }
 }

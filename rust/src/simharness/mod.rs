@@ -8,48 +8,90 @@
 //!
 //! ## Event model
 //!
-//! The engine owns a virtual clock and processes exactly three event
-//! kinds, totally ordered by (time, processing seq):
+//! The engine owns a virtual clock and processes six event kinds,
+//! totally ordered by (time, processing seq):
 //!
 //! * **Arrival** — a tenant task from the trace enters the queue; the
 //!   inter-task scheduler ([`crate::sched::inter`]) replans.
-//! * **Start** — the scheduler places the task onto its GPUs (plan
-//!   order + EASY backfilling under `Policy::Optimal`/`Lpt`, strict
-//!   queue order under `Fcfs`/`Sjf`).
+//! * **Start** — the scheduler places the task onto *concrete* GPUs
+//!   (plan order + EASY backfilling under `Policy::Optimal`/`Lpt`,
+//!   strict queue order under `Fcfs`/`Sjf`); the event carries the
+//!   allocated GPU indices.
 //! * **Complete** — the task's search finishes and releases its GPUs.
 //!   Because early exits (Algorithm 1 detectors over `trajsim`
 //!   trajectories) shorten the *actual* duration far below the
 //!   worst-case estimate the solver planned with, completions arrive
 //!   early and trigger immediate backfill replanning.
+//! * **Preempt** / **Placed** / **Migrate** — with
+//!   `HarnessConfig::preempt_on_arrival` set, a higher-priority arrival
+//!   that cannot fit evicts the youngest strictly-lower-priority
+//!   running task (`Preempt`, releasing its GPUs); the evicted task
+//!   later resumes with its remaining duration, either on the same GPUs
+//!   (`Placed`) or on different ones (`Migrate`, carrying both the old
+//!   and new indices).
 //!
 //! Time ties resolve completions before arrivals (capacity frees before
-//! the arriving task plans over it); every decision is appended to an
+//! the arriving task plans over it) and preemptions before the starts
+//! they make room for; every decision is appended to an
 //! [`event::EventLog`] whose `digest()` hashes raw IEEE-754 timestamp
-//! bits — the bit-identical-replay contract tests pin.
+//! bits *and every placement index* — the bit-identical-replay contract
+//! tests pin.  `EventLog::to_jsonl`/`from_jsonl` round-trip a timeline
+//! losslessly for offline diffing.
+//!
+//! ## Placement
+//!
+//! Capacity is not a scalar: the engine builds a
+//! [`crate::cluster::SimCluster`] over an NVLink
+//! [`crate::cluster::Topology`] (`HarnessConfig::island_size`-wide
+//! islands, 8 by default — the H100 SXM board shape) and the inter-task
+//! scheduler keeps its allocation bitmap consistent at every event.
+//! Each start chooses concrete GPU indices — a
+//! [`crate::cluster::Placement`] — under the configured
+//! [`crate::cluster::PlacePolicy`]:
+//!
+//! * `FirstFit` — topology-blind lowest-free-index scan (baseline);
+//! * `IslandFirst` — fill one island before spilling (default);
+//! * `BestFit` — pack the tightest island that fits;
+//! * `FragMin` — minimize the `cluster::comm` all-reduce cost score.
+//!
+//! Placement **never changes task durations** — the comm-cost impact is
+//! reported (`Timeline::cross_island_allocs`,
+//! `Timeline::placement_comm_cost`) rather than fed back into the
+//! clock, so timing-level replay stays comparable across placement
+//! policies while the fragmentation cost of a policy is still visible.
+//!
+//! ### Determinism guarantees
+//!
+//! `SimEngine::run` is a pure function of (config, trace): same inputs
+//! ⇒ bit-identical event log (placement indices included), makespan and
+//! per-task outcomes.  This holds because every layer below is
+//! deterministic: trace generators are pure functions of their seed
+//! (`util::rng::Pcg32` streams), the solver and queue disciplines break
+//! all ties on task id, placement policies break ties on the lowest
+//! island id / lowest GPU index, and preemption picks victims by
+//! (youngest start, highest id).  The engine itself draws no
+//! randomness.  This is what lets one engine power the Fig 9/12/15
+//! sweeps (`benches/harness_e2e.rs`), the makespan ablations and the
+//! integration suites (`rust/tests/simharness_e2e.rs`,
+//! `rust/tests/placement_integration.rs`).
 //!
 //! ## Trace format
 //!
 //! A [`trace::Trace`] is an arrival-ordered `Vec<TraceEntry>` of
 //! `(arrival time, TaskSpec)` pairs.  Generators — `at_zero` (Fig 12
 //! batch submission), `poisson` (exponential inter-arrivals), `bursty`
-//! (on/off tenant bursts) — and the [`trace::hetero_mix`] task-mix
-//! builder are pure functions of their seed, so `(generator args, seed)`
-//! fully determines a run; `Trace::fingerprint()` checks it cheaply.
-//!
-//! ## Determinism contract
-//!
-//! `SimEngine::run` is a pure function of (config, trace): same inputs ⇒
-//! bit-identical event log, makespan and per-task outcomes.  All
-//! randomness lives in the trace/task seeds (`util::rng::Pcg32`
-//! streams); the engine itself draws none.  This is what lets one engine
-//! power the Fig 9/12/15-style sweeps (`benches/harness_e2e.rs`), the
-//! makespan ablations and the integration suite
-//! (`rust/tests/simharness_e2e.rs`).
+//! (on/off tenant bursts), `fragmentation_heavy` (bitmap-shredding
+//! width mix) and `preemption_stress` (saturating wave + urgent
+//! arrivals) — plus the [`trace::hetero_mix`] / [`trace::frag_mix`]
+//! task-mix builders are pure functions of their seed, so
+//! `(generator args, seed)` fully determines a run;
+//! `Trace::fingerprint()` checks it cheaply.
 
 pub mod engine;
 pub mod event;
 pub mod trace;
 
+pub use crate::cluster::{PlacePolicy, Placement, Topology};
 pub use engine::{HarnessConfig, HarnessReport, SimEngine, Timeline};
 pub use event::{Event, EventKind, EventLog};
-pub use trace::{hetero_mix, Trace, TraceEntry};
+pub use trace::{frag_mix, hetero_mix, Trace, TraceEntry};

@@ -108,6 +108,7 @@ impl Trace {
             fnv1a_mix(&mut h, e.spec.epochs as u64);
             fnv1a_mix(&mut h, e.spec.train_samples as u64);
             fnv1a_mix(&mut h, e.spec.seed);
+            fnv1a_mix(&mut h, e.spec.priority as u64);
             for &lr in &e.spec.search_space.lrs {
                 fnv1a_mix(&mut h, lr.to_bits());
             }
@@ -157,6 +158,134 @@ pub fn hetero_mix(n_tasks: usize, train_samples: usize, seed: u64) -> Vec<TaskSp
         .collect()
 }
 
+/// A workload built to shred the allocation bitmap (the scenario where
+/// placement policy matters most): a stream of 1-GPU tasks with wildly
+/// jittered sizes keeps freeing scattered single GPUs, while every
+/// fourth task is a 4-GPU job that must find a hole — topology-blind
+/// first-fit repeatedly assembles those holes *across* NVLink islands,
+/// island-aware policies do not.  Sized for a 16-GPU / two-island
+/// cluster.  Pure function of (n_tasks, train_samples, seed).
+pub fn frag_mix(n_tasks: usize, train_samples: usize, seed: u64) -> Vec<TaskSpec> {
+    let mut rng = Pcg32::new(seed, 0xf7a9);
+    (0..n_tasks)
+        .map(|i| {
+            let wide = i % 4 == 3;
+            let (tag, model, gpus) = if wide {
+                ("wide", "qwen-32b", 4)
+            } else {
+                ("narrow", "llama-8b", 1)
+            };
+            // 0.3–1.7× size jitter → completion times scatter, so the
+            // free bitmap is a different shape at every wide arrival
+            let samples = (train_samples as f64 * rng.uniform(0.3, 1.7)) as usize;
+            TaskSpec {
+                name: format!("{tag}-{i}"),
+                model: model.into(),
+                dataset: "gsm-syn".into(),
+                num_gpus: gpus,
+                search_space: SearchSpace {
+                    lrs: vec![5e-5, 2e-4, 5e-4],
+                    ranks: vec![16, 64],
+                    batch_sizes: vec![2, 4],
+                },
+                seq_len: 512,
+                train_samples: samples.max(16),
+                seed: seed.wrapping_add(i as u64 * 131),
+                ..TaskSpec::default()
+            }
+        })
+        .collect()
+}
+
+impl Trace {
+    /// Fragmentation-heavy arrival pattern over [`frag_mix`]: narrow
+    /// tasks trickle in on short gaps, wide tasks land on long gaps —
+    /// by which time completions have punched scattered holes in the
+    /// bitmap.  Pure function of its arguments.
+    pub fn fragmentation_heavy(n_tasks: usize, train_samples: usize, seed: u64) -> Trace {
+        let specs = frag_mix(n_tasks, train_samples, seed);
+        let mut rng = Pcg32::new(seed, 0xf7a10);
+        let mut t = 0.0;
+        let entries = specs
+            .into_iter()
+            .map(|spec| {
+                t += if spec.num_gpus > 1 {
+                    rng.uniform(300.0, 900.0)
+                } else {
+                    rng.uniform(20.0, 150.0)
+                };
+                TraceEntry { arrival: t, spec }
+            })
+            .collect();
+        Trace { entries }
+    }
+
+    /// Preemption-stress workload: a t = 0 wave of wide, long,
+    /// priority-0 tasks saturates the cluster, then narrow
+    /// priority-1/priority-2 tenants arrive seconds later — with
+    /// `preempt_on_arrival` enabled every one of them must evict a
+    /// runner; with it disabled they queue behind the wave.  The wave
+    /// width is `n_wide` 4-GPU tasks (4·n_wide GPUs).  Pure function of
+    /// its arguments.
+    pub fn preemption_stress(
+        n_wide: usize,
+        n_urgent: usize,
+        train_samples: usize,
+        seed: u64,
+    ) -> Trace {
+        let mut rng = Pcg32::new(seed, 0x94ee47);
+        let mut entries: Vec<TraceEntry> = Vec::with_capacity(n_wide + n_urgent);
+        for i in 0..n_wide {
+            entries.push(TraceEntry {
+                arrival: 0.0,
+                spec: TaskSpec {
+                    name: format!("bulk-{i}"),
+                    model: "qwen-32b".into(),
+                    dataset: "gsm-syn".into(),
+                    num_gpus: 4,
+                    search_space: SearchSpace {
+                        lrs: vec![5e-5, 2e-4, 5e-4],
+                        ranks: vec![16, 64],
+                        batch_sizes: vec![2, 4],
+                    },
+                    seq_len: 512,
+                    // 4× the urgent tasks' size: the wave outlasts every
+                    // urgent arrival below
+                    train_samples: (train_samples * 4).max(64),
+                    seed: seed.wrapping_add(i as u64 * 17),
+                    priority: 0,
+                    ..TaskSpec::default()
+                },
+            });
+        }
+        let mut t = 0.0;
+        for i in 0..n_urgent {
+            // seconds after the wave: far inside any wide task's run
+            t += rng.uniform(0.5, 3.0);
+            entries.push(TraceEntry {
+                arrival: t,
+                spec: TaskSpec {
+                    name: format!("urgent-{i}"),
+                    model: "llama-8b".into(),
+                    dataset: "gsm-syn".into(),
+                    num_gpus: 1 + (i % 2),
+                    search_space: SearchSpace {
+                        lrs: vec![5e-5, 2e-4],
+                        ranks: vec![16],
+                        batch_sizes: vec![2, 4],
+                    },
+                    seq_len: 256,
+                    train_samples: train_samples.max(16),
+                    seed: seed.wrapping_add(1000 + i as u64 * 23),
+                    priority: 1 + (i % 2) as i64,
+                    ..TaskSpec::default()
+                },
+            });
+        }
+        Trace::with_arrivals(entries.into_iter().map(|e| (e.arrival, e.spec)).collect())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,6 +329,47 @@ mod tests {
         ]);
         let arr: Vec<f64> = t.entries.iter().map(|e| e.arrival).collect();
         assert_eq!(arr, vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn fragmentation_heavy_mixes_widths() {
+        let t = Trace::fragmentation_heavy(12, 64, 5);
+        assert_eq!(t.len(), 12);
+        assert_eq!(t.entries.iter().filter(|e| e.spec.num_gpus == 4).count(), 3);
+        assert!(t.entries.iter().all(|e| matches!(e.spec.num_gpus, 1 | 4)));
+        for w in t.entries.windows(2) {
+            assert!(w[1].arrival > w[0].arrival);
+        }
+        // pure function of the seed
+        assert_eq!(
+            t.fingerprint(),
+            Trace::fragmentation_heavy(12, 64, 5).fingerprint()
+        );
+        assert_ne!(
+            t.fingerprint(),
+            Trace::fragmentation_heavy(12, 64, 6).fingerprint()
+        );
+    }
+
+    #[test]
+    fn preemption_stress_shapes_and_priorities() {
+        let t = Trace::preemption_stress(4, 6, 48, 9);
+        assert_eq!(t.len(), 10);
+        let bulk: Vec<_> = t.entries.iter().filter(|e| e.spec.priority == 0).collect();
+        let urgent: Vec<_> = t.entries.iter().filter(|e| e.spec.priority > 0).collect();
+        assert_eq!(bulk.len(), 4);
+        assert_eq!(urgent.len(), 6);
+        assert!(bulk.iter().all(|e| e.arrival == 0.0 && e.spec.num_gpus == 4));
+        // every urgent arrival lands seconds after the wave, not hours
+        assert!(urgent.iter().all(|e| e.arrival > 0.0 && e.arrival < 30.0));
+        // urgent tasks are strictly smaller than the wave's tasks
+        assert!(urgent
+            .iter()
+            .all(|e| e.spec.train_samples < bulk[0].spec.train_samples));
+        assert_eq!(
+            t.fingerprint(),
+            Trace::preemption_stress(4, 6, 48, 9).fingerprint()
+        );
     }
 
     #[test]

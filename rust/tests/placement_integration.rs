@@ -1,0 +1,367 @@
+//! Integration over the concrete-placement layer: island-aware placement
+//! vs topology-blind first-fit on a fragmentation-heavy 16-GPU trace
+//! (the ISSUE acceptance scenario), bitmap-consistent event logs,
+//! preemption/migration timelines, and the golden digest + jsonl dump of
+//! a pinned (trace, seed).
+
+use std::collections::BTreeMap;
+
+use alto::cluster::{PlacePolicy, Placement};
+use alto::config::TaskSpec;
+use alto::coordinator::service::TaskOutcome;
+use alto::sched::inter::Policy;
+use alto::simharness::{EventKind, HarnessConfig, SimEngine, Trace};
+
+fn engine(total_gpus: usize, policy: Policy, place: PlacePolicy, preempt: bool) -> SimEngine {
+    SimEngine::new(HarnessConfig {
+        total_gpus,
+        policy,
+        place,
+        preempt_on_arrival: preempt,
+        ..HarnessConfig::default()
+    })
+}
+
+/// Hand-crafted outcome for replay-only tests: est == actual == `dur`.
+fn outcome(name: &str, gpus: usize, dur: f64) -> TaskOutcome {
+    TaskOutcome {
+        name: name.into(),
+        gpus,
+        est_duration: dur,
+        actual_duration: dur,
+        best_val: 0.0,
+        samples_used: 0,
+        samples_budget: 0,
+        saved_by_reason: BTreeMap::new(),
+        group_slots: Vec::new(),
+        group_results: Vec::new(),
+    }
+}
+
+fn spec(gpus: usize, priority: i64) -> TaskSpec {
+    TaskSpec {
+        num_gpus: gpus,
+        priority,
+        ..TaskSpec::default()
+    }
+}
+
+/// Walk an event log against an independent bitmap: every
+/// placement-bearing event must allocate currently-free GPUs of exactly
+/// the advertised width, and completes/preempts must release exactly
+/// what the task held.  This re-derives the scheduler's bitmap from the
+/// log alone — the "placements are consistent" acceptance check.
+fn check_bitmap_consistency(log: &alto::simharness::EventLog, total_gpus: usize) {
+    let mut free = vec![true; total_gpus];
+    let mut held: BTreeMap<usize, Placement> = BTreeMap::new();
+    for e in log.events() {
+        match &e.kind {
+            EventKind::Arrival { .. } => {}
+            EventKind::Start { task, gpus, placement }
+            | EventKind::Placed { task, gpus, placement } => {
+                assert_eq!(placement.len(), *gpus, "event {e}");
+                assert!(!held.contains_key(task), "task {task} started twice: {e}");
+                for &g in placement.gpus() {
+                    assert!(g < total_gpus, "GPU {g} out of range: {e}");
+                    assert!(free[g], "GPU {g} double-booked: {e}");
+                    free[g] = false;
+                }
+                held.insert(*task, placement.clone());
+            }
+            EventKind::Migrate { task, gpus, from, to } => {
+                assert_eq!(to.len(), *gpus, "event {e}");
+                assert!(!held.contains_key(task), "migrating task {task} still held: {e}");
+                assert_ne!(from, to, "migrate with identical placement: {e}");
+                for &g in to.gpus() {
+                    assert!(free[g], "GPU {g} double-booked by migration: {e}");
+                    free[g] = false;
+                }
+                held.insert(*task, to.clone());
+            }
+            EventKind::Complete { task, .. } | EventKind::Preempt { task, .. } => {
+                let p = held
+                    .remove(task)
+                    .unwrap_or_else(|| panic!("task {task} released without holding: {e}"));
+                if let EventKind::Preempt { placement, .. } = &e.kind {
+                    assert_eq!(placement, &p, "preempt released wrong GPUs: {e}");
+                }
+                for &g in p.gpus() {
+                    assert!(!free[g], "GPU {g} freed while free: {e}");
+                    free[g] = true;
+                }
+            }
+        }
+    }
+    assert!(held.is_empty(), "timeline ended with live allocations: {held:?}");
+    assert!(free.iter().all(|&f| f), "timeline ended with a dirty bitmap");
+}
+
+/// The ISSUE acceptance scenario, fully deterministic: a 16-GPU
+/// two-island cluster fragments (scattered 1-GPU completions leave 2
+/// free GPUs on island 0 and 4 on island 1), then a 4-GPU task arrives.
+/// Topology-blind first-fit assembles the hole across both islands;
+/// every island-aware policy keeps it inside island 1 — strictly fewer
+/// cross-island allocations and strictly lower summed comm cost.
+#[test]
+fn island_aware_beats_blind_first_fit_on_fragmented_cluster() {
+    // 16 narrow tasks at t=0 fill the cluster one GPU each (task i on
+    // GPU i under every policy); durations punch holes at {2,3} (t=100)
+    // and {8,9,10,11} (t=150); the wide task lands at t=200.
+    let mut pairs: Vec<(f64, TaskSpec)> = (0..16).map(|_| (0.0, spec(1, 0))).collect();
+    pairs.push((200.0, spec(4, 0)));
+    let trace = Trace::with_arrivals(pairs);
+    let mut outcomes: Vec<TaskOutcome> = (0..16)
+        .map(|i| {
+            let dur = match i {
+                2 | 3 => 100.0,
+                8..=11 => 150.0,
+                _ => 1000.0,
+            };
+            outcome(&format!("narrow-{i}"), 1, dur)
+        })
+        .collect();
+    outcomes.push(outcome("wide", 4, 500.0));
+
+    let blind = engine(16, Policy::Fcfs, PlacePolicy::FirstFit, false)
+        .replay(&trace, &outcomes)
+        .unwrap();
+    assert_eq!(
+        blind.placements[16].gpus(),
+        &[2, 3, 8, 9],
+        "first-fit should straddle the island boundary"
+    );
+    assert_eq!(blind.cross_island_allocs, 1);
+
+    for place in [PlacePolicy::IslandFirst, PlacePolicy::BestFit, PlacePolicy::FragMin] {
+        let aware = engine(16, Policy::Fcfs, place, false)
+            .replay(&trace, &outcomes)
+            .unwrap();
+        assert_eq!(
+            aware.placements[16].gpus(),
+            &[8, 9, 10, 11],
+            "{place:?} should fill island 1"
+        );
+        assert_eq!(aware.cross_island_allocs, 0, "{place:?}");
+        assert!(
+            aware.cross_island_allocs < blind.cross_island_allocs,
+            "{place:?} must strictly beat blind first-fit"
+        );
+        assert!(
+            aware.placement_comm_cost < blind.placement_comm_cost - 1e-12,
+            "{place:?} comm cost {} must be strictly below blind {}",
+            aware.placement_comm_cost,
+            blind.placement_comm_cost
+        );
+        // placement choice never changes the clock
+        assert_eq!(aware.makespan.to_bits(), blind.makespan.to_bits());
+        check_bitmap_consistency(&aware.log, 16);
+    }
+    check_bitmap_consistency(&blind.log, 16);
+}
+
+/// The same comparison over the generated fragmentation-heavy workload,
+/// end to end through the simulated task bodies: island-aware placement
+/// never does worse than blind first-fit on either fragmentation metric.
+#[test]
+fn fragmentation_heavy_generator_aware_no_worse_than_blind() {
+    let trace = Trace::fragmentation_heavy(16, 48, 7);
+    let bodies = engine(16, Policy::Optimal, PlacePolicy::FirstFit, false)
+        .simulate_trace(&trace)
+        .unwrap();
+    let blind = engine(16, Policy::Optimal, PlacePolicy::FirstFit, false)
+        .replay(&trace, &bodies)
+        .unwrap();
+    let aware = engine(16, Policy::Optimal, PlacePolicy::IslandFirst, false)
+        .replay(&trace, &bodies)
+        .unwrap();
+    assert!(
+        aware.cross_island_allocs <= blind.cross_island_allocs,
+        "aware {} vs blind {}",
+        aware.cross_island_allocs,
+        blind.cross_island_allocs
+    );
+    assert!(aware.placement_comm_cost <= blind.placement_comm_cost + 1e-9);
+    // identical timing, different indices only
+    assert_eq!(aware.makespan.to_bits(), blind.makespan.to_bits());
+    for tl in [&blind, &aware] {
+        assert_eq!(
+            tl.log.count(|k| matches!(k, EventKind::Complete { .. })),
+            trace.len()
+        );
+        check_bitmap_consistency(&tl.log, 16);
+    }
+}
+
+/// Placements enabled, replay stays a pure function of (cfg, trace):
+/// bit-identical event logs (placement indices hashed) and every start
+/// carries concrete, in-bounds, pairwise-disjoint GPU indices.
+#[test]
+fn replay_with_placements_is_bit_identical_and_consistent() {
+    let trace = Trace::fragmentation_heavy(12, 48, 21);
+    let a = engine(16, Policy::Optimal, PlacePolicy::IslandFirst, false)
+        .run(&trace)
+        .unwrap();
+    let b = engine(16, Policy::Optimal, PlacePolicy::IslandFirst, false)
+        .run(&trace)
+        .unwrap();
+    assert_eq!(a.log.digest(), b.log.digest(), "placement-bearing logs must replay bitwise");
+    assert_eq!(a.log.events(), b.log.events());
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    // every start pins exactly gpus-many concrete indices
+    let mut starts = 0;
+    for e in a.log.events() {
+        if let EventKind::Start { gpus, placement, .. } = &e.kind {
+            starts += 1;
+            assert_eq!(placement.len(), *gpus, "{e}");
+        }
+    }
+    assert_eq!(starts, trace.len());
+    check_bitmap_consistency(&a.log, 16);
+    // final per-task placements are reported and sized
+    assert_eq!(a.placements.len(), trace.len());
+    for (i, p) in a.placements.iter().enumerate() {
+        assert_eq!(p.len(), a.outcomes[i].gpus, "task {i}");
+    }
+}
+
+/// Deterministic preemption/migration timeline (replay-only): a
+/// priority-1 arrival evicts the youngest runner, which later resumes
+/// on different GPUs — exercising Preempt, Start, Migrate and the
+/// remaining-duration bookkeeping, with the bitmap consistent
+/// throughout.
+#[test]
+fn preemption_evicts_youngest_and_migrates() {
+    // 8 GPUs (one island). A: 4 GPUs, 30s. B: 4 GPUs, 18s. U arrives at
+    // t=10 (priority 1, 4 GPUs, 50s) onto a full cluster.
+    let trace = Trace::with_arrivals(vec![
+        (0.0, spec(4, 0)),
+        (0.0, spec(4, 0)),
+        (10.0, spec(4, 1)),
+    ]);
+    let outcomes = vec![
+        outcome("a", 4, 30.0),
+        outcome("b", 4, 18.0),
+        outcome("urgent", 4, 50.0),
+    ];
+    let tl = engine(8, Policy::Fcfs, PlacePolicy::IslandFirst, true)
+        .replay(&trace, &outcomes)
+        .unwrap();
+    check_bitmap_consistency(&tl.log, 8);
+    assert_eq!(tl.preemptions, 1);
+    assert_eq!(tl.migrations, 1);
+    let kinds: Vec<(&str, usize, f64)> = tl
+        .log
+        .events()
+        .iter()
+        .map(|e| {
+            let label = match &e.kind {
+                EventKind::Arrival { .. } => "arrive",
+                EventKind::Start { .. } => "start",
+                EventKind::Complete { .. } => "complete",
+                EventKind::Preempt { .. } => "preempt",
+                EventKind::Placed { .. } => "placed",
+                EventKind::Migrate { .. } => "migrate",
+            };
+            (label, e.kind.task(), e.time)
+        })
+        .collect();
+    // t=10: B (the youngest tie-break: same start, higher id) is evicted
+    // and U starts in its place
+    assert!(kinds.contains(&("preempt", 1, 10.0)), "{kinds:?}");
+    assert!(kinds.contains(&("start", 2, 10.0)), "{kinds:?}");
+    // t=30: A completes, B resumes on A's freed GPUs → a migration
+    assert!(kinds.contains(&("complete", 0, 30.0)), "{kinds:?}");
+    assert!(kinds.contains(&("migrate", 1, 30.0)), "{kinds:?}");
+    // B ran 10s before eviction, so it finishes 8s after resuming
+    assert!(kinds.contains(&("complete", 1, 38.0)), "{kinds:?}");
+    // U runs 10..60 uninterrupted
+    assert!(kinds.contains(&("complete", 2, 60.0)), "{kinds:?}");
+    assert_eq!(tl.makespan, 60.0);
+    // the preempt event precedes the start it made room for
+    let pre_seq = tl.log.events().iter().position(|e| matches!(e.kind, EventKind::Preempt { .. })).unwrap();
+    let start_u = tl.log.events().iter().position(|e| matches!(&e.kind, EventKind::Start { task: 2, .. })).unwrap();
+    assert!(pre_seq < start_u);
+
+    // without preemption the urgent task queues behind the wave instead
+    let no_pre = engine(8, Policy::Fcfs, PlacePolicy::IslandFirst, false)
+        .replay(&trace, &outcomes)
+        .unwrap();
+    assert_eq!(no_pre.preemptions, 0);
+    let urgent_start = |tl: &alto::simharness::Timeline| {
+        tl.log
+            .events()
+            .iter()
+            .find(|e| matches!(&e.kind, EventKind::Start { task: 2, .. }))
+            .unwrap()
+            .time
+    };
+    assert!(urgent_start(&tl) < urgent_start(&no_pre));
+}
+
+/// The generated preemption-stress workload through the full engine:
+/// urgent arrivals land on a saturated cluster and evict; every task
+/// still completes and the log replays the bitmap cleanly.
+#[test]
+fn preemption_stress_trace_evicts_and_completes() {
+    let trace = Trace::preemption_stress(4, 4, 32, 3);
+    let report = engine(16, Policy::Fcfs, PlacePolicy::IslandFirst, true)
+        .run(&trace)
+        .unwrap();
+    assert!(report.preemptions >= 1, "urgent arrivals on a full cluster must evict");
+    assert_eq!(
+        report.log.count(|k| matches!(k, EventKind::Complete { .. })),
+        trace.len()
+    );
+    assert_eq!(
+        report.log.count(|k| matches!(k, EventKind::Preempt { .. })),
+        report.preemptions
+    );
+    check_bitmap_consistency(&report.log, 16);
+    // determinism holds under preemption too
+    let again = engine(16, Policy::Fcfs, PlacePolicy::IslandFirst, true)
+        .run(&trace)
+        .unwrap();
+    assert_eq!(report.log.digest(), again.log.digest());
+}
+
+/// Golden digest + jsonl dump for a pinned (trace, seed).  The first run
+/// writes `rust/tests/golden/` (commit the result); later runs compare
+/// bit-for-bit, so any placement/timing regression shows up as a digest
+/// mismatch with a diffable jsonl next to it.  Set `GOLDEN_UPDATE=1` to
+/// re-pin on purpose.
+#[test]
+fn golden_event_log_digest_and_jsonl() {
+    let trace = Trace::fragmentation_heavy(8, 32, 11);
+    let report = engine(16, Policy::Optimal, PlacePolicy::IslandFirst, false)
+        .run(&trace)
+        .unwrap();
+    let digest = format!("{:016x}", report.log.digest());
+    let jsonl = report.log.to_jsonl();
+    // jsonl round-trips bit-identically before we even touch the disk
+    let back = alto::simharness::EventLog::from_jsonl(&jsonl).unwrap();
+    assert_eq!(back.digest(), report.log.digest());
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden");
+    let digest_path = dir.join("placement_event_log.digest");
+    let jsonl_path = dir.join("placement_event_log.jsonl");
+    let update = std::env::var("GOLDEN_UPDATE").map(|v| v == "1").unwrap_or(false);
+    if update || !digest_path.exists() {
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(&digest_path, format!("{digest}\n")).unwrap();
+        std::fs::write(&jsonl_path, &jsonl).unwrap();
+        eprintln!("golden: pinned digest {digest} at {}", digest_path.display());
+        return;
+    }
+    let pinned = std::fs::read_to_string(&digest_path).unwrap();
+    assert_eq!(
+        pinned.trim(),
+        digest,
+        "event-log digest drifted from the golden pin; diff {} and re-pin \
+         with GOLDEN_UPDATE=1 if the change is intentional",
+        jsonl_path.display()
+    );
+    // and the stored jsonl still parses to the same timeline
+    let stored = std::fs::read_to_string(&jsonl_path).unwrap();
+    let stored_log = alto::simharness::EventLog::from_jsonl(&stored).unwrap();
+    assert_eq!(stored_log.digest(), report.log.digest());
+}
