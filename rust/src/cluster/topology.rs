@@ -162,6 +162,18 @@ impl Topology {
         (0..self.len()).filter(|&g| self.island_of[g] == i).collect()
     }
 
+    /// Does every GPU index in the placement exist in this topology?
+    /// (Empty placements are vacuously contained.)  The pricing layers
+    /// use this to refuse island derating for placements that belong to
+    /// some other cluster — e.g. against a flat nominal model.
+    pub fn contains(&self, p: &Placement) -> bool {
+        // indices are sorted, so the last one is the maximum
+        match p.gpus().last() {
+            Some(&hi) => hi < self.len(),
+            None => true,
+        }
+    }
+
     /// Number of distinct islands a placement touches.
     pub fn islands_spanned(&self, p: &Placement) -> usize {
         let mut seen = vec![false; self.n_islands];
@@ -365,6 +377,16 @@ mod tests {
         let ragged = Topology::uniform(10, 4);
         assert_eq!(ragged.n_islands(), 3);
         assert_eq!(ragged.island_members(2), vec![8, 9]);
+    }
+
+    #[test]
+    fn containment() {
+        let t = Topology::h100_nodes(16);
+        assert!(t.contains(&Placement::new(vec![0, 15])));
+        assert!(!t.contains(&Placement::new(vec![0, 16])));
+        assert!(t.contains(&Placement::default()));
+        // the degenerate empty topology contains nothing concrete
+        assert!(!Topology::flat(0).contains(&Placement::new(vec![0])));
     }
 
     #[test]

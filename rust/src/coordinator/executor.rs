@@ -12,8 +12,8 @@ use crate::cluster::gpu::GpuSpec;
 use crate::config::HyperParams;
 use crate::data::corpus::{Corpus, PrefCorpus};
 use crate::data::synth::DatasetProfile;
-use crate::parallel::baselines::Alto;
-use crate::parallel::workload::{Strategy, Workload};
+use crate::parallel::workload::Workload;
+use crate::perfmodel::{ContentionCtx, StepTimeModel};
 use crate::runtime::{Manifest, Runtime, Session};
 use crate::trajsim::SimJob;
 
@@ -62,12 +62,13 @@ struct SimSlot {
     active: bool,
 }
 
-/// Simulator executor: loss trajectories from `trajsim`, step timing from
-/// the ALTO strategy cost model on a configurable device.
+/// Simulator executor: loss trajectories from `trajsim`, step timing
+/// from the unified [`StepTimeModel`] (nominal pricing — the harness
+/// charges placement and contention at the cluster layer).
 pub struct SimBackend {
     profile: DatasetProfile,
     slots: Vec<Option<SimSlot>>,
-    gpu: GpuSpec,
+    perf: StepTimeModel,
     n_gpus: usize,
     seq_len: usize,
     batch_size: usize,
@@ -88,7 +89,7 @@ impl SimBackend {
         SimBackend {
             profile,
             slots: (0..n_slots).map(|_| None).collect(),
-            gpu,
+            perf: StepTimeModel::nominal(gpu),
             n_gpus,
             seq_len,
             batch_size,
@@ -145,7 +146,9 @@ impl Backend for SimBackend {
             batch_per_adapter: self.batch_size,
             seq_len: self.seq_len,
         };
-        self.last_step_s = Alto.step_time(&w, &self.gpu, self.n_gpus).total();
+        self.last_step_s = self
+            .perf
+            .step_total(&w, self.n_gpus, None, &ContentionCtx::empty());
         Ok(self
             .slots
             .iter_mut()

@@ -1,14 +1,22 @@
 //! Lightweight throughput profiling + task-duration estimation
 //! (paper §7.2): a short measured run yields samples/second; combined
 //! with the task's total sample count this gives the d_i the inter-task
-//! scheduler plans with.  Results are cached per (model, batch, gpus).
+//! scheduler plans with.
+//!
+//! Since the `perfmodel` refactor this is a *caching facade*: all the
+//! actual step-time arithmetic lives in
+//! [`crate::perfmodel::StepTimeModel`]; the profiler only memoizes
+//! results per (model, adapters, rank, batch, seq, gpus,
+//! islands-spanned, neighbor-adapters) — the paper's "profiling results
+//! are cached per task to avoid redundant measurements".
 
 use std::collections::BTreeMap;
 
 use crate::cluster::gpu::GpuSpec;
+use crate::cluster::Placement;
 use crate::config::{ModelShape, TaskSpec};
-use crate::parallel::baselines::Alto;
-use crate::parallel::workload::{Strategy, Workload};
+use crate::parallel::workload::Workload;
+use crate::perfmodel::{task_workload, ContentionCtx, StepTimeModel};
 
 /// Cached throughput entry.
 #[derive(Debug, Clone, Copy)]
@@ -16,28 +24,61 @@ pub struct ThroughputProfile {
     pub samples_per_s: f64,
 }
 
-/// Profiler with a per-configuration cache (paper: "profiling results are
-/// cached per task to avoid redundant measurements").
+/// Caching facade over the [`StepTimeModel`].
 pub struct Profiler {
-    gpu: GpuSpec,
+    model: StepTimeModel,
     cache: BTreeMap<String, ThroughputProfile>,
     pub profile_runs: usize,
 }
 
 impl Profiler {
+    /// Placement-agnostic profiler (flat topology): the legacy nominal
+    /// pricing, used wherever no concrete placement exists yet.
     pub fn new(gpu: GpuSpec) -> Profiler {
+        Profiler::over(StepTimeModel::nominal(gpu))
+    }
+
+    /// Profile against an explicit step-time model (topology included),
+    /// enabling placement- and contention-aware estimates.
+    pub fn over(model: StepTimeModel) -> Profiler {
         Profiler {
-            gpu,
+            model,
             cache: BTreeMap::new(),
             profile_runs: 0,
         }
     }
 
-    fn key(model: &ModelShape, n: usize, b: usize, seq: usize, gpus: usize) -> String {
-        format!("{}|{n}|{b}|{seq}|{gpus}", model.name)
+    /// The underlying step-time model.
+    pub fn model(&self) -> &StepTimeModel {
+        &self.model
     }
 
-    /// Samples/second of the batched executor on this configuration.
+    fn key(w: &Workload, gpus: usize, islands: usize, neighbors: usize) -> String {
+        let mut ranks = String::new();
+        for r in &w.ranks {
+            ranks.push_str(&r.to_string());
+            ranks.push(',');
+        }
+        format!(
+            "{}|{ranks}|{}|{}|{gpus}|{islands}|{neighbors}",
+            w.model.name, w.batch_per_adapter, w.seq_len
+        )
+    }
+
+    /// Islands a placement spans under this profiler's topology (1 when
+    /// unplaced or out of the topology's range) — the only placement
+    /// property the pricing depends on, hence the cache key.
+    fn islands_of(&self, placement: Option<&Placement>) -> usize {
+        match placement {
+            Some(p) if self.model.topo().contains(p) => {
+                self.model.topo().islands_spanned(p).max(1)
+            }
+            _ => 1,
+        }
+    }
+
+    /// Samples/second of the batched executor on this configuration
+    /// (nominal: no placement derating, no contention).
     pub fn throughput(
         &mut self,
         model: &ModelShape,
@@ -47,21 +88,34 @@ impl Profiler {
         seq: usize,
         gpus: usize,
     ) -> ThroughputProfile {
-        let key = Self::key(model, n_adapters, batch, seq, gpus);
-        if let Some(hit) = self.cache.get(&key) {
-            return *hit;
-        }
-        // the "short training run": one modeled step of the ALTO executor
-        self.profile_runs += 1;
         let w = Workload {
             model: model.clone(),
             ranks: vec![rank; n_adapters.max(1)],
             batch_per_adapter: batch,
             seq_len: seq,
         };
-        let t = Alto.step_time(&w, &self.gpu, gpus).total();
+        self.throughput_at(&w, gpus, None, &ContentionCtx::empty())
+    }
+
+    /// Samples/second of a workload at a concrete placement and
+    /// co-location context — the memoized entry point everything else
+    /// funnels through.
+    pub fn throughput_at(
+        &mut self,
+        w: &Workload,
+        gpus: usize,
+        placement: Option<&Placement>,
+        ctx: &ContentionCtx,
+    ) -> ThroughputProfile {
+        let islands = self.islands_of(placement);
+        let key = Self::key(w, gpus, islands, ctx.neighbor_adapters);
+        if let Some(hit) = self.cache.get(&key) {
+            return *hit;
+        }
+        // the "short training run": one modeled step of the ALTO executor
+        self.profile_runs += 1;
         let prof = ThroughputProfile {
-            samples_per_s: (n_adapters.max(1) * batch) as f64 / t,
+            samples_per_s: self.model.throughput(w, gpus, placement, ctx),
         };
         self.cache.insert(key, prof);
         prof
@@ -69,15 +123,27 @@ impl Profiler {
 
     /// Worst-case duration estimate d_i for a task: total samples over
     /// sustained throughput at the task's dominant configuration.
-    pub fn estimate_duration(&mut self, model: &ModelShape, task: &TaskSpec, n_slots: usize) -> f64 {
-        let b = *task
-            .search_space
-            .batch_sizes
-            .iter()
-            .min()
-            .unwrap_or(&1);
-        let rank = task.search_space.ranks.iter().copied().max().unwrap_or(16);
-        let tput = self.throughput(model, n_slots, rank, b, task.seq_len, task.num_gpus);
+    pub fn estimate_duration(
+        &mut self,
+        model: &ModelShape,
+        task: &TaskSpec,
+        n_slots: usize,
+    ) -> f64 {
+        self.estimate_duration_at(model, task, n_slots, None, &ContentionCtx::empty())
+    }
+
+    /// `estimate_duration` at a concrete placement and co-location
+    /// context (cached like every other profile).
+    pub fn estimate_duration_at(
+        &mut self,
+        model: &ModelShape,
+        task: &TaskSpec,
+        n_slots: usize,
+        placement: Option<&Placement>,
+        ctx: &ContentionCtx,
+    ) -> f64 {
+        let w = task_workload(model, task, n_slots);
+        let tput = self.throughput_at(&w, task.num_gpus, placement, ctx);
         task.total_samples() as f64 / tput.samples_per_s
     }
 }
@@ -85,6 +151,7 @@ impl Profiler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::Topology;
     use crate::config::{SearchSpace, MODEL_FAMILY};
 
     #[test]
@@ -124,5 +191,38 @@ mod tests {
         let ds = p.estimate_duration(&small, &t, 4);
         let db = p.estimate_duration(&big, &t, 4);
         assert!(db > ds * 3.0, "{db} vs {ds}");
+    }
+
+    #[test]
+    fn placement_and_contention_change_the_estimate() {
+        let mut p = Profiler::over(StepTimeModel::new(
+            GpuSpec::h100_sxm5(),
+            Topology::h100_nodes(16),
+        ));
+        let m = MODEL_FAMILY.get("qwen-32b").unwrap();
+        let t = TaskSpec {
+            search_space: SearchSpace::paper_multi_gpu(),
+            num_gpus: 4,
+            seq_len: 512,
+            train_samples: 1000,
+            ..TaskSpec::default()
+        };
+        let nominal = p.estimate_duration(&m, &t, 4);
+        let inside = Placement::new(vec![0, 1, 2, 3]);
+        let across = Placement::new(vec![6, 7, 8, 9]);
+        let same = p.estimate_duration_at(&m, &t, 4, Some(&inside), &ContentionCtx::empty());
+        assert_eq!(same.to_bits(), nominal.to_bits(), "single island must be free");
+        let worse = p.estimate_duration_at(&m, &t, 4, Some(&across), &ContentionCtx::empty());
+        assert!(worse > nominal, "cross-island {worse} vs {nominal}");
+        let crowded = p.estimate_duration_at(
+            &m,
+            &t,
+            4,
+            Some(&inside),
+            &ContentionCtx { neighbor_adapters: 8, neighbor_gpus: 4 },
+        );
+        assert!(crowded > nominal, "contended {crowded} vs {nominal}");
+        // distinct cache entries, not re-measurements of the same key
+        assert_eq!(p.profile_runs, 3);
     }
 }

@@ -27,6 +27,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod parallel;
+pub mod perfmodel;
 pub mod runtime;
 pub mod sched;
 pub mod simharness;

@@ -1,0 +1,87 @@
+//! Co-location contention: what sharing an NVLink island costs.
+//!
+//! Placements in this cluster are pairwise disjoint at the GPU level, so
+//! tenants never fight over SMs or HBM — those are private to each GPU.
+//! What they *do* share is the island's NVSwitch fabric: every
+//! co-resident tenant's all-gathers ride the same switch ports, so a
+//! task's collectives slow down as more foreign adapters train on its
+//! islands (the PLoRA/tLoRA co-location observation).  The model is a
+//! deliberately simple linear pressure term — each foreign adapter slot
+//! claims a small fixed fraction of the fabric — capped so a crowded
+//! island degrades gracefully instead of diverging.
+//!
+//! Single-GPU tasks have no collective term, so contention (correctly)
+//! never slows them; the slowdown is monotone non-decreasing in the
+//! neighbor count, which `rust/tests/perfmodel_props.rs` pins.
+
+/// The foreign adapters currently sharing resources with a priced
+/// workload's GPU group: everything resident on the NVLink islands its
+/// placement touches, excluding the workload's own adapters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ContentionCtx {
+    /// Executor slots (co-located adapters) other tenants keep resident
+    /// on the shared islands.
+    pub neighbor_adapters: usize,
+    /// GPUs those tenants hold on the shared islands (reported for
+    /// diagnostics; the fabric pressure itself scales with adapters,
+    /// whose optimizer collectives are what actually ride the switch).
+    pub neighbor_gpus: usize,
+}
+
+impl ContentionCtx {
+    /// No one else on the island — the legacy (uncontended) pricing.
+    pub fn empty() -> ContentionCtx {
+        ContentionCtx::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.neighbor_adapters == 0 && self.neighbor_gpus == 0
+    }
+}
+
+/// Fabric pressure per foreign adapter slot: each claims ~1.5% of the
+/// shared switch bandwidth (an 8-GPU island hosting 32 foreign adapter
+/// slots halves a tenant's effective collective rate).
+pub const FABRIC_PRESSURE_PER_ADAPTER: f64 = 0.015;
+
+/// Slowdown ceiling: even a saturated island never derates a tenant's
+/// collectives by more than this factor.
+pub const MAX_FABRIC_SLOWDOWN: f64 = 2.0;
+
+/// Multiplier (≥ 1) applied to a workload's collective time for the
+/// given co-location context.  Exactly 1.0 for an empty context, and
+/// monotone non-decreasing in `neighbor_adapters`.
+pub fn fabric_slowdown(ctx: &ContentionCtx) -> f64 {
+    (1.0 + FABRIC_PRESSURE_PER_ADAPTER * ctx.neighbor_adapters as f64).min(MAX_FABRIC_SLOWDOWN)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_context_is_free() {
+        assert_eq!(fabric_slowdown(&ContentionCtx::empty()).to_bits(), 1.0f64.to_bits());
+        assert!(ContentionCtx::default().is_empty());
+    }
+
+    #[test]
+    fn slowdown_monotone_and_capped() {
+        let mut last = 0.0;
+        for n in 0..400 {
+            let s = fabric_slowdown(&ContentionCtx {
+                neighbor_adapters: n,
+                neighbor_gpus: 0,
+            });
+            assert!(s >= 1.0);
+            assert!(s >= last, "non-monotone at {n}: {s} < {last}");
+            assert!(s <= MAX_FABRIC_SLOWDOWN);
+            last = s;
+        }
+        // the cap binds eventually
+        assert_eq!(
+            fabric_slowdown(&ContentionCtx { neighbor_adapters: 1000, neighbor_gpus: 0 }),
+            MAX_FABRIC_SLOWDOWN
+        );
+    }
+}

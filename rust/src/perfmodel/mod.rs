@@ -1,0 +1,254 @@
+//! # perfmodel — the single owner of step-time estimation
+//!
+//! Before this layer existed, duration math was scattered across four
+//! consumers: `coordinator::Profiler` priced tasks with a private call
+//! into `parallel::baselines::Alto`, `simharness::engine` froze those
+//! prices into fixed up-front durations, the placement layer *reported*
+//! a comm-cost score without ever charging it to the clock, and nothing
+//! modeled what co-scheduled tenants do to each other's collectives.
+//! `perfmodel` composes the existing substrates behind one API:
+//!
+//! * `parallel::workload` + `parallel::baselines::Alto` — the
+//!   compute / weight-stream / grouped-GEMM LoRA roofline terms;
+//! * `cluster::comm` + `cluster::topology` — placement-dependent
+//!   collective cost at island-derated bandwidth;
+//! * `cluster::memory` — executor width (via the fitted memory model the
+//!   admission path consults).
+//!
+//! ## The model
+//!
+//! [`StepTimeModel`] prices one optimizer step of a [`Workload`] on a
+//! concrete GPU group:
+//!
+//! ```text
+//! t(w, p, placement, ctx) = Alto.step_time(w, derate(gpu, placement), p)
+//!                           with comm_s × fabric_slowdown(ctx)
+//! ```
+//!
+//! * **Placement derating** — a placement that spans NVLink islands
+//!   drags every collective down to the inter-island fabric
+//!   ([`Topology::effective_link_bw`]); single-island placements (and
+//!   `None`, the "not placed yet" estimate) run at full NVLink.
+//! * **Contention** — a [`ContentionCtx`] names the *foreign* adapters
+//!   currently resident on the islands this placement touches; they
+//!   share the NVSwitch fabric, so the collective term is inflated by
+//!   [`contention::fabric_slowdown`].  Compute and HBM terms are private
+//!   to each GPU and are *not* derated — only the shared fabric is.
+//!
+//! Two exact invariants the property suite pins:
+//!
+//! 1. With `placement` single-island (or `None`) and an empty
+//!    [`ContentionCtx`], the model reproduces the legacy
+//!    `Profiler::estimate_duration` arithmetic **bit for bit** — the
+//!    refactor moves ownership, not numbers.
+//! 2. Step time is monotone non-decreasing in the co-located adapter
+//!    count and in cross-island span.
+//!
+//! ## Consumers
+//!
+//! * [`crate::coordinator::Profiler`] — a caching facade: memoizes
+//!   `(model, n, rank, batch, seq, gpus, islands, neighbors)` →
+//!   samples/s.
+//! * [`crate::sched::intra`] — admission/backfill price candidate
+//!   executor groups through [`crate::sched::intra::GroupPricer`]
+//!   instead of slot counts alone.
+//! * [`crate::sched::inter`] — start/preempt/resume decisions charge a
+//!   placement- and contention-dependent factor to every running task's
+//!   clock, and migrations pay a checkpoint-transfer cost
+//!   (`cluster::comm::p2p_time` over the adapter + optimizer states).
+//! * [`crate::simharness::engine`] — incremental re-pricing: when a
+//!   cohort member exits early, is evicted, or migrates, the survivors'
+//!   remaining durations are re-derived and the event clock shifts —
+//!   every shift is a `Reprice` event folded into the replay digest.
+
+pub mod contention;
+pub mod price;
+
+pub use contention::{fabric_slowdown, ContentionCtx};
+pub use price::task_workload;
+
+use crate::cluster::gpu::GpuSpec;
+use crate::cluster::{Placement, Topology};
+use crate::parallel::baselines::Alto;
+use crate::parallel::workload::{StepBreakdown, Strategy, Workload};
+
+/// The unified step-time model: a device spec plus the island map the
+/// cluster's placements live on.
+#[derive(Debug, Clone)]
+pub struct StepTimeModel {
+    gpu: GpuSpec,
+    topo: Topology,
+}
+
+impl StepTimeModel {
+    pub fn new(gpu: GpuSpec, topo: Topology) -> StepTimeModel {
+        StepTimeModel { gpu, topo }
+    }
+
+    /// A model with no island structure (one flat NVLink domain): every
+    /// placement is single-island, so pricing reduces to the legacy
+    /// nominal path.  This is what placement-agnostic callers (the
+    /// Profiler's default, `SimBackend`) use.
+    pub fn nominal(gpu: GpuSpec) -> StepTimeModel {
+        StepTimeModel {
+            topo: Topology::flat(0),
+            gpu,
+        }
+    }
+
+    pub fn gpu(&self) -> &GpuSpec {
+        &self.gpu
+    }
+
+    pub fn topo(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Device spec as seen by a collective over `placement`: the link
+    /// bandwidth drops to the inter-island fabric when the placement
+    /// crosses islands; everything else is per-GPU and unchanged.
+    /// Placements outside the topology's index range (e.g. against a
+    /// [`StepTimeModel::nominal`] model) price at full bandwidth.
+    fn effective_gpu(&self, placement: Option<&Placement>) -> GpuSpec {
+        match placement {
+            Some(p) if self.topo.contains(p) && self.topo.is_cross_island(p) => {
+                let mut g = self.gpu.clone();
+                g.link_bw = self.topo.effective_link_bw(&self.gpu, p);
+                g
+            }
+            _ => self.gpu.clone(),
+        }
+    }
+
+    /// Full step-time breakdown of `w` on `p_gpus` ranks, with the
+    /// collective term priced at the placement's effective bandwidth and
+    /// inflated by island co-location contention.
+    pub fn step_time(
+        &self,
+        w: &Workload,
+        p_gpus: usize,
+        placement: Option<&Placement>,
+        ctx: &ContentionCtx,
+    ) -> StepBreakdown {
+        let gpu = self.effective_gpu(placement);
+        let mut b = Alto.step_time(w, &gpu, p_gpus);
+        let slow = fabric_slowdown(ctx);
+        if slow != 1.0 {
+            b.comm_s *= slow;
+        }
+        b
+    }
+
+    /// Critical-path seconds of one step (see [`StepBreakdown::total`]).
+    pub fn step_total(
+        &self,
+        w: &Workload,
+        p_gpus: usize,
+        placement: Option<&Placement>,
+        ctx: &ContentionCtx,
+    ) -> f64 {
+        self.step_time(w, p_gpus, placement, ctx).total()
+    }
+
+    /// Sustained samples/second of the workload under this pricing.
+    pub fn throughput(
+        &self,
+        w: &Workload,
+        p_gpus: usize,
+        placement: Option<&Placement>,
+        ctx: &ContentionCtx,
+    ) -> f64 {
+        let t = self.step_total(w, p_gpus, placement, ctx);
+        (w.n_adapters() * w.batch_per_adapter) as f64 / t
+    }
+
+    /// Slowdown of a (placement, contention) pair relative to nominal
+    /// single-island uncontended execution of the same workload.
+    /// Exactly 1.0 when the placement stays inside one island and no
+    /// neighbors share it — the schedulers multiply nominal durations by
+    /// this, so unpriced replays stay bit-identical to the legacy path.
+    pub fn charge_factor(
+        &self,
+        w: &Workload,
+        p_gpus: usize,
+        placement: Option<&Placement>,
+        ctx: &ContentionCtx,
+    ) -> f64 {
+        let nominal = Alto.step_time(w, &self.gpu, p_gpus).total();
+        if nominal <= 0.0 {
+            return 1.0;
+        }
+        self.step_total(w, p_gpus, placement, ctx) / nominal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MODEL_FAMILY;
+
+    fn w(n: usize, model: &str) -> Workload {
+        Workload {
+            model: MODEL_FAMILY.get(model).unwrap(),
+            ranks: vec![16; n],
+            batch_per_adapter: 2,
+            seq_len: 256,
+        }
+    }
+
+    #[test]
+    fn nominal_matches_legacy_alto_bitwise() {
+        let gpu = GpuSpec::h100_sxm5();
+        let m = StepTimeModel::nominal(gpu.clone());
+        for p in [1usize, 2, 4] {
+            let wl = w(4, "llama-8b");
+            let legacy = Alto.step_time(&wl, &gpu, p).total();
+            let ours = m.step_total(&wl, p, None, &ContentionCtx::default());
+            assert_eq!(ours.to_bits(), legacy.to_bits(), "p={p}");
+        }
+    }
+
+    #[test]
+    fn single_island_placement_is_free() {
+        let gpu = GpuSpec::h100_sxm5();
+        let m = StepTimeModel::new(gpu.clone(), Topology::h100_nodes(16));
+        let wl = w(4, "qwen-32b");
+        let inside = Placement::new(vec![0, 1, 2, 3]);
+        let f = m.charge_factor(&wl, 4, Some(&inside), &ContentionCtx::default());
+        assert_eq!(f.to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn cross_island_costs_strictly_more() {
+        let gpu = GpuSpec::h100_sxm5();
+        let m = StepTimeModel::new(gpu, Topology::h100_nodes(16));
+        let wl = w(4, "qwen-32b");
+        let inside = Placement::new(vec![0, 1, 2, 3]);
+        let across = Placement::new(vec![6, 7, 8, 9]);
+        let ctx = ContentionCtx::default();
+        let t_in = m.step_total(&wl, 4, Some(&inside), &ctx);
+        let t_x = m.step_total(&wl, 4, Some(&across), &ctx);
+        assert!(t_x > t_in, "cross-island {t_x} vs inside {t_in}");
+        assert!(m.charge_factor(&wl, 4, Some(&across), &ctx) > 1.0);
+    }
+
+    #[test]
+    fn contention_inflates_only_collectives() {
+        let gpu = GpuSpec::h100_sxm5();
+        let m = StepTimeModel::new(gpu, Topology::h100_nodes(16));
+        let wl = w(4, "qwen-32b");
+        let busy = ContentionCtx {
+            neighbor_adapters: 8,
+            neighbor_gpus: 4,
+        };
+        let quiet = m.step_time(&wl, 4, None, &ContentionCtx::default());
+        let loud = m.step_time(&wl, 4, None, &busy);
+        assert!(loud.comm_s > quiet.comm_s);
+        assert_eq!(loud.compute_s.to_bits(), quiet.compute_s.to_bits());
+        assert_eq!(loud.memory_s.to_bits(), quiet.memory_s.to_bits());
+        assert_eq!(loud.lora_s.to_bits(), quiet.lora_s.to_bits());
+        // single-GPU workloads have no collective to contend on
+        let solo = m.charge_factor(&w(4, "llama-8b"), 1, None, &busy);
+        assert_eq!(solo.to_bits(), 1.0f64.to_bits());
+    }
+}

@@ -1,0 +1,134 @@
+//! Task-level pricing: worst-case duration estimates and one-off charges
+//! (checkpoint transfers) derived from the step-time model.
+
+use crate::cluster::comm;
+use crate::cluster::Placement;
+use crate::config::{ModelShape, TaskSpec};
+use crate::parallel::workload::Workload;
+
+use super::{ContentionCtx, StepTimeModel};
+
+/// The representative executor workload for a task: its dominant
+/// configuration — smallest batch (worst throughput per adapter, the
+/// conservative planning shape), largest rank, `n_slots` co-located
+/// adapters.  Exactly the shape the legacy `Profiler` measured, so the
+/// duration estimates below reproduce its numbers bit for bit when
+/// placement and contention are trivial.
+pub fn task_workload(model: &ModelShape, task: &TaskSpec, n_slots: usize) -> Workload {
+    let batch = *task.search_space.batch_sizes.iter().min().unwrap_or(&1);
+    let rank = task.search_space.ranks.iter().copied().max().unwrap_or(16);
+    Workload {
+        model: model.clone(),
+        ranks: vec![rank; n_slots.max(1)],
+        batch_per_adapter: batch,
+        seq_len: task.seq_len,
+    }
+}
+
+impl StepTimeModel {
+    /// Worst-case duration estimate d_i for a task: total samples over
+    /// the sustained throughput of its dominant configuration, priced at
+    /// the given placement and co-location context.  With `placement`
+    /// `None`/single-island and an empty context this is the legacy
+    /// `Profiler::estimate_duration` arithmetic, bit for bit.
+    pub fn estimate_task_duration(
+        &self,
+        model: &ModelShape,
+        task: &TaskSpec,
+        n_slots: usize,
+        placement: Option<&Placement>,
+        ctx: &ContentionCtx,
+    ) -> f64 {
+        let w = task_workload(model, task, n_slots);
+        let tput = self.throughput(&w, task.num_gpus, placement, ctx);
+        task.total_samples() as f64 / tput
+    }
+
+    /// Checkpoint-transfer cost of migrating a task between placements:
+    /// the adapter weights plus AdamW moments (fp32, ×3 states) of
+    /// `n_slots` resident adapters of rank `rank`, moved point-to-point —
+    /// at the inter-island fabric rate when the move leaves the island.
+    pub fn migration_cost(
+        &self,
+        model: &ModelShape,
+        rank: usize,
+        n_slots: usize,
+        from: &Placement,
+        to: &Placement,
+    ) -> f64 {
+        let bytes =
+            3.0 * 4.0 * model.lora_param_count(rank) as f64 * n_slots.max(1) as f64;
+        let mut gpu = self.gpu().clone();
+        let topo = self.topo();
+        if topo.contains(from) && topo.contains(to) {
+            let union =
+                Placement::new(from.gpus().iter().chain(to.gpus()).copied().collect());
+            if topo.is_cross_island(&union) {
+                gpu.link_bw = self.gpu().link_bw / topo.inter_island_penalty;
+            }
+        }
+        comm::p2p_time(&gpu, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::gpu::GpuSpec;
+    use crate::cluster::Topology;
+    use crate::config::{SearchSpace, MODEL_FAMILY};
+
+    fn task(model: &str, gpus: usize) -> TaskSpec {
+        TaskSpec {
+            model: model.into(),
+            num_gpus: gpus,
+            search_space: SearchSpace::paper_single_gpu(),
+            seq_len: 512,
+            train_samples: 1000,
+            ..TaskSpec::default()
+        }
+    }
+
+    #[test]
+    fn dominant_workload_shape() {
+        let m = MODEL_FAMILY.get("llama-8b").unwrap();
+        let w = task_workload(&m, &task("llama-8b", 1), 4);
+        assert_eq!(w.n_adapters(), 4);
+        assert_eq!(w.batch_per_adapter, 1); // smallest batch in the space
+        assert_eq!(w.ranks, vec![64; 4]); // largest rank in the space
+        assert_eq!(w.seq_len, 512);
+        // zero-slot callers still get a one-adapter estimate
+        assert_eq!(task_workload(&m, &task("llama-8b", 1), 0).n_adapters(), 1);
+    }
+
+    #[test]
+    fn duration_scales_with_samples_and_model_size() {
+        let model = StepTimeModel::nominal(GpuSpec::h100_sxm5());
+        let small = MODEL_FAMILY.get("llama-8b").unwrap();
+        let big = MODEL_FAMILY.get("llama-70b").unwrap();
+        let ctx = ContentionCtx::empty();
+        let mut t = task("llama-8b", 1);
+        let d1 = model.estimate_task_duration(&small, &t, 4, None, &ctx);
+        t.train_samples = 2000;
+        let d2 = model.estimate_task_duration(&small, &t, 4, None, &ctx);
+        assert!((d2 / d1 - 2.0).abs() < 0.01, "{d1} vs {d2}");
+        let db = model.estimate_task_duration(&big, &task("llama-70b", 1), 4, None, &ctx);
+        assert!(db > d1 * 3.0, "{db} vs {d1}");
+    }
+
+    #[test]
+    fn migration_cost_positive_and_island_sensitive() {
+        let model = StepTimeModel::new(GpuSpec::h100_sxm5(), Topology::h100_nodes(16));
+        let shape = MODEL_FAMILY.get("llama-8b").unwrap();
+        let a = Placement::new(vec![0, 1]);
+        let b = Placement::new(vec![2, 3]);
+        let far = Placement::new(vec![8, 9]);
+        let near = model.migration_cost(&shape, 16, 4, &a, &b);
+        let cross = model.migration_cost(&shape, 16, 4, &a, &far);
+        assert!(near > 0.0);
+        assert!(cross > near, "cross-island move must cost more: {cross} vs {near}");
+        // more resident state costs more to move
+        assert!(model.migration_cost(&shape, 16, 8, &a, &b) > near);
+        assert!(model.migration_cost(&shape, 64, 4, &a, &b) > near);
+    }
+}

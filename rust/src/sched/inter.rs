@@ -16,16 +16,37 @@
 //!
 //! The scheduler itself owns no event loop: callers drive it through
 //! `submit_at` (arrival at a virtual time), `peek_next_completion` /
-//! `complete_next` (the next completion event), `drain_started` and
-//! `drain_preempted` (decisions made by the last replans).
-//! `simharness::engine` is the canonical driver; `run_to_completion`
-//! remains as the degenerate all-arrive-at-zero loop.
+//! `complete_next` (the next completion event), `drain_started`,
+//! `drain_preempted` and `drain_repriced` (decisions made by the last
+//! replans).  `simharness::engine` is the canonical driver;
+//! `run_to_completion` remains as the degenerate all-arrive-at-zero
+//! loop.
+//!
+//! ## Priced durations
+//!
+//! With a [`Pricer`] attached (see [`InterTaskScheduler::set_pricer`]),
+//! durations stop being placement-blind: every start charges the
+//! [`crate::perfmodel::StepTimeModel`]'s slowdown factor for the task's
+//! concrete placement (cross-island collectives run at the derated
+//! fabric bandwidth) and for the co-location [`ContentionCtx`] its
+//! islands currently carry.  Remaining durations are tracked in
+//! *nominal* seconds and converted to wall seconds through the current
+//! factor, so when the neighborhood changes — a cohort member completes
+//! early, is evicted, or migrates — `reprice_running` re-derives every
+//! survivor's completion time from the model and the event clock shifts
+//! accordingly.  Migrations additionally pay a one-off
+//! checkpoint-transfer charge ([`StepTimeModel::migration_cost`], built
+//! on `cluster::comm::p2p_time`).  A single-island placement with an
+//! empty neighborhood prices at exactly 1.0, so unpriced replays stay
+//! bit-identical to the legacy clock.
 
 use std::collections::BTreeMap;
 
 use anyhow::Result;
 
 use crate::cluster::{PlacePolicy, Placement, SimCluster};
+use crate::parallel::workload::Workload;
+use crate::perfmodel::{ContentionCtx, StepTimeModel};
 
 use super::solver::{self, SchedTask, Schedule};
 
@@ -50,6 +71,73 @@ impl Policy {
     }
 }
 
+/// What the scheduler charges to the clock beyond nominal durations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pricing {
+    /// Placement-derated collective cost (cross-island placements run
+    /// their all-gathers at the inter-island fabric rate).
+    pub comm: bool,
+    /// Island co-location contention between co-scheduled tenants.
+    pub contention: bool,
+    /// Checkpoint-transfer cost on migrations.
+    pub migration: bool,
+}
+
+impl Default for Pricing {
+    fn default() -> Self {
+        Pricing { comm: true, contention: true, migration: true }
+    }
+}
+
+impl Pricing {
+    /// Charge nothing — the legacy placement-blind clock.
+    pub fn none() -> Pricing {
+        Pricing { comm: false, contention: false, migration: false }
+    }
+
+    pub fn any(&self) -> bool {
+        self.comm || self.contention || self.migration
+    }
+}
+
+/// The step-time model plus the switches for what it charges.
+#[derive(Debug, Clone)]
+pub struct Pricer {
+    pub model: StepTimeModel,
+    pub charge: Pricing,
+}
+
+/// Per-task pricing inputs: the representative executor workload the
+/// perfmodel prices (see [`crate::perfmodel::task_workload`]), plus the
+/// co-location footprint the task imposes on its island neighbors.
+#[derive(Debug, Clone)]
+pub struct TaskShape {
+    pub workload: Workload,
+    /// Executor slots the task keeps resident (its contribution to the
+    /// fabric contention neighbors feel).
+    pub adapters: usize,
+    /// Representative adapter rank, for checkpoint-volume accounting.
+    pub rank: usize,
+}
+
+/// One task submission (arrival event).
+#[derive(Debug, Clone)]
+pub struct Submission {
+    pub id: usize,
+    pub gpus: usize,
+    /// Estimated duration (what the solver plans with).
+    pub est_duration: f64,
+    /// Actual duration in *nominal* (uncontended, single-island)
+    /// seconds; the pricer stretches it on the wall clock.
+    pub actual_duration: f64,
+    /// Arrival time (must be non-decreasing across submissions).
+    pub arrival: f64,
+    /// Higher wins; only matters with `enable_preemption`.
+    pub priority: i64,
+    /// Pricing inputs; `None` prices the task at exactly 1.0 forever.
+    pub shape: Option<TaskShape>,
+}
+
 /// A pending or running task in the living queue.
 #[derive(Debug, Clone)]
 struct LiveTask {
@@ -57,12 +145,16 @@ struct LiveTask {
     /// Estimated *remaining* duration (the solver plans with this;
     /// shrinks when a preemption interrupts a run).
     est_remaining: f64,
-    /// Actual remaining duration (revealed at completion; early exits
-    /// make it shorter than the estimate).
+    /// Actual remaining duration in nominal seconds (revealed at
+    /// completion; early exits make it shorter than the estimate).
     actual_remaining: f64,
     priority: i64,
     /// Start of the *current* run (None while queued or preempted).
     started_at: Option<f64>,
+    /// Pricing anchor: start of the current constant-rate segment
+    /// (= `started_at` at start, advanced by `reprice_running` whenever
+    /// the price factor changes mid-run).
+    segment_at: f64,
     first_started_at: Option<f64>,
     finished_at: Option<f64>,
     /// Concrete GPUs held while running.
@@ -71,6 +163,40 @@ struct LiveTask {
     /// same-GPU resume from a migration.
     last_placement: Option<Placement>,
     preemptions: usize,
+    /// Pricing inputs (None ⇒ factor 1.0, no migration charge).
+    shape: Option<TaskShape>,
+    /// Executor slots charged to neighbors (from `shape`, default 1).
+    adapters: usize,
+    /// Wall-seconds per nominal second for the current run segment.
+    run_factor: f64,
+    /// One-off wall charge (checkpoint transfer) still to serve in the
+    /// current run segment before nominal progress resumes.
+    run_charge: f64,
+    /// Wall-seconds the task has actually held GPUs (charged GPU time).
+    charged_runtime: f64,
+}
+
+impl LiveTask {
+    /// Nominal progress made by `elapsed` wall seconds of the current
+    /// run segment: the one-off charge is served first, then the wall
+    /// clock advances nominal time at 1/factor.
+    fn nominal_progress(&self, elapsed: f64) -> f64 {
+        if elapsed <= self.run_charge {
+            0.0
+        } else {
+            (elapsed - self.run_charge) / self.run_factor
+        }
+    }
+}
+
+/// One re-pricing decision: a running task's completion moved because
+/// its placement neighborhood changed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RepriceDecision {
+    pub id: usize,
+    pub time: f64,
+    /// The new (priced) completion time on the virtual clock.
+    pub completion: f64,
 }
 
 /// One start decision: the task, when, and the concrete GPUs it got.
@@ -104,6 +230,8 @@ pub struct InterTaskScheduler {
     /// strictly-lower-priority running tasks when they cannot fit.
     pub enable_preemption: bool,
     cluster: SimCluster,
+    /// Duration pricing (None ⇒ the legacy placement-blind clock).
+    pricer: Option<Pricer>,
     tasks: BTreeMap<usize, LiveTask>,
     clock: f64,
     running: Vec<(usize, f64)>, // (task id, completion time)
@@ -111,9 +239,13 @@ pub struct InterTaskScheduler {
     started_log: Vec<StartDecision>,
     /// Preemption decisions since the last `drain_preempted`.
     preempted_log: Vec<PreemptDecision>,
+    /// Re-pricing decisions since the last `drain_repriced`.
+    repriced_log: Vec<RepriceDecision>,
     pub replans: usize,
     /// Total evictions across the run.
     pub preemptions: usize,
+    /// Σ one-off checkpoint-transfer wall seconds charged to migrations.
+    pub migration_charge: f64,
 }
 
 impl InterTaskScheduler {
@@ -129,14 +261,27 @@ impl InterTaskScheduler {
             place: PlacePolicy::IslandFirst,
             enable_preemption: false,
             cluster,
+            pricer: None,
             tasks: BTreeMap::new(),
             clock: 0.0,
             running: Vec::new(),
             started_log: Vec::new(),
             preempted_log: Vec::new(),
+            repriced_log: Vec::new(),
             replans: 0,
             preemptions: 0,
+            migration_charge: 0.0,
         }
+    }
+
+    /// Attach a duration pricer: subsequent starts charge placement comm
+    /// cost and co-location contention to the clock per `charge`.
+    pub fn set_pricer(&mut self, model: StepTimeModel, charge: Pricing) {
+        self.pricer = if charge.any() {
+            Some(Pricer { model, charge })
+        } else {
+            None
+        };
     }
 
     pub fn total_gpus(&self) -> usize {
@@ -187,22 +332,42 @@ impl InterTaskScheduler {
         now: f64,
         priority: i64,
     ) {
-        if now > self.clock {
-            self.clock = now;
-        }
-        self.tasks.insert(
+        self.submit_spec(Submission {
             id,
+            gpus,
+            est_duration,
+            actual_duration,
+            arrival: now,
+            priority,
+            shape: None,
+        });
+    }
+
+    /// Full submission, pricing inputs included (the harness path).
+    pub fn submit_spec(&mut self, s: Submission) {
+        if s.arrival > self.clock {
+            self.clock = s.arrival;
+        }
+        let adapters = s.shape.as_ref().map(|sh| sh.adapters.max(1)).unwrap_or(1);
+        self.tasks.insert(
+            s.id,
             LiveTask {
-                gpus,
-                est_remaining: est_duration,
-                actual_remaining: actual_duration,
-                priority,
+                gpus: s.gpus,
+                est_remaining: s.est_duration,
+                actual_remaining: s.actual_duration,
+                priority: s.priority,
                 started_at: None,
+                segment_at: 0.0,
                 first_started_at: None,
                 finished_at: None,
                 placement: None,
                 last_placement: None,
                 preemptions: 0,
+                shape: s.shape,
+                adapters,
+                run_factor: 1.0,
+                run_charge: 0.0,
+                charged_runtime: 0.0,
             },
         );
         self.replan(true); // arrival: preemption (if enabled) may fire
@@ -231,6 +396,194 @@ impl InterTaskScheduler {
         std::mem::take(&mut self.preempted_log)
     }
 
+    /// Re-pricing decisions made since the last drain, in decision
+    /// order — the harness turns these into `Reprice` events.
+    pub fn drain_repriced(&mut self) -> Vec<RepriceDecision> {
+        std::mem::take(&mut self.repriced_log)
+    }
+
+    /// Wall-seconds a task has actually held GPUs so far (charged GPU
+    /// time: contention, derated collectives and transfer charges
+    /// included; queue time excluded).
+    pub fn charged_runtime(&self, id: usize) -> f64 {
+        self.tasks.get(&id).map(|t| t.charged_runtime).unwrap_or(0.0)
+    }
+
+    /// Σ gpus · charged wall runtime over all tasks — the GPU-seconds
+    /// the workload actually consumed on the priced clock.
+    pub fn charged_gpu_seconds(&self) -> f64 {
+        self.tasks
+            .values()
+            .map(|t| t.gpus as f64 * t.charged_runtime)
+            .sum()
+    }
+
+    /// Co-location context a running task currently experiences: every
+    /// other running task holding GPUs on the NVLink islands this task's
+    /// placement touches contributes its resident adapters.
+    fn contention_of(&self, id: usize) -> ContentionCtx {
+        let Some(pr) = &self.pricer else {
+            return ContentionCtx::empty();
+        };
+        let topo = pr.model.topo();
+        let Some(p) = self.tasks.get(&id).and_then(|t| t.placement.as_ref()) else {
+            return ContentionCtx::empty();
+        };
+        if topo.is_empty() || p.is_empty() || !topo.contains(p) {
+            return ContentionCtx::empty();
+        }
+        let mut mine = vec![false; topo.n_islands()];
+        for &g in p.gpus() {
+            mine[topo.island_of(g)] = true;
+        }
+        let mut ctx = ContentionCtx::empty();
+        // only running tasks hold placements, so scan the running set,
+        // not every task ever submitted (the sums are order-invariant)
+        for &(oid, _) in &self.running {
+            if oid == id {
+                continue;
+            }
+            let t = &self.tasks[&oid];
+            let Some(q) = t.placement.as_ref() else { continue };
+            if !topo.contains(q) {
+                continue;
+            }
+            let shared = q
+                .gpus()
+                .iter()
+                .filter(|&&g| mine[topo.island_of(g)])
+                .count();
+            if shared > 0 {
+                ctx.neighbor_adapters += t.adapters;
+                ctx.neighbor_gpus += shared;
+            }
+        }
+        ctx
+    }
+
+    /// Wall-seconds per nominal second for a task's *current* placement
+    /// and neighborhood (1.0 when unpriced, shapeless, or single-island
+    /// and uncontended).
+    fn price_factor(&self, id: usize) -> f64 {
+        let Some(pr) = &self.pricer else { return 1.0 };
+        if !pr.charge.comm && !pr.charge.contention {
+            return 1.0;
+        }
+        let t = &self.tasks[&id];
+        // single-GPU tasks have no collective term: both charges act on
+        // comm_s alone, so their factor is exactly 1.0 — skip the model
+        if t.gpus <= 1 {
+            return 1.0;
+        }
+        let Some(shape) = &t.shape else { return 1.0 };
+        let placement = if pr.charge.comm { t.placement.as_ref() } else { None };
+        let ctx = if pr.charge.contention {
+            self.contention_of(id)
+        } else {
+            ContentionCtx::empty()
+        };
+        pr.model.charge_factor(&shape.workload, t.gpus, placement, &ctx)
+    }
+
+    /// Priced estimate factor for a task that is *not running yet*: the
+    /// comm factor it would be charged on the placement the policy would
+    /// hand it right now (a pure function of the current free bitmap, so
+    /// this stays deterministic).  Contention is left out — it is
+    /// re-derived after every start anyway — and unpriced schedulers get
+    /// exactly 1.0, keeping the legacy backfill-window arithmetic
+    /// bit-identical.
+    fn candidate_factor(&self, id: usize) -> f64 {
+        let Some(pr) = &self.pricer else { return 1.0 };
+        if !pr.charge.comm {
+            return 1.0;
+        }
+        let t = &self.tasks[&id];
+        if t.gpus <= 1 {
+            return 1.0;
+        }
+        let Some(shape) = &t.shape else { return 1.0 };
+        let Some(p) = self
+            .cluster
+            .topo
+            .place(self.cluster.free_mask(), t.gpus, self.place)
+        else {
+            return 1.0;
+        };
+        pr.model
+            .charge_factor(&shape.workload, t.gpus, Some(&p), &ContentionCtx::empty())
+    }
+
+    /// One-off checkpoint-transfer charge for a resume that changed
+    /// placement (0.0 for fresh starts, same-GPU resumes, or when
+    /// migration pricing is off).
+    fn migration_charge_of(&self, id: usize, prev: Option<&Placement>, now: &Placement) -> f64 {
+        let Some(pr) = &self.pricer else { return 0.0 };
+        if !pr.charge.migration {
+            return 0.0;
+        }
+        let Some(prev) = prev else { return 0.0 };
+        if prev == now {
+            return 0.0;
+        }
+        let Some(shape) = self.tasks.get(&id).and_then(|t| t.shape.as_ref()) else {
+            return 0.0;
+        };
+        pr.model
+            .migration_cost(&shape.workload.model, shape.rank, shape.adapters, prev, now)
+    }
+
+    /// Re-derive every running task's completion from its *current*
+    /// neighborhood.  Called after each replan: any start, completion,
+    /// eviction or migration changes who shares an island with whom, and
+    /// the survivors' remaining wall time must follow the model.  Tasks
+    /// are visited in id order; a task whose factor is unchanged is left
+    /// untouched (bitwise), so unaffected timelines stay identical.
+    fn reprice_running(&mut self) {
+        let applies = self
+            .pricer
+            .as_ref()
+            .map(|p| p.charge.contention)
+            .unwrap_or(false);
+        if !applies {
+            return;
+        }
+        let mut ids: Vec<usize> = self.running.iter().map(|&(id, _)| id).collect();
+        ids.sort_unstable();
+        for id in ids {
+            let new_factor = self.price_factor(id);
+            if new_factor == self.tasks[&id].run_factor {
+                continue;
+            }
+            let clock = self.clock;
+            let t = self.tasks.get_mut(&id).unwrap();
+            let elapsed = clock - t.segment_at;
+            // fold the finished part of this segment into the books...
+            let progress = t.nominal_progress(elapsed);
+            let charge_left = (t.run_charge - elapsed).max(0.0);
+            t.actual_remaining = (t.actual_remaining - progress).max(0.0);
+            t.est_remaining = (t.est_remaining - progress).max(1e-9);
+            t.charged_runtime += elapsed;
+            // ...and start a fresh segment at the new rate
+            t.segment_at = clock;
+            t.run_factor = new_factor;
+            t.run_charge = charge_left;
+            let completion = clock + charge_left + t.actual_remaining * new_factor;
+            let entry = self
+                .running
+                .iter_mut()
+                .find(|(rid, _)| *rid == id)
+                .expect("repriced task is running");
+            if entry.1 != completion {
+                entry.1 = completion;
+                self.repriced_log.push(RepriceDecision {
+                    id,
+                    time: clock,
+                    completion,
+                });
+            }
+        }
+    }
+
     /// Waiting tasks, as solver inputs (estimated remaining durations).
     fn waiting(&self) -> Vec<SchedTask> {
         self.tasks
@@ -249,10 +602,10 @@ impl InterTaskScheduler {
         let clock = self.clock;
         let t = self.tasks.get_mut(&id).unwrap();
         t.started_at = Some(clock);
+        t.segment_at = clock;
         if t.first_started_at.is_none() {
             t.first_started_at = Some(clock);
         }
-        let completion = clock + t.actual_remaining;
         let gpus = t.gpus;
         let resumed_from = t.last_placement.take();
         let p = self
@@ -261,6 +614,15 @@ impl InterTaskScheduler {
             .expect("replan checked capacity before starting");
         let t = self.tasks.get_mut(&id).unwrap();
         t.placement = Some(p.clone());
+        // price the run segment: placement/contention slowdown plus a
+        // one-off checkpoint transfer when this resume moved GPUs
+        let factor = self.price_factor(id);
+        let charge = self.migration_charge_of(id, resumed_from.as_ref(), &p);
+        self.migration_charge += charge;
+        let t = self.tasks.get_mut(&id).unwrap();
+        t.run_factor = factor;
+        t.run_charge = charge;
+        let completion = clock + charge + t.actual_remaining * factor;
         self.running.push((id, completion));
         self.started_log.push(StartDecision {
             id,
@@ -271,7 +633,8 @@ impl InterTaskScheduler {
     }
 
     /// Evict a running task: release its GPUs, shrink its remaining
-    /// durations by the time it ran, and return it to the waiting queue.
+    /// durations by the *nominal* progress it made (wall time through
+    /// the current price factor), and return it to the waiting queue.
     fn evict(&mut self, id: usize) {
         let idx = self
             .running
@@ -281,9 +644,14 @@ impl InterTaskScheduler {
         self.running.remove(idx);
         let clock = self.clock;
         let t = self.tasks.get_mut(&id).unwrap();
-        let elapsed = clock - t.started_at.take().expect("running task has a start");
-        t.actual_remaining = (t.actual_remaining - elapsed).max(0.0);
-        t.est_remaining = (t.est_remaining - elapsed).max(1e-9);
+        t.started_at.take().expect("running task has a start");
+        let elapsed = clock - t.segment_at;
+        let progress = t.nominal_progress(elapsed);
+        t.actual_remaining = (t.actual_remaining - progress).max(0.0);
+        t.est_remaining = (t.est_remaining - progress).max(1e-9);
+        t.charged_runtime += elapsed;
+        t.run_factor = 1.0;
+        t.run_charge = 0.0;
         t.preemptions += 1;
         let p = t.placement.take().expect("running task holds a placement");
         t.last_placement = Some(p.clone());
@@ -317,6 +685,9 @@ impl InterTaskScheduler {
             // now rather than letting it idle until the next event
             self.plan_pass();
         }
+        // the starts/evictions above changed who shares an island with
+        // whom — re-derive every survivor's completion from the model
+        self.reprice_running();
     }
 
     fn plan_pass(&mut self) {
@@ -366,9 +737,10 @@ impl InterTaskScheduler {
         let mut shadow: Option<f64> = None;
         for (_, id, gpus) in order {
             if let Some(sh) = shadow {
-                // backfill window: must fit now AND finish (by
-                // estimate) before the head's reservation
-                let est = self.tasks[&id].est_remaining;
+                // backfill window: must fit now AND finish — by the
+                // *priced* estimate, since the shadow releases are priced
+                // too — before the head's reservation
+                let est = self.tasks[&id].est_remaining * self.candidate_factor(id);
                 if gpus <= self.cluster.available() && self.clock + est <= sh + 1e-9 {
                     self.start_task(id);
                 }
@@ -381,8 +753,15 @@ impl InterTaskScheduler {
                     .running
                     .iter()
                     .map(|&(rid, _)| {
+                        // estimated release: the current constant-rate
+                        // segment's anchor plus any unserved transfer
+                        // charge plus the estimated remainder at the
+                        // segment's price (all zero-cost when unpriced)
                         let t = &self.tasks[&rid];
-                        (t.started_at.unwrap() + t.est_remaining, t.gpus)
+                        (
+                            t.segment_at + t.run_charge + t.est_remaining * t.run_factor,
+                            t.gpus,
+                        )
                     })
                     .collect();
                 rel.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
@@ -480,6 +859,9 @@ impl InterTaskScheduler {
         self.clock = when;
         let t = self.tasks.get_mut(&id).unwrap();
         t.finished_at = Some(when);
+        debug_assert!(t.started_at.is_some(), "completed task was running");
+        t.charged_runtime += when - t.segment_at;
+        t.actual_remaining = 0.0;
         let p = t.placement.take().expect("completed task held a placement");
         self.cluster
             .release(&p)
@@ -691,6 +1073,137 @@ mod tests {
         let mk = s.run_to_completion();
         assert!(s.all_done());
         assert!(mk > 0.0);
+    }
+
+    // --- duration pricing -------------------------------------------------
+
+    use crate::cluster::gpu::GpuSpec;
+    use crate::cluster::Topology;
+    use crate::config::MODEL_FAMILY;
+
+    // the workload itself is width-agnostic: the submission's `gpus`
+    // decides how many ranks the collectives span
+    fn nano_shape() -> TaskShape {
+        TaskShape {
+            workload: Workload {
+                model: MODEL_FAMILY.get("nano").unwrap(),
+                ranks: vec![8; 2],
+                batch_per_adapter: 1,
+                seq_len: 32,
+            },
+            adapters: 2,
+            rank: 8,
+        }
+    }
+
+    fn priced_sched(n: usize, island: usize, charge: Pricing) -> InterTaskScheduler {
+        let topo = Topology::uniform(n, island);
+        let cluster = SimCluster::with_topology(GpuSpec::h100_sxm5(), topo.clone());
+        let mut s = InterTaskScheduler::with_cluster(cluster, Policy::Fcfs);
+        s.place = PlacePolicy::FirstFit;
+        s.set_pricer(StepTimeModel::new(GpuSpec::h100_sxm5(), topo), charge);
+        s
+    }
+
+    fn submit_shaped(s: &mut InterTaskScheduler, id: usize, gpus: usize, dur: f64, at: f64, prio: i64) {
+        s.submit_spec(Submission {
+            id,
+            gpus,
+            est_duration: dur,
+            actual_duration: dur,
+            arrival: at,
+            priority: prio,
+            shape: Some(nano_shape()),
+        });
+    }
+
+    #[test]
+    fn cross_island_start_charges_comm_to_the_clock() {
+        // 4 GPUs in 2-GPU islands; GPU 0 is busy, so first-fit assembles
+        // the 2-GPU task across the island boundary ({1,2}) — its
+        // collectives run at the derated fabric rate and its completion
+        // slips past the nominal duration
+        let charge = Pricing { comm: true, contention: false, migration: false };
+        let mut s = priced_sched(4, 2, charge);
+        submit_shaped(&mut s, 0, 1, 100.0, 0.0, 0);
+        submit_shaped(&mut s, 1, 2, 10.0, 0.0, 0);
+        let started = s.drain_started();
+        assert_eq!(started.len(), 2);
+        assert_eq!(started[1].placement.gpus(), &[1, 2]);
+        let (_, when) = s
+            .peek_next_completion()
+            .expect("two tasks running");
+        // task 1 (10s nominal) finishes first, but strictly later than 10
+        assert!(when > 10.0, "cross-island run must be charged: {when}");
+        assert!(when < 11.0, "charge should be a derating, not a rewrite: {when}");
+
+        // same submission against an unpriced scheduler: exactly nominal
+        let mut legacy = priced_sched(4, 2, Pricing::none());
+        submit_shaped(&mut legacy, 0, 1, 100.0, 0.0, 0);
+        submit_shaped(&mut legacy, 1, 2, 10.0, 0.0, 0);
+        assert_eq!(legacy.peek_next_completion().unwrap().1.to_bits(), 10.0f64.to_bits());
+    }
+
+    #[test]
+    fn single_island_uncontended_pricing_is_exactly_nominal() {
+        // pricing on, but the placement stays inside one island and no
+        // neighbor shares it: the factor is exactly 1.0 and the clock is
+        // bit-identical to the unpriced path
+        let mut s = priced_sched(4, 4, Pricing::default());
+        submit_shaped(&mut s, 0, 2, 10.0, 0.0, 0);
+        assert_eq!(s.peek_next_completion().unwrap().1.to_bits(), 10.0f64.to_bits());
+    }
+
+    #[test]
+    fn early_exit_of_a_neighbor_reprices_the_survivor() {
+        // one 4-GPU island, two 2-GPU tenants: while both run, each one's
+        // collectives are contended; when the short task completes, the
+        // survivor is repriced back to the uncontended rate and its
+        // completion moves up
+        let charge = Pricing { comm: false, contention: true, migration: false };
+        let mut s = priced_sched(4, 4, charge);
+        submit_shaped(&mut s, 0, 2, 10.0, 0.0, 0);
+        submit_shaped(&mut s, 1, 2, 30.0, 0.0, 0);
+        let mk = s.run_to_completion();
+        assert!(s.all_done());
+        // the survivor ran contended only while the neighbor lived
+        assert!(mk > 30.0, "contended stretch must be charged: {mk}");
+        assert!(mk < 31.0, "repricing must recover the uncontended rate: {mk}");
+        let reprices = s.drain_repriced();
+        // the second arrival reprices the first task (it gained a
+        // neighbor at t=0); the early completion reprices the survivor
+        assert!(
+            reprices.iter().any(|r| r.id == 1 && r.time > 0.0),
+            "the neighbor's completion must reprice the survivor: {reprices:?}"
+        );
+        // charged GPU time covers both tasks' full (priced) runs
+        let charged = s.charged_gpu_seconds();
+        assert!(charged > 2.0 * (10.0 + 30.0) - 1e-6, "{charged}");
+    }
+
+    #[test]
+    fn migration_pays_a_checkpoint_transfer_charge() {
+        // 8 GPUs: A and B run 4-wide; a priority arrival evicts B, which
+        // later resumes on A's freed GPUs — a migration, charged with a
+        // p2p checkpoint transfer that strictly delays B's completion
+        let charge = Pricing { comm: false, contention: false, migration: true };
+        let mut s = priced_sched(8, 8, charge);
+        s.enable_preemption = true;
+        submit_shaped(&mut s, 0, 4, 30.0, 0.0, 0);
+        submit_shaped(&mut s, 1, 4, 18.0, 0.0, 0);
+        submit_shaped(&mut s, 2, 4, 50.0, 10.0, 1);
+        let mk = s.run_to_completion();
+        assert!(s.all_done());
+        assert_eq!(s.preemptions, 1);
+        assert!(s.migration_charge > 0.0);
+        // legacy timeline: B resumes at t=30 with 8s left → 38; the
+        // transfer pushes it strictly past that
+        let (_, b_end) = s.span(1).unwrap();
+        assert!(b_end > 38.0, "migration must be charged: {b_end}");
+        assert!(b_end < 39.0, "checkpoint transfer is sub-second: {b_end}");
+        // the urgent task never migrated: its clock is untouched
+        assert_eq!(s.span(2).unwrap().1.to_bits(), 60.0f64.to_bits());
+        assert!((mk - 60.0).abs() < 1e-9, "makespan {mk}");
     }
 
     #[test]

@@ -2,11 +2,19 @@
 //! per-adapter batch size, admit greedily in decreasing batch-size order
 //! against the fitted memory model, and backfill vacated slots preferring
 //! the same batch size.
+//!
+//! Admission is *priced*, not just counted: a [`GroupPricer`] runs every
+//! candidate group through the [`crate::perfmodel::StepTimeModel`], so a
+//! slot is granted only while co-locating one more adapter still buys
+//! sustained samples/second — the memory model says what *fits*, the
+//! perfmodel says what's *worth it*.
 
 use std::collections::BTreeMap;
 
-use crate::config::HyperParams;
+use crate::config::{HyperParams, ModelShape};
 use crate::coordinator::memory_model::MemoryModel;
+use crate::parallel::workload::Workload;
+use crate::perfmodel::{ContentionCtx, StepTimeModel};
 
 /// An admission decision for one executor.
 #[derive(Debug, Clone, PartialEq)]
@@ -30,6 +38,68 @@ pub fn group_by_batch(jobs: &[HyperParams]) -> Vec<(usize, Vec<usize>)> {
     groups.into_iter().rev().collect()
 }
 
+/// Prices candidate executor groups through the perfmodel: how many
+/// samples/second does a group of co-located adapters actually sustain
+/// on this backbone and GPU width?
+pub struct GroupPricer<'a> {
+    pub model: &'a StepTimeModel,
+    pub shape: &'a ModelShape,
+    pub seq_len: usize,
+    pub gpus: usize,
+    /// Minimum fractional samples/s gain one more adapter must deliver.
+    /// At `0.0` (the harness default) admission only rejects co-location
+    /// that *hurts* sustained throughput; raise it to demand real
+    /// marginal value from every slot.
+    pub min_marginal_gain: f64,
+}
+
+impl GroupPricer<'_> {
+    /// Sustained samples/second of a candidate group (nominal placement,
+    /// no foreign contention — admission happens before placement).
+    pub fn throughput(&self, ranks: &[usize], batch: usize) -> f64 {
+        if ranks.is_empty() {
+            return 0.0;
+        }
+        let w = Workload {
+            model: self.shape.clone(),
+            ranks: ranks.to_vec(),
+            batch_per_adapter: batch,
+            seq_len: self.seq_len,
+        };
+        self.model.throughput(&w, self.gpus, None, &ContentionCtx::empty())
+    }
+
+    /// Does growing a group from `current` to `next` samples/s clear the
+    /// marginal-gain bar?  At a positive bar the gain must be real; at
+    /// `0.0` only strict regressions are rejected (float-noise
+    /// tolerant).
+    pub fn clears_gain_bar(&self, current: f64, next: f64) -> bool {
+        if self.min_marginal_gain > 0.0 {
+            next > current * (1.0 + self.min_marginal_gain)
+        } else {
+            next >= current * (1.0 - 1e-9)
+        }
+    }
+
+    /// Should a group holding `ranks` grow by an adapter of `new_rank`?
+    /// The first adapter is always worth it; after that the grown group
+    /// must clear the marginal-gain bar.
+    ///
+    /// Both sides are priced at `batch` per adapter.  For homogeneous
+    /// groups (the engine's admission path, `allow_mixed = false`) this
+    /// is exact; for mixed groups it is a homogeneous-group proxy at the
+    /// candidate's batch — [`Workload`] cannot express per-adapter batch
+    /// sizes, which matches the grouped executor's own §A.1 constraint.
+    pub fn worth_admitting(&self, ranks: &[usize], new_rank: usize, batch: usize) -> bool {
+        if ranks.is_empty() {
+            return true;
+        }
+        let mut grown = ranks.to_vec();
+        grown.push(new_rank);
+        self.clears_gain_bar(self.throughput(ranks, batch), self.throughput(&grown, batch))
+    }
+}
+
 /// Greedy admission (paper §A.3): admit jobs in decreasing batch-size
 /// order while M̂(B + b_new) stays inside the safety margin and slots
 /// remain.  Homogeneity preferred, not enforced: if `allow_mixed`, other
@@ -40,8 +110,36 @@ pub fn admit(
     max_slots: usize,
     allow_mixed: bool,
 ) -> AdmissionPlan {
+    admit_inner(jobs, mem, max_slots, allow_mixed, None)
+}
+
+/// [`admit`], with every admission additionally priced through the
+/// perfmodel: a job joins the group only if the memory model says it
+/// fits *and* the pricer says the wider group still clears the
+/// marginal-throughput bar.
+pub fn admit_priced(
+    jobs: &[HyperParams],
+    mem: &MemoryModel,
+    max_slots: usize,
+    allow_mixed: bool,
+    pricer: &GroupPricer<'_>,
+) -> AdmissionPlan {
+    admit_inner(jobs, mem, max_slots, allow_mixed, Some(pricer))
+}
+
+fn admit_inner(
+    jobs: &[HyperParams],
+    mem: &MemoryModel,
+    max_slots: usize,
+    allow_mixed: bool,
+    pricer: Option<&GroupPricer<'_>>,
+) -> AdmissionPlan {
     let groups = group_by_batch(jobs);
     let mut admitted = Vec::new();
+    let mut admitted_ranks: Vec<usize> = Vec::new();
+    // current group's samples/s, memoized per (admitted set, batch) so a
+    // run of rejected candidates costs one model evaluation each, not two
+    let mut current_tput: Option<(usize, f64)> = None;
     let mut total_batch = 0usize;
     let mut first_batch: Option<usize> = None;
     let mut mixed = false;
@@ -58,6 +156,25 @@ pub fn admit(
             if !mem.fits(total_batch + bs) {
                 continue;
             }
+            if let Some(pr) = pricer {
+                if !admitted_ranks.is_empty() {
+                    let current = match current_tput {
+                        Some((b, v)) if b == bs => v,
+                        _ => {
+                            let v = pr.throughput(&admitted_ranks, bs);
+                            current_tput = Some((bs, v));
+                            v
+                        }
+                    };
+                    let mut grown = admitted_ranks.clone();
+                    grown.push(jobs[idx].rank);
+                    let next = pr.throughput(&grown, bs);
+                    if !pr.clears_gain_bar(current, next) {
+                        continue;
+                    }
+                    current_tput = Some((bs, next));
+                }
+            }
             if let Some(fb) = first_batch {
                 if bs != fb {
                     mixed = true;
@@ -66,6 +183,7 @@ pub fn admit(
                 first_batch = Some(bs);
             }
             admitted.push(idx);
+            admitted_ranks.push(jobs[idx].rank);
             total_batch += bs;
         }
     }
@@ -86,11 +204,40 @@ pub fn backfill(
     mem: &MemoryModel,
     allow_mixed: bool,
 ) -> Option<usize> {
-    let fits = |b: usize| mem.fits(current_total_batch - departing_batch + b);
+    backfill_inner(pending, departing_batch, allow_mixed, |j| {
+        mem.fits(current_total_batch - departing_batch + j.batch_size)
+    })
+}
+
+/// [`backfill`], with the replacement additionally priced: the candidate
+/// must fit memory *and* keep the surviving group (`resident_ranks`,
+/// the adapters staying after the departure) above the pricer's
+/// marginal-throughput bar.
+pub fn backfill_priced(
+    pending: &[HyperParams],
+    departing_batch: usize,
+    current_total_batch: usize,
+    mem: &MemoryModel,
+    allow_mixed: bool,
+    resident_ranks: &[usize],
+    pricer: &GroupPricer<'_>,
+) -> Option<usize> {
+    backfill_inner(pending, departing_batch, allow_mixed, |j| {
+        mem.fits(current_total_batch - departing_batch + j.batch_size)
+            && pricer.worth_admitting(resident_ranks, j.rank, j.batch_size)
+    })
+}
+
+fn backfill_inner(
+    pending: &[HyperParams],
+    departing_batch: usize,
+    allow_mixed: bool,
+    ok: impl Fn(&HyperParams) -> bool,
+) -> Option<usize> {
     // same batch size first (preserves homogeneous packing)
     if let Some(i) = pending
         .iter()
-        .position(|j| j.batch_size == departing_batch && fits(j.batch_size))
+        .position(|j| j.batch_size == departing_batch && ok(j))
     {
         return Some(i);
     }
@@ -98,7 +245,7 @@ pub fn backfill(
         // largest fitting batch size next (greedy, §A.3)
         let mut best: Option<(usize, usize)> = None;
         for (i, j) in pending.iter().enumerate() {
-            if fits(j.batch_size) {
+            if ok(j) {
                 match best {
                     Some((_, bb)) if j.batch_size <= bb => {}
                     _ => best = Some((i, j.batch_size)),
@@ -189,6 +336,106 @@ mod tests {
         let pending = vec![hp(8)];
         // departing 1, current 16, budget 16 → 16-1+8 = 23 > 16
         assert_eq!(backfill(&pending, 1, 16, &mem(16), true), None);
+    }
+
+    #[test]
+    fn priced_admission_with_zero_gain_matches_memory_only() {
+        // grouped-GEMM co-location never *hurts* sustained samples/s on
+        // the ALTO executor, so the default pricer (gain bar 0) admits
+        // exactly what the memory model admits
+        use crate::cluster::gpu::GpuSpec;
+        use crate::config::MODEL_FAMILY;
+        let shape = MODEL_FAMILY.get("llama-8b").unwrap();
+        let model = StepTimeModel::nominal(GpuSpec::h100_sxm5());
+        let pricer = GroupPricer {
+            model: &model,
+            shape: &shape,
+            seq_len: 256,
+            gpus: 1,
+            min_marginal_gain: 0.0,
+        };
+        let jobs = vec![hp(2), hp(2), hp(2), hp(4), hp(1)];
+        let unpriced = admit(&jobs, &mem(16), 4, false);
+        let priced = admit_priced(&jobs, &mem(16), 4, false, &pricer);
+        assert_eq!(priced, unpriced);
+    }
+
+    #[test]
+    fn demanding_marginal_gain_caps_group_width() {
+        // at large per-adapter batch the device is already saturated:
+        // a second adapter roughly doubles the step, so demanding a 90%
+        // throughput gain prices co-location out entirely
+        use crate::cluster::gpu::GpuSpec;
+        use crate::config::MODEL_FAMILY;
+        let shape = MODEL_FAMILY.get("llama-8b").unwrap();
+        let model = StepTimeModel::nominal(GpuSpec::h100_sxm5());
+        let pricer = GroupPricer {
+            model: &model,
+            shape: &shape,
+            seq_len: 512,
+            gpus: 1,
+            min_marginal_gain: 0.9,
+        };
+        let jobs = vec![hp(8), hp(8), hp(8), hp(8)];
+        let plan = admit_priced(&jobs, &mem(64), 4, false, &pricer);
+        assert_eq!(plan.admitted.len(), 1, "{plan:?}");
+        // ...while the memory model alone would have packed all four
+        assert_eq!(admit(&jobs, &mem(64), 4, false).admitted.len(), 4);
+    }
+
+    #[test]
+    fn small_batch_colocation_clears_a_real_gain_bar() {
+        // the paper's core claim: at tiny batch the device is underfilled
+        // and grouped co-location buys near-linear throughput — a second
+        // adapter clears even a 20% marginal-gain bar
+        use crate::cluster::gpu::GpuSpec;
+        use crate::config::MODEL_FAMILY;
+        let shape = MODEL_FAMILY.get("llama-8b").unwrap();
+        let model = StepTimeModel::nominal(GpuSpec::h100_sxm5());
+        let pricer = GroupPricer {
+            model: &model,
+            shape: &shape,
+            seq_len: 256,
+            gpus: 1,
+            min_marginal_gain: 0.2,
+        };
+        assert!(pricer.worth_admitting(&[16], 16, 1));
+        let t1 = pricer.throughput(&[16], 1);
+        let t2 = pricer.throughput(&[16, 16], 1);
+        assert!(t2 > t1 * 1.2, "co-location gain too small: {t1} -> {t2}");
+    }
+
+    #[test]
+    fn priced_backfill_respects_memory_and_pricing() {
+        use crate::cluster::gpu::GpuSpec;
+        use crate::config::MODEL_FAMILY;
+        let shape = MODEL_FAMILY.get("llama-8b").unwrap();
+        let model = StepTimeModel::nominal(GpuSpec::h100_sxm5());
+        let mk = |gain: f64| GroupPricer {
+            model: &model,
+            shape: &shape,
+            seq_len: 512,
+            gpus: 1,
+            min_marginal_gain: gain,
+        };
+        let pending = vec![hp(2), hp(4), hp(4)];
+        // zero gain bar: same pick as the unpriced path
+        let free = mk(0.0);
+        assert_eq!(
+            backfill_priced(&pending, 4, 12, &mem(16), true, &[16, 16], &free),
+            backfill(&pending, 4, 12, &mem(16), true)
+        );
+        // a saturated 3-wide group at b=4+ cannot justify a 90% gain
+        let strict = mk(0.9);
+        assert_eq!(
+            backfill_priced(&pending, 4, 12, &mem(16), true, &[16, 16, 16], &strict),
+            None
+        );
+        // memory still binds regardless of pricing
+        assert_eq!(
+            backfill_priced(&[hp(8)], 1, 16, &mem(16), true, &[16], &free),
+            None
+        );
     }
 
     #[test]

@@ -6,8 +6,14 @@ pub mod inter;
 pub mod intra;
 pub mod solver;
 
-pub use inter::{InterTaskScheduler, Policy, PreemptDecision, StartDecision};
-pub use intra::{admit, backfill, group_by_batch, AdmissionPlan};
+pub use inter::{
+    InterTaskScheduler, Policy, PreemptDecision, Pricer, Pricing, RepriceDecision,
+    StartDecision, Submission, TaskShape,
+};
+pub use intra::{
+    admit, admit_priced, backfill, backfill_priced, group_by_batch, AdmissionPlan,
+    GroupPricer,
+};
 pub use solver::{
     fcfs_schedule, lower_bound, lpt_schedule, sjf_schedule, solve, ConcreteSchedule,
     Placement, SchedTask, Schedule,

@@ -15,6 +15,18 @@
 //! Everything is a pure function of (config, trace): replaying the same
 //! trace yields a bit-identical event log and makespan, which the
 //! integration suite (`rust/tests/simharness_e2e.rs`) pins.
+//!
+//! Durations are **priced, not fixed**: with `HarnessConfig::pricing`
+//! charging (the default), every start runs at the
+//! [`crate::perfmodel::StepTimeModel`]'s rate for its concrete placement
+//! (cross-island collectives at the derated fabric bandwidth) and its
+//! island neighborhood (co-location contention).  When a cohort member
+//! exits early, is evicted, or migrates, the scheduler re-derives the
+//! survivors' remaining durations and the engine logs a `Reprice` event
+//! carrying the new completion time — folded into the replay digest.
+//! Migrations additionally charge a checkpoint-transfer cost
+//! (`cluster::comm::p2p_time`).  `Pricing::none()` restores the legacy
+//! placement-blind clock bit for bit.
 
 use std::collections::BTreeMap;
 
@@ -29,8 +41,9 @@ use crate::coordinator::profiler::Profiler;
 use crate::coordinator::service::TaskOutcome;
 use crate::coordinator::task_runner::{make_jobs, run_task, RunConfig};
 use crate::data::synth::dataset_profile;
-use crate::sched::inter::{InterTaskScheduler, Policy};
-use crate::sched::intra::{admit, group_by_batch};
+use crate::perfmodel::{task_workload, StepTimeModel};
+use crate::sched::inter::{InterTaskScheduler, Policy, Pricing, Submission, TaskShape};
+use crate::sched::intra::{admit_priced, group_by_batch, GroupPricer};
 
 use super::event::{EventKind, EventLog};
 use super::trace::Trace;
@@ -50,10 +63,16 @@ pub struct HarnessConfig {
     /// youngest strictly-lower-priority running task when they cannot
     /// fit.  Priorities come from [`TaskSpec::priority`].
     pub preempt_on_arrival: bool,
+    /// What the perfmodel charges to the simulated clock: placement comm
+    /// cost, island co-location contention, migration checkpoint
+    /// transfers — all on by default.  [`Pricing::none()`] restores the
+    /// legacy placement-blind timeline bit for bit.
+    pub pricing: Pricing,
     pub run: RunConfig,
     pub gpu: GpuSpec,
     /// Upper bound on co-located adapter slots per executor; the fitted
-    /// memory model may admit fewer (see `simulate_task`).
+    /// memory model + perfmodel pricing may admit fewer (see
+    /// `simulate_task`).
     pub n_slots: usize,
 }
 
@@ -65,6 +84,7 @@ impl Default for HarnessConfig {
             place: PlacePolicy::IslandFirst,
             island_size: 8,
             preempt_on_arrival: false,
+            pricing: Pricing::default(),
             run: RunConfig::default(),
             gpu: GpuSpec::h100_sxm5(),
             n_slots: 4,
@@ -91,7 +111,9 @@ pub struct HarnessReport {
     /// Final concrete GPU indices per task, in trace order (the GPUs the
     /// task held when it completed — post-migration if it was moved).
     pub placements: Vec<Placement>,
-    /// Σ gpus · actual_duration — the cluster-time the workload consumed.
+    /// Σ gpus · *charged* wall runtime — the cluster-time the workload
+    /// actually consumed on the priced clock (contention, derated
+    /// collectives and transfer charges included; queue time excluded).
     pub gpu_seconds: f64,
     /// Inter-task replans triggered by arrivals + completions.
     pub replans: usize,
@@ -104,6 +126,11 @@ pub struct HarnessReport {
     /// Σ comm-cost score over every placement decision (α–β all-reduce
     /// at the island-derated bandwidth; see `Topology::placement_comm_cost`).
     pub placement_comm_cost: f64,
+    /// Reprice events: survivor durations re-derived after a neighbor
+    /// completed, was evicted, or migrated.
+    pub reprices: usize,
+    /// Σ checkpoint-transfer wall seconds charged to migrations.
+    pub migration_charge: f64,
 }
 
 /// Timeline-only result of `SimEngine::replay` (no per-task outcomes —
@@ -114,12 +141,18 @@ pub struct Timeline {
     pub log: EventLog,
     /// Final concrete GPU indices per task, in trace order.
     pub placements: Vec<Placement>,
+    /// Σ gpus · *charged* wall runtime — GPU time on the priced clock
+    /// (contention, derated collectives and transfer charges included).
     pub gpu_seconds: f64,
     pub replans: usize,
     pub preemptions: usize,
     pub migrations: usize,
     pub cross_island_allocs: usize,
     pub placement_comm_cost: f64,
+    /// Reprice events emitted on this timeline.
+    pub reprices: usize,
+    /// Σ checkpoint-transfer wall seconds charged to migrations.
+    pub migration_charge: f64,
 }
 
 /// The event-driven cluster simulator.
@@ -169,11 +202,22 @@ impl SimEngine {
         let mut used = 0;
         let mut budget = 0;
         let mut saved: BTreeMap<&'static str, usize> = BTreeMap::new();
+        // admission prices candidate groups through the perfmodel: the
+        // memory model says what fits, the pricer (gain bar 0) rejects
+        // any co-location that would hurt sustained samples/s
+        let perf = StepTimeModel::nominal(self.cfg.gpu.clone());
+        let pricer = GroupPricer {
+            model: &perf,
+            shape: &model,
+            seq_len,
+            gpus: spec.num_gpus,
+            min_marginal_gain: 0.0,
+        };
         // homogeneous groups, descending batch size (paper §A.1)
         for (bs, members) in group_by_batch(&hps) {
             let group_hps: Vec<HyperParams> =
                 members.iter().map(|&i| hps[i].clone()).collect();
-            let plan = admit(&group_hps, &mem, self.cfg.n_slots, false);
+            let plan = admit_priced(&group_hps, &mem, self.cfg.n_slots, false, &pricer);
             // memory-aware repack: when even one adapter does not fit the
             // margin, run width-1 anyway (the real system would fall back
             // to gradient accumulation rather than reject the task)
@@ -261,11 +305,41 @@ impl SimEngine {
         let mut sched = InterTaskScheduler::with_cluster(cluster, self.cfg.policy);
         sched.place = self.cfg.place;
         sched.enable_preemption = self.cfg.preempt_on_arrival;
+        // pricing inputs: the perfmodel charges each task's placement and
+        // neighborhood through its representative executor workload
+        let shapes: Option<Vec<TaskShape>> = if self.cfg.pricing.any() {
+            sched.set_pricer(
+                StepTimeModel::new(self.cfg.gpu.clone(), topo.clone()),
+                self.cfg.pricing,
+            );
+            let mut shapes = Vec::with_capacity(outcomes.len());
+            for (entry, o) in trace.entries.iter().zip(outcomes) {
+                let model = MODEL_FAMILY
+                    .get(&entry.spec.model)
+                    .with_context(|| format!("unknown model '{}'", entry.spec.model))?;
+                let adapters = o
+                    .group_slots
+                    .iter()
+                    .map(|&(_, s)| s)
+                    .max()
+                    .unwrap_or(1)
+                    .max(1);
+                shapes.push(TaskShape {
+                    workload: task_workload(&model, &entry.spec, adapters),
+                    adapters,
+                    rank: entry.spec.search_space.max_rank().max(1),
+                });
+            }
+            Some(shapes)
+        } else {
+            None
+        };
         let mut log = EventLog::new();
         let mut placements: Vec<Placement> = vec![Placement::default(); outcomes.len()];
         let mut migrations = 0usize;
         let mut cross_island_allocs = 0usize;
         let mut placement_comm_cost = 0.0f64;
+        let mut reprices = 0usize;
         let mut next_arrival = 0usize;
         loop {
             let arrival = trace.entries.get(next_arrival).map(|e| e.arrival);
@@ -284,14 +358,15 @@ impl SimEngine {
                 let at = trace.entries[i].arrival;
                 let gpus = outcomes[i].gpus;
                 log.record(at, EventKind::Arrival { task: i, gpus });
-                sched.submit_at_prio(
-                    i,
+                sched.submit_spec(Submission {
+                    id: i,
                     gpus,
-                    outcomes[i].est_duration,
-                    outcomes[i].actual_duration,
-                    at,
-                    trace.entries[i].spec.priority,
-                );
+                    est_duration: outcomes[i].est_duration,
+                    actual_duration: outcomes[i].actual_duration,
+                    arrival: at,
+                    priority: trace.entries[i].spec.priority,
+                    shape: shapes.as_ref().map(|s| s[i].clone()),
+                });
             } else {
                 let (id, at) = sched.complete_next().expect("peeked completion");
                 log.record(
@@ -346,6 +421,17 @@ impl SimEngine {
                 };
                 log.record(d.time, kind);
             }
+            for r in sched.drain_repriced() {
+                reprices += 1;
+                log.record(
+                    r.time,
+                    EventKind::Reprice {
+                        task: r.id,
+                        gpus: outcomes[r.id].gpus,
+                        completion: r.completion,
+                    },
+                );
+            }
         }
 
         anyhow::ensure!(
@@ -354,10 +440,9 @@ impl SimEngine {
             self.cfg.policy,
             self.cfg.total_gpus
         );
-        let gpu_seconds = outcomes
-            .iter()
-            .map(|o| o.gpus as f64 * o.actual_duration)
-            .sum();
+        // GPU time on the priced clock: what tasks were *charged*, not
+        // the nominal durations the bodies were simulated with
+        let gpu_seconds = sched.charged_gpu_seconds();
         Ok(Timeline {
             makespan: sched.makespan(),
             log,
@@ -368,6 +453,8 @@ impl SimEngine {
             migrations,
             cross_island_allocs,
             placement_comm_cost,
+            reprices,
+            migration_charge: sched.migration_charge,
         })
     }
 
@@ -387,6 +474,8 @@ impl SimEngine {
             migrations: tl.migrations,
             cross_island_allocs: tl.cross_island_allocs,
             placement_comm_cost: tl.placement_comm_cost,
+            reprices: tl.reprices,
+            migration_charge: tl.migration_charge,
         })
     }
 
@@ -431,8 +520,9 @@ mod tests {
         ];
         let report = engine.run_specs(&specs).unwrap();
         assert_eq!(report.outcomes.len(), 3);
-        // one arrival + one start + one completion per task
-        assert_eq!(report.log.len(), 9);
+        // one arrival + one start + one completion per task, plus any
+        // reprices of the multi-GPU task as its neighborhood thins out
+        assert_eq!(report.log.len(), 9 + report.reprices);
         let kinds: [fn(&EventKind) -> bool; 3] = [
             |k| matches!(k, EventKind::Arrival { .. }),
             |k| matches!(k, EventKind::Start { .. }),
@@ -441,6 +531,10 @@ mod tests {
         for kind in kinds {
             assert_eq!(report.log.count(kind), 3);
         }
+        assert_eq!(
+            report.log.count(|k| matches!(k, EventKind::Reprice { .. })),
+            report.reprices
+        );
         let longest = report
             .outcomes
             .iter()

@@ -55,6 +55,15 @@ pub enum EventKind {
         from: Placement,
         to: Placement,
     },
+    /// A running task's remaining duration was re-derived from the
+    /// perfmodel because its island neighborhood changed (a cohort
+    /// member completed, was evicted, or migrated); `completion` is the
+    /// new priced completion time on the virtual clock.
+    Reprice {
+        task: usize,
+        gpus: usize,
+        completion: f64,
+    },
 }
 
 impl EventKind {
@@ -66,6 +75,7 @@ impl EventKind {
             EventKind::Preempt { .. } => "preempt",
             EventKind::Placed { .. } => "placed",
             EventKind::Migrate { .. } => "migrate",
+            EventKind::Reprice { .. } => "reprice",
         }
     }
 
@@ -76,7 +86,8 @@ impl EventKind {
             | EventKind::Complete { task, .. }
             | EventKind::Preempt { task, .. }
             | EventKind::Placed { task, .. }
-            | EventKind::Migrate { task, .. } => task,
+            | EventKind::Migrate { task, .. }
+            | EventKind::Reprice { task, .. } => task,
         }
     }
 
@@ -87,7 +98,8 @@ impl EventKind {
             | EventKind::Complete { gpus, .. }
             | EventKind::Preempt { gpus, .. }
             | EventKind::Placed { gpus, .. }
-            | EventKind::Migrate { gpus, .. } => gpus,
+            | EventKind::Migrate { gpus, .. }
+            | EventKind::Reprice { gpus, .. } => gpus,
         }
     }
 
@@ -111,6 +123,7 @@ impl EventKind {
             EventKind::Preempt { .. } => 3,
             EventKind::Placed { .. } => 4,
             EventKind::Migrate { .. } => 5,
+            EventKind::Reprice { .. } => 6,
         }
     }
 
@@ -133,6 +146,9 @@ impl EventKind {
                 mix_placement(h, from);
                 mix_placement(h, to);
             }
+            // the new pricing is part of the replay contract: the exact
+            // bits of the re-derived completion time are hashed
+            EventKind::Reprice { completion, .. } => fnv1a_mix(h, completion.to_bits()),
         }
     }
 }
@@ -163,6 +179,7 @@ impl fmt::Display for Event {
             }
             EventKind::Preempt { placement, .. } => write!(f, " off={placement}"),
             EventKind::Migrate { from, to, .. } => write!(f, " {from}->{to}"),
+            EventKind::Reprice { completion, .. } => write!(f, " eta={completion}"),
             _ => Ok(()),
         }
     }
@@ -294,6 +311,9 @@ impl EventLog {
                     fields.push(("from", Self::placement_json(from)));
                     fields.push(("to", Self::placement_json(to)));
                 }
+                EventKind::Reprice { completion, .. } => {
+                    fields.push(("completion", Json::Num(*completion)));
+                }
             }
             out.push_str(&Json::obj(fields).to_string());
             out.push('\n');
@@ -357,6 +377,13 @@ impl EventLog {
                     gpus,
                     from: Self::placement_from(&j, "from", gpus)?,
                     to: Self::placement_from(&j, "to", gpus)?,
+                },
+                Some("reprice") => EventKind::Reprice {
+                    task,
+                    gpus,
+                    completion: j.req("completion")?.as_f64().ok_or_else(|| {
+                        anyhow::anyhow!("line {}: 'completion' not a number", lineno + 1)
+                    })?,
                 },
                 other => anyhow::bail!("line {}: unknown kind {:?}", lineno + 1, other),
             };
@@ -423,6 +450,14 @@ mod tests {
                 task: 1,
                 gpus: 2,
                 placement: p(&[2, 3]),
+            },
+        );
+        log.record(
+            11.5,
+            EventKind::Reprice {
+                task: 1,
+                gpus: 2,
+                completion: 12.0,
             },
         );
         log.record(12.0, EventKind::Complete { task: 1, gpus: 2 });
@@ -510,6 +545,32 @@ mod tests {
         log.record(1.0 / 3.0, EventKind::Complete { task: 0, gpus: 1 });
         let back = EventLog::from_jsonl(&log.to_jsonl()).unwrap();
         assert_eq!(back.digest(), log.digest());
+    }
+
+    #[test]
+    fn reprice_completion_bits_are_part_of_the_digest() {
+        let mk = |completion: f64| {
+            let mut log = sample();
+            log.record(
+                3.0,
+                EventKind::Reprice {
+                    task: 0,
+                    gpus: 2,
+                    completion,
+                },
+            );
+            log
+        };
+        let a = mk(5.5);
+        let b = mk(5.5 + 1e-12);
+        assert_ne!(a.digest(), b.digest(), "pricing must be folded into the digest");
+        // and an awkward completion round-trips bit-for-bit through jsonl
+        let c = mk(1.0 / 3.0);
+        let back = EventLog::from_jsonl(&c.to_jsonl()).unwrap();
+        assert_eq!(back.digest(), c.digest());
+        // reprice lines without a completion are rejected
+        let bad = r#"{"gpus":1,"kind":"reprice","seq":0,"task":0,"time":0}"#;
+        assert!(EventLog::from_jsonl(bad).is_err());
     }
 
     #[test]

@@ -28,7 +28,13 @@
 //!   running task (`Preempt`, releasing its GPUs); the evicted task
 //!   later resumes with its remaining duration, either on the same GPUs
 //!   (`Placed`) or on different ones (`Migrate`, carrying both the old
-//!   and new indices).
+//!   and new indices and — under pricing — a checkpoint-transfer
+//!   charge).
+//! * **Reprice** — a running task's remaining duration was re-derived
+//!   from the [`crate::perfmodel`] because its island neighborhood
+//!   changed (a cohort member completed early, was evicted, or
+//!   migrated); the event carries the new completion time, which is
+//!   part of the replay digest.
 //!
 //! Time ties resolve completions before arrivals (capacity frees before
 //! the arriving task plans over it) and preemptions before the starts
@@ -54,11 +60,16 @@
 //! * `BestFit` — pack the tightest island that fits;
 //! * `FragMin` — minimize the `cluster::comm` all-reduce cost score.
 //!
-//! Placement **never changes task durations** — the comm-cost impact is
-//! reported (`Timeline::cross_island_allocs`,
-//! `Timeline::placement_comm_cost`) rather than fed back into the
-//! clock, so timing-level replay stays comparable across placement
-//! policies while the fragmentation cost of a policy is still visible.
+//! Placement is **charged to the clock**: under the default
+//! `HarnessConfig::pricing`, the [`crate::perfmodel::StepTimeModel`]
+//! stretches each task's duration by its placement's derated collective
+//! bandwidth and its island co-location contention, so a topology-blind
+//! placement now costs *makespan*, not just a reported score
+//! (`Timeline::cross_island_allocs`, `Timeline::placement_comm_cost`
+//! remain as the placement-only diagnostics).  Set
+//! [`crate::sched::inter::Pricing::none`] to recover the legacy
+//! placement-blind timeline bit for bit — the ablation baseline the
+//! placement-policy isolation tests use.
 //!
 //! ### Determinism guarantees
 //!
@@ -92,6 +103,7 @@ pub mod event;
 pub mod trace;
 
 pub use crate::cluster::{PlacePolicy, Placement, Topology};
+pub use crate::sched::inter::Pricing;
 pub use engine::{HarnessConfig, HarnessReport, SimEngine, Timeline};
 pub use event::{Event, EventKind, EventLog};
-pub use trace::{frag_mix, hetero_mix, Trace, TraceEntry};
+pub use trace::{frag_mix, hetero_mix, uniform_mix, Trace, TraceEntry};

@@ -158,6 +158,36 @@ pub fn hetero_mix(n_tasks: usize, train_samples: usize, seed: u64) -> Vec<TaskSp
         .collect()
 }
 
+/// Uniform large-scale tenant mix — the first slice of the "scale the
+/// harness" ROADMAP item: `n_tasks` identical-shape 1-GPU 8B tenants
+/// with jittered training-set sizes and a compact 4-point search space,
+/// so 100+-task traces stay cheap to simulate per body while stressing
+/// queue depth and replan throughput at the cluster layer.  Pure
+/// function of (n_tasks, train_samples, seed).
+pub fn uniform_mix(n_tasks: usize, train_samples: usize, seed: u64) -> Vec<TaskSpec> {
+    let mut rng = Pcg32::new(seed, 0x0411f);
+    (0..n_tasks)
+        .map(|i| {
+            let samples = (train_samples as f64 * rng.uniform(0.6, 1.4)) as usize;
+            TaskSpec {
+                name: format!("uni-{i}"),
+                model: "llama-8b".into(),
+                dataset: "gsm-syn".into(),
+                num_gpus: 1,
+                search_space: SearchSpace {
+                    lrs: vec![5e-5, 2e-4],
+                    ranks: vec![16],
+                    batch_sizes: vec![2, 4],
+                },
+                seq_len: 256,
+                train_samples: samples.max(16),
+                seed: seed.wrapping_add(i as u64 * 61),
+                ..TaskSpec::default()
+            }
+        })
+        .collect()
+}
+
 /// A workload built to shred the allocation bitmap (the scenario where
 /// placement policy matters most): a stream of 1-GPU tasks with wildly
 /// jittered sizes keeps freeing scattered single GPUs, while every
@@ -198,6 +228,23 @@ pub fn frag_mix(n_tasks: usize, train_samples: usize, seed: u64) -> Vec<TaskSpec
 }
 
 impl Trace {
+    /// Large uniform tenant stream over [`uniform_mix`]: `n_tasks`
+    /// (typically 100+) 1-GPU tenants arriving Poisson — the queue-depth
+    /// and replan-throughput stressor the harness-scale bench sweeps.
+    /// Pure function of its arguments.
+    pub fn uniform_large(
+        n_tasks: usize,
+        train_samples: usize,
+        mean_interarrival: f64,
+        seed: u64,
+    ) -> Trace {
+        Trace::poisson(
+            uniform_mix(n_tasks, train_samples, seed),
+            mean_interarrival,
+            seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1),
+        )
+    }
+
     /// Fragmentation-heavy arrival pattern over [`frag_mix`]: narrow
     /// tasks trickle in on short gaps, wide tasks land on long gaps —
     /// by which time completions have punched scattered holes in the
@@ -369,6 +416,33 @@ mod tests {
         assert_eq!(
             t.fingerprint(),
             Trace::preemption_stress(4, 6, 48, 9).fingerprint()
+        );
+    }
+
+    #[test]
+    fn uniform_large_scales_past_100_tasks() {
+        let t = Trace::uniform_large(120, 48, 40.0, 3);
+        assert_eq!(t.len(), 120);
+        assert!(t.entries.iter().all(|e| e.spec.num_gpus == 1));
+        assert!(t.entries.iter().all(|e| e.spec.model == "llama-8b"));
+        assert!(t.entries.iter().all(|e| e.spec.train_samples >= 16));
+        // compact search space keeps 100+-task bodies cheap
+        assert!(t.entries.iter().all(|e| e.spec.search_space.len() == 4));
+        for w in t.entries.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        // names unique, generator pure in its seed
+        let mut names: Vec<&str> = t.entries.iter().map(|e| e.spec.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 120);
+        assert_eq!(
+            t.fingerprint(),
+            Trace::uniform_large(120, 48, 40.0, 3).fingerprint()
+        );
+        assert_ne!(
+            t.fingerprint(),
+            Trace::uniform_large(120, 48, 40.0, 4).fingerprint()
         );
     }
 

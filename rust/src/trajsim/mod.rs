@@ -9,6 +9,15 @@
 //! (EXPERIMENTS.md).  Trajectories are pure functions of (config, seed,
 //! step): the prefix a detector saw during warmup is bit-identical to the
 //! prefix of the full run, which replay-based tests rely on.
+//!
+//! Loss *values* here are deliberately independent of executor width and
+//! placement — what a config learns does not depend on who it shares a
+//! GPU with.  What co-location and placement *do* change is wall time,
+//! and that is owned entirely by [`crate::perfmodel`]: `SimBackend`
+//! prices each step through the `StepTimeModel`, and the simharness
+//! charges placement comm cost and island contention on top, so
+//! GPU-seconds accounting uses charged (not nominal) durations in both
+//! `simulate_trace` and `replay`.
 
 use crate::config::HyperParams;
 use crate::data::synth::DatasetProfile;

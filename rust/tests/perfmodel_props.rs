@@ -1,0 +1,181 @@
+//! Property suite for the unified `perfmodel` layer — the invariants the
+//! refactor promised:
+//!
+//! 1. step time is monotone non-decreasing in the co-located adapter
+//!    count (island contention never speeds anyone up);
+//! 2. step time is monotone non-decreasing in cross-island span, and
+//!    strictly greater once a multi-GPU placement leaves its island;
+//! 3. with an empty contention context and a single-island placement the
+//!    model reproduces the legacy `Profiler::estimate_duration`
+//!    arithmetic bit for bit (the refactor moved ownership, not
+//!    numbers).
+
+use alto::cluster::gpu::GpuSpec;
+use alto::cluster::{Placement, Topology};
+use alto::config::{SearchSpace, TaskSpec, MODEL_FAMILY};
+use alto::coordinator::Profiler;
+use alto::parallel::baselines::Alto;
+use alto::parallel::workload::{Strategy, Workload};
+use alto::perfmodel::{task_workload, ContentionCtx, StepTimeModel};
+use alto::util::prop::{prop_assert, prop_check};
+
+const MODELS: [&str; 4] = ["llama-8b", "qwen-7b", "qwen-32b", "llama-70b"];
+
+fn random_workload(g: &mut alto::util::prop::Gen) -> Workload {
+    let name = *g.choice(&MODELS);
+    let n = g.usize(1..=8);
+    let rank = *g.choice(&[8usize, 16, 32, 64]);
+    Workload {
+        model: MODEL_FAMILY.get(name).unwrap(),
+        ranks: vec![rank; n],
+        batch_per_adapter: *g.choice(&[1usize, 2, 4, 8]),
+        seq_len: *g.choice(&[128usize, 256, 512]),
+    }
+}
+
+#[test]
+fn step_time_monotone_in_colocated_adapter_count() {
+    prop_check("step time monotone in neighbor adapters", 150, |g| {
+        let model = StepTimeModel::new(GpuSpec::h100_sxm5(), Topology::h100_nodes(16));
+        let w = random_workload(g);
+        let p_gpus = *g.choice(&[1usize, 2, 4, 8]);
+        let gpus_held = g.usize(0..=4);
+        let mut last = 0.0f64;
+        for neighbors in 0..24usize {
+            let ctx = ContentionCtx {
+                neighbor_adapters: neighbors,
+                neighbor_gpus: gpus_held,
+            };
+            let t = model.step_total(&w, p_gpus, None, &ctx);
+            prop_assert(
+                t.is_finite() && t > 0.0,
+                format!("non-finite step time {t} at {neighbors} neighbors"),
+            )?;
+            prop_assert(
+                t >= last,
+                format!(
+                    "{} adapters co-located must not speed p={p_gpus} up: {t} < {last}",
+                    neighbors
+                ),
+            )?;
+            last = t;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn step_time_monotone_in_cross_island_span() {
+    prop_check("step time monotone in islands spanned", 150, |g| {
+        // 32 GPUs in 4-GPU islands: spans of 1..=4 islands are available
+        // for a 4-GPU placement
+        let topo = Topology::uniform(32, 4);
+        let model = StepTimeModel::new(GpuSpec::h100_sxm5(), topo);
+        let w = random_workload(g);
+        // placements spanning exactly 1, 2, 3, 4 islands (4 GPUs each)
+        let spans: [Placement; 4] = [
+            Placement::new(vec![0, 1, 2, 3]),
+            Placement::new(vec![0, 1, 4, 5]),
+            Placement::new(vec![0, 1, 4, 8]),
+            Placement::new(vec![0, 4, 8, 12]),
+        ];
+        let ctx = ContentionCtx::empty();
+        let mut last = 0.0f64;
+        for (i, p) in spans.iter().enumerate() {
+            let t = model.step_total(&w, 4, Some(p), &ctx);
+            prop_assert(
+                t >= last,
+                format!("hop {} must not be cheaper: {t} < {last}", i + 1),
+            )?;
+            last = t;
+        }
+        // leaving the island is strictly worse for any multi-GPU group
+        let inside = model.step_total(&w, 4, Some(&spans[0]), &ctx);
+        let across = model.step_total(&w, 4, Some(&spans[1]), &ctx);
+        prop_assert(
+            across > inside,
+            format!("cross-island must cost strictly more: {across} vs {inside}"),
+        )
+    });
+}
+
+#[test]
+fn uncontended_single_island_equals_legacy_profiler_bitwise() {
+    prop_check("perfmodel == legacy Profiler path", 200, |g| {
+        let name = *g.choice(&MODELS);
+        let shape = MODEL_FAMILY.get(name).unwrap();
+        let gpus = *g.choice(&[1usize, 2, 4]);
+        let n_slots = g.usize(1..=8);
+        let task = TaskSpec {
+            model: name.into(),
+            num_gpus: gpus,
+            search_space: if g.bool() {
+                SearchSpace::paper_single_gpu()
+            } else {
+                SearchSpace::paper_multi_gpu()
+            },
+            seq_len: *g.choice(&[128usize, 256, 512]),
+            train_samples: g.usize(16..=4096),
+            ..TaskSpec::default()
+        };
+
+        // the legacy arithmetic, inlined: dominant config through the
+        // raw Alto strategy on the nominal device
+        let gpu = GpuSpec::h100_sxm5();
+        let w = task_workload(&shape, &task, n_slots);
+        let t = Alto.step_time(&w, &gpu, gpus).total();
+        let legacy =
+            task.total_samples() as f64 / ((w.n_adapters() * w.batch_per_adapter) as f64 / t);
+
+        // the perfmodel path, nominal
+        let model = StepTimeModel::new(gpu.clone(), Topology::h100_nodes(16));
+        let ctx = ContentionCtx::empty();
+        let ours = model.estimate_task_duration(&shape, &task, n_slots, None, &ctx);
+        prop_assert(
+            ours.to_bits() == legacy.to_bits(),
+            format!("nominal estimate drifted: {ours} vs legacy {legacy}"),
+        )?;
+
+        // ...and at any single-island placement of the right width
+        let base = g.usize(0..=1) * 8; // island 0 or island 1
+        let placed = Placement::new((base..base + gpus).collect());
+        let at = model.estimate_task_duration(&shape, &task, n_slots, Some(&placed), &ctx);
+        prop_assert(
+            at.to_bits() == legacy.to_bits(),
+            format!("single-island placement must be free: {at} vs {legacy}"),
+        )?;
+
+        // the caching facade agrees with the model it fronts
+        let mut prof = Profiler::new(gpu);
+        let cached = prof.estimate_duration(&shape, &task, n_slots);
+        prop_assert(
+            cached.to_bits() == legacy.to_bits(),
+            format!("Profiler facade drifted: {cached} vs {legacy}"),
+        )
+    });
+}
+
+#[test]
+fn charge_factor_bounds() {
+    prop_check("charge factor is >= 1 and capped", 150, |g| {
+        let model = StepTimeModel::new(GpuSpec::h100_sxm5(), Topology::h100_nodes(16));
+        let w = random_workload(g);
+        let p_gpus = *g.choice(&[1usize, 2, 4, 8]);
+        let cross = g.bool();
+        let placement = if cross {
+            Placement::new(vec![6, 7, 8, 9])
+        } else {
+            Placement::new(vec![0, 1, 2, 3])
+        };
+        let ctx = ContentionCtx {
+            neighbor_adapters: g.usize(0..=64),
+            neighbor_gpus: g.usize(0..=12),
+        };
+        let f = model.charge_factor(&w, p_gpus, Some(&placement), &ctx);
+        prop_assert(f.is_finite(), format!("factor {f}"))?;
+        prop_assert(f >= 1.0, format!("pricing must never speed a task up: {f}"))?;
+        // bounded: comm is one additive term derated at most 8× and
+        // contended at most 2×, so the whole-step factor stays sane
+        prop_assert(f < 64.0, format!("runaway factor {f}"))
+    });
+}

@@ -1,25 +1,40 @@
 //! Integration over the concrete-placement layer: island-aware placement
-//! vs topology-blind first-fit on a fragmentation-heavy 16-GPU trace
-//! (the ISSUE acceptance scenario), bitmap-consistent event logs,
-//! preemption/migration timelines, and the golden digest + jsonl dump of
-//! a pinned (trace, seed).
+//! vs topology-blind first-fit on a fragmentation-heavy 16-GPU trace —
+//! both as a placement-only ablation (pricing off: identical clocks,
+//! different indices) and with the perfmodel charging comm cost to the
+//! clock (pricing on: island-aware placement strictly wins *makespan*) —
+//! plus bitmap-consistent event logs, preemption/migration timelines,
+//! and the golden digest + jsonl dump of a pinned (trace, seed).
 
 use std::collections::BTreeMap;
 
 use alto::cluster::{PlacePolicy, Placement};
 use alto::config::TaskSpec;
 use alto::coordinator::service::TaskOutcome;
-use alto::sched::inter::Policy;
+use alto::sched::inter::{Policy, Pricing};
 use alto::simharness::{EventKind, HarnessConfig, SimEngine, Trace};
 
-fn engine(total_gpus: usize, policy: Policy, place: PlacePolicy, preempt: bool) -> SimEngine {
+fn engine_priced(
+    total_gpus: usize,
+    policy: Policy,
+    place: PlacePolicy,
+    preempt: bool,
+    pricing: Pricing,
+) -> SimEngine {
     SimEngine::new(HarnessConfig {
         total_gpus,
         policy,
         place,
         preempt_on_arrival: preempt,
+        pricing,
         ..HarnessConfig::default()
     })
+}
+
+/// Legacy placement-blind clock: placement decides *which* GPUs, never
+/// *how long* — the isolation baseline the timing-equality tests need.
+fn engine(total_gpus: usize, policy: Policy, place: PlacePolicy, preempt: bool) -> SimEngine {
+    engine_priced(total_gpus, policy, place, preempt, Pricing::none())
 }
 
 /// Hand-crafted outcome for replay-only tests: est == actual == `dur`.
@@ -40,6 +55,15 @@ fn outcome(name: &str, gpus: usize, dur: f64) -> TaskOutcome {
 
 fn spec(gpus: usize, priority: i64) -> TaskSpec {
     TaskSpec {
+        num_gpus: gpus,
+        priority,
+        ..TaskSpec::default()
+    }
+}
+
+fn spec_model(model: &str, gpus: usize, priority: i64) -> TaskSpec {
+    TaskSpec {
+        model: model.into(),
         num_gpus: gpus,
         priority,
         ..TaskSpec::default()
@@ -90,18 +114,25 @@ fn check_bitmap_consistency(log: &alto::simharness::EventLog, total_gpus: usize)
                     free[g] = true;
                 }
             }
+            EventKind::Reprice { task, .. } => {
+                // re-pricing moves the clock, never the bitmap — but it
+                // must only ever name a task that is currently running
+                assert!(held.contains_key(task), "repriced a non-running task: {e}");
+            }
         }
     }
     assert!(held.is_empty(), "timeline ended with live allocations: {held:?}");
     assert!(free.iter().all(|&f| f), "timeline ended with a dirty bitmap");
 }
 
-/// The ISSUE acceptance scenario, fully deterministic: a 16-GPU
-/// two-island cluster fragments (scattered 1-GPU completions leave 2
-/// free GPUs on island 0 and 4 on island 1), then a 4-GPU task arrives.
-/// Topology-blind first-fit assembles the hole across both islands;
-/// every island-aware policy keeps it inside island 1 — strictly fewer
-/// cross-island allocations and strictly lower summed comm cost.
+/// The placement-only ablation (pricing off), fully deterministic: a
+/// 16-GPU two-island cluster fragments (scattered 1-GPU completions
+/// leave 2 free GPUs on island 0 and 4 on island 1), then a 4-GPU task
+/// arrives.  Topology-blind first-fit assembles the hole across both
+/// islands; every island-aware policy keeps it inside island 1 —
+/// strictly fewer cross-island allocations and strictly lower summed
+/// comm cost, on an *identical* clock (the legacy baseline the priced
+/// acceptance test below contrasts with).
 #[test]
 fn island_aware_beats_blind_first_fit_on_fragmented_cluster() {
     // 16 narrow tasks at t=0 fill the cluster one GPU each (task i on
@@ -159,6 +190,92 @@ fn island_aware_beats_blind_first_fit_on_fragmented_cluster() {
     check_bitmap_consistency(&blind.log, 16);
 }
 
+/// The ISSUE acceptance scenario with the perfmodel *charging* comm cost
+/// to the clock: the same fragmented 16-GPU heterogeneous trace, but the
+/// wide task is a real 4-GPU 32B tenant whose per-step all-gathers
+/// dominate once they ride the inter-island fabric.  Blind first-fit
+/// assembles its hole across both islands and pays for it in wall time;
+/// island-aware placement keeps it inside island 1 at full NVLink — so
+/// topology-aware placement now strictly beats topology-blind first-fit
+/// on **makespan**, not just on the reported comm score.  Replay of the
+/// same (trace, outcomes) stays bit-identical, pricing included.
+#[test]
+fn charged_comm_cost_makes_island_aware_strictly_beat_blind_on_makespan() {
+    // 16 narrow 1-GPU tenants at t=0 (task i lands on GPU i under every
+    // policy); completions punch holes at {2,3} (t=100) and {8,9,10,11}
+    // (t=150); the long 4-GPU 32B tenant arrives at t=200 and is the
+    // critical path from then on.
+    let mut pairs: Vec<(f64, TaskSpec)> = (0..16).map(|_| (0.0, spec(1, 0))).collect();
+    pairs.push((200.0, spec_model("qwen-32b", 4, 0)));
+    let trace = Trace::with_arrivals(pairs);
+    let mut outcomes: Vec<TaskOutcome> = (0..16)
+        .map(|i| {
+            let dur = match i {
+                2 | 3 => 100.0,
+                8..=11 => 150.0,
+                _ => 1000.0,
+            };
+            outcome(&format!("narrow-{i}"), 1, dur)
+        })
+        .collect();
+    outcomes.push(outcome("wide", 4, 2000.0));
+
+    // charge comm only: the factor is then a pure function of the
+    // placement, which isolates exactly what the acceptance claims
+    let charge = Pricing { comm: true, contention: false, migration: false };
+    let blind = engine_priced(16, Policy::Fcfs, PlacePolicy::FirstFit, false, charge)
+        .replay(&trace, &outcomes)
+        .unwrap();
+    let aware = engine_priced(16, Policy::Fcfs, PlacePolicy::IslandFirst, false, charge)
+        .replay(&trace, &outcomes)
+        .unwrap();
+
+    // same placement decisions as the unpriced ablation...
+    assert_eq!(blind.placements[16].gpus(), &[2, 3, 8, 9]);
+    assert_eq!(aware.placements[16].gpus(), &[8, 9, 10, 11]);
+    // ...but now the cross-island hole costs wall time: the single-island
+    // run finishes exactly on the nominal clock (factor exactly 1.0)...
+    assert_eq!(aware.makespan.to_bits(), 2200.0f64.to_bits());
+    // ...while the blind run pays the derated fabric on every step
+    assert!(
+        blind.makespan > aware.makespan + 1.0,
+        "topology-blind placement must lose makespan: blind {} vs aware {}",
+        blind.makespan,
+        aware.makespan
+    );
+    // GPU-seconds use charged (not nominal) durations: the blind run
+    // burned strictly more cluster time for identical work
+    assert!(
+        blind.gpu_seconds > aware.gpu_seconds + 1.0,
+        "charged GPU-seconds must reflect the comm cost: blind {} vs aware {}",
+        blind.gpu_seconds,
+        aware.gpu_seconds
+    );
+    // single-GPU tenants have no collectives: their clocks are untouched
+    for tl in [&blind, &aware] {
+        check_bitmap_consistency(&tl.log, 16);
+        let narrow_completes: Vec<f64> = tl
+            .log
+            .events()
+            .iter()
+            .filter(|e| {
+                matches!(e.kind, EventKind::Complete { task, .. } if task < 16)
+            })
+            .map(|e| e.time)
+            .collect();
+        assert_eq!(narrow_completes.len(), 16);
+        assert!(narrow_completes.iter().all(|&t| t <= 1000.0 + 1e-9));
+    }
+
+    // replay of the same (trace, outcomes) is bit-identical, pricing
+    // folded into the digest
+    let again = engine_priced(16, Policy::Fcfs, PlacePolicy::FirstFit, false, charge)
+        .replay(&trace, &outcomes)
+        .unwrap();
+    assert_eq!(again.log.digest(), blind.log.digest());
+    assert_eq!(again.makespan.to_bits(), blind.makespan.to_bits());
+}
+
 /// The same comparison over the generated fragmentation-heavy workload,
 /// end to end through the simulated task bodies: island-aware placement
 /// never does worse than blind first-fit on either fragmentation metric.
@@ -192,16 +309,17 @@ fn fragmentation_heavy_generator_aware_no_worse_than_blind() {
     }
 }
 
-/// Placements enabled, replay stays a pure function of (cfg, trace):
-/// bit-identical event logs (placement indices hashed) and every start
+/// Placements enabled and the perfmodel charging (the default), replay
+/// stays a pure function of (cfg, trace): bit-identical event logs
+/// (placement indices and reprice completions hashed) and every start
 /// carries concrete, in-bounds, pairwise-disjoint GPU indices.
 #[test]
 fn replay_with_placements_is_bit_identical_and_consistent() {
     let trace = Trace::fragmentation_heavy(12, 48, 21);
-    let a = engine(16, Policy::Optimal, PlacePolicy::IslandFirst, false)
+    let a = engine_priced(16, Policy::Optimal, PlacePolicy::IslandFirst, false, Pricing::default())
         .run(&trace)
         .unwrap();
-    let b = engine(16, Policy::Optimal, PlacePolicy::IslandFirst, false)
+    let b = engine_priced(16, Policy::Optimal, PlacePolicy::IslandFirst, false, Pricing::default())
         .run(&trace)
         .unwrap();
     assert_eq!(a.log.digest(), b.log.digest(), "placement-bearing logs must replay bitwise");
@@ -224,11 +342,13 @@ fn replay_with_placements_is_bit_identical_and_consistent() {
     }
 }
 
-/// Deterministic preemption/migration timeline (replay-only): a
-/// priority-1 arrival evicts the youngest runner, which later resumes
-/// on different GPUs — exercising Preempt, Start, Migrate and the
-/// remaining-duration bookkeeping, with the bitmap consistent
-/// throughout.
+/// Deterministic preemption/migration timeline (replay-only, pricing
+/// off so the hand-computed timestamps stay exact): a priority-1
+/// arrival evicts the youngest runner, which later resumes on different
+/// GPUs — exercising Preempt, Start, Migrate and the remaining-duration
+/// bookkeeping, with the bitmap consistent throughout.  (The charged
+/// migration path is covered by `sched::inter`'s
+/// `migration_pays_a_checkpoint_transfer_charge`.)
 #[test]
 fn preemption_evicts_youngest_and_migrates() {
     // 8 GPUs (one island). A: 4 GPUs, 30s. B: 4 GPUs, 18s. U arrives at
@@ -261,6 +381,7 @@ fn preemption_evicts_youngest_and_migrates() {
                 EventKind::Preempt { .. } => "preempt",
                 EventKind::Placed { .. } => "placed",
                 EventKind::Migrate { .. } => "migrate",
+                EventKind::Reprice { .. } => "reprice",
             };
             (label, e.kind.task(), e.time)
         })
@@ -303,8 +424,10 @@ fn preemption_evicts_youngest_and_migrates() {
 /// still completes and the log replays the bitmap cleanly.
 #[test]
 fn preemption_stress_trace_evicts_and_completes() {
+    // full default pricing: determinism must hold with contention
+    // repricing and migration charges in the timeline
     let trace = Trace::preemption_stress(4, 4, 32, 3);
-    let report = engine(16, Policy::Fcfs, PlacePolicy::IslandFirst, true)
+    let report = engine_priced(16, Policy::Fcfs, PlacePolicy::IslandFirst, true, Pricing::default())
         .run(&trace)
         .unwrap();
     assert!(report.preemptions >= 1, "urgent arrivals on a full cluster must evict");
@@ -317,24 +440,42 @@ fn preemption_stress_trace_evicts_and_completes() {
         report.preemptions
     );
     check_bitmap_consistency(&report.log, 16);
-    // determinism holds under preemption too
-    let again = engine(16, Policy::Fcfs, PlacePolicy::IslandFirst, true)
+    // determinism holds under preemption + pricing too
+    let again = engine_priced(16, Policy::Fcfs, PlacePolicy::IslandFirst, true, Pricing::default())
         .run(&trace)
         .unwrap();
     assert_eq!(report.log.digest(), again.log.digest());
 }
 
-/// Golden digest + jsonl dump for a pinned (trace, seed).  The first run
-/// writes `rust/tests/golden/` (commit the result); later runs compare
-/// bit-for-bit, so any placement/timing regression shows up as a digest
-/// mismatch with a diffable jsonl next to it.  Set `GOLDEN_UPDATE=1` to
-/// re-pin on purpose.
+/// Golden digest + jsonl dump for a pinned (trace, seed) under the
+/// *default* (priced) configuration, so the pin guards the perfmodel's
+/// charged clock — reprice completions included — not just placement
+/// indices.
+///
+/// Self-arming: the first run on a fresh checkout writes
+/// `rust/tests/golden/` (commit the result to arm the guard; CI arms and
+/// immediately verifies it by running this test twice).  Later runs
+/// compare bit-for-bit, so any placement/pricing/timing regression shows
+/// up as a digest mismatch with a diffable jsonl next to it.
+///
+/// Re-arming after an *intentional* timing change (e.g. a perfmodel
+/// constant): run once with `GOLDEN_UPDATE=1`, commit the regenerated
+/// `rust/tests/golden/`, and say why in the commit message.  The
+/// perfmodel refactor that charged comm cost and contention to the clock
+/// invalidated any pre-perfmodel pin by design — goldens must be
+/// regenerated from this revision onward.
 #[test]
 fn golden_event_log_digest_and_jsonl() {
     let trace = Trace::fragmentation_heavy(8, 32, 11);
-    let report = engine(16, Policy::Optimal, PlacePolicy::IslandFirst, false)
-        .run(&trace)
-        .unwrap();
+    let report = engine_priced(
+        16,
+        Policy::Optimal,
+        PlacePolicy::IslandFirst,
+        false,
+        Pricing::default(),
+    )
+    .run(&trace)
+    .unwrap();
     let digest = format!("{:016x}", report.log.digest());
     let jsonl = report.log.to_jsonl();
     // jsonl round-trips bit-identically before we even touch the disk
