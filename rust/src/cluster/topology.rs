@@ -174,17 +174,28 @@ impl Topology {
         }
     }
 
-    /// Number of distinct islands a placement touches.
+    /// Number of distinct islands a placement touches.  Allocation-free
+    /// for clusters of ≤ 64 islands (a u64 bitset — every pricing query
+    /// funnels through here, so the steady-state path must not touch the
+    /// heap); larger maps fall back to a scratch vector.
     pub fn islands_spanned(&self, p: &Placement) -> usize {
-        let mut seen = vec![false; self.n_islands];
-        let mut n = 0;
-        for &g in p.gpus() {
-            if !seen[self.island_of[g]] {
-                seen[self.island_of[g]] = true;
-                n += 1;
+        if self.n_islands <= 64 {
+            let mut bits: u64 = 0;
+            for &g in p.gpus() {
+                bits |= 1u64 << self.island_of[g];
             }
+            bits.count_ones() as usize
+        } else {
+            let mut seen = vec![false; self.n_islands];
+            let mut n = 0;
+            for &g in p.gpus() {
+                if !seen[self.island_of[g]] {
+                    seen[self.island_of[g]] = true;
+                    n += 1;
+                }
+            }
+            n
         }
-        n
     }
 
     /// Does the placement cross an island boundary?

@@ -17,6 +17,7 @@ use crate::cluster::Placement;
 use crate::config::{ModelShape, TaskSpec};
 use crate::parallel::workload::Workload;
 use crate::perfmodel::{task_workload, ContentionCtx, StepTimeModel};
+use crate::util::hash::{fnv1a_mix, fnv1a_mix_bytes, FNV_OFFSET};
 
 /// Cached throughput entry.
 #[derive(Debug, Clone, Copy)]
@@ -27,7 +28,13 @@ pub struct ThroughputProfile {
 /// Caching facade over the [`StepTimeModel`].
 pub struct Profiler {
     model: StepTimeModel,
-    cache: BTreeMap<String, ThroughputProfile>,
+    /// Keyed by a 64-bit FNV-1a over the query fields (length-prefixed,
+    /// so field runs cannot alias) instead of a formatted `String`: the
+    /// hot estimate path allocates nothing per lookup.  A 64-bit hash
+    /// collision would silently alias two profiles, but at the cache
+    /// sizes this facade sees (thousands of entries) the probability is
+    /// ~2⁻⁴⁰ — far below any simulated effect.
+    cache: BTreeMap<u64, ThroughputProfile>,
     pub profile_runs: usize,
 }
 
@@ -53,16 +60,19 @@ impl Profiler {
         &self.model
     }
 
-    fn key(w: &Workload, gpus: usize, islands: usize, neighbors: usize) -> String {
-        let mut ranks = String::new();
-        for r in &w.ranks {
-            ranks.push_str(&r.to_string());
-            ranks.push(',');
+    fn key(w: &Workload, gpus: usize, islands: usize, neighbors: usize) -> u64 {
+        let mut h = FNV_OFFSET;
+        fnv1a_mix_bytes(&mut h, w.model.name.as_bytes());
+        fnv1a_mix(&mut h, w.ranks.len() as u64);
+        for &r in &w.ranks {
+            fnv1a_mix(&mut h, r as u64);
         }
-        format!(
-            "{}|{ranks}|{}|{}|{gpus}|{islands}|{neighbors}",
-            w.model.name, w.batch_per_adapter, w.seq_len
-        )
+        fnv1a_mix(&mut h, w.batch_per_adapter as u64);
+        fnv1a_mix(&mut h, w.seq_len as u64);
+        fnv1a_mix(&mut h, gpus as u64);
+        fnv1a_mix(&mut h, islands as u64);
+        fnv1a_mix(&mut h, neighbors as u64);
+        h
     }
 
     /// Islands a placement spans under this profiler's topology (1 when

@@ -64,6 +64,7 @@ impl ServiceConfig {
             island_size: self.island_size,
             preempt_on_arrival: self.preempt_on_arrival,
             pricing: self.pricing,
+            tuning: crate::sched::inter::SchedTuning::default(),
             run: self.run.clone(),
             gpu: self.gpu.clone(),
             n_slots: self.n_slots,

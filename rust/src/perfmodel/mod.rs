@@ -78,11 +78,18 @@ use crate::parallel::workload::{StepBreakdown, Strategy, Workload};
 pub struct StepTimeModel {
     gpu: GpuSpec,
     topo: Topology,
+    /// The device as a cross-island collective sees it (`link_bw`
+    /// divided by the topology's inter-island penalty), built once at
+    /// construction so the pricing hot path never clones a `GpuSpec`
+    /// (whose `name` is a heap `String`) per query.
+    derated: GpuSpec,
 }
 
 impl StepTimeModel {
     pub fn new(gpu: GpuSpec, topo: Topology) -> StepTimeModel {
-        StepTimeModel { gpu, topo }
+        let mut derated = gpu.clone();
+        derated.link_bw = gpu.link_bw / topo.inter_island_penalty;
+        StepTimeModel { gpu, topo, derated }
     }
 
     /// A model with no island structure (one flat NVLink domain): every
@@ -90,10 +97,7 @@ impl StepTimeModel {
     /// nominal path.  This is what placement-agnostic callers (the
     /// Profiler's default, `SimBackend`) use.
     pub fn nominal(gpu: GpuSpec) -> StepTimeModel {
-        StepTimeModel {
-            topo: Topology::flat(0),
-            gpu,
-        }
+        StepTimeModel::new(gpu, Topology::flat(0))
     }
 
     pub fn gpu(&self) -> &GpuSpec {
@@ -109,14 +113,12 @@ impl StepTimeModel {
     /// crosses islands; everything else is per-GPU and unchanged.
     /// Placements outside the topology's index range (e.g. against a
     /// [`StepTimeModel::nominal`] model) price at full bandwidth.
-    fn effective_gpu(&self, placement: Option<&Placement>) -> GpuSpec {
+    /// Returns a borrow of one of the two precomputed specs — zero
+    /// allocations per query.
+    fn effective_gpu(&self, placement: Option<&Placement>) -> &GpuSpec {
         match placement {
-            Some(p) if self.topo.contains(p) && self.topo.is_cross_island(p) => {
-                let mut g = self.gpu.clone();
-                g.link_bw = self.topo.effective_link_bw(&self.gpu, p);
-                g
-            }
-            _ => self.gpu.clone(),
+            Some(p) if self.topo.contains(p) && self.topo.is_cross_island(p) => &self.derated,
+            _ => &self.gpu,
         }
     }
 
@@ -131,7 +133,7 @@ impl StepTimeModel {
         ctx: &ContentionCtx,
     ) -> StepBreakdown {
         let gpu = self.effective_gpu(placement);
-        let mut b = Alto.step_time(w, &gpu, p_gpus);
+        let mut b = Alto.step_time(w, gpu, p_gpus);
         let slow = fabric_slowdown(ctx);
         if slow != 1.0 {
             b.comm_s *= slow;
@@ -174,7 +176,27 @@ impl StepTimeModel {
         placement: Option<&Placement>,
         ctx: &ContentionCtx,
     ) -> f64 {
-        let nominal = Alto.step_time(w, &self.gpu, p_gpus).total();
+        self.charge_factor_given_nominal(w, p_gpus, placement, ctx, self.nominal_step_total(w, p_gpus))
+    }
+
+    /// Nominal (single-island, uncontended) critical-path seconds of one
+    /// step — the denominator of [`StepTimeModel::charge_factor`].  The
+    /// scheduler computes this once per task and reuses it across every
+    /// re-pricing of that task (the value never changes mid-run).
+    pub fn nominal_step_total(&self, w: &Workload, p_gpus: usize) -> f64 {
+        Alto.step_time(w, &self.gpu, p_gpus).total()
+    }
+
+    /// [`StepTimeModel::charge_factor`] with the nominal denominator
+    /// supplied by the caller (who cached `nominal_step_total`).
+    pub fn charge_factor_given_nominal(
+        &self,
+        w: &Workload,
+        p_gpus: usize,
+        placement: Option<&Placement>,
+        ctx: &ContentionCtx,
+        nominal: f64,
+    ) -> f64 {
         if nominal <= 0.0 {
             return 1.0;
         }

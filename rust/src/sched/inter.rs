@@ -39,16 +39,47 @@
 //! on `cluster::comm::p2p_time`).  A single-island placement with an
 //! empty neighborhood prices at exactly 1.0, so unpriced replays stay
 //! bit-identical to the legacy clock.
+//!
+//! ## Hot-path complexity ([`SchedTuning`])
+//!
+//! Three structures keep the per-event cost O(dirty), not O(n):
+//!
+//! * **Completion-ordered index** — `running` is mirrored into a
+//!   `BTreeSet<(completion bits, id)>`, so `peek_next_completion` /
+//!   `complete_next` are O(log n) instead of a linear scan.  (IEEE-754
+//!   bit order equals numeric order for the non-negative completions the
+//!   clock produces, and the id tiebreak is preserved.)
+//! * **Per-island resident index + dirty set** — every island tracks
+//!   which running tasks hold GPUs on it.  A replan marks only the
+//!   islands whose residents changed (the islands of placements
+//!   allocated or released since the last re-pricing), and
+//!   `reprice_running` visits only the runners resident on a dirty
+//!   island.  A runner not on any dirty island has an unchanged
+//!   `ContentionCtx`, hence an unchanged factor — exactly the tasks the
+//!   full recompute would have skipped, so the event stream is bitwise
+//!   identical (the property suite pins this against the retained
+//!   [`SchedTuning::reference`] full-recompute mode).
+//! * **Deep-queue plan cache** — waiting sets at or below
+//!   [`SchedTuning::deep_queue_threshold`] replan exactly as before
+//!   (bit-identical).  Beyond it, the makespan-aware policies switch to
+//!   an anytime path: the longest [`DEEP_HEAD`] tasks are solved by
+//!   [`solver::solve_anytime`] (dominance pruning + node budget +
+//!   warm start from the previous plan's surviving prefix, degrading to
+//!   the LPT incumbent on budget exhaustion), the tail follows in LPT
+//!   order, and the resulting priority order is *cached* until the
+//!   waiting-set membership grows — completion-triggered replans reuse
+//!   the surviving prefix instead of re-solving.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::cluster::{PlacePolicy, Placement, SimCluster};
 use crate::parallel::workload::Workload;
 use crate::perfmodel::{ContentionCtx, StepTimeModel};
+use crate::util::small::SmallVec;
 
-use super::solver::{self, SchedTask, Schedule};
+use super::solver::{self, AnytimeCfg, SchedTask, Schedule};
 
 /// Scheduling policy for the ablations (Fig 5 / Fig 12).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -68,6 +99,55 @@ impl Policy {
             Policy::Fcfs => solver::fcfs_schedule(tasks, gpus),
             Policy::Lpt => solver::lpt_schedule(tasks, gpus),
         })
+    }
+}
+
+/// Head-window width of the deep-queue anytime plan: the longest
+/// `DEEP_HEAD` waiting tasks are ordered by the budgeted exact solver,
+/// the rest follow in LPT order.
+pub const DEEP_HEAD: usize = 12;
+
+/// Performance switches for the scheduling hot path.  The defaults are
+/// the optimized production path; [`SchedTuning::reference`] retains the
+/// pre-optimization algorithms (full-fleet re-pricing, unbudgeted exact
+/// replans at every depth) for the equivalence property suite and the
+/// scale benchmark's before/after measurement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SchedTuning {
+    /// Re-price only runners whose island neighborhood actually changed
+    /// (the dirty-set scheme); `false` re-derives every runner's factor
+    /// on every replan, as the pre-optimization scheduler did.
+    pub incremental_reprice: bool,
+    /// Waiting-set depth beyond which `Optimal`/`Lpt` switch from the
+    /// exact per-event replan to the anytime deep-queue path.  The
+    /// default keeps every queue the exact solver was previously usable
+    /// on bit-identical; `usize::MAX` restores the legacy behavior at
+    /// all depths.
+    pub deep_queue_threshold: usize,
+    /// Node budget handed to [`solver::solve_anytime`] per head solve on
+    /// the deep-queue path.
+    pub solver_node_budget: usize,
+}
+
+impl Default for SchedTuning {
+    fn default() -> SchedTuning {
+        SchedTuning {
+            incremental_reprice: true,
+            deep_queue_threshold: 16,
+            solver_node_budget: 2_000,
+        }
+    }
+}
+
+impl SchedTuning {
+    /// The pre-optimization reference: full-fleet re-pricing and
+    /// legacy exact replanning at every queue depth.
+    pub fn reference() -> SchedTuning {
+        SchedTuning {
+            incremental_reprice: false,
+            deep_queue_threshold: usize::MAX,
+            solver_node_budget: usize::MAX,
+        }
     }
 }
 
@@ -174,6 +254,10 @@ struct LiveTask {
     run_charge: f64,
     /// Wall-seconds the task has actually held GPUs (charged GPU time).
     charged_runtime: f64,
+    /// Memoized nominal step seconds of the task's shape — the
+    /// denominator of every price factor, which never changes mid-run
+    /// (0.0 = not computed yet; filled at submit or first start).
+    nominal_step: f64,
 }
 
 impl LiveTask {
@@ -219,6 +303,14 @@ pub struct PreemptDecision {
     pub placement: Placement,
 }
 
+/// Cached deep-queue priority order: reused verbatim (filtered to the
+/// surviving ids) until the waiting-set membership grows.
+#[derive(Debug, Clone)]
+struct PlanCache {
+    members: BTreeSet<usize>,
+    order: Vec<usize>,
+}
+
 /// Event-driven cluster scheduler simulation: feed it tasks (arrival
 /// events) and it plays out the timeline, replanning on arrivals and
 /// completions, returning the realized makespan.
@@ -229,12 +321,30 @@ pub struct InterTaskScheduler {
     /// Allow higher-priority arrivals to evict the youngest
     /// strictly-lower-priority running tasks when they cannot fit.
     pub enable_preemption: bool,
+    /// Hot-path switches (incremental re-pricing, deep-queue planning).
+    pub tuning: SchedTuning,
     cluster: SimCluster,
     /// Duration pricing (None ⇒ the legacy placement-blind clock).
     pricer: Option<Pricer>,
+    /// Does the pricer's topology match the cluster's?  (It always does
+    /// in the harness; a mismatched model disables the island-index
+    /// contention fast path so grouping stays faithful to the model.)
+    topo_matches: bool,
     tasks: BTreeMap<usize, LiveTask>,
     clock: f64,
-    running: Vec<(usize, f64)>, // (task id, completion time)
+    /// Running tasks: id → completion time (source of truth).
+    running: BTreeMap<usize, f64>,
+    /// Completion-ordered mirror of `running`: (completion bits, id).
+    completions: BTreeSet<(u64, usize)>,
+    /// Waiting tasks (submitted or evicted, not yet running/finished).
+    queued: BTreeSet<usize>,
+    /// Per-island resident index: island → (running task id → GPUs it
+    /// holds on that island).
+    residents: Vec<BTreeMap<usize, usize>>,
+    /// Islands whose resident set changed since the last re-pricing.
+    dirty: BTreeSet<usize>,
+    /// Deep-queue plan cache (makespan-aware policies only).
+    plan_cache: Option<PlanCache>,
     /// Start decisions since the last `drain_started`.
     started_log: Vec<StartDecision>,
     /// Preemption decisions since the last `drain_preempted`.
@@ -246,6 +356,13 @@ pub struct InterTaskScheduler {
     pub preemptions: usize,
     /// Σ one-off checkpoint-transfer wall seconds charged to migrations.
     pub migration_charge: f64,
+    /// Deep-queue plans taken (waiting set exceeded the threshold).
+    pub deep_plans: usize,
+    /// Deep-queue plans that had to re-solve (cache miss: new arrivals).
+    pub deep_solves: usize,
+    /// Head solves that ran out of node budget and fell back to the
+    /// LPT-seeded incumbent.
+    pub solver_exhausted: usize,
 }
 
 impl InterTaskScheduler {
@@ -256,32 +373,53 @@ impl InterTaskScheduler {
 
     /// Schedule over an explicit cluster (topology included).
     pub fn with_cluster(cluster: SimCluster, policy: Policy) -> InterTaskScheduler {
+        let n_islands = cluster.topo.n_islands();
         InterTaskScheduler {
             policy,
             place: PlacePolicy::IslandFirst,
             enable_preemption: false,
+            tuning: SchedTuning::default(),
             cluster,
             pricer: None,
+            topo_matches: false,
             tasks: BTreeMap::new(),
             clock: 0.0,
-            running: Vec::new(),
+            running: BTreeMap::new(),
+            completions: BTreeSet::new(),
+            queued: BTreeSet::new(),
+            residents: vec![BTreeMap::new(); n_islands],
+            dirty: BTreeSet::new(),
+            plan_cache: None,
             started_log: Vec::new(),
             preempted_log: Vec::new(),
             repriced_log: Vec::new(),
             replans: 0,
             preemptions: 0,
             migration_charge: 0.0,
+            deep_plans: 0,
+            deep_solves: 0,
+            solver_exhausted: 0,
         }
     }
 
     /// Attach a duration pricer: subsequent starts charge placement comm
     /// cost and co-location contention to the clock per `charge`.
+    /// Safe to call mid-run: memoized per-task nominal denominators are
+    /// reset (they belonged to the previous model) and every island is
+    /// marked dirty so the next replan re-prices the whole fleet under
+    /// the new model — keeping the incremental scheme equivalent to the
+    /// full recompute regardless of when the pricer was swapped.
     pub fn set_pricer(&mut self, model: StepTimeModel, charge: Pricing) {
+        self.topo_matches = model.topo() == &self.cluster.topo;
         self.pricer = if charge.any() {
             Some(Pricer { model, charge })
         } else {
             None
         };
+        for t in self.tasks.values_mut() {
+            t.nominal_step = 0.0;
+        }
+        self.dirty.extend(0..self.residents.len());
     }
 
     pub fn total_gpus(&self) -> usize {
@@ -349,6 +487,13 @@ impl InterTaskScheduler {
             self.clock = s.arrival;
         }
         let adapters = s.shape.as_ref().map(|sh| sh.adapters.max(1)).unwrap_or(1);
+        // memoize the price factor's nominal denominator once per task
+        let nominal_step = match (&self.pricer, &s.shape) {
+            (Some(pr), Some(shape)) if s.gpus > 1 => {
+                pr.model.nominal_step_total(&shape.workload, s.gpus)
+            }
+            _ => 0.0,
+        };
         self.tasks.insert(
             s.id,
             LiveTask {
@@ -368,8 +513,10 @@ impl InterTaskScheduler {
                 run_factor: 1.0,
                 run_charge: 0.0,
                 charged_runtime: 0.0,
+                nominal_step,
             },
         );
+        self.queued.insert(s.id);
         self.replan(true); // arrival: preemption (if enabled) may fire
     }
 
@@ -418,9 +565,43 @@ impl InterTaskScheduler {
             .sum()
     }
 
+    // --- island resident index ------------------------------------------
+
+    /// Record `id` holding `p` on the island index.
+    fn residents_add(&mut self, id: usize, p: &Placement) {
+        for &g in p.gpus() {
+            let isl = self.cluster.topo.island_of(g);
+            *self.residents[isl].entry(id).or_insert(0) += 1;
+        }
+    }
+
+    /// Remove `id`'s hold of `p` from the island index.
+    fn residents_remove(&mut self, id: usize, p: &Placement) {
+        for &g in p.gpus() {
+            let isl = self.cluster.topo.island_of(g);
+            if let Some(cnt) = self.residents[isl].get_mut(&id) {
+                *cnt -= 1;
+                if *cnt == 0 {
+                    self.residents[isl].remove(&id);
+                }
+            }
+        }
+    }
+
+    /// Mark the islands `p` touches as needing re-pricing.
+    fn mark_dirty(&mut self, p: &Placement) {
+        for &g in p.gpus() {
+            self.dirty.insert(self.cluster.topo.island_of(g));
+        }
+    }
+
     /// Co-location context a running task currently experiences: every
     /// other running task holding GPUs on the NVLink islands this task's
-    /// placement touches contributes its resident adapters.
+    /// placement touches contributes its resident adapters.  Served from
+    /// the per-island resident index (O(neighbors), zero heap
+    /// allocations for ≤ 8-island placements); a pricer whose topology
+    /// differs from the cluster's falls back to the full running scan
+    /// grouped by the *model's* islands.
     fn contention_of(&self, id: usize) -> ContentionCtx {
         let Some(pr) = &self.pricer else {
             return ContentionCtx::empty();
@@ -432,33 +613,64 @@ impl InterTaskScheduler {
         if topo.is_empty() || p.is_empty() || !topo.contains(p) {
             return ContentionCtx::empty();
         }
-        let mut mine = vec![false; topo.n_islands()];
-        for &g in p.gpus() {
-            mine[topo.island_of(g)] = true;
-        }
-        let mut ctx = ContentionCtx::empty();
-        // only running tasks hold placements, so scan the running set,
-        // not every task ever submitted (the sums are order-invariant)
-        for &(oid, _) in &self.running {
-            if oid == id {
-                continue;
+        if self.topo_matches {
+            let mut mine: SmallVec<usize, 8> = SmallVec::new();
+            for &g in p.gpus() {
+                let isl = topo.island_of(g);
+                if !mine.contains(&isl) {
+                    mine.push(isl);
+                }
             }
-            let t = &self.tasks[&oid];
-            let Some(q) = t.placement.as_ref() else { continue };
-            if !topo.contains(q) {
-                continue;
+            // distinct neighbors with their GPU counts on my islands
+            // (islands are disjoint, so per-island counts just add up)
+            let mut acc: SmallVec<(usize, usize), 16> = SmallVec::new();
+            for &isl in mine.iter() {
+                for (&oid, &cnt) in &self.residents[isl] {
+                    if oid == id {
+                        continue;
+                    }
+                    if let Some(e) = acc.iter_mut().find(|(o, _)| *o == oid) {
+                        e.1 += cnt;
+                    } else {
+                        acc.push((oid, cnt));
+                    }
+                }
             }
-            let shared = q
-                .gpus()
-                .iter()
-                .filter(|&&g| mine[topo.island_of(g)])
-                .count();
-            if shared > 0 {
-                ctx.neighbor_adapters += t.adapters;
+            let mut ctx = ContentionCtx::empty();
+            for &(oid, shared) in acc.iter() {
+                ctx.neighbor_adapters += self.tasks[&oid].adapters;
                 ctx.neighbor_gpus += shared;
             }
+            ctx
+        } else {
+            // the sums are order-invariant, so scanning the running map
+            // (id order) matches the legacy start-order scan bitwise
+            let mut mine = vec![false; topo.n_islands()];
+            for &g in p.gpus() {
+                mine[topo.island_of(g)] = true;
+            }
+            let mut ctx = ContentionCtx::empty();
+            for &oid in self.running.keys() {
+                if oid == id {
+                    continue;
+                }
+                let t = &self.tasks[&oid];
+                let Some(q) = t.placement.as_ref() else { continue };
+                if !topo.contains(q) {
+                    continue;
+                }
+                let shared = q
+                    .gpus()
+                    .iter()
+                    .filter(|&&g| mine[topo.island_of(g)])
+                    .count();
+                if shared > 0 {
+                    ctx.neighbor_adapters += t.adapters;
+                    ctx.neighbor_gpus += shared;
+                }
+            }
+            ctx
         }
-        ctx
     }
 
     /// Wall-seconds per nominal second for a task's *current* placement
@@ -482,7 +694,17 @@ impl InterTaskScheduler {
         } else {
             ContentionCtx::empty()
         };
-        pr.model.charge_factor(&shape.workload, t.gpus, placement, &ctx)
+        if t.nominal_step > 0.0 {
+            pr.model.charge_factor_given_nominal(
+                &shape.workload,
+                t.gpus,
+                placement,
+                &ctx,
+                t.nominal_step,
+            )
+        } else {
+            pr.model.charge_factor(&shape.workload, t.gpus, placement, &ctx)
+        }
     }
 
     /// Priced estimate factor for a task that is *not running yet*: the
@@ -509,8 +731,18 @@ impl InterTaskScheduler {
         else {
             return 1.0;
         };
-        pr.model
-            .charge_factor(&shape.workload, t.gpus, Some(&p), &ContentionCtx::empty())
+        if t.nominal_step > 0.0 {
+            pr.model.charge_factor_given_nominal(
+                &shape.workload,
+                t.gpus,
+                Some(&p),
+                &ContentionCtx::empty(),
+                t.nominal_step,
+            )
+        } else {
+            pr.model
+                .charge_factor(&shape.workload, t.gpus, Some(&p), &ContentionCtx::empty())
+        }
     }
 
     /// One-off checkpoint-transfer charge for a resume that changed
@@ -532,12 +764,17 @@ impl InterTaskScheduler {
             .migration_cost(&shape.workload.model, shape.rank, shape.adapters, prev, now)
     }
 
-    /// Re-derive every running task's completion from its *current*
-    /// neighborhood.  Called after each replan: any start, completion,
+    /// Re-derive running tasks' completions from their *current*
+    /// neighborhoods.  Called after each replan: any start, completion,
     /// eviction or migration changes who shares an island with whom, and
     /// the survivors' remaining wall time must follow the model.  Tasks
     /// are visited in id order; a task whose factor is unchanged is left
     /// untouched (bitwise), so unaffected timelines stay identical.
+    ///
+    /// With `tuning.incremental_reprice` (the default) only runners
+    /// resident on a dirty island are visited — a runner off every dirty
+    /// island has an unchanged neighborhood, hence the unchanged factor
+    /// the full recompute would have skipped anyway.
     fn reprice_running(&mut self) {
         let applies = self
             .pricer
@@ -545,10 +782,19 @@ impl InterTaskScheduler {
             .map(|p| p.charge.contention)
             .unwrap_or(false);
         if !applies {
+            self.dirty.clear();
             return;
         }
-        let mut ids: Vec<usize> = self.running.iter().map(|&(id, _)| id).collect();
-        ids.sort_unstable();
+        let ids: Vec<usize> = if self.tuning.incremental_reprice && self.topo_matches {
+            let mut set: BTreeSet<usize> = BTreeSet::new();
+            for &isl in &self.dirty {
+                set.extend(self.residents[isl].keys().copied());
+            }
+            set.into_iter().collect()
+        } else {
+            self.running.keys().copied().collect()
+        };
+        self.dirty.clear();
         for id in ids {
             let new_factor = self.price_factor(id);
             if new_factor == self.tasks[&id].run_factor {
@@ -570,11 +816,13 @@ impl InterTaskScheduler {
             let completion = clock + charge_left + t.actual_remaining * new_factor;
             let entry = self
                 .running
-                .iter_mut()
-                .find(|(rid, _)| *rid == id)
+                .get_mut(&id)
                 .expect("repriced task is running");
-            if entry.1 != completion {
-                entry.1 = completion;
+            if *entry != completion {
+                debug_assert!(completion >= 0.0, "negative completion {completion}");
+                self.completions.remove(&(entry.to_bits(), id));
+                *entry = completion;
+                self.completions.insert((completion.to_bits(), id));
                 self.repriced_log.push(RepriceDecision {
                     id,
                     time: clock,
@@ -585,14 +833,18 @@ impl InterTaskScheduler {
     }
 
     /// Waiting tasks, as solver inputs (estimated remaining durations).
+    /// Served from the waiting-queue index — O(queued), not O(every task
+    /// ever submitted) — in the same ascending-id order as before.
     fn waiting(&self) -> Vec<SchedTask> {
-        self.tasks
+        self.queued
             .iter()
-            .filter(|(_, t)| t.started_at.is_none() && t.finished_at.is_none())
-            .map(|(&id, t)| SchedTask {
-                id,
-                duration: t.est_remaining,
-                gpus: t.gpus,
+            .map(|&id| {
+                let t = &self.tasks[&id];
+                SchedTask {
+                    id,
+                    duration: t.est_remaining,
+                    gpus: t.gpus,
+                }
             })
             .collect()
     }
@@ -612,8 +864,19 @@ impl InterTaskScheduler {
             .cluster
             .allocate_with(gpus, policy)
             .expect("replan checked capacity before starting");
+        self.queued.remove(&id);
         let t = self.tasks.get_mut(&id).unwrap();
         t.placement = Some(p.clone());
+        self.residents_add(id, &p);
+        self.mark_dirty(&p);
+        // fill the memoized nominal denominator for tasks submitted
+        // before the pricer was attached
+        if self.tasks[&id].nominal_step == 0.0 && gpus > 1 {
+            if let (Some(pr), Some(shape)) = (&self.pricer, &self.tasks[&id].shape) {
+                let v = pr.model.nominal_step_total(&shape.workload, gpus);
+                self.tasks.get_mut(&id).unwrap().nominal_step = v;
+            }
+        }
         // price the run segment: placement/contention slowdown plus a
         // one-off checkpoint transfer when this resume moved GPUs
         let factor = self.price_factor(id);
@@ -623,7 +886,11 @@ impl InterTaskScheduler {
         t.run_factor = factor;
         t.run_charge = charge;
         let completion = clock + charge + t.actual_remaining * factor;
-        self.running.push((id, completion));
+        // the completion index orders by IEEE-754 bits, which equals
+        // numeric order only for non-negative times
+        debug_assert!(completion >= 0.0, "negative completion {completion}");
+        self.running.insert(id, completion);
+        self.completions.insert((completion.to_bits(), id));
         self.started_log.push(StartDecision {
             id,
             time: clock,
@@ -636,12 +903,11 @@ impl InterTaskScheduler {
     /// durations by the *nominal* progress it made (wall time through
     /// the current price factor), and return it to the waiting queue.
     fn evict(&mut self, id: usize) {
-        let idx = self
+        let completion = self
             .running
-            .iter()
-            .position(|&(rid, _)| rid == id)
+            .remove(&id)
             .expect("evicting a task that is not running");
-        self.running.remove(idx);
+        self.completions.remove(&(completion.to_bits(), id));
         let clock = self.clock;
         let t = self.tasks.get_mut(&id).unwrap();
         t.started_at.take().expect("running task has a start");
@@ -658,6 +924,12 @@ impl InterTaskScheduler {
         self.cluster
             .release(&p)
             .expect("scheduler-held placement releases cleanly");
+        self.residents_remove(id, &p);
+        self.mark_dirty(&p);
+        self.queued.insert(id);
+        // the evicted task's shrunken duration invalidates any cached
+        // deep-queue order it appears in
+        self.plan_cache = None;
         self.preemptions += 1;
         self.preempted_log.push(PreemptDecision {
             id,
@@ -686,7 +958,7 @@ impl InterTaskScheduler {
             self.plan_pass();
         }
         // the starts/evictions above changed who shares an island with
-        // whom — re-derive every survivor's completion from the model
+        // whom — re-derive the affected survivors' completions
         self.reprice_running();
     }
 
@@ -718,13 +990,107 @@ impl InterTaskScheduler {
                 // their estimated completion lands before that shadow
                 // time — wide tasks are never starved by narrow ones.
                 let waiting = self.waiting();
-                if !waiting.is_empty() {
+                if waiting.is_empty() {
+                    self.plan_cache = None;
+                    return;
+                }
+                if waiting.len() <= self.tuning.deep_queue_threshold {
+                    self.plan_cache = None;
                     if let Ok(plan) = self.policy.plan(&waiting, self.cluster.total()) {
                         self.start_per_plan(&plan);
                     }
+                } else {
+                    self.plan_deep(waiting);
                 }
             }
         }
+    }
+
+    /// Deep-queue planning: LPT-order the waiting set, solve only the
+    /// head window with the anytime solver (warm-started from the
+    /// previous plan), append the tail in LPT order, and cache the
+    /// resulting priority order until new tasks arrive — the "replan
+    /// incrementally from the surviving prefix" path.
+    fn plan_deep(&mut self, mut waiting: Vec<SchedTask>) {
+        self.deep_plans += 1;
+        // membership check is order-independent, so the cache-hit path
+        // (every completion-triggered replan) never pays the sort below
+        let cached_ok = self
+            .plan_cache
+            .as_ref()
+            .is_some_and(|c| waiting.iter().all(|t| c.members.contains(&t.id)));
+        if !cached_ok {
+            self.deep_solves += 1;
+            // LPT priority order: longest first, ties on the lower id
+            waiting.sort_by(|a, b| {
+                b.duration.partial_cmp(&a.duration).unwrap().then(a.id.cmp(&b.id))
+            });
+            let order: Vec<usize> = match self.policy {
+                Policy::Optimal => {
+                    let head_n = DEEP_HEAD.min(waiting.len());
+                    let head = &waiting[..head_n];
+                    // warm start: the previous plan's surviving prefix
+                    // re-listed over the head, fresh arrivals appended
+                    let warm = self.plan_cache.as_ref().map(|c| {
+                        let mut warm_order: Vec<usize> = Vec::with_capacity(head_n);
+                        for &id in &c.order {
+                            if let Some(pos) = head.iter().position(|t| t.id == id) {
+                                warm_order.push(pos);
+                            }
+                        }
+                        for (pos, t) in head.iter().enumerate() {
+                            if !c.members.contains(&t.id) {
+                                warm_order.push(pos);
+                            }
+                        }
+                        solver::list_schedule(head, self.cluster.total(), &warm_order)
+                    });
+                    let cfg = AnytimeCfg {
+                        node_budget: self.tuning.solver_node_budget,
+                        dominance: true,
+                        warm,
+                    };
+                    match solver::solve_anytime(head, self.cluster.total(), cfg) {
+                        Ok(out) => {
+                            if out.exhausted {
+                                self.solver_exhausted += 1;
+                            }
+                            let mut head_order: Vec<(f64, usize)> = out
+                                .schedule
+                                .placements
+                                .iter()
+                                .map(|p| (p.start, p.id))
+                                .collect();
+                            head_order.sort_by(|a, b| {
+                                a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+                            });
+                            head_order
+                                .into_iter()
+                                .map(|(_, id)| id)
+                                .chain(waiting[head_n..].iter().map(|t| t.id))
+                                .collect()
+                        }
+                        Err(_) => waiting.iter().map(|t| t.id).collect(),
+                    }
+                }
+                Policy::Lpt => waiting.iter().map(|t| t.id).collect(),
+                _ => unreachable!("deep path serves only makespan-aware policies"),
+            };
+            self.plan_cache = Some(PlanCache {
+                members: order.iter().copied().collect(),
+                order,
+            });
+        }
+        let order: Vec<(usize, usize)> = self
+            .plan_cache
+            .as_ref()
+            .unwrap()
+            .order
+            .iter()
+            .filter(|id| self.queued.contains(*id))
+            .map(|&id| (id, self.tasks[&id].gpus))
+            .collect();
+        self.start_easy(&order);
     }
 
     fn start_per_plan(&mut self, plan: &Schedule) {
@@ -734,15 +1100,31 @@ impl InterTaskScheduler {
             .map(|p| (p.start, p.id, p.gpus))
             .collect();
         order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let order: Vec<(usize, usize)> = order.into_iter().map(|(_, id, g)| (id, g)).collect();
+        self.start_easy(&order);
+    }
+
+    /// EASY backfill down a priority order of (id, gpus): start in
+    /// order; when the head does not fit it reserves the earliest
+    /// estimated release time, and later tasks may only jump it if their
+    /// priced estimate finishes before that shadow time.
+    fn start_easy(&mut self, order: &[(usize, usize)]) {
         let mut shadow: Option<f64> = None;
-        for (_, id, gpus) in order {
+        for &(id, gpus) in order {
+            if shadow.is_some() && self.cluster.available() == 0 {
+                // nothing below can start: the remaining iterations are
+                // pure no-ops, so skipping them changes no decision
+                break;
+            }
             if let Some(sh) = shadow {
                 // backfill window: must fit now AND finish — by the
                 // *priced* estimate, since the shadow releases are priced
                 // too — before the head's reservation
-                let est = self.tasks[&id].est_remaining * self.candidate_factor(id);
-                if gpus <= self.cluster.available() && self.clock + est <= sh + 1e-9 {
-                    self.start_task(id);
+                if gpus <= self.cluster.available() {
+                    let est = self.tasks[&id].est_remaining * self.candidate_factor(id);
+                    if self.clock + est <= sh + 1e-9 {
+                        self.start_task(id);
+                    }
                 }
             } else if gpus <= self.cluster.available() {
                 self.start_task(id);
@@ -751,8 +1133,8 @@ impl InterTaskScheduler {
                 // release time that frees enough GPUs
                 let mut rel: Vec<(f64, usize)> = self
                     .running
-                    .iter()
-                    .map(|&(rid, _)| {
+                    .keys()
+                    .map(|&rid| {
                         // estimated release: the current constant-rate
                         // segment's anchor plus any unserved transfer
                         // charge plus the estimated remainder at the
@@ -790,17 +1172,19 @@ impl InterTaskScheduler {
         loop {
             // highest-priority waiting task (ties: lowest id)
             let blocked = self
-                .tasks
+                .queued
                 .iter()
-                .filter(|(_, t)| t.started_at.is_none() && t.finished_at.is_none())
-                .map(|(&id, t)| (t.priority, id, t.gpus))
+                .map(|&id| {
+                    let t = &self.tasks[&id];
+                    (t.priority, id, t.gpus)
+                })
                 .max_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
             let Some((prio, id, need)) = blocked else { return acted };
             // must outrank someone running to override the queue policy
             let outranks_somebody = self
                 .running
-                .iter()
-                .any(|&(rid, _)| self.tasks[&rid].priority < prio);
+                .keys()
+                .any(|rid| self.tasks[rid].priority < prio);
             if !outranks_somebody {
                 return acted;
             }
@@ -816,12 +1200,12 @@ impl InterTaskScheduler {
             // ahead of the task's own Start in the drained event order.
             let mut victims: Vec<(usize, f64)> = self
                 .running
-                .iter()
-                .filter(|&&(rid, _)| {
+                .keys()
+                .filter(|&&rid| {
                     let t = &self.tasks[&rid];
                     t.priority < prio && t.started_at.unwrap() < self.clock
                 })
-                .map(|&(rid, _)| (rid, self.tasks[&rid].started_at.unwrap()))
+                .map(|&rid| (rid, self.tasks[&rid].started_at.unwrap()))
                 .collect();
             // youngest first: latest start, ties broken on higher id
             victims.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(b.0.cmp(&a.0)));
@@ -841,39 +1225,63 @@ impl InterTaskScheduler {
     }
 
     /// The next completion event, if any: (task id, completion time).
-    /// Ties break on the lower task id for determinism.
+    /// Ties break on the lower task id for determinism.  O(log n) via
+    /// the completion-ordered index.
     pub fn peek_next_completion(&self) -> Option<(usize, f64)> {
-        self.running
-            .iter()
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)))
-            .copied()
+        self.completions
+            .first()
+            .map(|&(bits, id)| (id, f64::from_bits(bits)))
     }
 
     /// Process the next completion event: advance the clock to it, free
     /// the task's GPUs and replan (backfill instantly).  Returns the
-    /// completed (task id, time), or None when nothing is running.
-    pub fn complete_next(&mut self) -> Option<(usize, f64)> {
-        let (id, when) = self.peek_next_completion()?;
-        let idx = self.running.iter().position(|&(rid, _)| rid == id).unwrap();
-        self.running.remove(idx);
+    /// completed (task id, time), or `Ok(None)` when nothing is running.
+    /// Internal-state inconsistencies (a completion the task map does
+    /// not corroborate, a double-released placement) surface as
+    /// structured errors instead of panics, mirroring
+    /// [`SimCluster::release`].  An `Err` means the scheduler's internal
+    /// state was already corrupt; the error is for clean reporting, not
+    /// recovery — the instance should be discarded, as bookkeeping may
+    /// have partially advanced before the inconsistency was detected.
+    pub fn complete_next(&mut self) -> Result<Option<(usize, f64)>> {
+        let Some(&(bits, id)) = self.completions.first() else {
+            return Ok(None);
+        };
+        let when = f64::from_bits(bits);
+        self.completions.remove(&(bits, id));
+        anyhow::ensure!(
+            self.running.remove(&id).is_some(),
+            "completion index names task {id}, which is not running"
+        );
         self.clock = when;
-        let t = self.tasks.get_mut(&id).unwrap();
+        let t = self
+            .tasks
+            .get_mut(&id)
+            .with_context(|| format!("completed task {id} is not in the task table"))?;
+        anyhow::ensure!(t.started_at.is_some(), "completed task {id} was never started");
         t.finished_at = Some(when);
-        debug_assert!(t.started_at.is_some(), "completed task was running");
         t.charged_runtime += when - t.segment_at;
         t.actual_remaining = 0.0;
-        let p = t.placement.take().expect("completed task held a placement");
+        let p = t
+            .placement
+            .take()
+            .with_context(|| format!("completed task {id} holds no placement"))?;
         self.cluster
             .release(&p)
-            .expect("scheduler-held placement releases cleanly");
+            .with_context(|| format!("releasing completed task {id}'s GPUs"))?;
+        self.residents_remove(id, &p);
+        self.mark_dirty(&p);
         self.replan(false); // completion event → backfill instantly
-        Some((id, when))
+        Ok(Some((id, when)))
     }
 
     /// Advance the simulation to the next completion; returns false when
-    /// nothing is running.
+    /// nothing is running.  Panics on internal-state corruption (use
+    /// [`InterTaskScheduler::complete_next`] to observe it as an error).
     pub fn step(&mut self) -> bool {
-        self.complete_next().is_some()
+        self.complete_next()
+            .expect("scheduler state is consistent")
+            .is_some()
     }
 
     /// Play the timeline to completion; returns the realized makespan.
@@ -985,16 +1393,30 @@ mod tests {
         assert!(s.drain_started().is_empty());
         assert_eq!(s.free_gpus(), 0);
         assert_eq!(s.peek_next_completion(), Some((0, 10.0)));
-        assert_eq!(s.complete_next(), Some((0, 10.0)));
+        assert_eq!(s.complete_next().unwrap(), Some((0, 10.0)));
         // the completion freed the GPUs → task 1 starts at t = 10
         let started = s.drain_started();
         assert_eq!(started.len(), 1);
         assert_eq!((started[0].id, started[0].time), (1, 10.0));
         assert_eq!(s.clock(), 10.0);
-        assert!(s.complete_next().is_some());
-        assert!(s.complete_next().is_none());
+        assert!(s.complete_next().unwrap().is_some());
+        assert!(s.complete_next().unwrap().is_none());
         assert!(s.all_done());
         assert_eq!(s.makespan(), 20.0);
+    }
+
+    #[test]
+    fn complete_next_reports_corruption_as_error_not_panic() {
+        let mut s = InterTaskScheduler::new(4, Policy::Optimal);
+        s.submit(0, 2, 10.0, 10.0);
+        // sabotage: drop the running task's placement behind the
+        // scheduler's back — the old code unwrap-panicked here
+        s.tasks.get_mut(&0).unwrap().placement = None;
+        let err = s.complete_next().unwrap_err();
+        assert!(
+            err.to_string().contains("holds no placement"),
+            "unexpected error: {err}"
+        );
     }
 
     #[test]
@@ -1073,6 +1495,60 @@ mod tests {
         let mk = s.run_to_completion();
         assert!(s.all_done());
         assert!(mk > 0.0);
+    }
+
+    #[test]
+    fn deep_queue_optimal_is_usable_and_deterministic() {
+        // 48 tasks at t=0: far past the exact solver's regime — the old
+        // scheduler would grind the 2M-node valve on every event
+        let mut tasks = Vec::new();
+        for i in 0..48 {
+            let g = match i % 8 {
+                0 => 4,
+                1 | 2 => 2,
+                _ => 1,
+            };
+            tasks.push((g, 5.0 + (i % 13) as f64));
+        }
+        let mut s = InterTaskScheduler::new(16, Policy::Optimal);
+        for (i, &(g, d)) in tasks.iter().enumerate() {
+            s.submit(i, g, d, d);
+        }
+        assert!(s.deep_plans > 0, "48 waiting tasks must take the deep path");
+        let mk = s.run_to_completion();
+        assert!(s.all_done());
+        // completion-triggered deep replans reuse the cached surviving
+        // prefix: strictly fewer solves than deep plans
+        assert!(
+            s.deep_solves < s.deep_plans,
+            "cached surviving prefixes must be reused ({} solves / {} deep plans)",
+            s.deep_solves,
+            s.deep_plans
+        );
+        let area: f64 =
+            tasks.iter().map(|&(g, d)| g as f64 * d).sum::<f64>() / 16.0;
+        assert!(mk >= area - 1e-9, "makespan {mk} below the area bound {area}");
+        // pure function of the submissions: a rerun matches bitwise
+        let mut s2 = InterTaskScheduler::new(16, Policy::Optimal);
+        for (i, &(g, d)) in tasks.iter().enumerate() {
+            s2.submit(i, g, d, d);
+        }
+        let mk2 = s2.run_to_completion();
+        assert_eq!(mk.to_bits(), mk2.to_bits());
+        // the realized schedule stays tight: EASY over the anytime plan
+        // keeps the cluster packed, not serialized
+        let serial: f64 = tasks.iter().map(|&(_, d)| d).sum();
+        assert!(mk < serial, "deep path degenerated to serial execution");
+    }
+
+    #[test]
+    fn shallow_queues_never_take_the_deep_path() {
+        let mut s = InterTaskScheduler::new(8, Policy::Optimal);
+        for i in 0..10 {
+            s.submit(i, 1 + (i % 2), 5.0, 5.0);
+        }
+        s.run_to_completion();
+        assert_eq!(s.deep_plans, 0, "10 tasks must replan exactly");
     }
 
     // --- duration pricing -------------------------------------------------
@@ -1179,6 +1655,33 @@ mod tests {
         // charged GPU time covers both tasks' full (priced) runs
         let charged = s.charged_gpu_seconds();
         assert!(charged > 2.0 * (10.0 + 30.0) - 1e-6, "{charged}");
+    }
+
+    #[test]
+    fn incremental_repricing_matches_full_recompute_bitwise() {
+        // two islands, staggered multi-GPU tenants: completions keep
+        // changing island neighborhoods.  The dirty-set scheduler and
+        // the full-recompute reference must drain identical decisions
+        // and charge identical GPU-seconds.
+        let charge = Pricing::default();
+        let run_with = |tuning: SchedTuning| {
+            let mut s = priced_sched(8, 4, charge);
+            s.tuning = tuning;
+            for i in 0..6 {
+                submit_shaped(&mut s, i, 2, 10.0 + 3.0 * i as f64, 2.0 * i as f64, 0);
+            }
+            let mk = s.run_to_completion();
+            (mk, s.drain_started(), s.drain_repriced(), s.charged_gpu_seconds())
+        };
+        let fast = run_with(SchedTuning::default());
+        let slow = run_with(SchedTuning {
+            incremental_reprice: false,
+            ..SchedTuning::default()
+        });
+        assert_eq!(fast.0.to_bits(), slow.0.to_bits(), "makespan drifted");
+        assert_eq!(fast.1, slow.1, "start decisions drifted");
+        assert_eq!(fast.2, slow.2, "reprice decisions drifted");
+        assert_eq!(fast.3.to_bits(), slow.3.to_bits(), "charged GPU-seconds drifted");
     }
 
     #[test]

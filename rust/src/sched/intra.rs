@@ -166,9 +166,13 @@ fn admit_inner(
                             v
                         }
                     };
-                    let mut grown = admitted_ranks.clone();
-                    grown.push(jobs[idx].rank);
-                    let next = pr.throughput(&grown, bs);
+                    // price the grown group in place — no clone per
+                    // rejected candidate; the single unconditional pop
+                    // restores the group either way (the acceptance path
+                    // below re-pushes alongside `admitted`)
+                    admitted_ranks.push(jobs[idx].rank);
+                    let next = pr.throughput(&admitted_ranks, bs);
+                    admitted_ranks.pop();
                     if !pr.clears_gain_bar(current, next) {
                         continue;
                     }

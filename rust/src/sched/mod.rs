@@ -8,13 +8,13 @@ pub mod solver;
 
 pub use inter::{
     InterTaskScheduler, Policy, PreemptDecision, Pricer, Pricing, RepriceDecision,
-    StartDecision, Submission, TaskShape,
+    SchedTuning, StartDecision, Submission, TaskShape,
 };
 pub use intra::{
     admit, admit_priced, backfill, backfill_priced, group_by_batch, AdmissionPlan,
     GroupPricer,
 };
 pub use solver::{
-    fcfs_schedule, lower_bound, lpt_schedule, sjf_schedule, solve, ConcreteSchedule,
-    Placement, SchedTask, Schedule,
+    fcfs_schedule, lower_bound, lpt_schedule, sjf_schedule, solve, solve_anytime,
+    AnytimeCfg, AnytimeOutcome, ConcreteSchedule, Placement, SchedTask, Schedule,
 };

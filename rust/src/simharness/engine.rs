@@ -42,7 +42,7 @@ use crate::coordinator::service::TaskOutcome;
 use crate::coordinator::task_runner::{make_jobs, run_task, RunConfig};
 use crate::data::synth::dataset_profile;
 use crate::perfmodel::{task_workload, StepTimeModel};
-use crate::sched::inter::{InterTaskScheduler, Policy, Pricing, Submission, TaskShape};
+use crate::sched::inter::{InterTaskScheduler, Policy, Pricing, SchedTuning, Submission, TaskShape};
 use crate::sched::intra::{admit_priced, group_by_batch, GroupPricer};
 
 use super::event::{EventKind, EventLog};
@@ -68,6 +68,11 @@ pub struct HarnessConfig {
     /// transfers — all on by default.  [`Pricing::none()`] restores the
     /// legacy placement-blind timeline bit for bit.
     pub pricing: Pricing,
+    /// Scheduling hot-path switches (incremental re-pricing, deep-queue
+    /// anytime planning).  [`SchedTuning::reference()`] retains the
+    /// pre-optimization algorithms for equivalence tests and the scale
+    /// benchmark's before/after measurement.
+    pub tuning: SchedTuning,
     pub run: RunConfig,
     pub gpu: GpuSpec,
     /// Upper bound on co-located adapter slots per executor; the fitted
@@ -85,6 +90,7 @@ impl Default for HarnessConfig {
             island_size: 8,
             preempt_on_arrival: false,
             pricing: Pricing::default(),
+            tuning: SchedTuning::default(),
             run: RunConfig::default(),
             gpu: GpuSpec::h100_sxm5(),
             n_slots: 4,
@@ -305,6 +311,7 @@ impl SimEngine {
         let mut sched = InterTaskScheduler::with_cluster(cluster, self.cfg.policy);
         sched.place = self.cfg.place;
         sched.enable_preemption = self.cfg.preempt_on_arrival;
+        sched.tuning = self.cfg.tuning;
         // pricing inputs: the perfmodel charges each task's placement and
         // neighborhood through its representative executor workload
         let shapes: Option<Vec<TaskShape>> = if self.cfg.pricing.any() {
@@ -368,7 +375,10 @@ impl SimEngine {
                     shape: shapes.as_ref().map(|s| s[i].clone()),
                 });
             } else {
-                let (id, at) = sched.complete_next().expect("peeked completion");
+                let (id, at) = sched
+                    .complete_next()
+                    .context("processing the next completion event")?
+                    .expect("peeked completion");
                 log.record(
                     at,
                     EventKind::Complete {

@@ -7,4 +7,5 @@ pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod small;
 pub mod threadpool;

@@ -1,0 +1,104 @@
+//! Inline small-vector: a fixed-size stack buffer that spills to the
+//! heap only past `N` elements, so bounded-size hot-path collections
+//! (island neighborhoods, contention accumulators) allocate nothing in
+//! the steady state.
+//!
+//! Deliberately minimal — push / iterate / mutate is all the pricing
+//! path needs; this is not a general `Vec` replacement.
+
+/// A vector of `T` that stores its first `N` elements inline.
+#[derive(Debug, Clone)]
+pub struct SmallVec<T: Copy + Default, const N: usize> {
+    buf: [T; N],
+    len: usize,
+    spill: Vec<T>,
+}
+
+impl<T: Copy + Default, const N: usize> Default for SmallVec<T, N> {
+    fn default() -> Self {
+        SmallVec::new()
+    }
+}
+
+impl<T: Copy + Default, const N: usize> SmallVec<T, N> {
+    pub fn new() -> Self {
+        SmallVec {
+            buf: [T::default(); N],
+            len: 0,
+            spill: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len + self.spill.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True iff nothing has spilled to the heap (diagnostics/tests).
+    pub fn is_inline(&self) -> bool {
+        self.spill.is_empty()
+    }
+
+    pub fn push(&mut self, v: T) {
+        if self.len < N {
+            self.buf[self.len] = v;
+            self.len += 1;
+        } else {
+            self.spill.push(v);
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.buf[..self.len].iter().chain(self.spill.iter())
+    }
+
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut T> {
+        self.buf[..self.len].iter_mut().chain(self.spill.iter_mut())
+    }
+
+    pub fn contains(&self, v: &T) -> bool
+    where
+        T: PartialEq,
+    {
+        self.iter().any(|x| x == v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inline_until_capacity() {
+        let mut v: SmallVec<usize, 4> = SmallVec::new();
+        assert!(v.is_empty());
+        for i in 0..4 {
+            v.push(i);
+        }
+        assert!(v.is_inline());
+        assert_eq!(v.len(), 4);
+        v.push(4);
+        assert!(!v.is_inline());
+        assert_eq!(v.len(), 5);
+        let got: Vec<usize> = v.iter().copied().collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+        assert!(v.contains(&4));
+        assert!(!v.contains(&9));
+    }
+
+    #[test]
+    fn iter_mut_reaches_spill() {
+        let mut v: SmallVec<usize, 2> = SmallVec::new();
+        for i in 0..5 {
+            v.push(i);
+        }
+        for x in v.iter_mut() {
+            *x += 10;
+        }
+        let got: Vec<usize> = v.iter().copied().collect();
+        assert_eq!(got, vec![10, 11, 12, 13, 14]);
+    }
+}

@@ -1,0 +1,342 @@
+//! Scheduling hot-path equivalence and regression suite.
+//!
+//! The PR that introduced incremental (dirty-set) re-pricing, the
+//! completion-ordered index and the deep-queue anytime planner promised
+//! one thing above all: *the speedup changes no simulated outcome*.
+//! This suite pins that promise:
+//!
+//! * **Re-pricing equivalence** — the dirty-set scheduler drains
+//!   bitwise-identical `RepriceDecision`s / `StartDecision`s /
+//!   `PreemptDecision`s and charges bitwise-identical GPU-seconds
+//!   against the retained full-recompute reference
+//!   (`SchedTuning { incremental_reprice: false, .. }`), across
+//!   fragmentation-heavy, preemption-stress and uniform-large traces
+//!   and random seeds.
+//! * **Engine-level digest equivalence** — a full simharness replay
+//!   under the default tuning matches the
+//!   [`SchedTuning::reference()`] replay bit for bit on shallow-queue
+//!   traces (where the legacy planner and the optimized one are defined
+//!   to coincide), pricing included.
+//! * **Deep-queue solver regression** — `Policy::Optimal` on a 32+-task
+//!   queue completes through the budgeted anytime path (no exponential
+//!   blow-up), deterministically; the solver-level ≤-LPT guarantee and
+//!   the budget-exhausted LPT fallback live in
+//!   `rust/src/sched/solver.rs` unit tests.
+
+use alto::cluster::gpu::GpuSpec;
+use alto::cluster::{PlacePolicy, SimCluster, Topology};
+use alto::config::MODEL_FAMILY;
+use alto::perfmodel::{task_workload, ContentionCtx, StepTimeModel};
+use alto::sched::inter::{
+    InterTaskScheduler, Policy, PreemptDecision, Pricing, RepriceDecision, SchedTuning,
+    StartDecision, Submission, TaskShape,
+};
+use alto::simharness::{HarnessConfig, SimEngine, Trace};
+use alto::util::rng::Pcg32;
+
+/// Deterministic scheduler-level workload derived from a trace: worst
+/// case estimates from the nominal perfmodel, actuals jittered below
+/// them (the early-exit shape), pricing inputs from the spec.
+fn submissions_from(trace: &Trace, seed: u64) -> Vec<Submission> {
+    let model_nominal = StepTimeModel::nominal(GpuSpec::h100_sxm5());
+    let mut rng = Pcg32::new(seed, 0x5ca1e);
+    trace
+        .entries
+        .iter()
+        .enumerate()
+        .map(|(i, e)| {
+            let shape = MODEL_FAMILY
+                .get(&e.spec.model)
+                .expect("trace model exists");
+            let est = model_nominal.estimate_task_duration(
+                &shape,
+                &e.spec,
+                2,
+                None,
+                &ContentionCtx::empty(),
+            );
+            Submission {
+                id: i,
+                gpus: e.spec.num_gpus,
+                est_duration: est,
+                actual_duration: est * rng.uniform(0.3, 1.0),
+                arrival: e.arrival,
+                priority: e.spec.priority,
+                shape: Some(TaskShape {
+                    workload: task_workload(&shape, &e.spec, 2),
+                    adapters: 2,
+                    rank: e.spec.search_space.max_rank().max(1),
+                }),
+            }
+        })
+        .collect()
+}
+
+struct Drained {
+    started: Vec<StartDecision>,
+    preempted: Vec<PreemptDecision>,
+    repriced: Vec<RepriceDecision>,
+    makespan: f64,
+    charged: f64,
+    migration_charge: f64,
+}
+
+/// Drive the scheduler through the interleaved arrival/completion event
+/// loop (the engine's discipline: completions win time ties) and drain
+/// every decision in order.
+fn drive(
+    subs: &[Submission],
+    gpus: usize,
+    island: usize,
+    policy: Policy,
+    preempt: bool,
+    tuning: SchedTuning,
+) -> Drained {
+    let topo = Topology::uniform(gpus, island);
+    let cluster = SimCluster::with_topology(GpuSpec::h100_sxm5(), topo.clone());
+    let mut s = InterTaskScheduler::with_cluster(cluster, policy);
+    s.place = PlacePolicy::IslandFirst;
+    s.enable_preemption = preempt;
+    s.tuning = tuning;
+    s.set_pricer(
+        StepTimeModel::new(GpuSpec::h100_sxm5(), topo),
+        Pricing::default(),
+    );
+    let mut out = Drained {
+        started: vec![],
+        preempted: vec![],
+        repriced: vec![],
+        makespan: 0.0,
+        charged: 0.0,
+        migration_charge: 0.0,
+    };
+    let mut next = 0usize;
+    loop {
+        let arrival = subs.get(next).map(|s| s.arrival);
+        let completion = s.peek_next_completion();
+        let take_arrival = match (arrival, completion) {
+            (None, None) => break,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (Some(at), Some((_, ct))) => at < ct,
+        };
+        if take_arrival {
+            s.submit_spec(subs[next].clone());
+            next += 1;
+        } else {
+            s.complete_next()
+                .expect("consistent scheduler state")
+                .expect("peeked completion exists");
+        }
+        out.started.extend(s.drain_started());
+        out.preempted.extend(s.drain_preempted());
+        out.repriced.extend(s.drain_repriced());
+    }
+    assert!(s.all_done(), "driver left unfinished tasks");
+    out.makespan = s.makespan();
+    out.charged = s.charged_gpu_seconds();
+    out.migration_charge = s.migration_charge;
+    out
+}
+
+fn assert_equivalent(a: &Drained, b: &Drained, label: &str) {
+    assert_eq!(a.started, b.started, "{label}: start decisions drifted");
+    assert_eq!(a.preempted, b.preempted, "{label}: preempt decisions drifted");
+    assert_eq!(a.repriced, b.repriced, "{label}: reprice decisions drifted");
+    assert_eq!(
+        a.makespan.to_bits(),
+        b.makespan.to_bits(),
+        "{label}: makespan drifted ({} vs {})",
+        a.makespan,
+        b.makespan
+    );
+    assert_eq!(
+        a.charged.to_bits(),
+        b.charged.to_bits(),
+        "{label}: charged GPU-seconds drifted ({} vs {})",
+        a.charged,
+        b.charged
+    );
+    assert_eq!(
+        a.migration_charge.to_bits(),
+        b.migration_charge.to_bits(),
+        "{label}: migration charges drifted"
+    );
+}
+
+/// Full-recompute reference that differs from the default tuning *only*
+/// in the re-pricing scheme, so the comparison isolates the dirty-set
+/// optimization (the deep-queue planner is pinned separately).
+fn full_reprice() -> SchedTuning {
+    SchedTuning {
+        incremental_reprice: false,
+        ..SchedTuning::default()
+    }
+}
+
+#[test]
+fn dirty_set_repricing_matches_full_recompute_on_fragmentation_traces() {
+    let mut total_reprices = 0usize;
+    for seed in [3u64, 7, 11] {
+        let trace = Trace::fragmentation_heavy(20, 48, seed);
+        let subs = submissions_from(&trace, seed);
+        for policy in [Policy::Fcfs, Policy::Lpt, Policy::Optimal] {
+            let fast = drive(&subs, 16, 8, policy, false, SchedTuning::default());
+            let slow = drive(&subs, 16, 8, policy, false, full_reprice());
+            total_reprices += fast.repriced.len();
+            assert_equivalent(&fast, &slow, &format!("frag seed {seed} {policy:?}"));
+        }
+    }
+    // dense all-at-zero cohorts guarantee co-residency even if the
+    // spread-out traces above happened not to overlap
+    let dense = Trace::at_zero(alto::simharness::frag_mix(12, 64, 5));
+    let subs = submissions_from(&dense, 5);
+    for policy in [Policy::Lpt, Policy::Optimal] {
+        let fast = drive(&subs, 16, 8, policy, false, SchedTuning::default());
+        let slow = drive(&subs, 16, 8, policy, false, full_reprice());
+        total_reprices += fast.repriced.len();
+        assert_equivalent(&fast, &slow, &format!("dense {policy:?}"));
+    }
+    assert!(
+        total_reprices > 0,
+        "the suite never exercised a reprice — the equivalence check is vacuous"
+    );
+}
+
+#[test]
+fn dirty_set_repricing_matches_full_recompute_under_preemption() {
+    for seed in [5u64, 9] {
+        let trace = Trace::preemption_stress(4, 6, 64, seed);
+        let subs = submissions_from(&trace, seed);
+        for policy in [Policy::Fcfs, Policy::Optimal] {
+            let fast = drive(&subs, 16, 8, policy, true, SchedTuning::default());
+            let slow = drive(&subs, 16, 8, policy, true, full_reprice());
+            assert!(
+                !fast.preempted.is_empty(),
+                "seed {seed}: stress trace must preempt"
+            );
+            assert_equivalent(&fast, &slow, &format!("preempt seed {seed} {policy:?}"));
+        }
+    }
+}
+
+#[test]
+fn dirty_set_repricing_matches_full_recompute_on_uniform_large() {
+    // 60 single-GPU tenants on tight arrivals (offered load > 1, so the
+    // queue builds up): both tunings route through the same plan path
+    // while only the re-pricing scheme differs
+    let trace = Trace::uniform_large(60, 48, 1.0, 13);
+    let subs = submissions_from(&trace, 13);
+    for policy in [Policy::Lpt, Policy::Optimal] {
+        let fast = drive(&subs, 16, 8, policy, false, SchedTuning::default());
+        let slow = drive(&subs, 16, 8, policy, false, full_reprice());
+        assert_equivalent(&fast, &slow, &format!("uniform {policy:?}"));
+    }
+}
+
+#[test]
+fn engine_replay_digest_identical_between_default_and_reference_tuning() {
+    // the golden-trace shape (shallow queues: ≤ 8 waiting): the
+    // optimized scheduler is *defined* to be bit-identical to the
+    // pre-optimization reference here, pricing included
+    let trace = Trace::fragmentation_heavy(8, 32, 11);
+    let base = HarnessConfig {
+        total_gpus: 16,
+        policy: Policy::Optimal,
+        place: PlacePolicy::IslandFirst,
+        ..HarnessConfig::default()
+    };
+    let engine = SimEngine::new(base.clone());
+    let bodies = engine.simulate_trace(&trace).unwrap();
+    let fast = engine.replay(&trace, &bodies).unwrap();
+    let reference = SimEngine::new(HarnessConfig {
+        tuning: SchedTuning::reference(),
+        ..base
+    })
+    .replay(&trace, &bodies)
+    .unwrap();
+    assert_eq!(
+        fast.log.digest(),
+        reference.log.digest(),
+        "optimized replay drifted from the pre-optimization reference"
+    );
+    assert_eq!(fast.makespan.to_bits(), reference.makespan.to_bits());
+    assert_eq!(fast.gpu_seconds.to_bits(), reference.gpu_seconds.to_bits());
+    assert_eq!(fast.reprices, reference.reprices);
+}
+
+#[test]
+fn deep_queue_optimal_completes_fast_and_reuses_cached_plans() {
+    // 200 long tenants pounding a 32-GPU cluster (offered load ≫ 1, so
+    // the waiting set grows into the hundreds): the pre-optimization
+    // scheduler's exact replan was exponential here; the anytime path
+    // must stay interactive and reuse the surviving plan prefix on
+    // completion-triggered replans
+    let model = MODEL_FAMILY.get("llama-8b").unwrap();
+    let mut rng = Pcg32::new(21, 0xdee9);
+    let mut subs: Vec<Submission> = Vec::with_capacity(200);
+    let mut at = 0.0;
+    for i in 0..200usize {
+        at += -5.0 * (1.0 - rng.f64()).ln(); // Poisson, 5 s mean gap
+        let gpus = *rng.choice(&[1usize, 1, 1, 2, 4]);
+        let d = rng.uniform(200.0, 800.0);
+        subs.push(Submission {
+            id: i,
+            gpus,
+            est_duration: d,
+            actual_duration: d * rng.uniform(0.5, 1.0),
+            arrival: at,
+            priority: 0,
+            shape: Some(TaskShape {
+                workload: alto::parallel::workload::Workload {
+                    model: model.clone(),
+                    ranks: vec![16; 2],
+                    batch_per_adapter: 2,
+                    seq_len: 256,
+                },
+                adapters: 2,
+                rank: 16,
+            }),
+        });
+    }
+    let t0 = std::time::Instant::now();
+    let topo = Topology::uniform(32, 8);
+    let cluster = SimCluster::with_topology(GpuSpec::h100_sxm5(), topo.clone());
+    let mut s = InterTaskScheduler::with_cluster(cluster, Policy::Optimal);
+    s.set_pricer(
+        StepTimeModel::new(GpuSpec::h100_sxm5(), topo),
+        Pricing::default(),
+    );
+    let mut next = 0usize;
+    loop {
+        let arrival = subs.get(next).map(|s| s.arrival);
+        let completion = s.peek_next_completion();
+        let take_arrival = match (arrival, completion) {
+            (None, None) => break,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (Some(at), Some((_, ct))) => at < ct,
+        };
+        if take_arrival {
+            s.submit_spec(subs[next].clone());
+            next += 1;
+        } else {
+            s.complete_next().unwrap().unwrap();
+        }
+    }
+    assert!(s.all_done());
+    assert!(s.deep_plans > 0, "200 long tenants must exceed the deep threshold");
+    assert!(
+        s.deep_solves < s.deep_plans,
+        "completion replans must reuse the cached order ({} solves / {} deep plans)",
+        s.deep_solves,
+        s.deep_plans
+    );
+    let elapsed = t0.elapsed();
+    // generous for debug builds; the pre-optimization scheduler would
+    // not finish this run at all (exponential replans)
+    assert!(
+        elapsed.as_secs() < 60,
+        "deep-queue run took {elapsed:?}; the anytime path has regressed"
+    );
+}
