@@ -15,12 +15,19 @@
 //! run; the gate goes live once a maintainer commits an armed run
 //! (until then CI re-arms and uploads the numbers as an artifact only).
 //!
-//! The workload is synthetic on purpose: task *bodies* are the other
-//! 95% of a harness run and are benchmarked elsewhere
-//! (`benches/harness_e2e.rs`); this bench isolates the scheduling layer
-//! the PR optimized.  Durations are long relative to arrivals (offered
-//! load > 1), so the waiting queue grows into the hundreds — exactly
-//! the regime that made 100-task traces the old practical ceiling.
+//! The scheduler-layer workload is synthetic on purpose: this part of
+//! the bench isolates the scheduling layer.  Durations are long
+//! relative to arrivals (offered load > 1), so the waiting queue grows
+//! into the hundreds — exactly the regime that made 100-task traces the
+//! old practical ceiling.
+//!
+//! A second section measures the *body* layer — the other 95% of a
+//! harness run, now the wall-clock floor at 1k+ tasks: eager
+//! `simulate_trace` + `replay` vs the streaming `run_streaming` path
+//! (bodies simulated lazily at start events, memoized across duplicate
+//! specs) on a duplicate-heavy trace, recording wall time and peak
+//! retained outcomes per scale into the same JSON (and asserting
+//! in-process that both paths produce the bit-identical digest).
 //!
 //! The pre-PR `Policy::Optimal` is *not* measured beyond 100 tasks: its
 //! unbudgeted exact replan is exponential on deep queues (that is the
@@ -38,6 +45,7 @@ use alto::perfmodel::StepTimeModel;
 use alto::sched::inter::{
     InterTaskScheduler, Policy, Pricing, SchedTuning, Submission, TaskShape,
 };
+use alto::simharness::{HarnessConfig, SimEngine, Trace};
 use alto::util::json::Json;
 use alto::util::rng::Pcg32;
 
@@ -261,6 +269,76 @@ fn main() {
     }
     table.print();
 
+    // ---- streaming bodies: up-front simulate_trace vs run_streaming ----
+    // The other half of a harness run: task *bodies*.  A duplicate-heavy
+    // tenant stream (64 distinct sweeps cycled) is replayed end to end
+    // through both engine paths; the streaming path must produce the
+    // bit-identical digest while simulating only the distinct bodies and
+    // retaining lean summaries instead of full outcomes.
+    banner("body streaming: eager simulate_trace vs run_streaming (64 distinct sweeps)");
+    let mut body_table = Table::new(&[
+        "tasks", "eager(s)", "stream(s)", "speedup", "bodies", "memo-hits", "retained",
+    ]);
+    let mut streaming_json = std::collections::BTreeMap::new();
+    let body_scales: &[usize] = if quick { &[1_000] } else { &[1_000, 5_000] };
+    for &n in body_scales {
+        let trace = Trace::duplicate_heavy(n, 64, 48, 6.0, 42);
+        let engine = SimEngine::new(HarnessConfig {
+            total_gpus: GPUS,
+            island_size: ISLAND,
+            ..HarnessConfig::default()
+        });
+        let t0 = Instant::now();
+        let eager = engine.run(&trace).expect("eager run");
+        let eager_wall = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let stream = engine.run_streaming(&trace).expect("streaming run");
+        let stream_wall = t1.elapsed().as_secs_f64();
+        assert_eq!(
+            stream.timeline.log.digest(),
+            eager.log.digest(),
+            "streaming must replay the batch digest bit for bit"
+        );
+        let speedup = eager_wall / stream_wall.max(1e-12);
+        body_table.row(vec![
+            n.to_string(),
+            f(eager_wall, 3),
+            f(stream_wall, 3),
+            f(speedup, 1),
+            stream.distinct_bodies.to_string(),
+            stream.memo_hits.to_string(),
+            format!("{n} vs {}", stream.distinct_bodies),
+        ]);
+        let mut cells = std::collections::BTreeMap::new();
+        cells.insert("eager_wall_s".to_string(), Json::Num(eager_wall));
+        cells.insert("streaming_wall_s".to_string(), Json::Num(stream_wall));
+        cells.insert("body_speedup".to_string(), Json::Num(speedup));
+        cells.insert(
+            "distinct_bodies".to_string(),
+            Json::Num(stream.distinct_bodies as f64),
+        );
+        cells.insert("memo_hits".to_string(), Json::Num(stream.memo_hits as f64));
+        // peak retained outcomes: the eager path holds every task's full
+        // outcome (loss histories included) before replay even starts;
+        // the streaming path retains one lean memo entry per distinct
+        // body plus per-task summaries
+        cells.insert(
+            "peak_retained_outcomes_eager".to_string(),
+            Json::Num(eager.outcomes.len() as f64),
+        );
+        cells.insert(
+            "peak_retained_bodies_streaming".to_string(),
+            Json::Num(stream.distinct_bodies as f64),
+        );
+        streaming_json.insert(n.to_string(), Json::Obj(cells));
+    }
+    for &n in scales {
+        if !body_scales.contains(&n) && n != 100 {
+            streaming_json.insert(n.to_string(), Json::Null);
+        }
+    }
+    body_table.print();
+
     let speedup_1k = match (new_1k_wall, ref_1k_wall) {
         (Some(new), Some(reference)) => reference / new.max(1e-12),
         _ => f64::NAN,
@@ -323,11 +401,15 @@ fn main() {
                 "wall-clock of the cluster-scheduling layer (synthetic bodies); \
                  reference = pre-PR full-reprice + legacy replan; the committed armed \
                  speedup_1k_vs_reference is the regression baseline — CI fails when a \
-                 run's in-process ratio drops more than 2x below it (machine-independent)"
+                 run's in-process ratio drops more than 2x below it (machine-independent). \
+                 'streaming' records the body layer: eager simulate_trace vs \
+                 run_streaming wall time and peak retained outcomes on a \
+                 duplicate-heavy trace (digest-equality asserted in-process)"
                     .into(),
             ),
         ),
         ("scales", Json::Obj(scales_json)),
+        ("streaming", Json::Obj(streaming_json)),
     ]);
     if gate_failed {
         // keep the committed baseline; persist the regressed measurements

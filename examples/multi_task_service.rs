@@ -4,7 +4,10 @@
 //! (simulated) cluster.  The workload is expressed as a `simharness`
 //! trace, replayed through the event engine (early exit → repack →
 //! replan), compared against scheduling baselines, and the realized
-//! cluster timeline is printed.
+//! cluster timeline is printed.  The staggered-arrival section at the
+//! end drives the **streaming** entry point (`SimEngine::run_streaming`,
+//! docs/ARCHITECTURE.md): bodies simulate lazily at start events and
+//! replay the batch path's digest bit for bit.
 //!
 //!     cargo run --release --example multi_task_service
 
@@ -82,8 +85,9 @@ fn main() -> anyhow::Result<()> {
     println!("\ntotal samples saved across the service: {:.1}%",
              100.0 * report.total_saved_ratio());
 
-    // the same engine replays *staggered* tenant arrivals: every task
-    // lands 10 virtual minutes after the previous one
+    // the same engine streams *staggered* tenant arrivals: every task
+    // lands 10 virtual minutes after the previous one, and its body is
+    // simulated at the moment the scheduler starts it — not up front
     let staggered = Trace::with_arrivals(
         specs
             .iter()
@@ -92,11 +96,20 @@ fn main() -> anyhow::Result<()> {
             .collect(),
     );
     let engine = SimEngine::new(ServiceConfig::default().harness());
-    let r = engine.run(&staggered)?;
+    let r = engine.run_streaming(&staggered)?;
     println!(
-        "\nstaggered arrivals (one task / 10 min): makespan {:.0}s, \
-         {} replans, {:.0} GPU-seconds",
-        r.makespan, r.replans, r.gpu_seconds
+        "\nstaggered arrivals (one task / 10 min, streaming bodies): \
+         makespan {:.0}s, {} replans, {:.0} GPU-seconds, {} bodies \
+         simulated ({} memo hits)",
+        r.timeline.makespan,
+        r.timeline.replans,
+        r.timeline.gpu_seconds,
+        r.distinct_bodies,
+        r.memo_hits
     );
+    // the invariant the tests pin: streaming == batch, bit for bit
+    let batch = engine.run(&staggered)?;
+    assert_eq!(r.timeline.log.digest(), batch.log.digest());
+    println!("streaming digest == batch digest: {:016x}", batch.log.digest());
     Ok(())
 }

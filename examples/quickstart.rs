@@ -1,15 +1,21 @@
 //! Quickstart — the paper's Listing 1, end to end, in under a minute.
 //!
 //! Submits two heterogeneous LoRA fine-tuning tasks (different base
-//! models, datasets and search spaces) to the engine; ALTO plans
-//! placement with the exact makespan solver, executes each task's search
-//! with batched multi-LoRA + loss-aware early exit on the simulated
-//! 8×H100 cluster, and returns the best adapter per task.
+//! models, datasets and search spaces); ALTO plans placement with the
+//! exact makespan solver, then the `simharness` event engine executes
+//! the workload on a simulated 8×H100 cluster through the **streaming**
+//! entry point (`SimEngine::run_streaming`): each task's search — batched
+//! multi-LoRA executors + loss-aware early exit — is simulated lazily at
+//! the moment the scheduler starts it, interleaved with cluster events,
+//! and duplicate configurations share one memoized body.  The batch path
+//! (`SimEngine::run`) replays the identical timeline bit for bit; see
+//! docs/ARCHITECTURE.md for the full event flow.
 //!
 //!     cargo run --release --example quickstart
 
 use alto::api::{EarlyExit, Engine};
 use alto::config::{SearchSpace, TaskSpec};
+use alto::simharness::{HarnessConfig, SimEngine, Trace};
 
 fn main() -> anyhow::Result<()> {
     // 1. Initialize engine (Listing 1: strategy="adapter_parallel")
@@ -47,8 +53,7 @@ fn main() -> anyhow::Result<()> {
         },
     ];
 
-    // 3. Set early-exit strategy, schedule and execute
-    let early_exit = EarlyExit::new().warmup_ratio(0.10);
+    // 3. Plan placement with the exact B&B makespan solver
     let schedule = engine.schedule(&tasks)?;
     println!("planned makespan: {:.0}s (exact B&B over {} tasks)",
              schedule.makespan, tasks.len());
@@ -57,23 +62,37 @@ fn main() -> anyhow::Result<()> {
                  tasks[p.id].name, p.start, p.gpus);
     }
 
-    let best_adapters = engine.batched_execution(&tasks, early_exit)?;
+    // 4. Execute through the streaming event engine: one event loop,
+    //    bodies simulated at start events, early exit + adapter
+    //    co-location + hierarchical scheduling end to end
+    let early_exit = EarlyExit::new().warmup_ratio(0.10);
+    let harness = SimEngine::new(HarnessConfig {
+        total_gpus: 8,
+        run: early_exit.into_run_config(),
+        ..HarnessConfig::default()
+    });
+    let report = harness.run_streaming(&Trace::at_zero(tasks))?;
     println!();
-    for o in &best_adapters {
+    for s in &report.summaries {
         println!(
             "task '{}': best val loss {:.4}, {:.0}% of grid-search samples \
              saved ({} of {} used), ran {:.0}s on {} GPUs",
-            o.name,
-            o.best_val,
-            100.0 * (1.0 - o.samples_used as f64 / o.samples_budget as f64),
-            o.samples_used,
-            o.samples_budget,
-            o.actual_duration,
-            o.gpus,
+            s.name,
+            s.best_val,
+            100.0 * (1.0 - s.samples_used as f64 / s.samples_budget.max(1) as f64),
+            s.samples_used,
+            s.samples_budget,
+            s.actual_duration,
+            s.gpus,
         );
-        for (reason, saved) in &o.saved_by_reason {
-            println!("    saved by {reason}: {saved} samples");
-        }
     }
+    println!(
+        "\nrealized makespan {:.0}s · {} bodies simulated for {} tasks \
+         ({} served from the memo)",
+        report.timeline.makespan,
+        report.distinct_bodies,
+        report.summaries.len(),
+        report.memo_hits,
+    );
     Ok(())
 }

@@ -21,6 +21,18 @@ impl ExitReason {
             ExitReason::Completed => "completed",
         }
     }
+
+    /// Inverse of [`ExitReason::as_str`] (used by the event-log jsonl
+    /// reloader to reject dumps naming verdicts no run can produce).
+    pub fn parse(s: &str) -> Option<ExitReason> {
+        match s {
+            "diverging" => Some(ExitReason::Diverging),
+            "overfitting" => Some(ExitReason::Overfitting),
+            "underperforming" => Some(ExitReason::Underperforming),
+            "completed" => Some(ExitReason::Completed),
+            _ => None,
+        }
+    }
 }
 
 /// Lifecycle state of a job.

@@ -18,5 +18,5 @@ pub use job::{ExitReason, Job, JobState};
 pub use memory_model::MemoryModel;
 pub use profiler::Profiler;
 pub use service::{Service, ServiceConfig, ServiceReport};
-pub use task_runner::{make_jobs, run_task, RunConfig, TaskResult};
+pub use task_runner::{make_jobs, run_task, RunConfig, SegmentReport, TaskCursor, TaskResult};
 pub use warmup::{select_top_k, WarmupConfig};

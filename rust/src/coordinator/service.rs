@@ -68,6 +68,7 @@ impl ServiceConfig {
             run: self.run.clone(),
             gpu: self.gpu.clone(),
             n_slots: self.n_slots,
+            log_body_events: false,
         }
     }
 }

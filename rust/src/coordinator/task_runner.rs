@@ -2,16 +2,42 @@
 //! top-k selection, continue-training with online pattern detection, and
 //! slot backfill — §5 + §7.1 of the paper, orchestrated over an executor
 //! backend.
+//!
+//! The engine is exposed at two granularities:
+//!
+//! * [`run_task`] — drive one task's whole job queue to completion and
+//!   return the [`TaskResult`].  This is the batch entry point.
+//! * [`TaskCursor`] — the resumable segment API underneath it: the same
+//!   state machine, advanced one *segment* at a time
+//!   ([`TaskCursor::run_segment`] runs until the next early-exit check —
+//!   an eval boundary — or a phase boundary, and reports the verdicts
+//!   reached).  The cursor is checkpointable between segments (its state
+//!   is plain data plus backend [`Snapshot`]s), which is what lets the
+//!   streaming harness (`simharness::engine::SimEngine::run_streaming`)
+//!   interleave body simulation with cluster events.  `run_task` is a
+//!   thin loop over the cursor, so the batch and streaming paths execute
+//!   byte-for-byte the same body logic.
+//!
+//! Slot refill is *event-driven*: a vacated executor slot is refilled at
+//! the exit event that freed it, from the task's own remaining jobs.
+//! When the cursor carries an admission control
+//! ([`TaskCursor::with_admission`]) each refill is re-checked against
+//! the fitted memory model and (optionally) the
+//! [`crate::sched::intra::GroupPricer`]'s marginal-throughput bar at
+//! that moment — the §7.1 admission decision made online, at the slot
+//! level, instead of once up front.
 
 use std::collections::BTreeMap;
 
 use anyhow::Result;
 
 use crate::config::HyperParams;
+use crate::sched::intra::{admit_slot, GroupPricer};
 
 use super::early_exit::{DetectorConfig, PatternDetector, Verdict};
 use super::executor::{Backend, Snapshot};
 use super::job::{ExitReason, Job, JobState};
+use super::memory_model::MemoryModel;
 use super::warmup::{select_top_k, WarmupConfig};
 
 /// Intra-task run configuration.
@@ -41,7 +67,7 @@ impl Default for RunConfig {
 }
 
 /// Outcome of one task (all jobs of one search space).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct TaskResult {
     pub jobs: Vec<Job>,
     /// Job with the lowest best-val loss.
@@ -74,221 +100,391 @@ struct SlotCtx {
     stop_at: usize,
 }
 
-/// Run one task's full job queue over one executor backend.  All jobs
-/// must share the executor's per-adapter batch size (homogeneous batch
-/// grouping, §A.1); callers with mixed batch sizes run one group per
-/// backend (see `service.rs`).
+/// Which stage of the intra-task lifecycle the cursor is in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Phase A: every candidate runs its warmup slice, rotating through
+    /// the slots; only divergence kills (paper §5.2).
+    Warmup,
+    /// Phase B: retained candidates continue-train from their warmup
+    /// checkpoints with full early-exit detection and slot backfill.
+    Train,
+    /// All jobs reached a verdict.
+    Done,
+}
+
+/// What one [`TaskCursor::run_segment`] call accomplished.
+#[derive(Debug)]
+pub struct SegmentReport {
+    /// Simulated wall seconds this segment consumed.
+    pub wall_delta: f64,
+    /// Jobs (indices into the cursor's job list) that reached a verdict
+    /// during this segment, with the reason.  Warmup-boundary
+    /// underperformance evictions surface on the segment that crosses
+    /// the boundary.
+    pub exits: Vec<(usize, ExitReason)>,
+    /// The whole body has finished; [`TaskCursor::finish`] may be called.
+    pub done: bool,
+}
+
+/// Resumable execution of one task body over one executor backend: the
+/// engine behind [`run_task`], advanced one segment (up to the next
+/// early-exit check or phase boundary) at a time.
+///
+/// All jobs must share the executor's per-adapter batch size
+/// (homogeneous batch grouping, §A.1); callers with mixed batch sizes
+/// run one cursor per group (see `SimEngine::simulate_task`).
+pub struct TaskCursor<'a> {
+    backend: &'a mut dyn Backend,
+    cfg: RunConfig,
+    jobs: Vec<Job>,
+    phase: Phase,
+    /// Pending job indices; `pop()` serves in submission order.
+    queue: Vec<usize>,
+    slots: Vec<Option<SlotCtx>>,
+    snapshots: BTreeMap<usize, Snapshot>,
+    boundary_val: Vec<f64>,
+    wall: f64,
+    samples_budget: usize,
+    /// Event-driven slot admission: each refill must fit the memory
+    /// model and clear the pricer's bar *at the moment the slot frees*.
+    admission: Option<(&'a MemoryModel, Option<&'a GroupPricer<'a>>)>,
+}
+
+impl<'a> TaskCursor<'a> {
+    pub fn new(backend: &'a mut dyn Backend, jobs: Vec<Job>, cfg: RunConfig) -> TaskCursor<'a> {
+        let n_slots = backend.n_slots();
+        let samples_budget = jobs.iter().map(|j| j.samples_budget()).sum();
+        let mut queue: Vec<usize> = (0..jobs.len()).collect();
+        queue.reverse();
+        let boundary_val = vec![f64::INFINITY; jobs.len()];
+        TaskCursor {
+            backend,
+            cfg,
+            jobs,
+            phase: Phase::Warmup,
+            queue,
+            slots: (0..n_slots).map(|_| None).collect(),
+            snapshots: BTreeMap::new(),
+            boundary_val,
+            wall: 0.0,
+            samples_budget,
+            admission: None,
+        }
+    }
+
+    /// Attach event-driven admission control: every slot refill is
+    /// re-checked against the memory model (and, when given, the
+    /// pricer's marginal-throughput bar) over the adapters resident at
+    /// that instant.  Without it, refills are unconditional — the
+    /// behavior standalone [`run_task`] callers rely on.
+    pub fn with_admission(
+        mut self,
+        mem: &'a MemoryModel,
+        pricer: Option<&'a GroupPricer<'a>>,
+    ) -> TaskCursor<'a> {
+        self.admission = Some((mem, pricer));
+        self
+    }
+
+    /// The cursor's jobs (live state included), in submission order.
+    pub fn jobs(&self) -> &[Job] {
+        &self.jobs
+    }
+
+    /// Cumulative simulated wall seconds so far.
+    pub fn wall_seconds(&self) -> f64 {
+        self.wall
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.phase == Phase::Done
+    }
+
+    /// The executor's configured slot count (the upper bound on
+    /// co-location; event-driven admission may occupy fewer at a time).
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Should the next pending job take a vacated slot right now?
+    fn slot_admits(&self, ji: usize) -> bool {
+        let Some((mem, pricer)) = self.admission else {
+            return true;
+        };
+        let mut resident_ranks: Vec<usize> = Vec::with_capacity(self.slots.len());
+        let mut resident_batch = 0usize;
+        for s in self.slots.iter().flatten() {
+            let hp = &self.jobs[s.job_idx].hp;
+            resident_ranks.push(hp.rank);
+            resident_batch += hp.batch_size;
+        }
+        admit_slot(&self.jobs[ji].hp, &resident_ranks, resident_batch, mem, pricer)
+    }
+
+    /// Fill vacated slots from the pending queue (submission order).
+    /// With admission control, a refill that does not fit *now* leaves
+    /// the slot empty until the next exit event frees capacity; an empty
+    /// executor always seats its first job (the gradient-accumulation
+    /// fallback — the task must make progress).
+    fn fill_slots(&mut self) -> Result<()> {
+        for si in 0..self.slots.len() {
+            if self.slots[si].is_some() {
+                continue;
+            }
+            let Some(&ji) = self.queue.last() else { break };
+            if !self.slot_admits(ji) {
+                break;
+            }
+            self.queue.pop();
+            match self.phase {
+                Phase::Warmup => {
+                    let job = &mut self.jobs[ji];
+                    job.state = JobState::Warmup;
+                    let stop = self.cfg.warmup.warmup_steps(job.total_steps);
+                    self.backend.onload(si, &job.hp, job.total_steps, job.seed)?;
+                    self.slots[si] = Some(SlotCtx {
+                        job_idx: ji,
+                        detector: PatternDetector::new(self.cfg.detector.clone()),
+                        local_step: 0,
+                        stop_at: stop,
+                    });
+                }
+                Phase::Train => {
+                    let job = &mut self.jobs[ji];
+                    job.state = JobState::Training;
+                    let warm = self.cfg.warmup.warmup_steps(job.total_steps);
+                    // resume from the warmup checkpoint, optimizer
+                    // state carried over (paper §5.2)
+                    if let Some(snap) = self.snapshots.get(&ji) {
+                        self.backend.restore(si, snap)?;
+                    } else {
+                        self.backend.onload(si, &job.hp, job.total_steps, job.seed)?;
+                    }
+                    let total = self.jobs[ji].total_steps;
+                    self.slots[si] = Some(SlotCtx {
+                        job_idx: ji,
+                        detector: PatternDetector::new(self.cfg.detector.clone()),
+                        local_step: warm.min(total),
+                        stop_at: total,
+                    });
+                }
+                Phase::Done => unreachable!("fill after completion"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Warmup → continue-training transition: underperformance filtering
+    /// at the boundary (paper §5.2), then requeue the retained set.
+    fn warmup_boundary(&mut self, exits: &mut Vec<(usize, ExitReason)>) {
+        let survivors: Vec<usize> = self
+            .jobs
+            .iter()
+            .enumerate()
+            .filter(|(_, j)| !j.is_exited())
+            .map(|(i, _)| i)
+            .collect();
+        let retained: Vec<usize> = if self.cfg.enable_warmup_selection && !survivors.is_empty() {
+            let vals: Vec<f64> = survivors.iter().map(|&i| self.boundary_val[i]).collect();
+            let k = self.cfg.warmup.retained(survivors.len());
+            let (keep, evict) = select_top_k(&vals, k);
+            for &e in &evict {
+                self.jobs[survivors[e]].state =
+                    JobState::Exited(ExitReason::Underperforming);
+                exits.push((survivors[e], ExitReason::Underperforming));
+            }
+            keep.iter().map(|&i| survivors[i]).collect()
+        } else {
+            survivors
+        };
+        let mut queue = retained;
+        queue.reverse();
+        self.queue = queue;
+        self.phase = Phase::Train;
+    }
+
+    /// Apply one eval's verdicts to every active slot.
+    fn process_eval(
+        &mut self,
+        vals: &[Option<f64>],
+        exits: &mut Vec<(usize, ExitReason)>,
+    ) -> Result<()> {
+        for si in 0..self.slots.len() {
+            let Some(v) = vals[si] else { continue };
+            let Some(ctx) = self.slots[si].as_mut() else { continue };
+            let ji = ctx.job_idx;
+            let local = ctx.local_step;
+            let at_stop = local >= ctx.stop_at;
+            let verdict = ctx.detector.observe_val(v);
+            self.jobs[ji].record_val(local, v);
+            match self.phase {
+                Phase::Warmup => {
+                    // during warmup only divergence kills (paper §5.2)
+                    if self.cfg.enable_early_exit
+                        && verdict == Verdict::Exit(ExitReason::Diverging)
+                    {
+                        self.jobs[ji].state = JobState::Exited(ExitReason::Diverging);
+                        exits.push((ji, ExitReason::Diverging));
+                        self.backend.deactivate(si);
+                        self.slots[si] = None;
+                        continue;
+                    }
+                    if at_stop {
+                        // warmup boundary for this candidate: record its
+                        // ranking signal + checkpoint for continue-training
+                        self.boundary_val[ji] = v;
+                        let snap = self.backend.snapshot(si)?;
+                        self.snapshots.insert(ji, snap);
+                        self.backend.deactivate(si);
+                        self.slots[si] = None;
+                    }
+                }
+                Phase::Train => {
+                    let exit = match verdict {
+                        Verdict::Exit(r) if self.cfg.enable_early_exit => Some(r),
+                        _ if at_stop => Some(ExitReason::Completed),
+                        _ => None,
+                    };
+                    if let Some(reason) = exit {
+                        // overfitting exit checkpoints the best model — our
+                        // best_val already tracks checkpoint-at-best
+                        self.jobs[ji].state = JobState::Exited(reason);
+                        exits.push((ji, reason));
+                        self.backend.deactivate(si);
+                        self.slots[si] = None; // backfilled next segment
+                    }
+                }
+                Phase::Done => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Advance until the next early-exit check (an eval boundary, where
+    /// verdicts can fire) or a phase boundary, whichever comes first.
+    /// Returns what happened; when `done`, call [`TaskCursor::finish`].
+    pub fn run_segment(&mut self) -> Result<SegmentReport> {
+        let wall_at_entry = self.wall;
+        let mut exits: Vec<(usize, ExitReason)> = Vec::new();
+        loop {
+            if self.phase == Phase::Done {
+                return Ok(SegmentReport {
+                    wall_delta: self.wall - wall_at_entry,
+                    exits,
+                    done: true,
+                });
+            }
+            self.fill_slots()?;
+            if self.slots.iter().all(|s| s.is_none()) {
+                match self.phase {
+                    Phase::Warmup => {
+                        self.warmup_boundary(&mut exits);
+                        return Ok(SegmentReport {
+                            wall_delta: self.wall - wall_at_entry,
+                            exits,
+                            done: false,
+                        });
+                    }
+                    Phase::Train => {
+                        // any job never run to a verdict (e.g. early-exit
+                        // disabled paths)
+                        for j in self.jobs.iter_mut() {
+                            if !j.is_exited() {
+                                j.state = JobState::Exited(ExitReason::Completed);
+                            }
+                        }
+                        self.phase = Phase::Done;
+                        return Ok(SegmentReport {
+                            wall_delta: self.wall - wall_at_entry,
+                            exits,
+                            done: true,
+                        });
+                    }
+                    Phase::Done => unreachable!(),
+                }
+            }
+            // advance every active slot one optimizer step
+            let losses = self.backend.step()?;
+            self.wall += self.backend.last_step_seconds();
+            let mut to_eval = false;
+            for si in 0..self.slots.len() {
+                let Some(ctx) = self.slots[si].as_mut() else { continue };
+                if let Some(l) = losses[si] {
+                    ctx.detector.observe_train(l);
+                    ctx.local_step += 1;
+                    let (ji, local, stop) = (ctx.job_idx, ctx.local_step, ctx.stop_at);
+                    self.jobs[ji].record_train(l);
+                    if local % self.cfg.eval_every == 0 || local >= stop {
+                        to_eval = true;
+                    }
+                }
+            }
+            if !to_eval {
+                continue;
+            }
+            let vals = self.backend.eval()?;
+            self.process_eval(&vals, &mut exits)?;
+            return Ok(SegmentReport {
+                wall_delta: self.wall - wall_at_entry,
+                exits,
+                done: false,
+            });
+        }
+    }
+
+    /// Final accounting once every job reached a verdict.
+    ///
+    /// # Panics
+    ///
+    /// If called before a segment reported `done` — the result would be
+    /// a partial task, which no caller should ever account as finished.
+    pub fn finish(self) -> TaskResult {
+        assert!(
+            self.phase == Phase::Done,
+            "TaskCursor::finish() called before the body completed"
+        );
+        let samples_used: usize = self.jobs.iter().map(|j| j.samples_used()).sum();
+        let mut saved: BTreeMap<&'static str, usize> = BTreeMap::new();
+        for j in &self.jobs {
+            let left = j.samples_budget().saturating_sub(j.samples_used());
+            if left > 0 {
+                if let Some(r) = j.exit_reason() {
+                    *saved.entry(r.as_str()).or_insert(0) += left;
+                }
+            }
+        }
+        let best_job = self
+            .jobs
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.best_val.partial_cmp(&b.1.best_val).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        TaskResult {
+            jobs: self.jobs,
+            best_job,
+            wall_seconds: self.wall,
+            samples_used,
+            samples_budget: self.samples_budget,
+            saved_by_reason: saved,
+        }
+    }
+}
+
+/// Run one task's full job queue over one executor backend — the batch
+/// driver: a [`TaskCursor`] advanced to completion.  All jobs must share
+/// the executor's per-adapter batch size (homogeneous batch grouping,
+/// §A.1); callers with mixed batch sizes run one group per backend (see
+/// `service.rs`).
 pub fn run_task(
     backend: &mut dyn Backend,
-    mut jobs: Vec<Job>,
+    jobs: Vec<Job>,
     cfg: &RunConfig,
 ) -> Result<TaskResult> {
-    let n_slots = backend.n_slots();
-    let mut wall = 0.0f64;
-    let samples_budget: usize = jobs.iter().map(|j| j.samples_budget()).sum();
-
-    // ---- Phase A: warmup with rotation --------------------------------
-    // Every candidate runs warmup_ratio of its budget; diverging ones are
-    // killed online; finished/killed slots rotate the next candidate in.
-    let mut snapshots: BTreeMap<usize, Snapshot> = BTreeMap::new();
-    let mut boundary_val: Vec<f64> = vec![f64::INFINITY; jobs.len()];
-    {
-        let mut queue: Vec<usize> = (0..jobs.len()).collect();
-        queue.reverse(); // pop() serves in submission order
-        let mut slots: Vec<Option<SlotCtx>> = (0..n_slots).map(|_| None).collect();
-        loop {
-            // fill free slots
-            for (si, slot) in slots.iter_mut().enumerate() {
-                if slot.is_none() {
-                    if let Some(ji) = queue.pop() {
-                        let job = &mut jobs[ji];
-                        job.state = JobState::Warmup;
-                        let stop = cfg.warmup.warmup_steps(job.total_steps);
-                        backend.onload(si, &job.hp, job.total_steps, job.seed)?;
-                        *slot = Some(SlotCtx {
-                            job_idx: ji,
-                            detector: PatternDetector::new(cfg.detector.clone()),
-                            local_step: 0,
-                            stop_at: stop,
-                        });
-                    }
-                }
-            }
-            if slots.iter().all(|s| s.is_none()) {
-                break;
-            }
-            // advance
-            let losses = backend.step()?;
-            wall += backend.last_step_seconds();
-            let mut to_eval = false;
-            for (si, slot) in slots.iter_mut().enumerate() {
-                if let Some(ctx) = slot {
-                    if let Some(l) = losses[si] {
-                        jobs[ctx.job_idx].record_train(l);
-                        ctx.detector.observe_train(l);
-                        ctx.local_step += 1;
-                        if ctx.local_step % cfg.eval_every == 0 || ctx.local_step >= ctx.stop_at
-                        {
-                            to_eval = true;
-                        }
-                    }
-                }
-            }
-            if !to_eval {
-                continue;
-            }
-            let vals = backend.eval()?;
-            for (si, slot) in slots.iter_mut().enumerate() {
-                let Some(ctx) = slot else { continue };
-                let Some(v) = vals[si] else { continue };
-                let job = &mut jobs[ctx.job_idx];
-                job.record_val(ctx.local_step, v);
-                let verdict = ctx.detector.observe_val(v);
-                // during warmup only divergence kills (paper §5.2)
-                if cfg.enable_early_exit
-                    && verdict == Verdict::Exit(ExitReason::Diverging)
-                {
-                    job.state = JobState::Exited(ExitReason::Diverging);
-                    backend.deactivate(si);
-                    *slot = None;
-                    continue;
-                }
-                if ctx.local_step >= ctx.stop_at {
-                    // warmup boundary for this candidate: record its
-                    // ranking signal + checkpoint for continue-training
-                    boundary_val[ctx.job_idx] = v;
-                    snapshots.insert(ctx.job_idx, backend.snapshot(si)?);
-                    backend.deactivate(si);
-                    *slot = None;
-                }
-            }
-        }
-    }
-
-    // ---- warmup boundary: underperformance filtering ------------------
-    let survivors: Vec<usize> = jobs
-        .iter()
-        .enumerate()
-        .filter(|(_, j)| !j.is_exited())
-        .map(|(i, _)| i)
-        .collect();
-    let retained: Vec<usize> = if cfg.enable_warmup_selection && !survivors.is_empty() {
-        let vals: Vec<f64> = survivors.iter().map(|&i| boundary_val[i]).collect();
-        let k = cfg.warmup.retained(survivors.len());
-        let (keep, evict) = select_top_k(&vals, k);
-        for &e in &evict {
-            jobs[survivors[e]].state = JobState::Exited(ExitReason::Underperforming);
-        }
-        keep.iter().map(|&i| survivors[i]).collect()
-    } else {
-        survivors
-    };
-
-    // ---- Phase B: continue-training with backfill ----------------------
-    {
-        let mut queue: Vec<usize> = retained.clone();
-        queue.reverse();
-        let mut slots: Vec<Option<SlotCtx>> = (0..n_slots).map(|_| None).collect();
-        loop {
-            for (si, slot) in slots.iter_mut().enumerate() {
-                if slot.is_none() {
-                    if let Some(ji) = queue.pop() {
-                        let job = &mut jobs[ji];
-                        job.state = JobState::Training;
-                        let warm = cfg.warmup.warmup_steps(job.total_steps);
-                        // resume from the warmup checkpoint, optimizer
-                        // state carried over (paper §5.2)
-                        if let Some(snap) = snapshots.get(&ji) {
-                            backend.restore(si, snap)?;
-                        } else {
-                            backend.onload(si, &job.hp, job.total_steps, job.seed)?;
-                        }
-                        *slot = Some(SlotCtx {
-                            job_idx: ji,
-                            detector: PatternDetector::new(cfg.detector.clone()),
-                            local_step: warm.min(job.total_steps),
-                            stop_at: job.total_steps,
-                        });
-                    }
-                }
-            }
-            if slots.iter().all(|s| s.is_none()) {
-                break;
-            }
-            let losses = backend.step()?;
-            wall += backend.last_step_seconds();
-            let mut to_eval = false;
-            for (si, slot) in slots.iter_mut().enumerate() {
-                if let Some(ctx) = slot {
-                    if let Some(l) = losses[si] {
-                        jobs[ctx.job_idx].record_train(l);
-                        ctx.detector.observe_train(l);
-                        ctx.local_step += 1;
-                        if ctx.local_step % cfg.eval_every == 0 || ctx.local_step >= ctx.stop_at
-                        {
-                            to_eval = true;
-                        }
-                    }
-                }
-            }
-            if !to_eval {
-                continue;
-            }
-            let vals = backend.eval()?;
-            for (si, slot) in slots.iter_mut().enumerate() {
-                let Some(ctx) = slot else { continue };
-                let Some(v) = vals[si] else { continue };
-                let job = &mut jobs[ctx.job_idx];
-                job.record_val(ctx.local_step, v);
-                let verdict = ctx.detector.observe_val(v);
-                let exit = match verdict {
-                    Verdict::Exit(r) if cfg.enable_early_exit => Some(r),
-                    _ if ctx.local_step >= ctx.stop_at => Some(ExitReason::Completed),
-                    _ => None,
-                };
-                if let Some(reason) = exit {
-                    // overfitting exit checkpoints the best model — our
-                    // best_val already tracks checkpoint-at-best
-                    job.state = JobState::Exited(reason);
-                    backend.deactivate(si);
-                    *slot = None; // backfilled on the next loop turn
-                }
-            }
-        }
-    }
-
-    // any job never run to a verdict (e.g. early-exit disabled paths)
-    for j in jobs.iter_mut() {
-        if !j.is_exited() {
-            j.state = JobState::Exited(ExitReason::Completed);
-        }
-    }
-
-    // ---- accounting -----------------------------------------------------
-    let samples_used: usize = jobs.iter().map(|j| j.samples_used()).sum();
-    let mut saved: BTreeMap<&'static str, usize> = BTreeMap::new();
-    for j in &jobs {
-        let left = j.samples_budget().saturating_sub(j.samples_used());
-        if left > 0 {
-            if let Some(r) = j.exit_reason() {
-                *saved.entry(r.as_str()).or_insert(0) += left;
-            }
-        }
-    }
-    let best_job = jobs
-        .iter()
-        .enumerate()
-        .min_by(|a, b| a.1.best_val.partial_cmp(&b.1.best_val).unwrap())
-        .map(|(i, _)| i)
-        .unwrap_or(0);
-    Ok(TaskResult {
-        jobs,
-        best_job,
-        wall_seconds: wall,
-        samples_used,
-        samples_budget,
-        saved_by_reason: saved,
-    })
+    let mut cursor = TaskCursor::new(backend, jobs, cfg.clone());
+    while !cursor.run_segment()?.done {}
+    Ok(cursor.finish())
 }
 
 /// Expand a search space into jobs with per-batch-size step budgets:
@@ -466,5 +662,140 @@ mod tests {
         assert_eq!(jobs[1].total_steps, 90);
         // equal sample budgets regardless of batch size
         assert_eq!(jobs[0].samples_budget(), jobs[1].samples_budget());
+    }
+
+    // --- segment cursor ----------------------------------------------------
+
+    #[test]
+    fn cursor_segments_match_run_task_bitwise() {
+        let space = SearchSpace::paper_single_gpu().expand();
+        let space: Vec<_> = space.into_iter().filter(|h| h.batch_size == 2).collect();
+        let batch = run_task(
+            &mut sim_backend(4, 2),
+            make_jobs(&space, 3, 128, 5),
+            &RunConfig::default(),
+        )
+        .unwrap();
+        // the same body, driven one segment at a time
+        let mut be = sim_backend(4, 2);
+        let mut cursor =
+            TaskCursor::new(&mut be, make_jobs(&space, 3, 128, 5), RunConfig::default());
+        let mut segments = 0usize;
+        let mut wall_from_deltas = 0.0f64;
+        loop {
+            let seg = cursor.run_segment().unwrap();
+            segments += 1;
+            wall_from_deltas += seg.wall_delta;
+            if seg.done {
+                break;
+            }
+        }
+        assert!(segments > 2, "body should span multiple segments");
+        let streamed = cursor.finish();
+        assert_eq!(streamed.wall_seconds.to_bits(), batch.wall_seconds.to_bits());
+        assert_eq!(wall_from_deltas.to_bits(), batch.wall_seconds.to_bits());
+        assert_eq!(streamed.samples_used, batch.samples_used);
+        assert_eq!(streamed.samples_budget, batch.samples_budget);
+        assert_eq!(streamed.best_job, batch.best_job);
+        assert_eq!(streamed.best_val().to_bits(), batch.best_val().to_bits());
+        assert_eq!(streamed.saved_by_reason, batch.saved_by_reason);
+        for (a, b) in streamed.jobs.iter().zip(&batch.jobs) {
+            assert_eq!(a.state, b.state, "job {} verdict drifted", a.id);
+            assert_eq!(a.steps_run, b.steps_run);
+        }
+    }
+
+    #[test]
+    fn cursor_reports_every_early_exit_exactly_once() {
+        let space = SearchSpace::paper_single_gpu().expand();
+        let space: Vec<_> = space.into_iter().filter(|h| h.batch_size == 2).collect();
+        let mut be = sim_backend(4, 2);
+        let mut cursor =
+            TaskCursor::new(&mut be, make_jobs(&space, 3, 256, 0), RunConfig::default());
+        let mut reported: Vec<(usize, ExitReason)> = Vec::new();
+        loop {
+            let seg = cursor.run_segment().unwrap();
+            reported.extend(seg.exits.iter().copied());
+            if seg.done {
+                break;
+            }
+        }
+        let res = cursor.finish();
+        // every non-Completed verdict in the final states was reported,
+        // with a matching reason, exactly once
+        for (ji, job) in res.jobs.iter().enumerate() {
+            let want = job.exit_reason().unwrap();
+            let got: Vec<ExitReason> = reported
+                .iter()
+                .filter(|&&(i, _)| i == ji)
+                .map(|&(_, r)| r)
+                .collect();
+            if want == ExitReason::Completed {
+                assert!(
+                    got.is_empty() || got == [ExitReason::Completed],
+                    "job {ji}: {got:?}"
+                );
+            } else {
+                assert_eq!(got, [want], "job {ji} verdict reporting");
+            }
+        }
+    }
+
+    #[test]
+    fn event_driven_admission_defers_refills_under_tight_memory() {
+        // a memory model that fits exactly one batch-2 adapter: the
+        // second slot's refill must wait for the first job's exit event
+        // even though the executor has 2 slots
+        let mem = MemoryModel {
+            k0: 0.0,
+            k1: 1.0,
+            seq_len: 1,
+            budget: 2.0,
+        };
+        let jobs = uniform_jobs(4, 2e-4, 2, 60);
+        let mut be = sim_backend(2, 2);
+        let mut cursor =
+            TaskCursor::new(&mut be, jobs, RunConfig::default()).with_admission(&mem, None);
+        while !cursor.run_segment().unwrap().done {}
+        let res = cursor.finish();
+        assert!(res.jobs.iter().all(|j| j.is_exited()), "all jobs must finish");
+        // width-1 execution: strictly more wall time than the unrestricted run
+        let free = run_task(
+            &mut sim_backend(2, 2),
+            uniform_jobs(4, 2e-4, 2, 60),
+            &RunConfig::default(),
+        )
+        .unwrap();
+        assert!(
+            res.wall_seconds > free.wall_seconds,
+            "restricted {} vs free {}",
+            res.wall_seconds,
+            free.wall_seconds
+        );
+    }
+
+    #[test]
+    fn roomy_admission_is_a_no_op() {
+        // plenty of memory + no pricer: admission-controlled execution
+        // is bitwise the unconditional one
+        let mem = MemoryModel {
+            k0: 0.0,
+            k1: 1.0,
+            seq_len: 1,
+            budget: 1e9,
+        };
+        let free = run_task(
+            &mut sim_backend(3, 2),
+            uniform_jobs(7, 2e-4, 2, 80),
+            &RunConfig::default(),
+        )
+        .unwrap();
+        let mut be = sim_backend(3, 2);
+        let mut cursor = TaskCursor::new(&mut be, uniform_jobs(7, 2e-4, 2, 80), RunConfig::default())
+            .with_admission(&mem, None);
+        while !cursor.run_segment().unwrap().done {}
+        let gated = cursor.finish();
+        assert_eq!(gated.wall_seconds.to_bits(), free.wall_seconds.to_bits());
+        assert_eq!(gated.samples_used, free.samples_used);
     }
 }

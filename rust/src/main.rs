@@ -3,11 +3,14 @@
 //! simulated H100 cluster.
 //!
 //! Subcommands:
-//!   info                         runtime + artifact inventory
-//!   run    --tasks <spec.json>   multi-task service (simulated cluster)
-//!   train  --artifact <key>      real PJRT sweep on a tiny-family model
-//!   sched  --tasks <spec.json>   plan placement only (prints the Gantt)
-//!   calibrate --artifact <key>   measure real step time / host GFLOPs
+//!
+//! ```text
+//! info                         runtime + artifact inventory
+//! run    --tasks <spec.json>   multi-task service (simulated cluster)
+//! train  --artifact <key>      real PJRT sweep on a tiny-family model
+//! sched  --tasks <spec.json>   plan placement only (prints the Gantt)
+//! calibrate --artifact <key>   measure real step time / host GFLOPs
+//! ```
 
 use alto::api::{EarlyExit, Engine};
 use alto::config::TaskSpec;

@@ -60,6 +60,21 @@
 //!   cohort member exits early, is evicted, or migrates, the survivors'
 //!   remaining durations are re-derived and the event clock shifts —
 //!   every shift is a `Reprice` event folded into the replay digest.
+//!   On the streaming path the same factors price bodies resolved
+//!   lazily at start events; batch and streaming timelines stay
+//!   bit-identical because the factor arithmetic is evaluated at the
+//!   same clock instants in both.
+//!
+//! ## Reference modes and re-arming
+//!
+//! Pricing is charged through [`crate::sched::inter::Pricing`];
+//! `Pricing::none()` restores the legacy placement-blind clock bit for
+//! bit (the ablation baseline the placement-isolation tests replay).
+//! Because the digest hashes raw f64 bits, *any* intentional change to
+//! the model's constants invalidates the golden replay pins and the
+//! committed bench baseline — both are armed by CI (the authoring
+//! container has no Rust toolchain); the re-arming procedure lives in
+//! `docs/ARCHITECTURE.md` and `rust/tests/golden/README.md`.
 
 pub mod contention;
 pub mod price;

@@ -112,6 +112,21 @@ pub const DEEP_HEAD: usize = 12;
 /// pre-optimization algorithms (full-fleet re-pricing, unbudgeted exact
 /// replans at every depth) for the equivalence property suite and the
 /// scale benchmark's before/after measurement.
+///
+/// ```
+/// use alto::sched::inter::SchedTuning;
+///
+/// let fast = SchedTuning::default();
+/// assert!(fast.incremental_reprice);
+/// assert_eq!(fast.deep_queue_threshold, 16);
+///
+/// // the retained pre-optimization reference: exact replans at every
+/// // depth, full-fleet re-pricing — what the property suite pins the
+/// // optimized path bitwise-equivalent against
+/// let reference = SchedTuning::reference();
+/// assert!(!reference.incremental_reprice);
+/// assert_eq!(reference.deep_queue_threshold, usize::MAX);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SchedTuning {
     /// Re-price only runners whose island neighborhood actually changed
@@ -208,7 +223,10 @@ pub struct Submission {
     /// Estimated duration (what the solver plans with).
     pub est_duration: f64,
     /// Actual duration in *nominal* (uncontended, single-island)
-    /// seconds; the pricer stretches it on the wall clock.
+    /// seconds; the pricer stretches it on the wall clock.  May be
+    /// `f64::NAN` when a body resolver is installed
+    /// ([`InterTaskScheduler::set_body_resolver`]): the value is then
+    /// resolved lazily at the task's first start — the streaming path.
     pub actual_duration: f64,
     /// Arrival time (must be non-decreasing across submissions).
     pub arrival: f64,
@@ -326,6 +344,13 @@ pub struct InterTaskScheduler {
     cluster: SimCluster,
     /// Duration pricing (None ⇒ the legacy placement-blind clock).
     pricer: Option<Pricer>,
+    /// Lazy body resolution (the streaming path): tasks submitted with
+    /// `actual_duration: f64::NAN` have their actual (nominal-seconds)
+    /// duration resolved by this callback at their *first start*, inside
+    /// `start_task`, before the completion time is derived — so the
+    /// resulting timeline is bit-identical to a batch run that knew the
+    /// duration at submission.
+    body_resolver: Option<Box<dyn FnMut(usize) -> f64>>,
     /// Does the pricer's topology match the cluster's?  (It always does
     /// in the harness; a mismatched model disables the island-index
     /// contention fast path so grouping stays faithful to the model.)
@@ -381,6 +406,7 @@ impl InterTaskScheduler {
             tuning: SchedTuning::default(),
             cluster,
             pricer: None,
+            body_resolver: None,
             topo_matches: false,
             tasks: BTreeMap::new(),
             clock: 0.0,
@@ -420,6 +446,18 @@ impl InterTaskScheduler {
             t.nominal_step = 0.0;
         }
         self.dirty.extend(0..self.residents.len());
+    }
+
+    /// Install a lazy body resolver (the streaming path): a task
+    /// submitted with `actual_duration: f64::NAN` gets its actual
+    /// duration from this callback at its first start — *before* its
+    /// completion time is derived and before the replan's re-pricing
+    /// pass, so the event stream is bit-identical to a batch run that
+    /// supplied the same duration at submission.  The callback must not
+    /// call back into the scheduler; it is invoked exactly once per
+    /// NaN-submitted task, in start order.
+    pub fn set_body_resolver(&mut self, resolver: Box<dyn FnMut(usize) -> f64>) {
+        self.body_resolver = Some(resolver);
     }
 
     pub fn total_gpus(&self) -> usize {
@@ -876,6 +914,21 @@ impl InterTaskScheduler {
                 let v = pr.model.nominal_step_total(&shape.workload, gpus);
                 self.tasks.get_mut(&id).unwrap().nominal_step = v;
             }
+        }
+        // lazy body resolution (streaming): a NaN actual means the
+        // task's body has not been simulated yet — resolve it now, at
+        // first start, so the completion below uses the real duration
+        if self.tasks[&id].actual_remaining.is_nan() {
+            let resolver = self
+                .body_resolver
+                .as_mut()
+                .expect("actual_duration is NaN but no body resolver is installed");
+            let actual = resolver(id);
+            debug_assert!(
+                actual.is_finite() && actual >= 0.0,
+                "body resolver returned {actual} for task {id}"
+            );
+            self.tasks.get_mut(&id).unwrap().actual_remaining = actual;
         }
         // price the run segment: placement/contention slowdown plus a
         // one-off checkpoint transfer when this resume moved GPUs
@@ -1549,6 +1602,39 @@ mod tests {
         }
         s.run_to_completion();
         assert_eq!(s.deep_plans, 0, "10 tasks must replan exactly");
+    }
+
+    #[test]
+    fn lazy_body_resolution_matches_batch_submission_bitwise() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        let durations = [10.0f64, 25.0, 7.0, 18.0];
+        // batch: actuals known at submission time
+        let mut batch = InterTaskScheduler::new(4, Policy::Optimal);
+        for (i, &d) in durations.iter().enumerate() {
+            batch.submit_at(i, 1 + i % 2, d * 2.0, d, i as f64);
+        }
+        let mk_batch = batch.run_to_completion();
+        let batch_starts = batch.drain_started();
+        // streaming: actuals resolved lazily at first start
+        let order: Rc<RefCell<Vec<usize>>> = Rc::new(RefCell::new(Vec::new()));
+        let mut stream = InterTaskScheduler::new(4, Policy::Optimal);
+        let seen = order.clone();
+        stream.set_body_resolver(Box::new(move |id| {
+            seen.borrow_mut().push(id);
+            durations[id]
+        }));
+        for (i, &d) in durations.iter().enumerate() {
+            stream.submit_at(i, 1 + i % 2, d * 2.0, f64::NAN, i as f64);
+        }
+        let mk_stream = stream.run_to_completion();
+        assert!(stream.all_done());
+        assert_eq!(mk_stream.to_bits(), mk_batch.to_bits(), "clock drifted");
+        assert_eq!(stream.drain_started(), batch_starts, "decisions drifted");
+        // every body resolved exactly once, in start order
+        let mut resolved = order.borrow().clone();
+        resolved.sort_unstable();
+        assert_eq!(resolved, vec![0, 1, 2, 3]);
     }
 
     // --- duration pricing -------------------------------------------------

@@ -198,6 +198,38 @@ fn admit_inner(
     }
 }
 
+/// Event-driven slot admission (the streaming §7.1 path): should a
+/// vacated executor slot seat `candidate` *right now*, given the
+/// adapters still resident on the executor?  The first adapter of an
+/// empty executor is always admitted — the task must make progress, and
+/// the real system would fall back to gradient accumulation rather than
+/// starve.  Otherwise the memory model must fit the grown total batch
+/// and, when a pricer is supplied, the wider group must still clear the
+/// marginal-throughput bar.
+///
+/// This is the per-event form of [`admit`]/[`admit_priced`]: instead of
+/// planning a group's width once up front, the decision is re-made at
+/// every exit event over whatever is resident at that instant —
+/// `coordinator::task_runner::TaskCursor::with_admission` drives it.
+pub fn admit_slot(
+    candidate: &HyperParams,
+    resident_ranks: &[usize],
+    resident_batch: usize,
+    mem: &MemoryModel,
+    pricer: Option<&GroupPricer<'_>>,
+) -> bool {
+    if resident_ranks.is_empty() {
+        return true;
+    }
+    if !mem.fits(resident_batch + candidate.batch_size) {
+        return false;
+    }
+    match pricer {
+        Some(p) => p.worth_admitting(resident_ranks, candidate.rank, candidate.batch_size),
+        None => true,
+    }
+}
+
 /// Backfill one vacated slot: prefer a pending job with the same batch
 /// size as the departing one; fall back to any fitting job if allowed.
 /// Returns the chosen pending index.
@@ -440,6 +472,33 @@ mod tests {
             backfill_priced(&[hp(8)], 1, 16, &mem(16), true, &[16], &free),
             None
         );
+    }
+
+    #[test]
+    fn admit_slot_seeds_unconditionally_then_binds() {
+        use crate::cluster::gpu::GpuSpec;
+        use crate::config::MODEL_FAMILY;
+        // an empty executor always seats its first job, even one that
+        // violates the memory budget (grad-accum fallback)
+        let tight = mem(1);
+        assert!(admit_slot(&hp(8), &[], 0, &tight, None));
+        // with residents, memory binds...
+        assert!(!admit_slot(&hp(8), &[16], 8, &mem(12), None));
+        assert!(admit_slot(&hp(4), &[16], 8, &mem(12), None));
+        // ...and so does a demanding pricer (saturated large-batch group)
+        let shape = MODEL_FAMILY.get("llama-8b").unwrap();
+        let model = StepTimeModel::nominal(GpuSpec::h100_sxm5());
+        let strict = GroupPricer {
+            model: &model,
+            shape: &shape,
+            seq_len: 512,
+            gpus: 1,
+            min_marginal_gain: 0.9,
+        };
+        assert!(!admit_slot(&hp(8), &[16, 16], 16, &mem(64), Some(&strict)));
+        // a zero gain bar admits what memory admits
+        let free = GroupPricer { min_marginal_gain: 0.0, ..strict };
+        assert!(admit_slot(&hp(8), &[16, 16], 16, &mem(64), Some(&free)));
     }
 
     #[test]

@@ -1,6 +1,34 @@
 //! Hierarchical scheduling (paper §7): the exact inter-task makespan
 //! solver (CP-SAT replacement), the event-driven cluster scheduler, and
 //! the greedy intra-task admission/backfill policies.
+//!
+//! # Invariants
+//!
+//! Every hot-path optimization in this layer retains a **bit-identical
+//! reference mode**, so equivalence is a test, not a hope:
+//!
+//! * [`inter::SchedTuning::reference`] disables incremental dirty-set
+//!   re-pricing and deep-queue anytime planning; the optimized defaults
+//!   must drain identical decisions and digests on shallow queues
+//!   (`rust/tests/sched_scale_props.rs` pins this across generators and
+//!   seeds).
+//! * [`inter::Pricing::none`] restores the legacy placement-blind
+//!   clock bit for bit — the ablation baseline
+//!   (`rust/tests/placement_integration.rs`).
+//! * Lazy body resolution ([`inter::InterTaskScheduler::set_body_resolver`],
+//!   the streaming path) resolves a task's actual duration at its first
+//!   start, *before* the completion time is derived — so a streaming
+//!   timeline is bit-identical to a batch run that knew every duration
+//!   at submission (`rust/tests/simharness_e2e.rs`).
+//!
+//! Determinism everywhere else comes from total tie-breaking: the
+//! solver and queue disciplines break ties on task id, placement
+//! policies on the lowest island/GPU index, preemption on (youngest
+//! start, highest id).  No scheduler code draws randomness.
+//!
+//! See `docs/ARCHITECTURE.md` for the full event flow and the baseline
+//! re-arming procedure (goldens and `BENCH_sched_scale.json` are armed
+//! by CI — the authoring container has no Rust toolchain).
 
 pub mod inter;
 pub mod intra;
@@ -11,8 +39,8 @@ pub use inter::{
     SchedTuning, StartDecision, Submission, TaskShape,
 };
 pub use intra::{
-    admit, admit_priced, backfill, backfill_priced, group_by_batch, AdmissionPlan,
-    GroupPricer,
+    admit, admit_priced, admit_slot, backfill, backfill_priced, group_by_batch,
+    AdmissionPlan, GroupPricer,
 };
 pub use solver::{
     fcfs_schedule, lower_bound, lpt_schedule, sjf_schedule, solve, solve_anytime,

@@ -1,16 +1,25 @@
 //! The discrete-event engine: replays a [`Trace`] through the *existing*
 //! ALTO components end to end.
 //!
-//! For every arriving task the engine simulates its full intra-task
-//! search — `trajsim::SimJob` loss trajectories feeding the Algorithm-1
+//! For every task the engine simulates its full intra-task search —
+//! `trajsim::SimJob` loss trajectories feeding the Algorithm-1
 //! `PatternDetector`s over batched `SimBackend` executor slots
-//! (`coordinator::task_runner`), with executor width chosen by the fitted
-//! memory model + greedy admission (`sched::intra`, "adapter repacking")
-//! — yielding the task's *actual* GPU occupancy time, usually far below
-//! its worst-case estimate because of early exits.  The cluster timeline
-//! then plays out event by event on the virtual clock: arrivals and
-//! completions trigger `sched::inter` replanning, freed capacity is
-//! backfilled instantly, and every decision lands in the [`EventLog`].
+//! (`coordinator::task_runner::TaskCursor`, segment by segment), with
+//! executor width chosen by the fitted memory model + greedy admission
+//! (`sched::intra`, "adapter repacking"; freed slots re-admit at exit
+//! events) — yielding the task's *actual* GPU occupancy time, usually
+//! far below its worst-case estimate because of early exits.  The
+//! cluster timeline plays out event by event on the virtual clock:
+//! arrivals and completions trigger `sched::inter` replanning, freed
+//! capacity is backfilled instantly, and every decision lands in the
+//! [`EventLog`].
+//!
+//! Bodies reach the timeline two ways: [`SimEngine::run`] simulates
+//! every body eagerly up front and then replays, while
+//! [`SimEngine::run_streaming`] simulates each body lazily at its first
+//! start — one event loop end to end, memoized across duplicate specs —
+//! and replays the batch digest bit for bit (see the module docs of
+//! [`crate::simharness`] and `docs/ARCHITECTURE.md`).
 //!
 //! Everything is a pure function of (config, trace): replaying the same
 //! trace yields a bit-identical event log and makespan, which the
@@ -28,19 +37,22 @@
 //! (`cluster::comm::p2p_time`).  `Pricing::none()` restores the legacy
 //! placement-blind clock bit for bit.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::rc::Rc;
 
 use anyhow::{Context, Result};
 
 use crate::cluster::gpu::GpuSpec;
 use crate::cluster::{PlacePolicy, Placement, SimCluster, Topology};
-use crate::config::{HyperParams, TaskSpec, MODEL_FAMILY};
+use crate::config::{HyperParams, ModelShape, TaskSpec, MODEL_FAMILY};
 use crate::coordinator::executor::SimBackend;
-use crate::coordinator::memory_model;
+use crate::coordinator::job::ExitReason;
+use crate::coordinator::memory_model::{self, MemoryModel};
 use crate::coordinator::profiler::Profiler;
 use crate::coordinator::service::TaskOutcome;
-use crate::coordinator::task_runner::{make_jobs, run_task, RunConfig};
-use crate::data::synth::dataset_profile;
+use crate::coordinator::task_runner::{make_jobs, RunConfig, TaskCursor};
+use crate::data::synth::{dataset_profile, DatasetProfile};
 use crate::perfmodel::{task_workload, StepTimeModel};
 use crate::sched::inter::{InterTaskScheduler, Policy, Pricing, SchedTuning, Submission, TaskShape};
 use crate::sched::intra::{admit_priced, group_by_batch, GroupPricer};
@@ -79,6 +91,11 @@ pub struct HarnessConfig {
     /// memory model + perfmodel pricing may admit fewer (see
     /// `simulate_task`).
     pub n_slots: usize,
+    /// Streaming path only: fold body-level markers ([`EventKind::Segment`]
+    /// / [`EventKind::JobExit`]) into the event log at each task's start
+    /// time.  Off by default so [`SimEngine::run_streaming`] replays
+    /// bit-identical digests against the batch [`SimEngine::run`].
+    pub log_body_events: bool,
 }
 
 impl Default for HarnessConfig {
@@ -94,6 +111,7 @@ impl Default for HarnessConfig {
             run: RunConfig::default(),
             gpu: GpuSpec::h100_sxm5(),
             n_slots: 4,
+            log_body_events: false,
         }
     }
 }
@@ -161,6 +179,128 @@ pub struct Timeline {
     pub migration_charge: f64,
 }
 
+/// A body-level marker produced while a task body is simulated on the
+/// streaming path; folded into the event log as [`EventKind::Segment`] /
+/// [`EventKind::JobExit`] events (at the task's start time) when
+/// [`HarnessConfig::log_body_events`] is set.  Offsets are *nominal*
+/// body seconds — the cluster layer may stretch them on the priced
+/// clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BodyMark {
+    /// One homogeneous batch group finished; `seq` is the group index.
+    Segment { seq: usize, nominal_end: f64 },
+    /// A search job reached an early-exit verdict.
+    JobExit {
+        job: usize,
+        reason: ExitReason,
+        nominal_at: f64,
+    },
+}
+
+/// Placement-independent plan of one task body (see
+/// `SimEngine::body_plan`): what admission decides before any loss
+/// trajectory runs.
+struct BodyPlan {
+    model: ModelShape,
+    profile: DatasetProfile,
+    seq_len: usize,
+    mem: MemoryModel,
+    /// The expanded search space, in expansion order (job index order).
+    hps: Vec<HyperParams>,
+    /// (batch size, member job indices, planned width) per homogeneous
+    /// group, descending batch size.
+    groups: Vec<(usize, Vec<usize>, usize)>,
+}
+
+/// What the streaming memo retains per *distinct* body: everything the
+/// scheduler and the summaries need, none of the per-job loss
+/// histories a full [`TaskOutcome`] drags along.
+#[derive(Debug, Clone)]
+struct BodyOutcome {
+    actual_duration: f64,
+    best_val: f64,
+    samples_used: usize,
+    samples_budget: usize,
+    /// Body markers (only collected under `log_body_events`).
+    marks: Vec<BodyMark>,
+}
+
+/// Lean per-task record [`SimEngine::run_streaming`] returns instead of
+/// a full [`TaskOutcome`] — the peak-retained-memory half of the
+/// streaming win (no per-job loss histories or group results).
+#[derive(Debug, Clone)]
+pub struct TaskSummary {
+    pub name: String,
+    pub gpus: usize,
+    pub est_duration: f64,
+    pub actual_duration: f64,
+    pub best_val: f64,
+    pub samples_used: usize,
+    pub samples_budget: usize,
+}
+
+/// Outcome of [`SimEngine::run_streaming`].
+#[derive(Debug)]
+pub struct StreamReport {
+    /// The realized cluster timeline — same `digest()` as the batch
+    /// [`SimEngine::run`] for the same (config, trace) when
+    /// `log_body_events` is off.
+    pub timeline: Timeline,
+    /// Lean per-task outcomes, in trace order.
+    pub summaries: Vec<TaskSummary>,
+    /// Bodies actually simulated (distinct body-relevant spec shapes
+    /// retained in the memo).
+    pub distinct_bodies: usize,
+    /// Tasks whose body was served from the memo instead of simulated.
+    pub memo_hits: usize,
+}
+
+/// Shared state between the streaming event loop and the scheduler's
+/// lazy body resolver.
+struct StreamState {
+    engine: SimEngine,
+    profiler: Profiler,
+    specs: Vec<TaskSpec>,
+    collect_marks: bool,
+    /// Outcome memo keyed on the body-relevant spec shape (see
+    /// [`body_key`]): duplicate configs across a trace simulate once.
+    memo: BTreeMap<String, BodyOutcome>,
+    /// Per task (trace order): the lean body outcome once resolved.
+    resolved: Vec<Option<BodyOutcome>>,
+    memo_hits: usize,
+    /// First body-simulation failure, surfaced after the loop drains.
+    error: Option<anyhow::Error>,
+}
+
+/// The body-relevant identity of a spec — exactly the fields
+/// [`SimEngine::simulate_trace`] documents body simulation as depending
+/// on (model, dataset, objective, GPU width, seq len, epochs, samples,
+/// seed, search space).  The task *name* and *priority* are deliberately
+/// excluded: two tenants submitting the same sweep share one body.
+fn body_key(spec: &TaskSpec) -> String {
+    let mut k = format!(
+        "{}|{}|{}|{}|{}|{}|{}|{}",
+        spec.model,
+        spec.dataset,
+        spec.objective.as_str(),
+        spec.num_gpus,
+        spec.seq_len,
+        spec.epochs,
+        spec.train_samples,
+        spec.seed
+    );
+    for &lr in &spec.search_space.lrs {
+        k.push_str(&format!("|l{:016x}", lr.to_bits()));
+    }
+    for &r in &spec.search_space.ranks {
+        k.push_str(&format!("|r{r}"));
+    }
+    for &b in &spec.search_space.batch_sizes {
+        k.push_str(&format!("|b{b}"));
+    }
+    k
+}
+
 /// The event-driven cluster simulator.
 pub struct SimEngine {
     pub cfg: HarnessConfig,
@@ -171,26 +311,17 @@ impl SimEngine {
         SimEngine { cfg }
     }
 
-    /// Simulate one task's search end to end on the executor substrate:
-    /// one executor per homogeneous batch-size group (paper §A.1),
-    /// groups sharing the task's GPU allocation sequentially.  Executor
-    /// width per group comes from the fitted memory model + greedy
-    /// admission (§7.1) — a 70B task on too few GPUs co-locates fewer
-    /// adapters than `n_slots` allows.  Returns the outcome with the
-    /// *actual* duration (early exits included); `est_duration` is left
-    /// at 0.0 for the caller's profiler to fill.
-    pub fn simulate_task(&self, spec: &TaskSpec) -> Result<TaskOutcome> {
+    /// The placement-independent plan of one task body: model shape,
+    /// dataset profile, fitted memory model and per-group executor
+    /// widths — everything admission decides *before* a single loss
+    /// trajectory is simulated.
+    fn body_plan(&self, spec: &TaskSpec) -> Result<BodyPlan> {
         let model = MODEL_FAMILY
             .get(&spec.model)
             .with_context(|| format!("unknown model '{}'", spec.model))?;
         let profile = *dataset_profile(&spec.dataset)
             .with_context(|| format!("unknown dataset '{}'", spec.dataset))?;
-        let jobs = make_jobs(
-            &spec.search_space.expand(),
-            spec.epochs,
-            spec.train_samples,
-            spec.seed,
-        );
+        let hps = spec.search_space.expand();
         let seq_len = (spec.seq_len as f64 * profile.seq_scale) as usize;
         let mem = memory_model::profile(
             &model,
@@ -200,14 +331,6 @@ impl SimEngine {
             seq_len,
             spec.num_gpus,
         );
-        let hps: Vec<HyperParams> = jobs.iter().map(|j| j.hp.clone()).collect();
-        let mut group_results = Vec::new();
-        let mut group_slots = Vec::new();
-        let mut actual = 0.0;
-        let mut best_val = f64::INFINITY;
-        let mut used = 0;
-        let mut budget = 0;
-        let mut saved: BTreeMap<&'static str, usize> = BTreeMap::new();
         // admission prices candidate groups through the perfmodel: the
         // memory model says what fits, the pricer (gain bar 0) rejects
         // any co-location that would hurt sustained samples/s
@@ -219,6 +342,7 @@ impl SimEngine {
             gpus: spec.num_gpus,
             min_marginal_gain: 0.0,
         };
+        let mut groups = Vec::new();
         // homogeneous groups, descending batch size (paper §A.1)
         for (bs, members) in group_by_batch(&hps) {
             let group_hps: Vec<HyperParams> =
@@ -227,20 +351,111 @@ impl SimEngine {
             // memory-aware repack: when even one adapter does not fit the
             // margin, run width-1 anyway (the real system would fall back
             // to gradient accumulation rather than reject the task)
-            let slots = plan.admitted.len().clamp(1, self.cfg.n_slots.max(1));
-            group_slots.push((bs, slots));
+            let width = plan.admitted.len().clamp(1, self.cfg.n_slots.max(1));
+            groups.push((bs, members, width));
+        }
+        Ok(BodyPlan {
+            model,
+            profile,
+            seq_len,
+            mem,
+            hps,
+            groups,
+        })
+    }
+
+    /// Executor width plan per homogeneous batch group, `(batch size,
+    /// width)` in descending batch order — the placement-independent
+    /// prefix of [`SimEngine::simulate_task`] (fitted memory model +
+    /// priced greedy admission, §7.1/§A.3).  Cheap enough for arrival
+    /// time: no loss trajectory is simulated, so the streaming driver
+    /// can derive a task's co-location footprint before its body is.
+    pub fn plan_group_slots(&self, spec: &TaskSpec) -> Result<Vec<(usize, usize)>> {
+        Ok(self.body_plan(spec)?.groups.iter().map(|g| (g.0, g.2)).collect())
+    }
+
+    /// Simulate one task's search end to end on the executor substrate:
+    /// one executor per homogeneous batch-size group (paper §A.1),
+    /// groups sharing the task's GPU allocation sequentially.  Executor
+    /// width per group comes from the fitted memory model + greedy
+    /// admission (§7.1) — a 70B task on too few GPUs co-locates fewer
+    /// adapters than `n_slots` allows — re-checked at every freed slot
+    /// by the segment cursor's event-driven admission.  The outcome
+    /// carries the *actual* duration (early exits included) and the
+    /// profiler's duration estimate: every field is filled here, in one
+    /// place — no 0.0 placeholder for callers to forget.
+    pub fn simulate_task(&self, spec: &TaskSpec) -> Result<TaskOutcome> {
+        self.simulate_task_with(&mut Profiler::new(self.cfg.gpu.clone()), spec, None)
+    }
+
+    /// [`SimEngine::simulate_task`] against a caller-owned (cached)
+    /// profiler, optionally collecting body-level [`BodyMark`]s for the
+    /// streaming event log.  Both the batch and streaming paths funnel
+    /// through this one function, segment by segment over
+    /// [`TaskCursor`] — which is what makes their timelines
+    /// bit-identical by construction.
+    fn simulate_task_with(
+        &self,
+        profiler: &mut Profiler,
+        spec: &TaskSpec,
+        mut marks: Option<&mut Vec<BodyMark>>,
+    ) -> Result<TaskOutcome> {
+        let plan = self.body_plan(spec)?;
+        let jobs = make_jobs(&plan.hps, spec.epochs, spec.train_samples, spec.seed);
+        let perf = StepTimeModel::nominal(self.cfg.gpu.clone());
+        let pricer = GroupPricer {
+            model: &perf,
+            shape: &plan.model,
+            seq_len: plan.seq_len,
+            gpus: spec.num_gpus,
+            min_marginal_gain: 0.0,
+        };
+        let mut group_results = Vec::new();
+        let mut group_slots = Vec::new();
+        let mut actual = 0.0;
+        let mut best_val = f64::INFINITY;
+        let mut used = 0;
+        let mut budget = 0;
+        let mut saved: BTreeMap<&'static str, usize> = BTreeMap::new();
+        for (gi, (bs, members, width)) in plan.groups.iter().enumerate() {
+            group_slots.push((*bs, *width));
             let gjobs: Vec<_> = members.iter().map(|&i| jobs[i].clone()).collect();
             let mut backend = SimBackend::new(
-                model.clone(),
-                profile,
-                slots,
-                bs,
-                seq_len,
+                plan.model.clone(),
+                plan.profile,
+                *width,
+                *bs,
+                plan.seq_len,
                 self.cfg.gpu.clone(),
                 spec.num_gpus,
             );
-            let res = run_task(&mut backend, gjobs, &self.cfg.run)?;
+            let mut cursor = TaskCursor::new(&mut backend, gjobs, self.cfg.run.clone())
+                .with_admission(&plan.mem, Some(&pricer));
+            loop {
+                let seg = cursor.run_segment()?;
+                if let Some(m) = marks.as_mut() {
+                    for &(pos, reason) in &seg.exits {
+                        if reason != ExitReason::Completed {
+                            m.push(BodyMark::JobExit {
+                                job: cursor.jobs()[pos].id,
+                                reason,
+                                nominal_at: actual + cursor.wall_seconds(),
+                            });
+                        }
+                    }
+                }
+                if seg.done {
+                    break;
+                }
+            }
+            let res = cursor.finish();
             actual += res.wall_seconds;
+            if let Some(m) = marks.as_mut() {
+                m.push(BodyMark::Segment {
+                    seq: gi,
+                    nominal_end: actual,
+                });
+            }
             best_val = best_val.min(res.best_val());
             used += res.samples_used;
             budget += res.samples_budget;
@@ -249,10 +464,11 @@ impl SimEngine {
             }
             group_results.push(res);
         }
+        let est = profiler.estimate_duration(&plan.model, spec, self.cfg.n_slots);
         Ok(TaskOutcome {
             name: spec.name.clone(),
             gpus: spec.num_gpus,
-            est_duration: 0.0, // filled from the profiler by `run`
+            est_duration: est,
             actual_duration: actual,
             best_val,
             samples_used: used,
@@ -266,20 +482,18 @@ impl SimEngine {
     /// Simulate every task body in trace order (the expensive half of a
     /// run): actual durations from the executor substrate, estimated
     /// durations from the profiler.  The result depends only on the run
-    /// switches (`cfg.run`, `cfg.gpu`, `cfg.n_slots`) — not on
-    /// `total_gpus` or `policy` — so sweeps over cluster sizes and
-    /// policies can simulate once and `replay` many times.
+    /// switches (`cfg.run`, `cfg.gpu`, `cfg.n_slots`) and the body-
+    /// relevant spec fields (model, dataset, search space, epochs,
+    /// samples, seq len, GPU width, seed) — not on `total_gpus` or
+    /// `policy` — so sweeps over cluster sizes and policies can simulate
+    /// once and `replay` many times.  This is the *eager* path;
+    /// [`SimEngine::run_streaming`] simulates the same bodies lazily,
+    /// at start events, memoized across duplicate specs.
     pub fn simulate_trace(&self, trace: &Trace) -> Result<Vec<TaskOutcome>> {
         let mut profiler = Profiler::new(self.cfg.gpu.clone());
         let mut outcomes = Vec::with_capacity(trace.len());
         for entry in &trace.entries {
-            let model = MODEL_FAMILY
-                .get(&entry.spec.model)
-                .with_context(|| format!("unknown model '{}'", entry.spec.model))?;
-            let mut o = self.simulate_task(&entry.spec)?;
-            o.est_duration =
-                profiler.estimate_duration(&model, &entry.spec, self.cfg.n_slots);
-            outcomes.push(o);
+            outcomes.push(self.simulate_task_with(&mut profiler, &entry.spec, None)?);
         }
         Ok(outcomes)
     }
@@ -341,6 +555,10 @@ impl SimEngine {
         } else {
             None
         };
+        // NOTE: this event loop has a twin in `run_streaming` (same tie
+        // breaking, same drain order, same event payloads).  Any change
+        // here must be mirrored there — the streaming==batch digest
+        // equality in rust/tests/simharness_e2e.rs pins the pair.
         let mut log = EventLog::new();
         let mut placements: Vec<Placement> = vec![Placement::default(); outcomes.len()];
         let mut migrations = 0usize;
@@ -468,8 +686,24 @@ impl SimEngine {
         })
     }
 
-    /// Simulate + replay a whole trace.  Pure function of (cfg, trace):
-    /// same inputs ⇒ bit-identical event log and makespan.
+    /// Simulate + replay a whole trace — the *batch* path: every body
+    /// eagerly up front ([`SimEngine::simulate_trace`]), then the
+    /// cluster timeline ([`SimEngine::replay`]).  Pure function of
+    /// (cfg, trace): same inputs ⇒ bit-identical event log and makespan.
+    ///
+    /// ```
+    /// use alto::config::TaskSpec;
+    /// use alto::simharness::{HarnessConfig, SimEngine, Trace};
+    ///
+    /// let engine = SimEngine::new(HarnessConfig::default());
+    /// let trace = Trace::at_zero(vec![TaskSpec {
+    ///     train_samples: 32,
+    ///     ..TaskSpec::default()
+    /// }]);
+    /// let report = engine.run(&trace).unwrap();
+    /// assert!(report.makespan > 0.0);
+    /// assert_eq!(report.outcomes.len(), 1);
+    /// ```
     pub fn run(&self, trace: &Trace) -> Result<HarnessReport> {
         let outcomes = self.simulate_trace(trace)?;
         let tl = self.replay(trace, &outcomes)?;
@@ -493,6 +727,329 @@ impl SimEngine {
     /// batch-submission shape the service front end uses).
     pub fn run_specs(&self, specs: &[TaskSpec]) -> Result<HarnessReport> {
         self.run(&Trace::at_zero(specs.to_vec()))
+    }
+
+    /// The *streaming* path: one event loop end to end, with each
+    /// task's body simulated lazily at the moment the scheduler first
+    /// starts it — so early exits and intra-task repacks interleave
+    /// with cluster events instead of being resolved before the clock
+    /// starts.  Bodies are memoized on their body-relevant spec shape
+    /// (model, dataset, search space, epochs, samples, seq len, GPU
+    /// width, seed): duplicate configs across a trace simulate once,
+    /// and only lean [`TaskSummary`]s are retained per task.
+    ///
+    /// Invariant (pinned by `rust/tests/simharness_e2e.rs` and the
+    /// scale bench): with `log_body_events` off, the timeline is
+    /// **bit-identical** — same `EventLog::digest()`, makespan bits and
+    /// placements — to the batch [`SimEngine::run`], pricing included.
+    ///
+    /// ```
+    /// use alto::config::TaskSpec;
+    /// use alto::simharness::{HarnessConfig, SimEngine, Trace};
+    ///
+    /// let engine = SimEngine::new(HarnessConfig::default());
+    /// let trace = Trace::at_zero(vec![TaskSpec {
+    ///     train_samples: 32,
+    ///     ..TaskSpec::default()
+    /// }]);
+    /// let batch = engine.run(&trace).unwrap();
+    /// let stream = engine.run_streaming(&trace).unwrap();
+    /// assert_eq!(stream.timeline.log.digest(), batch.log.digest());
+    /// assert_eq!(stream.timeline.makespan.to_bits(), batch.makespan.to_bits());
+    /// ```
+    pub fn run_streaming(&self, trace: &Trace) -> Result<StreamReport> {
+        // pre-validate the whole trace up front, mirroring the batch
+        // path's fail-before-any-event behavior
+        for entry in &trace.entries {
+            anyhow::ensure!(
+                entry.spec.num_gpus <= self.cfg.total_gpus,
+                "task '{}' needs {} GPUs but the cluster has {}",
+                entry.spec.name,
+                entry.spec.num_gpus,
+                self.cfg.total_gpus
+            );
+            MODEL_FAMILY
+                .get(&entry.spec.model)
+                .with_context(|| format!("unknown model '{}'", entry.spec.model))?;
+            dataset_profile(&entry.spec.dataset)
+                .with_context(|| format!("unknown dataset '{}'", entry.spec.dataset))?;
+        }
+        let topo = self.cfg.topology();
+        let cluster = SimCluster::with_topology(self.cfg.gpu.clone(), topo.clone());
+        let mut sched = InterTaskScheduler::with_cluster(cluster, self.cfg.policy);
+        sched.place = self.cfg.place;
+        sched.enable_preemption = self.cfg.preempt_on_arrival;
+        sched.tuning = self.cfg.tuning;
+        let priced = self.cfg.pricing.any();
+        if priced {
+            sched.set_pricer(
+                StepTimeModel::new(self.cfg.gpu.clone(), topo.clone()),
+                self.cfg.pricing,
+            );
+        }
+        let n = trace.len();
+        let state = Rc::new(RefCell::new(StreamState {
+            engine: SimEngine::new(self.cfg.clone()),
+            profiler: Profiler::new(self.cfg.gpu.clone()),
+            specs: trace.entries.iter().map(|e| e.spec.clone()).collect(),
+            collect_marks: self.cfg.log_body_events,
+            memo: BTreeMap::new(),
+            resolved: (0..n).map(|_| None).collect(),
+            memo_hits: 0,
+            error: None,
+        }));
+        {
+            // the lazy body resolver: runs inside the scheduler's
+            // start_task, exactly once per task, in start order
+            let st = Rc::clone(&state);
+            sched.set_body_resolver(Box::new(move |id| {
+                let mut guard = st.borrow_mut();
+                let s = &mut *guard;
+                if s.error.is_some() {
+                    return 0.0; // drain the timeline; the error surfaces after
+                }
+                let key = body_key(&s.specs[id]);
+                if let Some(hit) = s.memo.get(&key) {
+                    s.memo_hits += 1;
+                    let out = hit.clone();
+                    let d = out.actual_duration;
+                    s.resolved[id] = Some(out);
+                    return d;
+                }
+                let mut marks = Vec::new();
+                let collected = if s.collect_marks { Some(&mut marks) } else { None };
+                match s.engine.simulate_task_with(&mut s.profiler, &s.specs[id], collected)
+                {
+                    Ok(o) => {
+                        let body = BodyOutcome {
+                            actual_duration: o.actual_duration,
+                            best_val: o.best_val,
+                            samples_used: o.samples_used,
+                            samples_budget: o.samples_budget,
+                            marks,
+                        };
+                        s.memo.insert(key, body.clone());
+                        let d = body.actual_duration;
+                        s.resolved[id] = Some(body);
+                        d
+                    }
+                    Err(e) => {
+                        s.error = Some(e);
+                        0.0
+                    }
+                }
+            }));
+        }
+        // NOTE: twin of the `replay` event loop — same tie breaking,
+        // drain order and event payloads, differing only in lazy
+        // est/shape derivation, NaN actuals, and the body-mark fold.
+        // Any change must be mirrored there (the digest-equality tests
+        // pin the pair).
+        let mut log = EventLog::new();
+        let mut placements: Vec<Placement> = vec![Placement::default(); n];
+        let mut ests: Vec<f64> = vec![0.0; n];
+        let mut body_logged: Vec<bool> = vec![false; n];
+        let mut migrations = 0usize;
+        let mut cross_island_allocs = 0usize;
+        let mut placement_comm_cost = 0.0f64;
+        let mut reprices = 0usize;
+        let mut next_arrival = 0usize;
+        loop {
+            let arrival = trace.entries.get(next_arrival).map(|e| e.arrival);
+            let completion = sched.peek_next_completion();
+            // completions win time ties: capacity frees before the
+            // arriving task replans over it — identical to the batch loop
+            let take_arrival = match (arrival, completion) {
+                (None, None) => break,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (Some(at), Some((_, ct))) => at < ct,
+            };
+            if take_arrival {
+                let i = next_arrival;
+                next_arrival += 1;
+                let entry = &trace.entries[i];
+                let at = entry.arrival;
+                let gpus = entry.spec.num_gpus;
+                log.record(at, EventKind::Arrival { task: i, gpus });
+                let model = MODEL_FAMILY.get(&entry.spec.model).expect("pre-validated");
+                let est = {
+                    let mut guard = state.borrow_mut();
+                    guard
+                        .profiler
+                        .estimate_duration(&model, &entry.spec, self.cfg.n_slots)
+                };
+                ests[i] = est;
+                // the co-location footprint comes from the cheap width
+                // plan, not the body — identical to what the batch path
+                // derives from the simulated outcome's group widths
+                let shape = if priced {
+                    let widths = self.plan_group_slots(&entry.spec)?;
+                    let adapters =
+                        widths.iter().map(|&(_, s)| s).max().unwrap_or(1).max(1);
+                    Some(TaskShape {
+                        workload: task_workload(&model, &entry.spec, adapters),
+                        adapters,
+                        rank: entry.spec.search_space.max_rank().max(1),
+                    })
+                } else {
+                    None
+                };
+                sched.submit_spec(Submission {
+                    id: i,
+                    gpus,
+                    est_duration: est,
+                    actual_duration: f64::NAN, // resolved lazily at first start
+                    arrival: at,
+                    priority: entry.spec.priority,
+                    shape,
+                });
+            } else {
+                let (id, at) = sched
+                    .complete_next()
+                    .context("processing the next completion event")?
+                    .expect("peeked completion");
+                log.record(
+                    at,
+                    EventKind::Complete {
+                        task: id,
+                        gpus: trace.entries[id].spec.num_gpus,
+                    },
+                );
+            }
+            for p in sched.drain_preempted() {
+                log.record(
+                    p.time,
+                    EventKind::Preempt {
+                        task: p.id,
+                        gpus: trace.entries[p.id].spec.num_gpus,
+                        placement: p.placement,
+                    },
+                );
+            }
+            for d in sched.drain_started() {
+                if topo.is_cross_island(&d.placement) {
+                    cross_island_allocs += 1;
+                }
+                placement_comm_cost += topo.placement_comm_cost(
+                    &self.cfg.gpu,
+                    &d.placement,
+                    crate::cluster::topology::PLACE_SCORE_BYTES,
+                );
+                placements[d.id] = d.placement.clone();
+                let gpus = trace.entries[d.id].spec.num_gpus;
+                let kind = match d.resumed_from {
+                    None => EventKind::Start {
+                        task: d.id,
+                        gpus,
+                        placement: d.placement,
+                    },
+                    Some(prev) if prev == d.placement => EventKind::Placed {
+                        task: d.id,
+                        gpus,
+                        placement: d.placement,
+                    },
+                    Some(prev) => {
+                        migrations += 1;
+                        EventKind::Migrate {
+                            task: d.id,
+                            gpus,
+                            from: prev,
+                            to: d.placement,
+                        }
+                    }
+                };
+                log.record(d.time, kind);
+                // fold the just-resolved body's markers in at start time
+                if self.cfg.log_body_events && !body_logged[d.id] {
+                    body_logged[d.id] = true;
+                    let marks: Vec<BodyMark> = state
+                        .borrow()
+                        .resolved[d.id]
+                        .as_ref()
+                        .map(|b| b.marks.clone())
+                        .unwrap_or_default();
+                    for mk in marks {
+                        let kind = match mk {
+                            BodyMark::Segment { seq, nominal_end } => EventKind::Segment {
+                                task: d.id,
+                                gpus,
+                                seq,
+                                nominal_end,
+                            },
+                            BodyMark::JobExit { job, reason, nominal_at } => {
+                                EventKind::JobExit {
+                                    task: d.id,
+                                    gpus,
+                                    job,
+                                    reason,
+                                    nominal_at,
+                                }
+                            }
+                        };
+                        log.record(d.time, kind);
+                    }
+                }
+            }
+            for r in sched.drain_repriced() {
+                reprices += 1;
+                log.record(
+                    r.time,
+                    EventKind::Reprice {
+                        task: r.id,
+                        gpus: trace.entries[r.id].spec.num_gpus,
+                        completion: r.completion,
+                    },
+                );
+            }
+        }
+        {
+            let mut guard = state.borrow_mut();
+            if let Some(e) = guard.error.take() {
+                return Err(e);
+            }
+        }
+        anyhow::ensure!(
+            sched.all_done(),
+            "timeline ended with unfinished tasks (policy {:?}, {} GPUs)",
+            self.cfg.policy,
+            self.cfg.total_gpus
+        );
+        let timeline = Timeline {
+            makespan: sched.makespan(),
+            log,
+            placements,
+            gpu_seconds: sched.charged_gpu_seconds(),
+            replans: sched.replans,
+            preemptions: sched.preemptions,
+            migrations,
+            cross_island_allocs,
+            placement_comm_cost,
+            reprices,
+            migration_charge: sched.migration_charge,
+        };
+        let guard = state.borrow();
+        let mut summaries = Vec::with_capacity(n);
+        for (i, entry) in trace.entries.iter().enumerate() {
+            let b = guard.resolved[i]
+                .as_ref()
+                .expect("every completed task has a resolved body");
+            summaries.push(TaskSummary {
+                name: entry.spec.name.clone(),
+                gpus: entry.spec.num_gpus,
+                est_duration: ests[i],
+                actual_duration: b.actual_duration,
+                best_val: b.best_val,
+                samples_used: b.samples_used,
+                samples_budget: b.samples_budget,
+            });
+        }
+        Ok(StreamReport {
+            timeline,
+            summaries,
+            distinct_bodies: guard.memo.len(),
+            memo_hits: guard.memo_hits,
+        })
     }
 }
 
@@ -649,5 +1206,103 @@ mod tests {
         let b = SimEngine::new(HarnessConfig::default()).run(&trace).unwrap();
         assert_eq!(a.log.digest(), b.log.digest());
         assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    }
+
+    #[test]
+    fn streaming_replays_batch_bitwise() {
+        let trace = Trace::poisson(hetero_mix(4, 48, 2), 500.0, 11);
+        let engine = SimEngine::new(HarnessConfig::default());
+        let batch = engine.run(&trace).unwrap();
+        let stream = engine.run_streaming(&trace).unwrap();
+        assert_eq!(stream.timeline.log.digest(), batch.log.digest());
+        assert_eq!(stream.timeline.makespan.to_bits(), batch.makespan.to_bits());
+        assert_eq!(stream.timeline.placements, batch.placements);
+        assert_eq!(stream.timeline.gpu_seconds.to_bits(), batch.gpu_seconds.to_bits());
+        assert_eq!(stream.timeline.reprices, batch.reprices);
+        // summaries carry the same durations the batch outcomes do
+        assert_eq!(stream.summaries.len(), batch.outcomes.len());
+        for (s, o) in stream.summaries.iter().zip(&batch.outcomes) {
+            assert_eq!(s.name, o.name);
+            assert_eq!(s.actual_duration.to_bits(), o.actual_duration.to_bits());
+            assert_eq!(s.est_duration.to_bits(), o.est_duration.to_bits());
+            assert_eq!(s.samples_used, o.samples_used);
+        }
+    }
+
+    #[test]
+    fn duplicate_specs_simulate_one_body() {
+        // three tenants, same sweep, different names: one body simulated
+        let base = tiny_spec("a", "llama-8b", 1);
+        let mut b = base.clone();
+        b.name = "b".into();
+        let mut c = base.clone();
+        c.name = "c".into();
+        let trace = Trace::at_zero(vec![base, b, c]);
+        let engine = SimEngine::new(HarnessConfig::default());
+        let stream = engine.run_streaming(&trace).unwrap();
+        assert_eq!(stream.distinct_bodies, 1, "duplicate specs must share a body");
+        assert_eq!(stream.memo_hits, 2);
+        // every duplicate reports the shared body's exact duration
+        let d0 = stream.summaries[0].actual_duration.to_bits();
+        assert!(stream.summaries.iter().all(|s| s.actual_duration.to_bits() == d0));
+        // and the memoized timeline still matches the batch path bitwise
+        let batch = engine.run(&trace).unwrap();
+        assert_eq!(stream.timeline.log.digest(), batch.log.digest());
+    }
+
+    #[test]
+    fn body_events_are_additive_and_strippable() {
+        let trace = Trace::at_zero(vec![
+            tiny_spec("a", "llama-8b", 1),
+            tiny_spec("b", "qwen-32b", 2),
+        ]);
+        let plain = SimEngine::new(HarnessConfig::default())
+            .run_streaming(&trace)
+            .unwrap();
+        let logged = SimEngine::new(HarnessConfig {
+            log_body_events: true,
+            ..HarnessConfig::default()
+        })
+        .run_streaming(&trace)
+        .unwrap();
+        let segments = logged
+            .timeline
+            .log
+            .count(|k| matches!(k, EventKind::Segment { .. }));
+        assert!(segments > 0, "body segments must be logged");
+        assert!(
+            logged
+                .timeline
+                .log
+                .count(|k| matches!(k, EventKind::JobExit { .. }))
+                > 0,
+            "early exits must surface as events"
+        );
+        // dropping the body markers restores the plain timeline bitwise
+        let mut stripped = EventLog::new();
+        for e in logged.timeline.log.events() {
+            if !matches!(
+                e.kind,
+                EventKind::Segment { .. } | EventKind::JobExit { .. }
+            ) {
+                stripped.record(e.time, e.kind.clone());
+            }
+        }
+        assert_eq!(stripped.digest(), plain.timeline.log.digest());
+        // and the body-bearing log round-trips through jsonl bit-for-bit
+        let back = EventLog::from_jsonl(&logged.timeline.log.to_jsonl()).unwrap();
+        assert_eq!(back.digest(), logged.timeline.log.digest());
+    }
+
+    #[test]
+    fn streaming_rejects_oversized_tasks_before_any_event() {
+        let engine = SimEngine::new(HarnessConfig {
+            total_gpus: 2,
+            ..HarnessConfig::default()
+        });
+        let err = engine
+            .run_streaming(&Trace::at_zero(vec![tiny_spec("wide", "llama-70b", 4)]))
+            .unwrap_err();
+        assert!(err.to_string().contains("4 GPUs"), "{err}");
     }
 }

@@ -2,7 +2,9 @@
 //!
 //! Every run of the harness produces an [`EventLog`]: the totally ordered
 //! sequence of arrival / start / completion (and, with preemption
-//! enabled, preempt / placed / migrate) events the engine processed.
+//! enabled, preempt / placed / migrate; with pricing, reprice; with
+//! `log_body_events` on the streaming path, segment / job-exit) events
+//! the engine processed.
 //! Starts and re-placements carry the *concrete GPU indices* the task
 //! holds, so the log is a complete record of the cluster bitmap over
 //! time.  The log is the determinism contract — replaying the same
@@ -17,6 +19,7 @@ use std::fmt;
 use anyhow::Result;
 
 use crate::cluster::Placement;
+use crate::coordinator::job::ExitReason;
 use crate::util::hash::{fnv1a_mix, FNV_OFFSET};
 use crate::util::json::Json;
 
@@ -64,6 +67,26 @@ pub enum EventKind {
         gpus: usize,
         completion: f64,
     },
+    /// One homogeneous batch group of a lazily simulated task body
+    /// finished (streaming path with `HarnessConfig::log_body_events`):
+    /// `seq` is the group index within the task and `nominal_end` the
+    /// cumulative *nominal* body seconds after this segment.  Logged at
+    /// the task's start time — body simulation resolves there.
+    Segment {
+        task: usize,
+        gpus: usize,
+        seq: usize,
+        nominal_end: f64,
+    },
+    /// A search job inside a lazily simulated body reached an early-exit
+    /// verdict (`reason`), `nominal_at` nominal body seconds in.
+    JobExit {
+        task: usize,
+        gpus: usize,
+        job: usize,
+        reason: ExitReason,
+        nominal_at: f64,
+    },
 }
 
 impl EventKind {
@@ -76,6 +99,8 @@ impl EventKind {
             EventKind::Placed { .. } => "placed",
             EventKind::Migrate { .. } => "migrate",
             EventKind::Reprice { .. } => "reprice",
+            EventKind::Segment { .. } => "segment",
+            EventKind::JobExit { .. } => "job-exit",
         }
     }
 
@@ -87,7 +112,9 @@ impl EventKind {
             | EventKind::Preempt { task, .. }
             | EventKind::Placed { task, .. }
             | EventKind::Migrate { task, .. }
-            | EventKind::Reprice { task, .. } => task,
+            | EventKind::Reprice { task, .. }
+            | EventKind::Segment { task, .. }
+            | EventKind::JobExit { task, .. } => task,
         }
     }
 
@@ -99,7 +126,9 @@ impl EventKind {
             | EventKind::Preempt { gpus, .. }
             | EventKind::Placed { gpus, .. }
             | EventKind::Migrate { gpus, .. }
-            | EventKind::Reprice { gpus, .. } => gpus,
+            | EventKind::Reprice { gpus, .. }
+            | EventKind::Segment { gpus, .. }
+            | EventKind::JobExit { gpus, .. } => gpus,
         }
     }
 
@@ -124,6 +153,18 @@ impl EventKind {
             EventKind::Placed { .. } => 4,
             EventKind::Migrate { .. } => 5,
             EventKind::Reprice { .. } => 6,
+            EventKind::Segment { .. } => 7,
+            EventKind::JobExit { .. } => 8,
+        }
+    }
+
+    /// Stable digest code for an exit reason (independent of enum order).
+    fn reason_code(r: ExitReason) -> u64 {
+        match r {
+            ExitReason::Diverging => 0,
+            ExitReason::Overfitting => 1,
+            ExitReason::Underperforming => 2,
+            ExitReason::Completed => 3,
         }
     }
 
@@ -149,6 +190,17 @@ impl EventKind {
             // the new pricing is part of the replay contract: the exact
             // bits of the re-derived completion time are hashed
             EventKind::Reprice { completion, .. } => fnv1a_mix(h, completion.to_bits()),
+            // body-level streaming markers: sequence/job identity, the
+            // verdict, and the exact bits of the nominal offsets
+            EventKind::Segment { seq, nominal_end, .. } => {
+                fnv1a_mix(h, *seq as u64);
+                fnv1a_mix(h, nominal_end.to_bits());
+            }
+            EventKind::JobExit { job, reason, nominal_at, .. } => {
+                fnv1a_mix(h, *job as u64);
+                fnv1a_mix(h, Self::reason_code(*reason));
+                fnv1a_mix(h, nominal_at.to_bits());
+            }
         }
     }
 }
@@ -180,6 +232,12 @@ impl fmt::Display for Event {
             EventKind::Preempt { placement, .. } => write!(f, " off={placement}"),
             EventKind::Migrate { from, to, .. } => write!(f, " {from}->{to}"),
             EventKind::Reprice { completion, .. } => write!(f, " eta={completion}"),
+            EventKind::Segment { seq, nominal_end, .. } => {
+                write!(f, " seg={seq} body-t={nominal_end:.3}")
+            }
+            EventKind::JobExit { job, reason, nominal_at, .. } => {
+                write!(f, " job={job} {} body-t={nominal_at:.3}", reason.as_str())
+            }
             _ => Ok(()),
         }
     }
@@ -314,6 +372,15 @@ impl EventLog {
                 EventKind::Reprice { completion, .. } => {
                     fields.push(("completion", Json::Num(*completion)));
                 }
+                EventKind::Segment { seq, nominal_end, .. } => {
+                    fields.push(("seg", Json::Num(*seq as f64)));
+                    fields.push(("nominal_end", Json::Num(*nominal_end)));
+                }
+                EventKind::JobExit { job, reason, nominal_at, .. } => {
+                    fields.push(("job", Json::Num(*job as f64)));
+                    fields.push(("reason", Json::Str(reason.as_str().to_string())));
+                    fields.push(("nominal_at", Json::Num(*nominal_at)));
+                }
             }
             out.push_str(&Json::obj(fields).to_string());
             out.push('\n');
@@ -383,6 +450,33 @@ impl EventLog {
                     gpus,
                     completion: j.req("completion")?.as_f64().ok_or_else(|| {
                         anyhow::anyhow!("line {}: 'completion' not a number", lineno + 1)
+                    })?,
+                },
+                Some("segment") => EventKind::Segment {
+                    task,
+                    gpus,
+                    seq: j.req("seg")?.as_usize().ok_or_else(|| {
+                        anyhow::anyhow!("line {}: 'seg' not an index", lineno + 1)
+                    })?,
+                    nominal_end: j.req("nominal_end")?.as_f64().ok_or_else(|| {
+                        anyhow::anyhow!("line {}: 'nominal_end' not a number", lineno + 1)
+                    })?,
+                },
+                Some("job-exit") => EventKind::JobExit {
+                    task,
+                    gpus,
+                    job: j.req("job")?.as_usize().ok_or_else(|| {
+                        anyhow::anyhow!("line {}: 'job' not an index", lineno + 1)
+                    })?,
+                    reason: j
+                        .req("reason")?
+                        .as_str()
+                        .and_then(ExitReason::parse)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("line {}: unknown exit reason", lineno + 1)
+                        })?,
+                    nominal_at: j.req("nominal_at")?.as_f64().ok_or_else(|| {
+                        anyhow::anyhow!("line {}: 'nominal_at' not a number", lineno + 1)
                     })?,
                 },
                 other => anyhow::bail!("line {}: unknown kind {:?}", lineno + 1, other),
@@ -570,6 +664,67 @@ mod tests {
         assert_eq!(back.digest(), c.digest());
         // reprice lines without a completion are rejected
         let bad = r#"{"gpus":1,"kind":"reprice","seq":0,"task":0,"time":0}"#;
+        assert!(EventLog::from_jsonl(bad).is_err());
+    }
+
+    fn body_sample() -> EventLog {
+        let mut log = sample();
+        log.record(
+            0.0,
+            EventKind::JobExit {
+                task: 0,
+                gpus: 2,
+                job: 3,
+                reason: ExitReason::Diverging,
+                nominal_at: 1.25,
+            },
+        );
+        log.record(
+            0.0,
+            EventKind::Segment {
+                task: 0,
+                gpus: 2,
+                seq: 0,
+                nominal_end: 4.5,
+            },
+        );
+        log
+    }
+
+    #[test]
+    fn body_events_roundtrip_and_digest() {
+        let log = body_sample();
+        assert_ne!(log.digest(), sample().digest());
+        let back = EventLog::from_jsonl(&log.to_jsonl()).unwrap();
+        assert_eq!(back, log);
+        assert_eq!(back.digest(), log.digest());
+        // every body field is digest-bearing
+        let mut other = sample();
+        other.record(
+            0.0,
+            EventKind::JobExit {
+                task: 0,
+                gpus: 2,
+                job: 3,
+                reason: ExitReason::Overfitting, // reason differs
+                nominal_at: 1.25,
+            },
+        );
+        other.record(
+            0.0,
+            EventKind::Segment {
+                task: 0,
+                gpus: 2,
+                seq: 0,
+                nominal_end: 4.5,
+            },
+        );
+        assert_ne!(other.digest(), log.digest(), "exit reason must be hashed");
+        let lines = log.lines();
+        assert!(lines[3].contains("job-exit") && lines[3].contains("diverging"), "{}", lines[3]);
+        assert!(lines[4].contains("segment") && lines[4].contains("seg=0"), "{}", lines[4]);
+        // unknown verdicts are rejected on reload
+        let bad = r#"{"gpus":1,"job":0,"kind":"job-exit","nominal_at":0,"reason":"warp","seq":0,"task":0,"time":0}"#;
         assert!(EventLog::from_jsonl(bad).is_err());
     }
 

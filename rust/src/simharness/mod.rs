@@ -71,6 +71,30 @@
 //! placement-blind timeline bit for bit — the ablation baseline the
 //! placement-policy isolation tests use.
 //!
+//! ## Batch vs streaming bodies
+//!
+//! Task *bodies* (the intra-task search each tenant runs) reach the
+//! cluster timeline two ways:
+//!
+//! * **Batch** — [`SimEngine::run`]: every body simulated eagerly in
+//!   trace order (`simulate_trace`), then the timeline replays over the
+//!   pre-computed outcomes (`replay`).
+//! * **Streaming** — [`SimEngine::run_streaming`]: one event loop end
+//!   to end; each body is simulated lazily at its first start (the
+//!   scheduler's body-resolver callback), segment by segment over the
+//!   resumable `coordinator::task_runner::TaskCursor`, memoized across
+//!   duplicate specs, retaining lean [`TaskSummary`]s instead of full
+//!   outcomes.  With [`HarnessConfig::log_body_events`] set, body-level
+//!   `Segment`/`JobExit` markers fold into the log at start time.
+//!
+//! **Invariant:** with `log_body_events` off, both paths produce the
+//! *bit-identical* timeline — same `digest()`, makespan bits,
+//! placements and charged GPU-seconds — because both consume the same
+//! segment machinery and the scheduler resolves lazy durations before
+//! deriving any completion.  `rust/tests/simharness_e2e.rs` pins this
+//! across the fragmentation / preemption / uniform / duplicate trace
+//! generators and seeds.
+//!
 //! ### Determinism guarantees
 //!
 //! `SimEngine::run` is a pure function of (config, trace): same inputs
@@ -85,6 +109,19 @@
 //! sweeps (`benches/harness_e2e.rs`), the makespan ablations and the
 //! integration suites (`rust/tests/simharness_e2e.rs`,
 //! `rust/tests/placement_integration.rs`).
+//!
+//! ### Digest discipline and re-arming
+//!
+//! The `EventLog::digest()` hashes the raw IEEE-754 bits of every
+//! timestamp, placement index and repriced completion — no epsilon
+//! anywhere.  Golden pins (`rust/tests/golden/`) and the scale-bench
+//! baseline (`BENCH_sched_scale.json`) are committed *unarmed* because
+//! the authoring container has no Rust toolchain; CI arms them per run
+//! (the golden test self-pins and is run twice: arm, then verify).
+//! After an intentional timing change, re-arm with `GOLDEN_UPDATE=1
+//! cargo test --test placement_integration golden_event_log` and a
+//! fresh `cargo bench --bench sched_scale`, commit both, and say why.
+//! See `docs/ARCHITECTURE.md` for the full procedure.
 //!
 //! ## Trace format
 //!
@@ -104,6 +141,8 @@ pub mod trace;
 
 pub use crate::cluster::{PlacePolicy, Placement, Topology};
 pub use crate::sched::inter::Pricing;
-pub use engine::{HarnessConfig, HarnessReport, SimEngine, Timeline};
+pub use engine::{
+    BodyMark, HarnessConfig, HarnessReport, SimEngine, StreamReport, TaskSummary, Timeline,
+};
 pub use event::{Event, EventKind, EventLog};
-pub use trace::{frag_mix, hetero_mix, uniform_mix, Trace, TraceEntry};
+pub use trace::{duplicate_mix, frag_mix, hetero_mix, uniform_mix, Trace, TraceEntry};

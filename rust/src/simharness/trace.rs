@@ -227,6 +227,49 @@ pub fn frag_mix(n_tasks: usize, train_samples: usize, seed: u64) -> Vec<TaskSpec
         .collect()
 }
 
+/// Duplicate-heavy tenant stream: a pool of `n_distinct` body
+/// configurations cycled across `n_tasks` submissions, each arrival
+/// carrying a unique task name but a *bitwise-identical* body-relevant
+/// spec (model, dataset, search space, samples, seed) — the
+/// many-tenants-resubmit-the-same-sweep shape where the streaming
+/// path's body memo pays off (`SimEngine::run_streaming` simulates
+/// `n_distinct` bodies, not `n_tasks`).  Mostly 1-GPU 8B tenants with
+/// every eighth distinct config a 2-GPU 32B task so pricing and
+/// contention stay exercised.  Pure function of its arguments.
+pub fn duplicate_mix(n_tasks: usize, n_distinct: usize, train_samples: usize, seed: u64) -> Vec<TaskSpec> {
+    let n_distinct = n_distinct.max(1);
+    let mut rng = Pcg32::new(seed, 0xd0b1e);
+    let pool: Vec<TaskSpec> = (0..n_distinct)
+        .map(|j| {
+            let wide = j % 8 == 7;
+            let (model, gpus) = if wide { ("qwen-32b", 2) } else { ("llama-8b", 1) };
+            let samples = (train_samples as f64 * rng.uniform(0.6, 1.4)) as usize;
+            TaskSpec {
+                name: String::new(), // stamped per arrival below
+                model: model.into(),
+                dataset: "gsm-syn".into(),
+                num_gpus: gpus,
+                search_space: SearchSpace {
+                    lrs: vec![5e-5, 2e-4],
+                    ranks: vec![16],
+                    batch_sizes: vec![2, 4],
+                },
+                seq_len: 256,
+                train_samples: samples.max(16),
+                seed: seed.wrapping_add(j as u64 * 97),
+                ..TaskSpec::default()
+            }
+        })
+        .collect();
+    (0..n_tasks)
+        .map(|i| {
+            let mut spec = pool[i % n_distinct].clone();
+            spec.name = format!("dup-{i}");
+            spec
+        })
+        .collect()
+}
+
 impl Trace {
     /// Large uniform tenant stream over [`uniform_mix`]: `n_tasks`
     /// (typically 100+) 1-GPU tenants arriving Poisson — the queue-depth
@@ -242,6 +285,23 @@ impl Trace {
             uniform_mix(n_tasks, train_samples, seed),
             mean_interarrival,
             seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1),
+        )
+    }
+
+    /// Duplicate-heavy Poisson stream over [`duplicate_mix`] — the
+    /// streaming-memo stressor the scale bench sweeps.  Pure function
+    /// of its arguments.
+    pub fn duplicate_heavy(
+        n_tasks: usize,
+        n_distinct: usize,
+        train_samples: usize,
+        mean_interarrival: f64,
+        seed: u64,
+    ) -> Trace {
+        Trace::poisson(
+            duplicate_mix(n_tasks, n_distinct, train_samples, seed),
+            mean_interarrival,
+            seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(7),
         )
     }
 
@@ -443,6 +503,32 @@ mod tests {
         assert_ne!(
             t.fingerprint(),
             Trace::uniform_large(120, 48, 40.0, 4).fingerprint()
+        );
+    }
+
+    #[test]
+    fn duplicate_heavy_cycles_a_distinct_pool() {
+        let t = Trace::duplicate_heavy(40, 8, 48, 30.0, 5);
+        assert_eq!(t.len(), 40);
+        // names unique per arrival...
+        let mut names: Vec<&str> = t.entries.iter().map(|e| e.spec.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 40);
+        // ...but bodies cycle: task i and i+8 share every body field
+        for i in 0..8 {
+            let (a, b) = (&t.entries[i].spec, &t.entries[i + 8].spec);
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.train_samples, b.train_samples);
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.search_space, b.search_space);
+        }
+        // the pool mixes in a 2-GPU shape for pricing coverage
+        assert!(t.entries.iter().any(|e| e.spec.num_gpus == 2));
+        assert!(t.entries.iter().any(|e| e.spec.num_gpus == 1));
+        assert_eq!(
+            t.fingerprint(),
+            Trace::duplicate_heavy(40, 8, 48, 30.0, 5).fingerprint()
         );
     }
 

@@ -8,7 +8,10 @@
 //! hyperparameters and calibrated against the real tiny-family sweeps
 //! (EXPERIMENTS.md).  Trajectories are pure functions of (config, seed,
 //! step): the prefix a detector saw during warmup is bit-identical to the
-//! prefix of the full run, which replay-based tests rely on.
+//! prefix of the full run, which replay-based tests rely on — and which
+//! makes trajectory evaluation *prefix-resumable* ([`SimJob::segment_losses`]):
+//! the streaming harness can checkpoint a body at any segment boundary
+//! as a bare step index and resume later with identical bits.
 //!
 //! Loss *values* here are deliberately independent of executor width and
 //! placement — what a config learns does not depend on who it shares a
@@ -177,6 +180,19 @@ impl SimJob {
         }
         let n = self.noise_at(step, 2);
         (l * (1.0 + 1.5 * self.noise * n)).max(1e-4)
+    }
+
+    /// Evaluate the (train, val) loss pair over a step range.  This
+    /// codifies the prefix-resumability guarantee the streaming body
+    /// path *builds on* (a `SimBackend` slot checkpoint is just a step
+    /// index, because losses are pure functions of (config, seed,
+    /// step)): resuming at `start` after an arbitrary pause yields
+    /// bit-identical values to an uninterrupted run, with no prefix
+    /// replay — pinned by `segment_resume_is_bit_identical`.
+    pub fn segment_losses(&self, start: usize, end: usize) -> Vec<(f64, f64)> {
+        (start..end)
+            .map(|s| (self.train_loss(s), self.val_loss(s)))
+            .collect()
     }
 
     /// Best (minimum) validation loss over the whole run — what a
@@ -435,6 +451,32 @@ mod tests {
             assert_eq!(replay.regime, want, "regime itself must replay");
             let warmup = (total / 20).max(1); // the paper's 5% boundary
             assert_warmup_prefix_bit_identical(&job, &replay, warmup);
+        }
+    }
+
+    #[test]
+    fn segment_resume_is_bit_identical() {
+        // the streaming harness pauses a body at arbitrary segment
+        // boundaries and resumes later: every resumption point must
+        // yield the same bits as an uninterrupted evaluation
+        let prof = dataset_profile("gsm-syn").unwrap();
+        let hp = HyperParams {
+            lr: 2e-4,
+            rank: 16,
+            batch_size: 2,
+        };
+        let job = SimJob::new(&hp, prof, 120, 9);
+        let full = job.segment_losses(0, 120);
+        for &cut in &[1usize, 7, 30, 119] {
+            let fresh = SimJob::new(&hp, prof, 120, 9);
+            let head = fresh.segment_losses(0, cut);
+            // interleave unrelated reads between the pause and resume
+            let _ = fresh.best_val_loss();
+            let tail = fresh.segment_losses(cut, 120);
+            for (i, &(t, v)) in head.iter().chain(tail.iter()).enumerate() {
+                assert_eq!(t.to_bits(), full[i].0.to_bits(), "train step {i} cut {cut}");
+                assert_eq!(v.to_bits(), full[i].1.to_bits(), "val step {i} cut {cut}");
+            }
         }
     }
 

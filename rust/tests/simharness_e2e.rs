@@ -1,9 +1,13 @@
 //! Integration over the `simharness` engine: deterministic replay
 //! (same (trace, seed) ⇒ bit-identical event log and makespan),
-//! early-exit savings on total GPU-seconds, and the headline acceptance
+//! early-exit savings on total GPU-seconds, the headline acceptance
 //! scenario — a 16-GPU heterogeneous trace where the full system
 //! (early exit + exact-solver replanning) strictly beats
-//! FCFS-without-early-exit on simulated makespan.
+//! FCFS-without-early-exit on simulated makespan — and the
+//! streaming/batch equivalence contract: `run_streaming` (bodies
+//! simulated lazily at start events, memoized across duplicates) must
+//! replay bit-identical digests against the batch `run` across every
+//! trace generator, pricing and preemption included.
 
 use alto::coordinator::task_runner::RunConfig;
 use alto::sched::inter::Policy;
@@ -102,6 +106,80 @@ fn acceptance_16_gpu_hetero_beats_fcfs_without_early_exit() {
             trace.len()
         );
     }
+}
+
+/// Assert the streaming path replays the batch path bit for bit on one
+/// (engine, trace) pair — digest, makespan bits, placements, charged
+/// GPU-seconds and per-task durations.
+fn assert_stream_matches_batch(engine: &SimEngine, trace: &Trace) {
+    let batch = engine.run(trace).unwrap();
+    let stream = engine.run_streaming(trace).unwrap();
+    assert_eq!(
+        stream.timeline.log.digest(),
+        batch.log.digest(),
+        "event logs must match bitwise"
+    );
+    assert_eq!(stream.timeline.makespan.to_bits(), batch.makespan.to_bits());
+    assert_eq!(stream.timeline.placements, batch.placements);
+    assert_eq!(
+        stream.timeline.gpu_seconds.to_bits(),
+        batch.gpu_seconds.to_bits()
+    );
+    assert_eq!(stream.timeline.reprices, batch.reprices);
+    assert_eq!(stream.timeline.preemptions, batch.preemptions);
+    assert_eq!(stream.timeline.migrations, batch.migrations);
+    for (s, o) in stream.summaries.iter().zip(&batch.outcomes) {
+        assert_eq!(s.actual_duration.to_bits(), o.actual_duration.to_bits());
+        assert_eq!(s.est_duration.to_bits(), o.est_duration.to_bits());
+    }
+}
+
+#[test]
+fn streaming_matches_batch_on_poisson_hetero() {
+    for seed in [3u64, 19] {
+        let trace = hetero_trace(8, seed);
+        assert_stream_matches_batch(&engine(16, Policy::Optimal, true), &trace);
+    }
+}
+
+#[test]
+fn streaming_matches_batch_on_fragmentation_traces() {
+    for seed in [7u64, 23] {
+        let trace = Trace::fragmentation_heavy(10, 48, seed);
+        assert_stream_matches_batch(&engine(16, Policy::Optimal, true), &trace);
+    }
+}
+
+#[test]
+fn streaming_matches_batch_on_uniform_large() {
+    let trace = Trace::uniform_large(24, 32, 40.0, 5);
+    assert_stream_matches_batch(&engine(8, Policy::Optimal, true), &trace);
+}
+
+#[test]
+fn streaming_matches_batch_under_preemption() {
+    for seed in [9u64, 31] {
+        let trace = Trace::preemption_stress(3, 4, 32, seed);
+        let eng = SimEngine::new(HarnessConfig {
+            total_gpus: 16,
+            policy: Policy::Optimal,
+            preempt_on_arrival: true,
+            ..HarnessConfig::default()
+        });
+        assert_stream_matches_batch(&eng, &trace);
+    }
+}
+
+#[test]
+fn streaming_memoizes_duplicate_bodies() {
+    // 12 arrivals cycling 4 distinct sweeps: 4 bodies simulated, 8 hits
+    let trace = Trace::duplicate_heavy(12, 4, 32, 100.0, 11);
+    let eng = engine(8, Policy::Optimal, true);
+    let stream = eng.run_streaming(&trace).unwrap();
+    assert_eq!(stream.distinct_bodies, 4);
+    assert_eq!(stream.memo_hits, 8);
+    // memoization must not change the timeline
+    assert_stream_matches_batch(&eng, &trace);
 }
 
 #[test]
