@@ -18,7 +18,9 @@ fn gantt(label: &str, tasks: &[SchedTask], s: &Schedule, gpus: usize) {
         .unwrap();
     let scale = 40.0 / s.makespan.max(1e-9);
     let mut placements = s.placements.clone();
-    placements.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap().then(a.id.cmp(&b.id)));
+    placements.sort_by(|a, b| {
+        alto::sched::finite_last_cmp(a.start, b.start).then(a.id.cmp(&b.id))
+    });
     for p in &placements {
         let d = tasks.iter().find(|t| t.id == p.id).unwrap().duration;
         let pre = (p.start * scale) as usize;

@@ -29,6 +29,12 @@
 //! retained outcomes per scale into the same JSON (and asserting
 //! in-process that both paths produce the bit-identical digest).
 //!
+//! A third section replays a co-locatable 1k-task stream (one model
+//! family, all 1-GPU) with shared executor groups off and on: sharing
+//! must strictly reduce both makespan and charged GPU-seconds (asserted
+//! in-process — simulated outcomes are machine-independent), and the
+//! ratios are persisted under `colocation` in the same JSON.
+//!
 //! The pre-PR `Policy::Optimal` is *not* measured beyond 100 tasks: its
 //! unbudgeted exact replan is exponential on deep queues (that is the
 //! problem this PR fixes), so its cell is recorded as null rather than
@@ -40,6 +46,7 @@ use alto::bench::{banner, f, Table};
 use alto::cluster::gpu::GpuSpec;
 use alto::cluster::{SimCluster, Topology};
 use alto::config::MODEL_FAMILY;
+use alto::coordinator::shared::SharingConfig;
 use alto::parallel::workload::Workload;
 use alto::perfmodel::StepTimeModel;
 use alto::sched::inter::{
@@ -93,6 +100,40 @@ fn make_subs(n: usize, seed: u64) -> Vec<Submission> {
         .collect()
 }
 
+/// Co-locatable scheduler-level workload: every tenant a 1-GPU
+/// llama-8b sweep (one family, one width — adoption-eligible into any
+/// group), long durations on short Poisson gaps so the queue sustains
+/// deep and shared executor groups have someone to adopt.
+fn make_colo_subs(n: usize, seed: u64) -> Vec<Submission> {
+    let model = MODEL_FAMILY.get("llama-8b").unwrap();
+    let mut rng = Pcg32::new(seed, 0xc010);
+    let mut at = 0.0;
+    (0..n)
+        .map(|i| {
+            at += -3.8 * (1.0 - rng.f64()).ln();
+            let d = rng.uniform(200.0, 800.0);
+            Submission {
+                id: i,
+                gpus: 1,
+                est_duration: d,
+                actual_duration: d * rng.uniform(0.5, 1.0),
+                arrival: at,
+                priority: 0,
+                shape: Some(TaskShape {
+                    workload: Workload {
+                        model: model.clone(),
+                        ranks: vec![16; 2],
+                        batch_per_adapter: 2,
+                        seq_len: 256,
+                    },
+                    adapters: 2,
+                    rank: 16,
+                }),
+            }
+        })
+        .collect()
+}
+
 struct RunStats {
     wall_s: f64,
     events: usize,
@@ -100,10 +141,18 @@ struct RunStats {
     reprices: usize,
     deep_solves: usize,
     solver_exhausted: usize,
+    charged: f64,
+    adoptions: usize,
+    merges: usize,
 }
 
 /// Drive the full arrival/completion event loop once and time it.
-fn run_once(subs: &[Submission], policy: Policy, tuning: SchedTuning) -> RunStats {
+fn run_once(
+    subs: &[Submission],
+    policy: Policy,
+    tuning: SchedTuning,
+    sharing: SharingConfig,
+) -> RunStats {
     let topo = Topology::uniform(GPUS, ISLAND);
     let cluster = SimCluster::with_topology(GpuSpec::h100_sxm5(), topo.clone());
     let mut s = InterTaskScheduler::with_cluster(cluster, policy);
@@ -112,10 +161,12 @@ fn run_once(subs: &[Submission], policy: Policy, tuning: SchedTuning) -> RunStat
         StepTimeModel::new(GpuSpec::h100_sxm5(), topo),
         Pricing::default(),
     );
+    s.set_sharing(sharing);
     let t0 = Instant::now();
     let mut next = 0usize;
     let mut starts = 0usize;
     let mut reprices = 0usize;
+    let mut shared_events = 0usize;
     loop {
         let arrival = subs.get(next).map(|s| s.arrival);
         let completion = s.peek_next_completion();
@@ -126,7 +177,8 @@ fn run_once(subs: &[Submission], policy: Policy, tuning: SchedTuning) -> RunStat
             (Some(at), Some((_, ct))) => at < ct,
         };
         if take_arrival {
-            s.submit_spec(subs[next].clone());
+            s.submit_spec(subs[next].clone())
+                .expect("well-formed bench submission");
             next += 1;
         } else {
             s.complete_next()
@@ -134,19 +186,23 @@ fn run_once(subs: &[Submission], policy: Policy, tuning: SchedTuning) -> RunStat
                 .expect("peeked completion exists");
         }
         starts += s.drain_started().len();
+        shared_events += s.drain_adopted().len() + s.drain_merged().len();
         reprices += s.drain_repriced().len();
     }
     let wall_s = t0.elapsed().as_secs_f64();
     assert!(s.all_done(), "bench run left unfinished tasks");
     RunStats {
         wall_s,
-        // arrivals + starts + completions + reprices — the digest-bearing
-        // event kinds a harness replay would log for this timeline
-        events: subs.len() * 2 + starts + reprices,
+        // arrivals + starts + completions + adopts/merges + reprices —
+        // the digest-bearing event kinds a harness replay would log
+        events: subs.len() * 2 + starts + shared_events + reprices,
         makespan: s.makespan(),
         reprices,
         deep_solves: s.deep_solves,
         solver_exhausted: s.solver_exhausted,
+        charged: s.charged_gpu_seconds(),
+        adoptions: s.adoptions,
+        merges: s.merges,
     }
 }
 
@@ -176,7 +232,7 @@ fn main() {
         let subs = make_subs(n, 42);
         let mut cells = std::collections::BTreeMap::new();
 
-        let new_lpt = run_once(&subs, Policy::Lpt, SchedTuning::default());
+        let new_lpt = run_once(&subs, Policy::Lpt, SchedTuning::default(), SharingConfig::default());
         table.row(vec![
             n.to_string(),
             "lpt".into(),
@@ -200,7 +256,8 @@ fn main() {
         // the anytime Optimal path; in quick (CI smoke) mode the 5k row
         // is LPT-only to keep the workflow fast
         if !(quick && n > 1_000) {
-            let new_opt = run_once(&subs, Policy::Optimal, SchedTuning::default());
+            let new_opt =
+                run_once(&subs, Policy::Optimal, SchedTuning::default(), SharingConfig::default());
             table.row(vec![
                 n.to_string(),
                 "optimal".into(),
@@ -229,7 +286,8 @@ fn main() {
         // the O(W³)-per-event legacy plan would run for hours, which is
         // the point of this PR (recorded as null, not silently omitted).
         if n <= 1_000 {
-            let reference = run_once(&subs, Policy::Lpt, SchedTuning::reference());
+            let reference =
+                run_once(&subs, Policy::Lpt, SchedTuning::reference(), SharingConfig::default());
             let speedup = reference.wall_s / new_lpt.wall_s.max(1e-12);
             table.row(vec![
                 n.to_string(),
@@ -339,6 +397,92 @@ fn main() {
     }
     body_table.print();
 
+    // ---- shared executor groups: co-location on vs off at 1k tasks ----
+    // A co-locatable stream (one family, all 1-GPU, offered load > 1)
+    // replayed twice through the scheduler layer: sharing off, then
+    // sharing on.  Both timelines are deterministic simulated outcomes,
+    // so the win is asserted in-process (machine-independent) and the
+    // ratios are persisted for the trajectory.
+    banner("shared executor groups: 1k-task co-locatable stream, sharing on vs off");
+    let colo_subs = make_colo_subs(1_000, 42);
+    let colo_off = run_once(
+        &colo_subs,
+        Policy::Optimal,
+        SchedTuning::default(),
+        SharingConfig::default(),
+    );
+    let colo_on = run_once(
+        &colo_subs,
+        Policy::Optimal,
+        SchedTuning::default(),
+        SharingConfig::paper(),
+    );
+    let mut colo_table = Table::new(&[
+        "sharing", "wall(s)", "mk(s)", "gpu-s", "adoptions", "merges",
+    ]);
+    colo_table.row(vec![
+        "off".into(),
+        f(colo_off.wall_s, 3),
+        f(colo_off.makespan, 0),
+        f(colo_off.charged, 0),
+        colo_off.adoptions.to_string(),
+        colo_off.merges.to_string(),
+    ]);
+    colo_table.row(vec![
+        "on".into(),
+        f(colo_on.wall_s, 3),
+        f(colo_on.makespan, 0),
+        f(colo_on.charged, 0),
+        colo_on.adoptions.to_string(),
+        colo_on.merges.to_string(),
+    ]);
+    colo_table.print();
+    assert_eq!(colo_off.adoptions, 0, "sharing off must never adopt");
+    assert!(
+        colo_on.adoptions > 0,
+        "a saturated co-locatable 1k stream must adopt"
+    );
+    assert!(
+        colo_on.makespan < colo_off.makespan,
+        "sharing must strictly shorten the makespan: {} vs {}",
+        colo_on.makespan,
+        colo_off.makespan
+    );
+    assert!(
+        colo_on.charged < colo_off.charged,
+        "sharing must strictly cut charged GPU-seconds: {} vs {}",
+        colo_on.charged,
+        colo_off.charged
+    );
+    let colo_json = Json::obj(vec![
+        ("tasks", Json::Num(1_000.0)),
+        ("makespan_off_s", Json::Num(colo_off.makespan)),
+        ("makespan_on_s", Json::Num(colo_on.makespan)),
+        (
+            "makespan_ratio",
+            Json::Num(colo_on.makespan / colo_off.makespan.max(1e-12)),
+        ),
+        ("gpu_seconds_off", Json::Num(colo_off.charged)),
+        ("gpu_seconds_on", Json::Num(colo_on.charged)),
+        (
+            "gpu_seconds_ratio",
+            Json::Num(colo_on.charged / colo_off.charged.max(1e-12)),
+        ),
+        ("adoptions", Json::Num(colo_on.adoptions as f64)),
+        ("merges", Json::Num(colo_on.merges as f64)),
+    ]);
+    println!(
+        "co-location: makespan {} → {} ({:.2}×), GPU-s {} → {} ({:.2}×), {} adoptions / {} merges",
+        f(colo_off.makespan, 0),
+        f(colo_on.makespan, 0),
+        colo_on.makespan / colo_off.makespan.max(1e-12),
+        f(colo_off.charged, 0),
+        f(colo_on.charged, 0),
+        colo_on.charged / colo_off.charged.max(1e-12),
+        colo_on.adoptions,
+        colo_on.merges,
+    );
+
     let speedup_1k = match (new_1k_wall, ref_1k_wall) {
         (Some(new), Some(reference)) => reference / new.max(1e-12),
         _ => f64::NAN,
@@ -410,6 +554,7 @@ fn main() {
         ),
         ("scales", Json::Obj(scales_json)),
         ("streaming", Json::Obj(streaming_json)),
+        ("colocation", colo_json),
     ]);
     if gate_failed {
         // keep the committed baseline; persist the regressed measurements

@@ -76,7 +76,7 @@ fn main() -> anyhow::Result<()> {
     for policy in [Policy::Sjf, Policy::Fcfs, Policy::Lpt] {
         let mut s = InterTaskScheduler::new(8, policy);
         for (i, o) in report.outcomes.iter().enumerate() {
-            s.submit(i, o.gpus, o.est_duration, o.actual_duration);
+            s.submit(i, o.gpus, o.est_duration, o.actual_duration)?;
         }
         let mk = s.run_to_completion();
         println!("  {policy:?} makespan: {mk:.0}s ({:.2}x vs ALTO)",

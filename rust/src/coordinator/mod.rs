@@ -9,6 +9,7 @@ pub mod job;
 pub mod memory_model;
 pub mod profiler;
 pub mod service;
+pub mod shared;
 pub mod task_runner;
 pub mod warmup;
 
@@ -18,5 +19,6 @@ pub use job::{ExitReason, Job, JobState};
 pub use memory_model::MemoryModel;
 pub use profiler::Profiler;
 pub use service::{Service, ServiceConfig, ServiceReport};
+pub use shared::{ExecGroup, SharedGroupSet, SharingConfig};
 pub use task_runner::{make_jobs, run_task, RunConfig, SegmentReport, TaskCursor, TaskResult};
 pub use warmup::{select_top_k, WarmupConfig};

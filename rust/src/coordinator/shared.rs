@@ -1,0 +1,268 @@
+//! Shared-executor groups (paper §6, §A.1): one group owns a frozen
+//! backbone on a concrete [`Placement`] and hosts a dynamic roster of
+//! adapters drawn from *multiple* tasks of the same model family.
+//!
+//! The substrate is deliberately thin: it is pure bookkeeping — group
+//! identity, roster membership, and charged GPU occupancy.  All policy
+//! (when to adopt a waiting task into a group, when shrunken groups
+//! merge, how co-located rosters are priced) lives in
+//! [`crate::sched::inter::InterTaskScheduler`], which drives this
+//! structure at every event, and in
+//! [`crate::perfmodel::StepTimeModel::group_stretch`], which prices the
+//! roster's rank-local parallelism.  Cross-task *slot* admission inside
+//! one executor is [`crate::sched::intra::admit_slot_cross`] /
+//! [`crate::sched::intra::backfill_cross`].
+//!
+//! Lifecycle: a group is **founded** when a task starts on fresh GPUs
+//! (a singleton roster), **grows** by adoption (a waiting same-family
+//! task joins instead of queueing for its own GPUs), **shrinks** as
+//! members complete (early exit included), and **dissolves** either when
+//! its last member departs or when a merge folds its survivors into a
+//! peer group on the same island — the checkpoint transfer is priced by
+//! [`crate::perfmodel::StepTimeModel::migration_cost`].
+//!
+//! Determinism: groups are identified by a monotonically increasing id
+//! and every index is a BTree map/set, so iteration order — and hence
+//! every adoption/merge decision downstream — is a pure function of the
+//! event history.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::cluster::Placement;
+
+/// Switches for cross-task adapter co-location.  Disabled by default:
+/// every digest and decision stream is bit-identical to the pre-sharing
+/// scheduler unless a caller opts in.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SharingConfig {
+    /// Master switch.  Off ⇒ no groups are ever founded and the
+    /// scheduler's behavior is bitwise the pre-sharing one.
+    pub enabled: bool,
+    /// Maximum adapters (member tasks) one group hosts.
+    pub max_roster: usize,
+    /// A group whose roster shrinks *below* this width tries to merge
+    /// its survivors into a peer group (freeing its GPUs).
+    pub merge_below: usize,
+    /// Minimum fractional throughput gain an adoption must deliver
+    /// (same bar discipline as
+    /// [`crate::sched::intra::GroupPricer::clears_gain_bar`]): at 0.0
+    /// only strict regressions are rejected.
+    pub min_marginal_gain: f64,
+}
+
+impl Default for SharingConfig {
+    fn default() -> Self {
+        SharingConfig {
+            enabled: false,
+            max_roster: 4,
+            merge_below: 2,
+            min_marginal_gain: 0.0,
+        }
+    }
+}
+
+impl SharingConfig {
+    /// The paper's operating point: sharing on with the default roster
+    /// cap, merge threshold and a zero gain bar (reject only adoptions
+    /// that hurt sustained throughput).
+    pub fn paper() -> SharingConfig {
+        SharingConfig {
+            enabled: true,
+            ..SharingConfig::default()
+        }
+    }
+}
+
+/// One executor group: a frozen backbone of `family` held on `placement`
+/// by the tasks in `members`.
+#[derive(Debug, Clone)]
+pub struct ExecGroup {
+    pub id: usize,
+    /// Model-family identity ([`crate::config::ModelShape`] name); only
+    /// same-family tasks may share the backbone.
+    pub family: String,
+    /// GPU width of the placement (every member's width — adoption
+    /// requires an exact match, since the roster shares the allocation).
+    pub gpus: usize,
+    pub placement: Placement,
+    /// Current roster (task ids).
+    pub members: BTreeSet<usize>,
+    /// When the group acquired its GPUs — occupancy is charged
+    /// `gpus × (dissolve − acquired_at)` regardless of roster width.
+    pub acquired_at: f64,
+}
+
+/// All live groups plus the finalized-occupancy ledger.
+#[derive(Debug, Clone, Default)]
+pub struct SharedGroupSet {
+    groups: BTreeMap<usize, ExecGroup>,
+    /// task → group it belongs (or last belonged) to.  Entries are
+    /// *never* removed on departure: the map doubles as the ever-member
+    /// marker the GPU-seconds accounting needs (a member's occupancy is
+    /// charged through its group, not through its own runtime).
+    by_task: BTreeMap<usize, usize>,
+    next_id: usize,
+    /// Σ gpus × lifetime over *dissolved* groups.
+    pub gpu_seconds: f64,
+}
+
+impl SharedGroupSet {
+    pub fn new() -> SharedGroupSet {
+        SharedGroupSet::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Found a singleton group owning `placement`; returns its id.
+    pub fn found(
+        &mut self,
+        family: String,
+        gpus: usize,
+        placement: Placement,
+        task: usize,
+        now: f64,
+    ) -> usize {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut members = BTreeSet::new();
+        members.insert(task);
+        self.groups.insert(
+            id,
+            ExecGroup {
+                id,
+                family,
+                gpus,
+                placement,
+                members,
+                acquired_at: now,
+            },
+        );
+        self.by_task.insert(task, id);
+        id
+    }
+
+    /// Add `task` to group `gid`'s roster.
+    pub fn adopt(&mut self, gid: usize, task: usize) {
+        self.groups
+            .get_mut(&gid)
+            .expect("adopting into a live group")
+            .members
+            .insert(task);
+        self.by_task.insert(task, gid);
+    }
+
+    /// Remove `task` from `gid`'s roster (completion or merge-out);
+    /// returns the surviving roster width.  The `by_task` entry is kept
+    /// as the ever-member marker.
+    pub fn depart(&mut self, gid: usize, task: usize) -> usize {
+        let g = self
+            .groups
+            .get_mut(&gid)
+            .expect("departing from a live group");
+        g.members.remove(&task);
+        g.members.len()
+    }
+
+    /// Move a member between live groups (the merge path).
+    pub fn move_member(&mut self, from: usize, to: usize, task: usize) {
+        self.depart(from, task);
+        self.adopt(to, task);
+    }
+
+    /// Dissolve `gid`: fold its occupancy into the ledger and drop it.
+    /// Returns the placement it held.
+    pub fn finalize(&mut self, gid: usize, now: f64) -> Placement {
+        let g = self.groups.remove(&gid).expect("finalizing a live group");
+        self.gpu_seconds += g.gpus as f64 * (now - g.acquired_at);
+        g.placement
+    }
+
+    pub fn group(&self, gid: usize) -> &ExecGroup {
+        &self.groups[&gid]
+    }
+
+    /// Live group ids, ascending.
+    pub fn ids(&self) -> impl Iterator<Item = usize> + '_ {
+        self.groups.keys().copied()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (usize, &ExecGroup)> {
+        self.groups.iter().map(|(&id, g)| (id, g))
+    }
+
+    /// The group `task` is *currently* a member of.
+    pub fn membership_of(&self, task: usize) -> Option<usize> {
+        let gid = *self.by_task.get(&task)?;
+        self.groups
+            .get(&gid)
+            .filter(|g| g.members.contains(&task))
+            .map(|_| gid)
+    }
+
+    /// Was `task` ever a group member?  Such tasks' GPU occupancy is
+    /// charged through their group's lifetime, not their own runtime.
+    pub fn ever_member(&self, task: usize) -> bool {
+        self.by_task.contains_key(&task)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(gpus: &[usize]) -> Placement {
+        Placement::new(gpus.to_vec())
+    }
+
+    #[test]
+    fn sharing_is_off_by_default() {
+        assert!(!SharingConfig::default().enabled);
+        assert!(SharingConfig::paper().enabled);
+    }
+
+    #[test]
+    fn lifecycle_found_adopt_depart_finalize() {
+        let mut set = SharedGroupSet::new();
+        let gid = set.found("llama-8b".into(), 1, p(&[0]), 7, 0.0);
+        assert_eq!(set.membership_of(7), Some(gid));
+        assert!(set.ever_member(7));
+        set.adopt(gid, 9);
+        assert_eq!(set.group(gid).members.len(), 2);
+        assert_eq!(set.depart(gid, 7), 1);
+        // departed but still an ever-member; no longer a current member
+        assert_eq!(set.membership_of(7), None);
+        assert!(set.ever_member(7));
+        assert_eq!(set.depart(gid, 9), 0);
+        let freed = set.finalize(gid, 12.5);
+        assert_eq!(freed, p(&[0]));
+        assert!(set.is_empty());
+        assert_eq!(set.gpu_seconds, 12.5);
+    }
+
+    #[test]
+    fn move_member_retargets_membership() {
+        let mut set = SharedGroupSet::new();
+        let a = set.found("llama-8b".into(), 1, p(&[0]), 1, 0.0);
+        let b = set.found("llama-8b".into(), 1, p(&[1]), 2, 0.0);
+        set.move_member(a, b, 1);
+        assert_eq!(set.membership_of(1), Some(b));
+        assert_eq!(set.group(a).members.len(), 0);
+        assert_eq!(set.group(b).members.len(), 2);
+    }
+
+    #[test]
+    fn ids_are_monotone_and_iteration_is_ordered() {
+        let mut set = SharedGroupSet::new();
+        let a = set.found("x".into(), 1, p(&[0]), 0, 0.0);
+        let b = set.found("x".into(), 1, p(&[1]), 1, 0.0);
+        assert!(a < b);
+        let ids: Vec<usize> = set.ids().collect();
+        assert_eq!(ids, vec![a, b]);
+    }
+}

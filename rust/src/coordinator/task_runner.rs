@@ -26,13 +26,19 @@
 //! [`crate::sched::intra::GroupPricer`]'s marginal-throughput bar at
 //! that moment — the §7.1 admission decision made online, at the slot
 //! level, instead of once up front.
+//!
+//! A cursor can also host *cross-task* work: [`TaskCursor::adopt_job`]
+//! appends a same-family configuration from a different task to the
+//! pending queue, gated by [`crate::sched::intra::admit_slot_cross`]
+//! (family match, memory fit, pricer bar) — the executor-level half of
+//! the shared-executor substrate ([`crate::coordinator::shared`]).
 
 use std::collections::BTreeMap;
 
 use anyhow::Result;
 
 use crate::config::HyperParams;
-use crate::sched::intra::{admit_slot, GroupPricer};
+use crate::sched::intra::{admit_slot, admit_slot_cross, ForeignCandidate, GroupPricer};
 
 use super::early_exit::{DetectorConfig, PatternDetector, Verdict};
 use super::executor::{Backend, Snapshot};
@@ -190,6 +196,55 @@ impl<'a> TaskCursor<'a> {
     /// The cursor's jobs (live state included), in submission order.
     pub fn jobs(&self) -> &[Job] {
         &self.jobs
+    }
+
+    /// Adopt a *cross-task* configuration into this cursor's pending
+    /// queue: the executor-level slot-adoption hook of the
+    /// shared-executor substrate.  The candidate must match the host's
+    /// model family (the backbone is frozen) and — when the cursor
+    /// carries an admission control — fit the memory model and clear
+    /// the pricer's marginal-throughput bar over the adapters resident
+    /// right now ([`crate::sched::intra::admit_slot_cross`]).  On
+    /// success the job joins the queue (served at the next vacated
+    /// slot, its samples added to the budget) and its job index is
+    /// returned; `None` means the adoption was rejected or the body is
+    /// already done.
+    pub fn adopt_job(
+        &mut self,
+        candidate: &ForeignCandidate,
+        host_family: &str,
+        job: Job,
+    ) -> Option<usize> {
+        if self.phase == Phase::Done || candidate.family != host_family {
+            return None;
+        }
+        if let Some((mem, pricer)) = self.admission {
+            let mut resident_ranks: Vec<usize> = Vec::with_capacity(self.slots.len());
+            let mut resident_batch = 0usize;
+            for s in self.slots.iter().flatten() {
+                let hp = &self.jobs[s.job_idx].hp;
+                resident_ranks.push(hp.rank);
+                resident_batch += hp.batch_size;
+            }
+            if !admit_slot_cross(
+                candidate,
+                host_family,
+                &resident_ranks,
+                resident_batch,
+                mem,
+                pricer,
+            ) {
+                return None;
+            }
+        }
+        let ji = self.jobs.len();
+        self.samples_budget += job.samples_budget();
+        self.boundary_val.push(f64::INFINITY);
+        self.jobs.push(job);
+        // the queue serves from the back: an adopted job fills the very
+        // next vacated slot, exactly like a freshly vacated-slot refill
+        self.queue.push(ji);
+        Some(ji)
     }
 
     /// Cumulative simulated wall seconds so far.
@@ -458,7 +513,7 @@ impl<'a> TaskCursor<'a> {
             .jobs
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.best_val.partial_cmp(&b.1.best_val).unwrap())
+            .min_by(|a, b| crate::sched::finite_last_cmp(a.1.best_val, b.1.best_val))
             .map(|(i, _)| i)
             .unwrap_or(0);
         TaskResult {
@@ -771,6 +826,62 @@ mod tests {
             "restricted {} vs free {}",
             res.wall_seconds,
             free.wall_seconds
+        );
+    }
+
+    #[test]
+    fn cursor_adopts_same_family_foreign_jobs_and_rejects_others() {
+        let mem = MemoryModel {
+            k0: 0.0,
+            k1: 1.0,
+            seq_len: 1,
+            budget: 1e9,
+        };
+        let mut be = sim_backend(2, 2);
+        let mut cursor = TaskCursor::new(&mut be, uniform_jobs(3, 2e-4, 2, 60), RunConfig::default())
+            .with_admission(&mem, None);
+        let hp = HyperParams { lr: 2e-4, rank: 16, batch_size: 2 };
+        // wrong family: unconditional no — the backbone is frozen
+        let alien = ForeignCandidate {
+            task: 9,
+            family: "qwen-32b".into(),
+            hp: hp.clone(),
+        };
+        assert_eq!(
+            cursor.adopt_job(&alien, "llama-8b", Job::new(90, hp.clone(), 60, 7)),
+            None
+        );
+        // same family: adopted, queued, and driven to a verdict with the
+        // host's own jobs
+        let kin = ForeignCandidate {
+            task: 9,
+            family: "llama-8b".into(),
+            hp: hp.clone(),
+        };
+        let ji = cursor
+            .adopt_job(&kin, "llama-8b", Job::new(91, hp.clone(), 60, 7))
+            .expect("same-family adoption must seat");
+        assert_eq!(ji, 3);
+        while !cursor.run_segment().unwrap().done {}
+        let res = cursor.finish();
+        assert_eq!(res.jobs.len(), 4);
+        assert!(res.jobs.iter().all(|j| j.is_exited()));
+        // the adopted job's samples count against the grown budget
+        let solo = run_task(
+            &mut sim_backend(2, 2),
+            uniform_jobs(3, 2e-4, 2, 60),
+            &RunConfig::default(),
+        )
+        .unwrap();
+        assert!(res.samples_budget > solo.samples_budget);
+        // a finished cursor adopts nothing
+        let mut be2 = sim_backend(2, 2);
+        let mut done_cursor =
+            TaskCursor::new(&mut be2, uniform_jobs(1, 2e-4, 2, 20), RunConfig::default());
+        while !done_cursor.run_segment().unwrap().done {}
+        assert_eq!(
+            done_cursor.adopt_job(&kin, "llama-8b", Job::new(92, hp, 20, 1)),
+            None
         );
     }
 

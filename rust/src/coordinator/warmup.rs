@@ -25,10 +25,14 @@ impl WarmupConfig {
         ((total_steps as f64 * self.warmup_ratio).ceil() as usize).max(1)
     }
 
-    /// k = ⌈select_ratio · n⌉ (Algorithm 1, pattern 3).
+    /// k = ⌈select_ratio · n⌉ (Algorithm 1, pattern 3).  An empty sweep
+    /// retains nothing — clamping to 1 here used to invent a phantom
+    /// candidate for `n_candidates == 0`.
     pub fn retained(&self, n_candidates: usize) -> usize {
-        ((n_candidates as f64 * self.select_ratio).ceil() as usize)
-            .clamp(1, n_candidates.max(1))
+        if n_candidates == 0 {
+            return 0;
+        }
+        ((n_candidates as f64 * self.select_ratio).ceil() as usize).clamp(1, n_candidates)
     }
 }
 
@@ -62,6 +66,15 @@ mod tests {
         assert_eq!(c.warmup_steps(1000), 50);
         assert_eq!(c.retained(60), 15); // 25% of the paper's 60 configs
         assert_eq!(c.retained(3), 1);
+    }
+
+    #[test]
+    fn empty_sweep_retains_nothing() {
+        let c = WarmupConfig::default();
+        assert_eq!(c.retained(0), 0);
+        let (keep, evict) = select_top_k(&[], 0);
+        assert!(keep.is_empty());
+        assert!(evict.is_empty());
     }
 
     #[test]

@@ -217,6 +217,29 @@ impl StepTimeModel {
         }
         self.step_total(w, p_gpus, placement, ctx) / nominal
     }
+
+    /// Per-member slowdown of running `own` inside a shared-executor
+    /// roster whose combined workload is `combined` (same backbone,
+    /// ranks = concatenation of every member's adapters — per-slot rank
+    /// heterogeneity included): the grouped step over the full roster
+    /// divided by the member's solo step.  This is how
+    /// [`crate::sched::inter`] prices co-located tasks — intra-group
+    /// rank-local parallelism, not foreign-tenant contention.
+    ///
+    /// Exact invariants (pinned by the property suite):
+    /// * a roster spanning one task (`combined == own`) prices at
+    ///   exactly 1.0 — `x / x` bitwise, so single-task groups replay the
+    ///   unshared clock bit for bit;
+    /// * monotone non-decreasing in roster size — appending adapters
+    ///   never shrinks the grouped step;
+    /// * never below 1.0 (clamped: a roster cannot speed a member up).
+    pub fn group_stretch(&self, own: &Workload, combined: &Workload, p_gpus: usize) -> f64 {
+        let solo = self.nominal_step_total(own, p_gpus);
+        if solo <= 0.0 {
+            return 1.0;
+        }
+        (self.nominal_step_total(combined, p_gpus) / solo).max(1.0)
+    }
 }
 
 #[cfg(test)]
@@ -287,5 +310,30 @@ mod tests {
         // single-GPU workloads have no collective to contend on
         let solo = m.charge_factor(&w(4, "llama-8b"), 1, None, &busy);
         assert_eq!(solo.to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn group_stretch_of_a_single_task_roster_is_exactly_one() {
+        let m = StepTimeModel::nominal(GpuSpec::h100_sxm5());
+        for p in [1usize, 2, 4] {
+            let own = w(2, "llama-8b");
+            assert_eq!(m.group_stretch(&own, &own, p).to_bits(), 1.0f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn group_stretch_is_monotone_in_roster_size_and_at_least_one() {
+        let m = StepTimeModel::nominal(GpuSpec::h100_sxm5());
+        let own = w(2, "llama-8b");
+        let mut last = 1.0;
+        for extra in 0..6 {
+            let mut combined = own.clone();
+            combined.ranks.extend(std::iter::repeat(32).take(extra));
+            let s = m.group_stretch(&own, &combined, 1);
+            assert!(s >= 1.0, "stretch below one: {s}");
+            assert!(s >= last, "stretch shrank when the roster grew: {last} -> {s}");
+            last = s;
+        }
+        assert!(last > 1.0, "a 6-adapter roster must cost something: {last}");
     }
 }

@@ -69,12 +69,35 @@
 //!   order, and the resulting priority order is *cached* until the
 //!   waiting-set membership grows — completion-triggered replans reuse
 //!   the surviving prefix instead of re-solving.
+//!
+//! ## Shared-executor groups ([`SharingConfig`])
+//!
+//! With sharing enabled (off by default) and a pricer attached, every
+//! fresh start founds a singleton executor group
+//! ([`crate::coordinator::shared`]) owning its placement, and each
+//! replan runs an *adoption* pass: a waiting task of the same model
+//! family and GPU width may join an existing group's roster instead of
+//! queueing for its own GPUs, whenever the grown roster still clears
+//! the marginal-throughput bar.  Members run concurrently on the
+//! group's placement, each stretched by
+//! [`StepTimeModel::group_stretch`] — intra-group rank-local
+//! parallelism priced over the combined roster — instead of being
+//! charged foreign-tenant contention against co-members.  Departures
+//! shrink the roster; one shrinking below
+//! [`SharingConfig::merge_below`] merges its survivors into a peer
+//! group (same island preferred), priced as a checkpoint transfer.
+//! Group GPU occupancy is charged `gpus × group lifetime` regardless of
+//! roster width — the co-location win
+//! [`InterTaskScheduler::charged_gpu_seconds`] measures.  With sharing
+//! disabled every decision stream and digest is bit-identical to the
+//! pre-sharing scheduler.
 
 use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{Context, Result};
 
 use crate::cluster::{PlacePolicy, Placement, SimCluster};
+use crate::coordinator::shared::{SharedGroupSet, SharingConfig};
 use crate::parallel::workload::Workload;
 use crate::perfmodel::{ContentionCtx, StepTimeModel};
 use crate::util::small::SmallVec;
@@ -321,6 +344,26 @@ pub struct PreemptDecision {
     pub placement: Placement,
 }
 
+/// One adoption decision: a waiting task joined a shared executor
+/// group's roster instead of acquiring its own GPUs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdoptDecision {
+    pub id: usize,
+    pub time: f64,
+    /// The adopting group's placement (now also this task's).
+    pub placement: Placement,
+}
+
+/// One merge decision: a shrunken group's survivor moved into a peer
+/// group on the same island, paying a checkpoint transfer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MergeDecision {
+    pub id: usize,
+    pub time: f64,
+    pub from: Placement,
+    pub to: Placement,
+}
+
 /// Cached deep-queue priority order: reused verbatim (filtered to the
 /// surviving ids) until the waiting-set membership grows.
 #[derive(Debug, Clone)]
@@ -370,15 +413,28 @@ pub struct InterTaskScheduler {
     dirty: BTreeSet<usize>,
     /// Deep-queue plan cache (makespan-aware policies only).
     plan_cache: Option<PlanCache>,
+    /// Cross-task co-location switches (disabled by default — see
+    /// [`InterTaskScheduler::set_sharing`]).
+    sharing: SharingConfig,
+    /// Live shared-executor groups plus the occupancy ledger.
+    groups: SharedGroupSet,
     /// Start decisions since the last `drain_started`.
     started_log: Vec<StartDecision>,
     /// Preemption decisions since the last `drain_preempted`.
     preempted_log: Vec<PreemptDecision>,
     /// Re-pricing decisions since the last `drain_repriced`.
     repriced_log: Vec<RepriceDecision>,
+    /// Adoption decisions since the last `drain_adopted`.
+    adopted_log: Vec<AdoptDecision>,
+    /// Merge decisions since the last `drain_merged`.
+    merged_log: Vec<MergeDecision>,
     pub replans: usize,
     /// Total evictions across the run.
     pub preemptions: usize,
+    /// Tasks adopted into shared executor groups across the run.
+    pub adoptions: usize,
+    /// Survivors merged between shared executor groups across the run.
+    pub merges: usize,
     /// Σ one-off checkpoint-transfer wall seconds charged to migrations.
     pub migration_charge: f64,
     /// Deep-queue plans taken (waiting set exceeded the threshold).
@@ -416,11 +472,17 @@ impl InterTaskScheduler {
             residents: vec![BTreeMap::new(); n_islands],
             dirty: BTreeSet::new(),
             plan_cache: None,
+            sharing: SharingConfig::default(),
+            groups: SharedGroupSet::new(),
             started_log: Vec::new(),
             preempted_log: Vec::new(),
             repriced_log: Vec::new(),
+            adopted_log: Vec::new(),
+            merged_log: Vec::new(),
             replans: 0,
             preemptions: 0,
+            adoptions: 0,
+            merges: 0,
             migration_charge: 0.0,
             deep_plans: 0,
             deep_solves: 0,
@@ -480,8 +542,14 @@ impl InterTaskScheduler {
     }
 
     /// Submit a task (arrival event at the current clock).
-    pub fn submit(&mut self, id: usize, gpus: usize, est_duration: f64, actual_duration: f64) {
-        self.submit_at(id, gpus, est_duration, actual_duration, self.clock);
+    pub fn submit(
+        &mut self,
+        id: usize,
+        gpus: usize,
+        est_duration: f64,
+        actual_duration: f64,
+    ) -> Result<()> {
+        self.submit_at(id, gpus, est_duration, actual_duration, self.clock)
     }
 
     /// Submit a task arriving at virtual time `now` (must be
@@ -493,8 +561,8 @@ impl InterTaskScheduler {
         est_duration: f64,
         actual_duration: f64,
         now: f64,
-    ) {
-        self.submit_at_prio(id, gpus, est_duration, actual_duration, now, 0);
+    ) -> Result<()> {
+        self.submit_at_prio(id, gpus, est_duration, actual_duration, now, 0)
     }
 
     /// `submit_at` with an explicit priority (higher wins; only matters
@@ -507,7 +575,7 @@ impl InterTaskScheduler {
         actual_duration: f64,
         now: f64,
         priority: i64,
-    ) {
+    ) -> Result<()> {
         self.submit_spec(Submission {
             id,
             gpus,
@@ -516,11 +584,38 @@ impl InterTaskScheduler {
             arrival: now,
             priority,
             shape: None,
-        });
+        })
     }
 
     /// Full submission, pricing inputs included (the harness path).
-    pub fn submit_spec(&mut self, s: Submission) {
+    /// Malformed submissions — a non-finite or negative duration, an
+    /// impossible GPU request — are rejected with a structured error
+    /// *before* any state changes, instead of poisoning the completion
+    /// index (whose bit-ordering assumes non-negative finite times) and
+    /// panicking events later.  `actual_duration: NAN` stays valid when
+    /// a body resolver is installed (the streaming sentinel).
+    pub fn submit_spec(&mut self, s: Submission) -> Result<()> {
+        anyhow::ensure!(
+            s.gpus >= 1 && s.gpus <= self.cluster.total(),
+            "task {}: requested {} GPUs on a {}-GPU cluster",
+            s.id,
+            s.gpus,
+            self.cluster.total()
+        );
+        anyhow::ensure!(
+            s.est_duration.is_finite() && s.est_duration >= 0.0,
+            "task {}: estimated duration {} must be finite and non-negative",
+            s.id,
+            s.est_duration
+        );
+        let lazy = s.actual_duration.is_nan() && self.body_resolver.is_some();
+        anyhow::ensure!(
+            lazy || (s.actual_duration.is_finite() && s.actual_duration >= 0.0),
+            "task {}: actual duration {} must be finite and non-negative \
+             (NaN is the lazy sentinel and needs a body resolver installed)",
+            s.id,
+            s.actual_duration
+        );
         if s.arrival > self.clock {
             self.clock = s.arrival;
         }
@@ -555,7 +650,7 @@ impl InterTaskScheduler {
             },
         );
         self.queued.insert(s.id);
-        self.replan(true); // arrival: preemption (if enabled) may fire
+        self.replan(true) // arrival: preemption (if enabled) may fire
     }
 
     /// Current virtual time (last processed event).
@@ -587,6 +682,31 @@ impl InterTaskScheduler {
         std::mem::take(&mut self.repriced_log)
     }
 
+    /// Adoption decisions made since the last drain, in decision
+    /// order — the harness turns these into `Adopt` events.
+    pub fn drain_adopted(&mut self) -> Vec<AdoptDecision> {
+        std::mem::take(&mut self.adopted_log)
+    }
+
+    /// Merge decisions made since the last drain, in decision order —
+    /// the harness turns these into `Merge` events.
+    pub fn drain_merged(&mut self) -> Vec<MergeDecision> {
+        std::mem::take(&mut self.merged_log)
+    }
+
+    /// Opt into (or out of) cross-task shared-executor groups.  Sharing
+    /// only acts when a pricer is also attached — without a step-time
+    /// model the roster stretch cannot be priced, and co-location would
+    /// be unaccounted free capacity.
+    pub fn set_sharing(&mut self, cfg: SharingConfig) {
+        self.sharing = cfg;
+    }
+
+    /// The live shared-executor groups (empty unless sharing is on).
+    pub fn shared_groups(&self) -> &SharedGroupSet {
+        &self.groups
+    }
+
     /// Wall-seconds a task has actually held GPUs so far (charged GPU
     /// time: contention, derated collectives and transfer charges
     /// included; queue time excluded).
@@ -595,12 +715,25 @@ impl InterTaskScheduler {
     }
 
     /// Σ gpus · charged wall runtime over all tasks — the GPU-seconds
-    /// the workload actually consumed on the priced clock.
+    /// the workload actually consumed on the priced clock.  Tasks that
+    /// ever ran inside a shared executor group are charged through the
+    /// group instead (gpus × group lifetime, roster width irrelevant):
+    /// that ledger is exactly where co-location saves GPU-seconds.  With
+    /// sharing off both group terms are identically 0.0 and the sum is
+    /// bitwise the pre-sharing one.
     pub fn charged_gpu_seconds(&self) -> f64 {
-        self.tasks
-            .values()
-            .map(|t| t.gpus as f64 * t.charged_runtime)
-            .sum()
+        let solo: f64 = self
+            .tasks
+            .iter()
+            .filter(|(id, _)| !self.groups.ever_member(**id))
+            .map(|(_, t)| t.gpus as f64 * t.charged_runtime)
+            .sum();
+        let live: f64 = self
+            .groups
+            .iter()
+            .map(|(_, g)| g.gpus as f64 * (self.clock - g.acquired_at))
+            .sum();
+        solo + self.groups.gpu_seconds + live
     }
 
     // --- island resident index ------------------------------------------
@@ -662,9 +795,16 @@ impl InterTaskScheduler {
             // distinct neighbors with their GPU counts on my islands
             // (islands are disjoint, so per-island counts just add up)
             let mut acc: SmallVec<(usize, usize), 16> = SmallVec::new();
+            let my_group = self.groups.membership_of(id);
             for &isl in mine.iter() {
                 for (&oid, &cnt) in &self.residents[isl] {
                     if oid == id {
+                        continue;
+                    }
+                    // co-members of a shared executor group are not
+                    // foreign tenants: their cost is the roster stretch,
+                    // not island contention
+                    if my_group.is_some() && self.groups.membership_of(oid) == my_group {
                         continue;
                     }
                     if let Some(e) = acc.iter_mut().find(|(o, _)| *o == oid) {
@@ -688,8 +828,12 @@ impl InterTaskScheduler {
                 mine[topo.island_of(g)] = true;
             }
             let mut ctx = ContentionCtx::empty();
+            let my_group = self.groups.membership_of(id);
             for &oid in self.running.keys() {
                 if oid == id {
+                    continue;
+                }
+                if my_group.is_some() && self.groups.membership_of(oid) == my_group {
                     continue;
                 }
                 let t = &self.tasks[&oid];
@@ -813,15 +957,15 @@ impl InterTaskScheduler {
     /// resident on a dirty island are visited — a runner off every dirty
     /// island has an unchanged neighborhood, hence the unchanged factor
     /// the full recompute would have skipped anyway.
-    fn reprice_running(&mut self) {
+    fn reprice_running(&mut self) -> Result<()> {
         let applies = self
             .pricer
             .as_ref()
-            .map(|p| p.charge.contention)
+            .map(|p| p.charge.contention || self.sharing.enabled)
             .unwrap_or(false);
         if !applies {
             self.dirty.clear();
-            return;
+            return Ok(());
         }
         let ids: Vec<usize> = if self.tuning.incremental_reprice && self.topo_matches {
             let mut set: BTreeSet<usize> = BTreeSet::new();
@@ -834,7 +978,7 @@ impl InterTaskScheduler {
         };
         self.dirty.clear();
         for id in ids {
-            let new_factor = self.price_factor(id);
+            let new_factor = self.price_factor(id) * self.group_stretch_of(id);
             if new_factor == self.tasks[&id].run_factor {
                 continue;
             }
@@ -857,7 +1001,11 @@ impl InterTaskScheduler {
                 .get_mut(&id)
                 .expect("repriced task is running");
             if *entry != completion {
-                debug_assert!(completion >= 0.0, "negative completion {completion}");
+                anyhow::ensure!(
+                    completion.is_finite() && completion >= 0.0,
+                    "task {id}: repriced completion {completion} is not a finite \
+                     non-negative time (factor {new_factor})"
+                );
                 self.completions.remove(&(entry.to_bits(), id));
                 *entry = completion;
                 self.completions.insert((completion.to_bits(), id));
@@ -868,6 +1016,7 @@ impl InterTaskScheduler {
                 });
             }
         }
+        Ok(())
     }
 
     /// Waiting tasks, as solver inputs (estimated remaining durations).
@@ -887,7 +1036,7 @@ impl InterTaskScheduler {
             .collect()
     }
 
-    fn start_task(&mut self, id: usize) {
+    fn start_task(&mut self, id: usize) -> Result<()> {
         let policy = self.place;
         let clock = self.clock;
         let t = self.tasks.get_mut(&id).unwrap();
@@ -907,6 +1056,17 @@ impl InterTaskScheduler {
         t.placement = Some(p.clone());
         self.residents_add(id, &p);
         self.mark_dirty(&p);
+        // with sharing on, every fresh start founds a singleton executor
+        // group owning this placement — the seed adoption grows
+        if self.sharing.enabled && self.pricer.is_some() {
+            if let Some(family) = self.tasks[&id]
+                .shape
+                .as_ref()
+                .map(|sh| sh.workload.model.name.clone())
+            {
+                self.groups.found(family, gpus, p.clone(), id, clock);
+            }
+        }
         // fill the memoized nominal denominator for tasks submitted
         // before the pricer was attached
         if self.tasks[&id].nominal_step == 0.0 && gpus > 1 {
@@ -919,20 +1079,23 @@ impl InterTaskScheduler {
         // task's body has not been simulated yet — resolve it now, at
         // first start, so the completion below uses the real duration
         if self.tasks[&id].actual_remaining.is_nan() {
-            let resolver = self
-                .body_resolver
-                .as_mut()
-                .expect("actual_duration is NaN but no body resolver is installed");
+            let Some(resolver) = self.body_resolver.as_mut() else {
+                anyhow::bail!(
+                    "task {id}: actual_duration is NaN but no body resolver is installed"
+                );
+            };
             let actual = resolver(id);
-            debug_assert!(
+            anyhow::ensure!(
                 actual.is_finite() && actual >= 0.0,
                 "body resolver returned {actual} for task {id}"
             );
             self.tasks.get_mut(&id).unwrap().actual_remaining = actual;
         }
-        // price the run segment: placement/contention slowdown plus a
-        // one-off checkpoint transfer when this resume moved GPUs
-        let factor = self.price_factor(id);
+        // price the run segment: placement/contention slowdown (plus the
+        // roster stretch for shared-group members — 1.0 on a fresh
+        // singleton) plus a one-off checkpoint transfer when this
+        // resume moved GPUs
+        let factor = self.price_factor(id) * self.group_stretch_of(id);
         let charge = self.migration_charge_of(id, resumed_from.as_ref(), &p);
         self.migration_charge += charge;
         let t = self.tasks.get_mut(&id).unwrap();
@@ -941,7 +1104,10 @@ impl InterTaskScheduler {
         let completion = clock + charge + t.actual_remaining * factor;
         // the completion index orders by IEEE-754 bits, which equals
         // numeric order only for non-negative times
-        debug_assert!(completion >= 0.0, "negative completion {completion}");
+        anyhow::ensure!(
+            completion.is_finite() && completion >= 0.0,
+            "task {id}: completion {completion} is not a finite non-negative time"
+        );
         self.running.insert(id, completion);
         self.completions.insert((completion.to_bits(), id));
         self.started_log.push(StartDecision {
@@ -950,6 +1116,7 @@ impl InterTaskScheduler {
             placement: p,
             resumed_from,
         });
+        Ok(())
     }
 
     /// Evict a running task: release its GPUs, shrink its remaining
@@ -1001,34 +1168,38 @@ impl InterTaskScheduler {
     /// `allow_preempt` is true only for arrival-triggered replans —
     /// preemption is an *arrival* policy (`preempt_on_arrival`);
     /// completions free capacity and only backfill.
-    fn replan(&mut self, allow_preempt: bool) {
+    fn replan(&mut self, allow_preempt: bool) -> Result<()> {
         self.replans += 1;
-        self.plan_pass();
-        if self.enable_preemption && allow_preempt && self.preempt_pass() {
+        self.plan_pass()?;
+        if self.enable_preemption && allow_preempt && self.preempt_pass()? {
             // a preemption can free more than the preemptor took (a
             // 4-GPU victim for a 1-GPU urgent): backfill the remainder
             // now rather than letting it idle until the next event
-            self.plan_pass();
+            self.plan_pass()?;
         }
+        // tasks fresh GPUs could not seat may still co-locate: adoption
+        // runs after the plan passes so own-GPU starts keep priority
+        self.adopt_pass()?;
         // the starts/evictions above changed who shares an island with
         // whom — re-derive the affected survivors' completions
-        self.reprice_running();
+        self.reprice_running()
     }
 
-    fn plan_pass(&mut self) {
+    fn plan_pass(&mut self) -> Result<()> {
         match self.policy {
             Policy::Fcfs | Policy::Sjf => {
                 let mut waiting = self.waiting();
                 if self.policy == Policy::Sjf {
                     waiting.sort_by(|a, b| {
-                        a.duration.partial_cmp(&b.duration).unwrap().then(a.id.cmp(&b.id))
+                        crate::sched::finite_last_cmp(a.duration, b.duration)
+                            .then(a.id.cmp(&b.id))
                     });
                 } else {
                     waiting.sort_by_key(|t| t.id);
                 }
                 for w in waiting {
                     if w.gpus <= self.cluster.available() {
-                        self.start_task(w.id);
+                        self.start_task(w.id)?;
                     } else {
                         break; // strict: the head blocks the queue
                     }
@@ -1045,18 +1216,19 @@ impl InterTaskScheduler {
                 let waiting = self.waiting();
                 if waiting.is_empty() {
                     self.plan_cache = None;
-                    return;
+                    return Ok(());
                 }
                 if waiting.len() <= self.tuning.deep_queue_threshold {
                     self.plan_cache = None;
                     if let Ok(plan) = self.policy.plan(&waiting, self.cluster.total()) {
-                        self.start_per_plan(&plan);
+                        self.start_per_plan(&plan)?;
                     }
                 } else {
-                    self.plan_deep(waiting);
+                    self.plan_deep(waiting)?;
                 }
             }
         }
+        Ok(())
     }
 
     /// Deep-queue planning: LPT-order the waiting set, solve only the
@@ -1064,7 +1236,7 @@ impl InterTaskScheduler {
     /// previous plan), append the tail in LPT order, and cache the
     /// resulting priority order until new tasks arrive — the "replan
     /// incrementally from the surviving prefix" path.
-    fn plan_deep(&mut self, mut waiting: Vec<SchedTask>) {
+    fn plan_deep(&mut self, mut waiting: Vec<SchedTask>) -> Result<()> {
         self.deep_plans += 1;
         // membership check is order-independent, so the cache-hit path
         // (every completion-triggered replan) never pays the sort below
@@ -1075,8 +1247,10 @@ impl InterTaskScheduler {
         if !cached_ok {
             self.deep_solves += 1;
             // LPT priority order: longest first, ties on the lower id
+            // (descending via negation so non-finite durations — which a
+            // naive argument swap would put first — still sort last)
             waiting.sort_by(|a, b| {
-                b.duration.partial_cmp(&a.duration).unwrap().then(a.id.cmp(&b.id))
+                crate::sched::finite_last_cmp(-a.duration, -b.duration).then(a.id.cmp(&b.id))
             });
             let order: Vec<usize> = match self.policy {
                 Policy::Optimal => {
@@ -1115,7 +1289,7 @@ impl InterTaskScheduler {
                                 .map(|p| (p.start, p.id))
                                 .collect();
                             head_order.sort_by(|a, b| {
-                                a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+                                crate::sched::finite_last_cmp(a.0, b.0).then(a.1.cmp(&b.1))
                             });
                             head_order
                                 .into_iter()
@@ -1143,25 +1317,25 @@ impl InterTaskScheduler {
             .filter(|id| self.queued.contains(*id))
             .map(|&id| (id, self.tasks[&id].gpus))
             .collect();
-        self.start_easy(&order);
+        self.start_easy(&order)
     }
 
-    fn start_per_plan(&mut self, plan: &Schedule) {
+    fn start_per_plan(&mut self, plan: &Schedule) -> Result<()> {
         let mut order: Vec<(f64, usize, usize)> = plan
             .placements
             .iter()
             .map(|p| (p.start, p.id, p.gpus))
             .collect();
-        order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        order.sort_by(|a, b| crate::sched::finite_last_cmp(a.0, b.0).then(a.1.cmp(&b.1)));
         let order: Vec<(usize, usize)> = order.into_iter().map(|(_, id, g)| (id, g)).collect();
-        self.start_easy(&order);
+        self.start_easy(&order)
     }
 
     /// EASY backfill down a priority order of (id, gpus): start in
     /// order; when the head does not fit it reserves the earliest
     /// estimated release time, and later tasks may only jump it if their
     /// priced estimate finishes before that shadow time.
-    fn start_easy(&mut self, order: &[(usize, usize)]) {
+    fn start_easy(&mut self, order: &[(usize, usize)]) -> Result<()> {
         let mut shadow: Option<f64> = None;
         for &(id, gpus) in order {
             if shadow.is_some() && self.cluster.available() == 0 {
@@ -1176,11 +1350,11 @@ impl InterTaskScheduler {
                 if gpus <= self.cluster.available() {
                     let est = self.tasks[&id].est_remaining * self.candidate_factor(id);
                     if self.clock + est <= sh + 1e-9 {
-                        self.start_task(id);
+                        self.start_task(id)?;
                     }
                 }
             } else if gpus <= self.cluster.available() {
-                self.start_task(id);
+                self.start_task(id)?;
             } else {
                 // head blocked: reserve at the earliest estimated
                 // release time that frees enough GPUs
@@ -1199,7 +1373,7 @@ impl InterTaskScheduler {
                         )
                     })
                     .collect();
-                rel.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                rel.sort_by(|a, b| crate::sched::finite_last_cmp(a.0, b.0));
                 let mut virt_free = self.cluster.available();
                 let mut sh = self.clock;
                 for (when, g) in rel {
@@ -1212,6 +1386,7 @@ impl InterTaskScheduler {
                 shadow = Some(sh);
             }
         }
+        Ok(())
     }
 
     /// Priority preemption: while the highest-priority waiting task can
@@ -1220,7 +1395,7 @@ impl InterTaskScheduler {
     /// one task whose priority strictly exceeds every task it displaces,
     /// so the pass terminates.  Returns whether anything was started or
     /// evicted (the caller backfills leftover freed capacity if so).
-    fn preempt_pass(&mut self) -> bool {
+    fn preempt_pass(&mut self) -> Result<bool> {
         let mut acted = false;
         loop {
             // highest-priority waiting task (ties: lowest id)
@@ -1232,17 +1407,17 @@ impl InterTaskScheduler {
                     (t.priority, id, t.gpus)
                 })
                 .max_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
-            let Some((prio, id, need)) = blocked else { return acted };
+            let Some((prio, id, need)) = blocked else { return Ok(acted) };
             // must outrank someone running to override the queue policy
             let outranks_somebody = self
                 .running
                 .keys()
                 .any(|rid| self.tasks[rid].priority < prio);
             if !outranks_somebody {
-                return acted;
+                return Ok(acted);
             }
             if need <= self.cluster.available() {
-                self.start_task(id);
+                self.start_task(id)?;
                 acted = true;
                 continue;
             }
@@ -1251,20 +1426,29 @@ impl InterTaskScheduler {
             // pass of this same replan) are never victims: evicting
             // them would save zero run time and would put a Preempt
             // ahead of the task's own Start in the drained event order.
+            // Shared-group members are never victims either — a member
+            // holds no individually releasable allocation (the group
+            // owns the placement for its whole roster).
             let mut victims: Vec<(usize, f64)> = self
                 .running
                 .keys()
                 .filter(|&&rid| {
                     let t = &self.tasks[&rid];
-                    t.priority < prio && t.started_at.unwrap() < self.clock
+                    t.priority < prio
+                        && t.started_at.unwrap() < self.clock
+                        && self.groups.membership_of(rid).is_none()
                 })
                 .map(|&rid| (rid, self.tasks[&rid].started_at.unwrap()))
                 .collect();
-            // youngest first: latest start, ties broken on higher id
-            victims.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(b.0.cmp(&a.0)));
+            // youngest first: latest start (descending via negation so a
+            // non-finite anchor cannot float to the front), ties broken
+            // on the higher id
+            victims.sort_by(|a, b| {
+                crate::sched::finite_last_cmp(-a.1, -b.1).then(b.0.cmp(&a.0))
+            });
             let reclaimable: usize = victims.iter().map(|&(v, _)| self.tasks[&v].gpus).sum();
             if self.cluster.available() + reclaimable < need {
-                return acted; // even a full purge cannot seat it
+                return Ok(acted); // even a full purge cannot seat it
             }
             for (v, _) in victims {
                 if self.cluster.available() >= need {
@@ -1272,9 +1456,279 @@ impl InterTaskScheduler {
                 }
                 self.evict(v);
             }
-            self.start_task(id);
+            self.start_task(id)?;
             acted = true;
         }
+    }
+
+    // --- shared executor groups -----------------------------------------
+
+    /// The roster stretch a shared-group member currently runs at:
+    /// [`StepTimeModel::group_stretch`] over the combined ranks of every
+    /// member, in ascending member-id order.  Exactly 1.0 for
+    /// non-members, singleton rosters, shapeless tasks, or whenever
+    /// sharing is off — so the factor product is a bitwise no-op on the
+    /// pre-sharing path.
+    fn group_stretch_of(&self, id: usize) -> f64 {
+        if !self.sharing.enabled {
+            return 1.0;
+        }
+        let Some(pr) = &self.pricer else { return 1.0 };
+        let Some(gid) = self.groups.membership_of(id) else { return 1.0 };
+        let g = self.groups.group(gid);
+        if g.members.len() <= 1 {
+            return 1.0;
+        }
+        let t = &self.tasks[&id];
+        let Some(shape) = &t.shape else { return 1.0 };
+        let mut ranks = Vec::new();
+        for &m in &g.members {
+            if let Some(sh) = self.tasks[&m].shape.as_ref() {
+                ranks.extend_from_slice(&sh.workload.ranks);
+            }
+        }
+        let combined = Workload { ranks, ..shape.workload.clone() };
+        pr.model.group_stretch(&shape.workload, &combined, t.gpus)
+    }
+
+    /// Sustained roster throughput (adapter·batches per nominal second)
+    /// the group would run at with the given combined ranks, priced over
+    /// the representative (lowest-id) member's workload template.
+    fn roster_throughput(&self, template: &Workload, ranks: Vec<usize>, gpus: usize) -> f64 {
+        let pr = self.pricer.as_ref().expect("sharing requires a pricer");
+        let n = ranks.len() as f64 * template.batch_per_adapter as f64;
+        let w = Workload { ranks, ..template.clone() };
+        let step = pr.model.nominal_step_total(&w, gpus);
+        if step <= 0.0 {
+            return f64::INFINITY;
+        }
+        n / step
+    }
+
+    /// Would adopting waiting task `id` into group `gid` keep the
+    /// roster's sustained throughput above the marginal-gain bar?  Same
+    /// bar discipline as [`crate::sched::intra::GroupPricer`]: a zero
+    /// bar rejects only strict regressions.
+    fn adoption_clears_bar(&self, gid: usize, id: usize) -> bool {
+        if self.pricer.is_none() {
+            return false;
+        }
+        let g = self.groups.group(gid);
+        let Some(&rep_id) = g.members.iter().next() else { return false };
+        let Some(rep) = self.tasks[&rep_id].shape.as_ref() else { return false };
+        let Some(cand) = self.tasks[&id].shape.as_ref() else { return false };
+        let mut current_ranks: Vec<usize> = Vec::new();
+        for &m in &g.members {
+            if let Some(sh) = self.tasks[&m].shape.as_ref() {
+                current_ranks.extend_from_slice(&sh.workload.ranks);
+            }
+        }
+        let mut next_ranks = current_ranks.clone();
+        next_ranks.extend_from_slice(&cand.workload.ranks);
+        let current = self.roster_throughput(&rep.workload, current_ranks, g.gpus);
+        let next = self.roster_throughput(&rep.workload, next_ranks, g.gpus);
+        let bar = self.sharing.min_marginal_gain;
+        if bar > 0.0 {
+            next > current * (1.0 + bar)
+        } else {
+            next >= current * (1.0 - 1e-9)
+        }
+    }
+
+    /// Adoption pass: fill vacated executor slots with waiting
+    /// configurations from *other* tasks of the same model family.  Runs
+    /// after the plan passes (fresh GPUs keep priority) and only with
+    /// sharing on and a pricer attached.  Tasks are visited in ascending
+    /// id; groups in ascending (founding) id — pure functions of the
+    /// event history, so replays stay deterministic.
+    fn adopt_pass(&mut self) -> Result<()> {
+        if !self.sharing.enabled || self.pricer.is_none() || self.groups.is_empty() {
+            return Ok(());
+        }
+        let waiting: Vec<usize> = self.queued.iter().copied().collect();
+        for id in waiting {
+            if !self.queued.contains(&id) {
+                continue;
+            }
+            let t = &self.tasks[&id];
+            // only never-started tasks adopt: a preempted task's books
+            // belong to its own allocation history
+            if t.first_started_at.is_some() {
+                continue;
+            }
+            let Some(shape) = t.shape.as_ref() else { continue };
+            let family = shape.workload.model.name.clone();
+            let gpus = t.gpus;
+            let target = self.groups.ids().find(|&gid| {
+                let g = self.groups.group(gid);
+                g.family == family
+                    && g.gpus == gpus
+                    && g.members.len() < self.sharing.max_roster
+                    && self.adoption_clears_bar(gid, id)
+            });
+            if let Some(gid) = target {
+                self.adopt_task(id, gid)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Seat waiting task `id` in group `gid`'s roster: no new GPUs are
+    /// allocated — the task runs on the group's placement, stretched by
+    /// the grown roster.  The co-members' own stretch change is folded
+    /// in by the trailing `reprice_running` (their islands go dirty).
+    fn adopt_task(&mut self, id: usize, gid: usize) -> Result<()> {
+        let clock = self.clock;
+        let p = self.groups.group(gid).placement.clone();
+        {
+            let t = self.tasks.get_mut(&id).unwrap();
+            t.started_at = Some(clock);
+            t.segment_at = clock;
+            t.first_started_at = Some(clock);
+            t.placement = Some(p.clone());
+        }
+        self.queued.remove(&id);
+        self.groups.adopt(gid, id);
+        self.residents_add(id, &p);
+        self.mark_dirty(&p);
+        // fill the memoized nominal denominator, as start_task does
+        let gpus = self.tasks[&id].gpus;
+        if self.tasks[&id].nominal_step == 0.0 && gpus > 1 {
+            if let (Some(pr), Some(shape)) = (&self.pricer, &self.tasks[&id].shape) {
+                let v = pr.model.nominal_step_total(&shape.workload, gpus);
+                self.tasks.get_mut(&id).unwrap().nominal_step = v;
+            }
+        }
+        // lazy body resolution, exactly as at a fresh start
+        if self.tasks[&id].actual_remaining.is_nan() {
+            let Some(resolver) = self.body_resolver.as_mut() else {
+                anyhow::bail!(
+                    "task {id}: actual_duration is NaN but no body resolver is installed"
+                );
+            };
+            let actual = resolver(id);
+            anyhow::ensure!(
+                actual.is_finite() && actual >= 0.0,
+                "body resolver returned {actual} for task {id}"
+            );
+            self.tasks.get_mut(&id).unwrap().actual_remaining = actual;
+        }
+        let factor = self.price_factor(id) * self.group_stretch_of(id);
+        let t = self.tasks.get_mut(&id).unwrap();
+        t.run_factor = factor;
+        t.run_charge = 0.0;
+        let completion = clock + t.actual_remaining * factor;
+        anyhow::ensure!(
+            completion.is_finite() && completion >= 0.0,
+            "task {id}: completion {completion} is not a finite non-negative time"
+        );
+        self.running.insert(id, completion);
+        self.completions.insert((completion.to_bits(), id));
+        self.adoptions += 1;
+        self.adopted_log.push(AdoptDecision {
+            id,
+            time: clock,
+            placement: p,
+        });
+        Ok(())
+    }
+
+    /// A group shrank below [`SharingConfig::merge_below`]: fold its
+    /// survivors into a peer group (same family and width, room in the
+    /// roster; same-island peers preferred, then the lowest group id),
+    /// freeing the shrunken group's GPUs.  Each moved survivor pays the
+    /// checkpoint-transfer charge of [`StepTimeModel::migration_cost`].
+    /// No eligible peer ⇒ the group keeps running under-filled.
+    fn try_merge(&mut self, gid: usize) -> Result<()> {
+        let (family, gpus, old_p, members) = {
+            let g = self.groups.group(gid);
+            (
+                g.family.clone(),
+                g.gpus,
+                g.placement.clone(),
+                g.members.iter().copied().collect::<Vec<usize>>(),
+            )
+        };
+        if members.is_empty() {
+            return Ok(());
+        }
+        let old_islands: BTreeSet<usize> = old_p
+            .gpus()
+            .iter()
+            .map(|&g| self.cluster.topo.island_of(g))
+            .collect();
+        let peer = self
+            .groups
+            .iter()
+            .filter(|&(pid, pg)| {
+                pid != gid
+                    && pg.family == family
+                    && pg.gpus == gpus
+                    && pg.members.len() + members.len() <= self.sharing.max_roster
+            })
+            .map(|(pid, pg)| {
+                let same_island = pg
+                    .placement
+                    .gpus()
+                    .iter()
+                    .any(|&g| old_islands.contains(&self.cluster.topo.island_of(g)));
+                (!same_island, pid)
+            })
+            .min();
+        let Some((_, pid)) = peer else { return Ok(()) };
+        let new_p = self.groups.group(pid).placement.clone();
+        for &m in &members {
+            self.groups.move_member(gid, pid, m);
+        }
+        let clock = self.clock;
+        for &m in &members {
+            // fold the finished part of the current run segment into the
+            // books (same arithmetic as eviction), then restart the
+            // segment on the peer's placement at the merged rate
+            {
+                let t = self.tasks.get_mut(&m).unwrap();
+                let elapsed = clock - t.segment_at;
+                let progress = t.nominal_progress(elapsed);
+                t.actual_remaining = (t.actual_remaining - progress).max(0.0);
+                t.est_remaining = (t.est_remaining - progress).max(1e-9);
+                t.charged_runtime += elapsed;
+                t.segment_at = clock;
+            }
+            self.residents_remove(m, &old_p);
+            self.tasks.get_mut(&m).unwrap().placement = Some(new_p.clone());
+            self.residents_add(m, &new_p);
+            let charge = self.migration_charge_of(m, Some(&old_p), &new_p);
+            self.migration_charge += charge;
+            let factor = self.price_factor(m) * self.group_stretch_of(m);
+            let t = self.tasks.get_mut(&m).unwrap();
+            t.run_factor = factor;
+            t.run_charge = charge;
+            let completion = clock + charge + t.actual_remaining * factor;
+            anyhow::ensure!(
+                completion.is_finite() && completion >= 0.0,
+                "task {m}: completion {completion} is not a finite non-negative time"
+            );
+            let prev = self
+                .running
+                .insert(m, completion)
+                .with_context(|| format!("merged task {m} is not running"))?;
+            self.completions.remove(&(prev.to_bits(), m));
+            self.completions.insert((completion.to_bits(), m));
+            self.merges += 1;
+            self.merged_log.push(MergeDecision {
+                id: m,
+                time: clock,
+                from: old_p.clone(),
+                to: new_p.clone(),
+            });
+        }
+        self.mark_dirty(&old_p);
+        self.mark_dirty(&new_p);
+        let freed = self.groups.finalize(gid, clock);
+        self.cluster
+            .release(&freed)
+            .context("releasing a merged-away group's GPUs")?;
+        Ok(())
     }
 
     /// The next completion event, if any: (task id, completion time).
@@ -1319,12 +1773,28 @@ impl InterTaskScheduler {
             .placement
             .take()
             .with_context(|| format!("completed task {id} holds no placement"))?;
-        self.cluster
-            .release(&p)
-            .with_context(|| format!("releasing completed task {id}'s GPUs"))?;
-        self.residents_remove(id, &p);
-        self.mark_dirty(&p);
-        self.replan(false); // completion event → backfill instantly
+        if let Some(gid) = self.groups.membership_of(id) {
+            // a shared-group member departs its roster; the group keeps
+            // (or finally releases) the GPUs
+            self.residents_remove(id, &p);
+            self.mark_dirty(&p);
+            let survivors = self.groups.depart(gid, id);
+            if survivors == 0 {
+                let freed = self.groups.finalize(gid, when);
+                self.cluster
+                    .release(&freed)
+                    .with_context(|| format!("releasing task {id}'s dissolved group"))?;
+            } else if survivors < self.sharing.merge_below {
+                self.try_merge(gid)?;
+            }
+        } else {
+            self.cluster
+                .release(&p)
+                .with_context(|| format!("releasing completed task {id}'s GPUs"))?;
+            self.residents_remove(id, &p);
+            self.mark_dirty(&p);
+        }
+        self.replan(false)?; // completion event → backfill instantly
         Ok(Some((id, when)))
     }
 
@@ -1368,7 +1838,7 @@ mod tests {
     fn run(policy: Policy, tasks: &[(usize, f64)], gpus: usize) -> f64 {
         let mut s = InterTaskScheduler::new(gpus, policy);
         for (i, &(g, d)) in tasks.iter().enumerate() {
-            s.submit(i, g, d, d);
+            s.submit(i, g, d, d).unwrap();
         }
         let mk = s.run_to_completion();
         assert!(s.all_done());
@@ -1394,8 +1864,8 @@ mod tests {
         // two 4-GPU tasks estimated long, but the first finishes early:
         // the second must start at the *actual* completion time
         let mut s = InterTaskScheduler::new(4, Policy::Optimal);
-        s.submit(0, 4, 100.0, 10.0); // massively over-estimated
-        s.submit(1, 4, 100.0, 10.0);
+        s.submit(0, 4, 100.0, 10.0).unwrap(); // massively over-estimated
+        s.submit(1, 4, 100.0, 10.0).unwrap();
         let mk = s.run_to_completion();
         assert!((mk - 20.0).abs() < 1e-9, "makespan {mk}");
         let (s1, _) = s.span(1).unwrap();
@@ -1435,14 +1905,14 @@ mod tests {
     #[test]
     fn timed_arrivals_and_event_api() {
         let mut s = InterTaskScheduler::new(4, Policy::Optimal);
-        s.submit_at(0, 4, 10.0, 10.0, 0.0);
+        s.submit_at(0, 4, 10.0, 10.0, 0.0).unwrap();
         let started = s.drain_started();
         assert_eq!(started.len(), 1);
         assert_eq!((started[0].id, started[0].time), (0, 0.0));
         assert_eq!(started[0].placement.len(), 4);
         assert!(started[0].resumed_from.is_none());
         // arrives while the cluster is full: queued, not started
-        s.submit_at(1, 4, 10.0, 10.0, 3.0);
+        s.submit_at(1, 4, 10.0, 10.0, 3.0).unwrap();
         assert!(s.drain_started().is_empty());
         assert_eq!(s.free_gpus(), 0);
         assert_eq!(s.peek_next_completion(), Some((0, 10.0)));
@@ -1461,7 +1931,7 @@ mod tests {
     #[test]
     fn complete_next_reports_corruption_as_error_not_panic() {
         let mut s = InterTaskScheduler::new(4, Policy::Optimal);
-        s.submit(0, 2, 10.0, 10.0);
+        s.submit(0, 2, 10.0, 10.0).unwrap();
         // sabotage: drop the running task's placement behind the
         // scheduler's back — the old code unwrap-panicked here
         s.tasks.get_mut(&0).unwrap().placement = None;
@@ -1475,8 +1945,8 @@ mod tests {
     #[test]
     fn starts_carry_live_bitmap_placements() {
         let mut s = InterTaskScheduler::new(8, Policy::Optimal);
-        s.submit(0, 4, 10.0, 10.0);
-        s.submit(1, 4, 10.0, 10.0);
+        s.submit(0, 4, 10.0, 10.0).unwrap();
+        s.submit(1, 4, 10.0, 10.0).unwrap();
         let started = s.drain_started();
         assert_eq!(started.len(), 2);
         assert!(!started[0].placement.overlaps(&started[1].placement));
@@ -1491,8 +1961,8 @@ mod tests {
     #[test]
     fn replans_triggered_by_events() {
         let mut s = InterTaskScheduler::new(2, Policy::Optimal);
-        s.submit(0, 2, 5.0, 5.0);
-        s.submit(1, 2, 5.0, 5.0);
+        s.submit(0, 2, 5.0, 5.0).unwrap();
+        s.submit(1, 2, 5.0, 5.0).unwrap();
         let before = s.replans;
         s.run_to_completion();
         assert!(s.replans > before, "completion must replan");
@@ -1502,10 +1972,10 @@ mod tests {
     fn high_priority_arrival_preempts_youngest() {
         let mut s = InterTaskScheduler::new(4, Policy::Fcfs);
         s.enable_preemption = true;
-        s.submit_at_prio(0, 4, 100.0, 100.0, 0.0, 0);
+        s.submit_at_prio(0, 4, 100.0, 100.0, 0.0, 0).unwrap();
         assert_eq!(s.drain_started().len(), 1);
         // a higher-priority 4-GPU task lands at t=5 on a full cluster
-        s.submit_at_prio(1, 4, 10.0, 10.0, 5.0, 1);
+        s.submit_at_prio(1, 4, 10.0, 10.0, 5.0, 1).unwrap();
         let pre = s.drain_preempted();
         assert_eq!(pre.len(), 1);
         assert_eq!((pre[0].id, pre[0].time), (0, 5.0));
@@ -1530,14 +2000,14 @@ mod tests {
     fn preemption_leftover_capacity_backfills_immediately() {
         let mut s = InterTaskScheduler::new(8, Policy::Optimal);
         s.enable_preemption = true;
-        s.submit_at_prio(0, 4, 100.0, 100.0, 0.0, 0);
-        s.submit_at_prio(1, 4, 100.0, 100.0, 0.0, 0);
-        s.submit_at_prio(2, 2, 10.0, 10.0, 0.0, 0); // queued: cluster full
+        s.submit_at_prio(0, 4, 100.0, 100.0, 0.0, 0).unwrap();
+        s.submit_at_prio(1, 4, 100.0, 100.0, 0.0, 0).unwrap();
+        s.submit_at_prio(2, 2, 10.0, 10.0, 0.0, 0).unwrap(); // queued: cluster full
         s.drain_started();
         // an urgent 1-GPU arrival evicts a 4-GPU victim; the 3 leftover
         // GPUs must backfill the queued short 2-GPU task at the same
         // instant, not idle until the next completion
-        s.submit_at_prio(3, 1, 50.0, 50.0, 5.0, 1);
+        s.submit_at_prio(3, 1, 50.0, 50.0, 5.0, 1).unwrap();
         assert_eq!(s.drain_preempted().len(), 1);
         let started: Vec<usize> = s.drain_started().iter().map(|d| d.id).collect();
         assert!(started.contains(&3), "urgent task must start: {started:?}");
@@ -1565,7 +2035,7 @@ mod tests {
         }
         let mut s = InterTaskScheduler::new(16, Policy::Optimal);
         for (i, &(g, d)) in tasks.iter().enumerate() {
-            s.submit(i, g, d, d);
+            s.submit(i, g, d, d).unwrap();
         }
         assert!(s.deep_plans > 0, "48 waiting tasks must take the deep path");
         let mk = s.run_to_completion();
@@ -1584,7 +2054,7 @@ mod tests {
         // pure function of the submissions: a rerun matches bitwise
         let mut s2 = InterTaskScheduler::new(16, Policy::Optimal);
         for (i, &(g, d)) in tasks.iter().enumerate() {
-            s2.submit(i, g, d, d);
+            s2.submit(i, g, d, d).unwrap();
         }
         let mk2 = s2.run_to_completion();
         assert_eq!(mk.to_bits(), mk2.to_bits());
@@ -1598,7 +2068,7 @@ mod tests {
     fn shallow_queues_never_take_the_deep_path() {
         let mut s = InterTaskScheduler::new(8, Policy::Optimal);
         for i in 0..10 {
-            s.submit(i, 1 + (i % 2), 5.0, 5.0);
+            s.submit(i, 1 + (i % 2), 5.0, 5.0).unwrap();
         }
         s.run_to_completion();
         assert_eq!(s.deep_plans, 0, "10 tasks must replan exactly");
@@ -1612,7 +2082,7 @@ mod tests {
         // batch: actuals known at submission time
         let mut batch = InterTaskScheduler::new(4, Policy::Optimal);
         for (i, &d) in durations.iter().enumerate() {
-            batch.submit_at(i, 1 + i % 2, d * 2.0, d, i as f64);
+            batch.submit_at(i, 1 + i % 2, d * 2.0, d, i as f64).unwrap();
         }
         let mk_batch = batch.run_to_completion();
         let batch_starts = batch.drain_started();
@@ -1625,7 +2095,7 @@ mod tests {
             durations[id]
         }));
         for (i, &d) in durations.iter().enumerate() {
-            stream.submit_at(i, 1 + i % 2, d * 2.0, f64::NAN, i as f64);
+            stream.submit_at(i, 1 + i % 2, d * 2.0, f64::NAN, i as f64).unwrap();
         }
         let mk_stream = stream.run_to_completion();
         assert!(stream.all_done());
@@ -1676,7 +2146,8 @@ mod tests {
             arrival: at,
             priority: prio,
             shape: Some(nano_shape()),
-        });
+        })
+        .unwrap();
     }
 
     #[test]
@@ -1799,11 +2270,113 @@ mod tests {
     fn equal_priority_never_preempts() {
         let mut s = InterTaskScheduler::new(4, Policy::Fcfs);
         s.enable_preemption = true;
-        s.submit_at_prio(0, 4, 50.0, 50.0, 0.0, 1);
-        s.submit_at_prio(1, 4, 1.0, 1.0, 5.0, 1);
+        s.submit_at_prio(0, 4, 50.0, 50.0, 0.0, 1).unwrap();
+        s.submit_at_prio(1, 4, 1.0, 1.0, 5.0, 1).unwrap();
         assert!(s.drain_preempted().is_empty());
         let mk = s.run_to_completion();
         assert!((mk - 51.0).abs() < 1e-9, "makespan {mk}");
         assert_eq!(s.preemptions, 0);
+    }
+
+    // --- submission validation --------------------------------------------
+
+    #[test]
+    fn malformed_submissions_are_structured_errors_not_panics() {
+        let mut s = InterTaskScheduler::new(4, Policy::Optimal);
+        // NaN actual without a body resolver: the lazy sentinel is invalid
+        assert!(s.submit(0, 2, 10.0, f64::NAN).is_err());
+        assert!(s.submit(1, 2, f64::NAN, 10.0).is_err()); // NaN estimate
+        assert!(s.submit(2, 2, f64::INFINITY, 10.0).is_err());
+        assert!(s.submit(3, 2, 10.0, -1.0).is_err()); // negative actual
+        assert!(s.submit(4, 0, 10.0, 10.0).is_err()); // zero GPUs
+        assert!(s.submit(5, 8, 10.0, 10.0).is_err()); // wider than the cluster
+        // rejected submissions left no state behind: a valid task runs alone
+        s.submit(6, 2, 10.0, 10.0).unwrap();
+        let mk = s.run_to_completion();
+        assert!(s.all_done());
+        assert_eq!(mk.to_bits(), 10.0f64.to_bits());
+    }
+
+    // --- shared executor groups -------------------------------------------
+
+    #[test]
+    fn sharing_without_a_pricer_changes_nothing() {
+        let tasks = [(1usize, 10.0f64), (2, 8.0), (1, 6.0), (4, 12.0)];
+        let play = |share: bool| {
+            let mut s = InterTaskScheduler::new(4, Policy::Optimal);
+            if share {
+                s.set_sharing(SharingConfig::paper());
+            }
+            for (i, &(g, d)) in tasks.iter().enumerate() {
+                s.submit(i, g, d, d).unwrap();
+            }
+            let mk = s.run_to_completion();
+            (mk, s.drain_started(), s.adoptions, s.shared_groups().is_empty())
+        };
+        let (mk0, st0, ad0, empty0) = play(false);
+        let (mk1, st1, ad1, empty1) = play(true);
+        assert_eq!(mk0.to_bits(), mk1.to_bits(), "unpriced sharing must be inert");
+        assert_eq!(st0, st1);
+        assert_eq!((ad0, ad1), (0, 0));
+        assert!(empty0 && empty1, "no group may be founded without a pricer");
+    }
+
+    #[test]
+    fn adoption_colocates_queued_same_family_work_and_saves_gpu_seconds() {
+        // one GPU, two identical same-family 1-GPU tasks: without sharing
+        // they serialize; with sharing the second is adopted into the
+        // first's executor group and both run concurrently, each
+        // stretched by the (sublinear) roster step — strictly faster and
+        // strictly cheaper than serial.
+        let play = |sharing: Option<SharingConfig>| {
+            let mut s = priced_sched(1, 1, Pricing::default());
+            if let Some(cfg) = sharing {
+                s.set_sharing(cfg);
+            }
+            submit_shaped(&mut s, 0, 1, 10.0, 0.0, 0);
+            submit_shaped(&mut s, 1, 1, 10.0, 0.0, 0);
+            let mk = s.run_to_completion();
+            assert!(s.all_done());
+            (mk, s.charged_gpu_seconds(), s.adoptions, s.drain_adopted())
+        };
+        let (mk_off, gs_off, ad_off, adopted_off) = play(None);
+        assert_eq!(ad_off, 0);
+        assert!(adopted_off.is_empty());
+        assert!((mk_off - 20.0).abs() < 1e-9, "serial baseline drifted: {mk_off}");
+        assert!((gs_off - 20.0).abs() < 1e-9, "{gs_off}");
+        let (mk_on, gs_on, ad_on, adopted_on) = play(Some(SharingConfig::paper()));
+        assert_eq!(ad_on, 1);
+        assert_eq!(adopted_on.len(), 1);
+        assert_eq!(adopted_on[0].id, 1);
+        assert_eq!(adopted_on[0].placement.len(), 1);
+        assert!(mk_on < mk_off, "co-location must beat serial: {mk_on} vs {mk_off}");
+        assert!(gs_on < gs_off, "group occupancy must undercut serial: {gs_on} vs {gs_off}");
+        assert!(mk_on > 10.0, "the roster stretch is not free: {mk_on}");
+    }
+
+    #[test]
+    fn shrunken_groups_merge_into_a_peer_with_room() {
+        // 3 single-GPU islands, roster cap 2.  Tasks 0/1/2 found three
+        // singleton groups; 3 and 4 are adopted (groups 0 and 1 fill).
+        // The short members drain out; when task 4 departs, task 1 is
+        // alone in its group while group 0 (task 0 alone by then) has
+        // room — the survivors merge and the emptied group's GPU frees.
+        let mut s = priced_sched(3, 1, Pricing::default());
+        s.set_sharing(SharingConfig { max_roster: 2, ..SharingConfig::paper() });
+        submit_shaped(&mut s, 0, 1, 100.0, 0.0, 0);
+        submit_shaped(&mut s, 1, 1, 100.0, 0.0, 0);
+        submit_shaped(&mut s, 2, 1, 40.0, 0.0, 0);
+        submit_shaped(&mut s, 3, 1, 40.0, 0.0, 0);
+        submit_shaped(&mut s, 4, 1, 40.0, 0.0, 0);
+        assert_eq!(s.adoptions, 2, "tasks 3 and 4 must join the full-width groups");
+        let mk = s.run_to_completion();
+        assert!(s.all_done());
+        assert_eq!(s.merges, 1, "the emptied group must fold into its peer");
+        let merged = s.drain_merged();
+        assert_eq!(merged.len(), 1);
+        assert_eq!(merged[0].id, 1);
+        assert_ne!(merged[0].from, merged[0].to, "a merge is a migration");
+        assert!(s.shared_groups().is_empty(), "all groups dissolve by the end");
+        assert!(mk > 100.0, "the long co-located tasks bound the makespan: {mk}");
     }
 }

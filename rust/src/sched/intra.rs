@@ -264,6 +264,82 @@ pub fn backfill_priced(
     })
 }
 
+/// A configuration waiting in *another* task's sweep, offered to a
+/// shared executor's vacated slot (the cross-task co-location path,
+/// paper §6): the owning task, the model family its backbone must
+/// match, and the hyper-parameters the slot would run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ForeignCandidate {
+    pub task: usize,
+    /// Model-family identity ([`crate::config::ModelShape`] name); an
+    /// executor only seats adapters of its own frozen backbone.
+    pub family: String,
+    pub hp: HyperParams,
+}
+
+/// [`admit_slot`] generalized across tasks: should a vacated slot seat a
+/// configuration from a *different* task right now?  A family mismatch
+/// is an unconditional no — the backbone is frozen — otherwise the
+/// decision is exactly the same-task one: the memory model must fit the
+/// grown batch and the pricer's marginal-throughput bar must clear.
+pub fn admit_slot_cross(
+    candidate: &ForeignCandidate,
+    host_family: &str,
+    resident_ranks: &[usize],
+    resident_batch: usize,
+    mem: &MemoryModel,
+    pricer: Option<&GroupPricer<'_>>,
+) -> bool {
+    candidate.family == host_family
+        && admit_slot(&candidate.hp, resident_ranks, resident_batch, mem, pricer)
+}
+
+/// [`backfill_priced`] generalized across tasks: fill one vacated slot
+/// from a pool of foreign candidates.  Same-family candidates are
+/// considered in the same preference order as the same-task path (same
+/// batch size as the departing adapter first, then the largest fitting
+/// batch, earliest pool position breaking ties); foreign families are
+/// never seated.  Returns the chosen pool index.
+pub fn backfill_cross(
+    pending: &[ForeignCandidate],
+    host_family: &str,
+    departing_batch: usize,
+    current_total_batch: usize,
+    mem: &MemoryModel,
+    allow_mixed: bool,
+    resident_ranks: &[usize],
+    pricer: Option<&GroupPricer<'_>>,
+) -> Option<usize> {
+    let ok = |c: &ForeignCandidate| {
+        c.family == host_family
+            && mem.fits(current_total_batch - departing_batch + c.hp.batch_size)
+            && pricer.map_or(true, |p| {
+                p.worth_admitting(resident_ranks, c.hp.rank, c.hp.batch_size)
+            })
+    };
+    // same batch size first (preserves homogeneous packing)
+    if let Some(i) = pending
+        .iter()
+        .position(|c| c.hp.batch_size == departing_batch && ok(c))
+    {
+        return Some(i);
+    }
+    if allow_mixed {
+        // largest fitting batch size next (greedy, §A.3)
+        let mut best: Option<(usize, usize)> = None;
+        for (i, c) in pending.iter().enumerate() {
+            if ok(c) {
+                match best {
+                    Some((_, bb)) if c.hp.batch_size <= bb => {}
+                    _ => best = Some((i, c.hp.batch_size)),
+                }
+            }
+        }
+        return best.map(|(i, _)| i);
+    }
+    None
+}
+
 fn backfill_inner(
     pending: &[HyperParams],
     departing_batch: usize,
@@ -499,6 +575,81 @@ mod tests {
         // a zero gain bar admits what memory admits
         let free = GroupPricer { min_marginal_gain: 0.0, ..strict };
         assert!(admit_slot(&hp(8), &[16, 16], 16, &mem(64), Some(&free)));
+    }
+
+    fn foreign(task: usize, family: &str, batch_size: usize) -> ForeignCandidate {
+        ForeignCandidate {
+            task,
+            family: family.into(),
+            hp: hp(batch_size),
+        }
+    }
+
+    #[test]
+    fn cross_task_admission_is_family_gated() {
+        // same family: exactly the same decision as the same-task path
+        let c = foreign(3, "llama-8b", 4);
+        assert_eq!(
+            admit_slot_cross(&c, "llama-8b", &[16], 8, &mem(12), None),
+            admit_slot(&c.hp, &[16], 8, &mem(12), None)
+        );
+        // a foreign backbone is never seated, even on an empty executor
+        let alien = foreign(3, "qwen-32b", 4);
+        assert!(!admit_slot_cross(&alien, "llama-8b", &[], 0, &mem(64), None));
+        // memory still binds for same-family candidates
+        assert!(!admit_slot_cross(&foreign(1, "llama-8b", 8), "llama-8b", &[16], 8, &mem(12), None));
+    }
+
+    #[test]
+    fn cross_task_backfill_prefers_same_batch_and_skips_foreign_families() {
+        let pool = vec![
+            foreign(0, "qwen-32b", 4), // right batch, wrong backbone
+            foreign(1, "llama-8b", 2),
+            foreign(2, "llama-8b", 4), // the pick: same family + batch
+        ];
+        let pick = backfill_cross(&pool, "llama-8b", 4, 12, &mem(16), true, &[16], None);
+        assert_eq!(pick, Some(2));
+        // no same-batch same-family candidate: largest fitting batch
+        let pool = vec![foreign(0, "llama-8b", 1), foreign(1, "llama-8b", 2)];
+        let pick = backfill_cross(&pool, "llama-8b", 4, 12, &mem(16), true, &[16], None);
+        assert_eq!(pick, Some(1));
+        // strict homogeneity: nothing matches the departing batch
+        assert_eq!(
+            backfill_cross(&pool, "llama-8b", 4, 12, &mem(16), false, &[16], None),
+            None
+        );
+        // an all-foreign pool yields nothing
+        let alien = vec![foreign(0, "qwen-32b", 4)];
+        assert_eq!(
+            backfill_cross(&alien, "llama-8b", 4, 12, &mem(16), true, &[16], None),
+            None
+        );
+    }
+
+    #[test]
+    fn cross_task_backfill_respects_the_pricer_bar() {
+        use crate::cluster::gpu::GpuSpec;
+        use crate::config::MODEL_FAMILY;
+        let shape = MODEL_FAMILY.get("llama-8b").unwrap();
+        let model = StepTimeModel::nominal(GpuSpec::h100_sxm5());
+        let strict = GroupPricer {
+            model: &model,
+            shape: &shape,
+            seq_len: 512,
+            gpus: 1,
+            min_marginal_gain: 0.9,
+        };
+        let pool = vec![foreign(0, "llama-8b", 8)];
+        // a saturated large-batch group cannot justify a 90% gain
+        assert_eq!(
+            backfill_cross(&pool, "llama-8b", 8, 16, &mem(64), true, &[16, 16], Some(&strict)),
+            None
+        );
+        let free = GroupPricer { min_marginal_gain: 0.0, ..strict };
+        assert_eq!(
+            backfill_cross(&pool, "llama-8b", 8, 16, &mem(64), true, &[16, 16], Some(&free)),
+            Some(0)
+        );
     }
 
     #[test]

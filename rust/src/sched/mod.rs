@@ -34,13 +34,30 @@ pub mod inter;
 pub mod intra;
 pub mod solver;
 
+/// Total order over `f64` for scheduler orderings: finite values compare
+/// numerically, non-finite values (NaN/±∞ — e.g. a streaming
+/// `actual_duration: NaN` sentinel observed before body resolution) sort
+/// *last* and equal to each other, so downstream id tie-breaks stay
+/// deterministic.  Same discipline as
+/// [`crate::coordinator::warmup::select_top_k`].  Unlike
+/// `partial_cmp().unwrap()` this never panics; unlike `f64::total_cmp`
+/// it does not let a NaN's sign bit decide scheduling order.
+pub fn finite_last_cmp(x: f64, y: f64) -> std::cmp::Ordering {
+    match (x.is_finite(), y.is_finite()) {
+        (true, true) => x.partial_cmp(&y).unwrap(),
+        (true, false) => std::cmp::Ordering::Less,
+        (false, true) => std::cmp::Ordering::Greater,
+        (false, false) => std::cmp::Ordering::Equal,
+    }
+}
+
 pub use inter::{
-    InterTaskScheduler, Policy, PreemptDecision, Pricer, Pricing, RepriceDecision,
-    SchedTuning, StartDecision, Submission, TaskShape,
+    AdoptDecision, InterTaskScheduler, MergeDecision, Policy, PreemptDecision, Pricer,
+    Pricing, RepriceDecision, SchedTuning, StartDecision, Submission, TaskShape,
 };
 pub use intra::{
-    admit, admit_priced, admit_slot, backfill, backfill_priced, group_by_batch,
-    AdmissionPlan, GroupPricer,
+    admit, admit_priced, admit_slot, admit_slot_cross, backfill, backfill_cross,
+    backfill_priced, group_by_batch, AdmissionPlan, ForeignCandidate, GroupPricer,
 };
 pub use solver::{
     fcfs_schedule, lower_bound, lpt_schedule, sjf_schedule, solve, solve_anytime,

@@ -87,8 +87,7 @@ impl Schedule {
             }
         }
         events.sort_by(|a, b| {
-            a.0.partial_cmp(&b.0)
-                .unwrap()
+            crate::sched::finite_last_cmp(a.0, b.0)
                 .then(a.1.cmp(&b.1)) // releases before acquires at ties
         });
         let mut used = 0i64;
@@ -256,6 +255,12 @@ fn solve_inner(
             t.gpus,
             total_gpus
         );
+        anyhow::ensure!(
+            t.duration.is_finite() && t.duration >= 0.0,
+            "task {} has non-finite or negative duration {}",
+            t.id,
+            t.duration
+        );
     }
     if tasks.is_empty() {
         return Ok(AnytimeOutcome {
@@ -287,7 +292,9 @@ fn solve_inner(
     order.sort_by(|&a, &b| {
         let ka = tasks[a].duration * tasks[a].gpus as f64;
         let kb = tasks[b].duration * tasks[b].gpus as f64;
-        kb.partial_cmp(&ka).unwrap()
+        // descending area, non-finite keys last (negation flips the
+        // finite order while NaN/∞ stay non-finite)
+        crate::sched::finite_last_cmp(-ka, -kb)
     });
     // memoized bounds: the remaining-area term at each depth, summed in
     // the same left-to-right order as the per-node loop it replaces so
@@ -406,7 +413,7 @@ impl Search<'_> {
         let mut starts: Vec<f64> = Vec::with_capacity(self.ends.len() + 1);
         starts.push(0.0);
         starts.extend_from_slice(&self.ends);
-        starts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        starts.sort_by(|a, b| crate::sched::finite_last_cmp(*a, *b));
         starts.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
         // dominance: an identical predecessor pins the earliest start
         let min_start = if self.dominance && self.same_as_prev[depth] {
@@ -452,14 +459,17 @@ impl Search<'_> {
 /// Longest-processing-time heuristic (also a Fig 5 baseline).
 pub fn lpt_schedule(tasks: &[SchedTask], total_gpus: usize) -> Schedule {
     let mut order: Vec<usize> = (0..tasks.len()).collect();
-    order.sort_by(|&a, &b| tasks[b].duration.partial_cmp(&tasks[a].duration).unwrap());
+    order.sort_by(|&a, &b| {
+        // descending duration, non-finite last
+        crate::sched::finite_last_cmp(-tasks[a].duration, -tasks[b].duration)
+    });
     list_schedule(tasks, total_gpus, &order)
 }
 
 /// Shortest-job-first list scheduling (the paper's Fig 5 strawman).
 pub fn sjf_schedule(tasks: &[SchedTask], total_gpus: usize) -> Schedule {
     let mut order: Vec<usize> = (0..tasks.len()).collect();
-    order.sort_by(|&a, &b| tasks[a].duration.partial_cmp(&tasks[b].duration).unwrap());
+    order.sort_by(|&a, &b| crate::sched::finite_last_cmp(tasks[a].duration, tasks[b].duration));
     list_schedule(tasks, total_gpus, &order)
 }
 
@@ -478,7 +488,7 @@ pub fn list_schedule(tasks: &[SchedTask], total_gpus: usize, order: &[usize]) ->
         let mut starts: Vec<f64> = Vec::with_capacity(ends.len() + 1);
         starts.push(0.0);
         starts.extend_from_slice(&ends);
-        starts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        starts.sort_by(|a, b| crate::sched::finite_last_cmp(*a, *b));
         let s = starts
             .into_iter()
             .find(|&s| fits_at(&placed, &ends, total_gpus, s, &task))
@@ -611,6 +621,18 @@ mod tests {
             }
             assert!(opt.makespan >= lower_bound(&tasks, 8) - 1e-9);
         }
+    }
+
+    #[test]
+    fn nan_duration_errors_instead_of_panicking() {
+        let tasks = [t(0, f64::NAN, 1), t(1, 1.0, 1)];
+        assert!(solve(&tasks, 2).is_err());
+        assert!(solve_anytime(&tasks, 2, AnytimeCfg::default()).is_err());
+        assert!(solve(&[t(0, f64::INFINITY, 1)], 2).is_err());
+        assert!(solve(&[t(0, -1.0, 1)], 2).is_err());
+        // the heuristic list schedulers stay panic-free: NaN sorts last
+        assert_eq!(lpt_schedule(&tasks, 2).placements.len(), 2);
+        assert_eq!(sjf_schedule(&tasks, 2).placements.len(), 2);
     }
 
     #[test]

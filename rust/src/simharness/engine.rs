@@ -51,6 +51,7 @@ use crate::coordinator::job::ExitReason;
 use crate::coordinator::memory_model::{self, MemoryModel};
 use crate::coordinator::profiler::Profiler;
 use crate::coordinator::service::TaskOutcome;
+use crate::coordinator::shared::SharingConfig;
 use crate::coordinator::task_runner::{make_jobs, RunConfig, TaskCursor};
 use crate::data::synth::{dataset_profile, DatasetProfile};
 use crate::perfmodel::{task_workload, StepTimeModel};
@@ -85,6 +86,13 @@ pub struct HarnessConfig {
     /// pre-optimization algorithms for equivalence tests and the scale
     /// benchmark's before/after measurement.
     pub tuning: SchedTuning,
+    /// Shared-executor groups (cross-task adapter co-location): when
+    /// enabled *and* pricing is on, a queued same-family task may be
+    /// adopted into a running group's roster instead of waiting for its
+    /// own allocation, and shrunken groups merge into peers
+    /// ([`EventKind::Adopt`] / [`EventKind::Merge`] land in the digest).
+    /// Disabled by default — the pre-sharing timeline is bit-identical.
+    pub sharing: SharingConfig,
     pub run: RunConfig,
     pub gpu: GpuSpec,
     /// Upper bound on co-located adapter slots per executor; the fitted
@@ -108,6 +116,7 @@ impl Default for HarnessConfig {
             preempt_on_arrival: false,
             pricing: Pricing::default(),
             tuning: SchedTuning::default(),
+            sharing: SharingConfig::default(),
             run: RunConfig::default(),
             gpu: GpuSpec::h100_sxm5(),
             n_slots: 4,
@@ -526,6 +535,7 @@ impl SimEngine {
         sched.place = self.cfg.place;
         sched.enable_preemption = self.cfg.preempt_on_arrival;
         sched.tuning = self.cfg.tuning;
+        sched.set_sharing(self.cfg.sharing);
         // pricing inputs: the perfmodel charges each task's placement and
         // neighborhood through its representative executor workload
         let shapes: Option<Vec<TaskShape>> = if self.cfg.pricing.any() {
@@ -583,15 +593,17 @@ impl SimEngine {
                 let at = trace.entries[i].arrival;
                 let gpus = outcomes[i].gpus;
                 log.record(at, EventKind::Arrival { task: i, gpus });
-                sched.submit_spec(Submission {
-                    id: i,
-                    gpus,
-                    est_duration: outcomes[i].est_duration,
-                    actual_duration: outcomes[i].actual_duration,
-                    arrival: at,
-                    priority: trace.entries[i].spec.priority,
-                    shape: shapes.as_ref().map(|s| s[i].clone()),
-                });
+                sched
+                    .submit_spec(Submission {
+                        id: i,
+                        gpus,
+                        est_duration: outcomes[i].est_duration,
+                        actual_duration: outcomes[i].actual_duration,
+                        arrival: at,
+                        priority: trace.entries[i].spec.priority,
+                        shape: shapes.as_ref().map(|s| s[i].clone()),
+                    })
+                    .with_context(|| format!("submitting task '{}'", outcomes[i].name))?;
             } else {
                 let (id, at) = sched
                     .complete_next()
@@ -648,6 +660,29 @@ impl SimEngine {
                     }
                 };
                 log.record(d.time, kind);
+            }
+            for a in sched.drain_adopted() {
+                placements[a.id] = a.placement.clone();
+                log.record(
+                    a.time,
+                    EventKind::Adopt {
+                        task: a.id,
+                        gpus: outcomes[a.id].gpus,
+                        placement: a.placement,
+                    },
+                );
+            }
+            for m in sched.drain_merged() {
+                placements[m.id] = m.to.clone();
+                log.record(
+                    m.time,
+                    EventKind::Merge {
+                        task: m.id,
+                        gpus: outcomes[m.id].gpus,
+                        from: m.from,
+                        to: m.to,
+                    },
+                );
             }
             for r in sched.drain_repriced() {
                 reprices += 1;
@@ -780,6 +815,7 @@ impl SimEngine {
         sched.place = self.cfg.place;
         sched.enable_preemption = self.cfg.preempt_on_arrival;
         sched.tuning = self.cfg.tuning;
+        sched.set_sharing(self.cfg.sharing);
         let priced = self.cfg.pricing.any();
         if priced {
             sched.set_pricer(
@@ -895,15 +931,17 @@ impl SimEngine {
                 } else {
                     None
                 };
-                sched.submit_spec(Submission {
-                    id: i,
-                    gpus,
-                    est_duration: est,
-                    actual_duration: f64::NAN, // resolved lazily at first start
-                    arrival: at,
-                    priority: entry.spec.priority,
-                    shape,
-                });
+                sched
+                    .submit_spec(Submission {
+                        id: i,
+                        gpus,
+                        est_duration: est,
+                        actual_duration: f64::NAN, // resolved lazily at first start
+                        arrival: at,
+                        priority: entry.spec.priority,
+                        shape,
+                    })
+                    .with_context(|| format!("submitting task '{}'", entry.spec.name))?;
             } else {
                 let (id, at) = sched
                     .complete_next()
@@ -990,6 +1028,29 @@ impl SimEngine {
                         log.record(d.time, kind);
                     }
                 }
+            }
+            for a in sched.drain_adopted() {
+                placements[a.id] = a.placement.clone();
+                log.record(
+                    a.time,
+                    EventKind::Adopt {
+                        task: a.id,
+                        gpus: trace.entries[a.id].spec.num_gpus,
+                        placement: a.placement,
+                    },
+                );
+            }
+            for m in sched.drain_merged() {
+                placements[m.id] = m.to.clone();
+                log.record(
+                    m.time,
+                    EventKind::Merge {
+                        task: m.id,
+                        gpus: trace.entries[m.id].spec.num_gpus,
+                        from: m.from,
+                        to: m.to,
+                    },
+                );
             }
             for r in sched.drain_repriced() {
                 reprices += 1;

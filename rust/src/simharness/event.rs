@@ -87,6 +87,22 @@ pub enum EventKind {
         reason: ExitReason,
         nominal_at: f64,
     },
+    /// A waiting task joined a shared executor group's roster instead of
+    /// acquiring its own GPUs (cross-task co-location, sharing enabled);
+    /// `placement` is the group's — now also the task's.
+    Adopt {
+        task: usize,
+        gpus: usize,
+        placement: Placement,
+    },
+    /// A shrunken shared group's survivor moved into a peer group,
+    /// paying a checkpoint transfer; the emptied group's GPUs freed.
+    Merge {
+        task: usize,
+        gpus: usize,
+        from: Placement,
+        to: Placement,
+    },
 }
 
 impl EventKind {
@@ -101,6 +117,8 @@ impl EventKind {
             EventKind::Reprice { .. } => "reprice",
             EventKind::Segment { .. } => "segment",
             EventKind::JobExit { .. } => "job-exit",
+            EventKind::Adopt { .. } => "adopt",
+            EventKind::Merge { .. } => "merge",
         }
     }
 
@@ -114,7 +132,9 @@ impl EventKind {
             | EventKind::Migrate { task, .. }
             | EventKind::Reprice { task, .. }
             | EventKind::Segment { task, .. }
-            | EventKind::JobExit { task, .. } => task,
+            | EventKind::JobExit { task, .. }
+            | EventKind::Adopt { task, .. }
+            | EventKind::Merge { task, .. } => task,
         }
     }
 
@@ -128,18 +148,21 @@ impl EventKind {
             | EventKind::Migrate { gpus, .. }
             | EventKind::Reprice { gpus, .. }
             | EventKind::Segment { gpus, .. }
-            | EventKind::JobExit { gpus, .. } => gpus,
+            | EventKind::JobExit { gpus, .. }
+            | EventKind::Adopt { gpus, .. }
+            | EventKind::Merge { gpus, .. } => gpus,
         }
     }
 
     /// The concrete GPUs the task holds *after* this event, if the event
-    /// pins any: `Start`/`Placed` and the `to` side of `Migrate`.
+    /// pins any: `Start`/`Placed`/`Adopt` and the `to` side of
+    /// `Migrate`/`Merge`.
     pub fn placement(&self) -> Option<&Placement> {
         match self {
-            EventKind::Start { placement, .. } | EventKind::Placed { placement, .. } => {
-                Some(placement)
-            }
-            EventKind::Migrate { to, .. } => Some(to),
+            EventKind::Start { placement, .. }
+            | EventKind::Placed { placement, .. }
+            | EventKind::Adopt { placement, .. } => Some(placement),
+            EventKind::Migrate { to, .. } | EventKind::Merge { to, .. } => Some(to),
             _ => None,
         }
     }
@@ -155,6 +178,8 @@ impl EventKind {
             EventKind::Reprice { .. } => 6,
             EventKind::Segment { .. } => 7,
             EventKind::JobExit { .. } => 8,
+            EventKind::Adopt { .. } => 9,
+            EventKind::Merge { .. } => 10,
         }
     }
 
@@ -182,8 +207,9 @@ impl EventKind {
             EventKind::Arrival { .. } | EventKind::Complete { .. } => {}
             EventKind::Start { placement, .. }
             | EventKind::Preempt { placement, .. }
-            | EventKind::Placed { placement, .. } => mix_placement(h, placement),
-            EventKind::Migrate { from, to, .. } => {
+            | EventKind::Placed { placement, .. }
+            | EventKind::Adopt { placement, .. } => mix_placement(h, placement),
+            EventKind::Migrate { from, to, .. } | EventKind::Merge { from, to, .. } => {
                 mix_placement(h, from);
                 mix_placement(h, to);
             }
@@ -226,11 +252,15 @@ impl fmt::Display for Event {
             self.kind.gpus()
         )?;
         match &self.kind {
-            EventKind::Start { placement, .. } | EventKind::Placed { placement, .. } => {
+            EventKind::Start { placement, .. }
+            | EventKind::Placed { placement, .. }
+            | EventKind::Adopt { placement, .. } => {
                 write!(f, " on={placement}")
             }
             EventKind::Preempt { placement, .. } => write!(f, " off={placement}"),
-            EventKind::Migrate { from, to, .. } => write!(f, " {from}->{to}"),
+            EventKind::Migrate { from, to, .. } | EventKind::Merge { from, to, .. } => {
+                write!(f, " {from}->{to}")
+            }
             EventKind::Reprice { completion, .. } => write!(f, " eta={completion}"),
             EventKind::Segment { seq, nominal_end, .. } => {
                 write!(f, " seg={seq} body-t={nominal_end:.3}")
@@ -362,10 +392,11 @@ impl EventLog {
                 EventKind::Arrival { .. } | EventKind::Complete { .. } => {}
                 EventKind::Start { placement, .. }
                 | EventKind::Preempt { placement, .. }
-                | EventKind::Placed { placement, .. } => {
+                | EventKind::Placed { placement, .. }
+                | EventKind::Adopt { placement, .. } => {
                     fields.push(("placement", Self::placement_json(placement)));
                 }
-                EventKind::Migrate { from, to, .. } => {
+                EventKind::Migrate { from, to, .. } | EventKind::Merge { from, to, .. } => {
                     fields.push(("from", Self::placement_json(from)));
                     fields.push(("to", Self::placement_json(to)));
                 }
@@ -440,6 +471,17 @@ impl EventLog {
                     placement: Self::placement_from(&j, "placement", gpus)?,
                 },
                 Some("migrate") => EventKind::Migrate {
+                    task,
+                    gpus,
+                    from: Self::placement_from(&j, "from", gpus)?,
+                    to: Self::placement_from(&j, "to", gpus)?,
+                },
+                Some("adopt") => EventKind::Adopt {
+                    task,
+                    gpus,
+                    placement: Self::placement_from(&j, "placement", gpus)?,
+                },
+                Some("merge") => EventKind::Merge {
                     task,
                     gpus,
                     from: Self::placement_from(&j, "from", gpus)?,
@@ -725,6 +767,71 @@ mod tests {
         assert!(lines[4].contains("segment") && lines[4].contains("seg=0"), "{}", lines[4]);
         // unknown verdicts are rejected on reload
         let bad = r#"{"gpus":1,"job":0,"kind":"job-exit","nominal_at":0,"reason":"warp","seq":0,"task":0,"time":0}"#;
+        assert!(EventLog::from_jsonl(bad).is_err());
+    }
+
+    fn sharing_sample() -> EventLog {
+        let mut log = sample();
+        log.record(6.0, EventKind::Arrival { task: 1, gpus: 2 });
+        log.record(
+            6.0,
+            EventKind::Adopt {
+                task: 1,
+                gpus: 2,
+                placement: p(&[0, 1]),
+            },
+        );
+        log.record(
+            8.0,
+            EventKind::Merge {
+                task: 1,
+                gpus: 2,
+                from: p(&[0, 1]),
+                to: p(&[2, 3]),
+            },
+        );
+        log.record(9.0, EventKind::Complete { task: 1, gpus: 2 });
+        log
+    }
+
+    #[test]
+    fn sharing_events_roundtrip_digest_and_render() {
+        let log = sharing_sample();
+        assert_ne!(log.digest(), sample().digest());
+        let back = EventLog::from_jsonl(&log.to_jsonl()).unwrap();
+        assert_eq!(back, log);
+        assert_eq!(back.digest(), log.digest());
+        // placements are digest-bearing for both new kinds
+        let mut other = sample();
+        other.record(6.0, EventKind::Arrival { task: 1, gpus: 2 });
+        other.record(
+            6.0,
+            EventKind::Adopt {
+                task: 1,
+                gpus: 2,
+                placement: p(&[2, 3]), // differs
+            },
+        );
+        other.record(
+            8.0,
+            EventKind::Merge {
+                task: 1,
+                gpus: 2,
+                from: p(&[0, 1]),
+                to: p(&[2, 3]),
+            },
+        );
+        other.record(9.0, EventKind::Complete { task: 1, gpus: 2 });
+        assert_ne!(other.digest(), log.digest(), "adopt placement must be hashed");
+        let lines = log.lines();
+        assert!(lines[4].contains("adopt") && lines[4].contains("on=[0,1]"), "{}", lines[4]);
+        assert!(lines[5].contains("merge") && lines[5].contains("[0,1]->[2,3]"), "{}", lines[5]);
+        // a merge still pins the task's final GPUs
+        assert_eq!(log.final_placement(1), Some(&p(&[2, 3])));
+        // malformed sharing events are rejected on reload
+        let bad = r#"{"gpus":2,"kind":"adopt","seq":0,"task":0,"time":0}"#;
+        assert!(EventLog::from_jsonl(bad).is_err());
+        let bad = r#"{"from":[0,1],"gpus":2,"kind":"merge","seq":0,"task":0,"time":0}"#;
         assert!(EventLog::from_jsonl(bad).is_err());
     }
 

@@ -35,6 +35,16 @@
 //!   changed (a cohort member completed early, was evicted, or
 //!   migrated); the event carries the new completion time, which is
 //!   part of the replay digest.
+//! * **Adopt** / **Merge** — with [`HarnessConfig`]`::sharing` enabled
+//!   (and pricing on), a queued same-family task is adopted into a
+//!   running shared executor group's roster instead of waiting for its
+//!   own allocation (`Adopt`, carrying the group's placement), and a
+//!   group whose roster shrinks below the merge threshold folds its
+//!   survivors into a peer group, paying a checkpoint transfer per
+//!   survivor (`Merge`, carrying both placements).  Both land in the
+//!   replay digest; with sharing off neither is ever emitted and the
+//!   timeline is bit-identical to the pre-sharing one.  See
+//!   [`crate::coordinator::shared`].
 //!
 //! Time ties resolve completions before arrivals (capacity frees before
 //! the arriving task plans over it) and preemptions before the starts
@@ -129,8 +139,9 @@
 //! `(arrival time, TaskSpec)` pairs.  Generators — `at_zero` (Fig 12
 //! batch submission), `poisson` (exponential inter-arrivals), `bursty`
 //! (on/off tenant bursts), `fragmentation_heavy` (bitmap-shredding
-//! width mix) and `preemption_stress` (saturating wave + urgent
-//! arrivals) — plus the [`trace::hetero_mix`] / [`trace::frag_mix`]
+//! width mix), `preemption_stress` (saturating wave + urgent arrivals)
+//! and `colocatable` (single-family 1-GPU stream, the shared-executor
+//! stressor) — plus the [`trace::hetero_mix`] / [`trace::frag_mix`]
 //! task-mix builders are pure functions of their seed, so
 //! `(generator args, seed)` fully determines a run;
 //! `Trace::fingerprint()` checks it cheaply.
@@ -145,4 +156,6 @@ pub use engine::{
     BodyMark, HarnessConfig, HarnessReport, SimEngine, StreamReport, TaskSummary, Timeline,
 };
 pub use event::{Event, EventKind, EventLog};
-pub use trace::{duplicate_mix, frag_mix, hetero_mix, uniform_mix, Trace, TraceEntry};
+pub use trace::{
+    colocatable_mix, duplicate_mix, frag_mix, hetero_mix, uniform_mix, Trace, TraceEntry,
+};

@@ -37,9 +37,10 @@ impl Trace {
     }
 
     /// Explicit (arrival, spec) pairs; sorted by arrival (stable, so
-    /// equal-time arrivals keep their submission order).
+    /// equal-time arrivals keep their submission order; a non-finite
+    /// arrival sorts last instead of panicking the sort).
     pub fn with_arrivals(mut pairs: Vec<(f64, TaskSpec)>) -> Trace {
-        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        pairs.sort_by(|a, b| crate::sched::finite_last_cmp(a.0, b.0));
         Trace {
             entries: pairs
                 .into_iter()
@@ -270,6 +271,51 @@ pub fn duplicate_mix(n_tasks: usize, n_distinct: usize, train_samples: usize, se
         .collect()
 }
 
+/// Co-locatable tenant stream: every task is a 1-GPU sweep over the
+/// *same* model family (`llama-8b`), drawn from a pool of `n_distinct`
+/// body configurations with jittered sizes — the exact shape shared
+/// executor groups exist for.  With sharing on, a queued tenant adopts
+/// into a running group's roster (same family, same width) instead of
+/// waiting for its own GPU; with sharing off every tenant queues for a
+/// whole GPU.  Duplicate-heavy on purpose, so the streaming body memo
+/// is exercised on the same trace.  Pure function of its arguments.
+pub fn colocatable_mix(
+    n_tasks: usize,
+    n_distinct: usize,
+    train_samples: usize,
+    seed: u64,
+) -> Vec<TaskSpec> {
+    let n_distinct = n_distinct.max(1);
+    let mut rng = Pcg32::new(seed, 0xc010c);
+    let pool: Vec<TaskSpec> = (0..n_distinct)
+        .map(|j| {
+            let samples = (train_samples as f64 * rng.uniform(0.7, 1.3)) as usize;
+            TaskSpec {
+                name: String::new(), // stamped per arrival below
+                model: "llama-8b".into(),
+                dataset: "gsm-syn".into(),
+                num_gpus: 1,
+                search_space: SearchSpace {
+                    lrs: vec![5e-5, 2e-4],
+                    ranks: vec![16],
+                    batch_sizes: vec![2, 4],
+                },
+                seq_len: 256,
+                train_samples: samples.max(16),
+                seed: seed.wrapping_add(j as u64 * 89),
+                ..TaskSpec::default()
+            }
+        })
+        .collect();
+    (0..n_tasks)
+        .map(|i| {
+            let mut spec = pool[i % n_distinct].clone();
+            spec.name = format!("colo-{i}");
+            spec
+        })
+        .collect()
+}
+
 impl Trace {
     /// Large uniform tenant stream over [`uniform_mix`]: `n_tasks`
     /// (typically 100+) 1-GPU tenants arriving Poisson — the queue-depth
@@ -302,6 +348,25 @@ impl Trace {
             duplicate_mix(n_tasks, n_distinct, train_samples, seed),
             mean_interarrival,
             seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(7),
+        )
+    }
+
+    /// Co-locatable Poisson stream over [`colocatable_mix`] — the
+    /// shared-executor-group stressor: single family, uniform 1-GPU
+    /// width, duplicate-heavy bodies.  The scale bench replays it with
+    /// sharing on and off to measure the co-location win.  Pure
+    /// function of its arguments.
+    pub fn colocatable(
+        n_tasks: usize,
+        n_distinct: usize,
+        train_samples: usize,
+        mean_interarrival: f64,
+        seed: u64,
+    ) -> Trace {
+        Trace::poisson(
+            colocatable_mix(n_tasks, n_distinct, train_samples, seed),
+            mean_interarrival,
+            seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(13),
         )
     }
 
@@ -530,6 +595,49 @@ mod tests {
             t.fingerprint(),
             Trace::duplicate_heavy(40, 8, 48, 30.0, 5).fingerprint()
         );
+    }
+
+    #[test]
+    fn colocatable_is_single_family_single_width() {
+        let t = Trace::colocatable(24, 6, 48, 20.0, 7);
+        assert_eq!(t.len(), 24);
+        // one family, one width: every task is adoption-eligible into
+        // any group founded by any other
+        assert!(t.entries.iter().all(|e| e.spec.model == "llama-8b"));
+        assert!(t.entries.iter().all(|e| e.spec.num_gpus == 1));
+        // duplicate-heavy: bodies cycle through the distinct pool
+        for i in 0..6 {
+            let (a, b) = (&t.entries[i].spec, &t.entries[i + 6].spec);
+            assert_eq!(a.train_samples, b.train_samples);
+            assert_eq!(a.seed, b.seed);
+        }
+        // names unique, generator pure in its seed
+        let mut names: Vec<&str> = t.entries.iter().map(|e| e.spec.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 24);
+        assert_eq!(
+            t.fingerprint(),
+            Trace::colocatable(24, 6, 48, 20.0, 7).fingerprint()
+        );
+        assert_ne!(
+            t.fingerprint(),
+            Trace::colocatable(24, 6, 48, 20.0, 8).fingerprint()
+        );
+    }
+
+    #[test]
+    fn with_arrivals_tolerates_non_finite_times() {
+        // a NaN arrival sorts last instead of panicking the sort
+        let mix = hetero_mix(3, 64, 1);
+        let t = Trace::with_arrivals(vec![
+            (f64::NAN, mix[0].clone()),
+            (1.0, mix[1].clone()),
+            (3.0, mix[2].clone()),
+        ]);
+        let finite: Vec<f64> = t.entries[..2].iter().map(|e| e.arrival).collect();
+        assert_eq!(finite, vec![1.0, 3.0]);
+        assert!(t.entries[2].arrival.is_nan());
     }
 
     #[test]

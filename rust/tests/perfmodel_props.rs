@@ -179,3 +179,46 @@ fn charge_factor_bounds() {
         prop_assert(f < 64.0, format!("runaway factor {f}"))
     });
 }
+
+#[test]
+fn group_stretch_identity_bounds_and_sublinearity() {
+    // the shared-executor economics in one property: a roster identical
+    // to your own is free (bitwise 1.0), a grown roster never speeds you
+    // up, and duplicating the roster k× stretches the step *strictly*
+    // less than k× (the roster-independent backbone stream + launch
+    // overheads amortize) — which is exactly why cross-task adoption can
+    // beat waiting for a dedicated allocation.
+    prop_check("group stretch: identity, >= 1, strictly sublinear", 150, |g| {
+        let model = StepTimeModel::new(GpuSpec::h100_sxm5(), Topology::h100_nodes(16));
+        let own = random_workload(g);
+        let p_gpus = *g.choice(&[1usize, 2, 4]);
+        let s0 = model.group_stretch(&own, &own, p_gpus);
+        prop_assert(
+            s0.to_bits() == 1.0f64.to_bits(),
+            format!("identical roster must stretch exactly 1.0, got {s0}"),
+        )?;
+        // grow the roster with arbitrary extra adapters: never a speedup
+        let extra = g.usize(1..=6);
+        let mut ranks = own.ranks.clone();
+        for _ in 0..extra {
+            ranks.push(*g.choice(&[8usize, 16, 32, 64]));
+        }
+        let grown = Workload { ranks, ..own.clone() };
+        let s = model.group_stretch(&own, &grown, p_gpus);
+        prop_assert(
+            s.is_finite() && s >= 1.0,
+            format!("grown roster stretch must be a finite factor >= 1, got {s}"),
+        )?;
+        // duplicate the whole roster k times: strictly sublinear
+        let k = g.usize(2..=4);
+        let dup = Workload {
+            ranks: own.ranks.repeat(k),
+            ..own.clone()
+        };
+        let sk = model.group_stretch(&own, &dup, p_gpus);
+        prop_assert(
+            sk >= 1.0 && sk < k as f64,
+            format!("{k}x roster must stretch in [1, {k}), got {sk}"),
+        )
+    });
+}

@@ -26,6 +26,7 @@
 use alto::cluster::gpu::GpuSpec;
 use alto::cluster::{PlacePolicy, SimCluster, Topology};
 use alto::config::MODEL_FAMILY;
+use alto::coordinator::shared::SharingConfig;
 use alto::perfmodel::{task_workload, ContentionCtx, StepTimeModel};
 use alto::sched::inter::{
     InterTaskScheduler, Policy, PreemptDecision, Pricing, RepriceDecision, SchedTuning,
@@ -121,7 +122,8 @@ fn drive(
             (Some(at), Some((_, ct))) => at < ct,
         };
         if take_arrival {
-            s.submit_spec(subs[next].clone());
+            s.submit_spec(subs[next].clone())
+                .expect("well-formed submission");
             next += 1;
         } else {
             s.complete_next()
@@ -266,6 +268,73 @@ fn engine_replay_digest_identical_between_default_and_reference_tuning() {
 }
 
 #[test]
+fn sharing_is_deterministic_invisible_when_off_and_saves_when_on() {
+    // a saturated co-locatable stream at the raw scheduler level: 30
+    // same-family 1-GPU tenants pounding 4 GPUs
+    let trace = Trace::colocatable(30, 6, 48, 1.0, 19);
+    let subs = submissions_from(&trace, 19);
+    let run = |sharing: Option<SharingConfig>| {
+        let topo = Topology::uniform(4, 8);
+        let cluster = SimCluster::with_topology(GpuSpec::h100_sxm5(), topo.clone());
+        let mut s = InterTaskScheduler::with_cluster(cluster, Policy::Optimal);
+        s.set_pricer(
+            StepTimeModel::new(GpuSpec::h100_sxm5(), topo),
+            Pricing::default(),
+        );
+        if let Some(cfg) = sharing {
+            s.set_sharing(cfg);
+        }
+        let mut next = 0usize;
+        loop {
+            let arrival = subs.get(next).map(|s| s.arrival);
+            let completion = s.peek_next_completion();
+            let take_arrival = match (arrival, completion) {
+                (None, None) => break,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (Some(at), Some((_, ct))) => at < ct,
+            };
+            if take_arrival {
+                s.submit_spec(subs[next].clone()).unwrap();
+                next += 1;
+            } else {
+                s.complete_next().unwrap().unwrap();
+            }
+        }
+        assert!(s.all_done());
+        (s.makespan(), s.charged_gpu_seconds(), s.adoptions, s.merges)
+    };
+    // configuring sharing disabled is bitwise the never-configured path
+    let never = run(None);
+    let off = run(Some(SharingConfig::default()));
+    assert_eq!(off.0.to_bits(), never.0.to_bits());
+    assert_eq!(off.1.to_bits(), never.1.to_bits());
+    assert_eq!(off.2, 0);
+    assert_eq!(never.2, 0);
+    // sharing on is deterministic run to run...
+    let on = run(Some(SharingConfig::paper()));
+    let on2 = run(Some(SharingConfig::paper()));
+    assert_eq!(on.0.to_bits(), on2.0.to_bits());
+    assert_eq!(on.1.to_bits(), on2.1.to_bits());
+    assert_eq!(on.2, on2.2);
+    assert_eq!(on.3, on2.3);
+    // ...and strictly wins on this workload
+    assert!(on.2 > 0, "saturated co-locatable stream must adopt");
+    assert!(
+        on.0 < off.0,
+        "sharing must shorten the makespan: {} vs {}",
+        on.0,
+        off.0
+    );
+    assert!(
+        on.1 < off.1,
+        "sharing must cut charged GPU-seconds: {} vs {}",
+        on.1,
+        off.1
+    );
+}
+
+#[test]
 fn deep_queue_optimal_completes_fast_and_reuses_cached_plans() {
     // 200 long tenants pounding a 32-GPU cluster (offered load ≫ 1, so
     // the waiting set grows into the hundreds): the pre-optimization
@@ -318,7 +387,7 @@ fn deep_queue_optimal_completes_fast_and_reuses_cached_plans() {
             (Some(at), Some((_, ct))) => at < ct,
         };
         if take_arrival {
-            s.submit_spec(subs[next].clone());
+            s.submit_spec(subs[next].clone()).unwrap();
             next += 1;
         } else {
             s.complete_next().unwrap().unwrap();

@@ -9,6 +9,7 @@
 //! replay bit-identical digests against the batch `run` across every
 //! trace generator, pricing and preemption included.
 
+use alto::coordinator::shared::SharingConfig;
 use alto::coordinator::task_runner::RunConfig;
 use alto::sched::inter::Policy;
 use alto::simharness::{hetero_mix, EventKind, HarnessConfig, SimEngine, Trace};
@@ -180,6 +181,72 @@ fn streaming_memoizes_duplicate_bodies() {
     assert_eq!(stream.memo_hits, 8);
     // memoization must not change the timeline
     assert_stream_matches_batch(&eng, &trace);
+}
+
+#[test]
+fn shared_groups_colocate_reduce_cost_and_replay_bitwise() {
+    // the shared-executor acceptance scenario, e2e-sized: a co-locatable
+    // stream (one family, all 1-GPU, duplicate-heavy) on a cluster small
+    // enough that tenants queue — sharing on must adopt queued tasks
+    // into running groups and strictly reduce both makespan and charged
+    // GPU-seconds vs the same run with sharing off
+    let trace = Trace::colocatable(12, 4, 32, 1.0, 17);
+    let cfg_off = HarnessConfig {
+        total_gpus: 2,
+        policy: Policy::Optimal,
+        ..HarnessConfig::default()
+    };
+    let cfg_on = HarnessConfig {
+        sharing: SharingConfig::paper(),
+        ..cfg_off.clone()
+    };
+    let off = SimEngine::new(cfg_off.clone()).run(&trace).unwrap();
+    let on = SimEngine::new(cfg_on.clone()).run(&trace).unwrap();
+
+    let adopts = on.log.count(|k| matches!(k, EventKind::Adopt { .. }));
+    assert!(adopts > 0, "a saturated co-locatable trace must adopt");
+    assert_eq!(
+        off.log.count(|k| matches!(k, EventKind::Adopt { .. })),
+        0,
+        "sharing off must never emit Adopt events"
+    );
+    assert!(
+        on.makespan < off.makespan,
+        "sharing must shorten the timeline: {} vs {}",
+        on.makespan,
+        off.makespan
+    );
+    assert!(
+        on.gpu_seconds < off.gpu_seconds,
+        "sharing must cut charged GPU time: {} vs {}",
+        on.gpu_seconds,
+        off.gpu_seconds
+    );
+    // every task still completes in both configurations
+    for report in [&off, &on] {
+        assert_eq!(
+            report.log.count(|k| matches!(k, EventKind::Complete { .. })),
+            trace.len()
+        );
+    }
+    // sharing disabled is bit-identical to the default (pre-sharing)
+    // configuration — the feature is digest-invisible until enabled
+    let explicit_off = SimEngine::new(HarnessConfig {
+        sharing: SharingConfig::default(),
+        ..cfg_off.clone()
+    })
+    .run(&trace)
+    .unwrap();
+    assert_eq!(explicit_off.log.digest(), off.log.digest());
+    assert_eq!(explicit_off.makespan.to_bits(), off.makespan.to_bits());
+
+    // the streaming twin replays the sharing timeline bit for bit,
+    // Adopt/Merge events included in the digest
+    assert_stream_matches_batch(&SimEngine::new(cfg_on), &trace);
+
+    // and the sharing-bearing log round-trips through jsonl losslessly
+    let back = alto::simharness::EventLog::from_jsonl(&on.log.to_jsonl()).unwrap();
+    assert_eq!(back.digest(), on.log.digest());
 }
 
 #[test]
