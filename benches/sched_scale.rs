@@ -35,6 +35,18 @@
 //! in-process — simulated outcomes are machine-independent), and the
 //! ratios are persisted under `colocation` in the same JSON.
 //!
+//! A fourth section is the 100k-task scale point: the full streaming
+//! engine on a duplicate-heavy trace, once with the stock single event
+//! loop (flat completion index, every event retained) and once sharded
+//! by NVLink island (`SchedTuning { shards: islands }`: sharded
+//! completion index, parallel price-factor gather, parallel body
+//! prefetch) with `retain_events: false` so retained state stays O(live
+//! tasks).  The two digests are asserted bit-identical in-process —
+//! that is the tentpole claim — and tasks/sec for both modes plus the
+//! retained-event counts (the memory proxy) land under
+//! `scales["100000"]`.  On a multi-core runner the sharded mode must
+//! beat the single loop (ratio > 1, asserted outside quick mode).
+//!
 //! The pre-PR `Policy::Optimal` is *not* measured beyond 100 tasks: its
 //! unbudgeted exact replan is exponential on deep queues (that is the
 //! problem this PR fixes), so its cell is recorded as null rather than
@@ -483,6 +495,127 @@ fn main() {
         colo_on.merges,
     );
 
+    // ---- sharded event loop: the 100k-task scale point ----------------
+    // The tentpole measurement: a duplicate-heavy 100k-tenant stream
+    // through the whole streaming engine, single loop vs sharded by
+    // NVLink island.  Digest equality is the correctness claim and is
+    // asserted in-process; the persisted numbers are the throughput
+    // trajectory (absolute wall-clock is machine-local, the ratio is
+    // not).  Quick mode drops to 10k tasks so the CI smoke stays fast.
+    let n_islands = GPUS / ISLAND;
+    let big_n: usize = if quick { 10_000 } else { 100_000 };
+    banner(&format!(
+        "sharded event loop: {big_n}-task duplicate-heavy stream, shards={n_islands} vs single loop"
+    ));
+    let big_trace = Trace::duplicate_heavy(big_n, 2_048, 48, 6.0, 42);
+    let flat_cfg = HarnessConfig {
+        total_gpus: GPUS,
+        island_size: ISLAND,
+        ..HarnessConfig::default()
+    };
+    let t_flat = Instant::now();
+    let flat = SimEngine::new(flat_cfg.clone())
+        .run_streaming(&big_trace)
+        .expect("single-loop 100k run");
+    let flat_wall = t_flat.elapsed().as_secs_f64();
+    let shard_cfg = HarnessConfig {
+        tuning: SchedTuning {
+            shards: n_islands,
+            ..SchedTuning::default()
+        },
+        retain_events: false,
+        ..flat_cfg
+    };
+    let t_shard = Instant::now();
+    let shard = SimEngine::new(shard_cfg)
+        .run_streaming(&big_trace)
+        .expect("sharded 100k run");
+    let shard_wall = t_shard.elapsed().as_secs_f64();
+    assert_eq!(
+        shard.timeline.log.digest(),
+        flat.timeline.log.digest(),
+        "sharded {big_n}-task replay drifted from the single-loop digest"
+    );
+    assert_eq!(
+        shard.timeline.makespan.to_bits(),
+        flat.timeline.makespan.to_bits()
+    );
+    assert_eq!(shard.timeline.log.len(), flat.timeline.log.len());
+    assert_eq!(
+        shard.timeline.log.retained(),
+        0,
+        "digest-only mode must retain no event records"
+    );
+    let shard_ratio = flat_wall / shard_wall.max(1e-12);
+    let mut big_table = Table::new(&[
+        "mode", "wall(s)", "tasks/s", "events", "retained", "bodies", "memo-hits",
+    ]);
+    big_table.row(vec![
+        "single loop".into(),
+        f(flat_wall, 1),
+        f(rate(big_n, flat_wall), 0),
+        flat.timeline.log.len().to_string(),
+        flat.timeline.log.retained().to_string(),
+        flat.distinct_bodies.to_string(),
+        flat.memo_hits.to_string(),
+    ]);
+    big_table.row(vec![
+        format!("sharded ×{n_islands}"),
+        f(shard_wall, 1),
+        f(rate(big_n, shard_wall), 0),
+        shard.timeline.log.len().to_string(),
+        shard.timeline.log.retained().to_string(),
+        shard.distinct_bodies.to_string(),
+        shard.memo_hits.to_string(),
+    ]);
+    big_table.print();
+    println!(
+        "sharded speedup at {big_n} tasks: {shard_ratio:.2}× \
+         (retained events {} → 0)",
+        flat.timeline.log.retained()
+    );
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    if cores >= 4 && !quick {
+        assert!(
+            shard_ratio > 1.0,
+            "sharded mode must beat the single loop on a {cores}-core runner \
+             ({flat_wall:.1}s vs {shard_wall:.1}s)"
+        );
+        assert!(
+            flat_wall < 600.0 && shard_wall < 600.0,
+            "100k-task run blew the 600 s wall budget \
+             (flat {flat_wall:.1}s, sharded {shard_wall:.1}s)"
+        );
+    }
+    let mut big_cells = std::collections::BTreeMap::new();
+    big_cells.insert("flat_wall_s".to_string(), Json::Num(flat_wall));
+    big_cells.insert("sharded_wall_s".to_string(), Json::Num(shard_wall));
+    big_cells.insert(
+        "flat_tasks_per_s".to_string(),
+        Json::Num(rate(big_n, flat_wall)),
+    );
+    big_cells.insert(
+        "sharded_tasks_per_s".to_string(),
+        Json::Num(rate(big_n, shard_wall)),
+    );
+    big_cells.insert("sharded_speedup".to_string(), Json::Num(shard_ratio));
+    big_cells.insert("shards".to_string(), Json::Num(n_islands as f64));
+    big_cells.insert(
+        "retained_events_flat".to_string(),
+        Json::Num(flat.timeline.log.retained() as f64),
+    );
+    big_cells.insert(
+        "retained_events_sharded".to_string(),
+        Json::Num(shard.timeline.log.retained() as f64),
+    );
+    big_cells.insert(
+        "distinct_bodies".to_string(),
+        Json::Num(shard.distinct_bodies as f64),
+    );
+    scales_json.insert(big_n.to_string(), Json::Obj(big_cells));
+
     let speedup_1k = match (new_1k_wall, ref_1k_wall) {
         (Some(new), Some(reference)) => reference / new.max(1e-12),
         _ => f64::NAN,
@@ -548,7 +681,11 @@ fn main() {
                  run's in-process ratio drops more than 2x below it (machine-independent). \
                  'streaming' records the body layer: eager simulate_trace vs \
                  run_streaming wall time and peak retained outcomes on a \
-                 duplicate-heavy trace (digest-equality asserted in-process)"
+                 duplicate-heavy trace (digest-equality asserted in-process). \
+                 scales['100000'] is the sharded event-loop point: single loop \
+                 vs shards-by-island + digest-only retention, bit-identical \
+                 digests asserted in-process, tasks/sec + retained-event \
+                 counts persisted"
                     .into(),
             ),
         ),

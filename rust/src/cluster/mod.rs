@@ -15,9 +15,16 @@ pub use topology::{PlacePolicy, Placement, Topology};
 /// NVLink island map — the inter-task scheduler's resource view.
 /// Allocations return concrete GPU indices ([`Placement`]) chosen by a
 /// [`PlacePolicy`] over the [`Topology`].
+///
+/// The device spec is held behind an `Arc`: a `GpuSpec` carries a
+/// `String` name, and the simulation path constructs clusters, pricers
+/// and profilers from the same spec thousands of times per trace —
+/// sharing the one allocation beats cloning it per construction.  Both
+/// constructors accept an owned `GpuSpec` or an existing
+/// `Arc<GpuSpec>` via `impl Into<Arc<GpuSpec>>`.
 #[derive(Debug, Clone)]
 pub struct SimCluster {
-    pub gpu: GpuSpec,
+    pub gpu: std::sync::Arc<GpuSpec>,
     pub topo: Topology,
     free: Vec<bool>,
 }
@@ -25,19 +32,22 @@ pub struct SimCluster {
 impl SimCluster {
     /// `n_gpus` devices in NVLink islands of 8 (the H100 SXM board
     /// shape).  Use [`SimCluster::with_topology`] for other maps.
-    pub fn new(gpu: GpuSpec, n_gpus: usize) -> SimCluster {
+    pub fn new(gpu: impl Into<std::sync::Arc<GpuSpec>>, n_gpus: usize) -> SimCluster {
         let topo = Topology::h100_nodes(n_gpus);
         SimCluster {
-            gpu,
+            gpu: gpu.into(),
             topo,
             free: vec![true; n_gpus],
         }
     }
 
-    pub fn with_topology(gpu: GpuSpec, topo: Topology) -> SimCluster {
+    pub fn with_topology(
+        gpu: impl Into<std::sync::Arc<GpuSpec>>,
+        topo: Topology,
+    ) -> SimCluster {
         let n = topo.len();
         SimCluster {
-            gpu,
+            gpu: gpu.into(),
             topo,
             free: vec![true; n],
         }

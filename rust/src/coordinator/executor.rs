@@ -83,7 +83,7 @@ impl SimBackend {
         n_slots: usize,
         batch_size: usize,
         seq_len: usize,
-        gpu: GpuSpec,
+        gpu: impl Into<std::sync::Arc<GpuSpec>>,
         n_gpus: usize,
     ) -> SimBackend {
         SimBackend {

@@ -40,8 +40,11 @@ pub struct Profiler {
 
 impl Profiler {
     /// Placement-agnostic profiler (flat topology): the legacy nominal
-    /// pricing, used wherever no concrete placement exists yet.
-    pub fn new(gpu: GpuSpec) -> Profiler {
+    /// pricing, used wherever no concrete placement exists yet.  Accepts
+    /// an owned spec or a shared `Arc<GpuSpec>` handle — the simulation
+    /// hot path constructs one profiler per task body and shares the
+    /// engine's spec instead of cloning its `String`-bearing fields.
+    pub fn new(gpu: impl Into<std::sync::Arc<GpuSpec>>) -> Profiler {
         Profiler::over(StepTimeModel::nominal(gpu))
     }
 

@@ -65,10 +65,12 @@ impl ServiceConfig {
             preempt_on_arrival: self.preempt_on_arrival,
             pricing: self.pricing,
             tuning: crate::sched::inter::SchedTuning::default(),
+            sharing: crate::coordinator::shared::SharingConfig::default(),
             run: self.run.clone(),
             gpu: self.gpu.clone(),
             n_slots: self.n_slots,
             log_body_events: false,
+            retain_events: true,
         }
     }
 }

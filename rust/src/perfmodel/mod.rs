@@ -89,9 +89,17 @@ use crate::parallel::workload::{StepBreakdown, Strategy, Workload};
 
 /// The unified step-time model: a device spec plus the island map the
 /// cluster's placements live on.
+///
+/// The nominal spec is shared behind an `Arc`: the harness constructs a
+/// model (and a `Profiler` facade over one) per task body on the
+/// streaming path, and `GpuSpec` carries a heap `String` — one shared
+/// allocation replaces a clone per construction.  Constructors accept
+/// either an owned `GpuSpec` or an existing `Arc<GpuSpec>` via
+/// `impl Into<Arc<GpuSpec>>`, so every pre-existing call site compiles
+/// unchanged.
 #[derive(Debug, Clone)]
 pub struct StepTimeModel {
-    gpu: GpuSpec,
+    gpu: std::sync::Arc<GpuSpec>,
     topo: Topology,
     /// The device as a cross-island collective sees it (`link_bw`
     /// divided by the topology's inter-island penalty), built once at
@@ -101,8 +109,9 @@ pub struct StepTimeModel {
 }
 
 impl StepTimeModel {
-    pub fn new(gpu: GpuSpec, topo: Topology) -> StepTimeModel {
-        let mut derated = gpu.clone();
+    pub fn new(gpu: impl Into<std::sync::Arc<GpuSpec>>, topo: Topology) -> StepTimeModel {
+        let gpu = gpu.into();
+        let mut derated = (*gpu).clone();
         derated.link_bw = gpu.link_bw / topo.inter_island_penalty;
         StepTimeModel { gpu, topo, derated }
     }
@@ -111,12 +120,19 @@ impl StepTimeModel {
     /// placement is single-island, so pricing reduces to the legacy
     /// nominal path.  This is what placement-agnostic callers (the
     /// Profiler's default, `SimBackend`) use.
-    pub fn nominal(gpu: GpuSpec) -> StepTimeModel {
+    pub fn nominal(gpu: impl Into<std::sync::Arc<GpuSpec>>) -> StepTimeModel {
         StepTimeModel::new(gpu, Topology::flat(0))
     }
 
     pub fn gpu(&self) -> &GpuSpec {
-        &self.gpu
+        self.gpu.as_ref()
+    }
+
+    /// The shared nominal spec handle — lets consumers (cluster,
+    /// profiler, executors) alias the same allocation instead of cloning
+    /// the spec per construction.
+    pub fn gpu_shared(&self) -> std::sync::Arc<GpuSpec> {
+        std::sync::Arc::clone(&self.gpu)
     }
 
     pub fn topo(&self) -> &Topology {
@@ -133,7 +149,7 @@ impl StepTimeModel {
     fn effective_gpu(&self, placement: Option<&Placement>) -> &GpuSpec {
         match placement {
             Some(p) if self.topo.contains(p) && self.topo.is_cross_island(p) => &self.derated,
-            _ => &self.gpu,
+            _ => self.gpu.as_ref(),
         }
     }
 
@@ -199,7 +215,7 @@ impl StepTimeModel {
     /// scheduler computes this once per task and reuses it across every
     /// re-pricing of that task (the value never changes mid-run).
     pub fn nominal_step_total(&self, w: &Workload, p_gpus: usize) -> f64 {
-        Alto.step_time(w, &self.gpu, p_gpus).total()
+        Alto.step_time(w, self.gpu.as_ref(), p_gpus).total()
     }
 
     /// [`StepTimeModel::charge_factor`] with the nominal denominator

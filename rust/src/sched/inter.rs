@@ -70,6 +70,32 @@
 //!   waiting-set membership grows — completion-triggered replans reuse
 //!   the surviving prefix instead of re-solving.
 //!
+//! ## Sharded event core ([`SchedTuning::shards`])
+//!
+//! With `shards > 1` the completion index is split by NVLink-island
+//! group: islands are partitioned contiguously into `shards` groups,
+//! and each shard owns the `BTreeSet<(completion bits, id)>` of the
+//! runners whose placement lives on its islands.  The next global event
+//! is the minimum over the shard heads under the *same*
+//! `(completion bits, id)` total order the single set used — ties
+//! across shards break on the lower id exactly as they did within one
+//! set — so event order, digests, makespans, placements and charged
+//! GPU-seconds are bit-identical at every shard count, and `shards: 1`
+//! *is* the single-loop path (one set, one head).  Tasks remember their
+//! `home_shard` at insertion, so removal never recomputes the mapping
+//! even when a merge moves a task across islands between insert and
+//! remove.
+//!
+//! Sharding also unlocks the parallel re-pricing gather: when a replan
+//! dirties at least [`SchedTuning::parallel_reprice_min`] runners,
+//! their price factors are computed on scoped worker threads over a
+//! read-only [`PriceView`] of the scheduler state, then applied
+//! sequentially in ascending id.  The factor computation reads nothing
+//! the apply loop mutates, so the batched gather is bitwise identical
+//! to the historical interleaved loop — the equivalence the
+//! `sched_scale_props` suite pins across trace generators, seeds and
+//! shard counts.
+//!
 //! ## Shared-executor groups ([`SharingConfig`])
 //!
 //! With sharing enabled (off by default) and a pricer attached, every
@@ -101,6 +127,7 @@ use crate::coordinator::shared::{SharedGroupSet, SharingConfig};
 use crate::parallel::workload::Workload;
 use crate::perfmodel::{ContentionCtx, StepTimeModel};
 use crate::util::small::SmallVec;
+use crate::util::threadpool::scoped_map;
 
 use super::solver::{self, AnytimeCfg, SchedTask, Schedule};
 
@@ -142,13 +169,18 @@ pub const DEEP_HEAD: usize = 12;
 /// let fast = SchedTuning::default();
 /// assert!(fast.incremental_reprice);
 /// assert_eq!(fast.deep_queue_threshold, 16);
+/// assert_eq!(fast.shards, 1);
+/// assert_eq!(fast.parallel_reprice_min, 64);
 ///
 /// // the retained pre-optimization reference: exact replans at every
-/// // depth, full-fleet re-pricing — what the property suite pins the
-/// // optimized path bitwise-equivalent against
+/// // depth, full-fleet re-pricing, one completion set, sequential
+/// // re-pricing — what the property suite pins the optimized path
+/// // bitwise-equivalent against
 /// let reference = SchedTuning::reference();
 /// assert!(!reference.incremental_reprice);
 /// assert_eq!(reference.deep_queue_threshold, usize::MAX);
+/// assert_eq!(reference.shards, 1);
+/// assert_eq!(reference.parallel_reprice_min, usize::MAX);
 /// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SchedTuning {
@@ -165,6 +197,18 @@ pub struct SchedTuning {
     /// Node budget handed to [`solver::solve_anytime`] per head solve on
     /// the deep-queue path.
     pub solver_node_budget: usize,
+    /// Completion-index shards (contiguous NVLink-island groups).  Each
+    /// shard owns the completion heap of the runners placed on its
+    /// islands; the next global event merges the shard heads under the
+    /// single-set `(completion bits, id)` order, so every shard count
+    /// replays bit-identically.  `1` (the default) is the single-loop
+    /// path; values above the island count are clamped.
+    pub shards: usize,
+    /// Minimum dirty-runner batch before a replan gathers price factors
+    /// on parallel scoped threads (only with `shards > 1`); smaller
+    /// batches — the common small-event case — price sequentially,
+    /// where thread spawn cost would swamp the work.
+    pub parallel_reprice_min: usize,
 }
 
 impl Default for SchedTuning {
@@ -173,18 +217,23 @@ impl Default for SchedTuning {
             incremental_reprice: true,
             deep_queue_threshold: 16,
             solver_node_budget: 2_000,
+            shards: 1,
+            parallel_reprice_min: 64,
         }
     }
 }
 
 impl SchedTuning {
     /// The pre-optimization reference: full-fleet re-pricing and
-    /// legacy exact replanning at every queue depth.
+    /// legacy exact replanning at every queue depth, one completion
+    /// set, strictly sequential re-pricing.
     pub fn reference() -> SchedTuning {
         SchedTuning {
             incremental_reprice: false,
             deep_queue_threshold: usize::MAX,
             solver_node_budget: usize::MAX,
+            shards: 1,
+            parallel_reprice_min: usize::MAX,
         }
     }
 }
@@ -299,6 +348,10 @@ struct LiveTask {
     /// denominator of every price factor, which never changes mid-run
     /// (0.0 = not computed yet; filled at submit or first start).
     nominal_step: f64,
+    /// Completion-index shard this task's entry lives in while running
+    /// (recorded at insertion so removal never recomputes the mapping —
+    /// a merge can move the placement across islands in between).
+    home_shard: usize,
 }
 
 impl LiveTask {
@@ -311,6 +364,90 @@ impl LiveTask {
         } else {
             (elapsed - self.run_charge) / self.run_factor
         }
+    }
+}
+
+/// Dense id-indexed task storage.  The harness assigns trace ids
+/// consecutively, so a slot vector replaces the previous
+/// `BTreeMap<usize, LiveTask>`: O(1) access with no tree walk on the
+/// per-event hot path, and ascending-id iteration for free.  Tasks are
+/// **never removed** — completed tasks stay live for the accounting
+/// queries (`makespan`, `charged_gpu_seconds`, `span`) — so slots need
+/// no generation counters; `complete_next` drops the heavy per-task
+/// pricing `shape` instead, keeping retained state O(live tasks) where
+/// it matters on 100k-task traces.
+#[derive(Debug, Default)]
+struct TaskSlab {
+    slots: Vec<Option<LiveTask>>,
+}
+
+impl TaskSlab {
+    /// How far beyond the current length one insert may reach: a dense
+    /// table would allocate `id` slots for a wildly sparse id, so those
+    /// are rejected as malformed submissions instead.
+    const DENSITY_SLACK: usize = 4096;
+
+    /// Reject ids the dense table should not accept: duplicates and
+    /// far-out-of-range ids (both caller bugs, reported as structured
+    /// malformed-submission errors before any state changes).
+    fn check_id(&self, id: usize) -> Result<()> {
+        anyhow::ensure!(
+            id <= self.slots.len() + Self::DENSITY_SLACK,
+            "task id {id} is far beyond the {} ids seen so far (the dense \
+             task table assumes near-consecutive ids)",
+            self.slots.len()
+        );
+        anyhow::ensure!(
+            self.slots.get(id).map_or(true, |s| s.is_none()),
+            "task id {id} was already submitted"
+        );
+        Ok(())
+    }
+
+    fn insert(&mut self, id: usize, t: LiveTask) -> Result<()> {
+        self.check_id(id)?;
+        if id >= self.slots.len() {
+            self.slots.resize_with(id + 1, || None);
+        }
+        self.slots[id] = Some(t);
+        Ok(())
+    }
+
+    fn get(&self, id: usize) -> Option<&LiveTask> {
+        self.slots.get(id)?.as_ref()
+    }
+
+    fn get_mut(&mut self, id: usize) -> Option<&mut LiveTask> {
+        self.slots.get_mut(id)?.as_mut()
+    }
+
+    /// `get` for ids every caller invariant says must exist: a miss is
+    /// internal-state corruption, surfaced as a structured error
+    /// instead of an unwrap panic (mirroring `complete_next`).
+    fn req(&self, id: usize) -> Result<&LiveTask> {
+        self.get(id)
+            .with_context(|| format!("task {id} is not in the task table"))
+    }
+
+    fn req_mut(&mut self, id: usize) -> Result<&mut LiveTask> {
+        self.get_mut(id)
+            .with_context(|| format!("task {id} is not in the task table"))
+    }
+
+    /// Live entries in ascending id order.
+    fn iter(&self) -> impl Iterator<Item = (usize, &LiveTask)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(id, s)| s.as_ref().map(|t| (id, t)))
+    }
+
+    fn values(&self) -> impl Iterator<Item = &LiveTask> {
+        self.slots.iter().filter_map(|s| s.as_ref())
+    }
+
+    fn values_mut(&mut self) -> impl Iterator<Item = &mut LiveTask> {
+        self.slots.iter_mut().filter_map(|s| s.as_mut())
     }
 }
 
@@ -398,12 +535,17 @@ pub struct InterTaskScheduler {
     /// in the harness; a mismatched model disables the island-index
     /// contention fast path so grouping stays faithful to the model.)
     topo_matches: bool,
-    tasks: BTreeMap<usize, LiveTask>,
+    tasks: TaskSlab,
     clock: f64,
     /// Running tasks: id → completion time (source of truth).
     running: BTreeMap<usize, f64>,
-    /// Completion-ordered mirror of `running`: (completion bits, id).
-    completions: BTreeSet<(u64, usize)>,
+    /// Completion-ordered mirror of `running`, sharded by NVLink-island
+    /// group: `completions[shard]` holds `(completion bits, id)` for the
+    /// runners whose placement lives on that shard's islands.  The next
+    /// global event is the minimum over shard heads under the same
+    /// `(bits, id)` order one flat set used (see the module docs); with
+    /// [`SchedTuning::shards`] = 1 this *is* the flat set.
+    completions: Vec<BTreeSet<(u64, usize)>>,
     /// Waiting tasks (submitted or evicted, not yet running/finished).
     queued: BTreeSet<usize>,
     /// Per-island resident index: island → (running task id → GPUs it
@@ -444,6 +586,11 @@ pub struct InterTaskScheduler {
     /// Head solves that ran out of node budget and fell back to the
     /// LPT-seeded incumbent.
     pub solver_exhausted: usize,
+    /// Replans whose dirty-runner batch cleared
+    /// [`SchedTuning::parallel_reprice_min`] and gathered price factors
+    /// on scoped worker threads (lets the property suite assert the
+    /// parallel path actually ran, not just that it would be inert).
+    pub parallel_reprice_batches: usize,
 }
 
 impl InterTaskScheduler {
@@ -464,10 +611,10 @@ impl InterTaskScheduler {
             pricer: None,
             body_resolver: None,
             topo_matches: false,
-            tasks: BTreeMap::new(),
+            tasks: TaskSlab::default(),
             clock: 0.0,
             running: BTreeMap::new(),
-            completions: BTreeSet::new(),
+            completions: vec![BTreeSet::new()],
             queued: BTreeSet::new(),
             residents: vec![BTreeMap::new(); n_islands],
             dirty: BTreeSet::new(),
@@ -487,6 +634,7 @@ impl InterTaskScheduler {
             deep_plans: 0,
             deep_solves: 0,
             solver_exhausted: 0,
+            parallel_reprice_batches: 0,
         }
     }
 
@@ -533,12 +681,12 @@ impl InterTaskScheduler {
 
     /// Concrete GPUs currently held by a running task.
     pub fn placement_of(&self, id: usize) -> Option<&Placement> {
-        self.tasks.get(&id)?.placement.as_ref()
+        self.tasks.get(id)?.placement.as_ref()
     }
 
     /// Times a task was preempted so far.
     pub fn preemptions_of(&self, id: usize) -> usize {
-        self.tasks.get(&id).map(|t| t.preemptions).unwrap_or(0)
+        self.tasks.get(id).map(|t| t.preemptions).unwrap_or(0)
     }
 
     /// Submit a task (arrival event at the current clock).
@@ -616,6 +764,9 @@ impl InterTaskScheduler {
             s.id,
             s.actual_duration
         );
+        // duplicate or far-out-of-range ids are malformed submissions;
+        // reject them here, before the clock (or anything else) moves
+        self.tasks.check_id(s.id)?;
         if s.arrival > self.clock {
             self.clock = s.arrival;
         }
@@ -647,8 +798,9 @@ impl InterTaskScheduler {
                 run_charge: 0.0,
                 charged_runtime: 0.0,
                 nominal_step,
+                home_shard: 0,
             },
-        );
+        )?;
         self.queued.insert(s.id);
         self.replan(true) // arrival: preemption (if enabled) may fire
     }
@@ -711,7 +863,7 @@ impl InterTaskScheduler {
     /// time: contention, derated collectives and transfer charges
     /// included; queue time excluded).
     pub fn charged_runtime(&self, id: usize) -> f64 {
-        self.tasks.get(&id).map(|t| t.charged_runtime).unwrap_or(0.0)
+        self.tasks.get(id).map(|t| t.charged_runtime).unwrap_or(0.0)
     }
 
     /// Σ gpus · charged wall runtime over all tasks — the GPU-seconds
@@ -725,7 +877,7 @@ impl InterTaskScheduler {
         let solo: f64 = self
             .tasks
             .iter()
-            .filter(|(id, _)| !self.groups.ever_member(**id))
+            .filter(|(id, _)| !self.groups.ever_member(*id))
             .map(|(_, t)| t.gpus as f64 * t.charged_runtime)
             .sum();
         let live: f64 = self
@@ -766,127 +918,97 @@ impl InterTaskScheduler {
         }
     }
 
-    /// Co-location context a running task currently experiences: every
-    /// other running task holding GPUs on the NVLink islands this task's
-    /// placement touches contributes its resident adapters.  Served from
-    /// the per-island resident index (O(neighbors), zero heap
-    /// allocations for ≤ 8-island placements); a pricer whose topology
-    /// differs from the cluster's falls back to the full running scan
-    /// grouped by the *model's* islands.
-    fn contention_of(&self, id: usize) -> ContentionCtx {
-        let Some(pr) = &self.pricer else {
-            return ContentionCtx::empty();
+    // --- sharded completion index ----------------------------------------
+
+    /// Completion-index shards in effect: [`SchedTuning::shards`]
+    /// clamped to [1, island count].
+    fn shard_count(&self) -> usize {
+        self.tuning
+            .shards
+            .max(1)
+            .min(self.cluster.topo.n_islands().max(1))
+    }
+
+    /// The shard owning `island`: islands are grouped contiguously,
+    /// ⌈n_islands / shards⌉ per shard.
+    fn shard_of_island(&self, island: usize) -> usize {
+        let shards = self.shard_count();
+        let islands = self.cluster.topo.n_islands().max(1);
+        let per = (islands + shards - 1) / shards;
+        (island / per).min(shards - 1)
+    }
+
+    /// Home shard of a placement: the shard of its first GPU's island —
+    /// a pure function of the placement, so replays at any shard count
+    /// agree about which shard serves which completion.
+    fn shard_of_placement(&self, p: &Placement) -> usize {
+        p.gpus()
+            .first()
+            .map(|&g| self.shard_of_island(self.cluster.topo.island_of(g)))
+            .unwrap_or(0)
+    }
+
+    /// Insert `id`'s completion into its placement's shard, recording
+    /// the shard on the task so removal never recomputes the mapping
+    /// (a merge can move the placement — and the shard — between insert
+    /// and remove).
+    fn completions_insert(&mut self, id: usize, completion: f64) -> Result<()> {
+        let shard = match self.tasks.req(id)?.placement.as_ref() {
+            Some(p) => self.shard_of_placement(p),
+            None => 0,
         };
-        let topo = pr.model.topo();
-        let Some(p) = self.tasks.get(&id).and_then(|t| t.placement.as_ref()) else {
-            return ContentionCtx::empty();
-        };
-        if topo.is_empty() || p.is_empty() || !topo.contains(p) {
-            return ContentionCtx::empty();
+        if shard >= self.completions.len() {
+            self.completions.resize_with(shard + 1, BTreeSet::new);
         }
-        if self.topo_matches {
-            let mut mine: SmallVec<usize, 8> = SmallVec::new();
-            for &g in p.gpus() {
-                let isl = topo.island_of(g);
-                if !mine.contains(&isl) {
-                    mine.push(isl);
-                }
+        self.tasks.req_mut(id)?.home_shard = shard;
+        self.completions[shard].insert((completion.to_bits(), id));
+        Ok(())
+    }
+
+    /// Remove `id`'s completion entry from its recorded home shard.
+    fn completions_remove(&mut self, id: usize, completion: f64) {
+        if let Some(t) = self.tasks.get(id) {
+            if let Some(set) = self.completions.get_mut(t.home_shard) {
+                set.remove(&(completion.to_bits(), id));
             }
-            // distinct neighbors with their GPU counts on my islands
-            // (islands are disjoint, so per-island counts just add up)
-            let mut acc: SmallVec<(usize, usize), 16> = SmallVec::new();
-            let my_group = self.groups.membership_of(id);
-            for &isl in mine.iter() {
-                for (&oid, &cnt) in &self.residents[isl] {
-                    if oid == id {
-                        continue;
-                    }
-                    // co-members of a shared executor group are not
-                    // foreign tenants: their cost is the roster stretch,
-                    // not island contention
-                    if my_group.is_some() && self.groups.membership_of(oid) == my_group {
-                        continue;
-                    }
-                    if let Some(e) = acc.iter_mut().find(|(o, _)| *o == oid) {
-                        e.1 += cnt;
-                    } else {
-                        acc.push((oid, cnt));
-                    }
-                }
-            }
-            let mut ctx = ContentionCtx::empty();
-            for &(oid, shared) in acc.iter() {
-                ctx.neighbor_adapters += self.tasks[&oid].adapters;
-                ctx.neighbor_gpus += shared;
-            }
-            ctx
-        } else {
-            // the sums are order-invariant, so scanning the running map
-            // (id order) matches the legacy start-order scan bitwise
-            let mut mine = vec![false; topo.n_islands()];
-            for &g in p.gpus() {
-                mine[topo.island_of(g)] = true;
-            }
-            let mut ctx = ContentionCtx::empty();
-            let my_group = self.groups.membership_of(id);
-            for &oid in self.running.keys() {
-                if oid == id {
-                    continue;
-                }
-                if my_group.is_some() && self.groups.membership_of(oid) == my_group {
-                    continue;
-                }
-                let t = &self.tasks[&oid];
-                let Some(q) = t.placement.as_ref() else { continue };
-                if !topo.contains(q) {
-                    continue;
-                }
-                let shared = q
-                    .gpus()
-                    .iter()
-                    .filter(|&&g| mine[topo.island_of(g)])
-                    .count();
-                if shared > 0 {
-                    ctx.neighbor_adapters += t.adapters;
-                    ctx.neighbor_gpus += shared;
-                }
-            }
-            ctx
+        }
+    }
+
+    /// The global next completion: the minimum over the shard heads
+    /// under the same `(completion bits, id)` order one flat set used —
+    /// ties across shards break on the lower id exactly as they did
+    /// within one set, so the merged event order is
+    /// shard-count-invariant (IEEE-754 bit order equals numeric order
+    /// for the non-negative finite completions the clock produces).
+    fn completions_first(&self) -> Option<(u64, usize)> {
+        self.completions
+            .iter()
+            .filter_map(|set| set.first().copied())
+            .min()
+    }
+
+    /// An immutable pricing view over this scheduler's state.  The
+    /// factor arithmetic itself lives on [`PriceView`] so the parallel
+    /// re-pricing gather can run it from worker threads without `&self`
+    /// (the scheduler is not `Sync`: it may hold a streaming body
+    /// resolver).
+    fn price_view(&self) -> PriceView<'_> {
+        PriceView {
+            tasks: &self.tasks,
+            pricer: self.pricer.as_ref(),
+            running: &self.running,
+            residents: &self.residents,
+            topo_matches: self.topo_matches,
+            groups: &self.groups,
+            sharing_enabled: self.sharing.enabled,
         }
     }
 
     /// Wall-seconds per nominal second for a task's *current* placement
     /// and neighborhood (1.0 when unpriced, shapeless, or single-island
-    /// and uncontended).
+    /// and uncontended).  Delegates to [`PriceView::price_factor`].
     fn price_factor(&self, id: usize) -> f64 {
-        let Some(pr) = &self.pricer else { return 1.0 };
-        if !pr.charge.comm && !pr.charge.contention {
-            return 1.0;
-        }
-        let t = &self.tasks[&id];
-        // single-GPU tasks have no collective term: both charges act on
-        // comm_s alone, so their factor is exactly 1.0 — skip the model
-        if t.gpus <= 1 {
-            return 1.0;
-        }
-        let Some(shape) = &t.shape else { return 1.0 };
-        let placement = if pr.charge.comm { t.placement.as_ref() } else { None };
-        let ctx = if pr.charge.contention {
-            self.contention_of(id)
-        } else {
-            ContentionCtx::empty()
-        };
-        if t.nominal_step > 0.0 {
-            pr.model.charge_factor_given_nominal(
-                &shape.workload,
-                t.gpus,
-                placement,
-                &ctx,
-                t.nominal_step,
-            )
-        } else {
-            pr.model.charge_factor(&shape.workload, t.gpus, placement, &ctx)
-        }
+        self.price_view().price_factor(id)
     }
 
     /// Priced estimate factor for a task that is *not running yet*: the
@@ -901,7 +1023,7 @@ impl InterTaskScheduler {
         if !pr.charge.comm {
             return 1.0;
         }
-        let t = &self.tasks[&id];
+        let Some(t) = self.tasks.get(id) else { return 1.0 };
         if t.gpus <= 1 {
             return 1.0;
         }
@@ -939,7 +1061,7 @@ impl InterTaskScheduler {
         if prev == now {
             return 0.0;
         }
-        let Some(shape) = self.tasks.get(&id).and_then(|t| t.shape.as_ref()) else {
+        let Some(shape) = self.tasks.get(id).and_then(|t| t.shape.as_ref()) else {
             return 0.0;
         };
         pr.model
@@ -977,13 +1099,31 @@ impl InterTaskScheduler {
             self.running.keys().copied().collect()
         };
         self.dirty.clear();
-        for id in ids {
-            let new_factor = self.price_factor(id) * self.group_stretch_of(id);
-            if new_factor == self.tasks[&id].run_factor {
+        // Gather every factor first, then apply sequentially in
+        // ascending id.  The factor arithmetic reads only state the
+        // apply loop never writes (placements, residents, group
+        // membership, adapters, nominal denominators and the running
+        // *key set* — the apply loop only mutates run-segment books and
+        // completion values), so gather-then-apply is bitwise identical
+        // to the historical interleaved loop — which is what lets the
+        // gather fan out across the shard worker pool for large dirty
+        // sets without perturbing a single digest.
+        let factors: Vec<f64> = if ids.len() >= self.tuning.parallel_reprice_min
+            && self.shard_count() > 1
+        {
+            self.parallel_reprice_batches += 1;
+            let view = self.price_view();
+            scoped_map(self.shard_count(), &ids, |&id| view.factor(id))
+        } else {
+            let view = self.price_view();
+            ids.iter().map(|&id| view.factor(id)).collect()
+        };
+        for (&id, &new_factor) in ids.iter().zip(factors.iter()) {
+            if new_factor == self.tasks.req(id)?.run_factor {
                 continue;
             }
             let clock = self.clock;
-            let t = self.tasks.get_mut(&id).unwrap();
+            let t = self.tasks.req_mut(id)?;
             let elapsed = clock - t.segment_at;
             // fold the finished part of this segment into the books...
             let progress = t.nominal_progress(elapsed);
@@ -999,16 +1139,17 @@ impl InterTaskScheduler {
             let entry = self
                 .running
                 .get_mut(&id)
-                .expect("repriced task is running");
-            if *entry != completion {
+                .with_context(|| format!("repriced task {id} is not running"))?;
+            let prev = *entry;
+            if prev != completion {
                 anyhow::ensure!(
                     completion.is_finite() && completion >= 0.0,
                     "task {id}: repriced completion {completion} is not a finite \
                      non-negative time (factor {new_factor})"
                 );
-                self.completions.remove(&(entry.to_bits(), id));
                 *entry = completion;
-                self.completions.insert((completion.to_bits(), id));
+                self.completions_remove(id, prev);
+                self.completions_insert(id, completion)?;
                 self.repriced_log.push(RepriceDecision {
                     id,
                     time: clock,
@@ -1025,13 +1166,13 @@ impl InterTaskScheduler {
     fn waiting(&self) -> Vec<SchedTask> {
         self.queued
             .iter()
-            .map(|&id| {
-                let t = &self.tasks[&id];
-                SchedTask {
+            .filter_map(|&id| {
+                let t = self.tasks.get(id)?;
+                Some(SchedTask {
                     id,
                     duration: t.est_remaining,
                     gpus: t.gpus,
-                }
+                })
             })
             .collect()
     }
@@ -1039,7 +1180,7 @@ impl InterTaskScheduler {
     fn start_task(&mut self, id: usize) -> Result<()> {
         let policy = self.place;
         let clock = self.clock;
-        let t = self.tasks.get_mut(&id).unwrap();
+        let t = self.tasks.req_mut(id)?;
         t.started_at = Some(clock);
         t.segment_at = clock;
         if t.first_started_at.is_none() {
@@ -1050,16 +1191,20 @@ impl InterTaskScheduler {
         let p = self
             .cluster
             .allocate_with(gpus, policy)
-            .expect("replan checked capacity before starting");
+            .with_context(|| {
+                format!("task {id}: replan checked capacity, but the cluster could not seat {gpus} GPUs")
+            })?;
         self.queued.remove(&id);
-        let t = self.tasks.get_mut(&id).unwrap();
+        let t = self.tasks.req_mut(id)?;
         t.placement = Some(p.clone());
         self.residents_add(id, &p);
         self.mark_dirty(&p);
         // with sharing on, every fresh start founds a singleton executor
         // group owning this placement — the seed adoption grows
         if self.sharing.enabled && self.pricer.is_some() {
-            if let Some(family) = self.tasks[&id]
+            if let Some(family) = self
+                .tasks
+                .req(id)?
                 .shape
                 .as_ref()
                 .map(|sh| sh.workload.model.name.clone())
@@ -1069,16 +1214,16 @@ impl InterTaskScheduler {
         }
         // fill the memoized nominal denominator for tasks submitted
         // before the pricer was attached
-        if self.tasks[&id].nominal_step == 0.0 && gpus > 1 {
-            if let (Some(pr), Some(shape)) = (&self.pricer, &self.tasks[&id].shape) {
+        if self.tasks.req(id)?.nominal_step == 0.0 && gpus > 1 {
+            if let (Some(pr), Some(shape)) = (&self.pricer, &self.tasks.req(id)?.shape) {
                 let v = pr.model.nominal_step_total(&shape.workload, gpus);
-                self.tasks.get_mut(&id).unwrap().nominal_step = v;
+                self.tasks.req_mut(id)?.nominal_step = v;
             }
         }
         // lazy body resolution (streaming): a NaN actual means the
         // task's body has not been simulated yet — resolve it now, at
         // first start, so the completion below uses the real duration
-        if self.tasks[&id].actual_remaining.is_nan() {
+        if self.tasks.req(id)?.actual_remaining.is_nan() {
             let Some(resolver) = self.body_resolver.as_mut() else {
                 anyhow::bail!(
                     "task {id}: actual_duration is NaN but no body resolver is installed"
@@ -1089,7 +1234,7 @@ impl InterTaskScheduler {
                 actual.is_finite() && actual >= 0.0,
                 "body resolver returned {actual} for task {id}"
             );
-            self.tasks.get_mut(&id).unwrap().actual_remaining = actual;
+            self.tasks.req_mut(id)?.actual_remaining = actual;
         }
         // price the run segment: placement/contention slowdown (plus the
         // roster stretch for shared-group members — 1.0 on a fresh
@@ -1098,7 +1243,7 @@ impl InterTaskScheduler {
         let factor = self.price_factor(id) * self.group_stretch_of(id);
         let charge = self.migration_charge_of(id, resumed_from.as_ref(), &p);
         self.migration_charge += charge;
-        let t = self.tasks.get_mut(&id).unwrap();
+        let t = self.tasks.req_mut(id)?;
         t.run_factor = factor;
         t.run_charge = charge;
         let completion = clock + charge + t.actual_remaining * factor;
@@ -1109,7 +1254,7 @@ impl InterTaskScheduler {
             "task {id}: completion {completion} is not a finite non-negative time"
         );
         self.running.insert(id, completion);
-        self.completions.insert((completion.to_bits(), id));
+        self.completions_insert(id, completion)?;
         self.started_log.push(StartDecision {
             id,
             time: clock,
@@ -1122,15 +1267,18 @@ impl InterTaskScheduler {
     /// Evict a running task: release its GPUs, shrink its remaining
     /// durations by the *nominal* progress it made (wall time through
     /// the current price factor), and return it to the waiting queue.
-    fn evict(&mut self, id: usize) {
+    fn evict(&mut self, id: usize) -> Result<()> {
         let completion = self
             .running
             .remove(&id)
-            .expect("evicting a task that is not running");
-        self.completions.remove(&(completion.to_bits(), id));
+            .with_context(|| format!("evicting task {id}, which is not running"))?;
+        self.completions_remove(id, completion);
         let clock = self.clock;
-        let t = self.tasks.get_mut(&id).unwrap();
-        t.started_at.take().expect("running task has a start");
+        let t = self.tasks.req_mut(id)?;
+        anyhow::ensure!(
+            t.started_at.take().is_some(),
+            "evicted task {id} has no recorded start"
+        );
         let elapsed = clock - t.segment_at;
         let progress = t.nominal_progress(elapsed);
         t.actual_remaining = (t.actual_remaining - progress).max(0.0);
@@ -1139,11 +1287,14 @@ impl InterTaskScheduler {
         t.run_factor = 1.0;
         t.run_charge = 0.0;
         t.preemptions += 1;
-        let p = t.placement.take().expect("running task holds a placement");
+        let p = t
+            .placement
+            .take()
+            .with_context(|| format!("evicted task {id} holds no placement"))?;
         t.last_placement = Some(p.clone());
         self.cluster
             .release(&p)
-            .expect("scheduler-held placement releases cleanly");
+            .with_context(|| format!("releasing evicted task {id}'s GPUs"))?;
         self.residents_remove(id, &p);
         self.mark_dirty(&p);
         self.queued.insert(id);
@@ -1156,6 +1307,7 @@ impl InterTaskScheduler {
             time: clock,
             placement: p,
         });
+        Ok(())
     }
 
     /// Re-plan the waiting queue and start whatever should run *now*.
@@ -1308,14 +1460,14 @@ impl InterTaskScheduler {
                 order,
             });
         }
-        let order: Vec<(usize, usize)> = self
-            .plan_cache
-            .as_ref()
-            .unwrap()
+        let Some(cache) = self.plan_cache.as_ref() else {
+            return Ok(());
+        };
+        let order: Vec<(usize, usize)> = cache
             .order
             .iter()
             .filter(|id| self.queued.contains(*id))
-            .map(|&id| (id, self.tasks[&id].gpus))
+            .filter_map(|&id| self.tasks.get(id).map(|t| (id, t.gpus)))
             .collect();
         self.start_easy(&order)
     }
@@ -1348,7 +1500,10 @@ impl InterTaskScheduler {
                 // *priced* estimate, since the shadow releases are priced
                 // too — before the head's reservation
                 if gpus <= self.cluster.available() {
-                    let est = self.tasks[&id].est_remaining * self.candidate_factor(id);
+                    let Some(rem) = self.tasks.get(id).map(|t| t.est_remaining) else {
+                        continue;
+                    };
+                    let est = rem * self.candidate_factor(id);
                     if self.clock + est <= sh + 1e-9 {
                         self.start_task(id)?;
                     }
@@ -1361,16 +1516,16 @@ impl InterTaskScheduler {
                 let mut rel: Vec<(f64, usize)> = self
                     .running
                     .keys()
-                    .map(|&rid| {
+                    .filter_map(|&rid| {
                         // estimated release: the current constant-rate
                         // segment's anchor plus any unserved transfer
                         // charge plus the estimated remainder at the
                         // segment's price (all zero-cost when unpriced)
-                        let t = &self.tasks[&rid];
-                        (
+                        let t = self.tasks.get(rid)?;
+                        Some((
                             t.segment_at + t.run_charge + t.est_remaining * t.run_factor,
                             t.gpus,
-                        )
+                        ))
                     })
                     .collect();
                 rel.sort_by(|a, b| crate::sched::finite_last_cmp(a.0, b.0));
@@ -1402,9 +1557,9 @@ impl InterTaskScheduler {
             let blocked = self
                 .queued
                 .iter()
-                .map(|&id| {
-                    let t = &self.tasks[&id];
-                    (t.priority, id, t.gpus)
+                .filter_map(|&id| {
+                    let t = self.tasks.get(id)?;
+                    Some((t.priority, id, t.gpus))
                 })
                 .max_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
             let Some((prio, id, need)) = blocked else { return Ok(acted) };
@@ -1412,7 +1567,7 @@ impl InterTaskScheduler {
             let outranks_somebody = self
                 .running
                 .keys()
-                .any(|rid| self.tasks[rid].priority < prio);
+                .any(|&rid| self.tasks.get(rid).is_some_and(|t| t.priority < prio));
             if !outranks_somebody {
                 return Ok(acted);
             }
@@ -1432,13 +1587,14 @@ impl InterTaskScheduler {
             let mut victims: Vec<(usize, f64)> = self
                 .running
                 .keys()
-                .filter(|&&rid| {
-                    let t = &self.tasks[&rid];
-                    t.priority < prio
-                        && t.started_at.unwrap() < self.clock
-                        && self.groups.membership_of(rid).is_none()
+                .filter_map(|&rid| {
+                    let t = self.tasks.get(rid)?;
+                    let started = t.started_at?;
+                    (t.priority < prio
+                        && started < self.clock
+                        && self.groups.membership_of(rid).is_none())
+                    .then_some((rid, started))
                 })
-                .map(|&rid| (rid, self.tasks[&rid].started_at.unwrap()))
                 .collect();
             // youngest first: latest start (descending via negation so a
             // non-finite anchor cannot float to the front), ties broken
@@ -1446,7 +1602,10 @@ impl InterTaskScheduler {
             victims.sort_by(|a, b| {
                 crate::sched::finite_last_cmp(-a.1, -b.1).then(b.0.cmp(&a.0))
             });
-            let reclaimable: usize = victims.iter().map(|&(v, _)| self.tasks[&v].gpus).sum();
+            let reclaimable: usize = victims
+                .iter()
+                .map(|&(v, _)| self.tasks.get(v).map_or(0, |t| t.gpus))
+                .sum();
             if self.cluster.available() + reclaimable < need {
                 return Ok(acted); // even a full purge cannot seat it
             }
@@ -1454,7 +1613,7 @@ impl InterTaskScheduler {
                 if self.cluster.available() >= need {
                     break;
                 }
-                self.evict(v);
+                self.evict(v)?;
             }
             self.start_task(id)?;
             acted = true;
@@ -1470,25 +1629,7 @@ impl InterTaskScheduler {
     /// sharing is off — so the factor product is a bitwise no-op on the
     /// pre-sharing path.
     fn group_stretch_of(&self, id: usize) -> f64 {
-        if !self.sharing.enabled {
-            return 1.0;
-        }
-        let Some(pr) = &self.pricer else { return 1.0 };
-        let Some(gid) = self.groups.membership_of(id) else { return 1.0 };
-        let g = self.groups.group(gid);
-        if g.members.len() <= 1 {
-            return 1.0;
-        }
-        let t = &self.tasks[&id];
-        let Some(shape) = &t.shape else { return 1.0 };
-        let mut ranks = Vec::new();
-        for &m in &g.members {
-            if let Some(sh) = self.tasks[&m].shape.as_ref() {
-                ranks.extend_from_slice(&sh.workload.ranks);
-            }
-        }
-        let combined = Workload { ranks, ..shape.workload.clone() };
-        pr.model.group_stretch(&shape.workload, &combined, t.gpus)
+        self.price_view().group_stretch_of(id)
     }
 
     /// Sustained roster throughput (adapter·batches per nominal second)
@@ -1515,11 +1656,15 @@ impl InterTaskScheduler {
         }
         let g = self.groups.group(gid);
         let Some(&rep_id) = g.members.iter().next() else { return false };
-        let Some(rep) = self.tasks[&rep_id].shape.as_ref() else { return false };
-        let Some(cand) = self.tasks[&id].shape.as_ref() else { return false };
+        let Some(rep) = self.tasks.get(rep_id).and_then(|t| t.shape.as_ref()) else {
+            return false;
+        };
+        let Some(cand) = self.tasks.get(id).and_then(|t| t.shape.as_ref()) else {
+            return false;
+        };
         let mut current_ranks: Vec<usize> = Vec::new();
         for &m in &g.members {
-            if let Some(sh) = self.tasks[&m].shape.as_ref() {
+            if let Some(sh) = self.tasks.get(m).and_then(|t| t.shape.as_ref()) {
                 current_ranks.extend_from_slice(&sh.workload.ranks);
             }
         }
@@ -1550,7 +1695,7 @@ impl InterTaskScheduler {
             if !self.queued.contains(&id) {
                 continue;
             }
-            let t = &self.tasks[&id];
+            let Some(t) = self.tasks.get(id) else { continue };
             // only never-started tasks adopt: a preempted task's books
             // belong to its own allocation history
             if t.first_started_at.is_some() {
@@ -1581,7 +1726,7 @@ impl InterTaskScheduler {
         let clock = self.clock;
         let p = self.groups.group(gid).placement.clone();
         {
-            let t = self.tasks.get_mut(&id).unwrap();
+            let t = self.tasks.req_mut(id)?;
             t.started_at = Some(clock);
             t.segment_at = clock;
             t.first_started_at = Some(clock);
@@ -1592,15 +1737,15 @@ impl InterTaskScheduler {
         self.residents_add(id, &p);
         self.mark_dirty(&p);
         // fill the memoized nominal denominator, as start_task does
-        let gpus = self.tasks[&id].gpus;
-        if self.tasks[&id].nominal_step == 0.0 && gpus > 1 {
-            if let (Some(pr), Some(shape)) = (&self.pricer, &self.tasks[&id].shape) {
+        let gpus = self.tasks.req(id)?.gpus;
+        if self.tasks.req(id)?.nominal_step == 0.0 && gpus > 1 {
+            if let (Some(pr), Some(shape)) = (&self.pricer, &self.tasks.req(id)?.shape) {
                 let v = pr.model.nominal_step_total(&shape.workload, gpus);
-                self.tasks.get_mut(&id).unwrap().nominal_step = v;
+                self.tasks.req_mut(id)?.nominal_step = v;
             }
         }
         // lazy body resolution, exactly as at a fresh start
-        if self.tasks[&id].actual_remaining.is_nan() {
+        if self.tasks.req(id)?.actual_remaining.is_nan() {
             let Some(resolver) = self.body_resolver.as_mut() else {
                 anyhow::bail!(
                     "task {id}: actual_duration is NaN but no body resolver is installed"
@@ -1611,10 +1756,10 @@ impl InterTaskScheduler {
                 actual.is_finite() && actual >= 0.0,
                 "body resolver returned {actual} for task {id}"
             );
-            self.tasks.get_mut(&id).unwrap().actual_remaining = actual;
+            self.tasks.req_mut(id)?.actual_remaining = actual;
         }
         let factor = self.price_factor(id) * self.group_stretch_of(id);
-        let t = self.tasks.get_mut(&id).unwrap();
+        let t = self.tasks.req_mut(id)?;
         t.run_factor = factor;
         t.run_charge = 0.0;
         let completion = clock + t.actual_remaining * factor;
@@ -1623,7 +1768,7 @@ impl InterTaskScheduler {
             "task {id}: completion {completion} is not a finite non-negative time"
         );
         self.running.insert(id, completion);
-        self.completions.insert((completion.to_bits(), id));
+        self.completions_insert(id, completion)?;
         self.adoptions += 1;
         self.adopted_log.push(AdoptDecision {
             id,
@@ -1686,7 +1831,7 @@ impl InterTaskScheduler {
             // books (same arithmetic as eviction), then restart the
             // segment on the peer's placement at the merged rate
             {
-                let t = self.tasks.get_mut(&m).unwrap();
+                let t = self.tasks.req_mut(m)?;
                 let elapsed = clock - t.segment_at;
                 let progress = t.nominal_progress(elapsed);
                 t.actual_remaining = (t.actual_remaining - progress).max(0.0);
@@ -1695,12 +1840,12 @@ impl InterTaskScheduler {
                 t.segment_at = clock;
             }
             self.residents_remove(m, &old_p);
-            self.tasks.get_mut(&m).unwrap().placement = Some(new_p.clone());
+            self.tasks.req_mut(m)?.placement = Some(new_p.clone());
             self.residents_add(m, &new_p);
             let charge = self.migration_charge_of(m, Some(&old_p), &new_p);
             self.migration_charge += charge;
             let factor = self.price_factor(m) * self.group_stretch_of(m);
-            let t = self.tasks.get_mut(&m).unwrap();
+            let t = self.tasks.req_mut(m)?;
             t.run_factor = factor;
             t.run_charge = charge;
             let completion = clock + charge + t.actual_remaining * factor;
@@ -1712,8 +1857,10 @@ impl InterTaskScheduler {
                 .running
                 .insert(m, completion)
                 .with_context(|| format!("merged task {m} is not running"))?;
-            self.completions.remove(&(prev.to_bits(), m));
-            self.completions.insert((completion.to_bits(), m));
+            // removal uses the shard recorded at the *old* placement's
+            // insert; the re-insert then records the new home shard
+            self.completions_remove(m, prev);
+            self.completions_insert(m, completion)?;
             self.merges += 1;
             self.merged_log.push(MergeDecision {
                 id: m,
@@ -1735,9 +1882,8 @@ impl InterTaskScheduler {
     /// Ties break on the lower task id for determinism.  O(log n) via
     /// the completion-ordered index.
     pub fn peek_next_completion(&self) -> Option<(usize, f64)> {
-        self.completions
-            .first()
-            .map(|&(bits, id)| (id, f64::from_bits(bits)))
+        self.completions_first()
+            .map(|(bits, id)| (id, f64::from_bits(bits)))
     }
 
     /// Process the next completion event: advance the clock to it, free
@@ -1751,11 +1897,11 @@ impl InterTaskScheduler {
     /// recovery — the instance should be discarded, as bookkeeping may
     /// have partially advanced before the inconsistency was detected.
     pub fn complete_next(&mut self) -> Result<Option<(usize, f64)>> {
-        let Some(&(bits, id)) = self.completions.first() else {
+        let Some((bits, id)) = self.completions_first() else {
             return Ok(None);
         };
         let when = f64::from_bits(bits);
-        self.completions.remove(&(bits, id));
+        self.completions_remove(id, when);
         anyhow::ensure!(
             self.running.remove(&id).is_some(),
             "completion index names task {id}, which is not running"
@@ -1763,12 +1909,16 @@ impl InterTaskScheduler {
         self.clock = when;
         let t = self
             .tasks
-            .get_mut(&id)
+            .get_mut(id)
             .with_context(|| format!("completed task {id} is not in the task table"))?;
         anyhow::ensure!(t.started_at.is_some(), "completed task {id} was never started");
         t.finished_at = Some(when);
         t.charged_runtime += when - t.segment_at;
         t.actual_remaining = 0.0;
+        // drop the heavy pricing shape: completed tasks only serve
+        // accounting queries, so a long trace's retained state stays
+        // O(live tasks), not O(everything ever submitted)
+        t.shape = None;
         let p = t
             .placement
             .take()
@@ -1826,8 +1976,185 @@ impl InterTaskScheduler {
 
     /// (first start, end) of a task, once scheduled.
     pub fn span(&self, id: usize) -> Option<(f64, f64)> {
-        let t = self.tasks.get(&id)?;
+        let t = self.tasks.get(id)?;
         Some((t.first_started_at?, t.finished_at?))
+    }
+}
+
+/// An immutable, `Sync` borrow of exactly the scheduler state the
+/// pricing arithmetic reads — the task table, pricer, running set,
+/// per-island resident index and group membership.  `price_factor`,
+/// `contention_of` and `group_stretch_of` are pure functions of this
+/// view; hoisting them off the scheduler is what lets
+/// [`InterTaskScheduler::reprice_running`] gather factors for a large
+/// dirty set across the shard worker pool (the scheduler itself is not
+/// `Sync`: it may hold a streaming body resolver).
+struct PriceView<'a> {
+    tasks: &'a TaskSlab,
+    pricer: Option<&'a Pricer>,
+    running: &'a BTreeMap<usize, f64>,
+    residents: &'a [BTreeMap<usize, usize>],
+    topo_matches: bool,
+    groups: &'a SharedGroupSet,
+    sharing_enabled: bool,
+}
+
+impl PriceView<'_> {
+    /// The combined re-pricing factor: placement/contention slowdown
+    /// times the shared-roster stretch.
+    fn factor(&self, id: usize) -> f64 {
+        self.price_factor(id) * self.group_stretch_of(id)
+    }
+
+    /// Co-location context a running task currently experiences: every
+    /// other running task holding GPUs on the NVLink islands this task's
+    /// placement touches contributes its resident adapters.  Served from
+    /// the per-island resident index (O(neighbors), zero heap
+    /// allocations for ≤ 8-island placements); a pricer whose topology
+    /// differs from the cluster's falls back to the full running scan
+    /// grouped by the *model's* islands.
+    fn contention_of(&self, id: usize) -> ContentionCtx {
+        let Some(pr) = self.pricer else {
+            return ContentionCtx::empty();
+        };
+        let topo = pr.model.topo();
+        let Some(p) = self.tasks.get(id).and_then(|t| t.placement.as_ref()) else {
+            return ContentionCtx::empty();
+        };
+        if topo.is_empty() || p.is_empty() || !topo.contains(p) {
+            return ContentionCtx::empty();
+        }
+        if self.topo_matches {
+            let mut mine: SmallVec<usize, 8> = SmallVec::new();
+            for &g in p.gpus() {
+                let isl = topo.island_of(g);
+                if !mine.contains(&isl) {
+                    mine.push(isl);
+                }
+            }
+            // distinct neighbors with their GPU counts on my islands
+            // (islands are disjoint, so per-island counts just add up)
+            let mut acc: SmallVec<(usize, usize), 16> = SmallVec::new();
+            let my_group = self.groups.membership_of(id);
+            for &isl in mine.iter() {
+                for (&oid, &cnt) in &self.residents[isl] {
+                    if oid == id {
+                        continue;
+                    }
+                    // co-members of a shared executor group are not
+                    // foreign tenants: their cost is the roster stretch,
+                    // not island contention
+                    if my_group.is_some() && self.groups.membership_of(oid) == my_group {
+                        continue;
+                    }
+                    if let Some(e) = acc.iter_mut().find(|(o, _)| *o == oid) {
+                        e.1 += cnt;
+                    } else {
+                        acc.push((oid, cnt));
+                    }
+                }
+            }
+            let mut ctx = ContentionCtx::empty();
+            for &(oid, shared) in acc.iter() {
+                ctx.neighbor_adapters += self.tasks.get(oid).map_or(0, |t| t.adapters);
+                ctx.neighbor_gpus += shared;
+            }
+            ctx
+        } else {
+            // the sums are order-invariant, so scanning the running map
+            // (id order) matches the legacy start-order scan bitwise
+            let mut mine = vec![false; topo.n_islands()];
+            for &g in p.gpus() {
+                mine[topo.island_of(g)] = true;
+            }
+            let mut ctx = ContentionCtx::empty();
+            let my_group = self.groups.membership_of(id);
+            for &oid in self.running.keys() {
+                if oid == id {
+                    continue;
+                }
+                if my_group.is_some() && self.groups.membership_of(oid) == my_group {
+                    continue;
+                }
+                let Some(t) = self.tasks.get(oid) else { continue };
+                let Some(q) = t.placement.as_ref() else { continue };
+                if !topo.contains(q) {
+                    continue;
+                }
+                let shared = q
+                    .gpus()
+                    .iter()
+                    .filter(|&&g| mine[topo.island_of(g)])
+                    .count();
+                if shared > 0 {
+                    ctx.neighbor_adapters += t.adapters;
+                    ctx.neighbor_gpus += shared;
+                }
+            }
+            ctx
+        }
+    }
+
+    /// Wall-seconds per nominal second for a task's *current* placement
+    /// and neighborhood (1.0 when unpriced, shapeless, or single-island
+    /// and uncontended).
+    fn price_factor(&self, id: usize) -> f64 {
+        let Some(pr) = self.pricer else { return 1.0 };
+        if !pr.charge.comm && !pr.charge.contention {
+            return 1.0;
+        }
+        let Some(t) = self.tasks.get(id) else { return 1.0 };
+        // single-GPU tasks have no collective term: both charges act on
+        // comm_s alone, so their factor is exactly 1.0 — skip the model
+        if t.gpus <= 1 {
+            return 1.0;
+        }
+        let Some(shape) = &t.shape else { return 1.0 };
+        let placement = if pr.charge.comm { t.placement.as_ref() } else { None };
+        let ctx = if pr.charge.contention {
+            self.contention_of(id)
+        } else {
+            ContentionCtx::empty()
+        };
+        if t.nominal_step > 0.0 {
+            pr.model.charge_factor_given_nominal(
+                &shape.workload,
+                t.gpus,
+                placement,
+                &ctx,
+                t.nominal_step,
+            )
+        } else {
+            pr.model.charge_factor(&shape.workload, t.gpus, placement, &ctx)
+        }
+    }
+
+    /// The roster stretch a shared-group member currently runs at:
+    /// [`StepTimeModel::group_stretch`] over the combined ranks of every
+    /// member, in ascending member-id order.  Exactly 1.0 for
+    /// non-members, singleton rosters, shapeless tasks, or whenever
+    /// sharing is off — so the factor product is a bitwise no-op on the
+    /// pre-sharing path.
+    fn group_stretch_of(&self, id: usize) -> f64 {
+        if !self.sharing_enabled {
+            return 1.0;
+        }
+        let Some(pr) = self.pricer else { return 1.0 };
+        let Some(gid) = self.groups.membership_of(id) else { return 1.0 };
+        let g = self.groups.group(gid);
+        if g.members.len() <= 1 {
+            return 1.0;
+        }
+        let Some(t) = self.tasks.get(id) else { return 1.0 };
+        let Some(shape) = &t.shape else { return 1.0 };
+        let mut ranks = Vec::new();
+        for &m in &g.members {
+            if let Some(sh) = self.tasks.get(m).and_then(|mt| mt.shape.as_ref()) {
+                ranks.extend_from_slice(&sh.workload.ranks);
+            }
+        }
+        let combined = Workload { ranks, ..shape.workload.clone() };
+        pr.model.group_stretch(&shape.workload, &combined, t.gpus)
     }
 }
 
@@ -1934,7 +2261,7 @@ mod tests {
         s.submit(0, 2, 10.0, 10.0).unwrap();
         // sabotage: drop the running task's placement behind the
         // scheduler's back — the old code unwrap-panicked here
-        s.tasks.get_mut(&0).unwrap().placement = None;
+        s.tasks.get_mut(0).unwrap().placement = None;
         let err = s.complete_next().unwrap_err();
         assert!(
             err.to_string().contains("holds no placement"),
@@ -2239,6 +2566,82 @@ mod tests {
         assert_eq!(fast.1, slow.1, "start decisions drifted");
         assert_eq!(fast.2, slow.2, "reprice decisions drifted");
         assert_eq!(fast.3.to_bits(), slow.3.to_bits(), "charged GPU-seconds drifted");
+    }
+
+    // --- sharded completion index ------------------------------------------
+
+    /// A priced, staggered, repricing-heavy workload on 4 two-GPU
+    /// islands, drained under the given tuning.
+    fn drain_sharded(tuning: SchedTuning) -> (InterTaskScheduler, f64) {
+        let mut s = priced_sched(8, 2, Pricing::default());
+        s.tuning = tuning;
+        for i in 0..8 {
+            submit_shaped(&mut s, i, 1 + (i % 3), 8.0 + 2.5 * i as f64, 1.5 * i as f64, 0);
+        }
+        let mk = s.run_to_completion();
+        assert!(s.all_done());
+        (s, mk)
+    }
+
+    #[test]
+    fn sharded_completion_index_is_bitwise_equivalent() {
+        // shards: 1 (the single-loop path), 2, and more shards than
+        // islands (clamped) must drain identical decision streams,
+        // makespans and charged GPU-seconds, bit for bit
+        for shards in [2usize, 64] {
+            let (mut base, mk_base) = drain_sharded(SchedTuning::default());
+            let (mut s, mk) = drain_sharded(SchedTuning {
+                shards,
+                ..SchedTuning::default()
+            });
+            assert_eq!(mk.to_bits(), mk_base.to_bits(), "makespan drifted at {shards} shards");
+            assert_eq!(s.drain_started(), base.drain_started(), "starts drifted at {shards}");
+            assert_eq!(s.drain_repriced(), base.drain_repriced(), "reprices drifted at {shards}");
+            assert_eq!(
+                s.charged_gpu_seconds().to_bits(),
+                base.charged_gpu_seconds().to_bits(),
+                "charged GPU-seconds drifted at {shards} shards"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_reprice_gather_matches_sequential_bitwise() {
+        // force the parallel gather for every dirty batch (min: 1) and
+        // check it is non-vacuous and bitwise inert
+        let seq = drain_sharded(SchedTuning::default());
+        let (mut par, mk) = drain_sharded(SchedTuning {
+            shards: 4,
+            parallel_reprice_min: 1,
+            ..SchedTuning::default()
+        });
+        assert!(
+            par.parallel_reprice_batches > 0,
+            "the low threshold must actually exercise the parallel gather"
+        );
+        assert_eq!(mk.to_bits(), seq.1.to_bits(), "parallel gather changed the makespan");
+        let mut seq_s = seq.0;
+        assert_eq!(par.drain_started(), seq_s.drain_started());
+        assert_eq!(par.drain_repriced(), seq_s.drain_repriced());
+        assert_eq!(
+            par.charged_gpu_seconds().to_bits(),
+            seq_s.charged_gpu_seconds().to_bits()
+        );
+    }
+
+    #[test]
+    fn duplicate_and_far_out_of_range_ids_are_rejected() {
+        let mut s = InterTaskScheduler::new(4, Policy::Optimal);
+        s.submit(0, 2, 10.0, 10.0).unwrap();
+        // resubmitting a live id is a malformed submission, not a
+        // silent replacement of the running task's books
+        assert!(s.submit(0, 1, 5.0, 5.0).is_err());
+        // an id far beyond anything seen would blow the dense table up
+        assert!(s.submit(50_000_000, 1, 5.0, 5.0).is_err());
+        // neither rejection disturbed the valid task
+        let mk = s.run_to_completion();
+        assert!(s.all_done());
+        assert_eq!(mk.to_bits(), 10.0f64.to_bits());
     }
 
     #[test]

@@ -20,6 +20,13 @@
 //!   start, *before* the completion time is derived — so a streaming
 //!   timeline is bit-identical to a batch run that knew every duration
 //!   at submission (`rust/tests/simharness_e2e.rs`).
+//! * [`inter::SchedTuning`]`{ shards: k }` shards the completion index
+//!   by NVLink island group and gathers re-price factors in parallel;
+//!   the cross-shard merge keeps the flat `(completion bits, id)`
+//!   order and the gather applies in the historical sequence, so any
+//!   shard count drains bit-identical decisions — `shards: 1`
+//!   (default) *is* the flat single loop
+//!   (`rust/tests/sched_scale_props.rs`).
 //!
 //! Determinism everywhere else comes from total tie-breaking: the
 //! solver and queue disciplines break ties on task id, placement

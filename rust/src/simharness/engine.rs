@@ -57,6 +57,7 @@ use crate::data::synth::{dataset_profile, DatasetProfile};
 use crate::perfmodel::{task_workload, StepTimeModel};
 use crate::sched::inter::{InterTaskScheduler, Policy, Pricing, SchedTuning, Submission, TaskShape};
 use crate::sched::intra::{admit_priced, group_by_batch, GroupPricer};
+use crate::util::threadpool::scoped_map;
 
 use super::event::{EventKind, EventLog};
 use super::trace::Trace;
@@ -104,6 +105,12 @@ pub struct HarnessConfig {
     /// time.  Off by default so [`SimEngine::run_streaming`] replays
     /// bit-identical digests against the batch [`SimEngine::run`].
     pub log_body_events: bool,
+    /// Keep the full per-event record in the [`EventLog`] (the default).
+    /// `false` folds every event into the digest but retains none of
+    /// them — the 100k-task scale mode, where retained memory must stay
+    /// O(live tasks): digest, makespan and every decision are unchanged,
+    /// only `EventLog::events()` comes back empty.
+    pub retain_events: bool,
 }
 
 impl Default for HarnessConfig {
@@ -121,6 +128,7 @@ impl Default for HarnessConfig {
             gpu: GpuSpec::h100_sxm5(),
             n_slots: 4,
             log_body_events: false,
+            retain_events: true,
         }
     }
 }
@@ -313,11 +321,19 @@ fn body_key(spec: &TaskSpec) -> String {
 /// The event-driven cluster simulator.
 pub struct SimEngine {
     pub cfg: HarnessConfig,
+    /// Shared handle to `cfg.gpu`, snapshotted at construction: the
+    /// simulation hot path hands this `Arc` to every per-task profiler,
+    /// step-time model, backend and cluster instead of cloning the
+    /// `String`-bearing spec per task.  (`cfg` is public for ergonomic
+    /// construction; mutating `cfg.gpu` after `new` is not supported —
+    /// build a fresh engine instead.)
+    gpu: std::sync::Arc<GpuSpec>,
 }
 
 impl SimEngine {
     pub fn new(cfg: HarnessConfig) -> SimEngine {
-        SimEngine { cfg }
+        let gpu = std::sync::Arc::new(cfg.gpu.clone());
+        SimEngine { cfg, gpu }
     }
 
     /// The placement-independent plan of one task body: model shape,
@@ -343,7 +359,7 @@ impl SimEngine {
         // admission prices candidate groups through the perfmodel: the
         // memory model says what fits, the pricer (gain bar 0) rejects
         // any co-location that would hurt sustained samples/s
-        let perf = StepTimeModel::nominal(self.cfg.gpu.clone());
+        let perf = StepTimeModel::nominal(self.gpu.clone());
         let pricer = GroupPricer {
             model: &perf,
             shape: &model,
@@ -394,7 +410,7 @@ impl SimEngine {
     /// profiler's duration estimate: every field is filled here, in one
     /// place — no 0.0 placeholder for callers to forget.
     pub fn simulate_task(&self, spec: &TaskSpec) -> Result<TaskOutcome> {
-        self.simulate_task_with(&mut Profiler::new(self.cfg.gpu.clone()), spec, None)
+        self.simulate_task_with(&mut Profiler::new(self.gpu.clone()), spec, None)
     }
 
     /// [`SimEngine::simulate_task`] against a caller-owned (cached)
@@ -411,7 +427,7 @@ impl SimEngine {
     ) -> Result<TaskOutcome> {
         let plan = self.body_plan(spec)?;
         let jobs = make_jobs(&plan.hps, spec.epochs, spec.train_samples, spec.seed);
-        let perf = StepTimeModel::nominal(self.cfg.gpu.clone());
+        let perf = StepTimeModel::nominal(self.gpu.clone());
         let pricer = GroupPricer {
             model: &perf,
             shape: &plan.model,
@@ -435,7 +451,7 @@ impl SimEngine {
                 *width,
                 *bs,
                 plan.seq_len,
-                self.cfg.gpu.clone(),
+                self.gpu.clone(),
                 spec.num_gpus,
             );
             let mut cursor = TaskCursor::new(&mut backend, gjobs, self.cfg.run.clone())
@@ -499,7 +515,7 @@ impl SimEngine {
     /// [`SimEngine::run_streaming`] simulates the same bodies lazily,
     /// at start events, memoized across duplicate specs.
     pub fn simulate_trace(&self, trace: &Trace) -> Result<Vec<TaskOutcome>> {
-        let mut profiler = Profiler::new(self.cfg.gpu.clone());
+        let mut profiler = Profiler::new(self.gpu.clone());
         let mut outcomes = Vec::with_capacity(trace.len());
         for entry in &trace.entries {
             outcomes.push(self.simulate_task_with(&mut profiler, &entry.spec, None)?);
@@ -530,7 +546,7 @@ impl SimEngine {
             );
         }
         let topo = self.cfg.topology();
-        let cluster = SimCluster::with_topology(self.cfg.gpu.clone(), topo.clone());
+        let cluster = SimCluster::with_topology(self.gpu.clone(), topo.clone());
         let mut sched = InterTaskScheduler::with_cluster(cluster, self.cfg.policy);
         sched.place = self.cfg.place;
         sched.enable_preemption = self.cfg.preempt_on_arrival;
@@ -540,7 +556,7 @@ impl SimEngine {
         // neighborhood through its representative executor workload
         let shapes: Option<Vec<TaskShape>> = if self.cfg.pricing.any() {
             sched.set_pricer(
-                StepTimeModel::new(self.cfg.gpu.clone(), topo.clone()),
+                StepTimeModel::new(self.gpu.clone(), topo.clone()),
                 self.cfg.pricing,
             );
             let mut shapes = Vec::with_capacity(outcomes.len());
@@ -569,7 +585,7 @@ impl SimEngine {
         // breaking, same drain order, same event payloads).  Any change
         // here must be mirrored there — the streaming==batch digest
         // equality in rust/tests/simharness_e2e.rs pins the pair.
-        let mut log = EventLog::new();
+        let mut log = EventLog::with_retention(self.cfg.retain_events);
         let mut placements: Vec<Placement> = vec![Placement::default(); outcomes.len()];
         let mut migrations = 0usize;
         let mut cross_island_allocs = 0usize;
@@ -810,7 +826,7 @@ impl SimEngine {
                 .with_context(|| format!("unknown dataset '{}'", entry.spec.dataset))?;
         }
         let topo = self.cfg.topology();
-        let cluster = SimCluster::with_topology(self.cfg.gpu.clone(), topo.clone());
+        let cluster = SimCluster::with_topology(self.gpu.clone(), topo.clone());
         let mut sched = InterTaskScheduler::with_cluster(cluster, self.cfg.policy);
         sched.place = self.cfg.place;
         sched.enable_preemption = self.cfg.preempt_on_arrival;
@@ -819,14 +835,14 @@ impl SimEngine {
         let priced = self.cfg.pricing.any();
         if priced {
             sched.set_pricer(
-                StepTimeModel::new(self.cfg.gpu.clone(), topo.clone()),
+                StepTimeModel::new(self.gpu.clone(), topo.clone()),
                 self.cfg.pricing,
             );
         }
         let n = trace.len();
         let state = Rc::new(RefCell::new(StreamState {
             engine: SimEngine::new(self.cfg.clone()),
-            profiler: Profiler::new(self.cfg.gpu.clone()),
+            profiler: Profiler::new(self.gpu.clone()),
             specs: trace.entries.iter().map(|e| e.spec.clone()).collect(),
             collect_marks: self.cfg.log_body_events,
             memo: BTreeMap::new(),
@@ -876,12 +892,56 @@ impl SimEngine {
                 }
             }));
         }
+        // Sharded tuning: prefetch every *distinct* body on the shard
+        // worker pool before the clock starts.  A body is a pure
+        // function of its spec (each worker gets a fresh profiler — a
+        // pure memo cache over the same model), so pre-warming the memo
+        // changes no event, estimate or digest; the lazy resolver then
+        // serves every start from the memo (`memo_hits` counts all of
+        // them in this mode).  Keys are collected in trace order, so
+        // the memo's contents are shard-count-invariant too.
+        if self.cfg.tuning.shards > 1 {
+            let mut seen: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+            let work: Vec<(String, usize)> = trace
+                .entries
+                .iter()
+                .enumerate()
+                .filter_map(|(i, e)| {
+                    let key = body_key(&e.spec);
+                    seen.insert(key.clone()).then_some((key, i))
+                })
+                .collect();
+            let collect_marks = self.cfg.log_body_events;
+            let bodies = scoped_map(self.cfg.tuning.shards, &work, |(key, i)| {
+                let mut profiler = Profiler::new(self.gpu.clone());
+                let mut marks = Vec::new();
+                let collected = if collect_marks { Some(&mut marks) } else { None };
+                self.simulate_task_with(&mut profiler, &trace.entries[*i].spec, collected)
+                    .map(|o| {
+                        (
+                            key.clone(),
+                            BodyOutcome {
+                                actual_duration: o.actual_duration,
+                                best_val: o.best_val,
+                                samples_used: o.samples_used,
+                                samples_budget: o.samples_budget,
+                                marks,
+                            },
+                        )
+                    })
+            });
+            let mut guard = state.borrow_mut();
+            for body in bodies {
+                let (key, outcome) = body?;
+                guard.memo.insert(key, outcome);
+            }
+        }
         // NOTE: twin of the `replay` event loop — same tie breaking,
         // drain order and event payloads, differing only in lazy
         // est/shape derivation, NaN actuals, and the body-mark fold.
         // Any change must be mirrored there (the digest-equality tests
         // pin the pair).
-        let mut log = EventLog::new();
+        let mut log = EventLog::with_retention(self.cfg.retain_events);
         let mut placements: Vec<Placement> = vec![Placement::default(); n];
         let mut ests: Vec<f64> = vec![0.0; n];
         let mut body_logged: Vec<bool> = vec![false; n];

@@ -13,6 +13,17 @@
 //! placement index (no epsilon anywhere).  `to_jsonl`/`from_jsonl` dump
 //! and reload timelines losslessly (Rust's shortest-roundtrip f64
 //! formatting), so runs can be diffed offline.
+//!
+//! Internally the log does **not** store [`Event`] values: each record
+//! is a fixed-size [`Rec`] (no heap pointers) whose placement indices
+//! live in one shared `u32` arena, and the digest is folded
+//! incrementally at `record()` time.  That keeps a 100k-task trace's
+//! event memory to one flat array plus one arena instead of hundreds of
+//! thousands of heap-allocated `Placement` vectors — and it makes a
+//! *digest-only* mode (`retain: false`, see
+//! [`EventLog::with_retention`]) free: the accumulator and counters keep
+//! advancing while no per-event state is kept at all, so replay
+//! equivalence can still be checked on traces too large to hold.
 
 use std::fmt;
 
@@ -193,6 +204,16 @@ impl EventKind {
         }
     }
 
+    /// Inverse of [`Self::reason_code`], for decoding stored records.
+    fn reason_from(code: u8) -> ExitReason {
+        match code {
+            0 => ExitReason::Diverging,
+            1 => ExitReason::Overfitting,
+            2 => ExitReason::Underperforming,
+            _ => ExitReason::Completed,
+        }
+    }
+
     fn mix(&self, h: &mut u64) {
         fnv1a_mix(h, self.code());
         fnv1a_mix(h, self.task() as u64);
@@ -240,6 +261,107 @@ pub struct Event {
     pub kind: EventKind,
 }
 
+impl Event {
+    /// Append this event as one compact JSON object (no trailing
+    /// newline) to `out` — byte-identical to the `Json::obj(...)`
+    /// rendering the dump format was defined with (keys in sorted
+    /// order, `"key":value`, no whitespace), but writing straight into
+    /// the caller's reusable buffer: no `Json` tree, no per-event
+    /// `String`.  [`EventLog::to_jsonl`] loops this over one buffer; a
+    /// golden test pins the byte identity against the tree writer.
+    pub fn write_jsonl(&self, out: &mut String) {
+        use crate::util::json::{write_num, write_str};
+        fn num(out: &mut String, key: &str, v: f64) {
+            out.push('"');
+            out.push_str(key);
+            out.push_str("\":");
+            write_num(out, v);
+            out.push(',');
+        }
+        fn text(out: &mut String, key: &str, v: &str) {
+            out.push('"');
+            out.push_str(key);
+            out.push_str("\":");
+            write_str(out, v);
+            out.push(',');
+        }
+        fn arr(out: &mut String, key: &str, p: &Placement) {
+            out.push('"');
+            out.push_str(key);
+            out.push_str("\":[");
+            for (i, &g) in p.gpus().iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_num(out, g as f64);
+            }
+            out.push_str("],");
+        }
+        // Fields must appear in lexicographic key order to match the
+        // BTreeMap-backed `Json::Obj` serialization byte for byte.
+        out.push('{');
+        match &self.kind {
+            EventKind::Arrival { .. } | EventKind::Complete { .. } => {
+                num(out, "gpus", self.kind.gpus() as f64);
+                text(out, "kind", self.kind.label());
+                num(out, "seq", self.seq as f64);
+                num(out, "task", self.kind.task() as f64);
+                num(out, "time", self.time);
+            }
+            EventKind::Start { placement, .. }
+            | EventKind::Preempt { placement, .. }
+            | EventKind::Placed { placement, .. }
+            | EventKind::Adopt { placement, .. } => {
+                num(out, "gpus", self.kind.gpus() as f64);
+                text(out, "kind", self.kind.label());
+                arr(out, "placement", placement);
+                num(out, "seq", self.seq as f64);
+                num(out, "task", self.kind.task() as f64);
+                num(out, "time", self.time);
+            }
+            EventKind::Migrate { from, to, .. } | EventKind::Merge { from, to, .. } => {
+                arr(out, "from", from);
+                num(out, "gpus", self.kind.gpus() as f64);
+                text(out, "kind", self.kind.label());
+                num(out, "seq", self.seq as f64);
+                num(out, "task", self.kind.task() as f64);
+                num(out, "time", self.time);
+                arr(out, "to", to);
+            }
+            EventKind::Reprice { completion, .. } => {
+                num(out, "completion", *completion);
+                num(out, "gpus", self.kind.gpus() as f64);
+                text(out, "kind", self.kind.label());
+                num(out, "seq", self.seq as f64);
+                num(out, "task", self.kind.task() as f64);
+                num(out, "time", self.time);
+            }
+            EventKind::Segment { seq, nominal_end, .. } => {
+                num(out, "gpus", self.kind.gpus() as f64);
+                text(out, "kind", self.kind.label());
+                num(out, "nominal_end", *nominal_end);
+                num(out, "seg", *seq as f64);
+                num(out, "seq", self.seq as f64);
+                num(out, "task", self.kind.task() as f64);
+                num(out, "time", self.time);
+            }
+            EventKind::JobExit { job, reason, nominal_at, .. } => {
+                num(out, "gpus", self.kind.gpus() as f64);
+                num(out, "job", *job as f64);
+                text(out, "kind", self.kind.label());
+                num(out, "nominal_at", *nominal_at);
+                text(out, "reason", reason.as_str());
+                num(out, "seq", self.seq as f64);
+                num(out, "task", self.kind.task() as f64);
+                num(out, "time", self.time);
+            }
+        }
+        // every kind wrote at least one trailing comma
+        out.pop();
+        out.push('}');
+    }
+}
+
 impl fmt::Display for Event {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
@@ -273,76 +395,284 @@ impl fmt::Display for Event {
     }
 }
 
+/// One stored event record: fixed-size, heap-free.  Placement indices
+/// live in the log's shared `gpu_arena`; `p1`/`p2` are `(offset, len)`
+/// slices into it (`p1` = placement/from, `p2` = to).  `x_bits` holds
+/// the raw IEEE-754 bits of the kind's one float payload (reprice
+/// completion, segment nominal-end, job-exit nominal-at) and `aux` the
+/// kind's one extra index (segment seq, job-exit job).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Rec {
+    time_bits: u64,
+    x_bits: u64,
+    aux: u64,
+    task: u32,
+    gpus: u32,
+    p1: (u32, u32),
+    p2: (u32, u32),
+    code: u8,
+    reason: u8,
+}
+
 /// Append-only, totally ordered event log.
-#[derive(Debug, Clone, Default, PartialEq)]
+///
+/// Storage is compact (see [`Rec`]) and the digest is an incremental
+/// FNV-1a accumulator folded at `record()` time, so `digest()` is O(1)
+/// and — with retention disabled via [`EventLog::with_retention`] — a
+/// run's event-log memory is O(1) too while `digest()`, `len()` and
+/// `last_time()` stay exact.
+#[derive(Debug, Clone, PartialEq)]
 pub struct EventLog {
-    events: Vec<Event>,
+    recs: Vec<Rec>,
+    gpu_arena: Vec<u32>,
+    /// Events recorded (drives `seq` and `len()` even with retention
+    /// off, when `recs` stays empty).
+    recorded: usize,
+    /// Incremental digest accumulator: FNV-1a folded per record in
+    /// record order — exactly the hash the old whole-log walk computed.
+    acc: u64,
+    retain: bool,
+    last_time_bits: u64,
+}
+
+impl Default for EventLog {
+    fn default() -> EventLog {
+        EventLog::new()
+    }
 }
 
 impl EventLog {
     pub fn new() -> EventLog {
-        EventLog { events: Vec::new() }
+        EventLog::with_retention(true)
+    }
+
+    /// `retain: false` gives a digest-only log: `record()` folds every
+    /// event into the digest and advances `len()`/`last_time()` but
+    /// stores nothing, so a 100k-task replay-equivalence check holds no
+    /// per-event state at all.  `events()`, `count()`, `lines()`,
+    /// `final_placement()` and `to_jsonl()` then see an empty timeline.
+    pub fn with_retention(retain: bool) -> EventLog {
+        EventLog {
+            recs: Vec::new(),
+            gpu_arena: Vec::new(),
+            recorded: 0,
+            acc: FNV_OFFSET,
+            retain,
+            last_time_bits: 0.0_f64.to_bits(),
+        }
+    }
+
+    /// Whether recorded events are kept (false = digest-only mode).
+    pub fn retains_events(&self) -> bool {
+        self.retain
+    }
+
+    /// Number of event records actually held in memory — equals `len()`
+    /// with retention on, 0 with retention off.  The scale bench uses
+    /// this as its peak-retained-state proxy.
+    pub fn retained(&self) -> usize {
+        self.recs.len()
     }
 
     pub fn record(&mut self, time: f64, kind: EventKind) {
-        let seq = self.events.len();
-        self.events.push(Event { time, seq, kind });
+        let seq = self.recorded;
+        fnv1a_mix(&mut self.acc, time.to_bits());
+        fnv1a_mix(&mut self.acc, seq as u64);
+        kind.mix(&mut self.acc);
+        self.recorded += 1;
+        self.last_time_bits = time.to_bits();
+        if self.retain {
+            let rec = self.encode(time, &kind);
+            self.recs.push(rec);
+        }
     }
 
-    pub fn events(&self) -> &[Event] {
-        &self.events
+    fn push_placement(&mut self, p: &Placement) -> (u32, u32) {
+        let off = self.gpu_arena.len() as u32;
+        self.gpu_arena.extend(p.gpus().iter().map(|&g| g as u32));
+        (off, p.len() as u32)
     }
 
+    fn encode(&mut self, time: f64, kind: &EventKind) -> Rec {
+        let mut r = Rec {
+            time_bits: time.to_bits(),
+            x_bits: 0,
+            aux: 0,
+            task: kind.task() as u32,
+            gpus: kind.gpus() as u32,
+            p1: (0, 0),
+            p2: (0, 0),
+            code: kind.code() as u8,
+            reason: 0,
+        };
+        match kind {
+            EventKind::Arrival { .. } | EventKind::Complete { .. } => {}
+            EventKind::Start { placement, .. }
+            | EventKind::Preempt { placement, .. }
+            | EventKind::Placed { placement, .. }
+            | EventKind::Adopt { placement, .. } => {
+                r.p1 = self.push_placement(placement);
+            }
+            EventKind::Migrate { from, to, .. } | EventKind::Merge { from, to, .. } => {
+                r.p1 = self.push_placement(from);
+                r.p2 = self.push_placement(to);
+            }
+            EventKind::Reprice { completion, .. } => {
+                r.x_bits = completion.to_bits();
+            }
+            EventKind::Segment { seq, nominal_end, .. } => {
+                r.aux = *seq as u64;
+                r.x_bits = nominal_end.to_bits();
+            }
+            EventKind::JobExit { job, reason, nominal_at, .. } => {
+                r.aux = *job as u64;
+                r.x_bits = nominal_at.to_bits();
+                r.reason = EventKind::reason_code(*reason) as u8;
+            }
+        }
+        r
+    }
+
+    fn placement_at(&self, (off, len): (u32, u32)) -> Placement {
+        Placement::new(
+            self.gpu_arena[off as usize..(off + len) as usize]
+                .iter()
+                .map(|&g| g as usize)
+                .collect(),
+        )
+    }
+
+    /// Reconstruct the i-th retained record as an [`Event`].  Retained
+    /// records are dense (one per `record()` call), so the index is the
+    /// event's `seq`.
+    fn decode(&self, i: usize) -> Event {
+        let r = &self.recs[i];
+        let task = r.task as usize;
+        let gpus = r.gpus as usize;
+        let kind = match r.code {
+            0 => EventKind::Arrival { task, gpus },
+            1 => EventKind::Start {
+                task,
+                gpus,
+                placement: self.placement_at(r.p1),
+            },
+            2 => EventKind::Complete { task, gpus },
+            3 => EventKind::Preempt {
+                task,
+                gpus,
+                placement: self.placement_at(r.p1),
+            },
+            4 => EventKind::Placed {
+                task,
+                gpus,
+                placement: self.placement_at(r.p1),
+            },
+            5 => EventKind::Migrate {
+                task,
+                gpus,
+                from: self.placement_at(r.p1),
+                to: self.placement_at(r.p2),
+            },
+            6 => EventKind::Reprice {
+                task,
+                gpus,
+                completion: f64::from_bits(r.x_bits),
+            },
+            7 => EventKind::Segment {
+                task,
+                gpus,
+                seq: r.aux as usize,
+                nominal_end: f64::from_bits(r.x_bits),
+            },
+            8 => EventKind::JobExit {
+                task,
+                gpus,
+                job: r.aux as usize,
+                reason: EventKind::reason_from(r.reason),
+                nominal_at: f64::from_bits(r.x_bits),
+            },
+            9 => EventKind::Adopt {
+                task,
+                gpus,
+                placement: self.placement_at(r.p1),
+            },
+            _ => EventKind::Merge {
+                task,
+                gpus,
+                from: self.placement_at(r.p1),
+                to: self.placement_at(r.p2),
+            },
+        };
+        Event {
+            time: f64::from_bits(r.time_bits),
+            seq: i,
+            kind,
+        }
+    }
+
+    /// Reconstruct the retained timeline as owned [`Event`] values
+    /// (empty with retention off).  The log no longer stores `Event`s
+    /// directly, so this materializes; bind the result once and iterate
+    /// it, don't call per event.
+    pub fn events(&self) -> Vec<Event> {
+        (0..self.recs.len()).map(|i| self.decode(i)).collect()
+    }
+
+    /// Events recorded — counts every `record()` call even in
+    /// digest-only mode.
     pub fn len(&self) -> usize {
-        self.events.len()
+        self.recorded
     }
 
     pub fn is_empty(&self) -> bool {
-        self.events.is_empty()
+        self.recorded == 0
     }
 
-    /// Count events matching a predicate (e.g. completions).
+    /// Count retained events matching a predicate (e.g. completions).
     pub fn count(&self, pred: impl Fn(&EventKind) -> bool) -> usize {
-        self.events.iter().filter(|e| pred(&e.kind)).count()
+        (0..self.recs.len())
+            .filter(|&i| pred(&self.decode(i).kind))
+            .count()
     }
 
-    /// Time of the last event (0.0 for an empty log).
+    /// Time of the last recorded event (0.0 for an empty log); exact
+    /// even in digest-only mode.
     pub fn last_time(&self) -> f64 {
-        self.events.last().map(|e| e.time).unwrap_or(0.0)
+        f64::from_bits(self.last_time_bits)
     }
 
     /// The concrete GPUs a task holds after the whole timeline's last
     /// placement-bearing event for it (None if it never started).
-    pub fn final_placement(&self, task: usize) -> Option<&Placement> {
-        self.events
-            .iter()
-            .rev()
-            .find(|e| e.kind.task() == task && e.kind.placement().is_some())
-            .and_then(|e| e.kind.placement())
+    pub fn final_placement(&self, task: usize) -> Option<Placement> {
+        self.recs.iter().rev().find_map(|r| {
+            if r.task as usize != task {
+                return None;
+            }
+            match r.code {
+                // Start / Placed / Adopt pin `p1`; Migrate / Merge pin
+                // their `to` side, `p2`.
+                1 | 4 | 9 => Some(self.placement_at(r.p1)),
+                5 | 10 => Some(self.placement_at(r.p2)),
+                _ => None,
+            }
+        })
     }
 
     /// FNV-1a over the exact bit patterns of every event — two logs with
     /// the same digest are bit-identical timelines (placements included).
+    /// O(1): the fold happens incrementally at `record()`.
     pub fn digest(&self) -> u64 {
-        let mut h = FNV_OFFSET;
-        for e in &self.events {
-            fnv1a_mix(&mut h, e.time.to_bits());
-            fnv1a_mix(&mut h, e.seq as u64);
-            e.kind.mix(&mut h);
-        }
-        h
+        self.acc
     }
 
-    /// Human-readable rendering, one line per event.
+    /// Human-readable rendering, one line per retained event.
     pub fn lines(&self) -> Vec<String> {
-        self.events.iter().map(|e| e.to_string()).collect()
+        (0..self.recs.len())
+            .map(|i| self.decode(i).to_string())
+            .collect()
     }
 
     // -- jsonl dump / reload -------------------------------------------------
-
-    fn placement_json(p: &Placement) -> Json {
-        Json::Arr(p.gpus().iter().map(|&g| Json::Num(g as f64)).collect())
-    }
 
     /// Parse a GPU-index array that must hold exactly `want` sorted,
     /// unique indices — the invariant every engine-produced event obeys,
@@ -377,43 +707,12 @@ impl EventLog {
     /// One JSON object per line (`{"time":…,"seq":…,"kind":…,…}`), in
     /// log order.  `f64` timestamps use Rust's shortest-roundtrip
     /// formatting, so `from_jsonl(to_jsonl())` is bit-identical (same
-    /// `digest()`), which the golden tests pin.
+    /// `digest()`), which the golden tests pin.  Empty in digest-only
+    /// mode (nothing was retained to dump).
     pub fn to_jsonl(&self) -> String {
         let mut out = String::new();
-        for e in &self.events {
-            let mut fields = vec![
-                ("time", Json::Num(e.time)),
-                ("seq", Json::Num(e.seq as f64)),
-                ("kind", Json::Str(e.kind.label().to_string())),
-                ("task", Json::Num(e.kind.task() as f64)),
-                ("gpus", Json::Num(e.kind.gpus() as f64)),
-            ];
-            match &e.kind {
-                EventKind::Arrival { .. } | EventKind::Complete { .. } => {}
-                EventKind::Start { placement, .. }
-                | EventKind::Preempt { placement, .. }
-                | EventKind::Placed { placement, .. }
-                | EventKind::Adopt { placement, .. } => {
-                    fields.push(("placement", Self::placement_json(placement)));
-                }
-                EventKind::Migrate { from, to, .. } | EventKind::Merge { from, to, .. } => {
-                    fields.push(("from", Self::placement_json(from)));
-                    fields.push(("to", Self::placement_json(to)));
-                }
-                EventKind::Reprice { completion, .. } => {
-                    fields.push(("completion", Json::Num(*completion)));
-                }
-                EventKind::Segment { seq, nominal_end, .. } => {
-                    fields.push(("seg", Json::Num(*seq as f64)));
-                    fields.push(("nominal_end", Json::Num(*nominal_end)));
-                }
-                EventKind::JobExit { job, reason, nominal_at, .. } => {
-                    fields.push(("job", Json::Num(*job as f64)));
-                    fields.push(("reason", Json::Str(reason.as_str().to_string())));
-                    fields.push(("nominal_at", Json::Num(*nominal_at)));
-                }
-            }
-            out.push_str(&Json::obj(fields).to_string());
+        for i in 0..self.recs.len() {
+            self.decode(i).write_jsonl(&mut out);
             out.push('\n');
         }
         out
@@ -438,11 +737,11 @@ impl EventLog {
                 .as_usize()
                 .ok_or_else(|| anyhow::anyhow!("line {}: 'seq' not an index", lineno + 1))?;
             anyhow::ensure!(
-                seq == log.events.len(),
+                seq == log.len(),
                 "line {}: seq {} out of order (expected {})",
                 lineno + 1,
                 seq,
-                log.events.len()
+                log.len()
             );
             let task = j
                 .req("task")?
@@ -644,6 +943,44 @@ mod tests {
     }
 
     #[test]
+    fn events_roundtrip_through_compact_storage() {
+        // the decoded timeline must be exactly what was recorded, for
+        // every kind (placement arena slices, float bit payloads, aux
+        // indices, exit reasons)
+        let logs = [sample(), preemptive_sample(), body_sample(), sharing_sample()];
+        for log in &logs {
+            let evs = log.events();
+            assert_eq!(evs.len(), log.len());
+            let mut rebuilt = EventLog::new();
+            for e in &evs {
+                assert_eq!(e.seq, rebuilt.len(), "seq must be the record index");
+                rebuilt.record(e.time, e.kind.clone());
+            }
+            assert_eq!(&rebuilt, log);
+            assert_eq!(rebuilt.digest(), log.digest());
+        }
+    }
+
+    #[test]
+    fn digest_only_mode_matches_retained_digest() {
+        let retained = preemptive_sample();
+        let mut lean = EventLog::with_retention(false);
+        for e in retained.events() {
+            lean.record(e.time, e.kind);
+        }
+        // exact digest, length and clock — with zero retained state
+        assert_eq!(lean.digest(), retained.digest());
+        assert_eq!(lean.len(), retained.len());
+        assert_eq!(lean.last_time(), retained.last_time());
+        assert!(!lean.retains_events());
+        assert_eq!(lean.retained(), 0);
+        assert_eq!(retained.retained(), retained.len());
+        assert!(lean.events().is_empty());
+        assert_eq!(lean.to_jsonl(), "");
+        assert_eq!(lean.count(|_| true), 0);
+    }
+
+    #[test]
     fn counting_and_rendering() {
         let log = sample();
         assert_eq!(log.len(), 3);
@@ -662,8 +999,8 @@ mod tests {
     #[test]
     fn final_placement_follows_migrations() {
         let log = preemptive_sample();
-        assert_eq!(log.final_placement(0), Some(&p(&[0, 1])));
-        assert_eq!(log.final_placement(1), Some(&p(&[2, 3])));
+        assert_eq!(log.final_placement(0), Some(p(&[0, 1])));
+        assert_eq!(log.final_placement(1), Some(p(&[2, 3])));
         assert_eq!(log.final_placement(7), None);
     }
 
@@ -681,6 +1018,103 @@ mod tests {
         log.record(1.0 / 3.0, EventKind::Complete { task: 0, gpus: 1 });
         let back = EventLog::from_jsonl(&log.to_jsonl()).unwrap();
         assert_eq!(back.digest(), log.digest());
+    }
+
+    #[test]
+    fn write_jsonl_matches_the_json_tree_writer() {
+        // `Event::write_jsonl` must stay byte-identical to the
+        // `Json::obj` rendering the dump format was defined with — build
+        // the tree the way the old serializer did and diff the bytes,
+        // for every event kind and for awkward float payloads.
+        fn tree_line(e: &Event) -> String {
+            let placement_json = |p: &Placement| {
+                Json::Arr(p.gpus().iter().map(|&g| Json::Num(g as f64)).collect())
+            };
+            let mut fields = vec![
+                ("time", Json::Num(e.time)),
+                ("seq", Json::Num(e.seq as f64)),
+                ("kind", Json::Str(e.kind.label().to_string())),
+                ("task", Json::Num(e.kind.task() as f64)),
+                ("gpus", Json::Num(e.kind.gpus() as f64)),
+            ];
+            match &e.kind {
+                EventKind::Arrival { .. } | EventKind::Complete { .. } => {}
+                EventKind::Start { placement, .. }
+                | EventKind::Preempt { placement, .. }
+                | EventKind::Placed { placement, .. }
+                | EventKind::Adopt { placement, .. } => {
+                    fields.push(("placement", placement_json(placement)));
+                }
+                EventKind::Migrate { from, to, .. } | EventKind::Merge { from, to, .. } => {
+                    fields.push(("from", placement_json(from)));
+                    fields.push(("to", placement_json(to)));
+                }
+                EventKind::Reprice { completion, .. } => {
+                    fields.push(("completion", Json::Num(*completion)));
+                }
+                EventKind::Segment { seq, nominal_end, .. } => {
+                    fields.push(("seg", Json::Num(*seq as f64)));
+                    fields.push(("nominal_end", Json::Num(*nominal_end)));
+                }
+                EventKind::JobExit { job, reason, nominal_at, .. } => {
+                    fields.push(("job", Json::Num(*job as f64)));
+                    fields.push(("reason", Json::Str(reason.as_str().to_string())));
+                    fields.push(("nominal_at", Json::Num(*nominal_at)));
+                }
+            }
+            Json::obj(fields).to_string()
+        }
+        let mut log = preemptive_sample();
+        log.record(
+            12.5,
+            EventKind::Adopt {
+                task: 2,
+                gpus: 2,
+                placement: p(&[4, 5]),
+            },
+        );
+        log.record(
+            13.0,
+            EventKind::Merge {
+                task: 2,
+                gpus: 2,
+                from: p(&[4, 5]),
+                to: p(&[6, 7]),
+            },
+        );
+        log.record(
+            1.0 / 3.0,
+            EventKind::Reprice {
+                task: 2,
+                gpus: 2,
+                completion: 0.1 + 0.2,
+            },
+        );
+        log.record(
+            14.0,
+            EventKind::Segment {
+                task: 2,
+                gpus: 2,
+                seq: 3,
+                nominal_end: 2.0 / 3.0,
+            },
+        );
+        log.record(
+            14.0,
+            EventKind::JobExit {
+                task: 2,
+                gpus: 2,
+                job: 9,
+                reason: ExitReason::Underperforming,
+                nominal_at: 1e-12,
+            },
+        );
+        let mut buf = String::new();
+        for e in log.events() {
+            buf.clear();
+            e.write_jsonl(&mut buf);
+            assert_eq!(buf, tree_line(&e), "kind {}", e.kind.label());
+        }
     }
 
     #[test]
@@ -827,7 +1261,7 @@ mod tests {
         assert!(lines[4].contains("adopt") && lines[4].contains("on=[0,1]"), "{}", lines[4]);
         assert!(lines[5].contains("merge") && lines[5].contains("[0,1]->[2,3]"), "{}", lines[5]);
         // a merge still pins the task's final GPUs
-        assert_eq!(log.final_placement(1), Some(&p(&[2, 3])));
+        assert_eq!(log.final_placement(1), Some(p(&[2, 3])));
         // malformed sharing events are rejected on reload
         let bad = r#"{"gpus":2,"kind":"adopt","seq":0,"task":0,"time":0}"#;
         assert!(EventLog::from_jsonl(bad).is_err());

@@ -105,6 +105,29 @@
 //! across the fragmentation / preemption / uniform / duplicate trace
 //! generators and seeds.
 //!
+//! ## The 100k-task scale mode
+//!
+//! Two orthogonal switches take the streaming path to 100k-task
+//! traces without moving one bit of the digest:
+//!
+//! * [`crate::sched::inter::SchedTuning`]`{ shards: k }` shards the
+//!   scheduler's completion index by NVLink island group and turns on
+//!   the parallel price-factor gather and the engine's parallel
+//!   distinct-body prefetch (each distinct body simulated once on the
+//!   thread pool before the loop starts; the lazy resolver then
+//!   serves every start from the memo).  The cross-shard merge picks
+//!   the min over shard heads under the flat `(completion bits, id)`
+//!   order, so any `k` replays bit-identically and `shards: 1` *is*
+//!   the single loop.
+//! * [`HarnessConfig::retain_events`]` = false` folds every event into
+//!   the digest but stores none of them: `digest()`, `len()` and
+//!   `last_time()` stay exact while retained state stays O(live
+//!   tasks).
+//!
+//! `rust/tests/sched_scale_props.rs` pins the equivalence;
+//! `benches/sched_scale.rs` measures the 100k point.  See
+//! `docs/ARCHITECTURE.md` "Sharded event loop".
+//!
 //! ### Determinism guarantees
 //!
 //! `SimEngine::run` is a pure function of (config, trace): same inputs

@@ -335,8 +335,11 @@ impl Trace {
     }
 
     /// Duplicate-heavy Poisson stream over [`duplicate_mix`] — the
-    /// streaming-memo stressor the scale bench sweeps.  Pure function
-    /// of its arguments.
+    /// streaming-memo stressor the scale bench sweeps, and (at
+    /// `n_tasks = 100_000`) the sharded-event-loop scale point: tens of
+    /// thousands of tenants cycling a few thousand distinct sweep
+    /// shapes is exactly the a-day-of-fleet-traffic profile the
+    /// 100k-task mode targets.  Pure function of its arguments.
     pub fn duplicate_heavy(
         n_tasks: usize,
         n_distinct: usize,

@@ -202,7 +202,13 @@ fn newline(out: &mut String, indent: usize) {
     }
 }
 
-fn write_num(out: &mut String, n: f64) {
+/// Append one JSON number to `out` exactly as [`Json::to_string`] would
+/// (integral finite values < 1e15 print as integers, other finite values
+/// via shortest-roundtrip `{n}`, non-finite as `null`).  Exposed
+/// crate-internally so hot paths (the event-log jsonl writer) can emit
+/// byte-identical output into a reusable buffer without building a
+/// `Json` tree per record.
+pub(crate) fn write_num(out: &mut String, n: f64) {
     if n.is_finite() && n.fract() == 0.0 && n.abs() < 1e15 {
         out.push_str(&format!("{}", n as i64));
     } else if n.is_finite() {
@@ -212,7 +218,10 @@ fn write_num(out: &mut String, n: f64) {
     }
 }
 
-fn write_str(out: &mut String, s: &str) {
+/// Append one JSON string (quoted + escaped) to `out`, byte-identical to
+/// [`Json::to_string`]'s rendering.  Crate-internal companion of
+/// [`write_num`] for allocation-free writers.
+pub(crate) fn write_str(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {

@@ -74,6 +74,41 @@ impl ThreadPool {
     }
 }
 
+/// Map `f` over `items` on up to `n_workers` *scoped* threads, returning
+/// results in input order.  Unlike [`ThreadPool::map`] the items and the
+/// closure may borrow from the caller's stack (no `'static` bound): the
+/// workers are `std::thread::scope` threads that are joined before this
+/// function returns.  Items are split into contiguous chunks (one per
+/// worker), so the output order is the input order regardless of which
+/// worker finishes first — callers that need deterministic, sequential-
+/// equivalent results (the scheduler's sharded re-pricing gather) rely
+/// on exactly that.  Falls back to a plain sequential map for a single
+/// worker or a single item, so the degenerate configuration adds no
+/// thread overhead at all.
+pub fn scoped_map<T: Sync, R: Send>(
+    n_workers: usize,
+    items: &[T],
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R> {
+    let n = n_workers.max(1).min(items.len());
+    if n <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let chunk = (items.len() + n - 1) / n;
+    let f = &f;
+    let mut out: Vec<R> = Vec::with_capacity(items.len());
+    thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .map(|c| s.spawn(move || c.iter().map(f).collect::<Vec<R>>()))
+            .collect();
+        for h in handles {
+            out.extend(h.join().expect("scoped worker panicked"));
+        }
+    });
+    out
+}
+
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         self.tx.take(); // close the queue
@@ -114,5 +149,20 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.map(vec![1, 2, 3], |x: i32| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn scoped_map_preserves_order_and_borrows() {
+        // borrows a caller-stack slice and a caller-stack captured ref —
+        // neither is 'static, which ThreadPool::map cannot express
+        let base = vec![10usize; 64];
+        let items: Vec<usize> = (0..64).collect();
+        for workers in [1, 2, 3, 7, 64, 100] {
+            let out = scoped_map(workers, &items, |&i| base[i] + i);
+            assert_eq!(out, (0..64).map(|i| 10 + i).collect::<Vec<_>>(), "workers={workers}");
+        }
+        // empty and single-item inputs take the sequential path
+        assert!(scoped_map(4, &Vec::<usize>::new(), |&i| i).is_empty());
+        assert_eq!(scoped_map(4, &[7usize], |&i| i * 2), vec![14]);
     }
 }

@@ -22,6 +22,15 @@
 //!   blow-up), deterministically; the solver-level ≤-LPT guarantee and
 //!   the budget-exhausted LPT fallback live in
 //!   `rust/src/sched/solver.rs` unit tests.
+//! * **Sharded event-core equivalence** — splitting the completion
+//!   index by NVLink island group (`SchedTuning { shards: k }`) drains
+//!   bit-identical decisions, makespans and charges against the single
+//!   flat index across every trace family, policy and shard count,
+//!   with and without preemption; the parallel price-factor gather
+//!   engages (`parallel_reprice_batches > 0`) without perturbing a
+//!   single bit; and the full streaming engine replays the same digest
+//!   sharded, unsharded, and in digest-only (`retain_events: false`)
+//!   mode.
 
 use alto::cluster::gpu::GpuSpec;
 use alto::cluster::{PlacePolicy, SimCluster, Topology};
@@ -83,16 +92,17 @@ struct Drained {
 }
 
 /// Drive the scheduler through the interleaved arrival/completion event
-/// loop (the engine's discipline: completions win time ties) and drain
-/// every decision in order.
-fn drive(
+/// loop (the engine's discipline: completions win time ties), drain
+/// every decision in order, and hand back the scheduler for
+/// counter-level assertions.
+fn drive_sched(
     subs: &[Submission],
     gpus: usize,
     island: usize,
     policy: Policy,
     preempt: bool,
     tuning: SchedTuning,
-) -> Drained {
+) -> (Drained, InterTaskScheduler) {
     let topo = Topology::uniform(gpus, island);
     let cluster = SimCluster::with_topology(GpuSpec::h100_sxm5(), topo.clone());
     let mut s = InterTaskScheduler::with_cluster(cluster, policy);
@@ -138,7 +148,18 @@ fn drive(
     out.makespan = s.makespan();
     out.charged = s.charged_gpu_seconds();
     out.migration_charge = s.migration_charge;
-    out
+    (out, s)
+}
+
+fn drive(
+    subs: &[Submission],
+    gpus: usize,
+    island: usize,
+    policy: Policy,
+    preempt: bool,
+    tuning: SchedTuning,
+) -> Drained {
+    drive_sched(subs, gpus, island, policy, preempt, tuning).0
 }
 
 fn assert_equivalent(a: &Drained, b: &Drained, label: &str) {
@@ -408,4 +429,128 @@ fn deep_queue_optimal_completes_fast_and_reuses_cached_plans() {
         elapsed.as_secs() < 60,
         "deep-queue run took {elapsed:?}; the anytime path has regressed"
     );
+}
+
+/// Tuning that differs from the default *only* in the shard count, so
+/// the comparison isolates the sharded completion index.
+fn sharded(shards: usize) -> SchedTuning {
+    SchedTuning {
+        shards,
+        ..SchedTuning::default()
+    }
+}
+
+#[test]
+fn sharded_completion_index_matches_flat_index_across_trace_families() {
+    // 32 GPUs in 4-wide islands → 8 islands, so shard counts {2, 8}
+    // exercise both the merged-islands mapping and one-shard-per-island
+    let cases: Vec<(&str, Vec<Submission>, bool)> = vec![
+        (
+            "frag",
+            submissions_from(&Trace::fragmentation_heavy(20, 48, 3), 3),
+            false,
+        ),
+        (
+            "preempt",
+            submissions_from(&Trace::preemption_stress(4, 6, 64, 9), 9),
+            true,
+        ),
+        (
+            "uniform",
+            submissions_from(&Trace::uniform_large(60, 48, 1.0, 13), 13),
+            false,
+        ),
+        (
+            "coloc",
+            submissions_from(&Trace::colocatable(30, 6, 48, 1.0, 19), 19),
+            false,
+        ),
+    ];
+    for (label, subs, preempt) in &cases {
+        for policy in [Policy::Fcfs, Policy::Optimal] {
+            let flat = drive(subs, 32, 4, policy, *preempt, SchedTuning::default());
+            for shards in [2usize, 8, 64] {
+                let shd = drive(subs, 32, 4, policy, *preempt, sharded(shards));
+                assert_equivalent(
+                    &shd,
+                    &flat,
+                    &format!("{label} {policy:?} shards={shards}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_price_gather_engages_and_changes_no_bits() {
+    // saturated 1-GPU tenants keep the running set wide, so full
+    // reprices batch enough factor computations to cross the (forced)
+    // parallel threshold on every pass
+    let subs = submissions_from(&Trace::uniform_large(60, 48, 1.0, 13), 13);
+    for policy in [Policy::Lpt, Policy::Optimal] {
+        let flat = drive(&subs, 32, 4, policy, false, SchedTuning::default());
+        let tuning = SchedTuning {
+            shards: 8,
+            parallel_reprice_min: 1,
+            ..SchedTuning::default()
+        };
+        let (par, sched) = drive_sched(&subs, 32, 4, policy, false, tuning);
+        assert!(
+            sched.parallel_reprice_batches > 0,
+            "{policy:?}: the parallel gather never engaged — the bitwise check is vacuous"
+        );
+        assert_equivalent(&par, &flat, &format!("parallel gather {policy:?}"));
+    }
+}
+
+#[test]
+fn sharded_streaming_engine_replays_the_flat_digest() {
+    // whole-engine check: event loop + parallel body prefetch + sharded
+    // scheduler against the stock single-loop configuration
+    let trace = Trace::duplicate_heavy(60, 12, 48, 1.0, 42);
+    let base = HarnessConfig {
+        total_gpus: 32,
+        island_size: 4,
+        policy: Policy::Optimal,
+        place: PlacePolicy::IslandFirst,
+        ..HarnessConfig::default()
+    };
+    let flat = SimEngine::new(base.clone()).run_streaming(&trace).unwrap();
+    let shard_cfg = HarnessConfig {
+        tuning: SchedTuning {
+            shards: 8,
+            parallel_reprice_min: 1,
+            ..SchedTuning::default()
+        },
+        ..base.clone()
+    };
+    let shd = SimEngine::new(shard_cfg.clone()).run_streaming(&trace).unwrap();
+    assert_eq!(
+        shd.timeline.log.digest(),
+        flat.timeline.log.digest(),
+        "sharded streaming run drifted from the single-loop digest"
+    );
+    assert_eq!(shd.timeline.makespan.to_bits(), flat.timeline.makespan.to_bits());
+    assert_eq!(shd.timeline.gpu_seconds.to_bits(), flat.timeline.gpu_seconds.to_bits());
+    assert_eq!(shd.timeline.placements, flat.timeline.placements);
+    // the sharded engine pre-simulates every distinct body in parallel,
+    // so the lazy resolver serves each start from the memo
+    assert_eq!(shd.distinct_bodies, flat.distinct_bodies);
+
+    // digest-only retention folds the same timeline without holding it
+    let lean = SimEngine::new(HarnessConfig {
+        retain_events: false,
+        ..shard_cfg
+    })
+    .run_streaming(&trace)
+    .unwrap();
+    assert_eq!(
+        lean.timeline.log.digest(),
+        flat.timeline.log.digest(),
+        "digest-only mode drifted from the retained timeline"
+    );
+    assert_eq!(lean.timeline.log.len(), flat.timeline.log.len());
+    assert_eq!(lean.timeline.log.retained(), 0);
+    assert!(lean.timeline.log.events().is_empty());
+    assert!(flat.timeline.log.retained() > 0);
 }
