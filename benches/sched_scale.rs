@@ -45,7 +45,18 @@
 //! that is the tentpole claim — and tasks/sec for both modes plus the
 //! retained-event counts (the memory proxy) land under
 //! `scales["100000"]`.  On a multi-core runner the sharded mode must
-//! beat the single loop (ratio > 1, asserted outside quick mode).
+//! beat the single loop (ratio > 1, asserted outside quick mode), and
+//! once a maintainer commits an armed run the sharded-vs-flat ratio
+//! gates full runs exactly like the 1k speedup does.  A third 100k row
+//! drives the same workload through `run_source` over a lazy
+//! `StreamingTrace` and asserts its digest and fingerprint against the
+//! materialized runs.
+//!
+//! A fifth section is the 1M-task extreme: the source-driven loop only
+//! (the trace never exists as a `Vec`), digest-only retention, under a
+//! 600 s wall budget — skipped in quick mode and on small runners,
+//! recorded as null.  Every scale also samples `VmHWM` into
+//! `peak_rss_bytes` so the trajectory records memory, not just time.
 //!
 //! The pre-PR `Policy::Optimal` is *not* measured beyond 100 tasks: its
 //! unbudgeted exact replan is exponential on deep queues (that is the
@@ -64,7 +75,7 @@ use alto::perfmodel::StepTimeModel;
 use alto::sched::inter::{
     InterTaskScheduler, Policy, Pricing, SchedTuning, Submission, TaskShape,
 };
-use alto::simharness::{HarnessConfig, SimEngine, Trace};
+use alto::simharness::{HarnessConfig, SimEngine, StreamingTrace, Trace};
 use alto::util::json::Json;
 use alto::util::rng::Pcg32;
 
@@ -226,6 +237,22 @@ fn rate(n: usize, wall: f64) -> f64 {
     }
 }
 
+/// Peak resident set size in bytes (VmHWM from `/proc/self/status`).
+/// A process-wide high-water mark, so per-scale samples are
+/// nondecreasing down the run — the signal is the jump each scale
+/// adds, and above all that the 1M-task source-driven point does *not*
+/// add the ~O(n) a materialized trace would.  `None` off Linux.
+fn peak_rss_bytes() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: f64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024.0)
+}
+
+fn rss_json() -> Json {
+    peak_rss_bytes().map(Json::Num).unwrap_or(Json::Null)
+}
+
 fn main() {
     let quick = alto::bench::quick();
     let scales: &[usize] = &[100, 1_000, 5_000];
@@ -335,6 +362,7 @@ fn main() {
             cells.insert("reference_lpt_wall_s".to_string(), Json::Null);
             cells.insert("speedup_lpt".to_string(), Json::Null);
         }
+        cells.insert("peak_rss_bytes".to_string(), rss_json());
         scales_json.insert(n.to_string(), Json::Obj(cells));
     }
     table.print();
@@ -400,6 +428,7 @@ fn main() {
             "peak_retained_bodies_streaming".to_string(),
             Json::Num(stream.distinct_bodies as f64),
         );
+        cells.insert("peak_rss_bytes".to_string(), rss_json());
         streaming_json.insert(n.to_string(), Json::Obj(cells));
     }
     for &n in scales {
@@ -527,7 +556,7 @@ fn main() {
         ..flat_cfg
     };
     let t_shard = Instant::now();
-    let shard = SimEngine::new(shard_cfg)
+    let shard = SimEngine::new(shard_cfg.clone())
         .run_streaming(&big_trace)
         .expect("sharded 100k run");
     let shard_wall = t_shard.elapsed().as_secs_f64();
@@ -536,6 +565,28 @@ fn main() {
         flat.timeline.log.digest(),
         "sharded {big_n}-task replay drifted from the single-loop digest"
     );
+    // the lazy-source loop must land on the very same digest without
+    // the trace ever existing as a Vec — the at-scale half of the
+    // `run_source` contract (the property suite pins it per generator
+    // at small n)
+    let mut big_src = StreamingTrace::duplicate_heavy(big_n, 2_048, 48, 6.0, 42);
+    let t_src = Instant::now();
+    let src = SimEngine::new(shard_cfg.clone())
+        .run_source(&mut big_src)
+        .expect("source-driven run");
+    let src_wall = t_src.elapsed().as_secs_f64();
+    assert_eq!(
+        src.log.digest(),
+        flat.timeline.log.digest(),
+        "source-driven {big_n}-task replay drifted from the materialized digest"
+    );
+    assert_eq!(
+        src.fingerprint,
+        big_trace.fingerprint(),
+        "the lazy source drifted from the materialized trace"
+    );
+    assert_eq!(src.makespan.to_bits(), flat.timeline.makespan.to_bits());
+    assert_eq!(src.tasks, big_n);
     assert_eq!(
         shard.timeline.makespan.to_bits(),
         flat.timeline.makespan.to_bits()
@@ -567,6 +618,15 @@ fn main() {
         shard.timeline.log.retained().to_string(),
         shard.distinct_bodies.to_string(),
         shard.memo_hits.to_string(),
+    ]);
+    big_table.row(vec![
+        "source-driven".into(),
+        f(src_wall, 1),
+        f(rate(big_n, src_wall), 0),
+        src.log.len().to_string(),
+        src.log.retained().to_string(),
+        src.distinct_bodies.to_string(),
+        src.memo_hits.to_string(),
     ]);
     big_table.print();
     println!(
@@ -614,7 +674,78 @@ fn main() {
         "distinct_bodies".to_string(),
         Json::Num(shard.distinct_bodies as f64),
     );
+    big_cells.insert("source_wall_s".to_string(), Json::Num(src_wall));
+    big_cells.insert(
+        "source_tasks_per_s".to_string(),
+        Json::Num(rate(big_n, src_wall)),
+    );
+    big_cells.insert("peak_rss_bytes".to_string(), rss_json());
     scales_json.insert(big_n.to_string(), Json::Obj(big_cells));
+
+    // ---- the 1M-task extreme: source-driven, digest-only --------------
+    // The trace never exists: a lazy StreamingTrace feeds `run_source`
+    // (slab retirement + digest-only retention), so peak memory is
+    // O(live tasks + distinct bodies) while a million tenants stream
+    // through.  Mean interarrival 8.0 keeps offered load below 1 so the
+    // live window stays bounded — the regime the 1M mode exists for (a
+    // load-above-1 backlog grows with trace length and would hold O(n)
+    // waiting specs no matter how lazily they arrive).  Skipped in
+    // quick mode and on small runners, recorded as null rather than
+    // silently omitted.
+    let mut m_cells = std::collections::BTreeMap::new();
+    if !quick && cores >= 4 {
+        const M: usize = 1_000_000;
+        banner(&format!(
+            "1M-task source-driven stream: shards={n_islands}, digest-only"
+        ));
+        let mut m_src = StreamingTrace::duplicate_heavy(M, 2_048, 48, 8.0, 42);
+        let t_m = Instant::now();
+        let m = SimEngine::new(shard_cfg.clone())
+            .run_source(&mut m_src)
+            .expect("1M-task source run");
+        let m_wall = t_m.elapsed().as_secs_f64();
+        assert_eq!(m.tasks, M, "the source must deliver every entry");
+        assert_eq!(
+            m.log.retained(),
+            0,
+            "the 1M point must run digest-only"
+        );
+        assert!(
+            m_wall < 600.0,
+            "1M-task source run blew the 600 s wall budget ({m_wall:.1}s)"
+        );
+        println!(
+            "1M tasks in {m_wall:.1}s ({} tasks/s, {} events, \
+             digest {:016x}, fingerprint {:016x})",
+            f(rate(M, m_wall), 0),
+            m.log.len(),
+            m.log.digest(),
+            m.fingerprint,
+        );
+        m_cells.insert("source_wall_s".to_string(), Json::Num(m_wall));
+        m_cells.insert(
+            "source_tasks_per_s".to_string(),
+            Json::Num(rate(M, m_wall)),
+        );
+        m_cells.insert("events".to_string(), Json::Num(m.log.len() as f64));
+        m_cells.insert("makespan_s".to_string(), Json::Num(m.makespan));
+        m_cells.insert(
+            "distinct_bodies".to_string(),
+            Json::Num(m.distinct_bodies as f64),
+        );
+        m_cells.insert(
+            "digest".to_string(),
+            Json::Str(format!("{:016x}", m.log.digest())),
+        );
+        m_cells.insert(
+            "fingerprint".to_string(),
+            Json::Str(format!("{:016x}", m.fingerprint)),
+        );
+        m_cells.insert("peak_rss_bytes".to_string(), rss_json());
+    } else {
+        m_cells.insert("source_wall_s".to_string(), Json::Null);
+    }
+    scales_json.insert("1000000".to_string(), Json::Obj(m_cells));
 
     let speedup_1k = match (new_1k_wall, ref_1k_wall) {
         (Some(new), Some(reference)) => reference / new.max(1e-12),
@@ -663,6 +794,38 @@ fn main() {
             }
             _ => println!("gate: no armed speedup baseline — arming this run's numbers"),
         }
+        // the 100k sharded-vs-flat ratio gates the same way once armed:
+        // a sharding regression collapses this run's in-process ratio on
+        // any machine, while runner speed cancels out.  Quick runs
+        // measure 10k tasks, so only full runs consult the gate.
+        if !quick {
+            let shard_baseline = prior
+                .get("scales")
+                .and_then(|s| s.get("100000"))
+                .and_then(|s| s.get("sharded_speedup"))
+                .and_then(|j| j.as_f64())
+                .filter(|v| v.is_finite() && *v > 0.0);
+            match (armed, shard_baseline) {
+                (true, Some(baseline)) if shard_ratio.is_finite() => {
+                    if shard_ratio < baseline / GATE_FACTOR {
+                        eprintln!(
+                            "REGRESSION: 100k sharded-vs-flat speedup fell to \
+                             {shard_ratio:.2}× vs the armed baseline {baseline:.2}× \
+                             (more than {GATE_FACTOR}× worse)"
+                        );
+                        gate_failed = true;
+                    } else {
+                        println!(
+                            "gate: 100k sharded speedup {shard_ratio:.2}× within \
+                             {GATE_FACTOR}× of the armed baseline {baseline:.2}×"
+                        );
+                    }
+                }
+                _ => println!(
+                    "gate: no armed 100k sharded baseline — arming this run's numbers"
+                ),
+            }
+        }
     }
 
     let out = Json::obj(vec![
@@ -683,9 +846,15 @@ fn main() {
                  run_streaming wall time and peak retained outcomes on a \
                  duplicate-heavy trace (digest-equality asserted in-process). \
                  scales['100000'] is the sharded event-loop point: single loop \
-                 vs shards-by-island + digest-only retention, bit-identical \
-                 digests asserted in-process, tasks/sec + retained-event \
-                 counts persisted"
+                 vs shards-by-island + digest-only retention vs the lazy \
+                 source-driven loop, bit-identical digests asserted in-process, \
+                 tasks/sec + retained-event counts persisted; its armed \
+                 sharded_speedup ratio gates full runs like the 1k ratio does. \
+                 scales['1000000'] is the source-driven extreme: the trace is \
+                 never materialized, the log is digest-only, and the run must \
+                 fit a 600 s wall budget (null in quick mode / small runners). \
+                 peak_rss_bytes is VmHWM sampled after each scale — a \
+                 process-wide high-water mark, so read the per-scale jumps"
                     .into(),
             ),
         ),

@@ -6,10 +6,15 @@
 //! (DESIGN.md §3); the *simulated* H100 experiments additionally use the
 //! paper's original model sizes, which are pure arithmetic here.
 
+use crate::util::intern::Istr;
+
 /// Shape of a TinyLlama-family backbone (or a simulated big model).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelShape {
-    pub name: String,
+    /// Interned family name: cloning a shape (or lifting its name into
+    /// a shared-executor group key) is a reference-count bump, never a
+    /// text copy — the scheduler does this per start/adopt decision.
+    pub name: Istr,
     pub d_model: usize,
     pub n_layers: usize,
     pub n_heads: usize,
@@ -27,7 +32,7 @@ impl ModelShape {
         vocab: usize,
     ) -> ModelShape {
         ModelShape {
-            name: name.to_string(),
+            name: name.into(),
             d_model,
             n_layers,
             n_heads,

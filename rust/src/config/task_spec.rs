@@ -1,6 +1,7 @@
 //! Task specification — what a tenant submits to the service
 //! (paper Listing 1: base model, dataset, search space, GPU count).
 
+use crate::util::intern::Istr;
 use crate::util::json::Json;
 
 use super::search::SearchSpace;
@@ -36,8 +37,12 @@ impl Objective {
 #[derive(Debug, Clone, PartialEq)]
 pub struct TaskSpec {
     pub name: String,
-    pub model: String,
-    pub dataset: String,
+    /// Model-family identity, interned: a 1M-task trace over a small
+    /// family shares one allocation per distinct name, and cloning the
+    /// spec (or keying a map on the family) never copies the text.
+    pub model: Istr,
+    /// Dataset identity, interned like [`TaskSpec::model`].
+    pub dataset: Istr,
     pub objective: Objective,
     pub search_space: SearchSpace,
     pub epochs: usize,
@@ -65,8 +70,8 @@ impl TaskSpec {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::Str(self.name.clone())),
-            ("model", Json::Str(self.model.clone())),
-            ("dataset", Json::Str(self.dataset.clone())),
+            ("model", Json::Str(self.model.to_string())),
+            ("dataset", Json::Str(self.dataset.to_string())),
             ("objective", Json::Str(self.objective.as_str().into())),
             ("search_space", self.search_space.to_json()),
             ("epochs", Json::Num(self.epochs as f64)),
@@ -90,8 +95,8 @@ impl TaskSpec {
         };
         Ok(TaskSpec {
             name: s("name")?,
-            model: s("model")?,
-            dataset: s("dataset")?,
+            model: s("model")?.into(),
+            dataset: s("dataset")?.into(),
             objective: Objective::parse(
                 j.get("objective").and_then(|v| v.as_str()).unwrap_or("sft"),
             )?,

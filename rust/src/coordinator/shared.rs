@@ -27,8 +27,10 @@
 //! event history.
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
 
 use crate::cluster::Placement;
+use crate::util::intern::Istr;
 
 /// Switches for cross-task adapter co-location.  Disabled by default:
 /// every digest and decision stream is bit-identical to the pre-sharing
@@ -79,12 +81,16 @@ impl SharingConfig {
 pub struct ExecGroup {
     pub id: usize,
     /// Model-family identity ([`crate::config::ModelShape`] name); only
-    /// same-family tasks may share the backbone.
-    pub family: String,
+    /// same-family tasks may share the backbone.  Interned, so founding
+    /// a group never copies the name text.
+    pub family: Istr,
     /// GPU width of the placement (every member's width — adoption
     /// requires an exact match, since the roster shares the allocation).
     pub gpus: usize,
-    pub placement: Placement,
+    /// Shared with every member's `LiveTask` and with the decisions the
+    /// scheduler drains — one allocation per placement, not one per
+    /// clone site.
+    pub placement: Arc<Placement>,
     /// Current roster (task ids).
     pub members: BTreeSet<usize>,
     /// When the group acquired its GPUs — occupancy is charged
@@ -122,9 +128,9 @@ impl SharedGroupSet {
     /// Found a singleton group owning `placement`; returns its id.
     pub fn found(
         &mut self,
-        family: String,
+        family: Istr,
         gpus: usize,
-        placement: Placement,
+        placement: Arc<Placement>,
         task: usize,
         now: f64,
     ) -> usize {
@@ -177,7 +183,7 @@ impl SharedGroupSet {
 
     /// Dissolve `gid`: fold its occupancy into the ledger and drop it.
     /// Returns the placement it held.
-    pub fn finalize(&mut self, gid: usize, now: f64) -> Placement {
+    pub fn finalize(&mut self, gid: usize, now: f64) -> Arc<Placement> {
         let g = self.groups.remove(&gid).expect("finalizing a live group");
         self.gpu_seconds += g.gpus as f64 * (now - g.acquired_at);
         g.placement
@@ -216,8 +222,8 @@ impl SharedGroupSet {
 mod tests {
     use super::*;
 
-    fn p(gpus: &[usize]) -> Placement {
-        Placement::new(gpus.to_vec())
+    fn p(gpus: &[usize]) -> Arc<Placement> {
+        Arc::new(Placement::new(gpus.to_vec()))
     }
 
     #[test]

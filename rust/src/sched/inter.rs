@@ -119,6 +119,7 @@
 //! pre-sharing scheduler.
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -327,11 +328,14 @@ struct LiveTask {
     segment_at: f64,
     first_started_at: Option<f64>,
     finished_at: Option<f64>,
-    /// Concrete GPUs held while running.
-    placement: Option<Placement>,
+    /// Concrete GPUs held while running.  Shared (`Arc`) with the
+    /// decision logs, the owning shared-executor group and the drained
+    /// events — allocating a placement once per start instead of
+    /// cloning its index vector at every bookkeeping site.
+    placement: Option<Arc<Placement>>,
     /// GPUs held before the last preemption — lets the driver tell a
     /// same-GPU resume from a migration.
-    last_placement: Option<Placement>,
+    last_placement: Option<Arc<Placement>>,
     preemptions: usize,
     /// Pricing inputs (None ⇒ factor 1.0, no migration charge).
     shape: Option<TaskShape>,
@@ -370,15 +374,18 @@ impl LiveTask {
 /// Dense id-indexed task storage.  The harness assigns trace ids
 /// consecutively, so a slot vector replaces the previous
 /// `BTreeMap<usize, LiveTask>`: O(1) access with no tree walk on the
-/// per-event hot path, and ascending-id iteration for free.  Tasks are
-/// **never removed** — completed tasks stay live for the accounting
-/// queries (`makespan`, `charged_gpu_seconds`, `span`) — so slots need
-/// no generation counters; `complete_next` drops the heavy per-task
-/// pricing `shape` instead, keeping retained state O(live tasks) where
-/// it matters on 100k-task traces.
+/// per-event hot path, and ascending-id iteration for free.  By default
+/// tasks are never removed — completed tasks stay live for the
+/// accounting queries (`makespan`, `charged_gpu_seconds`, `span`) — so
+/// slots need no generation counters; `complete_next` drops the heavy
+/// per-task pricing `shape` instead.  Payloads are boxed so an empty or
+/// retired slot costs one pointer, not `size_of::<LiveTask>()`: with
+/// [`InterTaskScheduler::retire_completed`] on, a finished task's slot
+/// is freed outright and a 1M-task trace retains O(live tasks) payload
+/// plus one pointer per id ever seen.
 #[derive(Debug, Default)]
 struct TaskSlab {
-    slots: Vec<Option<LiveTask>>,
+    slots: Vec<Option<Box<LiveTask>>>,
 }
 
 impl TaskSlab {
@@ -409,16 +416,24 @@ impl TaskSlab {
         if id >= self.slots.len() {
             self.slots.resize_with(id + 1, || None);
         }
-        self.slots[id] = Some(t);
+        self.slots[id] = Some(Box::new(t));
         Ok(())
     }
 
+    /// Free a slot entirely (the retirement path), returning its task.
+    /// A retired id can no longer be distinguished from a never-seen
+    /// one, so `check_id` would admit it again — callers only retire
+    /// when ids come from a monotone trace counter.
+    fn remove(&mut self, id: usize) -> Option<LiveTask> {
+        self.slots.get_mut(id)?.take().map(|b| *b)
+    }
+
     fn get(&self, id: usize) -> Option<&LiveTask> {
-        self.slots.get(id)?.as_ref()
+        self.slots.get(id)?.as_deref()
     }
 
     fn get_mut(&mut self, id: usize) -> Option<&mut LiveTask> {
-        self.slots.get_mut(id)?.as_mut()
+        self.slots.get_mut(id)?.as_deref_mut()
     }
 
     /// `get` for ids every caller invariant says must exist: a miss is
@@ -439,15 +454,15 @@ impl TaskSlab {
         self.slots
             .iter()
             .enumerate()
-            .filter_map(|(id, s)| s.as_ref().map(|t| (id, t)))
+            .filter_map(|(id, s)| s.as_deref().map(|t| (id, t)))
     }
 
     fn values(&self) -> impl Iterator<Item = &LiveTask> {
-        self.slots.iter().filter_map(|s| s.as_ref())
+        self.slots.iter().filter_map(|s| s.as_deref())
     }
 
     fn values_mut(&mut self) -> impl Iterator<Item = &mut LiveTask> {
-        self.slots.iter_mut().filter_map(|s| s.as_mut())
+        self.slots.iter_mut().filter_map(|s| s.as_deref_mut())
     }
 }
 
@@ -462,15 +477,18 @@ pub struct RepriceDecision {
 }
 
 /// One start decision: the task, when, and the concrete GPUs it got.
+/// Placements are shared handles (`Arc`): the same allocation backs the
+/// live task, its group and this decision — comparisons still compare
+/// contents.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StartDecision {
     pub id: usize,
     pub time: f64,
-    pub placement: Placement,
+    pub placement: Arc<Placement>,
     /// `Some(gpus held before preemption)` when this start resumes a
     /// previously preempted task — equal to `placement` for a same-GPU
     /// resume, different for a migration.
-    pub resumed_from: Option<Placement>,
+    pub resumed_from: Option<Arc<Placement>>,
 }
 
 /// One preemption decision: the task evicted and the GPUs it released.
@@ -478,7 +496,7 @@ pub struct StartDecision {
 pub struct PreemptDecision {
     pub id: usize,
     pub time: f64,
-    pub placement: Placement,
+    pub placement: Arc<Placement>,
 }
 
 /// One adoption decision: a waiting task joined a shared executor
@@ -488,7 +506,7 @@ pub struct AdoptDecision {
     pub id: usize,
     pub time: f64,
     /// The adopting group's placement (now also this task's).
-    pub placement: Placement,
+    pub placement: Arc<Placement>,
 }
 
 /// One merge decision: a shrunken group's survivor moved into a peer
@@ -497,8 +515,8 @@ pub struct AdoptDecision {
 pub struct MergeDecision {
     pub id: usize,
     pub time: f64,
-    pub from: Placement,
-    pub to: Placement,
+    pub from: Arc<Placement>,
+    pub to: Arc<Placement>,
 }
 
 /// Cached deep-queue priority order: reused verbatim (filtered to the
@@ -519,6 +537,17 @@ pub struct InterTaskScheduler {
     /// Allow higher-priority arrivals to evict the youngest
     /// strictly-lower-priority running tasks when they cannot fit.
     pub enable_preemption: bool,
+    /// Free each completed task's table slot instead of keeping it for
+    /// the per-task accounting queries (`span`, `charged_runtime`,
+    /// `preemptions_of` return `None`/0 for retired ids).  `makespan`
+    /// and `charged_gpu_seconds` stay exact — retired contributions
+    /// fold into accumulators at completion.  Off by default: only the
+    /// streaming-source harness path opts in, where it caps retained
+    /// scheduler state at O(live tasks) on a 1M-task trace.  Callers
+    /// must assign ids from a monotone counter: a retired slot is
+    /// indistinguishable from a never-used one, so resubmitting a
+    /// retired id would be admitted rather than rejected.
+    pub retire_completed: bool,
     /// Hot-path switches (incremental re-pricing, deep-queue planning).
     pub tuning: SchedTuning,
     cluster: SimCluster,
@@ -586,6 +615,12 @@ pub struct InterTaskScheduler {
     /// Head solves that ran out of node budget and fell back to the
     /// LPT-seeded incumbent.
     pub solver_exhausted: usize,
+    /// Max `finished_at` over retired tasks (see `retire_completed`);
+    /// folded into `makespan`.
+    retired_makespan: f64,
+    /// Σ gpus × charged runtime over retired tasks that never ran in a
+    /// shared group; folded into `charged_gpu_seconds`.
+    retired_charged: f64,
     /// Replans whose dirty-runner batch cleared
     /// [`SchedTuning::parallel_reprice_min`] and gathered price factors
     /// on scoped worker threads (lets the property suite assert the
@@ -606,6 +641,7 @@ impl InterTaskScheduler {
             policy,
             place: PlacePolicy::IslandFirst,
             enable_preemption: false,
+            retire_completed: false,
             tuning: SchedTuning::default(),
             cluster,
             pricer: None,
@@ -634,6 +670,8 @@ impl InterTaskScheduler {
             deep_plans: 0,
             deep_solves: 0,
             solver_exhausted: 0,
+            retired_makespan: 0.0,
+            retired_charged: 0.0,
             parallel_reprice_batches: 0,
         }
     }
@@ -681,7 +719,7 @@ impl InterTaskScheduler {
 
     /// Concrete GPUs currently held by a running task.
     pub fn placement_of(&self, id: usize) -> Option<&Placement> {
-        self.tasks.get(id)?.placement.as_ref()
+        self.tasks.get(id)?.placement.as_deref()
     }
 
     /// Times a task was preempted so far.
@@ -743,6 +781,37 @@ impl InterTaskScheduler {
     /// panicking events later.  `actual_duration: NAN` stays valid when
     /// a body resolver is installed (the streaming sentinel).
     pub fn submit_spec(&mut self, s: Submission) -> Result<()> {
+        self.admit(s)?;
+        self.replan(true) // arrival: preemption (if enabled) may fire
+    }
+
+    /// Admit every submission of one same-timestamp batch, then replan
+    /// **once** — the coalesced-arrival fast path.  A 1M-task trace with
+    /// bursty arrivals replans per distinct timestamp instead of per
+    /// task.  A singleton batch is exactly [`Self::submit_spec`]; when
+    /// every submission in the trace carries a distinct arrival time
+    /// (which every stock generator guarantees), the engine only ever
+    /// forms singleton batches and the event stream is bit-identical to
+    /// the one-replan-per-arrival path.
+    ///
+    /// On a malformed submission the error is returned immediately:
+    /// earlier batch entries stay admitted (state remains consistent)
+    /// but the batch replan has not run — callers treat any error as
+    /// fatal to the run, matching `submit_spec`.
+    pub fn submit_batch(&mut self, batch: Vec<Submission>) -> Result<()> {
+        if batch.is_empty() {
+            return Ok(());
+        }
+        for s in batch {
+            self.admit(s)?;
+        }
+        self.replan(true) // arrival: preemption (if enabled) may fire
+    }
+
+    /// Validate and enqueue one submission without replanning — the
+    /// shared admission step behind [`Self::submit_spec`] and
+    /// [`Self::submit_batch`].
+    fn admit(&mut self, s: Submission) -> Result<()> {
         anyhow::ensure!(
             s.gpus >= 1 && s.gpus <= self.cluster.total(),
             "task {}: requested {} GPUs on a {}-GPU cluster",
@@ -802,7 +871,7 @@ impl InterTaskScheduler {
             },
         )?;
         self.queued.insert(s.id);
-        self.replan(true) // arrival: preemption (if enabled) may fire
+        Ok(())
     }
 
     /// Current virtual time (last processed event).
@@ -885,7 +954,11 @@ impl InterTaskScheduler {
             .iter()
             .map(|(_, g)| g.gpus as f64 * (self.clock - g.acquired_at))
             .sum();
-        solo + self.groups.gpu_seconds + live
+        // `retired_charged` is 0.0 unless `retire_completed` moved
+        // finished solo tasks out of the table; adding it keeps the
+        // default-path sum bitwise unchanged (x + 0.0 ≡ x here: solo
+        // is a sum of non-negative products, never -0.0)
+        solo + self.retired_charged + self.groups.gpu_seconds + live
     }
 
     // --- island resident index ------------------------------------------
@@ -1188,12 +1261,15 @@ impl InterTaskScheduler {
         }
         let gpus = t.gpus;
         let resumed_from = t.last_placement.take();
-        let p = self
-            .cluster
-            .allocate_with(gpus, policy)
-            .with_context(|| {
-                format!("task {id}: replan checked capacity, but the cluster could not seat {gpus} GPUs")
-            })?;
+        // one allocation per start: the Arc is shared by the live task,
+        // the decision log and (with sharing on) the executor group
+        let p = Arc::new(
+            self.cluster
+                .allocate_with(gpus, policy)
+                .with_context(|| {
+                    format!("task {id}: replan checked capacity, but the cluster could not seat {gpus} GPUs")
+                })?,
+        );
         self.queued.remove(&id);
         let t = self.tasks.req_mut(id)?;
         t.placement = Some(p.clone());
@@ -1241,7 +1317,7 @@ impl InterTaskScheduler {
         // singleton) plus a one-off checkpoint transfer when this
         // resume moved GPUs
         let factor = self.price_factor(id) * self.group_stretch_of(id);
-        let charge = self.migration_charge_of(id, resumed_from.as_ref(), &p);
+        let charge = self.migration_charge_of(id, resumed_from.as_deref(), &p);
         self.migration_charge += charge;
         let t = self.tasks.req_mut(id)?;
         t.run_factor = factor;
@@ -1842,7 +1918,7 @@ impl InterTaskScheduler {
             self.residents_remove(m, &old_p);
             self.tasks.req_mut(m)?.placement = Some(new_p.clone());
             self.residents_add(m, &new_p);
-            let charge = self.migration_charge_of(m, Some(&old_p), &new_p);
+            let charge = self.migration_charge_of(m, Some(&*old_p), &new_p);
             self.migration_charge += charge;
             let factor = self.price_factor(m) * self.group_stretch_of(m);
             let t = self.tasks.req_mut(m)?;
@@ -1915,10 +1991,12 @@ impl InterTaskScheduler {
         t.finished_at = Some(when);
         t.charged_runtime += when - t.segment_at;
         t.actual_remaining = 0.0;
-        // drop the heavy pricing shape: completed tasks only serve
-        // accounting queries, so a long trace's retained state stays
-        // O(live tasks), not O(everything ever submitted)
+        // drop the heavy pricing shape (and any resume placement):
+        // completed tasks only serve accounting queries, so a long
+        // trace's retained state stays O(live tasks), not
+        // O(everything ever submitted)
         t.shape = None;
+        t.last_placement = None;
         let p = t
             .placement
             .take()
@@ -1944,6 +2022,17 @@ impl InterTaskScheduler {
             self.residents_remove(id, &p);
             self.mark_dirty(&p);
         }
+        if self.retire_completed {
+            // group-charged tasks bill through the group ledger; only
+            // solo runtime folds into the retired accumulator
+            let solo = !self.groups.ever_member(id);
+            if let Some(t) = self.tasks.remove(id) {
+                self.retired_makespan = self.retired_makespan.max(when);
+                if solo {
+                    self.retired_charged += t.gpus as f64 * t.charged_runtime;
+                }
+            }
+        }
         self.replan(false)?; // completion event → backfill instantly
         Ok(Some((id, when)))
     }
@@ -1967,9 +2056,13 @@ impl InterTaskScheduler {
         self.tasks
             .values()
             .filter_map(|t| t.finished_at)
-            .fold(0.0, f64::max)
+            .fold(self.retired_makespan, f64::max)
     }
 
+    /// Every task still in the table has finished.  With
+    /// `retire_completed` on, finished tasks leave the table at
+    /// completion, so this reads "no unfinished task remains" — the
+    /// same truth value, since unfinished tasks are never retired.
     pub fn all_done(&self) -> bool {
         self.tasks.values().all(|t| t.finished_at.is_some())
     }
@@ -2110,7 +2203,7 @@ impl PriceView<'_> {
             return 1.0;
         }
         let Some(shape) = &t.shape else { return 1.0 };
-        let placement = if pr.charge.comm { t.placement.as_ref() } else { None };
+        let placement = if pr.charge.comm { t.placement.as_deref() } else { None };
         let ctx = if pr.charge.contention {
             self.contention_of(id)
         } else {

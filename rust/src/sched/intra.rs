@@ -273,7 +273,9 @@ pub struct ForeignCandidate {
     pub task: usize,
     /// Model-family identity ([`crate::config::ModelShape`] name); an
     /// executor only seats adapters of its own frozen backbone.
-    pub family: String,
+    /// Interned — building a candidate per waiting task per replan
+    /// never copies the name text.
+    pub family: crate::util::intern::Istr,
     pub hp: HyperParams,
 }
 

@@ -81,10 +81,10 @@
 //! placement-blind timeline bit for bit — the ablation baseline the
 //! placement-policy isolation tests use.
 //!
-//! ## Batch vs streaming bodies
+//! ## Batch vs streaming vs source-driven bodies
 //!
 //! Task *bodies* (the intra-task search each tenant runs) reach the
-//! cluster timeline two ways:
+//! cluster timeline three ways:
 //!
 //! * **Batch** — [`SimEngine::run`]: every body simulated eagerly in
 //!   trace order (`simulate_trace`), then the timeline replays over the
@@ -96,16 +96,31 @@
 //!   duplicate specs, retaining lean [`TaskSummary`]s instead of full
 //!   outcomes.  With [`HarnessConfig::log_body_events`] set, body-level
 //!   `Segment`/`JobExit` markers fold into the log at start time.
+//! * **Source-driven** — [`SimEngine::run_source`]: the streaming loop
+//!   fed by a lazy [`trace::TraceSource`] (entries generated on demand
+//!   from the generator RNG, never a materialized `Vec`), with
+//!   completed tasks retired from the scheduler's slab and only a
+//!   flattened [`SourceReport`] retained.  Peak memory is O(live tasks
+//!   + distinct bodies), independent of trace length — the 1M-task
+//!   mode.
 //!
-//! **Invariant:** with `log_body_events` off, both paths produce the
+//! On all three paths, arrivals sharing one exact (bit-equal) timestamp
+//! are admitted as a **coalesced batch** behind a single replan: a
+//! large t = 0 wave costs one plan instead of N.  Traces whose arrival
+//! times are pairwise distinct — every generator's output — are
+//! unaffected bit for bit; shared-timestamp traces log the batch's
+//! Arrivals before any Start and replan once per batch.
+//!
+//! **Invariant:** with `log_body_events` off, all paths produce the
 //! *bit-identical* timeline — same `digest()`, makespan bits,
-//! placements and charged GPU-seconds — because both consume the same
+//! placements and charged GPU-seconds — because all consume the same
 //! segment machinery and the scheduler resolves lazy durations before
-//! deriving any completion.  `rust/tests/simharness_e2e.rs` pins this
-//! across the fragmentation / preemption / uniform / duplicate trace
-//! generators and seeds.
+//! deriving any completion.  `rust/tests/simharness_e2e.rs` pins
+//! batch == streaming across the fragmentation / preemption / uniform /
+//! duplicate trace generators and seeds;
+//! `rust/tests/sched_scale_props.rs` pins streaming == source-driven.
 //!
-//! ## The 100k-task scale mode
+//! ## The 100k / 1M-task scale mode
 //!
 //! Two orthogonal switches take the streaming path to 100k-task
 //! traces without moving one bit of the digest:
@@ -124,9 +139,19 @@
 //!   `last_time()` stay exact while retained state stays O(live
 //!   tasks).
 //!
-//! `rust/tests/sched_scale_props.rs` pins the equivalence;
-//! `benches/sched_scale.rs` measures the 100k point.  See
-//! `docs/ARCHITECTURE.md` "Sharded event loop".
+//! At 1M tasks even the *inputs* are too big to hold, so the
+//! source-driven path adds the remaining three pieces: lazy trace
+//! generation ([`trace::StreamingTrace`] streams the same RNG the
+//! materializing generators use, bit-identically), slab retirement
+//! (completed tasks leave the scheduler, folding their accounting into
+//! running accumulators), and spec interning
+//! ([`crate::util::intern::Istr`] model/dataset names, `Arc`-shared
+//! placements) so what *is* live stays small.
+//!
+//! `rust/tests/sched_scale_props.rs` pins the equivalences;
+//! `benches/sched_scale.rs` measures the 100k and 1M points (and
+//! records peak RSS per scale).  See `docs/ARCHITECTURE.md` "Sharded
+//! event loop" and "The 1M-task mode".
 //!
 //! ### Determinism guarantees
 //!
@@ -167,7 +192,11 @@
 //! stressor) — plus the [`trace::hetero_mix`] / [`trace::frag_mix`]
 //! task-mix builders are pure functions of their seed, so
 //! `(generator args, seed)` fully determines a run;
-//! `Trace::fingerprint()` checks it cheaply.
+//! `Trace::fingerprint()` checks it cheaply.  The same generators are
+//! exposed lazily through [`trace::TraceSource`] /
+//! [`trace::StreamingTrace`] (entry streams with a running
+//! fingerprint, bit-identical to the materialized vectors) and any
+//! held `Trace` can be streamed via [`trace::TraceCursor`].
 
 pub mod engine;
 pub mod event;
@@ -176,9 +205,11 @@ pub mod trace;
 pub use crate::cluster::{PlacePolicy, Placement, Topology};
 pub use crate::sched::inter::Pricing;
 pub use engine::{
-    BodyMark, HarnessConfig, HarnessReport, SimEngine, StreamReport, TaskSummary, Timeline,
+    BodyMark, HarnessConfig, HarnessReport, SimEngine, SourceReport, StreamReport, TaskSummary,
+    Timeline,
 };
 pub use event::{Event, EventKind, EventLog};
 pub use trace::{
-    colocatable_mix, duplicate_mix, frag_mix, hetero_mix, uniform_mix, Trace, TraceEntry,
+    colocatable_mix, duplicate_mix, frag_mix, hetero_mix, uniform_mix, StreamingTrace, Trace,
+    TraceCursor, TraceEntry, TraceSource,
 };

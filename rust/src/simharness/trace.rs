@@ -7,6 +7,16 @@
 //! service regime), all pure functions of their seed, so a trace can be
 //! regenerated bit-identically from `(generator args, seed)` alone and
 //! checked cheaply via `fingerprint()`.
+//!
+//! At 1M-task scale a materialized `Vec<TaskSpec>` is itself the memory
+//! bottleneck, so every generator is written as a lazy iterator first
+//! and the `Vec` builders are `.collect()` wrappers over it.  A
+//! [`TraceSource`] yields the *same* entry sequence one arrival at a
+//! time — [`StreamingTrace`] drives the generator iterators directly
+//! (peak memory O(1) per entry plus the duplicate pools), while
+//! [`TraceCursor`] adapts an already-materialized [`Trace`].  Both fold
+//! the identical per-entry [`Trace::fingerprint`] hash as they go, so a
+//! drained source proves it yielded exactly the trace it claims.
 
 use crate::config::{SearchSpace, TaskSpec};
 use crate::util::hash::{fnv1a_mix, fnv1a_mix_bytes, FNV_OFFSET};
@@ -23,6 +33,31 @@ pub struct TraceEntry {
 #[derive(Debug, Clone, Default)]
 pub struct Trace {
     pub entries: Vec<TraceEntry>,
+}
+
+/// Fold one entry into the trace fingerprint — the single definition
+/// shared by [`Trace::fingerprint`] and every [`TraceSource`], so a
+/// streamed trace and its materialized twin can never hash differently.
+fn fold_entry(h: &mut u64, e: &TraceEntry) {
+    fnv1a_mix(h, e.arrival.to_bits());
+    fnv1a_mix_bytes(h, e.spec.name.as_bytes());
+    fnv1a_mix_bytes(h, e.spec.model.as_bytes());
+    fnv1a_mix_bytes(h, e.spec.dataset.as_bytes());
+    fnv1a_mix(h, e.spec.num_gpus as u64);
+    fnv1a_mix(h, e.spec.seq_len as u64);
+    fnv1a_mix(h, e.spec.epochs as u64);
+    fnv1a_mix(h, e.spec.train_samples as u64);
+    fnv1a_mix(h, e.spec.seed);
+    fnv1a_mix(h, e.spec.priority as u64);
+    for &lr in &e.spec.search_space.lrs {
+        fnv1a_mix(h, lr.to_bits());
+    }
+    for &r in &e.spec.search_space.ranks {
+        fnv1a_mix(h, r as u64);
+    }
+    for &b in &e.spec.search_space.batch_sizes {
+        fnv1a_mix(h, b as u64);
+    }
 }
 
 impl Trace {
@@ -52,33 +87,18 @@ impl Trace {
     /// Poisson arrivals: exponential inter-arrival gaps with the given
     /// mean, applied to the specs in order.
     pub fn poisson(specs: Vec<TaskSpec>, mean_interarrival: f64, seed: u64) -> Trace {
-        let mut rng = Pcg32::new(seed, 0x7eace);
-        let mut t = 0.0;
-        let entries = specs
-            .into_iter()
-            .map(|spec| {
-                t += -mean_interarrival * (1.0 - rng.f64()).ln();
-                TraceEntry { arrival: t, spec }
-            })
-            .collect();
-        Trace { entries }
+        Trace {
+            entries: poisson_arrivals(specs.into_iter(), mean_interarrival, seed).collect(),
+        }
     }
 
     /// Bursty arrivals: groups of `burst` tasks land together, bursts
     /// separated by `gap · U[0.5, 1.5)` quiet periods — the on/off tenant
     /// pattern that stresses replanning hardest.
     pub fn bursty(specs: Vec<TaskSpec>, burst: usize, gap: f64, seed: u64) -> Trace {
-        let burst = burst.max(1);
-        let mut rng = Pcg32::new(seed, 0xb0257);
-        let mut t = 0.0;
-        let mut entries = Vec::with_capacity(specs.len());
-        for (i, spec) in specs.into_iter().enumerate() {
-            if i > 0 && i % burst == 0 {
-                t += gap * rng.uniform(0.5, 1.5);
-            }
-            entries.push(TraceEntry { arrival: t, spec });
+        Trace {
+            entries: bursty_arrivals(specs.into_iter(), burst, gap, seed).collect(),
         }
-        Trace { entries }
     }
 
     pub fn len(&self) -> usize {
@@ -100,35 +120,99 @@ impl Trace {
     pub fn fingerprint(&self) -> u64 {
         let mut h = FNV_OFFSET;
         for e in &self.entries {
-            fnv1a_mix(&mut h, e.arrival.to_bits());
-            fnv1a_mix_bytes(&mut h, e.spec.name.as_bytes());
-            fnv1a_mix_bytes(&mut h, e.spec.model.as_bytes());
-            fnv1a_mix_bytes(&mut h, e.spec.dataset.as_bytes());
-            fnv1a_mix(&mut h, e.spec.num_gpus as u64);
-            fnv1a_mix(&mut h, e.spec.seq_len as u64);
-            fnv1a_mix(&mut h, e.spec.epochs as u64);
-            fnv1a_mix(&mut h, e.spec.train_samples as u64);
-            fnv1a_mix(&mut h, e.spec.seed);
-            fnv1a_mix(&mut h, e.spec.priority as u64);
-            for &lr in &e.spec.search_space.lrs {
-                fnv1a_mix(&mut h, lr.to_bits());
-            }
-            for &r in &e.spec.search_space.ranks {
-                fnv1a_mix(&mut h, r as u64);
-            }
-            for &b in &e.spec.search_space.batch_sizes {
-                fnv1a_mix(&mut h, b as u64);
-            }
+            fold_entry(&mut h, e);
         }
         h
     }
+
+    /// Stream this (already materialized) trace as a [`TraceSource`] —
+    /// lets one engine entry point serve both the in-memory and the
+    /// generator-streamed paths.
+    pub fn source(&self) -> TraceCursor<'_> {
+        TraceCursor {
+            trace: self,
+            next: 0,
+            fp: FNV_OFFSET,
+        }
+    }
 }
+
+// --- arrival appliers ---------------------------------------------------
+//
+// Each applier stamps arrival times onto a spec stream lazily.  The RNG
+// streams are the same ones the materialized constructors always drew
+// from (separate constants per pattern), and specs and arrivals come
+// from *independent* Pcg32 streams, so interleaving the draws lazily
+// (spec i, then its gap) yields bit-identical values to drawing all
+// specs first and all gaps second.
+
+/// Exponential inter-arrival gaps with the given mean (`Trace::poisson`).
+fn poisson_arrivals<I>(
+    specs: I,
+    mean_interarrival: f64,
+    seed: u64,
+) -> impl Iterator<Item = TraceEntry>
+where
+    I: Iterator<Item = TaskSpec>,
+{
+    let mut rng = Pcg32::new(seed, 0x7eace);
+    let mut t = 0.0;
+    specs.map(move |spec| {
+        t += -mean_interarrival * (1.0 - rng.f64()).ln();
+        TraceEntry { arrival: t, spec }
+    })
+}
+
+/// Bursts of `burst` tasks separated by `gap · U[0.5, 1.5)` quiet
+/// periods (`Trace::bursty`).
+fn bursty_arrivals<I>(specs: I, burst: usize, gap: f64, seed: u64) -> impl Iterator<Item = TraceEntry>
+where
+    I: Iterator<Item = TaskSpec>,
+{
+    let burst = burst.max(1);
+    let mut rng = Pcg32::new(seed, 0xb0257);
+    let mut t = 0.0;
+    specs.enumerate().map(move |(i, spec)| {
+        if i > 0 && i % burst == 0 {
+            t += gap * rng.uniform(0.5, 1.5);
+        }
+        TraceEntry { arrival: t, spec }
+    })
+}
+
+/// Short gaps for narrow tasks, long gaps for wide ones
+/// (`Trace::fragmentation_heavy`).
+fn frag_arrivals<I>(specs: I, seed: u64) -> impl Iterator<Item = TraceEntry>
+where
+    I: Iterator<Item = TaskSpec>,
+{
+    let mut rng = Pcg32::new(seed, 0xf7a10);
+    let mut t = 0.0;
+    specs.map(move |spec| {
+        t += if spec.num_gpus > 1 {
+            rng.uniform(300.0, 900.0)
+        } else {
+            rng.uniform(20.0, 150.0)
+        };
+        TraceEntry { arrival: t, spec }
+    })
+}
+
+// --- spec generators ----------------------------------------------------
 
 /// The paper's heterogeneous tenant mix (§8.2): cycles 70B/4-GPU,
 /// 32B/2-GPU, 8B/1-GPU and 7B/1-GPU tasks with jittered training-set
 /// sizes, each carrying a compact 12-point search space so whole-cluster
 /// sweeps stay fast.  Pure function of (n_tasks, train_samples, seed).
 pub fn hetero_mix(n_tasks: usize, train_samples: usize, seed: u64) -> Vec<TaskSpec> {
+    hetero_mix_iter(n_tasks, train_samples, seed).collect()
+}
+
+fn hetero_mix_iter(
+    n_tasks: usize,
+    train_samples: usize,
+    seed: u64,
+) -> impl Iterator<Item = TaskSpec> {
     const SHAPES: [(&str, &str, usize); 4] = [
         ("70b", "llama-70b", 4),
         ("32b", "qwen-32b", 2),
@@ -136,27 +220,25 @@ pub fn hetero_mix(n_tasks: usize, train_samples: usize, seed: u64) -> Vec<TaskSp
         ("7b", "qwen-7b", 1),
     ];
     let mut rng = Pcg32::new(seed, 0x4e7e0);
-    (0..n_tasks)
-        .map(|i| {
-            let (tag, model, gpus) = SHAPES[i % SHAPES.len()];
-            let samples = (train_samples as f64 * rng.uniform(0.5, 1.5)) as usize;
-            TaskSpec {
-                name: format!("{tag}-{i}"),
-                model: model.into(),
-                dataset: (if i % 5 == 4 { "pref-syn" } else { "gsm-syn" }).into(),
-                num_gpus: gpus,
-                search_space: SearchSpace {
-                    lrs: vec![5e-5, 2e-4, 5e-4],
-                    ranks: vec![16, 64],
-                    batch_sizes: vec![2, 4],
-                },
-                seq_len: 512,
-                train_samples: samples.max(16),
-                seed: seed.wrapping_add(i as u64 * 101),
-                ..TaskSpec::default()
-            }
-        })
-        .collect()
+    (0..n_tasks).map(move |i| {
+        let (tag, model, gpus) = SHAPES[i % SHAPES.len()];
+        let samples = (train_samples as f64 * rng.uniform(0.5, 1.5)) as usize;
+        TaskSpec {
+            name: format!("{tag}-{i}"),
+            model: model.into(),
+            dataset: (if i % 5 == 4 { "pref-syn" } else { "gsm-syn" }).into(),
+            num_gpus: gpus,
+            search_space: SearchSpace {
+                lrs: vec![5e-5, 2e-4, 5e-4],
+                ranks: vec![16, 64],
+                batch_sizes: vec![2, 4],
+            },
+            seq_len: 512,
+            train_samples: samples.max(16),
+            seed: seed.wrapping_add(i as u64 * 101),
+            ..TaskSpec::default()
+        }
+    })
 }
 
 /// Uniform large-scale tenant mix — the first slice of the "scale the
@@ -166,27 +248,33 @@ pub fn hetero_mix(n_tasks: usize, train_samples: usize, seed: u64) -> Vec<TaskSp
 /// queue depth and replan throughput at the cluster layer.  Pure
 /// function of (n_tasks, train_samples, seed).
 pub fn uniform_mix(n_tasks: usize, train_samples: usize, seed: u64) -> Vec<TaskSpec> {
+    uniform_mix_iter(n_tasks, train_samples, seed).collect()
+}
+
+fn uniform_mix_iter(
+    n_tasks: usize,
+    train_samples: usize,
+    seed: u64,
+) -> impl Iterator<Item = TaskSpec> {
     let mut rng = Pcg32::new(seed, 0x0411f);
-    (0..n_tasks)
-        .map(|i| {
-            let samples = (train_samples as f64 * rng.uniform(0.6, 1.4)) as usize;
-            TaskSpec {
-                name: format!("uni-{i}"),
-                model: "llama-8b".into(),
-                dataset: "gsm-syn".into(),
-                num_gpus: 1,
-                search_space: SearchSpace {
-                    lrs: vec![5e-5, 2e-4],
-                    ranks: vec![16],
-                    batch_sizes: vec![2, 4],
-                },
-                seq_len: 256,
-                train_samples: samples.max(16),
-                seed: seed.wrapping_add(i as u64 * 61),
-                ..TaskSpec::default()
-            }
-        })
-        .collect()
+    (0..n_tasks).map(move |i| {
+        let samples = (train_samples as f64 * rng.uniform(0.6, 1.4)) as usize;
+        TaskSpec {
+            name: format!("uni-{i}"),
+            model: "llama-8b".into(),
+            dataset: "gsm-syn".into(),
+            num_gpus: 1,
+            search_space: SearchSpace {
+                lrs: vec![5e-5, 2e-4],
+                ranks: vec![16],
+                batch_sizes: vec![2, 4],
+            },
+            seq_len: 256,
+            train_samples: samples.max(16),
+            seed: seed.wrapping_add(i as u64 * 61),
+            ..TaskSpec::default()
+        }
+    })
 }
 
 /// A workload built to shred the allocation bitmap (the scenario where
@@ -197,35 +285,41 @@ pub fn uniform_mix(n_tasks: usize, train_samples: usize, seed: u64) -> Vec<TaskS
 /// island-aware policies do not.  Sized for a 16-GPU / two-island
 /// cluster.  Pure function of (n_tasks, train_samples, seed).
 pub fn frag_mix(n_tasks: usize, train_samples: usize, seed: u64) -> Vec<TaskSpec> {
+    frag_mix_iter(n_tasks, train_samples, seed).collect()
+}
+
+fn frag_mix_iter(
+    n_tasks: usize,
+    train_samples: usize,
+    seed: u64,
+) -> impl Iterator<Item = TaskSpec> {
     let mut rng = Pcg32::new(seed, 0xf7a9);
-    (0..n_tasks)
-        .map(|i| {
-            let wide = i % 4 == 3;
-            let (tag, model, gpus) = if wide {
-                ("wide", "qwen-32b", 4)
-            } else {
-                ("narrow", "llama-8b", 1)
-            };
-            // 0.3–1.7× size jitter → completion times scatter, so the
-            // free bitmap is a different shape at every wide arrival
-            let samples = (train_samples as f64 * rng.uniform(0.3, 1.7)) as usize;
-            TaskSpec {
-                name: format!("{tag}-{i}"),
-                model: model.into(),
-                dataset: "gsm-syn".into(),
-                num_gpus: gpus,
-                search_space: SearchSpace {
-                    lrs: vec![5e-5, 2e-4, 5e-4],
-                    ranks: vec![16, 64],
-                    batch_sizes: vec![2, 4],
-                },
-                seq_len: 512,
-                train_samples: samples.max(16),
-                seed: seed.wrapping_add(i as u64 * 131),
-                ..TaskSpec::default()
-            }
-        })
-        .collect()
+    (0..n_tasks).map(move |i| {
+        let wide = i % 4 == 3;
+        let (tag, model, gpus) = if wide {
+            ("wide", "qwen-32b", 4)
+        } else {
+            ("narrow", "llama-8b", 1)
+        };
+        // 0.3–1.7× size jitter → completion times scatter, so the
+        // free bitmap is a different shape at every wide arrival
+        let samples = (train_samples as f64 * rng.uniform(0.3, 1.7)) as usize;
+        TaskSpec {
+            name: format!("{tag}-{i}"),
+            model: model.into(),
+            dataset: "gsm-syn".into(),
+            num_gpus: gpus,
+            search_space: SearchSpace {
+                lrs: vec![5e-5, 2e-4, 5e-4],
+                ranks: vec![16, 64],
+                batch_sizes: vec![2, 4],
+            },
+            seq_len: 512,
+            train_samples: samples.max(16),
+            seed: seed.wrapping_add(i as u64 * 131),
+            ..TaskSpec::default()
+        }
+    })
 }
 
 /// Duplicate-heavy tenant stream: a pool of `n_distinct` body
@@ -238,6 +332,18 @@ pub fn frag_mix(n_tasks: usize, train_samples: usize, seed: u64) -> Vec<TaskSpec
 /// every eighth distinct config a 2-GPU 32B task so pricing and
 /// contention stay exercised.  Pure function of its arguments.
 pub fn duplicate_mix(n_tasks: usize, n_distinct: usize, train_samples: usize, seed: u64) -> Vec<TaskSpec> {
+    duplicate_mix_iter(n_tasks, n_distinct, train_samples, seed).collect()
+}
+
+/// Lazy twin of [`duplicate_mix`]: the O(`n_distinct`) pool is built
+/// eagerly (the RNG stream demands it), the O(`n_tasks`) arrival clones
+/// are stamped on demand.
+fn duplicate_mix_iter(
+    n_tasks: usize,
+    n_distinct: usize,
+    train_samples: usize,
+    seed: u64,
+) -> impl Iterator<Item = TaskSpec> {
     let n_distinct = n_distinct.max(1);
     let mut rng = Pcg32::new(seed, 0xd0b1e);
     let pool: Vec<TaskSpec> = (0..n_distinct)
@@ -262,13 +368,11 @@ pub fn duplicate_mix(n_tasks: usize, n_distinct: usize, train_samples: usize, se
             }
         })
         .collect();
-    (0..n_tasks)
-        .map(|i| {
-            let mut spec = pool[i % n_distinct].clone();
-            spec.name = format!("dup-{i}");
-            spec
-        })
-        .collect()
+    (0..n_tasks).map(move |i| {
+        let mut spec = pool[i % n_distinct].clone();
+        spec.name = format!("dup-{i}");
+        spec
+    })
 }
 
 /// Co-locatable tenant stream: every task is a 1-GPU sweep over the
@@ -285,6 +389,15 @@ pub fn colocatable_mix(
     train_samples: usize,
     seed: u64,
 ) -> Vec<TaskSpec> {
+    colocatable_mix_iter(n_tasks, n_distinct, train_samples, seed).collect()
+}
+
+fn colocatable_mix_iter(
+    n_tasks: usize,
+    n_distinct: usize,
+    train_samples: usize,
+    seed: u64,
+) -> impl Iterator<Item = TaskSpec> {
     let n_distinct = n_distinct.max(1);
     let mut rng = Pcg32::new(seed, 0xc010c);
     let pool: Vec<TaskSpec> = (0..n_distinct)
@@ -307,13 +420,71 @@ pub fn colocatable_mix(
             }
         })
         .collect();
-    (0..n_tasks)
-        .map(|i| {
-            let mut spec = pool[i % n_distinct].clone();
-            spec.name = format!("colo-{i}");
-            spec
-        })
-        .collect()
+    (0..n_tasks).map(move |i| {
+        let mut spec = pool[i % n_distinct].clone();
+        spec.name = format!("colo-{i}");
+        spec
+    })
+}
+
+/// Lazy twin of [`Trace::preemption_stress`]: the t = 0 wave followed by
+/// the urgent stream.  Emission order is construction order, which is
+/// already nondecreasing in arrival time (0.0s, then a strictly
+/// increasing t > 0), so the materialized constructor's stable sort is
+/// the identity and both paths yield the same sequence.
+fn preemption_stress_iter(
+    n_wide: usize,
+    n_urgent: usize,
+    train_samples: usize,
+    seed: u64,
+) -> impl Iterator<Item = TraceEntry> {
+    let wave = (0..n_wide).map(move |i| TraceEntry {
+        arrival: 0.0,
+        spec: TaskSpec {
+            name: format!("bulk-{i}"),
+            model: "qwen-32b".into(),
+            dataset: "gsm-syn".into(),
+            num_gpus: 4,
+            search_space: SearchSpace {
+                lrs: vec![5e-5, 2e-4, 5e-4],
+                ranks: vec![16, 64],
+                batch_sizes: vec![2, 4],
+            },
+            seq_len: 512,
+            // 4× the urgent tasks' size: the wave outlasts every
+            // urgent arrival below
+            train_samples: (train_samples * 4).max(64),
+            seed: seed.wrapping_add(i as u64 * 17),
+            priority: 0,
+            ..TaskSpec::default()
+        },
+    });
+    let mut rng = Pcg32::new(seed, 0x94ee47);
+    let mut t = 0.0;
+    let urgent = (0..n_urgent).map(move |i| {
+        // seconds after the wave: far inside any wide task's run
+        t += rng.uniform(0.5, 3.0);
+        TraceEntry {
+            arrival: t,
+            spec: TaskSpec {
+                name: format!("urgent-{i}"),
+                model: "llama-8b".into(),
+                dataset: "gsm-syn".into(),
+                num_gpus: 1 + (i % 2),
+                search_space: SearchSpace {
+                    lrs: vec![5e-5, 2e-4],
+                    ranks: vec![16],
+                    batch_sizes: vec![2, 4],
+                },
+                seq_len: 256,
+                train_samples: train_samples.max(16),
+                seed: seed.wrapping_add(1000 + i as u64 * 23),
+                priority: 1 + (i % 2) as i64,
+                ..TaskSpec::default()
+            },
+        }
+    });
+    wave.chain(urgent)
 }
 
 impl Trace {
@@ -378,21 +549,9 @@ impl Trace {
     /// by which time completions have punched scattered holes in the
     /// bitmap.  Pure function of its arguments.
     pub fn fragmentation_heavy(n_tasks: usize, train_samples: usize, seed: u64) -> Trace {
-        let specs = frag_mix(n_tasks, train_samples, seed);
-        let mut rng = Pcg32::new(seed, 0xf7a10);
-        let mut t = 0.0;
-        let entries = specs
-            .into_iter()
-            .map(|spec| {
-                t += if spec.num_gpus > 1 {
-                    rng.uniform(300.0, 900.0)
-                } else {
-                    rng.uniform(20.0, 150.0)
-                };
-                TraceEntry { arrival: t, spec }
-            })
-            .collect();
-        Trace { entries }
+        Trace {
+            entries: frag_arrivals(frag_mix_iter(n_tasks, train_samples, seed), seed).collect(),
+        }
     }
 
     /// Preemption-stress workload: a t = 0 wave of wide, long,
@@ -408,56 +567,199 @@ impl Trace {
         train_samples: usize,
         seed: u64,
     ) -> Trace {
-        let mut rng = Pcg32::new(seed, 0x94ee47);
-        let mut entries: Vec<TraceEntry> = Vec::with_capacity(n_wide + n_urgent);
-        for i in 0..n_wide {
-            entries.push(TraceEntry {
-                arrival: 0.0,
-                spec: TaskSpec {
-                    name: format!("bulk-{i}"),
-                    model: "qwen-32b".into(),
-                    dataset: "gsm-syn".into(),
-                    num_gpus: 4,
-                    search_space: SearchSpace {
-                        lrs: vec![5e-5, 2e-4, 5e-4],
-                        ranks: vec![16, 64],
-                        batch_sizes: vec![2, 4],
-                    },
-                    seq_len: 512,
-                    // 4× the urgent tasks' size: the wave outlasts every
-                    // urgent arrival below
-                    train_samples: (train_samples * 4).max(64),
-                    seed: seed.wrapping_add(i as u64 * 17),
-                    priority: 0,
-                    ..TaskSpec::default()
-                },
-            });
+        Trace {
+            entries: preemption_stress_iter(n_wide, n_urgent, train_samples, seed).collect(),
         }
-        let mut t = 0.0;
-        for i in 0..n_urgent {
-            // seconds after the wave: far inside any wide task's run
-            t += rng.uniform(0.5, 3.0);
-            entries.push(TraceEntry {
-                arrival: t,
-                spec: TaskSpec {
-                    name: format!("urgent-{i}"),
-                    model: "llama-8b".into(),
-                    dataset: "gsm-syn".into(),
-                    num_gpus: 1 + (i % 2),
-                    search_space: SearchSpace {
-                        lrs: vec![5e-5, 2e-4],
-                        ranks: vec![16],
-                        batch_sizes: vec![2, 4],
-                    },
-                    seq_len: 256,
-                    train_samples: train_samples.max(16),
-                    seed: seed.wrapping_add(1000 + i as u64 * 23),
-                    priority: 1 + (i % 2) as i64,
-                    ..TaskSpec::default()
-                },
-            });
+    }
+}
+
+// --- streaming sources --------------------------------------------------
+
+/// A trace delivered one arrival at a time, in nondecreasing arrival
+/// order — what the engine's streaming entry point pulls from so a
+/// 1M-task workload never exists as a materialized `Vec` anywhere.
+///
+/// Contract: `next_entry` yields exactly `len()` entries over the
+/// source's lifetime, in the same order the equivalent materialized
+/// [`Trace`] would hold them, and `fingerprint_so_far` after draining
+/// equals that trace's [`Trace::fingerprint`].
+pub trait TraceSource {
+    /// Total entries this source yields over its lifetime (not the
+    /// number remaining).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The next arrival, or `None` once drained.
+    fn next_entry(&mut self) -> Option<TraceEntry>;
+
+    /// Fingerprint over the entries yielded so far — after draining,
+    /// bit-equal to the materialized trace's [`Trace::fingerprint`].
+    fn fingerprint_so_far(&self) -> u64;
+}
+
+/// A [`TraceSource`] over a lazy generator iterator: the named
+/// constructors mirror [`Trace`]'s (same arguments, same RNG streams,
+/// same seed transforms), so `StreamingTrace::duplicate_heavy(args…)`
+/// yields bit-identically the entries of
+/// `Trace::duplicate_heavy(args…)` without ever materializing them.
+pub struct StreamingTrace {
+    it: Box<dyn Iterator<Item = TraceEntry>>,
+    total: usize,
+    yielded: usize,
+    fp: u64,
+}
+
+impl std::fmt::Debug for StreamingTrace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StreamingTrace")
+            .field("total", &self.total)
+            .field("yielded", &self.yielded)
+            .field("fingerprint_so_far", &self.fp)
+            .finish_non_exhaustive()
+    }
+}
+
+impl StreamingTrace {
+    /// Wrap any entry iterator (the escape hatch for custom workloads);
+    /// `total` must be the number of entries `it` will yield, and the
+    /// entries must come in nondecreasing arrival order.
+    pub fn new<I>(it: I, total: usize) -> StreamingTrace
+    where
+        I: Iterator<Item = TraceEntry> + 'static,
+    {
+        StreamingTrace {
+            it: Box::new(it),
+            total,
+            yielded: 0,
+            fp: FNV_OFFSET,
         }
-        Trace::with_arrivals(entries.into_iter().map(|e| (e.arrival, e.spec)).collect())
+    }
+
+    /// Entries yielded so far.
+    pub fn yielded(&self) -> usize {
+        self.yielded
+    }
+
+    /// Streaming twin of [`Trace::uniform_large`].
+    pub fn uniform_large(
+        n_tasks: usize,
+        train_samples: usize,
+        mean_interarrival: f64,
+        seed: u64,
+    ) -> StreamingTrace {
+        StreamingTrace::new(
+            poisson_arrivals(
+                uniform_mix_iter(n_tasks, train_samples, seed),
+                mean_interarrival,
+                seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1),
+            ),
+            n_tasks,
+        )
+    }
+
+    /// Streaming twin of [`Trace::duplicate_heavy`].
+    pub fn duplicate_heavy(
+        n_tasks: usize,
+        n_distinct: usize,
+        train_samples: usize,
+        mean_interarrival: f64,
+        seed: u64,
+    ) -> StreamingTrace {
+        StreamingTrace::new(
+            poisson_arrivals(
+                duplicate_mix_iter(n_tasks, n_distinct, train_samples, seed),
+                mean_interarrival,
+                seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(7),
+            ),
+            n_tasks,
+        )
+    }
+
+    /// Streaming twin of [`Trace::colocatable`].
+    pub fn colocatable(
+        n_tasks: usize,
+        n_distinct: usize,
+        train_samples: usize,
+        mean_interarrival: f64,
+        seed: u64,
+    ) -> StreamingTrace {
+        StreamingTrace::new(
+            poisson_arrivals(
+                colocatable_mix_iter(n_tasks, n_distinct, train_samples, seed),
+                mean_interarrival,
+                seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(13),
+            ),
+            n_tasks,
+        )
+    }
+
+    /// Streaming twin of [`Trace::fragmentation_heavy`].
+    pub fn fragmentation_heavy(n_tasks: usize, train_samples: usize, seed: u64) -> StreamingTrace {
+        StreamingTrace::new(
+            frag_arrivals(frag_mix_iter(n_tasks, train_samples, seed), seed),
+            n_tasks,
+        )
+    }
+
+    /// Streaming twin of [`Trace::preemption_stress`].
+    pub fn preemption_stress(
+        n_wide: usize,
+        n_urgent: usize,
+        train_samples: usize,
+        seed: u64,
+    ) -> StreamingTrace {
+        StreamingTrace::new(
+            preemption_stress_iter(n_wide, n_urgent, train_samples, seed),
+            n_wide + n_urgent,
+        )
+    }
+}
+
+impl TraceSource for StreamingTrace {
+    fn len(&self) -> usize {
+        self.total
+    }
+
+    fn next_entry(&mut self) -> Option<TraceEntry> {
+        let e = self.it.next()?;
+        self.yielded += 1;
+        fold_entry(&mut self.fp, &e);
+        Some(e)
+    }
+
+    fn fingerprint_so_far(&self) -> u64 {
+        self.fp
+    }
+}
+
+/// A [`TraceSource`] over a materialized [`Trace`] (see
+/// [`Trace::source`]): clones entries on demand, so the engine's
+/// source-driven loop can replay an in-memory trace through the exact
+/// code path the generator-streamed one uses.
+#[derive(Debug)]
+pub struct TraceCursor<'a> {
+    trace: &'a Trace,
+    next: usize,
+    fp: u64,
+}
+
+impl TraceSource for TraceCursor<'_> {
+    fn len(&self) -> usize {
+        self.trace.len()
+    }
+
+    fn next_entry(&mut self) -> Option<TraceEntry> {
+        let e = self.trace.entries.get(self.next)?.clone();
+        self.next += 1;
+        fold_entry(&mut self.fp, &e);
+        Some(e)
+    }
+
+    fn fingerprint_so_far(&self) -> u64 {
+        self.fp
     }
 }
 
@@ -657,5 +959,83 @@ mod tests {
         names.sort_unstable();
         names.dedup();
         assert_eq!(names.len(), 8);
+    }
+
+    /// Drain a source and check it yielded exactly `want`'s entries
+    /// (same order, same arrival bits, same specs) and folded the same
+    /// fingerprint.
+    fn assert_streams_exactly(mut src: impl TraceSource, want: &Trace) {
+        assert_eq!(src.len(), want.len());
+        for (i, expect) in want.entries.iter().enumerate() {
+            let got = src.next_entry().unwrap_or_else(|| {
+                panic!("source dried up at entry {i} of {}", want.len())
+            });
+            assert_eq!(got.arrival.to_bits(), expect.arrival.to_bits(), "entry {i}");
+            assert_eq!(got.spec, expect.spec, "entry {i}");
+        }
+        assert!(src.next_entry().is_none());
+        assert_eq!(src.fingerprint_so_far(), want.fingerprint());
+    }
+
+    #[test]
+    fn streaming_uniform_large_matches_materialized() {
+        assert_streams_exactly(
+            StreamingTrace::uniform_large(60, 48, 40.0, 3),
+            &Trace::uniform_large(60, 48, 40.0, 3),
+        );
+    }
+
+    #[test]
+    fn streaming_duplicate_heavy_matches_materialized() {
+        assert_streams_exactly(
+            StreamingTrace::duplicate_heavy(50, 8, 48, 30.0, 5),
+            &Trace::duplicate_heavy(50, 8, 48, 30.0, 5),
+        );
+    }
+
+    #[test]
+    fn streaming_colocatable_matches_materialized() {
+        assert_streams_exactly(
+            StreamingTrace::colocatable(40, 6, 48, 20.0, 7),
+            &Trace::colocatable(40, 6, 48, 20.0, 7),
+        );
+    }
+
+    #[test]
+    fn streaming_fragmentation_heavy_matches_materialized() {
+        assert_streams_exactly(
+            StreamingTrace::fragmentation_heavy(32, 64, 5),
+            &Trace::fragmentation_heavy(32, 64, 5),
+        );
+    }
+
+    #[test]
+    fn streaming_preemption_stress_matches_materialized() {
+        assert_streams_exactly(
+            StreamingTrace::preemption_stress(4, 9, 48, 9),
+            &Trace::preemption_stress(4, 9, 48, 9),
+        );
+    }
+
+    #[test]
+    fn trace_cursor_streams_its_trace() {
+        let t = Trace::poisson(hetero_mix(12, 64, 3), 50.0, 9);
+        assert_streams_exactly(t.source(), &t);
+    }
+
+    #[test]
+    fn streaming_trace_tracks_yielded_count() {
+        let mut s = StreamingTrace::uniform_large(10, 48, 40.0, 3);
+        assert_eq!(s.yielded(), 0);
+        assert!(!s.is_empty());
+        s.next_entry().unwrap();
+        s.next_entry().unwrap();
+        assert_eq!(s.yielded(), 2);
+        while s.next_entry().is_some() {}
+        assert_eq!(s.yielded(), 10);
+        // drained: the fingerprint is now stable
+        let fp = s.fingerprint_so_far();
+        assert!(s.next_entry().is_none());
+        assert_eq!(s.fingerprint_so_far(), fp);
     }
 }

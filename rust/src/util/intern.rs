@@ -1,0 +1,216 @@
+//! Interned strings for family identities (model and dataset names).
+//!
+//! The simulator threads model-family names through every layer: trace
+//! generators stamp them into [`crate::config::TaskSpec`]s, the
+//! scheduler keys shared-executor groups and adoption scans on them,
+//! and the profiler folds them into cache keys.  With plain `String`s
+//! a 1M-task trace carries a million heap copies of the same few
+//! names, and every replan clones more of them.  [`Istr`] is the fix:
+//! an `Arc<str>` deduplicated through a global pool, so a trace over a
+//! 2k-name family holds 2k allocations total and cloning a family key
+//! on the scheduler hot path is a reference-count bump.
+//!
+//! **Determinism:** `Eq`/`Ord`/`Hash` are *content*-based — never
+//! pointer identity, which would vary run to run — so interned keys
+//! compare and sort exactly like the `String`s they replaced and every
+//! `BTreeMap`/`BTreeSet` iteration order downstream is unchanged.
+//! Pointer equality is only a private fast path taken when two handles
+//! share one pool entry.
+//!
+//! The pool is append-only for the process lifetime (family vocabularies
+//! are tiny and fixed); the lock is only touched at construction, never
+//! on clone or compare.
+
+use std::borrow::Borrow;
+use std::collections::BTreeSet;
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::ops::Deref;
+use std::sync::{Arc, Mutex, OnceLock};
+
+fn pool() -> &'static Mutex<BTreeSet<Arc<str>>> {
+    static POOL: OnceLock<Mutex<BTreeSet<Arc<str>>>> = OnceLock::new();
+    POOL.get_or_init(|| Mutex::new(BTreeSet::new()))
+}
+
+/// Intern `s`, returning the canonical shared handle for its contents.
+///
+/// ```
+/// use alto::util::intern::{intern, Istr};
+/// let a: Istr = "llama-8b".into();
+/// let b = intern("llama-8b");
+/// assert_eq!(a, b);
+/// assert_eq!(a, "llama-8b");
+/// assert!(intern("llama-8b") < intern("qwen-7b")); // content order
+/// ```
+pub fn intern(s: &str) -> Istr {
+    let mut pool = pool().lock().expect("intern pool poisoned");
+    if let Some(hit) = pool.get(s) {
+        return Istr(Arc::clone(hit));
+    }
+    let arc: Arc<str> = Arc::from(s);
+    pool.insert(Arc::clone(&arc));
+    Istr(arc)
+}
+
+/// An interned, cheaply-cloneable string (see the module docs).
+///
+/// Derefs to `str`, so call sites that held a `String` keep working:
+/// `&spec.model` coerces to `&str`, `==` against `&str` compares
+/// contents, and `format!` prints the text.
+#[derive(Clone)]
+pub struct Istr(Arc<str>);
+
+impl Istr {
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl Deref for Istr {
+    type Target = str;
+
+    fn deref(&self) -> &str {
+        &self.0
+    }
+}
+
+impl AsRef<str> for Istr {
+    fn as_ref(&self) -> &str {
+        &self.0
+    }
+}
+
+impl Borrow<str> for Istr {
+    fn borrow(&self) -> &str {
+        &self.0
+    }
+}
+
+impl fmt::Debug for Istr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&*self.0, f)
+    }
+}
+
+impl fmt::Display for Istr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&*self.0, f)
+    }
+}
+
+impl PartialEq for Istr {
+    fn eq(&self, other: &Istr) -> bool {
+        // pointer check is a fast path only; content equality is the
+        // contract (handles from before/after a pool miss still match)
+        Arc::ptr_eq(&self.0, &other.0) || self.0 == other.0
+    }
+}
+
+impl Eq for Istr {}
+
+impl PartialEq<str> for Istr {
+    fn eq(&self, other: &str) -> bool {
+        &*self.0 == other
+    }
+}
+
+impl PartialEq<&str> for Istr {
+    fn eq(&self, other: &&str) -> bool {
+        &*self.0 == *other
+    }
+}
+
+impl PartialEq<Istr> for str {
+    fn eq(&self, other: &Istr) -> bool {
+        self == &*other.0
+    }
+}
+
+impl PartialEq<Istr> for &str {
+    fn eq(&self, other: &Istr) -> bool {
+        *self == &*other.0
+    }
+}
+
+impl Ord for Istr {
+    fn cmp(&self, other: &Istr) -> std::cmp::Ordering {
+        str::cmp(&self.0, &other.0)
+    }
+}
+
+impl PartialOrd for Istr {
+    fn partial_cmp(&self, other: &Istr) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Hash for Istr {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        // must equal `str`'s hash for the `Borrow<str>` lookup contract
+        (*self.0).hash(state);
+    }
+}
+
+impl From<&str> for Istr {
+    fn from(s: &str) -> Istr {
+        intern(s)
+    }
+}
+
+impl From<String> for Istr {
+    fn from(s: String) -> Istr {
+        intern(&s)
+    }
+}
+
+impl From<&Istr> for Istr {
+    fn from(s: &Istr) -> Istr {
+        s.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn interning_dedupes_to_one_allocation() {
+        let a = intern("dedupe-probe");
+        let b = intern("dedupe-probe");
+        assert!(Arc::ptr_eq(&a.0, &b.0), "same contents must share one pool entry");
+        let c = a.clone();
+        assert!(Arc::ptr_eq(&a.0, &c.0));
+    }
+
+    #[test]
+    fn equality_and_order_are_content_based() {
+        let a = intern("llama-8b");
+        let b: Istr = String::from("llama-8b").into();
+        assert_eq!(a, b);
+        assert_eq!(a, "llama-8b");
+        assert_eq!("llama-8b", a);
+        assert_ne!(a, "qwen-7b");
+        let mut v = vec![intern("b"), intern("a"), intern("c")];
+        v.sort();
+        assert_eq!(v, vec![intern("a"), intern("b"), intern("c")]);
+    }
+
+    #[test]
+    fn borrow_contract_allows_str_keyed_lookup() {
+        let mut m: BTreeMap<Istr, usize> = BTreeMap::new();
+        m.insert(intern("gsm-syn"), 1);
+        assert_eq!(m.get("gsm-syn"), Some(&1));
+        assert_eq!(m.get("pref-syn"), None);
+    }
+
+    #[test]
+    fn deref_and_display_behave_like_str() {
+        let a = intern("nano");
+        assert_eq!(a.len(), 4);
+        assert_eq!(a.as_str(), "nano");
+        assert_eq!(format!("{a}"), "nano");
+        assert_eq!(format!("{a:?}"), "\"nano\"");
+    }
+}

@@ -4,8 +4,11 @@
 
 pub mod cli;
 pub mod hash;
+pub mod intern;
 pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod small;
 pub mod threadpool;
+#[cfg(feature = "trace-alloc")]
+pub mod trace_alloc;

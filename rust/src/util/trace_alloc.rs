@@ -1,0 +1,52 @@
+//! Allocation counter behind `--features trace-alloc`: a thin wrapper
+//! over the system allocator that counts every `alloc`/`realloc` call,
+//! so tests can assert the event loop's steady state stays
+//! allocation-lean (the PR-4 "allocation-free pricing" claim and the
+//! interning / `Arc<Placement>` sharing this crate relies on at 100k–1M
+//! task scale).
+//!
+//! Off by default and never compiled into CI's clippy/test runs — the
+//! counter costs one relaxed atomic per allocation, which is cheap but
+//! not free.  Run the gated assertions with
+//! `cargo test --features trace-alloc`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// System allocator wrapper counting allocation *calls* (not bytes):
+/// steady-state regressions show up as calls-per-event, and call counts
+/// are exactly reproducible where byte totals can vary with allocator
+/// internals.
+pub struct CountingAllocator;
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
+
+/// Total allocation calls since process start (monotone; diff two reads
+/// to meter a region).
+pub fn allocation_count() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}

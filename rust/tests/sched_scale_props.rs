@@ -31,6 +31,16 @@
 //!   single bit; and the full streaming engine replays the same digest
 //!   sharded, unsharded, and in digest-only (`retain_events: false`)
 //!   mode.
+//! * **Source-driven equivalence** — [`SimEngine::run_source`] over a
+//!   lazy [`StreamingTrace`] (plus slab retirement) replays the
+//!   materialized streaming digest bit for bit across every generator
+//!   family and seed, and the source's running fingerprint equals the
+//!   materialized trace's.
+//! * **Coalesced-batch admission** — a forced same-timestamp wave
+//!   admitted as one `submit_batch` (one replan) realizes the same
+//!   start placements, makespan bits and charges as per-arrival
+//!   `submit_spec` replans under FCFS (the order-preserving policy,
+//!   where sequential greedy and batch greedy are defined to coincide).
 
 use alto::cluster::gpu::GpuSpec;
 use alto::cluster::{PlacePolicy, SimCluster, Topology};
@@ -41,7 +51,7 @@ use alto::sched::inter::{
     InterTaskScheduler, Policy, PreemptDecision, Pricing, RepriceDecision, SchedTuning,
     StartDecision, Submission, TaskShape,
 };
-use alto::simharness::{HarnessConfig, SimEngine, Trace};
+use alto::simharness::{HarnessConfig, SimEngine, StreamingTrace, Trace};
 use alto::util::rng::Pcg32;
 
 /// Deterministic scheduler-level workload derived from a trace: worst
@@ -553,4 +563,232 @@ fn sharded_streaming_engine_replays_the_flat_digest() {
     assert_eq!(lean.timeline.log.retained(), 0);
     assert!(lean.timeline.log.events().is_empty());
     assert!(flat.timeline.log.retained() > 0);
+}
+
+#[test]
+fn source_driven_engine_matches_streaming_across_generators() {
+    // the 1M-mode contract: a lazy StreamingTrace fed through
+    // `run_source` (slab retirement on, digest-only retention) replays
+    // the materialized streaming timeline bit for bit, for every
+    // generator family and seed, and its running fingerprint lands on
+    // the materialized trace's
+    let base = HarnessConfig {
+        total_gpus: 16,
+        island_size: 8,
+        policy: Policy::Optimal,
+        place: PlacePolicy::IslandFirst,
+        retain_events: false,
+        ..HarnessConfig::default()
+    };
+    for seed in [3u64, 11] {
+        let cases: Vec<(&str, Trace, StreamingTrace, bool)> = vec![
+            (
+                "uniform",
+                Trace::uniform_large(12, 32, 40.0, seed),
+                StreamingTrace::uniform_large(12, 32, 40.0, seed),
+                false,
+            ),
+            (
+                "duplicate",
+                Trace::duplicate_heavy(12, 3, 32, 40.0, seed),
+                StreamingTrace::duplicate_heavy(12, 3, 32, 40.0, seed),
+                false,
+            ),
+            (
+                "coloc",
+                Trace::colocatable(12, 3, 32, 40.0, seed),
+                StreamingTrace::colocatable(12, 3, 32, 40.0, seed),
+                false,
+            ),
+            (
+                "frag",
+                Trace::fragmentation_heavy(10, 32, seed),
+                StreamingTrace::fragmentation_heavy(10, 32, seed),
+                false,
+            ),
+            // the t = 0 wave shares one exact timestamp, so this family
+            // also exercises the coalesced-batch admission on both
+            // sides, with evictions in the mix
+            (
+                "preempt",
+                Trace::preemption_stress(3, 4, 32, seed),
+                StreamingTrace::preemption_stress(3, 4, 32, seed),
+                true,
+            ),
+        ];
+        for (label, trace, mut src, preempt) in cases {
+            let engine = SimEngine::new(HarnessConfig {
+                preempt_on_arrival: preempt,
+                ..base.clone()
+            });
+            let full = engine.run_streaming(&trace).unwrap();
+            let lean = engine.run_source(&mut src).unwrap();
+            let tag = format!("{label} seed {seed}");
+            assert_eq!(
+                lean.fingerprint,
+                trace.fingerprint(),
+                "{tag}: lazy source drifted from the materialized trace"
+            );
+            assert_eq!(
+                lean.log.digest(),
+                full.timeline.log.digest(),
+                "{tag}: source-driven digest drifted from streaming"
+            );
+            assert_eq!(lean.log.len(), full.timeline.log.len(), "{tag}");
+            assert_eq!(
+                lean.makespan.to_bits(),
+                full.timeline.makespan.to_bits(),
+                "{tag}: makespan drifted"
+            );
+            assert_eq!(lean.tasks, trace.len(), "{tag}");
+            assert_eq!(lean.replans, full.timeline.replans, "{tag}");
+            assert_eq!(lean.reprices, full.timeline.reprices, "{tag}");
+            assert_eq!(lean.distinct_bodies, full.distinct_bodies, "{tag}");
+            assert_eq!(lean.memo_hits, full.memo_hits, "{tag}");
+        }
+    }
+}
+
+#[test]
+fn source_driven_engine_matches_streaming_at_1k_scale() {
+    // the mid-scale point (the bench asserts the same equality at 100k
+    // in release mode, in-process): duplicate-heavy so the 1k bodies
+    // collapse onto 8 distinct simulations, offered load below 1 on
+    // 128 GPUs so the live window stays bounded — the regime the
+    // O(live) claim is about
+    let trace = Trace::duplicate_heavy(1_000, 8, 24, 6.0, 42);
+    let mut src = StreamingTrace::duplicate_heavy(1_000, 8, 24, 6.0, 42);
+    let engine = SimEngine::new(HarnessConfig {
+        total_gpus: 128,
+        island_size: 8,
+        retain_events: false,
+        ..HarnessConfig::default()
+    });
+    let full = engine.run_streaming(&trace).unwrap();
+    let lean = engine.run_source(&mut src).unwrap();
+    assert_eq!(lean.fingerprint, trace.fingerprint());
+    assert_eq!(lean.log.digest(), full.timeline.log.digest());
+    assert_eq!(lean.log.len(), full.timeline.log.len());
+    assert_eq!(lean.makespan.to_bits(), full.timeline.makespan.to_bits());
+    assert_eq!(lean.tasks, 1_000);
+    assert_eq!(lean.log.retained(), 0);
+}
+
+#[test]
+fn trace_cursor_feeds_run_source_identically() {
+    // any held Trace can be streamed through the source loop via its
+    // cursor — same digest, same fingerprint, nothing rematerialized
+    let trace = Trace::fragmentation_heavy(8, 32, 11);
+    let engine = SimEngine::new(HarnessConfig {
+        total_gpus: 16,
+        policy: Policy::Optimal,
+        place: PlacePolicy::IslandFirst,
+        ..HarnessConfig::default()
+    });
+    let full = engine.run_streaming(&trace).unwrap();
+    let lean = engine.run_source(&mut trace.source()).unwrap();
+    assert_eq!(lean.fingerprint, trace.fingerprint());
+    assert_eq!(lean.log.digest(), full.timeline.log.digest());
+    assert_eq!(lean.makespan.to_bits(), full.timeline.makespan.to_bits());
+    assert_eq!(lean.tasks, trace.len());
+}
+
+/// Drive the scheduler by admitting the whole same-timestamp wave as
+/// one `submit_batch` (one replan), then draining completions — the
+/// engine's coalesced fast path, reproduced at the scheduler level.
+fn drive_batch(
+    subs: &[Submission],
+    gpus: usize,
+    island: usize,
+    policy: Policy,
+) -> (Drained, usize) {
+    let topo = Topology::uniform(gpus, island);
+    let cluster = SimCluster::with_topology(GpuSpec::h100_sxm5(), topo.clone());
+    let mut s = InterTaskScheduler::with_cluster(cluster, policy);
+    s.place = PlacePolicy::IslandFirst;
+    s.set_pricer(
+        StepTimeModel::new(GpuSpec::h100_sxm5(), topo),
+        Pricing::default(),
+    );
+    s.submit_batch(subs.to_vec()).expect("well-formed batch");
+    let mut out = Drained {
+        started: vec![],
+        preempted: vec![],
+        repriced: vec![],
+        makespan: 0.0,
+        charged: 0.0,
+        migration_charge: 0.0,
+    };
+    loop {
+        out.started.extend(s.drain_started());
+        out.preempted.extend(s.drain_preempted());
+        out.repriced.extend(s.drain_repriced());
+        if s.complete_next().expect("consistent scheduler state").is_none() {
+            break;
+        }
+    }
+    assert!(s.all_done(), "batch driver left unfinished tasks");
+    out.makespan = s.makespan();
+    out.charged = s.charged_gpu_seconds();
+    out.migration_charge = s.migration_charge;
+    (out, s.replans)
+}
+
+#[test]
+fn coalesced_batch_admission_matches_sequential_fcfs_outcomes() {
+    // a forced same-timestamp wave: every arrival at the bit-equal
+    // t = 0.0 the engine now admits as one coalesced batch.  Under FCFS
+    // the plan order is (arrival, id) either way, so incremental greedy
+    // admission (one replan per submission) and batch greedy admission
+    // (one replan for the wave) are *defined* to realize the same
+    // placements; and because zero wall time elapses between the
+    // sequential starts, every intermediate reprice folds zero progress
+    // and lands on the exact `clock + charge + remaining × factor` the
+    // batch pricing computes — so makespan and charges must agree bit
+    // for bit, not just approximately.  (Duration-ordered policies
+    // reorder inside a batch by design, so only FCFS is pinned.)
+    //
+    // Event *interleaving* differs by design — the sequential path
+    // interleaves Starts between same-time Arrivals and emits the
+    // intermediate zero-progress reprices — so the comparison is
+    // outcome-level, not digest-level.
+    for seed in [5u64, 17] {
+        let wave = Trace::at_zero(alto::simharness::frag_mix(12, 48, seed));
+        let subs = submissions_from(&wave, seed);
+        assert!(
+            subs.iter().all(|s| s.arrival.to_bits() == 0.0_f64.to_bits()),
+            "the wave must share one exact timestamp"
+        );
+        let (seq, seq_sched) =
+            drive_sched(&subs, 16, 8, Policy::Fcfs, false, SchedTuning::default());
+        let (batch, batch_replans) = drive_batch(&subs, 16, 8, Policy::Fcfs);
+        let tag = format!("coalesced wave seed {seed}");
+        assert_eq!(batch.started, seq.started, "{tag}: start decisions drifted");
+        assert_eq!(batch.preempted, seq.preempted, "{tag}");
+        assert_eq!(
+            batch.makespan.to_bits(),
+            seq.makespan.to_bits(),
+            "{tag}: makespan drifted ({} vs {})",
+            batch.makespan,
+            seq.makespan
+        );
+        assert_eq!(
+            batch.charged.to_bits(),
+            seq.charged.to_bits(),
+            "{tag}: charged GPU-seconds drifted ({} vs {})",
+            batch.charged,
+            seq.charged
+        );
+        assert_eq!(
+            batch.migration_charge.to_bits(),
+            seq.migration_charge.to_bits(),
+            "{tag}: migration charges drifted"
+        );
+        assert!(
+            batch_replans < seq_sched.replans,
+            "{tag}: the batch path must replan less than per-arrival \
+             admission ({batch_replans} vs {})",
+            seq_sched.replans
+        );
+    }
 }
