@@ -52,6 +52,14 @@
 //! `StreamingTrace` and asserts its digest and fingerprint against the
 //! materialized runs.
 //!
+//! Two robustness sections ride between the co-location and 100k
+//! points: `faults` replays a saturated 1k-task wave under two GPU
+//! failures plus an island slowdown (recovered-vs-clean makespan ratio,
+//! eviction/restore counts) and `overload` drives a bursty SLO-tagged
+//! 1k stream into a 16-GPU slice with admission control on (sheds,
+//! deadline-miss rate).  Both assert streaming-vs-source digest
+//! equality in-process — fault and shed events are replay events.
+//!
 //! A fifth section is the 1M-task extreme: the source-driven loop only
 //! (the trace never exists as a `Vec`), digest-only retention, under a
 //! 600 s wall budget — skipped in quick mode and on small runners,
@@ -73,9 +81,12 @@ use alto::coordinator::shared::SharingConfig;
 use alto::parallel::workload::Workload;
 use alto::perfmodel::StepTimeModel;
 use alto::sched::inter::{
-    InterTaskScheduler, Policy, Pricing, SchedTuning, Submission, TaskShape,
+    InterTaskScheduler, OverloadConfig, Policy, Pricing, SchedTuning, Submission, TaskShape,
 };
-use alto::simharness::{HarnessConfig, SimEngine, StreamingTrace, Trace};
+use alto::simharness::{
+    uniform_mix, FaultEvent, FaultPlan, HarnessConfig, SimEngine, StreamingTrace, TimedFault,
+    Trace,
+};
 use alto::util::json::Json;
 use alto::util::rng::Pcg32;
 
@@ -118,6 +129,7 @@ fn make_subs(n: usize, seed: u64) -> Vec<Submission> {
                     adapters: 2,
                     rank: 16,
                 }),
+                ..Submission::default()
             }
         })
         .collect()
@@ -152,6 +164,7 @@ fn make_colo_subs(n: usize, seed: u64) -> Vec<Submission> {
                     adapters: 2,
                     rank: 16,
                 }),
+                ..Submission::default()
             }
         })
         .collect()
@@ -524,6 +537,165 @@ fn main() {
         colo_on.merges,
     );
 
+    // ---- fault injection: recovery cost at 1k tasks -------------------
+    // A dense t = 0 wave of 1k single-GPU tenants saturates all 128
+    // GPUs, so the early GPU failures are guaranteed to evict live
+    // runners; the plan also derates one island mid-run.  The same
+    // faulted replay is driven through the streaming and the lazy
+    // source-driven loop and the digests asserted bit-identical — the
+    // fault timeline is part of the replay contract, not a side effect.
+    banner("fault injection: 1k-task wave, 2 GPU failures + 1 island slowdown");
+    let fault_trace = Trace::at_zero(uniform_mix(1_000, 48, 42));
+    let clean_cfg = HarnessConfig {
+        total_gpus: GPUS,
+        island_size: ISLAND,
+        retain_events: false,
+        ..HarnessConfig::default()
+    };
+    let clean_run = SimEngine::new(clean_cfg.clone())
+        .run_streaming(&fault_trace)
+        .expect("clean 1k run");
+    let fault_plan = FaultPlan::new(vec![
+        TimedFault {
+            time: 1.0,
+            event: FaultEvent::GpuFail { gpu: 7 },
+        },
+        TimedFault {
+            time: 2.0,
+            event: FaultEvent::GpuFail { gpu: 63 },
+        },
+        TimedFault {
+            time: 5.0,
+            event: FaultEvent::IslandSlowdown {
+                island: 3,
+                factor: 1.6,
+            },
+        },
+        TimedFault {
+            time: 400.0,
+            event: FaultEvent::IslandRestore { island: 3 },
+        },
+        TimedFault {
+            time: 600.0,
+            event: FaultEvent::GpuRecover { gpu: 7 },
+        },
+        TimedFault {
+            time: 700.0,
+            event: FaultEvent::GpuRecover { gpu: 63 },
+        },
+    ])
+    .with_checkpoint_interval(120.0);
+    let faulted_cfg = HarnessConfig {
+        faults: fault_plan,
+        ..clean_cfg.clone()
+    };
+    let faulted_engine = SimEngine::new(faulted_cfg);
+    let faulted = faulted_engine
+        .run_streaming(&fault_trace)
+        .expect("faulted 1k run");
+    let faulted_src = faulted_engine
+        .run_source(&mut fault_trace.source())
+        .expect("faulted source-driven run");
+    assert_eq!(
+        faulted_src.log.digest(),
+        faulted.timeline.log.digest(),
+        "faulted source-driven replay drifted from the streaming digest"
+    );
+    assert_eq!(
+        faulted_src.fault_evictions,
+        faulted.timeline.fault_evictions
+    );
+    assert!(
+        faulted.timeline.fault_evictions >= 2,
+        "both failed GPUs held runners on a saturated wave \
+         ({} evictions)",
+        faulted.timeline.fault_evictions
+    );
+    assert_eq!(faulted.timeline.sheds, 0, "overload is off in this section");
+    let recovered_ratio = faulted.timeline.makespan / clean_run.timeline.makespan.max(1e-12);
+    println!(
+        "clean makespan {}s vs recovered {}s ({recovered_ratio:.3}×), \
+         {} evictions checkpoint-restored",
+        f(clean_run.timeline.makespan, 0),
+        f(faulted.timeline.makespan, 0),
+        faulted.timeline.fault_evictions,
+    );
+    let faults_json = Json::obj(vec![
+        ("tasks", Json::Num(1_000.0)),
+        ("gpu_failures", Json::Num(2.0)),
+        ("island_slowdowns", Json::Num(1.0)),
+        ("checkpoint_interval_s", Json::Num(120.0)),
+        ("clean_makespan_s", Json::Num(clean_run.timeline.makespan)),
+        ("recovered_makespan_s", Json::Num(faulted.timeline.makespan)),
+        ("recovered_vs_clean_makespan", Json::Num(recovered_ratio)),
+        (
+            "fault_evictions",
+            Json::Num(faulted.timeline.fault_evictions as f64),
+        ),
+        (
+            "restores",
+            Json::Num(faulted.timeline.fault_evictions as f64),
+        ),
+    ]);
+
+    // ---- overload control: admission under pressure at 1k tasks -------
+    // Bursty arrivals (32-task waves) pounding a deliberately small
+    // 16-GPU slice, every task carrying an SLO deadline and one of four
+    // tenants (one double-weighted): the shed pass fires when the
+    // waiting queue tops the pressure threshold.  Streaming and
+    // source-driven replays must agree bit for bit — sheds are digest
+    // events like any other.
+    banner("overload control: 1k-task bursty stream on 16 GPUs, weighted admission + SLOs");
+    let mut over_trace = Trace::bursty_uniform(1_000, 48, 32, 600.0, 42);
+    for (i, e) in over_trace.entries.iter_mut().enumerate() {
+        e.spec.tenant = format!("tenant-{}", i % 4);
+        e.spec.tenant_weight = if i % 4 == 0 { 2.0 } else { 1.0 };
+        e.spec.slo_deadline = 2_400.0;
+    }
+    let over_engine = SimEngine::new(HarnessConfig {
+        total_gpus: 16,
+        island_size: ISLAND,
+        retain_events: false,
+        overload: OverloadConfig {
+            enabled: true,
+            pressure_threshold: 48,
+        },
+        ..HarnessConfig::default()
+    });
+    let over = over_engine
+        .run_streaming(&over_trace)
+        .expect("overloaded 1k run");
+    let over_src = over_engine
+        .run_source(&mut over_trace.source())
+        .expect("overloaded source-driven run");
+    assert_eq!(
+        over_src.log.digest(),
+        over.timeline.log.digest(),
+        "overloaded source-driven replay drifted from the streaming digest"
+    );
+    assert_eq!(over_src.sheds, over.timeline.sheds);
+    assert_eq!(over_src.deadline_misses, over.timeline.deadline_misses);
+    let miss_rate = over.timeline.deadline_misses as f64 / 1_000.0;
+    println!(
+        "{} shed under pressure, {} deadline misses ({:.1}% of 1k tasks)",
+        over.timeline.sheds,
+        over.timeline.deadline_misses,
+        miss_rate * 100.0,
+    );
+    let overload_json = Json::obj(vec![
+        ("tasks", Json::Num(1_000.0)),
+        ("gpus", Json::Num(16.0)),
+        ("pressure_threshold", Json::Num(48.0)),
+        ("slo_deadline_s", Json::Num(2_400.0)),
+        ("sheds", Json::Num(over.timeline.sheds as f64)),
+        (
+            "deadline_misses",
+            Json::Num(over.timeline.deadline_misses as f64),
+        ),
+        ("deadline_miss_rate", Json::Num(miss_rate)),
+        ("makespan_s", Json::Num(over.timeline.makespan)),
+    ]);
+
     // ---- sharded event loop: the 100k-task scale point ----------------
     // The tentpole measurement: a duplicate-heavy 100k-tenant stream
     // through the whole streaming engine, single loop vs sharded by
@@ -861,6 +1033,8 @@ fn main() {
         ("scales", Json::Obj(scales_json)),
         ("streaming", Json::Obj(streaming_json)),
         ("colocation", colo_json),
+        ("faults", faults_json),
+        ("overload", overload_json),
     ]);
     if gate_failed {
         // keep the committed baseline; persist the regressed measurements

@@ -27,6 +27,11 @@ pub struct SimCluster {
     pub gpu: std::sync::Arc<GpuSpec>,
     pub topo: Topology,
     free: Vec<bool>,
+    /// Failed devices (fault injection): excluded from placement until
+    /// recovery, whatever their `free` bit says.  `n_failed` keeps the
+    /// no-faults hot path allocation-free.
+    failed: Vec<bool>,
+    n_failed: usize,
 }
 
 impl SimCluster {
@@ -38,6 +43,8 @@ impl SimCluster {
             gpu: gpu.into(),
             topo,
             free: vec![true; n_gpus],
+            failed: vec![false; n_gpus],
+            n_failed: 0,
         }
     }
 
@@ -50,6 +57,8 @@ impl SimCluster {
             gpu: gpu.into(),
             topo,
             free: vec![true; n],
+            failed: vec![false; n],
+            n_failed: 0,
         }
     }
 
@@ -61,17 +70,55 @@ impl SimCluster {
         self.free.len()
     }
 
+    /// Allocatable devices: free *and* not failed.
     pub fn available(&self) -> usize {
-        self.free.iter().filter(|&&f| f).count()
+        if self.n_failed == 0 {
+            return self.free.iter().filter(|&&f| f).count();
+        }
+        self.free
+            .iter()
+            .zip(&self.failed)
+            .filter(|&(&f, &d)| f && !d)
+            .count()
     }
 
     pub fn is_free(&self, gpu: usize) -> bool {
-        self.free[gpu]
+        self.free[gpu] && !self.failed[gpu]
     }
 
-    /// The current free bitmap (true = free).
+    /// The current free bitmap (true = free; failed GPUs excluded by
+    /// the placement path, not this raw view).
     pub fn free_mask(&self) -> &[bool] {
         &self.free
+    }
+
+    /// Mark a GPU failed: it leaves the allocatable set until
+    /// [`SimCluster::recover_gpu`].  A busy GPU can fail — evicting its
+    /// runner is the scheduler's job; the bitmap just stops offering it.
+    pub fn fail_gpu(&mut self, gpu: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(gpu < self.failed.len(), "fail of out-of-range GPU {gpu}");
+        anyhow::ensure!(!self.failed[gpu], "GPU {gpu} already failed");
+        self.failed[gpu] = true;
+        self.n_failed += 1;
+        Ok(())
+    }
+
+    /// Return a failed GPU to the allocatable set.
+    pub fn recover_gpu(&mut self, gpu: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(gpu < self.failed.len(), "recover of out-of-range GPU {gpu}");
+        anyhow::ensure!(self.failed[gpu], "GPU {gpu} is not failed");
+        self.failed[gpu] = false;
+        self.n_failed -= 1;
+        Ok(())
+    }
+
+    pub fn is_failed(&self, gpu: usize) -> bool {
+        self.failed[gpu]
+    }
+
+    /// Any device currently failed?
+    pub fn any_failed(&self) -> bool {
+        self.n_failed > 0
     }
 
     /// Allocate `k` GPUs island-aware (first island that holds the whole
@@ -81,11 +128,24 @@ impl SimCluster {
         self.allocate_with(k, PlacePolicy::IslandFirst)
     }
 
-    /// Allocate `k` GPUs under an explicit placement policy.
+    /// Allocate `k` GPUs under an explicit placement policy.  Failed
+    /// GPUs are masked out of the candidate bitmap; with no failures the
+    /// raw free bitmap is used directly (zero extra work, bitwise the
+    /// pre-fault behavior).
     pub fn allocate_with(&mut self, k: usize, policy: PlacePolicy) -> Option<Placement> {
-        let p = self.topo.place(&self.free, k, policy)?;
+        let p = if self.n_failed == 0 {
+            self.topo.place(&self.free, k, policy)?
+        } else {
+            let usable: Vec<bool> = self
+                .free
+                .iter()
+                .zip(&self.failed)
+                .map(|(&f, &d)| f && !d)
+                .collect();
+            self.topo.place(&usable, k, policy)?
+        };
         for &g in p.gpus() {
-            debug_assert!(self.free[g], "placement chose busy GPU {g}");
+            debug_assert!(self.free[g] && !self.failed[g], "placement chose busy GPU {g}");
             self.free[g] = false;
         }
         Some(p)
@@ -154,6 +214,34 @@ mod tests {
         // the error left the bitmap untouched and usable
         assert_eq!(c.available(), 2);
         assert!(c.allocate(2).is_some());
+    }
+
+    #[test]
+    fn fail_recover_masks_the_bitmap() {
+        let mut c = SimCluster::h100s(4);
+        assert!(!c.any_failed());
+        c.fail_gpu(0).unwrap();
+        assert!(c.any_failed() && c.is_failed(0) && !c.is_free(0));
+        assert_eq!(c.available(), 3);
+        // double-fail and spurious recover are structured errors
+        assert!(c.fail_gpu(0).is_err());
+        assert!(c.recover_gpu(1).is_err());
+        assert!(c.fail_gpu(99).is_err());
+        // placement routes around the failed device
+        let p = c.allocate_with(3, PlacePolicy::FirstFit).unwrap();
+        assert_eq!(p.gpus(), &[1, 2, 3]);
+        assert!(c.allocate(1).is_none(), "only the failed GPU is left");
+        // a busy GPU can fail; releasing it keeps it excluded
+        c.recover_gpu(0).unwrap();
+        let q = c.allocate(1).unwrap();
+        assert_eq!(q.gpus(), &[0]);
+        c.fail_gpu(0).unwrap();
+        c.release(&q).unwrap();
+        assert_eq!(c.available(), 3);
+        assert!(c.allocate_with(4, PlacePolicy::FirstFit).is_none());
+        c.release(&p).unwrap();
+        c.recover_gpu(0).unwrap();
+        assert_eq!(c.available(), 4);
     }
 
     #[test]

@@ -340,17 +340,17 @@ impl Topology {
                     };
                     (cost, leftover)
                 };
+                // total_cmp orders identically to partial_cmp on the
+                // finite scores every real candidate produces, and stays
+                // total if a degenerate topology ever yields a NaN cost;
+                // an empty candidate set degrades to None, not a panic.
                 cands
                     .into_iter()
                     .min_by(|a, b| {
                         let (ca, la) = score(a);
                         let (cb, lb) = score(b);
-                        ca.partial_cmp(&cb)
-                            .unwrap()
-                            .then(la.cmp(&lb))
-                            .then(a.cmp(b))
-                    })
-                    .unwrap()
+                        ca.total_cmp(&cb).then(la.cmp(&lb)).then(a.cmp(b))
+                    })?
             }
         };
         debug_assert_eq!(got.len(), k);

@@ -54,6 +54,19 @@ pub struct TaskSpec {
     /// Scheduling priority (higher wins; only consulted when the harness
     /// runs with preemption-on-arrival enabled).  Defaults to 0.
     pub priority: i64,
+    /// Submitting tenant.  Empty ("", the default) means untagged: all
+    /// untagged tasks share one admission pool.  Only consulted by
+    /// overload control (weighted queue shares under pressure); the
+    /// task *body* is tenant-blind.
+    pub tenant: String,
+    /// This tenant's fair-share weight for admission control (1.0 = one
+    /// share).  Higher-weight tenants keep proportionally more of the
+    /// waiting queue under pressure.
+    pub tenant_weight: f64,
+    /// SLO deadline in seconds *after arrival*; 0.0 (the default) means
+    /// none.  Under overload control, a queued task that can no longer
+    /// meet its deadline even if started immediately is shed.
+    pub slo_deadline: f64,
 }
 
 impl TaskSpec {
@@ -68,7 +81,7 @@ impl TaskSpec {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::Str(self.name.clone())),
             ("model", Json::Str(self.model.to_string())),
             ("dataset", Json::Str(self.dataset.to_string())),
@@ -80,7 +93,19 @@ impl TaskSpec {
             ("train_samples", Json::Num(self.train_samples as f64)),
             ("seed", Json::Num(self.seed as f64)),
             ("priority", Json::Num(self.priority as f64)),
-        ])
+        ];
+        // admission-control fields appear only when set, so pre-existing
+        // spec files round-trip byte-identically
+        if !self.tenant.is_empty() {
+            fields.push(("tenant", Json::Str(self.tenant.clone())));
+        }
+        if self.tenant_weight != 1.0 {
+            fields.push(("tenant_weight", Json::Num(self.tenant_weight)));
+        }
+        if self.slo_deadline != 0.0 {
+            fields.push(("slo_deadline", Json::Num(self.slo_deadline)));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<TaskSpec> {
@@ -107,6 +132,19 @@ impl TaskSpec {
             train_samples: u("train_samples", 1024),
             seed: j.get("seed").and_then(|v| v.as_i64()).unwrap_or(0) as u64,
             priority: j.get("priority").and_then(|v| v.as_i64()).unwrap_or(0),
+            tenant: j
+                .get("tenant")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
+            tenant_weight: j
+                .get("tenant_weight")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(1.0),
+            slo_deadline: j
+                .get("slo_deadline")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
         })
     }
 
@@ -135,6 +173,9 @@ impl Default for TaskSpec {
             train_samples: 1024,
             seed: 0,
             priority: 0,
+            tenant: String::new(),
+            tenant_weight: 1.0,
+            slo_deadline: 0.0,
         }
     }
 }
@@ -157,9 +198,19 @@ mod tests {
             train_samples: 9000,
             seed: 7,
             priority: 2,
+            tenant: "acme".into(),
+            tenant_weight: 2.5,
+            slo_deadline: 1800.0,
         };
         let j = Json::parse(&t.to_json().to_string()).unwrap();
         assert_eq!(TaskSpec::from_json(&j).unwrap(), t);
+        // default admission fields stay off the wire entirely
+        let plain = TaskSpec::default().to_json().to_string();
+        for key in ["tenant", "tenant_weight", "slo_deadline"] {
+            assert!(!plain.contains(key), "default spec leaked '{key}': {plain}");
+        }
+        let j = Json::parse(&plain).unwrap();
+        assert_eq!(TaskSpec::from_json(&j).unwrap(), TaskSpec::default());
     }
 
     #[test]

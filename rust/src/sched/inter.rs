@@ -123,7 +123,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::cluster::{PlacePolicy, Placement, SimCluster};
+use crate::cluster::{PlacePolicy, Placement, SimCluster, Topology};
 use crate::coordinator::shared::{SharedGroupSet, SharingConfig};
 use crate::parallel::workload::Workload;
 use crate::perfmodel::{ContentionCtx, StepTimeModel};
@@ -307,6 +307,37 @@ pub struct Submission {
     pub priority: i64,
     /// Pricing inputs; `None` prices the task at exactly 1.0 forever.
     pub shape: Option<TaskShape>,
+    /// Owning tenant (a stable hash of the tenant name; 0 = untagged).
+    /// Only read by overload control's per-tenant quota arithmetic.
+    pub tenant: u64,
+    /// This tenant's admission weight (share of the waiting queue under
+    /// pressure; 1.0 = one fair share).
+    pub tenant_weight: f64,
+    /// Absolute SLO deadline on the virtual clock (0.0 = none).  A
+    /// queued task that cannot finish by its deadline even if started
+    /// immediately is shed by overload control; a completion past the
+    /// deadline counts a miss.
+    pub deadline: f64,
+}
+
+impl Default for Submission {
+    /// A neutral 1-GPU, zero-duration, untagged submission — the base
+    /// for struct-update construction at call sites that only care
+    /// about a subset of the fields.
+    fn default() -> Submission {
+        Submission {
+            id: 0,
+            gpus: 1,
+            est_duration: 0.0,
+            actual_duration: 0.0,
+            arrival: 0.0,
+            priority: 0,
+            shape: None,
+            tenant: 0,
+            tenant_weight: 1.0,
+            deadline: 0.0,
+        }
+    }
 }
 
 /// A pending or running task in the living queue.
@@ -356,6 +387,12 @@ struct LiveTask {
     /// (recorded at insertion so removal never recomputes the mapping —
     /// a merge can move the placement across islands in between).
     home_shard: usize,
+    /// Owning tenant (overload control's quota key; 0 = untagged).
+    tenant: u64,
+    /// Tenant admission weight (see [`Submission::tenant_weight`]).
+    tenant_weight: f64,
+    /// Absolute SLO deadline (0.0 = none).
+    deadline: f64,
 }
 
 impl LiveTask {
@@ -368,6 +405,17 @@ impl LiveTask {
         } else {
             (elapsed - self.run_charge) / self.run_factor
         }
+    }
+}
+
+/// Floor nominal progress to the last completed checkpoint boundary:
+/// work past the last multiple of `interval` is lost to a failure.
+/// `interval <= 0` models continuous checkpointing (full credit).
+fn checkpointed(progress: f64, interval: f64) -> f64 {
+    if interval > 0.0 {
+        (progress / interval).floor() * interval
+    } else {
+        progress
     }
 }
 
@@ -509,6 +557,110 @@ pub struct AdoptDecision {
     pub placement: Arc<Placement>,
 }
 
+/// Why a task was evicted outside the priority-preemption policy:
+/// either a fault (its GPU failed; it checkpoint-restores) or overload
+/// control (it was shed from the waiting queue and never completes).
+/// Part of the `Evict` event's replay digest, so the codes and labels
+/// are a stable wire format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictReason {
+    /// A GPU in the task's placement failed; the task returns to the
+    /// queue and restores from its last checkpoint boundary.
+    GpuFail,
+    /// Overload control: the tenant held more than its weighted share
+    /// of the waiting queue under pressure.
+    OverQuota,
+    /// Overload control: the task could not meet its SLO deadline even
+    /// if started immediately.
+    DeadlineHopeless,
+}
+
+impl EvictReason {
+    /// Stable JSONL label.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EvictReason::GpuFail => "gpu-fail",
+            EvictReason::OverQuota => "quota",
+            EvictReason::DeadlineHopeless => "deadline",
+        }
+    }
+
+    /// Inverse of [`EvictReason::as_str`].
+    pub fn parse(s: &str) -> Option<EvictReason> {
+        match s {
+            "gpu-fail" => Some(EvictReason::GpuFail),
+            "quota" => Some(EvictReason::OverQuota),
+            "deadline" => Some(EvictReason::DeadlineHopeless),
+            _ => None,
+        }
+    }
+
+    /// Stable digest / compact-storage code.
+    pub fn code(self) -> u64 {
+        match self {
+            EvictReason::GpuFail => 0,
+            EvictReason::OverQuota => 1,
+            EvictReason::DeadlineHopeless => 2,
+        }
+    }
+
+    /// Inverse of [`EvictReason::code`] (unknown codes decode as
+    /// `GpuFail`, matching code 0 — compact records are only ever
+    /// produced by [`EvictReason::code`] itself).
+    pub fn from_code(code: u8) -> EvictReason {
+        match code {
+            1 => EvictReason::OverQuota,
+            2 => EvictReason::DeadlineHopeless,
+            _ => EvictReason::GpuFail,
+        }
+    }
+}
+
+/// One eviction decision outside the preemption policy: a fault victim
+/// returning to the queue (placement released) or an overload shed
+/// (never held GPUs — `placement` is `None`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvictDecision {
+    pub id: usize,
+    pub time: f64,
+    /// GPUs the task requested (recorded here because a shed task
+    /// leaves the table immediately).
+    pub gpus: usize,
+    /// The placement released, for fault victims; `None` for queue
+    /// sheds.
+    pub placement: Option<Arc<Placement>>,
+    pub reason: EvictReason,
+}
+
+/// Admission / overload control.  Off by default: with `enabled` false
+/// the scheduler never runs a shed pass and every timeline is bitwise
+/// the pre-overload one.
+///
+/// When enabled, each arrival-triggered replan whose waiting queue
+/// exceeds `pressure_threshold` first sheds (1) deadline-hopeless
+/// tasks — queued with an SLO deadline they cannot meet even if
+/// started immediately — then (2) over-quota tasks: each tenant keeps
+/// at most ⌈threshold · wᵗ / Σw⌉ waiting tasks (its weighted share of
+/// the tolerated queue), and tenants over their share shed their
+/// newest submissions, lightest-weight tenants first, until the queue
+/// fits.  Shed tasks leave the system entirely (an `Evict` event with
+/// no placement); they never complete.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverloadConfig {
+    pub enabled: bool,
+    /// Waiting-queue length above which the shed pass fires.
+    pub pressure_threshold: usize,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> OverloadConfig {
+        OverloadConfig {
+            enabled: false,
+            pressure_threshold: 64,
+        }
+    }
+}
+
 /// One merge decision: a shrunken group's survivor moved into a peer
 /// group on the same island, paying a checkpoint transfer.
 #[derive(Debug, Clone, PartialEq)]
@@ -599,9 +751,32 @@ pub struct InterTaskScheduler {
     adopted_log: Vec<AdoptDecision>,
     /// Merge decisions since the last `drain_merged`.
     merged_log: Vec<MergeDecision>,
+    /// Fault/overload eviction decisions since the last `drain_evicted`.
+    evicted_log: Vec<EvictDecision>,
+    /// Admission / overload control (default: disabled).
+    pub overload: OverloadConfig,
+    /// Per-island straggler derate factors (wall-seconds per wall
+    /// second; 1.0 = healthy).  `derates_active` caches "any ≠ 1.0" so
+    /// the no-straggler hot path pays nothing.
+    island_derate: Vec<f64>,
+    derates_active: bool,
+    /// Checkpoint cadence (nominal seconds) fault evictions restore
+    /// from: progress since the last multiple is lost.  0.0 =
+    /// continuous checkpointing (full partial-progress credit).
+    fault_checkpoint_interval: f64,
     pub replans: usize,
     /// Total evictions across the run.
     pub preemptions: usize,
+    /// Runners evicted by GPU failures (each returns to the queue and
+    /// checkpoint-restores).
+    pub fault_evictions: usize,
+    /// Waiting tasks shed as over-quota under pressure.
+    pub evictions_quota: usize,
+    /// Waiting tasks shed as deadline-hopeless.
+    pub evictions_deadline: usize,
+    /// SLO deadline misses: hopeless sheds plus completions past their
+    /// deadline.
+    pub deadline_misses: usize,
     /// Tasks adopted into shared executor groups across the run.
     pub adoptions: usize,
     /// Survivors merged between shared executor groups across the run.
@@ -662,8 +837,17 @@ impl InterTaskScheduler {
             repriced_log: Vec::new(),
             adopted_log: Vec::new(),
             merged_log: Vec::new(),
+            evicted_log: Vec::new(),
+            overload: OverloadConfig::default(),
+            island_derate: vec![1.0; n_islands],
+            derates_active: false,
+            fault_checkpoint_interval: 0.0,
             replans: 0,
             preemptions: 0,
+            fault_evictions: 0,
+            evictions_quota: 0,
+            evictions_deadline: 0,
+            deadline_misses: 0,
             adoptions: 0,
             merges: 0,
             migration_charge: 0.0,
@@ -769,7 +953,7 @@ impl InterTaskScheduler {
             actual_duration,
             arrival: now,
             priority,
-            shape: None,
+            ..Submission::default()
         })
     }
 
@@ -868,6 +1052,9 @@ impl InterTaskScheduler {
                 charged_runtime: 0.0,
                 nominal_step,
                 home_shard: 0,
+                tenant: s.tenant,
+                tenant_weight: s.tenant_weight,
+                deadline: s.deadline,
             },
         )?;
         self.queued.insert(s.id);
@@ -913,6 +1100,12 @@ impl InterTaskScheduler {
     /// the harness turns these into `Merge` events.
     pub fn drain_merged(&mut self) -> Vec<MergeDecision> {
         std::mem::take(&mut self.merged_log)
+    }
+
+    /// Fault/overload eviction decisions made since the last drain, in
+    /// decision order — the harness turns these into `Evict` events.
+    pub fn drain_evicted(&mut self) -> Vec<EvictDecision> {
+        std::mem::take(&mut self.evicted_log)
     }
 
     /// Opt into (or out of) cross-task shared-executor groups.  Sharing
@@ -1074,14 +1267,10 @@ impl InterTaskScheduler {
             topo_matches: self.topo_matches,
             groups: &self.groups,
             sharing_enabled: self.sharing.enabled,
+            cluster_topo: &self.cluster.topo,
+            island_derate: &self.island_derate,
+            derates_active: self.derates_active,
         }
-    }
-
-    /// Wall-seconds per nominal second for a task's *current* placement
-    /// and neighborhood (1.0 when unpriced, shapeless, or single-island
-    /// and uncontended).  Delegates to [`PriceView::price_factor`].
-    fn price_factor(&self, id: usize) -> f64 {
-        self.price_view().price_factor(id)
     }
 
     /// Priced estimate factor for a task that is *not running yet*: the
@@ -1157,7 +1346,10 @@ impl InterTaskScheduler {
             .pricer
             .as_ref()
             .map(|p| p.charge.contention || self.sharing.enabled)
-            .unwrap_or(false);
+            .unwrap_or(false)
+            // straggler derates reprice even without a pricer: a slow
+            // island stretches wall time regardless of the cost model
+            || self.derates_active;
         if !applies {
             self.dirty.clear();
             return Ok(());
@@ -1314,9 +1506,9 @@ impl InterTaskScheduler {
         }
         // price the run segment: placement/contention slowdown (plus the
         // roster stretch for shared-group members — 1.0 on a fresh
-        // singleton) plus a one-off checkpoint transfer when this
-        // resume moved GPUs
-        let factor = self.price_factor(id) * self.group_stretch_of(id);
+        // singleton — and the straggler derate) plus a one-off
+        // checkpoint transfer when this resume moved GPUs
+        let factor = self.price_view().factor(id);
         let charge = self.migration_charge_of(id, resumed_from.as_deref(), &p);
         self.migration_charge += charge;
         let t = self.tasks.req_mut(id)?;
@@ -1386,6 +1578,290 @@ impl InterTaskScheduler {
         Ok(())
     }
 
+    // --- faults and overload ---------------------------------------------
+
+    /// Advance the virtual clock to `now` without processing an event.
+    /// The harness anchors fault bookkeeping here: partial-progress
+    /// credit and restore pricing are computed at the fault's own
+    /// timestamp.  The clock never moves backward.
+    pub fn advance_clock(&mut self, now: f64) {
+        if now > self.clock {
+            self.clock = now;
+        }
+    }
+
+    /// Checkpoint cadence fault evictions restore from (nominal
+    /// seconds; 0.0 = continuous — full partial-progress credit).
+    /// Progress past the last completed interval is lost on a failure.
+    pub fn set_fault_checkpoint_interval(&mut self, interval: f64) {
+        self.fault_checkpoint_interval = interval.max(0.0);
+    }
+
+    /// A GPU failed: mask it out of the allocatable set, dissolve
+    /// shared-executor groups holding it, evict every solo runner whose
+    /// placement touches it (they return to the queue and
+    /// checkpoint-restore at the next replan that seats them), and
+    /// replan — the failure freed the victims' *other* GPUs, which
+    /// waiting tasks may take immediately.
+    pub fn fail_gpu(&mut self, gpu: usize) -> Result<()> {
+        self.cluster.fail_gpu(gpu)?;
+        // shared groups first (ascending group id): every member is
+        // evicted and the group dissolves, releasing its placement
+        let gids: Vec<usize> = self
+            .groups
+            .iter()
+            .filter(|(_, g)| g.placement.gpus().contains(&gpu))
+            .map(|(gid, _)| gid)
+            .collect();
+        for gid in gids {
+            self.dissolve_group_for_fault(gid)?;
+        }
+        // then solo runners, ascending id
+        let victims: Vec<usize> = self
+            .running
+            .keys()
+            .filter(|&&rid| {
+                self.groups.membership_of(rid).is_none()
+                    && self
+                        .tasks
+                        .get(rid)
+                        .and_then(|t| t.placement.as_ref())
+                        .is_some_and(|p| p.gpus().contains(&gpu))
+            })
+            .copied()
+            .collect();
+        for v in victims {
+            self.evict_for_fault(v)?;
+        }
+        self.replan(false)
+    }
+
+    /// A failed GPU returned: unmask it and replan (waiting tasks may
+    /// seat on it immediately).
+    pub fn recover_gpu(&mut self, gpu: usize) -> Result<()> {
+        self.cluster.recover_gpu(gpu)?;
+        self.replan(false)
+    }
+
+    /// Set an island's straggler derate factor (≥ 1.0 wall-seconds per
+    /// wall second; 1.0 restores full speed).  Every runner touching
+    /// the island is repriced immediately through the same dirty-set
+    /// machinery a contention change uses.
+    pub fn set_island_derate(&mut self, island: usize, factor: f64) -> Result<()> {
+        anyhow::ensure!(
+            island < self.island_derate.len(),
+            "derate of out-of-range island {island}"
+        );
+        anyhow::ensure!(
+            factor.is_finite() && factor >= 1.0,
+            "island {island}: derate factor {factor} must be finite and >= 1.0"
+        );
+        self.island_derate[island] = factor;
+        self.dirty.insert(island);
+        // reprice with the derate machinery forced active: a *restore*
+        // to 1.0 must still re-derive the island's runners (back to
+        // full speed) before the flag may drop to its steady state
+        self.derates_active = true;
+        self.reprice_running()?;
+        self.derates_active = self.island_derate.iter().any(|&f| f != 1.0);
+        Ok(())
+    }
+
+    /// Evict a running solo task because a GPU under it failed: same
+    /// arithmetic as [`Self::evict`], except the progress credit is
+    /// floored to the last checkpoint boundary
+    /// ([`Self::set_fault_checkpoint_interval`]) and the decision lands
+    /// in the eviction log (an `Evict` event), not the preemption log.
+    fn evict_for_fault(&mut self, id: usize) -> Result<()> {
+        let completion = self
+            .running
+            .remove(&id)
+            .with_context(|| format!("fault-evicting task {id}, which is not running"))?;
+        self.completions_remove(id, completion);
+        let clock = self.clock;
+        let interval = self.fault_checkpoint_interval;
+        let t = self.tasks.req_mut(id)?;
+        anyhow::ensure!(
+            t.started_at.take().is_some(),
+            "fault-evicted task {id} has no recorded start"
+        );
+        let elapsed = clock - t.segment_at;
+        let progress = checkpointed(t.nominal_progress(elapsed), interval);
+        t.actual_remaining = (t.actual_remaining - progress).max(0.0);
+        t.est_remaining = (t.est_remaining - progress).max(1e-9);
+        t.charged_runtime += elapsed;
+        t.run_factor = 1.0;
+        t.run_charge = 0.0;
+        t.preemptions += 1;
+        let gpus = t.gpus;
+        let p = t
+            .placement
+            .take()
+            .with_context(|| format!("fault-evicted task {id} holds no placement"))?;
+        t.last_placement = Some(p.clone());
+        self.cluster
+            .release(&p)
+            .with_context(|| format!("releasing fault-evicted task {id}'s GPUs"))?;
+        self.residents_remove(id, &p);
+        self.mark_dirty(&p);
+        self.queued.insert(id);
+        self.plan_cache = None;
+        self.fault_evictions += 1;
+        self.evicted_log.push(EvictDecision {
+            id,
+            time: clock,
+            gpus,
+            placement: Some(p),
+            reason: EvictReason::GpuFail,
+        });
+        Ok(())
+    }
+
+    /// A shared-executor group's placement lost a GPU: evict every
+    /// member (same checkpoint-floored books as
+    /// [`Self::evict_for_fault`], but the *group* owns the placement,
+    /// released once at dissolution) and finalize the group.
+    fn dissolve_group_for_fault(&mut self, gid: usize) -> Result<()> {
+        let members: Vec<usize> = self.groups.group(gid).members.iter().copied().collect();
+        let clock = self.clock;
+        let interval = self.fault_checkpoint_interval;
+        for &m in &members {
+            let completion = self.running.remove(&m).with_context(|| {
+                format!("fault-dissolving group member {m}, which is not running")
+            })?;
+            self.completions_remove(m, completion);
+            let t = self.tasks.req_mut(m)?;
+            anyhow::ensure!(
+                t.started_at.take().is_some(),
+                "fault-evicted group member {m} has no recorded start"
+            );
+            let elapsed = clock - t.segment_at;
+            let progress = checkpointed(t.nominal_progress(elapsed), interval);
+            t.actual_remaining = (t.actual_remaining - progress).max(0.0);
+            t.est_remaining = (t.est_remaining - progress).max(1e-9);
+            t.charged_runtime += elapsed;
+            t.run_factor = 1.0;
+            t.run_charge = 0.0;
+            t.preemptions += 1;
+            let gpus = t.gpus;
+            let p = t
+                .placement
+                .take()
+                .with_context(|| format!("fault-evicted group member {m} holds no placement"))?;
+            t.last_placement = Some(p.clone());
+            self.residents_remove(m, &p);
+            self.mark_dirty(&p);
+            self.queued.insert(m);
+            self.groups.depart(gid, m);
+            self.fault_evictions += 1;
+            self.evicted_log.push(EvictDecision {
+                id: m,
+                time: clock,
+                gpus,
+                placement: Some(p),
+                reason: EvictReason::GpuFail,
+            });
+        }
+        let freed = self.groups.finalize(gid, clock);
+        self.cluster
+            .release(&freed)
+            .context("releasing a fault-dissolved group's GPUs")?;
+        self.plan_cache = None;
+        Ok(())
+    }
+
+    /// Overload control: shed waiting tasks until the queue fits the
+    /// pressure threshold — deadline-hopeless tasks first (they miss
+    /// their SLO no matter what), then over-quota tenants' newest
+    /// submissions.  See [`OverloadConfig`].
+    fn shed_pass(&mut self) -> Result<()> {
+        let clock = self.clock;
+        let threshold = self.overload.pressure_threshold;
+        let hopeless: Vec<usize> = self
+            .queued
+            .iter()
+            .filter_map(|&id| {
+                let t = self.tasks.get(id)?;
+                (t.deadline > 0.0 && clock + t.est_remaining > t.deadline).then_some(id)
+            })
+            .collect();
+        for id in hopeless {
+            self.shed(id, EvictReason::DeadlineHopeless)?;
+        }
+        if self.queued.len() <= threshold {
+            return Ok(());
+        }
+        // each tenant keeps its weighted share of the tolerated queue
+        let mut by_tenant: BTreeMap<u64, (f64, Vec<usize>)> = BTreeMap::new();
+        for &id in &self.queued {
+            if let Some(t) = self.tasks.get(id) {
+                let e = by_tenant
+                    .entry(t.tenant)
+                    .or_insert((t.tenant_weight, Vec::new()));
+                e.1.push(id); // ascending id: oldest submissions first
+            }
+        }
+        let total_w: f64 = by_tenant.values().map(|(w, _)| *w).sum();
+        let mut over: Vec<(f64, usize)> = Vec::new();
+        for (w, ids) in by_tenant.values() {
+            let share = if total_w > 0.0 {
+                ((threshold as f64) * w / total_w).ceil() as usize
+            } else {
+                0
+            };
+            // the tenant's oldest `share` tasks are safe; the rest are
+            // shed candidates
+            for &id in ids.iter().skip(share) {
+                over.push((*w, id));
+            }
+        }
+        // lightest-weight tenants shed first; within a weight, newest
+        // submissions (highest id) first
+        over.sort_by(|a, b| crate::sched::finite_last_cmp(a.0, b.0).then(b.1.cmp(&a.1)));
+        for (_, id) in over {
+            if self.queued.len() <= threshold {
+                break;
+            }
+            self.shed(id, EvictReason::OverQuota)?;
+        }
+        Ok(())
+    }
+
+    /// Drop a waiting task from the system entirely: it leaves the
+    /// queue and the table and never completes.  Recorded as an `Evict`
+    /// decision with no placement.  Any GPU time it consumed before a
+    /// fault eviction folds into the retired accumulator so
+    /// [`Self::charged_gpu_seconds`] stays exact.
+    fn shed(&mut self, id: usize, reason: EvictReason) -> Result<()> {
+        anyhow::ensure!(
+            self.queued.remove(&id),
+            "shedding task {id}, which is not waiting"
+        );
+        let gpus = self.tasks.req(id)?.gpus;
+        if let Some(t) = self.tasks.remove(id) {
+            if !self.groups.ever_member(id) {
+                self.retired_charged += t.gpus as f64 * t.charged_runtime;
+            }
+        }
+        self.plan_cache = None;
+        match reason {
+            EvictReason::OverQuota => self.evictions_quota += 1,
+            EvictReason::DeadlineHopeless => {
+                self.evictions_deadline += 1;
+                self.deadline_misses += 1;
+            }
+            EvictReason::GpuFail => {}
+        }
+        self.evicted_log.push(EvictDecision {
+            id,
+            time: self.clock,
+            gpus,
+            placement: None,
+            reason,
+        });
+        Ok(())
+    }
+
     /// Re-plan the waiting queue and start whatever should run *now*.
     ///
     /// Queue disciplines differ deliberately (they are the Fig 5 / Fig 12
@@ -1398,6 +1874,14 @@ impl InterTaskScheduler {
     /// completions free capacity and only backfill.
     fn replan(&mut self, allow_preempt: bool) -> Result<()> {
         self.replans += 1;
+        // overload control acts on arrival pressure, before any start:
+        // a shed task must never be seated by the plan pass below
+        if allow_preempt
+            && self.overload.enabled
+            && self.queued.len() > self.overload.pressure_threshold
+        {
+            self.shed_pass()?;
+        }
         self.plan_pass()?;
         if self.enable_preemption && allow_preempt && self.preempt_pass()? {
             // a preemption can free more than the preemptor took (a
@@ -1698,16 +2182,6 @@ impl InterTaskScheduler {
 
     // --- shared executor groups -----------------------------------------
 
-    /// The roster stretch a shared-group member currently runs at:
-    /// [`StepTimeModel::group_stretch`] over the combined ranks of every
-    /// member, in ascending member-id order.  Exactly 1.0 for
-    /// non-members, singleton rosters, shapeless tasks, or whenever
-    /// sharing is off — so the factor product is a bitwise no-op on the
-    /// pre-sharing path.
-    fn group_stretch_of(&self, id: usize) -> f64 {
-        self.price_view().group_stretch_of(id)
-    }
-
     /// Sustained roster throughput (adapter·batches per nominal second)
     /// the group would run at with the given combined ranks, priced over
     /// the representative (lowest-id) member's workload template.
@@ -1834,7 +2308,7 @@ impl InterTaskScheduler {
             );
             self.tasks.req_mut(id)?.actual_remaining = actual;
         }
-        let factor = self.price_factor(id) * self.group_stretch_of(id);
+        let factor = self.price_view().factor(id);
         let t = self.tasks.req_mut(id)?;
         t.run_factor = factor;
         t.run_charge = 0.0;
@@ -1920,7 +2394,7 @@ impl InterTaskScheduler {
             self.residents_add(m, &new_p);
             let charge = self.migration_charge_of(m, Some(&*old_p), &new_p);
             self.migration_charge += charge;
-            let factor = self.price_factor(m) * self.group_stretch_of(m);
+            let factor = self.price_view().factor(m);
             let t = self.tasks.req_mut(m)?;
             t.run_factor = factor;
             t.run_charge = charge;
@@ -1989,6 +2463,7 @@ impl InterTaskScheduler {
             .with_context(|| format!("completed task {id} is not in the task table"))?;
         anyhow::ensure!(t.started_at.is_some(), "completed task {id} was never started");
         t.finished_at = Some(when);
+        let missed_deadline = t.deadline > 0.0 && when > t.deadline;
         t.charged_runtime += when - t.segment_at;
         t.actual_remaining = 0.0;
         // drop the heavy pricing shape (and any resume placement):
@@ -2001,6 +2476,9 @@ impl InterTaskScheduler {
             .placement
             .take()
             .with_context(|| format!("completed task {id} holds no placement"))?;
+        if missed_deadline {
+            self.deadline_misses += 1;
+        }
         if let Some(gid) = self.groups.membership_of(id) {
             // a shared-group member departs its roster; the group keeps
             // (or finally releases) the GPUs
@@ -2090,13 +2568,42 @@ struct PriceView<'a> {
     topo_matches: bool,
     groups: &'a SharedGroupSet,
     sharing_enabled: bool,
+    /// The cluster's topology (GPU → island), for the straggler derate
+    /// lookup — always present, unlike the pricer's model topology.
+    cluster_topo: &'a Topology,
+    /// Per-island straggler derates (1.0 = healthy).
+    island_derate: &'a [f64],
+    derates_active: bool,
 }
 
 impl PriceView<'_> {
     /// The combined re-pricing factor: placement/contention slowdown
-    /// times the shared-roster stretch.
+    /// times the shared-roster stretch times the straggler derate.
     fn factor(&self, id: usize) -> f64 {
-        self.price_factor(id) * self.group_stretch_of(id)
+        self.price_factor(id) * self.group_stretch_of(id) * self.derate_of(id)
+    }
+
+    /// Max straggler derate over the islands the task's placement
+    /// touches.  Exactly 1.0 when no island is derated (the guard keeps
+    /// the no-fault path scan-free, and ×1.0 is bitwise inert), for
+    /// queued tasks, and for placements off the derated islands.
+    /// Applies to single-GPU and unpriced tasks too — a slow device
+    /// stretches wall time regardless of the cost model.
+    fn derate_of(&self, id: usize) -> f64 {
+        if !self.derates_active {
+            return 1.0;
+        }
+        let Some(p) = self.tasks.get(id).and_then(|t| t.placement.as_ref()) else {
+            return 1.0;
+        };
+        let mut worst = 1.0f64;
+        for &g in p.gpus() {
+            let isl = self.cluster_topo.island_of(g);
+            if let Some(&f) = self.island_derate.get(isl) {
+                worst = worst.max(f);
+            }
+        }
+        worst
     }
 
     /// Co-location context a running task currently experiences: every
@@ -2566,6 +3073,7 @@ mod tests {
             arrival: at,
             priority: prio,
             shape: Some(nano_shape()),
+            ..Submission::default()
         })
         .unwrap();
     }
@@ -2848,6 +3356,158 @@ mod tests {
         assert!(mk_on < mk_off, "co-location must beat serial: {mk_on} vs {mk_off}");
         assert!(gs_on < gs_off, "group occupancy must undercut serial: {gs_on} vs {gs_off}");
         assert!(mk_on > 10.0, "the roster stretch is not free: {mk_on}");
+    }
+
+    // --- faults and overload ----------------------------------------------
+
+    #[test]
+    fn gpu_failure_evicts_and_checkpoint_restores() {
+        // 2 GPUs; task 0 runs 2-wide.  GPU 0 fails at t=4: the runner
+        // is evicted with full progress credit (continuous
+        // checkpointing), re-queued, and — with only GPU 1 healthy —
+        // cannot restart 2-wide until recovery at t=10.
+        let mut s = InterTaskScheduler::new(2, Policy::Optimal);
+        s.submit(0, 2, 10.0, 10.0).unwrap();
+        assert_eq!(s.drain_started().len(), 1);
+        s.advance_clock(4.0);
+        s.fail_gpu(0).unwrap();
+        let ev = s.drain_evicted();
+        assert_eq!(ev.len(), 1);
+        assert_eq!(
+            (ev[0].id, ev[0].time, ev[0].gpus, ev[0].reason),
+            (0, 4.0, 2, EvictReason::GpuFail)
+        );
+        assert_eq!(ev[0].placement.as_ref().unwrap().len(), 2);
+        assert_eq!(s.fault_evictions, 1);
+        assert!(s.drain_started().is_empty(), "2-wide cannot seat on 1 healthy GPU");
+        // double-fail is a structured error, like the cluster's
+        assert!(s.fail_gpu(0).is_err());
+        s.advance_clock(10.0);
+        s.recover_gpu(0).unwrap();
+        let started = s.drain_started();
+        assert_eq!(started.len(), 1);
+        assert_eq!((started[0].id, started[0].time), (0, 10.0));
+        assert!(started[0].resumed_from.is_some());
+        let mk = s.run_to_completion();
+        assert!(s.all_done());
+        // 4s of progress survived; the remaining 6s run 10..16
+        assert!((mk - 16.0).abs() < 1e-9, "makespan {mk}");
+    }
+
+    #[test]
+    fn checkpoint_interval_floors_the_progress_credit() {
+        // same failure, but checkpoints every 3 nominal seconds: the 4s
+        // of progress floors to 3, so 7s remain after restore
+        let mut s = InterTaskScheduler::new(2, Policy::Optimal);
+        s.set_fault_checkpoint_interval(3.0);
+        s.submit(0, 2, 10.0, 10.0).unwrap();
+        s.advance_clock(4.0);
+        s.fail_gpu(0).unwrap();
+        s.advance_clock(10.0);
+        s.recover_gpu(0).unwrap();
+        let mk = s.run_to_completion();
+        assert!(s.all_done());
+        assert!((mk - 17.0).abs() < 1e-9, "makespan {mk}");
+    }
+
+    #[test]
+    fn failure_of_one_gpu_frees_the_victims_other_gpus() {
+        // 4 GPUs: task 0 holds all four; a queued 1-GPU task backfills
+        // the three healthy GPUs the eviction freed, immediately
+        let mut s = InterTaskScheduler::new(4, Policy::Optimal);
+        s.submit(0, 4, 10.0, 10.0).unwrap();
+        s.submit(1, 1, 5.0, 5.0).unwrap();
+        s.drain_started();
+        s.advance_clock(2.0);
+        s.fail_gpu(0).unwrap();
+        let started = s.drain_started();
+        assert_eq!(started.len(), 1, "the freed healthy GPUs must backfill");
+        assert_eq!(started[0].id, 1);
+        assert!(!started[0].placement.gpus().contains(&0));
+    }
+
+    #[test]
+    fn island_derate_stretches_and_restore_recovers() {
+        // 1-GPU task, island derated 2x at t=2, restored at t=6: 2s at
+        // full speed, 4 wall seconds at half speed (2 nominal), then
+        // the remaining 6 nominal at full speed -> completion at 12
+        let mut s = InterTaskScheduler::new(2, Policy::Optimal);
+        s.submit(0, 1, 10.0, 10.0).unwrap();
+        s.advance_clock(2.0);
+        s.set_island_derate(0, 2.0).unwrap();
+        let rp = s.drain_repriced();
+        assert_eq!(rp.len(), 1);
+        assert_eq!(rp[0].completion.to_bits(), 18.0f64.to_bits());
+        s.advance_clock(6.0);
+        s.set_island_derate(0, 1.0).unwrap();
+        let rp = s.drain_repriced();
+        assert_eq!(rp.len(), 1, "the restore must reprice back to full speed");
+        assert_eq!(rp[0].completion.to_bits(), 12.0f64.to_bits());
+        let mk = s.run_to_completion();
+        assert_eq!(mk.to_bits(), 12.0f64.to_bits());
+        // malformed derate calls are structured errors
+        assert!(s.set_island_derate(99, 2.0).is_err());
+        assert!(s.set_island_derate(0, 0.5).is_err());
+    }
+
+    #[test]
+    fn overload_sheds_deadline_hopeless_and_over_quota() {
+        let mut s = InterTaskScheduler::new(1, Policy::Fcfs);
+        s.overload = OverloadConfig { enabled: true, pressure_threshold: 2 };
+        // task 0 occupies the GPU for 100s; tenant 1 queues two tasks
+        // (at the threshold: nothing shed yet)
+        s.submit(0, 1, 100.0, 100.0).unwrap();
+        for i in 1..=2u64 {
+            s.submit_spec(Submission {
+                id: i as usize,
+                est_duration: 10.0,
+                actual_duration: 10.0,
+                arrival: i as f64,
+                tenant: 1,
+                deadline: if i == 1 { 105.0 } else { 0.0 },
+                ..Submission::default()
+            })
+            .unwrap();
+        }
+        assert!(s.drain_evicted().is_empty(), "at the threshold: no shed");
+        // a hopeless arrival (deadline it cannot meet) pushes the queue
+        // over the threshold and is shed first
+        s.submit_spec(Submission {
+            id: 3,
+            est_duration: 10.0,
+            actual_duration: 10.0,
+            arrival: 3.0,
+            tenant: 2,
+            deadline: 5.0,
+            ..Submission::default()
+        })
+        .unwrap();
+        let ev = s.drain_evicted();
+        assert_eq!(ev.len(), 1);
+        assert_eq!((ev[0].id, ev[0].reason), (3, EvictReason::DeadlineHopeless));
+        assert!(ev[0].placement.is_none(), "a queue shed never held GPUs");
+        // tenant 2's arrival re-pressures the queue: tenant 1 is over
+        // its weighted share and sheds its newest task
+        s.submit_spec(Submission {
+            id: 4,
+            est_duration: 10.0,
+            actual_duration: 10.0,
+            arrival: 4.0,
+            tenant: 2,
+            ..Submission::default()
+        })
+        .unwrap();
+        let ev = s.drain_evicted();
+        assert_eq!(ev.len(), 1);
+        assert_eq!((ev[0].id, ev[0].reason), (2, EvictReason::OverQuota));
+        assert_eq!((s.evictions_quota, s.evictions_deadline), (1, 1));
+        let mk = s.run_to_completion();
+        assert!(s.all_done(), "shed tasks leave the table entirely");
+        // survivors: 0 (0..100), then FCFS 1 (100..110) and 4 (110..120)
+        assert!((mk - 120.0).abs() < 1e-9, "makespan {mk}");
+        // task 1 finished at 110, past its 105 deadline: one completion
+        // miss on top of the hopeless shed
+        assert_eq!(s.deadline_misses, 2);
     }
 
     #[test]

@@ -63,11 +63,14 @@ use crate::coordinator::shared::SharingConfig;
 use crate::coordinator::task_runner::{make_jobs, RunConfig, TaskCursor};
 use crate::data::synth::{dataset_profile, DatasetProfile};
 use crate::perfmodel::{task_workload, StepTimeModel};
-use crate::sched::inter::{InterTaskScheduler, Policy, Pricing, SchedTuning, Submission, TaskShape};
+use crate::sched::inter::{
+    InterTaskScheduler, OverloadConfig, Policy, Pricing, SchedTuning, Submission, TaskShape,
+};
 use crate::sched::intra::{admit_priced, group_by_batch, GroupPricer};
 use crate::util::threadpool::scoped_map;
 
 use super::event::{EventKind, EventLog};
+use super::faults::{FaultEvent, FaultPlan, TimedFault};
 use super::trace::{Trace, TraceSource};
 
 /// Harness configuration: the cluster plus the per-task run switches.
@@ -119,6 +122,14 @@ pub struct HarnessConfig {
     /// O(live tasks): digest, makespan and every decision are unchanged,
     /// only `EventLog::events()` comes back empty.
     pub retain_events: bool,
+    /// Injected cluster faults (GPU failures, straggler islands),
+    /// merged into the event loop on all three paths.
+    /// [`FaultPlan::none()`] (the default) injects nothing and every
+    /// timeline is bit-identical to the pre-fault engine.
+    pub faults: FaultPlan,
+    /// Admission / overload control (per-tenant weighted queue sheds,
+    /// SLO-hopeless drops).  Disabled by default — bitwise inert.
+    pub overload: OverloadConfig,
 }
 
 impl Default for HarnessConfig {
@@ -137,6 +148,8 @@ impl Default for HarnessConfig {
             n_slots: 4,
             log_body_events: false,
             retain_events: true,
+            faults: FaultPlan::none(),
+            overload: OverloadConfig::default(),
         }
     }
 }
@@ -180,6 +193,14 @@ pub struct HarnessReport {
     pub reprices: usize,
     /// Σ checkpoint-transfer wall seconds charged to migrations.
     pub migration_charge: f64,
+    /// Runners evicted by GPU failures (each later checkpoint-restored).
+    pub fault_evictions: usize,
+    /// Queued tasks shed by overload control (over-quota +
+    /// deadline-hopeless); they never complete.
+    pub sheds: usize,
+    /// Tasks that missed their SLO deadline: completed past it or shed
+    /// as deadline-hopeless.
+    pub deadline_misses: usize,
 }
 
 /// Timeline-only result of `SimEngine::replay` (no per-task outcomes —
@@ -202,6 +223,13 @@ pub struct Timeline {
     pub reprices: usize,
     /// Σ checkpoint-transfer wall seconds charged to migrations.
     pub migration_charge: f64,
+    /// Runners evicted by GPU failures (each later checkpoint-restored).
+    pub fault_evictions: usize,
+    /// Queued tasks shed by overload control; they never complete.
+    pub sheds: usize,
+    /// Tasks that missed their SLO deadline (completed late or shed as
+    /// deadline-hopeless).
+    pub deadline_misses: usize,
 }
 
 /// A body-level marker produced while a task body is simulated on the
@@ -318,6 +346,13 @@ pub struct SourceReport {
     pub placement_comm_cost: f64,
     pub reprices: usize,
     pub migration_charge: f64,
+    /// Runners evicted by GPU failures (each later checkpoint-restored).
+    pub fault_evictions: usize,
+    /// Queued tasks shed by overload control; they never complete.
+    pub sheds: usize,
+    /// Tasks that missed their SLO deadline (completed late or shed as
+    /// deadline-hopeless).
+    pub deadline_misses: usize,
     /// Entries the source delivered (and the loop completed).
     pub tasks: usize,
     /// Distinct body-relevant spec shapes simulated (memo size).
@@ -355,6 +390,61 @@ struct SourceState {
 /// on (model, dataset, objective, GPU width, seq len, epochs, samples,
 /// seed, search space).  The task *name* and *priority* are deliberately
 /// excluded: two tenants submitting the same sweep share one body.
+/// Advance the scheduler's clock to a fault's time, record its digest
+/// event, and apply it — shared verbatim by all three event loops, so
+/// the fault timeline cannot drift between them.  The clock advances
+/// *before* the fault applies: a failure's eviction credits runner
+/// progress up to the failure instant, not the previous event's.
+fn apply_fault(
+    sched: &mut InterTaskScheduler,
+    log: &mut EventLog,
+    tf: TimedFault,
+) -> Result<()> {
+    let t = tf.time;
+    sched.advance_clock(t);
+    match tf.event {
+        FaultEvent::GpuFail { gpu } => {
+            log.record(t, EventKind::Fail { gpu });
+            sched
+                .fail_gpu(gpu)
+                .with_context(|| format!("applying GPU {gpu} failure at t = {t}"))?;
+        }
+        FaultEvent::GpuRecover { gpu } => {
+            log.record(t, EventKind::Recover { gpu });
+            sched
+                .recover_gpu(gpu)
+                .with_context(|| format!("recovering GPU {gpu} at t = {t}"))?;
+        }
+        FaultEvent::IslandSlowdown { island, factor } => {
+            log.record(t, EventKind::Slowdown { island, factor });
+            sched
+                .set_island_derate(island, factor)
+                .with_context(|| format!("derating island {island} at t = {t}"))?;
+        }
+        FaultEvent::IslandRestore { island } => {
+            log.record(t, EventKind::Restore { island });
+            sched
+                .set_island_derate(island, 1.0)
+                .with_context(|| format!("restoring island {island} at t = {t}"))?;
+        }
+    }
+    Ok(())
+}
+
+/// FNV-1a hash of a tenant name — the scheduler groups queue shares by
+/// this id.  The empty name hashes to 0: "untagged", one shared pool.
+fn tenant_hash(name: &str) -> u64 {
+    if name.is_empty() {
+        return 0;
+    }
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
 fn body_key(spec: &TaskSpec) -> String {
     let mut k = format!(
         "{}|{}|{}|{}|{}|{}|{}|{}",
@@ -607,12 +697,18 @@ impl SimEngine {
             );
         }
         let topo = self.cfg.topology();
+        self.cfg
+            .faults
+            .validate(self.cfg.total_gpus, topo.n_islands())
+            .context("invalid fault plan")?;
         let cluster = SimCluster::with_topology(self.gpu.clone(), topo.clone());
         let mut sched = InterTaskScheduler::with_cluster(cluster, self.cfg.policy);
         sched.place = self.cfg.place;
         sched.enable_preemption = self.cfg.preempt_on_arrival;
         sched.tuning = self.cfg.tuning;
         sched.set_sharing(self.cfg.sharing);
+        sched.overload = self.cfg.overload;
+        sched.set_fault_checkpoint_interval(self.cfg.faults.checkpoint_interval);
         // pricing inputs: the perfmodel charges each task's placement and
         // neighborhood through its representative executor workload
         let shapes: Option<Vec<TaskShape>> = if self.cfg.pricing.any() {
@@ -653,18 +749,33 @@ impl SimEngine {
         let mut placement_comm_cost = 0.0f64;
         let mut reprices = 0usize;
         let mut next_arrival = 0usize;
+        let mut next_fault = 0usize;
         loop {
             let arrival = trace.entries.get(next_arrival).map(|e| e.arrival);
             let completion = sched.peek_next_completion();
+            // faults win every time tie: capacity changes before anything
+            // plans over it; trailing faults drain after the last task
+            let next_other = arrival
+                .unwrap_or(f64::INFINITY)
+                .min(completion.map(|(_, ct)| ct).unwrap_or(f64::INFINITY));
+            let take_fault = match self.cfg.faults.events.get(next_fault) {
+                Some(tf) => tf.time <= next_other,
+                None => false,
+            };
             // completions win time ties: capacity frees before the
             // arriving task replans over it
             let take_arrival = match (arrival, completion) {
-                (None, None) => break,
+                (None, None) if !take_fault => break,
+                (None, None) => false,
                 (Some(_), None) => true,
                 (None, Some(_)) => false,
                 (Some(at), Some((_, ct))) => at < ct,
             };
-            if take_arrival {
+            if take_fault {
+                let tf = self.cfg.faults.events[next_fault];
+                next_fault += 1;
+                apply_fault(&mut sched, &mut log, tf)?;
+            } else if take_arrival {
                 // Coalesced fast path: every arrival carrying this exact
                 // timestamp (bit-equal) is admitted as one batch behind a
                 // single replan.  A singleton batch takes exactly the old
@@ -690,6 +801,13 @@ impl SimEngine {
                         arrival: at,
                         priority: e.spec.priority,
                         shape: shapes.as_ref().map(|s| s[i].clone()),
+                        tenant: tenant_hash(&e.spec.tenant),
+                        tenant_weight: e.spec.tenant_weight,
+                        deadline: if e.spec.slo_deadline > 0.0 {
+                            at + e.spec.slo_deadline
+                        } else {
+                            0.0
+                        },
                     });
                 }
                 sched
@@ -699,12 +817,25 @@ impl SimEngine {
                 let (id, at) = sched
                     .complete_next()
                     .context("processing the next completion event")?
-                    .expect("peeked completion");
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("peeked completion vanished before complete_next")
+                    })?;
                 log.record(
                     at,
                     EventKind::Complete {
                         task: id,
                         gpus: outcomes[id].gpus,
+                    },
+                );
+            }
+            for d in sched.drain_evicted() {
+                log.record(
+                    d.time,
+                    EventKind::Evict {
+                        task: d.id,
+                        gpus: d.gpus,
+                        placement: d.placement.as_ref().map(|p| (**p).clone()).unwrap_or_default(),
+                        reason: d.reason,
                     },
                 );
             }
@@ -809,6 +940,9 @@ impl SimEngine {
             placement_comm_cost,
             reprices,
             migration_charge: sched.migration_charge,
+            fault_evictions: sched.fault_evictions,
+            sheds: sched.evictions_quota + sched.evictions_deadline,
+            deadline_misses: sched.deadline_misses,
         })
     }
 
@@ -846,6 +980,9 @@ impl SimEngine {
             placement_comm_cost: tl.placement_comm_cost,
             reprices: tl.reprices,
             migration_charge: tl.migration_charge,
+            fault_evictions: tl.fault_evictions,
+            sheds: tl.sheds,
+            deadline_misses: tl.deadline_misses,
         })
     }
 
@@ -901,12 +1038,18 @@ impl SimEngine {
                 .with_context(|| format!("unknown dataset '{}'", entry.spec.dataset))?;
         }
         let topo = self.cfg.topology();
+        self.cfg
+            .faults
+            .validate(self.cfg.total_gpus, topo.n_islands())
+            .context("invalid fault plan")?;
         let cluster = SimCluster::with_topology(self.gpu.clone(), topo.clone());
         let mut sched = InterTaskScheduler::with_cluster(cluster, self.cfg.policy);
         sched.place = self.cfg.place;
         sched.enable_preemption = self.cfg.preempt_on_arrival;
         sched.tuning = self.cfg.tuning;
         sched.set_sharing(self.cfg.sharing);
+        sched.overload = self.cfg.overload;
+        sched.set_fault_checkpoint_interval(self.cfg.faults.checkpoint_interval);
         let priced = self.cfg.pricing.any();
         if priced {
             sched.set_pricer(
@@ -1020,23 +1163,38 @@ impl SimEngine {
         let mut placements: Vec<Placement> = vec![Placement::default(); n];
         let mut ests: Vec<f64> = vec![0.0; n];
         let mut body_logged: Vec<bool> = vec![false; n];
+        let mut shed: Vec<bool> = vec![false; n];
         let mut migrations = 0usize;
         let mut cross_island_allocs = 0usize;
         let mut placement_comm_cost = 0.0f64;
         let mut reprices = 0usize;
         let mut next_arrival = 0usize;
+        let mut next_fault = 0usize;
         loop {
             let arrival = trace.entries.get(next_arrival).map(|e| e.arrival);
             let completion = sched.peek_next_completion();
+            // faults win every time tie — identical to the batch loop
+            let next_other = arrival
+                .unwrap_or(f64::INFINITY)
+                .min(completion.map(|(_, ct)| ct).unwrap_or(f64::INFINITY));
+            let take_fault = match self.cfg.faults.events.get(next_fault) {
+                Some(tf) => tf.time <= next_other,
+                None => false,
+            };
             // completions win time ties: capacity frees before the
             // arriving task replans over it — identical to the batch loop
             let take_arrival = match (arrival, completion) {
-                (None, None) => break,
+                (None, None) if !take_fault => break,
+                (None, None) => false,
                 (Some(_), None) => true,
                 (None, Some(_)) => false,
                 (Some(at), Some((_, ct))) => at < ct,
             };
-            if take_arrival {
+            if take_fault {
+                let tf = self.cfg.faults.events[next_fault];
+                next_fault += 1;
+                apply_fault(&mut sched, &mut log, tf)?;
+            } else if take_arrival {
                 // Coalesced fast path — mirror of the batch loop: every
                 // bit-equal-timestamp arrival joins one batch behind a
                 // single replan; singleton batches take exactly the old
@@ -1051,8 +1209,9 @@ impl SimEngine {
                     next_arrival += 1;
                     let gpus = entry.spec.num_gpus;
                     log.record(at, EventKind::Arrival { task: i, gpus });
-                    let model =
-                        MODEL_FAMILY.get(&entry.spec.model).expect("pre-validated");
+                    let model = MODEL_FAMILY
+                        .get(&entry.spec.model)
+                        .with_context(|| format!("unknown model '{}'", entry.spec.model))?;
                     let est = {
                         let mut guard = state.borrow_mut();
                         guard
@@ -1083,6 +1242,13 @@ impl SimEngine {
                         arrival: at,
                         priority: entry.spec.priority,
                         shape,
+                        tenant: tenant_hash(&entry.spec.tenant),
+                        tenant_weight: entry.spec.tenant_weight,
+                        deadline: if entry.spec.slo_deadline > 0.0 {
+                            at + entry.spec.slo_deadline
+                        } else {
+                            0.0
+                        },
                     });
                 }
                 sched
@@ -1092,12 +1258,30 @@ impl SimEngine {
                 let (id, at) = sched
                     .complete_next()
                     .context("processing the next completion event")?
-                    .expect("peeked completion");
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("peeked completion vanished before complete_next")
+                    })?;
                 log.record(
                     at,
                     EventKind::Complete {
                         task: id,
                         gpus: trace.entries[id].spec.num_gpus,
+                    },
+                );
+            }
+            for d in sched.drain_evicted() {
+                if d.placement.is_none() {
+                    // an overload shed: the task leaves the system and
+                    // will never resolve a body
+                    shed[d.id] = true;
+                }
+                log.record(
+                    d.time,
+                    EventKind::Evict {
+                        task: d.id,
+                        gpus: d.gpus,
+                        placement: d.placement.as_ref().map(|p| (**p).clone()).unwrap_or_default(),
+                        reason: d.reason,
                     },
                 );
             }
@@ -1234,13 +1418,34 @@ impl SimEngine {
             placement_comm_cost,
             reprices,
             migration_charge: sched.migration_charge,
+            fault_evictions: sched.fault_evictions,
+            sheds: sched.evictions_quota + sched.evictions_deadline,
+            deadline_misses: sched.deadline_misses,
         };
         let guard = state.borrow();
         let mut summaries = Vec::with_capacity(n);
         for (i, entry) in trace.entries.iter().enumerate() {
-            let b = guard.resolved[i]
-                .as_ref()
-                .expect("every completed task has a resolved body");
+            let b = match guard.resolved[i].as_ref() {
+                Some(b) => b,
+                // a task shed before its first start never resolved a
+                // body: its summary carries NaN actuals and zero samples
+                None if shed[i] => {
+                    summaries.push(TaskSummary {
+                        name: entry.spec.name.clone(),
+                        gpus: entry.spec.num_gpus,
+                        est_duration: ests[i],
+                        actual_duration: f64::NAN,
+                        best_val: f64::NAN,
+                        samples_used: 0,
+                        samples_budget: 0,
+                    });
+                    continue;
+                }
+                None => anyhow::bail!(
+                    "task {i} ('{}') completed without a resolved body",
+                    entry.spec.name
+                ),
+            };
             summaries.push(TaskSummary {
                 name: entry.spec.name.clone(),
                 gpus: entry.spec.num_gpus,
@@ -1299,12 +1504,18 @@ impl SimEngine {
             "run_source retains nothing per task; use run_streaming for body events"
         );
         let topo = self.cfg.topology();
+        self.cfg
+            .faults
+            .validate(self.cfg.total_gpus, topo.n_islands())
+            .context("invalid fault plan")?;
         let cluster = SimCluster::with_topology(self.gpu.clone(), topo.clone());
         let mut sched = InterTaskScheduler::with_cluster(cluster, self.cfg.policy);
         sched.place = self.cfg.place;
         sched.enable_preemption = self.cfg.preempt_on_arrival;
         sched.tuning = self.cfg.tuning;
         sched.set_sharing(self.cfg.sharing);
+        sched.overload = self.cfg.overload;
+        sched.set_fault_checkpoint_interval(self.cfg.faults.checkpoint_interval);
         // the scheduler-side half of the O(live) bound: completed tasks
         // leave the slab instead of lingering as dead slots
         sched.retire_completed = true;
@@ -1370,15 +1581,13 @@ impl SimEngine {
             }));
         }
         // every decision drained below names a task that is still live
-        // (completions pop *after* their event is recorded), so its GPU
-        // width comes from the live window
-        let gpus_of = |id: usize| -> usize {
-            state
-                .borrow()
-                .live
-                .get(&id)
-                .map(|s| s.num_gpus)
-                .expect("decision names a live task")
+        // (completions pop *after* their event is recorded, sheds drain
+        // before anything else), so its GPU width comes from the live
+        // window
+        let gpus_of = |id: usize| -> Result<usize> {
+            state.borrow().live.get(&id).map(|s| s.num_gpus).ok_or_else(|| {
+                anyhow::anyhow!("scheduler decision names task {id}, which is not live")
+            })
         };
         // NOTE: third sibling of the `replay` / `run_streaming` event
         // loops — same tie breaking, same coalesced-batch admission,
@@ -1393,26 +1602,48 @@ impl SimEngine {
         let mut placement_comm_cost = 0.0f64;
         let mut reprices = 0usize;
         let mut next_id = 0usize;
+        let mut next_fault = 0usize;
         let mut peeked = source.next_entry();
         loop {
             let arrival = peeked.as_ref().map(|e| e.arrival);
             let completion = sched.peek_next_completion();
+            // faults win every time tie — identical to the twins
+            let next_other = arrival
+                .unwrap_or(f64::INFINITY)
+                .min(completion.map(|(_, ct)| ct).unwrap_or(f64::INFINITY));
+            let take_fault = match self.cfg.faults.events.get(next_fault) {
+                Some(tf) => tf.time <= next_other,
+                None => false,
+            };
             // completions win time ties: capacity frees before the
             // arriving task replans over it — identical to the twins
             let take_arrival = match (arrival, completion) {
-                (None, None) => break,
+                (None, None) if !take_fault => break,
+                (None, None) => false,
                 (Some(_), None) => true,
                 (None, Some(_)) => false,
                 (Some(at), Some((_, ct))) => at < ct,
             };
-            if take_arrival {
+            if take_fault {
+                let tf = self.cfg.faults.events[next_fault];
+                next_fault += 1;
+                apply_fault(&mut sched, &mut log, tf)?;
+            } else if take_arrival {
                 // coalesced batch, mirroring the twins: pull every
                 // lookahead entry carrying this exact timestamp
-                let at = peeked.as_ref().expect("take_arrival peeked").arrival;
+                let at = match peeked.as_ref() {
+                    Some(e) => e.arrival,
+                    None => anyhow::bail!("arrival branch taken with no peeked entry"),
+                };
                 let mut batch = Vec::new();
-                while matches!(peeked.as_ref(), Some(e) if e.arrival.to_bits() == at.to_bits())
-                {
-                    let entry = peeked.take().expect("matched above");
+                loop {
+                    let entry = match peeked.take() {
+                        Some(e) if e.arrival.to_bits() == at.to_bits() => e,
+                        other => {
+                            peeked = other;
+                            break;
+                        }
+                    };
                     peeked = source.next_entry();
                     let i = next_id;
                     next_id += 1;
@@ -1459,6 +1690,13 @@ impl SimEngine {
                         arrival: at,
                         priority: entry.spec.priority,
                         shape,
+                        tenant: tenant_hash(&entry.spec.tenant),
+                        tenant_weight: entry.spec.tenant_weight,
+                        deadline: if entry.spec.slo_deadline > 0.0 {
+                            at + entry.spec.slo_deadline
+                        } else {
+                            0.0
+                        },
                     });
                     state.borrow_mut().live.insert(i, entry.spec);
                 }
@@ -1469,7 +1707,9 @@ impl SimEngine {
                 let (id, at) = sched
                     .complete_next()
                     .context("processing the next completion event")?
-                    .expect("peeked completion");
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("peeked completion vanished before complete_next")
+                    })?;
                 // pop the live window: the spec is dead once its task
                 // completes — this is what keeps retained specs O(live)
                 let gpus = state
@@ -1477,15 +1717,31 @@ impl SimEngine {
                     .live
                     .remove(&id)
                     .map(|s| s.num_gpus)
-                    .expect("completed task was live");
+                    .with_context(|| format!("completed task {id} was not live"))?;
                 log.record(at, EventKind::Complete { task: id, gpus });
+            }
+            for d in sched.drain_evicted() {
+                if d.placement.is_none() {
+                    // an overload shed leaves the system entirely: its
+                    // spec is dead, like a completion's
+                    state.borrow_mut().live.remove(&d.id);
+                }
+                log.record(
+                    d.time,
+                    EventKind::Evict {
+                        task: d.id,
+                        gpus: d.gpus,
+                        placement: d.placement.as_ref().map(|p| (**p).clone()).unwrap_or_default(),
+                        reason: d.reason,
+                    },
+                );
             }
             for p in sched.drain_preempted() {
                 log.record(
                     p.time,
                     EventKind::Preempt {
                         task: p.id,
-                        gpus: gpus_of(p.id),
+                        gpus: gpus_of(p.id)?,
                         placement: (*p.placement).clone(),
                     },
                 );
@@ -1499,7 +1755,7 @@ impl SimEngine {
                     &d.placement,
                     crate::cluster::topology::PLACE_SCORE_BYTES,
                 );
-                let gpus = gpus_of(d.id);
+                let gpus = gpus_of(d.id)?;
                 let kind = match d.resumed_from {
                     None => EventKind::Start {
                         task: d.id,
@@ -1528,7 +1784,7 @@ impl SimEngine {
                     a.time,
                     EventKind::Adopt {
                         task: a.id,
-                        gpus: gpus_of(a.id),
+                        gpus: gpus_of(a.id)?,
                         placement: (*a.placement).clone(),
                     },
                 );
@@ -1538,7 +1794,7 @@ impl SimEngine {
                     m.time,
                     EventKind::Merge {
                         task: m.id,
-                        gpus: gpus_of(m.id),
+                        gpus: gpus_of(m.id)?,
                         from: (*m.from).clone(),
                         to: (*m.to).clone(),
                     },
@@ -1550,7 +1806,7 @@ impl SimEngine {
                     r.time,
                     EventKind::Reprice {
                         task: r.id,
-                        gpus: gpus_of(r.id),
+                        gpus: gpus_of(r.id)?,
                         completion: r.completion,
                     },
                 );
@@ -1585,6 +1841,9 @@ impl SimEngine {
             placement_comm_cost,
             reprices,
             migration_charge: sched.migration_charge,
+            fault_evictions: sched.fault_evictions,
+            sheds: sched.evictions_quota + sched.evictions_deadline,
+            deadline_misses: sched.deadline_misses,
             tasks: next_id,
             distinct_bodies: guard.memo.len(),
             memo_hits: guard.memo_hits,

@@ -31,6 +31,7 @@ use anyhow::Result;
 
 use crate::cluster::Placement;
 use crate::coordinator::job::ExitReason;
+use crate::sched::inter::EvictReason;
 use crate::util::hash::{fnv1a_mix, FNV_OFFSET};
 use crate::util::json::Json;
 
@@ -114,6 +115,28 @@ pub enum EventKind {
         from: Placement,
         to: Placement,
     },
+    /// A GPU failed (fault plan): it leaves the allocatable bitmap and
+    /// every runner holding it is evicted for checkpoint-restore.
+    /// Cluster-level — `task()`/`gpus()` are 0.
+    Fail { gpu: usize },
+    /// A failed GPU rejoined the allocatable bitmap.
+    Recover { gpu: usize },
+    /// An NVLink island turned straggler: every placement touching it
+    /// runs `factor`× slower until `Restore` (priced through the
+    /// dirty-set reprice flow).  Cluster-level.
+    Slowdown { island: usize, factor: f64 },
+    /// A straggling island returned to nominal speed.
+    Restore { island: usize },
+    /// A task was evicted — by a GPU failure (checkpoint-restored from
+    /// its last segment boundary; `placement` is what it released) or by
+    /// overload control (over-quota / deadline-hopeless shed from the
+    /// waiting queue; `placement` is empty).
+    Evict {
+        task: usize,
+        gpus: usize,
+        placement: Placement,
+        reason: EvictReason,
+    },
 }
 
 impl EventKind {
@@ -130,6 +153,11 @@ impl EventKind {
             EventKind::JobExit { .. } => "job-exit",
             EventKind::Adopt { .. } => "adopt",
             EventKind::Merge { .. } => "merge",
+            EventKind::Fail { .. } => "fail",
+            EventKind::Recover { .. } => "recover",
+            EventKind::Slowdown { .. } => "slowdown",
+            EventKind::Restore { .. } => "restore",
+            EventKind::Evict { .. } => "evict",
         }
     }
 
@@ -145,7 +173,13 @@ impl EventKind {
             | EventKind::Segment { task, .. }
             | EventKind::JobExit { task, .. }
             | EventKind::Adopt { task, .. }
-            | EventKind::Merge { task, .. } => task,
+            | EventKind::Merge { task, .. }
+            | EventKind::Evict { task, .. } => task,
+            // cluster-level fault events name no task
+            EventKind::Fail { .. }
+            | EventKind::Recover { .. }
+            | EventKind::Slowdown { .. }
+            | EventKind::Restore { .. } => 0,
         }
     }
 
@@ -161,7 +195,12 @@ impl EventKind {
             | EventKind::Segment { gpus, .. }
             | EventKind::JobExit { gpus, .. }
             | EventKind::Adopt { gpus, .. }
-            | EventKind::Merge { gpus, .. } => gpus,
+            | EventKind::Merge { gpus, .. }
+            | EventKind::Evict { gpus, .. } => gpus,
+            EventKind::Fail { .. }
+            | EventKind::Recover { .. }
+            | EventKind::Slowdown { .. }
+            | EventKind::Restore { .. } => 0,
         }
     }
 
@@ -191,6 +230,11 @@ impl EventKind {
             EventKind::JobExit { .. } => 8,
             EventKind::Adopt { .. } => 9,
             EventKind::Merge { .. } => 10,
+            EventKind::Fail { .. } => 11,
+            EventKind::Recover { .. } => 12,
+            EventKind::Slowdown { .. } => 13,
+            EventKind::Restore { .. } => 14,
+            EventKind::Evict { .. } => 15,
         }
     }
 
@@ -247,6 +291,20 @@ impl EventKind {
                 fnv1a_mix(h, *job as u64);
                 fnv1a_mix(h, Self::reason_code(*reason));
                 fnv1a_mix(h, nominal_at.to_bits());
+            }
+            // fault-plan events: the failed/recovered GPU, the derated
+            // island and the exact factor bits are replay-contract state
+            EventKind::Fail { gpu } | EventKind::Recover { gpu } => {
+                fnv1a_mix(h, *gpu as u64);
+            }
+            EventKind::Slowdown { island, factor } => {
+                fnv1a_mix(h, *island as u64);
+                fnv1a_mix(h, factor.to_bits());
+            }
+            EventKind::Restore { island } => fnv1a_mix(h, *island as u64),
+            EventKind::Evict { placement, reason, .. } => {
+                mix_placement(h, placement);
+                fnv1a_mix(h, reason.code());
             }
         }
     }
@@ -355,6 +413,43 @@ impl Event {
                 num(out, "task", self.kind.task() as f64);
                 num(out, "time", self.time);
             }
+            EventKind::Fail { gpu } | EventKind::Recover { gpu } => {
+                num(out, "gpu", *gpu as f64);
+                num(out, "gpus", self.kind.gpus() as f64);
+                text(out, "kind", self.kind.label());
+                num(out, "seq", self.seq as f64);
+                num(out, "task", self.kind.task() as f64);
+                num(out, "time", self.time);
+            }
+            EventKind::Slowdown { island, factor } => {
+                num(out, "factor", *factor);
+                num(out, "gpus", self.kind.gpus() as f64);
+                num(out, "island", *island as f64);
+                text(out, "kind", self.kind.label());
+                num(out, "seq", self.seq as f64);
+                num(out, "task", self.kind.task() as f64);
+                num(out, "time", self.time);
+            }
+            EventKind::Restore { island } => {
+                num(out, "gpus", self.kind.gpus() as f64);
+                num(out, "island", *island as f64);
+                text(out, "kind", self.kind.label());
+                num(out, "seq", self.seq as f64);
+                num(out, "task", self.kind.task() as f64);
+                num(out, "time", self.time);
+            }
+            EventKind::Evict { placement, reason, .. } => {
+                num(out, "gpus", self.kind.gpus() as f64);
+                text(out, "kind", self.kind.label());
+                // queue-shed evictions release nothing: no placement key
+                if !placement.is_empty() {
+                    arr(out, "placement", placement);
+                }
+                text(out, "reason", reason.as_str());
+                num(out, "seq", self.seq as f64);
+                num(out, "task", self.kind.task() as f64);
+                num(out, "time", self.time);
+            }
         }
         // every kind wrote at least one trailing comma
         out.pop();
@@ -389,6 +484,18 @@ impl fmt::Display for Event {
             }
             EventKind::JobExit { job, reason, nominal_at, .. } => {
                 write!(f, " job={job} {} body-t={nominal_at:.3}", reason.as_str())
+            }
+            EventKind::Fail { gpu } | EventKind::Recover { gpu } => write!(f, " gpu={gpu}"),
+            EventKind::Slowdown { island, factor } => {
+                write!(f, " island={island} x{factor}")
+            }
+            EventKind::Restore { island } => write!(f, " island={island}"),
+            EventKind::Evict { placement, reason, .. } => {
+                write!(f, " {}", reason.as_str())?;
+                if !placement.is_empty() {
+                    write!(f, " off={placement}")?;
+                }
+                Ok(())
             }
             _ => Ok(()),
         }
@@ -529,6 +636,20 @@ impl EventLog {
                 r.x_bits = nominal_at.to_bits();
                 r.reason = EventKind::reason_code(*reason) as u8;
             }
+            EventKind::Fail { gpu } | EventKind::Recover { gpu } => {
+                r.aux = *gpu as u64;
+            }
+            EventKind::Slowdown { island, factor } => {
+                r.aux = *island as u64;
+                r.x_bits = factor.to_bits();
+            }
+            EventKind::Restore { island } => {
+                r.aux = *island as u64;
+            }
+            EventKind::Evict { placement, reason, .. } => {
+                r.p1 = self.push_placement(placement);
+                r.reason = reason.code() as u8;
+            }
         }
         r
     }
@@ -596,11 +717,24 @@ impl EventLog {
                 gpus,
                 placement: self.placement_at(r.p1),
             },
-            _ => EventKind::Merge {
+            10 => EventKind::Merge {
                 task,
                 gpus,
                 from: self.placement_at(r.p1),
                 to: self.placement_at(r.p2),
+            },
+            11 => EventKind::Fail { gpu: r.aux as usize },
+            12 => EventKind::Recover { gpu: r.aux as usize },
+            13 => EventKind::Slowdown {
+                island: r.aux as usize,
+                factor: f64::from_bits(r.x_bits),
+            },
+            14 => EventKind::Restore { island: r.aux as usize },
+            _ => EventKind::Evict {
+                task,
+                gpus,
+                placement: self.placement_at(r.p1),
+                reason: EvictReason::from_code(r.reason),
             },
         };
         Event {
@@ -820,6 +954,47 @@ impl EventLog {
                         anyhow::anyhow!("line {}: 'nominal_at' not a number", lineno + 1)
                     })?,
                 },
+                Some(k @ ("fail" | "recover")) => {
+                    let gpu = j.req("gpu")?.as_usize().ok_or_else(|| {
+                        anyhow::anyhow!("line {}: 'gpu' not an index", lineno + 1)
+                    })?;
+                    if k == "fail" {
+                        EventKind::Fail { gpu }
+                    } else {
+                        EventKind::Recover { gpu }
+                    }
+                }
+                Some("slowdown") => EventKind::Slowdown {
+                    island: j.req("island")?.as_usize().ok_or_else(|| {
+                        anyhow::anyhow!("line {}: 'island' not an index", lineno + 1)
+                    })?,
+                    factor: j.req("factor")?.as_f64().ok_or_else(|| {
+                        anyhow::anyhow!("line {}: 'factor' not a number", lineno + 1)
+                    })?,
+                },
+                Some("restore") => EventKind::Restore {
+                    island: j.req("island")?.as_usize().ok_or_else(|| {
+                        anyhow::anyhow!("line {}: 'island' not an index", lineno + 1)
+                    })?,
+                },
+                Some("evict") => EventKind::Evict {
+                    task,
+                    gpus,
+                    // queue-shed evictions release no GPUs and dump no
+                    // placement key; fault evictions carry what freed
+                    placement: if j.get("placement").is_some() {
+                        Self::placement_from(&j, "placement", gpus)?
+                    } else {
+                        Placement::default()
+                    },
+                    reason: j
+                        .req("reason")?
+                        .as_str()
+                        .and_then(EvictReason::parse)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("line {}: unknown evict reason", lineno + 1)
+                        })?,
+                },
                 other => anyhow::bail!("line {}: unknown kind {:?}", lineno + 1, other),
             };
             log.record(time, kind);
@@ -947,7 +1122,13 @@ mod tests {
         // the decoded timeline must be exactly what was recorded, for
         // every kind (placement arena slices, float bit payloads, aux
         // indices, exit reasons)
-        let logs = [sample(), preemptive_sample(), body_sample(), sharing_sample()];
+        let logs = [
+            sample(),
+            preemptive_sample(),
+            body_sample(),
+            sharing_sample(),
+            fault_sample(),
+        ];
         for log in &logs {
             let evs = log.events();
             assert_eq!(evs.len(), log.len());
@@ -1061,6 +1242,22 @@ mod tests {
                     fields.push(("reason", Json::Str(reason.as_str().to_string())));
                     fields.push(("nominal_at", Json::Num(*nominal_at)));
                 }
+                EventKind::Fail { gpu } | EventKind::Recover { gpu } => {
+                    fields.push(("gpu", Json::Num(*gpu as f64)));
+                }
+                EventKind::Slowdown { island, factor } => {
+                    fields.push(("island", Json::Num(*island as f64)));
+                    fields.push(("factor", Json::Num(*factor)));
+                }
+                EventKind::Restore { island } => {
+                    fields.push(("island", Json::Num(*island as f64)));
+                }
+                EventKind::Evict { placement, reason, .. } => {
+                    if !placement.is_empty() {
+                        fields.push(("placement", placement_json(placement)));
+                    }
+                    fields.push(("reason", Json::Str(reason.as_str().to_string())));
+                }
             }
             Json::obj(fields).to_string()
         }
@@ -1109,6 +1306,9 @@ mod tests {
                 nominal_at: 1e-12,
             },
         );
+        for e in fault_sample().events() {
+            log.record(e.time, e.kind);
+        }
         let mut buf = String::new();
         for e in log.events() {
             buf.clear();
@@ -1266,6 +1466,107 @@ mod tests {
         let bad = r#"{"gpus":2,"kind":"adopt","seq":0,"task":0,"time":0}"#;
         assert!(EventLog::from_jsonl(bad).is_err());
         let bad = r#"{"from":[0,1],"gpus":2,"kind":"merge","seq":0,"task":0,"time":0}"#;
+        assert!(EventLog::from_jsonl(bad).is_err());
+    }
+
+    fn fault_sample() -> EventLog {
+        let mut log = sample();
+        log.record(1.0, EventKind::Fail { gpu: 3 });
+        log.record(
+            1.0,
+            EventKind::Evict {
+                task: 0,
+                gpus: 2,
+                placement: p(&[2, 3]),
+                reason: EvictReason::GpuFail,
+            },
+        );
+        log.record(2.0, EventKind::Slowdown { island: 1, factor: 1.75 });
+        log.record(
+            2.5,
+            EventKind::Evict {
+                task: 4,
+                gpus: 1,
+                placement: Placement::default(), // queue shed: nothing held
+                reason: EvictReason::OverQuota,
+            },
+        );
+        log.record(
+            2.5,
+            EventKind::Evict {
+                task: 5,
+                gpus: 1,
+                placement: Placement::default(),
+                reason: EvictReason::DeadlineHopeless,
+            },
+        );
+        log.record(3.0, EventKind::Restore { island: 1 });
+        log.record(4.0, EventKind::Recover { gpu: 3 });
+        log
+    }
+
+    #[test]
+    fn fault_events_roundtrip_digest_and_render() {
+        let log = fault_sample();
+        assert_ne!(log.digest(), sample().digest());
+        let back = EventLog::from_jsonl(&log.to_jsonl()).unwrap();
+        assert_eq!(back, log);
+        assert_eq!(back.digest(), log.digest());
+        // the failed GPU index is digest-bearing
+        let mut other = sample();
+        other.record(1.0, EventKind::Fail { gpu: 5 });
+        let mut same_shape = sample();
+        same_shape.record(1.0, EventKind::Fail { gpu: 3 });
+        assert_ne!(other.digest(), same_shape.digest(), "gpu index must be hashed");
+        // so are the slowdown factor bits
+        let mk = |factor: f64| {
+            let mut l = sample();
+            l.record(2.0, EventKind::Slowdown { island: 1, factor });
+            l
+        };
+        assert_ne!(mk(1.75).digest(), mk(1.75 + 1e-12).digest());
+        // and the evict reason
+        let shed = |reason: EvictReason| {
+            let mut l = sample();
+            l.record(
+                2.5,
+                EventKind::Evict {
+                    task: 4,
+                    gpus: 1,
+                    placement: Placement::default(),
+                    reason,
+                },
+            );
+            l
+        };
+        assert_ne!(
+            shed(EvictReason::OverQuota).digest(),
+            shed(EvictReason::DeadlineHopeless).digest(),
+            "evict reason must be hashed"
+        );
+        let lines = log.lines();
+        assert!(lines[3].contains("fail") && lines[3].contains("gpu=3"), "{}", lines[3]);
+        assert!(
+            lines[4].contains("evict")
+                && lines[4].contains("gpu-fail")
+                && lines[4].contains("off=[2,3]"),
+            "{}",
+            lines[4]
+        );
+        assert!(lines[5].contains("slowdown") && lines[5].contains("x1.75"), "{}", lines[5]);
+        assert!(lines[6].contains("quota"), "{}", lines[6]);
+        assert!(lines[7].contains("deadline"), "{}", lines[7]);
+        assert!(lines[8].contains("restore"), "{}", lines[8]);
+        assert!(lines[9].contains("recover") && lines[9].contains("gpu=3"), "{}", lines[9]);
+        // an eviction never pins a placement: final GPUs still follow
+        // the last Start/Placed/Migrate
+        assert_eq!(log.final_placement(0), Some(p(&[0, 1])));
+        // malformed fault events are rejected on reload
+        let bad = r#"{"gpus":0,"kind":"fail","seq":0,"task":0,"time":0}"#;
+        assert!(EventLog::from_jsonl(bad).is_err());
+        let bad = r#"{"gpus":0,"island":0,"kind":"slowdown","seq":0,"task":0,"time":0}"#;
+        assert!(EventLog::from_jsonl(bad).is_err());
+        let bad = r#"{"gpus":1,"kind":"evict","reason":"warp","seq":0,"task":0,"time":0}"#;
         assert!(EventLog::from_jsonl(bad).is_err());
     }
 

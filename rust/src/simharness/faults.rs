@@ -1,0 +1,311 @@
+//! Deterministic fault plans: *what breaks* and *when*.
+//!
+//! A [`FaultPlan`] is a time-ordered schedule of cluster faults — GPU
+//! failures/recoveries and NVLink-island straggler episodes — that the
+//! engine merges into its event loop alongside arrivals and
+//! completions.  Fault events are part of the bit-identical replay
+//! contract: each one lands in the [`crate::simharness::EventLog`] as a
+//! `Fail`/`Recover`/`Slowdown`/`Restore` digest event (plus an `Evict`
+//! per displaced runner), so two runs with the same (config, trace,
+//! plan) reproduce the same timeline bit for bit.  `FaultPlan::none()`
+//! injects nothing and leaves every existing digest bitwise unchanged —
+//! the property tests pin it.
+//!
+//! Tie breaking: a fault scheduled at the exact time of an arrival or
+//! completion is processed *first* (capacity changes before anything
+//! plans over it), and equal-time faults apply in plan order.
+//!
+//! Checkpoint semantics: when a failure evicts a runner, the runner
+//! keeps the progress it had banked at its last checkpoint boundary —
+//! [`FaultPlan::checkpoint_interval`] nominal-seconds apart, `0.0`
+//! meaning continuous checkpointing (full partial-progress credit, the
+//! optimistic bound).  The restore itself is priced as a checkpoint
+//! transfer through the scheduler's existing migration-charge path when
+//! the task next starts.
+
+use anyhow::Result;
+
+use crate::sched::finite_last_cmp;
+use crate::util::rng::Pcg32;
+
+/// One cluster fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultEvent {
+    /// The GPU leaves the allocatable bitmap; runners holding it are
+    /// evicted and checkpoint-restored elsewhere.
+    GpuFail { gpu: usize },
+    /// The GPU rejoins the allocatable bitmap.
+    GpuRecover { gpu: usize },
+    /// Every placement touching the island runs `factor`× slower until
+    /// the matching [`FaultEvent::IslandRestore`].
+    IslandSlowdown { island: usize, factor: f64 },
+    /// The island returns to nominal speed.
+    IslandRestore { island: usize },
+}
+
+/// A fault pinned to a virtual-clock time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimedFault {
+    pub time: f64,
+    pub event: FaultEvent,
+}
+
+/// A time-ordered fault schedule plus the checkpointing cadence evicted
+/// runners restore from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Nondecreasing by `time`; equal times apply in order.
+    pub events: Vec<TimedFault>,
+    /// Nominal seconds between checkpoint boundaries; `0.0` =
+    /// continuous checkpointing (evicted runners keep all progress).
+    pub checkpoint_interval: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan::none()
+    }
+}
+
+impl FaultPlan {
+    /// The empty plan: injects nothing, replays every trace bitwise
+    /// unchanged.
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            events: Vec::new(),
+            checkpoint_interval: 0.0,
+        }
+    }
+
+    /// Sort `events` into schedule order (stable: equal-time faults keep
+    /// their given order, non-finite times sort last and fail
+    /// `validate`).
+    pub fn new(mut events: Vec<TimedFault>) -> FaultPlan {
+        events.sort_by(|a, b| finite_last_cmp(a.time, b.time));
+        FaultPlan {
+            events,
+            checkpoint_interval: 0.0,
+        }
+    }
+
+    pub fn with_checkpoint_interval(mut self, interval: f64) -> FaultPlan {
+        self.checkpoint_interval = interval;
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Seeded scenario generator: `fails` GPU failure episodes (each on
+    /// a distinct GPU, each paired with a later recovery, so queued work
+    /// can never deadlock on permanently lost capacity) and
+    /// `stragglers` island slowdown episodes (distinct islands, factor
+    /// in [1.25, 2.5), each paired with a restore), all inside
+    /// `[0, horizon)`.  Pure function of its arguments.
+    pub fn seeded(
+        total_gpus: usize,
+        island_size: usize,
+        horizon: f64,
+        fails: usize,
+        stragglers: usize,
+        seed: u64,
+    ) -> FaultPlan {
+        let mut rng = Pcg32::new(seed, 0xfa017);
+        let mut events = Vec::with_capacity(2 * (fails + stragglers));
+        let fails = fails.min(total_gpus);
+        for gpu in rng.sample_indices(total_gpus, fails) {
+            let down = rng.uniform(0.05, 0.55) * horizon;
+            let up = down + rng.uniform(0.10, 0.35) * horizon;
+            events.push(TimedFault {
+                time: down,
+                event: FaultEvent::GpuFail { gpu },
+            });
+            events.push(TimedFault {
+                time: up,
+                event: FaultEvent::GpuRecover { gpu },
+            });
+        }
+        let islands = total_gpus.div_ceil(island_size.max(1));
+        let stragglers = stragglers.min(islands);
+        for island in rng.sample_indices(islands, stragglers) {
+            let from = rng.uniform(0.05, 0.55) * horizon;
+            let to = from + rng.uniform(0.10, 0.35) * horizon;
+            let factor = rng.uniform(1.25, 2.5);
+            events.push(TimedFault {
+                time: from,
+                event: FaultEvent::IslandSlowdown { island, factor },
+            });
+            events.push(TimedFault {
+                time: to,
+                event: FaultEvent::IslandRestore { island },
+            });
+        }
+        FaultPlan::new(events)
+    }
+
+    /// Check the plan against a cluster shape: times finite,
+    /// nonnegative and nondecreasing; indices in range; no double-fail
+    /// without an intervening recovery (and no recovery of a healthy
+    /// GPU); restores only on currently-slowed islands (a second
+    /// slowdown on a slowed island is allowed — it re-derates).
+    pub fn validate(&self, total_gpus: usize, islands: usize) -> Result<()> {
+        anyhow::ensure!(
+            self.checkpoint_interval.is_finite() && self.checkpoint_interval >= 0.0,
+            "checkpoint_interval must be finite and >= 0, got {}",
+            self.checkpoint_interval
+        );
+        let mut failed = vec![false; total_gpus];
+        let mut slowed = vec![false; islands];
+        let mut prev = f64::NEG_INFINITY;
+        for (i, tf) in self.events.iter().enumerate() {
+            anyhow::ensure!(
+                tf.time.is_finite() && tf.time >= 0.0,
+                "fault #{i}: time {} not finite and nonnegative",
+                tf.time
+            );
+            anyhow::ensure!(
+                tf.time >= prev,
+                "fault #{i}: time {} out of order (previous {prev})",
+                tf.time
+            );
+            prev = tf.time;
+            match tf.event {
+                FaultEvent::GpuFail { gpu } => {
+                    anyhow::ensure!(gpu < total_gpus, "fault #{i}: gpu {gpu} out of range");
+                    anyhow::ensure!(!failed[gpu], "fault #{i}: gpu {gpu} already failed");
+                    failed[gpu] = true;
+                }
+                FaultEvent::GpuRecover { gpu } => {
+                    anyhow::ensure!(gpu < total_gpus, "fault #{i}: gpu {gpu} out of range");
+                    anyhow::ensure!(failed[gpu], "fault #{i}: gpu {gpu} is not failed");
+                    failed[gpu] = false;
+                }
+                FaultEvent::IslandSlowdown { island, factor } => {
+                    anyhow::ensure!(island < islands, "fault #{i}: island {island} out of range");
+                    anyhow::ensure!(
+                        factor.is_finite() && factor >= 1.0,
+                        "fault #{i}: slowdown factor {factor} must be finite and >= 1"
+                    );
+                    slowed[island] = true;
+                }
+                FaultEvent::IslandRestore { island } => {
+                    anyhow::ensure!(island < islands, "fault #{i}: island {island} out of range");
+                    anyhow::ensure!(slowed[island], "fault #{i}: island {island} is not slowed");
+                    slowed[island] = false;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Progress credit an evicted runner keeps: `progress` rounded down
+    /// to its last checkpoint boundary (`checkpoint_interval = 0` keeps
+    /// it all).
+    pub fn quantized_progress(&self, progress: f64) -> f64 {
+        if self.checkpoint_interval <= 0.0 {
+            return progress;
+        }
+        (progress / self.checkpoint_interval).floor() * self.checkpoint_interval
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_empty_and_valid() {
+        let plan = FaultPlan::none();
+        assert!(plan.is_empty());
+        assert_eq!(plan, FaultPlan::default());
+        plan.validate(8, 1).unwrap();
+    }
+
+    #[test]
+    fn new_sorts_by_time() {
+        let plan = FaultPlan::new(vec![
+            TimedFault { time: 9.0, event: FaultEvent::GpuRecover { gpu: 1 } },
+            TimedFault { time: 2.0, event: FaultEvent::GpuFail { gpu: 1 } },
+        ]);
+        assert_eq!(plan.events[0].time, 2.0);
+        assert_eq!(plan.events[1].time, 9.0);
+        plan.validate(8, 1).unwrap();
+    }
+
+    #[test]
+    fn seeded_is_pure_paired_and_valid() {
+        let a = FaultPlan::seeded(32, 8, 1000.0, 3, 2, 7);
+        let b = FaultPlan::seeded(32, 8, 1000.0, 3, 2, 7);
+        assert_eq!(a, b, "seeded plan must be a pure function of its args");
+        assert_ne!(a, FaultPlan::seeded(32, 8, 1000.0, 3, 2, 8));
+        assert_eq!(a.events.len(), 2 * (3 + 2));
+        a.validate(32, 4).unwrap();
+        // every failure recovers: the cluster never permanently shrinks
+        let fails = a.events.iter().filter(|t| matches!(t.event, FaultEvent::GpuFail { .. }));
+        let recovers: Vec<usize> = a
+            .events
+            .iter()
+            .filter_map(|t| match t.event {
+                FaultEvent::GpuRecover { gpu } => Some(gpu),
+                _ => None,
+            })
+            .collect();
+        for f in fails {
+            if let FaultEvent::GpuFail { gpu } = f.event {
+                assert!(recovers.contains(&gpu), "gpu {gpu} never recovers");
+            }
+        }
+        assert!(a.events.iter().all(|t| (0.0..1000.0).contains(&t.time)));
+    }
+
+    #[test]
+    fn validate_rejects_malformed_plans() {
+        // recover of a healthy GPU
+        let plan = FaultPlan::new(vec![TimedFault {
+            time: 1.0,
+            event: FaultEvent::GpuRecover { gpu: 0 },
+        }]);
+        assert!(plan.validate(8, 1).is_err());
+        // double fail
+        let plan = FaultPlan::new(vec![
+            TimedFault { time: 1.0, event: FaultEvent::GpuFail { gpu: 0 } },
+            TimedFault { time: 2.0, event: FaultEvent::GpuFail { gpu: 0 } },
+        ]);
+        assert!(plan.validate(8, 1).is_err());
+        // out-of-range gpu
+        let plan = FaultPlan::new(vec![TimedFault {
+            time: 1.0,
+            event: FaultEvent::GpuFail { gpu: 99 },
+        }]);
+        assert!(plan.validate(8, 1).is_err());
+        // speedup disguised as a slowdown
+        let plan = FaultPlan::new(vec![TimedFault {
+            time: 1.0,
+            event: FaultEvent::IslandSlowdown { island: 0, factor: 0.5 },
+        }]);
+        assert!(plan.validate(8, 1).is_err());
+        // restore of a nominal island
+        let plan = FaultPlan::new(vec![TimedFault {
+            time: 1.0,
+            event: FaultEvent::IslandRestore { island: 0 },
+        }]);
+        assert!(plan.validate(8, 1).is_err());
+        // NaN time sorts last and fails validation
+        let plan = FaultPlan::new(vec![
+            TimedFault { time: f64::NAN, event: FaultEvent::GpuFail { gpu: 0 } },
+            TimedFault { time: 1.0, event: FaultEvent::GpuFail { gpu: 1 } },
+        ]);
+        assert!(plan.validate(8, 1).is_err());
+    }
+
+    #[test]
+    fn checkpoint_quantization() {
+        let continuous = FaultPlan::none();
+        assert_eq!(continuous.quantized_progress(7.3), 7.3);
+        let plan = FaultPlan::none().with_checkpoint_interval(5.0);
+        assert_eq!(plan.quantized_progress(7.3), 5.0);
+        assert_eq!(plan.quantized_progress(4.9), 0.0);
+        assert_eq!(plan.quantized_progress(10.0), 10.0);
+    }
+}

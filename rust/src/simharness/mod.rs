@@ -45,6 +45,18 @@
 //!   replay digest; with sharing off neither is ever emitted and the
 //!   timeline is bit-identical to the pre-sharing one.  See
 //!   [`crate::coordinator::shared`].
+//! * **Fail** / **Recover** / **Slowdown** / **Restore** / **Evict** —
+//!   with a non-empty [`HarnessConfig`]`::faults` plan (see
+//!   [`faults::FaultPlan`]), cluster faults merge into the loop: a GPU
+//!   failure (`Fail`) evicts its runners for checkpoint-restore
+//!   (`Evict`, carrying the released placement and reason) and excludes
+//!   the GPU from placement until `Recover`; a straggling island
+//!   (`Slowdown`, carrying the derate factor) reprices every placement
+//!   touching it until `Restore`.  `Evict` also records overload
+//!   control's queue sheds (over-quota / deadline-hopeless, empty
+//!   placement).  All are digest-bearing; with `FaultPlan::none()` and
+//!   overload off, none is ever emitted and every timeline is
+//!   bit-identical to before.
 //!
 //! Time ties resolve completions before arrivals (capacity frees before
 //! the arriving task plans over it) and preemptions before the starts
@@ -200,6 +212,7 @@
 
 pub mod engine;
 pub mod event;
+pub mod faults;
 pub mod trace;
 
 pub use crate::cluster::{PlacePolicy, Placement, Topology};
@@ -209,6 +222,7 @@ pub use engine::{
     Timeline,
 };
 pub use event::{Event, EventKind, EventLog};
+pub use faults::{FaultEvent, FaultPlan, TimedFault};
 pub use trace::{
     colocatable_mix, duplicate_mix, frag_mix, hetero_mix, uniform_mix, StreamingTrace, Trace,
     TraceCursor, TraceEntry, TraceSource,

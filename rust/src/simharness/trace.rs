@@ -49,6 +49,18 @@ fn fold_entry(h: &mut u64, e: &TraceEntry) {
     fnv1a_mix(h, e.spec.train_samples as u64);
     fnv1a_mix(h, e.spec.seed);
     fnv1a_mix(h, e.spec.priority as u64);
+    // admission-control fields fold only when set: every pre-admission
+    // trace (all three at their defaults) keeps its fingerprint bit for
+    // bit
+    if !e.spec.tenant.is_empty() {
+        fnv1a_mix_bytes(h, e.spec.tenant.as_bytes());
+    }
+    if e.spec.tenant_weight != 1.0 {
+        fnv1a_mix(h, e.spec.tenant_weight.to_bits());
+    }
+    if e.spec.slo_deadline != 0.0 {
+        fnv1a_mix(h, e.spec.slo_deadline.to_bits());
+    }
     for &lr in &e.spec.search_space.lrs {
         fnv1a_mix(h, lr.to_bits());
     }
@@ -98,6 +110,24 @@ impl Trace {
     pub fn bursty(specs: Vec<TaskSpec>, burst: usize, gap: f64, seed: u64) -> Trace {
         Trace {
             entries: bursty_arrivals(specs.into_iter(), burst, gap, seed).collect(),
+        }
+    }
+
+    /// Diurnal arrivals: exponential inter-arrival gaps whose mean
+    /// switches between `mean_day` (first half of each `period`) and
+    /// `mean_night` (second half) — the day/night load cycle overload
+    /// control is sized against.  A small day mean and a large night
+    /// mean produce daily admission waves that drain overnight.
+    pub fn diurnal(
+        specs: Vec<TaskSpec>,
+        mean_day: f64,
+        mean_night: f64,
+        period: f64,
+        seed: u64,
+    ) -> Trace {
+        Trace {
+            entries: diurnal_arrivals(specs.into_iter(), mean_day, mean_night, period, seed)
+                .collect(),
         }
     }
 
@@ -176,6 +206,31 @@ where
         if i > 0 && i % burst == 0 {
             t += gap * rng.uniform(0.5, 1.5);
         }
+        TraceEntry { arrival: t, spec }
+    })
+}
+
+/// Exponential gaps with a phase-dependent mean: `mean_day` during the
+/// first half of each `period`, `mean_night` during the second
+/// (`Trace::diurnal`).  The phase is decided by the arrival clock
+/// *before* each gap is drawn, so the stream is a pure function of its
+/// arguments like every other applier.
+fn diurnal_arrivals<I>(
+    specs: I,
+    mean_day: f64,
+    mean_night: f64,
+    period: f64,
+    seed: u64,
+) -> impl Iterator<Item = TraceEntry>
+where
+    I: Iterator<Item = TaskSpec>,
+{
+    let mut rng = Pcg32::new(seed, 0xd1a7a1);
+    let mut t = 0.0;
+    specs.map(move |spec| {
+        let day = period <= 0.0 || (t % period) < period * 0.5;
+        let mean = if day { mean_day } else { mean_night };
+        t += -mean * (1.0 - rng.f64()).ln();
         TraceEntry { arrival: t, spec }
     })
 }
@@ -544,6 +599,47 @@ impl Trace {
         )
     }
 
+    /// Bursty uniform tenant stream over [`uniform_mix`]: groups of
+    /// `burst` 1-GPU tenants land together, bursts separated by
+    /// `gap · U[0.5, 1.5)` quiet periods — the on/off admission-pressure
+    /// stressor overload control is measured against.  Pure function of
+    /// its arguments.
+    pub fn bursty_uniform(
+        n_tasks: usize,
+        train_samples: usize,
+        burst: usize,
+        gap: f64,
+        seed: u64,
+    ) -> Trace {
+        Trace::bursty(
+            uniform_mix(n_tasks, train_samples, seed),
+            burst,
+            gap,
+            seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(17),
+        )
+    }
+
+    /// Diurnal uniform tenant stream over [`uniform_mix`]: Poisson
+    /// arrivals whose mean gap alternates between `mean_day` and
+    /// `mean_night` every half `period` — daily admission waves that
+    /// drain overnight.  Pure function of its arguments.
+    pub fn diurnal_uniform(
+        n_tasks: usize,
+        train_samples: usize,
+        mean_day: f64,
+        mean_night: f64,
+        period: f64,
+        seed: u64,
+    ) -> Trace {
+        Trace::diurnal(
+            uniform_mix(n_tasks, train_samples, seed),
+            mean_day,
+            mean_night,
+            period,
+            seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(19),
+        )
+    }
+
     /// Fragmentation-heavy arrival pattern over [`frag_mix`]: narrow
     /// tasks trickle in on short gaps, wide tasks land on long gaps —
     /// by which time completions have punched scattered holes in the
@@ -691,6 +787,46 @@ impl StreamingTrace {
                 colocatable_mix_iter(n_tasks, n_distinct, train_samples, seed),
                 mean_interarrival,
                 seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(13),
+            ),
+            n_tasks,
+        )
+    }
+
+    /// Streaming twin of [`Trace::bursty_uniform`].
+    pub fn bursty_uniform(
+        n_tasks: usize,
+        train_samples: usize,
+        burst: usize,
+        gap: f64,
+        seed: u64,
+    ) -> StreamingTrace {
+        StreamingTrace::new(
+            bursty_arrivals(
+                uniform_mix_iter(n_tasks, train_samples, seed),
+                burst,
+                gap,
+                seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(17),
+            ),
+            n_tasks,
+        )
+    }
+
+    /// Streaming twin of [`Trace::diurnal_uniform`].
+    pub fn diurnal_uniform(
+        n_tasks: usize,
+        train_samples: usize,
+        mean_day: f64,
+        mean_night: f64,
+        period: f64,
+        seed: u64,
+    ) -> StreamingTrace {
+        StreamingTrace::new(
+            diurnal_arrivals(
+                uniform_mix_iter(n_tasks, train_samples, seed),
+                mean_day,
+                mean_night,
+                period,
+                seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(19),
             ),
             n_tasks,
         )
@@ -1015,6 +1151,67 @@ mod tests {
             StreamingTrace::preemption_stress(4, 9, 48, 9),
             &Trace::preemption_stress(4, 9, 48, 9),
         );
+    }
+
+    #[test]
+    fn streaming_bursty_uniform_matches_materialized() {
+        assert_streams_exactly(
+            StreamingTrace::bursty_uniform(40, 48, 6, 300.0, 11),
+            &Trace::bursty_uniform(40, 48, 6, 300.0, 11),
+        );
+    }
+
+    #[test]
+    fn streaming_diurnal_uniform_matches_materialized() {
+        assert_streams_exactly(
+            StreamingTrace::diurnal_uniform(48, 48, 20.0, 400.0, 4000.0, 13),
+            &Trace::diurnal_uniform(48, 48, 20.0, 400.0, 4000.0, 13),
+        );
+    }
+
+    #[test]
+    fn diurnal_alternates_dense_and_sparse_phases() {
+        // day gaps average 10 s, night gaps 1000 s over a 4000 s cycle:
+        // arrivals must be nondecreasing, deterministic in the seed, and
+        // markedly denser in day halves than night halves.
+        let t = Trace::diurnal(uniform_mix(200, 48, 2), 10.0, 1000.0, 4000.0, 21);
+        let (mut day, mut night) = (0usize, 0usize);
+        let mut prev = 0.0;
+        for e in &t.entries {
+            assert!(e.arrival >= prev, "arrivals must be nondecreasing");
+            prev = e.arrival;
+            if (e.arrival % 4000.0) < 2000.0 {
+                day += 1;
+            } else {
+                night += 1;
+            }
+        }
+        assert!(night > 0, "trace never reached a night phase");
+        assert!(
+            day > night * 3,
+            "day arrivals ({day}) should dominate night arrivals ({night})"
+        );
+        // purity: same seed replays bit-identically, different seed diverges
+        let again = Trace::diurnal(uniform_mix(200, 48, 2), 10.0, 1000.0, 4000.0, 21);
+        assert_eq!(t.fingerprint(), again.fingerprint());
+        let other = Trace::diurnal(uniform_mix(200, 48, 2), 10.0, 1000.0, 4000.0, 22);
+        assert_ne!(t.fingerprint(), other.fingerprint());
+    }
+
+    #[test]
+    fn admission_fields_fold_only_when_set() {
+        // defaulted tenant/weight/slo leave the fingerprint exactly as
+        // before they existed; tagging any of them perturbs it.
+        let base = Trace::poisson(uniform_mix(8, 48, 4), 40.0, 6);
+        let mut tagged = base.clone();
+        tagged.entries[3].spec.tenant = "acme".into();
+        assert_ne!(base.fingerprint(), tagged.fingerprint());
+        let mut weighted = base.clone();
+        weighted.entries[3].spec.tenant_weight = 2.0;
+        assert_ne!(base.fingerprint(), weighted.fingerprint());
+        let mut slo = base.clone();
+        slo.entries[3].spec.slo_deadline = 900.0;
+        assert_ne!(base.fingerprint(), slo.fingerprint());
     }
 
     #[test]

@@ -41,6 +41,13 @@
 //!   start placements, makespan bits and charges as per-arrival
 //!   `submit_spec` replans under FCFS (the order-preserving policy,
 //!   where sequential greedy and batch greedy are defined to coincide).
+//! * **Fault-plan no-op and equivalence** — an empty [`FaultPlan`]
+//!   (even with a checkpoint interval set) plus an armed-but-idle
+//!   overload config changes not one digest bit on any trace family;
+//!   a seeded fault plan replays bit-identically across the batch,
+//!   streaming and source-driven engine paths; and under GPU failures
+//!   with overload off, every evicted runner is checkpoint-restored —
+//!   no task is ever lost.
 
 use alto::cluster::gpu::GpuSpec;
 use alto::cluster::{PlacePolicy, SimCluster, Topology};
@@ -48,10 +55,13 @@ use alto::config::MODEL_FAMILY;
 use alto::coordinator::shared::SharingConfig;
 use alto::perfmodel::{task_workload, ContentionCtx, StepTimeModel};
 use alto::sched::inter::{
-    InterTaskScheduler, Policy, PreemptDecision, Pricing, RepriceDecision, SchedTuning,
-    StartDecision, Submission, TaskShape,
+    EvictReason, InterTaskScheduler, OverloadConfig, Policy, PreemptDecision, Pricing,
+    RepriceDecision, SchedTuning, StartDecision, Submission, TaskShape,
 };
-use alto::simharness::{HarnessConfig, SimEngine, StreamingTrace, Trace};
+use alto::simharness::{
+    uniform_mix, EventKind, FaultEvent, FaultPlan, HarnessConfig, SimEngine, StreamingTrace,
+    TimedFault, Trace,
+};
 use alto::util::rng::Pcg32;
 
 /// Deterministic scheduler-level workload derived from a trace: worst
@@ -87,6 +97,7 @@ fn submissions_from(trace: &Trace, seed: u64) -> Vec<Submission> {
                     adapters: 2,
                     rank: e.spec.search_space.max_rank().max(1),
                 }),
+                ..Submission::default()
             }
         })
         .collect()
@@ -397,6 +408,7 @@ fn deep_queue_optimal_completes_fast_and_reuses_cached_plans() {
                 adapters: 2,
                 rank: 16,
             }),
+            ..Submission::default()
         });
     }
     let t0 = std::time::Instant::now();
@@ -789,6 +801,195 @@ fn coalesced_batch_admission_matches_sequential_fcfs_outcomes() {
             "{tag}: the batch path must replan less than per-arrival \
              admission ({batch_replans} vs {})",
             seq_sched.replans
+        );
+    }
+}
+
+#[test]
+fn empty_fault_plan_and_idle_overload_change_no_digest_bits() {
+    // the no-op contract: an empty fault plan — even with a checkpoint
+    // interval configured — and an enabled-but-never-triggered overload
+    // config replay every trace family bit-identically to the default
+    // (fault-free, overload-off) configuration
+    let base = HarnessConfig {
+        total_gpus: 16,
+        island_size: 8,
+        policy: Policy::Optimal,
+        place: PlacePolicy::IslandFirst,
+        ..HarnessConfig::default()
+    };
+    for seed in [3u64, 11] {
+        let cases: Vec<(&str, Trace, bool)> = vec![
+            ("uniform", Trace::uniform_large(12, 32, 40.0, seed), false),
+            ("frag", Trace::fragmentation_heavy(10, 32, seed), false),
+            ("preempt", Trace::preemption_stress(3, 4, 32, seed), true),
+            ("bursty", Trace::bursty_uniform(16, 32, 4, 200.0, seed), false),
+            (
+                "diurnal",
+                Trace::diurnal_uniform(16, 32, 20.0, 200.0, 2000.0, seed),
+                false,
+            ),
+        ];
+        for (label, trace, preempt) in cases {
+            let cfg = HarnessConfig {
+                preempt_on_arrival: preempt,
+                ..base.clone()
+            };
+            let clean = SimEngine::new(cfg.clone()).run_streaming(&trace).unwrap();
+            let idle = SimEngine::new(HarnessConfig {
+                faults: FaultPlan::none().with_checkpoint_interval(120.0),
+                overload: OverloadConfig {
+                    enabled: true,
+                    pressure_threshold: 1_000_000,
+                },
+                ..cfg
+            })
+            .run_streaming(&trace)
+            .unwrap();
+            let tag = format!("{label} seed {seed}");
+            assert_eq!(
+                idle.timeline.log.digest(),
+                clean.timeline.log.digest(),
+                "{tag}: idle fault/overload machinery perturbed the digest"
+            );
+            assert_eq!(
+                idle.timeline.makespan.to_bits(),
+                clean.timeline.makespan.to_bits(),
+                "{tag}: makespan drifted"
+            );
+            assert_eq!(
+                idle.timeline.gpu_seconds.to_bits(),
+                clean.timeline.gpu_seconds.to_bits(),
+                "{tag}: charged GPU-seconds drifted"
+            );
+            assert_eq!(idle.timeline.log.len(), clean.timeline.log.len(), "{tag}");
+            assert_eq!(idle.timeline.fault_evictions, 0, "{tag}");
+            assert_eq!(idle.timeline.sheds, 0, "{tag}");
+        }
+    }
+}
+
+#[test]
+fn seeded_fault_plan_replays_identically_across_all_three_engine_paths() {
+    // the replay contract under injected faults: batch `run`, streaming
+    // and the lazy source-driven loop fold Fail / Recover / Slowdown /
+    // Restore / Evict events into bit-identical digests
+    for seed in [3u64, 11] {
+        let faults = FaultPlan::seeded(16, 8, 400.0, 3, 2, seed).with_checkpoint_interval(45.0);
+        let cfg = HarnessConfig {
+            total_gpus: 16,
+            island_size: 8,
+            policy: Policy::Optimal,
+            place: PlacePolicy::IslandFirst,
+            faults,
+            ..HarnessConfig::default()
+        };
+        let trace = Trace::uniform_large(24, 32, 5.0, seed);
+        let mut src = StreamingTrace::uniform_large(24, 32, 5.0, seed);
+        let engine = SimEngine::new(cfg);
+        let batch = engine.run(&trace).unwrap();
+        let stream = engine.run_streaming(&trace).unwrap();
+        let lean = engine.run_source(&mut src).unwrap();
+        let tag = format!("seed {seed}");
+        assert_eq!(
+            stream.timeline.log.digest(),
+            batch.log.digest(),
+            "{tag}: streaming drifted from batch under faults"
+        );
+        assert_eq!(
+            lean.log.digest(),
+            batch.log.digest(),
+            "{tag}: source-driven drifted from batch under faults"
+        );
+        assert_eq!(stream.timeline.log.len(), batch.log.len(), "{tag}");
+        assert_eq!(lean.log.len(), batch.log.len(), "{tag}");
+        assert_eq!(
+            stream.timeline.makespan.to_bits(),
+            batch.makespan.to_bits(),
+            "{tag}: makespan drifted"
+        );
+        assert_eq!(lean.makespan.to_bits(), batch.makespan.to_bits(), "{tag}");
+        assert_eq!(
+            stream.timeline.fault_evictions, batch.fault_evictions,
+            "{tag}: eviction counts drifted"
+        );
+        assert_eq!(lean.fault_evictions, batch.fault_evictions, "{tag}");
+        assert_eq!(lean.tasks, trace.len(), "{tag}");
+        // the plan's Fail events always reach the log, so the fault
+        // machinery demonstrably engaged even if no runner was hit
+        let fails = batch
+            .log
+            .events()
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::Fail { .. }))
+            .count();
+        assert_eq!(fails, 3, "{tag}: seeded plan must inject 3 failures");
+    }
+}
+
+#[test]
+fn failed_runners_are_checkpoint_restored_and_no_task_is_lost() {
+    // conservation: a dense t = 0 wave keeps all 16 GPUs busy, so the
+    // early GPU failures are guaranteed to evict live runners; with
+    // overload off, every victim must checkpoint-restore and complete
+    let trace = Trace::at_zero(uniform_mix(60, 48, 23));
+    let faults = FaultPlan::new(vec![
+        TimedFault {
+            time: 1.0,
+            event: FaultEvent::GpuFail { gpu: 3 },
+        },
+        TimedFault {
+            time: 2.0,
+            event: FaultEvent::GpuFail { gpu: 11 },
+        },
+        TimedFault {
+            time: 1.0e5,
+            event: FaultEvent::GpuRecover { gpu: 3 },
+        },
+        TimedFault {
+            time: 2.0e5,
+            event: FaultEvent::GpuRecover { gpu: 11 },
+        },
+    ])
+    .with_checkpoint_interval(60.0);
+    let engine = SimEngine::new(HarnessConfig {
+        total_gpus: 16,
+        island_size: 8,
+        policy: Policy::Optimal,
+        place: PlacePolicy::IslandFirst,
+        faults,
+        ..HarnessConfig::default()
+    });
+    let report = engine.run_streaming(&trace).unwrap();
+    let tl = &report.timeline;
+    let (mut completes, mut evicts) = (0usize, 0usize);
+    for e in tl.log.events() {
+        match &e.kind {
+            EventKind::Complete { .. } => completes += 1,
+            EventKind::Evict { reason, .. } => {
+                assert_eq!(
+                    *reason,
+                    EvictReason::GpuFail,
+                    "overload is off: only gpu-fail evictions may occur"
+                );
+                evicts += 1;
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(completes, trace.len(), "a task was lost to the failure");
+    assert!(
+        evicts >= 2,
+        "two failures on a saturated cluster must evict at least their runners"
+    );
+    assert_eq!(evicts, tl.fault_evictions, "counter / event-log mismatch");
+    assert_eq!(tl.sheds, 0);
+    assert_eq!(tl.deadline_misses, 0);
+    for s in &report.summaries {
+        assert!(
+            s.actual_duration.is_finite(),
+            "task '{}' never resolved — it was shed, not restored",
+            s.name
         );
     }
 }
