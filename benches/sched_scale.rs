@@ -84,8 +84,8 @@ use alto::sched::inter::{
     InterTaskScheduler, OverloadConfig, Policy, Pricing, SchedTuning, Submission, TaskShape,
 };
 use alto::simharness::{
-    uniform_mix, FaultEvent, FaultPlan, HarnessConfig, SimEngine, StreamingTrace, TimedFault,
-    Trace,
+    uniform_mix, FaultEvent, FaultPlan, HarnessConfig, RankPolicy, SimEngine, StreamingTrace,
+    TimedFault, Trace,
 };
 use alto::util::json::Json;
 use alto::util::rng::Pcg32;
@@ -696,6 +696,87 @@ fn main() {
         ("makespan_s", Json::Num(over.timeline.makespan)),
     ]);
 
+    // ---- dynamic rank reallocation: adaptive vs fixed rank ------------
+    // The rank-heavy mix (three plateau-bound max-rank tenants for every
+    // undersized rank-2 tenant) with the policy off and with the paper
+    // thresholds.  The bodies resolve at admission-frozen HPs, so only
+    // the cluster books move: shrinks hand back a GPU per plateaued
+    // tenant mid-flight, grows evict-and-requeue at a wider footprint,
+    // and charged GPU-seconds must strictly drop — asserted in-process.
+    let rank_n = if quick { 64 } else { 200 };
+    banner(&format!(
+        "dynamic rank reallocation: {rank_n}-task rank-heavy stream, adaptive vs fixed"
+    ));
+    let rank_trace = Trace::rank_heavy(rank_n, 2_800, 4.0, 42);
+    let rank_base = HarnessConfig {
+        total_gpus: GPUS,
+        island_size: ISLAND,
+        retain_events: false,
+        ..HarnessConfig::default()
+    };
+    let rank_fixed = SimEngine::new(rank_base.clone())
+        .run_streaming(&rank_trace)
+        .expect("fixed-rank run");
+    let rank_adapt = SimEngine::new(HarnessConfig {
+        rank: RankPolicy::paper(),
+        ..rank_base
+    })
+    .run_streaming(&rank_trace)
+    .expect("adaptive-rank run");
+    assert_eq!(rank_fixed.timeline.resizes, 0, "the default policy must stay off");
+    assert!(
+        rank_adapt.timeline.rank_shrinks > 0 && rank_adapt.timeline.rank_grows > 0,
+        "the rank-heavy trace must exercise both directions \
+         ({} grows / {} shrinks)",
+        rank_adapt.timeline.rank_grows,
+        rank_adapt.timeline.rank_shrinks
+    );
+    assert!(
+        rank_adapt.timeline.gpu_seconds < rank_fixed.timeline.gpu_seconds,
+        "adaptive rank must strictly cut charged GPU-seconds: {} vs {}",
+        rank_adapt.timeline.gpu_seconds,
+        rank_fixed.timeline.gpu_seconds
+    );
+    let rank_mk_ratio =
+        rank_adapt.timeline.makespan / rank_fixed.timeline.makespan.max(1e-12);
+    let rank_gpu_ratio =
+        rank_adapt.timeline.gpu_seconds / rank_fixed.timeline.gpu_seconds.max(1e-12);
+    println!(
+        "rank: makespan {} → {} ({rank_mk_ratio:.3}×), GPU-s {} → {} \
+         ({rank_gpu_ratio:.3}×), {} resizes ({} grows / {} shrinks, \
+         {} grow evictions)",
+        f(rank_fixed.timeline.makespan, 0),
+        f(rank_adapt.timeline.makespan, 0),
+        f(rank_fixed.timeline.gpu_seconds, 0),
+        f(rank_adapt.timeline.gpu_seconds, 0),
+        rank_adapt.timeline.resizes,
+        rank_adapt.timeline.rank_grows,
+        rank_adapt.timeline.rank_shrinks,
+        rank_adapt.timeline.resize_evictions,
+    );
+    let rank_json = Json::obj(vec![
+        ("tasks", Json::Num(rank_n as f64)),
+        ("resizes", Json::Num(rank_adapt.timeline.resizes as f64)),
+        ("rank_grows", Json::Num(rank_adapt.timeline.rank_grows as f64)),
+        (
+            "rank_shrinks",
+            Json::Num(rank_adapt.timeline.rank_shrinks as f64),
+        ),
+        (
+            "resize_evictions",
+            Json::Num(rank_adapt.timeline.resize_evictions as f64),
+        ),
+        ("makespan_fixed_s", Json::Num(rank_fixed.timeline.makespan)),
+        ("makespan_adaptive_s", Json::Num(rank_adapt.timeline.makespan)),
+        ("makespan_ratio", Json::Num(rank_mk_ratio)),
+        ("gpu_seconds_fixed", Json::Num(rank_fixed.timeline.gpu_seconds)),
+        (
+            "gpu_seconds_adaptive",
+            Json::Num(rank_adapt.timeline.gpu_seconds),
+        ),
+        ("gpu_seconds_ratio", Json::Num(rank_gpu_ratio)),
+    ]);
+
     // ---- sharded event loop: the 100k-task scale point ----------------
     // The tentpole measurement: a duplicate-heavy 100k-tenant stream
     // through the whole streaming engine, single loop vs sharded by
@@ -1026,7 +1107,12 @@ fn main() {
                  never materialized, the log is digest-only, and the run must \
                  fit a 600 s wall budget (null in quick mode / small runners). \
                  peak_rss_bytes is VmHWM sampled after each scale — a \
-                 process-wide high-water mark, so read the per-scale jumps"
+                 process-wide high-water mark, so read the per-scale jumps. \
+                 'rank' is the dynamic rank reallocation point: the same \
+                 rank-heavy stream with the policy off vs RankPolicy::paper(), \
+                 resize/grow/shrink counts plus the adaptive-vs-fixed makespan \
+                 and charged GPU-seconds ratios (GPU-seconds strictly lower is \
+                 asserted in-process)"
                     .into(),
             ),
         ),
@@ -1035,6 +1121,7 @@ fn main() {
         ("colocation", colo_json),
         ("faults", faults_json),
         ("overload", overload_json),
+        ("rank", rank_json),
     ]);
     if gate_failed {
         // keep the committed baseline; persist the regressed measurements

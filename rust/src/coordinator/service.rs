@@ -64,13 +64,12 @@ impl ServiceConfig {
             island_size: self.island_size,
             preempt_on_arrival: self.preempt_on_arrival,
             pricing: self.pricing,
-            tuning: crate::sched::inter::SchedTuning::default(),
-            sharing: crate::coordinator::shared::SharingConfig::default(),
             run: self.run.clone(),
             gpu: self.gpu.clone(),
             n_slots: self.n_slots,
-            log_body_events: false,
-            retain_events: true,
+            // tuning, sharing, body-event logging, retention, faults,
+            // overload and rank policy all stay at their inert defaults
+            ..HarnessConfig::default()
         }
     }
 }

@@ -247,6 +247,57 @@ impl<'a> TaskCursor<'a> {
         Some(ji)
     }
 
+    /// Re-rank one *pending* job at a segment boundary — the
+    /// coordinator-level hook dynamic rank reallocation drives when the
+    /// cluster planner resizes a task mid-flight.  Only a job still
+    /// waiting in the pending queue and not yet checkpointed may be
+    /// re-ranked: a resident slot holds adapter state onloaded at the
+    /// old rank, and a warmup snapshot pins the optimizer shape, so
+    /// both would go stale under it.  When admission control is
+    /// attached ([`TaskCursor::with_admission`]) the re-ranked shape
+    /// must clear the same bar a fresh seat would face right now.
+    ///
+    /// Returns `Ok(true)` when the resize applied, `Ok(false)` when the
+    /// job's state or the admission bar rejects it (retry at a later
+    /// boundary), and a structured error for arguments that are never
+    /// valid at any boundary.
+    pub fn resize_pending_rank(&mut self, job_idx: usize, new_rank: usize) -> Result<bool> {
+        anyhow::ensure!(
+            new_rank >= 1,
+            "resize target rank must be >= 1, got {new_rank}"
+        );
+        anyhow::ensure!(
+            job_idx < self.jobs.len(),
+            "resize target job {job_idx} out of range ({} jobs)",
+            self.jobs.len()
+        );
+        if self.phase == Phase::Done
+            || !self.queue.contains(&job_idx)
+            || self.snapshots.contains_key(&job_idx)
+        {
+            return Ok(false);
+        }
+        if self.jobs[job_idx].hp.rank == new_rank {
+            return Ok(true);
+        }
+        if let Some((mem, pricer)) = self.admission {
+            let mut resident_ranks: Vec<usize> = Vec::with_capacity(self.slots.len());
+            let mut resident_batch = 0usize;
+            for s in self.slots.iter().flatten() {
+                let hp = &self.jobs[s.job_idx].hp;
+                resident_ranks.push(hp.rank);
+                resident_batch += hp.batch_size;
+            }
+            let mut hp = self.jobs[job_idx].hp.clone();
+            hp.rank = new_rank;
+            if !admit_slot(&hp, &resident_ranks, resident_batch, mem, pricer) {
+                return Ok(false);
+            }
+        }
+        self.jobs[job_idx].hp.rank = new_rank;
+        Ok(true)
+    }
+
     /// Cumulative simulated wall seconds so far.
     pub fn wall_seconds(&self) -> f64 {
         self.wall
@@ -883,6 +934,79 @@ mod tests {
             done_cursor.adopt_job(&kin, "llama-8b", Job::new(92, hp, 20, 1)),
             None
         );
+    }
+
+    #[test]
+    fn resize_pending_rank_applies_only_to_queued_jobs() {
+        // 2 slots, 3 jobs: before any segment everything is pending
+        let mut be = sim_backend(2, 2);
+        let mut cursor =
+            TaskCursor::new(&mut be, uniform_jobs(3, 2e-4, 2, 60), RunConfig::default());
+        assert!(cursor.resize_pending_rank(2, 32).unwrap());
+        assert_eq!(cursor.jobs()[2].hp.rank, 32);
+        // same-rank resize is a trivially-applied no-op
+        assert!(cursor.resize_pending_rank(2, 32).unwrap());
+        // after the first segment jobs 0 and 1 are either resident or
+        // already carry a warmup checkpoint — both pin the old rank
+        cursor.run_segment().unwrap();
+        assert!(!cursor.resize_pending_rank(0, 32).unwrap());
+        assert_eq!(cursor.jobs()[0].hp.rank, 16);
+        // the re-ranked pending job runs to a verdict at its new rank
+        while !cursor.run_segment().unwrap().done {}
+        let res = cursor.finish();
+        assert_eq!(res.jobs[2].hp.rank, 32);
+        assert!(res.jobs.iter().all(|j| j.is_exited()));
+    }
+
+    #[test]
+    fn resize_pending_rank_rejects_invalid_targets() {
+        let mut be = sim_backend(2, 2);
+        let mut cursor =
+            TaskCursor::new(&mut be, uniform_jobs(2, 2e-4, 2, 40), RunConfig::default());
+        let err = cursor.resize_pending_rank(0, 0).unwrap_err();
+        assert!(err.to_string().contains("rank must be >= 1"), "{err}");
+        let err = cursor.resize_pending_rank(9, 16).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        // invalid arguments left every job untouched
+        assert!(cursor.jobs().iter().all(|j| j.hp.rank == 16));
+        // a finished cursor resizes nothing
+        while !cursor.run_segment().unwrap().done {}
+        assert!(!cursor.resize_pending_rank(0, 32).unwrap());
+    }
+
+    #[test]
+    fn resize_pending_rank_honors_the_admission_bar() {
+        // the tight model from the admission test: one batch-2 adapter
+        // saturates the budget, so while a job is resident no fresh
+        // shape clears the bar — including a re-ranked pending one
+        let mem = MemoryModel {
+            k0: 0.0,
+            k1: 1.0,
+            seq_len: 1,
+            budget: 2.0,
+        };
+        // eval_every below the warmup stop (3 steps at 60 total): the
+        // first segment boundary lands mid-warmup with job 0 still
+        // resident, and the detector needs two evals before any exit
+        // can fire — so residency at that boundary is deterministic
+        let cfg = RunConfig {
+            eval_every: 2,
+            ..RunConfig::default()
+        };
+        let mut be = sim_backend(2, 2);
+        let mut cursor = TaskCursor::new(&mut be, uniform_jobs(3, 2e-4, 2, 60), cfg)
+            .with_admission(&mem, None);
+        // before anything is resident the bar is clear
+        assert!(cursor.resize_pending_rank(2, 8).unwrap());
+        cursor.run_segment().unwrap();
+        // job 0 is resident now: the saturated budget rejects the
+        // resize, and the target keeps its current rank
+        assert!(!cursor.resize_pending_rank(1, 32).unwrap());
+        assert_eq!(cursor.jobs()[1].hp.rank, 16);
+        while !cursor.run_segment().unwrap().done {}
+        let res = cursor.finish();
+        assert_eq!(res.jobs[2].hp.rank, 8);
+        assert!(res.jobs.iter().all(|j| j.is_exited()));
     }
 
     #[test]

@@ -69,6 +69,31 @@ impl StepTimeModel {
         }
         comm::p2p_time(&gpu, bytes)
     }
+
+    /// Checkpoint-transfer cost of re-allocating a task's LoRA rank in
+    /// place (dynamic rank reallocation): the resident adapter state at
+    /// the *larger* of the two ranks — a grow re-materializes the new
+    /// adapters from checkpoint, a shrink spills the old ones — moved
+    /// point-to-point over the placement it keeps.  Delegates to
+    /// [`Self::migration_cost`] with `from == to`, so a placement that
+    /// already spans islands pays the same fabric penalty a migration
+    /// would.
+    pub fn resize_cost(
+        &self,
+        model: &ModelShape,
+        old_rank: usize,
+        new_rank: usize,
+        n_slots: usize,
+        placement: &Placement,
+    ) -> f64 {
+        self.migration_cost(
+            model,
+            old_rank.max(new_rank),
+            n_slots,
+            placement,
+            placement,
+        )
+    }
 }
 
 #[cfg(test)]
@@ -130,5 +155,28 @@ mod tests {
         // more resident state costs more to move
         assert!(model.migration_cost(&shape, 16, 8, &a, &b) > near);
         assert!(model.migration_cost(&shape, 64, 4, &a, &b) > near);
+    }
+
+    #[test]
+    fn resize_cost_charges_the_larger_rank() {
+        let model = StepTimeModel::new(GpuSpec::h100_sxm5(), Topology::h100_nodes(16));
+        let shape = MODEL_FAMILY.get("llama-8b").unwrap();
+        let p = Placement::new(vec![0, 1]);
+        let grow = model.resize_cost(&shape, 16, 32, 4, &p);
+        let shrink = model.resize_cost(&shape, 32, 16, 4, &p);
+        assert!(grow > 0.0);
+        // symmetric: both directions price the max(old, new) state
+        assert_eq!(grow.to_bits(), shrink.to_bits());
+        // and exactly the in-place migration of that state
+        let same = model.migration_cost(&shape, 32, 4, &p, &p);
+        assert_eq!(grow.to_bits(), same.to_bits());
+        // a bigger rank band costs more
+        assert!(model.resize_cost(&shape, 16, 64, 4, &p) > grow);
+        // an island-spanning placement pays the fabric penalty
+        let spanning = Placement::new(vec![7, 8]);
+        assert!(
+            model.resize_cost(&shape, 16, 32, 4, &spanning) > grow,
+            "cross-island resident state must cost more to respill"
+        );
     }
 }

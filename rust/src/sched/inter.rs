@@ -117,6 +117,20 @@
 //! [`InterTaskScheduler::charged_gpu_seconds`] measures.  With sharing
 //! disabled every decision stream and digest is bit-identical to the
 //! pre-sharing scheduler.
+//!
+//! ## Dynamic rank reallocation ([`crate::sched::rank`])
+//!
+//! A [`Submission`] may carry planned [`RankStep`]s (derived by the
+//! harness from the trajectory's per-segment rank signal under a
+//! [`crate::sched::rank::RankPolicy`]).  At every completion boundary
+//! `rank_pass` fires the steps running solo tasks have progressed
+//! past: an equal-footprint step re-ranks in place (a one-off
+//! [`StepTimeModel::resize_cost`] respill charge), a shrink also
+//! releases the placement's GPU suffix for the same replan to reclaim,
+//! and a grow evicts-and-requeues the task at its new footprint with
+//! *full* progress credit — a planned checkpoint, unlike the
+//! fault path's floored restore.  Empty step plans (the default)
+//! leave every decision stream and digest bitwise unchanged.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
@@ -130,6 +144,7 @@ use crate::perfmodel::{ContentionCtx, StepTimeModel};
 use crate::util::small::SmallVec;
 use crate::util::threadpool::scoped_map;
 
+use super::rank::RankStep;
 use super::solver::{self, AnytimeCfg, SchedTask, Schedule};
 
 /// Scheduling policy for the ablations (Fig 5 / Fig 12).
@@ -318,6 +333,13 @@ pub struct Submission {
     /// immediately is shed by overload control; a completion past the
     /// deadline counts a miss.
     pub deadline: f64,
+    /// Planned rank-reallocation steps (dynamic rank reallocation),
+    /// strictly ascending in progress fraction — see
+    /// [`crate::sched::rank`].  Empty (the default) is digest-inert:
+    /// no resize machinery ever runs.  Non-empty plans require a
+    /// pricing `shape` (rank is a pricing input) and are validated at
+    /// admission.
+    pub rank_steps: Vec<RankStep>,
 }
 
 impl Default for Submission {
@@ -336,6 +358,7 @@ impl Default for Submission {
             tenant: 0,
             tenant_weight: 1.0,
             deadline: 0.0,
+            rank_steps: Vec::new(),
         }
     }
 }
@@ -393,6 +416,14 @@ struct LiveTask {
     tenant_weight: f64,
     /// Absolute SLO deadline (0.0 = none).
     deadline: f64,
+    /// Planned rank steps, ascending in progress fraction.
+    rank_steps: Vec<RankStep>,
+    /// Index of the next unapplied entry of `rank_steps`.
+    next_rank_step: usize,
+    /// Total actual duration in nominal seconds — the denominator of
+    /// the progress fraction rank steps fire on.  NaN until a lazy
+    /// (streaming) body resolves at first start.
+    actual_total: f64,
 }
 
 impl LiveTask {
@@ -573,6 +604,11 @@ pub enum EvictReason {
     /// Overload control: the task could not meet its SLO deadline even
     /// if started immediately.
     DeadlineHopeless,
+    /// A planned rank-grow step no longer fits the task's placement:
+    /// the task checkpoint-restores (full progress credit — the resize
+    /// is a planned checkpoint, unlike a fault) and requeues at its
+    /// new footprint.  The paired `Resize` event precedes this one.
+    RankGrow,
 }
 
 impl EvictReason {
@@ -582,6 +618,7 @@ impl EvictReason {
             EvictReason::GpuFail => "gpu-fail",
             EvictReason::OverQuota => "quota",
             EvictReason::DeadlineHopeless => "deadline",
+            EvictReason::RankGrow => "rank-grow",
         }
     }
 
@@ -591,6 +628,7 @@ impl EvictReason {
             "gpu-fail" => Some(EvictReason::GpuFail),
             "quota" => Some(EvictReason::OverQuota),
             "deadline" => Some(EvictReason::DeadlineHopeless),
+            "rank-grow" => Some(EvictReason::RankGrow),
             _ => None,
         }
     }
@@ -601,6 +639,7 @@ impl EvictReason {
             EvictReason::GpuFail => 0,
             EvictReason::OverQuota => 1,
             EvictReason::DeadlineHopeless => 2,
+            EvictReason::RankGrow => 3,
         }
     }
 
@@ -611,6 +650,7 @@ impl EvictReason {
         match code {
             1 => EvictReason::OverQuota,
             2 => EvictReason::DeadlineHopeless,
+            3 => EvictReason::RankGrow,
             _ => EvictReason::GpuFail,
         }
     }
@@ -630,6 +670,23 @@ pub struct EvictDecision {
     /// sheds.
     pub placement: Option<Arc<Placement>>,
     pub reason: EvictReason,
+}
+
+/// One rank-reallocation decision: a running task's planned rank step
+/// applied at a completion boundary (dynamic rank reallocation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResizeDecision {
+    pub id: usize,
+    pub time: f64,
+    /// GPU footprint *after* the step.
+    pub gpus: usize,
+    pub old_rank: usize,
+    pub new_rank: usize,
+    /// The placement the task keeps running on after the step —
+    /// `None` when a grow no longer fit and the task was
+    /// evicted-and-requeued instead (the paired [`EvictDecision`] with
+    /// [`EvictReason::RankGrow`] follows in the eviction log).
+    pub placement: Option<Arc<Placement>>,
 }
 
 /// Admission / overload control.  Off by default: with `enabled` false
@@ -753,6 +810,12 @@ pub struct InterTaskScheduler {
     merged_log: Vec<MergeDecision>,
     /// Fault/overload eviction decisions since the last `drain_evicted`.
     evicted_log: Vec<EvictDecision>,
+    /// Rank-resize decisions since the last `drain_resized`.
+    resized_log: Vec<ResizeDecision>,
+    /// Live tasks that still have unapplied rank steps — the
+    /// completion-boundary rank pass early-outs to a counter check
+    /// (zero overhead for every rank-free workload).
+    rank_pending: usize,
     /// Admission / overload control (default: disabled).
     pub overload: OverloadConfig,
     /// Per-island straggler derate factors (wall-seconds per wall
@@ -774,6 +837,15 @@ pub struct InterTaskScheduler {
     pub evictions_quota: usize,
     /// Waiting tasks shed as deadline-hopeless.
     pub evictions_deadline: usize,
+    /// Rank steps applied across the run (grows + shrinks + in-place).
+    pub resizes: usize,
+    /// Rank steps that raised the rank.
+    pub rank_grows: usize,
+    /// Rank steps that lowered the rank.
+    pub rank_shrinks: usize,
+    /// Grow steps that evicted-and-requeued the task because the new
+    /// footprint exceeded its placement.
+    pub resize_evictions: usize,
     /// SLO deadline misses: hopeless sheds plus completions past their
     /// deadline.
     pub deadline_misses: usize,
@@ -838,6 +910,8 @@ impl InterTaskScheduler {
             adopted_log: Vec::new(),
             merged_log: Vec::new(),
             evicted_log: Vec::new(),
+            resized_log: Vec::new(),
+            rank_pending: 0,
             overload: OverloadConfig::default(),
             island_derate: vec![1.0; n_islands],
             derates_active: false,
@@ -847,6 +921,10 @@ impl InterTaskScheduler {
             fault_evictions: 0,
             evictions_quota: 0,
             evictions_deadline: 0,
+            resizes: 0,
+            rank_grows: 0,
+            rank_shrinks: 0,
+            resize_evictions: 0,
             deadline_misses: 0,
             adoptions: 0,
             merges: 0,
@@ -1017,6 +1095,28 @@ impl InterTaskScheduler {
             s.id,
             s.actual_duration
         );
+        // a malformed rank plan is rejected like a malformed duration:
+        // at admission, before any state changes, not as a panic at
+        // the resize boundary mid-replay
+        if !s.rank_steps.is_empty() {
+            super::rank::validate_steps(&s.rank_steps)
+                .with_context(|| format!("task {}: malformed rank steps", s.id))?;
+            anyhow::ensure!(
+                s.shape.is_some(),
+                "task {}: rank steps require a pricing shape (rank is a \
+                 pricing input)",
+                s.id
+            );
+            for (i, st) in s.rank_steps.iter().enumerate() {
+                anyhow::ensure!(
+                    st.new_gpus <= self.cluster.total(),
+                    "task {}: rank step {i} targets {} GPUs on a {}-GPU cluster",
+                    s.id,
+                    st.new_gpus,
+                    self.cluster.total()
+                );
+            }
+        }
         // duplicate or far-out-of-range ids are malformed submissions;
         // reject them here, before the clock (or anything else) moves
         self.tasks.check_id(s.id)?;
@@ -1055,8 +1155,18 @@ impl InterTaskScheduler {
                 tenant: s.tenant,
                 tenant_weight: s.tenant_weight,
                 deadline: s.deadline,
+                next_rank_step: 0,
+                actual_total: s.actual_duration,
+                rank_steps: s.rank_steps,
             },
         )?;
+        if self
+            .tasks
+            .get(s.id)
+            .is_some_and(|t| !t.rank_steps.is_empty())
+        {
+            self.rank_pending += 1;
+        }
         self.queued.insert(s.id);
         Ok(())
     }
@@ -1106,6 +1216,14 @@ impl InterTaskScheduler {
     /// decision order — the harness turns these into `Evict` events.
     pub fn drain_evicted(&mut self) -> Vec<EvictDecision> {
         std::mem::take(&mut self.evicted_log)
+    }
+
+    /// Rank-resize decisions made since the last drain, in decision
+    /// order — the harness turns these into `Resize` events.  Drained
+    /// *before* the eviction log so a grow's `Resize` event precedes
+    /// its paired `Evict`.
+    pub fn drain_resized(&mut self) -> Vec<ResizeDecision> {
+        std::mem::take(&mut self.resized_log)
     }
 
     /// Opt into (or out of) cross-task shared-executor groups.  Sharing
@@ -1502,7 +1620,10 @@ impl InterTaskScheduler {
                 actual.is_finite() && actual >= 0.0,
                 "body resolver returned {actual} for task {id}"
             );
-            self.tasks.req_mut(id)?.actual_remaining = actual;
+            let t = self.tasks.req_mut(id)?;
+            t.actual_remaining = actual;
+            // the progress-fraction denominator resolves with the body
+            t.actual_total = actual;
         }
         // price the run segment: placement/contention slowdown (plus the
         // roster stretch for shared-group members — 1.0 on a fresh
@@ -1574,6 +1695,261 @@ impl InterTaskScheduler {
             id,
             time: clock,
             placement: p,
+        });
+        Ok(())
+    }
+
+    // --- dynamic rank reallocation ---------------------------------------
+
+    /// Apply every planned rank step the running solo tasks have
+    /// progressed past, in ascending task id.  Called at each
+    /// completion boundary (a natural checkpoint: the clock just
+    /// advanced and a replan follows anyway).  Shared-group members are
+    /// skipped — their executors are communal, so a member cannot
+    /// unilaterally re-rank the roster.  With no pending steps anywhere
+    /// (every rank-free workload) this is a single counter check.
+    fn rank_pass(&mut self) -> Result<()> {
+        if self.rank_pending == 0 {
+            return Ok(());
+        }
+        let ids: Vec<usize> = self
+            .running
+            .keys()
+            .filter(|&&id| self.groups.membership_of(id).is_none())
+            .copied()
+            .collect();
+        for id in ids {
+            loop {
+                let Some(t) = self.tasks.get(id) else { break };
+                let Some(step) = t.rank_steps.get(t.next_rank_step).copied() else {
+                    break;
+                };
+                let total = t.actual_total;
+                if !(total.is_finite() && total > 0.0) {
+                    // zero-duration or still-unresolved body: no
+                    // progress fraction to fire on
+                    break;
+                }
+                // nominal work done so far = total − (remaining at the
+                // segment anchor − progress within the segment)
+                let elapsed = self.clock - t.segment_at;
+                let done = total - t.actual_remaining + t.nominal_progress(elapsed);
+                if done / total < step.at_progress {
+                    break;
+                }
+                self.apply_rank_step(id, step)?;
+                let t = self.tasks.req_mut(id)?;
+                t.next_rank_step += 1;
+                if t.next_rank_step >= t.rank_steps.len() {
+                    self.rank_pending = self.rank_pending.saturating_sub(1);
+                }
+                if !self.running.contains_key(&id) {
+                    // the grow evicted-and-requeued the task; later
+                    // steps wait for progress after it restarts
+                    break;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply one planned rank step to a *running* solo task at the
+    /// current clock.  Three shapes:
+    ///
+    /// * equal footprint — re-rank in place: fold the finished part of
+    ///   the run segment at the old rate, rewrite the pricing shape at
+    ///   the new rank/width, charge the checkpoint respill
+    ///   ([`StepTimeModel::resize_cost`]) as a one-off segment charge
+    ///   and re-derive the completion;
+    /// * shrink — additionally release the placement's GPU suffix (the
+    ///   trailing replan's plan/adopt passes reclaim it immediately);
+    /// * grow — evict-and-requeue with *full* progress credit (the
+    ///   resize is a planned checkpoint, unlike a fault): the task
+    ///   returns to the queue at its new footprint and the trailing
+    ///   replan seats it wherever it now fits, paying the restore as a
+    ///   migration like a `gpu-fail` restore does.
+    fn apply_rank_step(&mut self, id: usize, step: RankStep) -> Result<()> {
+        let clock = self.clock;
+        let new_adapters = step.new_adapters.max(1);
+        let new_rank = step.new_rank;
+        let (old_rank, old_gpus) = {
+            let t = self.tasks.req(id)?;
+            let Some(shape) = t.shape.as_ref() else {
+                // admission rejects step plans without a shape; a
+                // missing one here is internal-state corruption
+                anyhow::bail!("task {id}: rank step on a task with no pricing shape");
+            };
+            (shape.rank, t.gpus)
+        };
+        self.resizes += 1;
+        if new_rank > old_rank {
+            self.rank_grows += 1;
+        } else if new_rank < old_rank {
+            self.rank_shrinks += 1;
+        }
+        if step.new_gpus > old_gpus {
+            // grow past the held placement: checkpoint, requeue at the
+            // new footprint — same books as a fault eviction, but with
+            // full progress credit (this checkpoint is planned)
+            let completion = self.running.remove(&id).with_context(|| {
+                format!("rank-resizing task {id}, which is not running")
+            })?;
+            self.completions_remove(id, completion);
+            let t = self.tasks.req_mut(id)?;
+            anyhow::ensure!(
+                t.started_at.take().is_some(),
+                "rank-evicted task {id} has no recorded start"
+            );
+            let elapsed = clock - t.segment_at;
+            let progress = t.nominal_progress(elapsed);
+            t.actual_remaining = (t.actual_remaining - progress).max(0.0);
+            t.est_remaining = (t.est_remaining - progress).max(1e-9);
+            t.charged_runtime += elapsed;
+            t.run_factor = 1.0;
+            t.run_charge = 0.0;
+            t.preemptions += 1;
+            let p = t.placement.take().with_context(|| {
+                format!("rank-evicted task {id} holds no placement")
+            })?;
+            t.last_placement = Some(p.clone());
+            // the queued task already wears its post-step shape: the
+            // replan plans (and the restart prices) the new footprint
+            t.gpus = step.new_gpus;
+            t.adapters = new_adapters;
+            if let Some(shape) = t.shape.as_mut() {
+                shape.rank = new_rank;
+                shape.adapters = new_adapters;
+                shape.workload.ranks = vec![new_rank; new_adapters];
+            }
+            t.nominal_step = 0.0;
+            self.cluster.release(&p).with_context(|| {
+                format!("releasing rank-evicted task {id}'s GPUs")
+            })?;
+            self.residents_remove(id, &p);
+            self.mark_dirty(&p);
+            self.queued.insert(id);
+            self.plan_cache = None;
+            if step.new_gpus > 1 {
+                if let (Some(pr), Some(shape)) =
+                    (&self.pricer, &self.tasks.req(id)?.shape)
+                {
+                    let v = pr.model.nominal_step_total(&shape.workload, step.new_gpus);
+                    self.tasks.req_mut(id)?.nominal_step = v;
+                }
+            }
+            self.resize_evictions += 1;
+            self.resized_log.push(ResizeDecision {
+                id,
+                time: clock,
+                gpus: step.new_gpus,
+                old_rank,
+                new_rank,
+                placement: None,
+            });
+            self.evicted_log.push(EvictDecision {
+                id,
+                time: clock,
+                gpus: step.new_gpus,
+                placement: Some(p),
+                reason: EvictReason::RankGrow,
+            });
+            return Ok(());
+        }
+        // in place or shrink: the task keeps running on (a prefix of)
+        // its placement
+        let prev_completion = *self.running.get(&id).with_context(|| {
+            format!("rank-resizing task {id}, which is not running")
+        })?;
+        let (p, old_adapters, charge_left) = {
+            let t = self.tasks.req_mut(id)?;
+            let p = t.placement.clone().with_context(|| {
+                format!("rank-resizing task {id} holds no placement")
+            })?;
+            // fold the finished part of the segment at the old rate
+            let elapsed = clock - t.segment_at;
+            let progress = t.nominal_progress(elapsed);
+            let charge_left = (t.run_charge - elapsed).max(0.0);
+            t.actual_remaining = (t.actual_remaining - progress).max(0.0);
+            t.est_remaining = (t.est_remaining - progress).max(1e-9);
+            t.charged_runtime += elapsed;
+            t.segment_at = clock;
+            let old_adapters = t.adapters;
+            t.adapters = new_adapters;
+            if let Some(shape) = t.shape.as_mut() {
+                shape.rank = new_rank;
+                shape.adapters = new_adapters;
+                shape.workload.ranks = vec![new_rank; new_adapters];
+            }
+            t.nominal_step = 0.0;
+            (p, old_adapters, charge_left)
+        };
+        let kept: Arc<Placement> = if step.new_gpus < old_gpus {
+            // keep the placement's prefix (its first GPU — hence its
+            // home shard and island anchor — survives), release the
+            // suffix for the trailing replan to reclaim
+            let released = Placement::new(p.gpus()[step.new_gpus..].to_vec());
+            let kept = Arc::new(Placement::new(p.gpus()[..step.new_gpus].to_vec()));
+            {
+                let t = self.tasks.req_mut(id)?;
+                t.gpus = step.new_gpus;
+                t.placement = Some(kept.clone());
+            }
+            self.cluster.release(&released).with_context(|| {
+                format!("releasing rank-shrunk task {id}'s GPU suffix")
+            })?;
+            self.residents_remove(id, &released);
+            // every island of the *old* placement changed residency or
+            // width — reprice them all
+            self.mark_dirty(&p);
+            kept
+        } else {
+            // width unchanged; the adapter-count change still shifts
+            // what neighbors feel
+            self.mark_dirty(&p);
+            p.clone()
+        };
+        if step.new_gpus > 1 {
+            if let (Some(pr), Some(shape)) = (&self.pricer, &self.tasks.req(id)?.shape) {
+                let v = pr.model.nominal_step_total(&shape.workload, step.new_gpus);
+                self.tasks.req_mut(id)?.nominal_step = v;
+            }
+        }
+        // the respill charge: resident adapter state at the larger of
+        // the two ranks/widths, moved over the placement it keeps
+        let cost = match (&self.pricer, &self.tasks.req(id)?.shape) {
+            (Some(pr), Some(shape)) => pr.model.resize_cost(
+                &shape.workload.model,
+                old_rank,
+                new_rank,
+                old_adapters.max(new_adapters),
+                &kept,
+            ),
+            _ => 0.0,
+        };
+        self.migration_charge += cost;
+        let factor = self.price_view().factor(id);
+        let t = self.tasks.req_mut(id)?;
+        t.run_factor = factor;
+        t.run_charge = charge_left + cost;
+        let completion = clock + t.run_charge + t.actual_remaining * factor;
+        anyhow::ensure!(
+            completion.is_finite() && completion >= 0.0,
+            "task {id}: post-resize completion {completion} is not a finite \
+             non-negative time"
+        );
+        let entry = self.running.get_mut(&id).with_context(|| {
+            format!("rank-resized task {id} is not running")
+        })?;
+        *entry = completion;
+        self.completions_remove(id, prev_completion);
+        self.completions_insert(id, completion)?;
+        self.resized_log.push(ResizeDecision {
+            id,
+            time: clock,
+            gpus: step.new_gpus,
+            old_rank,
+            new_rank,
+            placement: Some(kept),
         });
         Ok(())
     }
@@ -1842,6 +2218,10 @@ impl InterTaskScheduler {
             if !self.groups.ever_member(id) {
                 self.retired_charged += t.gpus as f64 * t.charged_runtime;
             }
+            if t.next_rank_step < t.rank_steps.len() {
+                // pending rank steps die with the shed task
+                self.rank_pending = self.rank_pending.saturating_sub(1);
+            }
         }
         self.plan_cache = None;
         match reason {
@@ -1850,7 +2230,7 @@ impl InterTaskScheduler {
                 self.evictions_deadline += 1;
                 self.deadline_misses += 1;
             }
-            EvictReason::GpuFail => {}
+            EvictReason::GpuFail | EvictReason::RankGrow => {}
         }
         self.evicted_log.push(EvictDecision {
             id,
@@ -2306,7 +2686,10 @@ impl InterTaskScheduler {
                 actual.is_finite() && actual >= 0.0,
                 "body resolver returned {actual} for task {id}"
             );
-            self.tasks.req_mut(id)?.actual_remaining = actual;
+            let t = self.tasks.req_mut(id)?;
+            t.actual_remaining = actual;
+            // the progress-fraction denominator resolves with the body
+            t.actual_total = actual;
         }
         let factor = self.price_view().factor(id);
         let t = self.tasks.req_mut(id)?;
@@ -2466,6 +2849,8 @@ impl InterTaskScheduler {
         let missed_deadline = t.deadline > 0.0 && when > t.deadline;
         t.charged_runtime += when - t.segment_at;
         t.actual_remaining = 0.0;
+        // a completion strands any rank steps it never progressed past
+        let steps_stranded = t.next_rank_step < t.rank_steps.len();
         // drop the heavy pricing shape (and any resume placement):
         // completed tasks only serve accounting queries, so a long
         // trace's retained state stays O(live tasks), not
@@ -2500,6 +2885,9 @@ impl InterTaskScheduler {
             self.residents_remove(id, &p);
             self.mark_dirty(&p);
         }
+        if steps_stranded {
+            self.rank_pending = self.rank_pending.saturating_sub(1);
+        }
         if self.retire_completed {
             // group-charged tasks bill through the group ledger; only
             // solo runtime folds into the retired accumulator
@@ -2511,6 +2899,10 @@ impl InterTaskScheduler {
                 }
             }
         }
+        // a completion is a natural checkpoint boundary: fire any
+        // planned rank steps the survivors have progressed past before
+        // the replan seats waiting work on the freed GPUs
+        self.rank_pass()?;
         self.replan(false)?; // completion event → backfill instantly
         Ok(Some((id, when)))
     }
@@ -3032,6 +3424,253 @@ mod tests {
         let mut resolved = order.borrow().clone();
         resolved.sort_unstable();
         assert_eq!(resolved, vec![0, 1, 2, 3]);
+    }
+
+    // --- dynamic rank reallocation ----------------------------------------
+
+    /// Comm+migration pricing without contention: factors stay exactly
+    /// 1.0 on single-island placements, so resize arithmetic is
+    /// analytically checkable.
+    fn resize_pricing() -> Pricing {
+        Pricing { comm: true, contention: false, migration: true }
+    }
+
+    fn rank_step(at: f64, new_rank: usize, new_gpus: usize) -> RankStep {
+        RankStep { at_progress: at, new_rank, new_gpus, new_adapters: 2 }
+    }
+
+    #[test]
+    fn rank_steps_are_validated_at_admission() {
+        let mut s = priced_sched(4, 4, resize_pricing());
+        // a step plan without a pricing shape is malformed
+        let err = s
+            .submit_spec(Submission {
+                id: 0,
+                gpus: 1,
+                est_duration: 10.0,
+                actual_duration: 10.0,
+                rank_steps: vec![rank_step(0.5, 4, 1)],
+                ..Submission::default()
+            })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("pricing shape"), "{err}");
+        // a step targeting more GPUs than the cluster has
+        let err = s
+            .submit_spec(Submission {
+                id: 0,
+                gpus: 1,
+                est_duration: 10.0,
+                actual_duration: 10.0,
+                shape: Some(nano_shape()),
+                rank_steps: vec![rank_step(0.5, 16, 99)],
+                ..Submission::default()
+            })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("99 GPUs"), "{err}");
+        // a malformed fraction surfaces the step validator's error
+        // (the {:#} chain format shows the cause under the context)
+        let err = format!(
+            "{:#}",
+            s.submit_spec(Submission {
+                id: 0,
+                gpus: 1,
+                est_duration: 10.0,
+                actual_duration: 10.0,
+                shape: Some(nano_shape()),
+                rank_steps: vec![rank_step(1.5, 4, 1)],
+                ..Submission::default()
+            })
+            .unwrap_err()
+        );
+        assert!(err.contains("malformed rank steps"), "{err}");
+        assert!(err.contains("at_progress"), "{err}");
+        // rejection happened before any state change: the id is free
+        s.submit_spec(Submission {
+            id: 0,
+            gpus: 1,
+            est_duration: 10.0,
+            actual_duration: 10.0,
+            shape: Some(nano_shape()),
+            ..Submission::default()
+        })
+        .unwrap();
+        let mk = s.run_to_completion();
+        assert!(s.all_done());
+        assert!((mk - 10.0).abs() < 1e-9, "{mk}");
+        assert_eq!(s.resizes, 0);
+    }
+
+    #[test]
+    fn in_place_resize_folds_the_segment_and_charges_the_respill() {
+        let mut s = priced_sched(4, 4, resize_pricing());
+        // task 0 runs 2-GPU for 100 nominal seconds and shrinks its
+        // rank (same footprint) once half done; task 1's completion at
+        // t=60 is the boundary that fires the step (progress 0.6)
+        s.submit_spec(Submission {
+            id: 0,
+            gpus: 2,
+            est_duration: 100.0,
+            actual_duration: 100.0,
+            shape: Some(nano_shape()),
+            rank_steps: vec![rank_step(0.5, 4, 2)],
+            ..Submission::default()
+        })
+        .unwrap();
+        s.submit_spec(Submission {
+            id: 1,
+            gpus: 1,
+            est_duration: 60.0,
+            actual_duration: 60.0,
+            shape: Some(nano_shape()),
+            ..Submission::default()
+        })
+        .unwrap();
+        let mk = s.run_to_completion();
+        assert!(s.all_done());
+        assert_eq!((s.resizes, s.rank_shrinks, s.rank_grows), (1, 1, 0));
+        assert_eq!(s.resize_evictions, 0, "same footprint: no eviction");
+        let resized = s.drain_resized();
+        assert_eq!(resized.len(), 1);
+        let d = &resized[0];
+        assert_eq!((d.id, d.gpus, d.old_rank, d.new_rank), (0, 2, 8, 4));
+        assert!((d.time - 60.0).abs() < 1e-9, "boundary at t=60, got {}", d.time);
+        let kept = d.placement.as_ref().expect("in-place resize keeps GPUs");
+        assert_eq!(kept.gpus(), &[0, 1]);
+        // the respill is priced exactly like an in-place migration of
+        // the larger-rank state, and delays only the resized task
+        let model =
+            StepTimeModel::new(GpuSpec::h100_sxm5(), Topology::uniform(4, 4));
+        let cost = model.resize_cost(
+            &MODEL_FAMILY.get("nano").unwrap(),
+            8,
+            4,
+            2,
+            kept,
+        );
+        assert!(cost > 0.0);
+        assert!((mk - (100.0 + cost)).abs() < 1e-9, "makespan {mk}, cost {cost}");
+        assert!((s.migration_charge - cost).abs() < 1e-12);
+        assert_eq!(s.free_gpus(), 4, "all GPUs released at the end");
+    }
+
+    #[test]
+    fn rank_shrink_releases_the_gpu_suffix_for_backfill() {
+        let mut s = priced_sched(3, 3, resize_pricing());
+        s.submit_spec(Submission {
+            id: 0,
+            gpus: 2,
+            est_duration: 100.0,
+            actual_duration: 100.0,
+            shape: Some(nano_shape()),
+            rank_steps: vec![rank_step(0.5, 4, 1)],
+            ..Submission::default()
+        })
+        .unwrap();
+        s.submit_spec(Submission {
+            id: 1,
+            gpus: 1,
+            est_duration: 60.0,
+            actual_duration: 60.0,
+            shape: Some(nano_shape()),
+            ..Submission::default()
+        })
+        .unwrap();
+        // cluster full (2 + 1 on 3 GPUs): task 2 queues
+        s.submit_spec(Submission {
+            id: 2,
+            gpus: 1,
+            est_duration: 10.0,
+            actual_duration: 10.0,
+            shape: Some(nano_shape()),
+            ..Submission::default()
+        })
+        .unwrap();
+        let mk = s.run_to_completion();
+        assert!(s.all_done());
+        assert_eq!((s.resizes, s.rank_shrinks), (1, 1));
+        let resized = s.drain_resized();
+        assert_eq!(resized.len(), 1);
+        let kept = resized[0].placement.as_ref().unwrap();
+        assert_eq!(kept.gpus(), &[0], "the prefix survives, the suffix is freed");
+        assert_eq!(resized[0].gpus, 1);
+        // the freed suffix backfills the queued task at the same
+        // boundary, not at the next completion
+        let (start2, end2) = s.span(2).unwrap();
+        assert!((start2 - 60.0).abs() < 1e-9, "task 2 started at {start2}");
+        assert!((end2 - 70.0).abs() < 1e-9);
+        assert!(mk > 100.0, "the resized task still pays its respill: {mk}");
+        assert_eq!(s.free_gpus(), 3);
+    }
+
+    #[test]
+    fn rank_grow_evicts_and_requeues_with_full_progress_credit() {
+        let mut s = priced_sched(2, 2, resize_pricing());
+        // a coarse fault-checkpoint cadence proves the grow restores
+        // from the *planned* checkpoint (full credit at t=60), not the
+        // fault machinery's floored boundary (50)
+        s.set_fault_checkpoint_interval(50.0);
+        s.submit_spec(Submission {
+            id: 0,
+            gpus: 1,
+            est_duration: 100.0,
+            actual_duration: 100.0,
+            shape: Some(nano_shape()),
+            rank_steps: vec![rank_step(0.5, 16, 2)],
+            ..Submission::default()
+        })
+        .unwrap();
+        s.submit_spec(Submission {
+            id: 1,
+            gpus: 1,
+            est_duration: 60.0,
+            actual_duration: 60.0,
+            shape: Some(nano_shape()),
+            ..Submission::default()
+        })
+        .unwrap();
+        let mk = s.run_to_completion();
+        assert!(s.all_done());
+        assert_eq!((s.resizes, s.rank_grows, s.resize_evictions), (1, 1, 1));
+        assert_eq!(s.preemptions_of(0), 1, "the grow is an eviction");
+        // the Resize decision precedes and pairs with a rank-grow Evict
+        let resized = s.drain_resized();
+        assert_eq!(resized.len(), 1);
+        assert!(resized[0].placement.is_none(), "grows requeue, not re-rank in place");
+        assert_eq!((resized[0].gpus, resized[0].old_rank, resized[0].new_rank), (2, 8, 16));
+        let evicted = s.drain_evicted();
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].reason, EvictReason::RankGrow);
+        assert_eq!(evicted[0].gpus, 2, "the eviction records the new footprint");
+        let freed = evicted[0].placement.as_ref().expect("a runner released GPUs");
+        assert_eq!(freed.gpus(), &[0]);
+        // restart at t=60 on both GPUs: the restore is priced as a
+        // migration of the post-step state, and the remaining work is
+        // exactly 40 nominal seconds (full credit, no checkpoint floor)
+        let restart = s
+            .drain_started()
+            .into_iter()
+            .find(|d| d.id == 0 && d.resumed_from.is_some())
+            .expect("the grown task checkpoint-restores");
+        assert!((restart.time - 60.0).abs() < 1e-9);
+        assert_eq!(restart.placement.gpus(), &[0, 1]);
+        let model =
+            StepTimeModel::new(GpuSpec::h100_sxm5(), Topology::uniform(2, 2));
+        let migr = model.migration_cost(
+            &MODEL_FAMILY.get("nano").unwrap(),
+            16,
+            2,
+            restart.resumed_from.as_deref().unwrap(),
+            &restart.placement,
+        );
+        assert!(migr > 0.0);
+        assert!(
+            (mk - (100.0 + migr)).abs() < 1e-9,
+            "full credit: makespan {mk} must be 100 + {migr} (a 50s-floored \
+             restore would land at 110 + {migr})"
+        );
+        assert_eq!(s.free_gpus(), 2);
     }
 
     // --- duration pricing -------------------------------------------------

@@ -39,6 +39,7 @@
 
 pub mod inter;
 pub mod intra;
+pub mod rank;
 pub mod solver;
 
 /// Total order over `f64` for scheduler orderings: finite values compare
@@ -60,8 +61,10 @@ pub fn finite_last_cmp(x: f64, y: f64) -> std::cmp::Ordering {
 
 pub use inter::{
     AdoptDecision, InterTaskScheduler, MergeDecision, Policy, PreemptDecision, Pricer,
-    Pricing, RepriceDecision, SchedTuning, StartDecision, Submission, TaskShape,
+    Pricing, RepriceDecision, ResizeDecision, SchedTuning, StartDecision, Submission,
+    TaskShape,
 };
+pub use rank::{RankPolicy, RankStep};
 pub use intra::{
     admit, admit_priced, admit_slot, admit_slot_cross, backfill, backfill_cross,
     backfill_priced, group_by_batch, AdmissionPlan, ForeignCandidate, GroupPricer,

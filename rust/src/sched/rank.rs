@@ -1,0 +1,331 @@
+//! Runtime rank-reallocation policy (dynamic rank reallocation,
+//! ROADMAP "Dynamic rank reallocation mid-flight").
+//!
+//! [`RankPolicy`] turns the per-segment [`crate::trajsim::RankSignal`]
+//! (loss-slope / plateau detection plus the signed rank-sensitivity
+//! term) into grow/shrink decisions for a *surviving* configuration's
+//! LoRA rank at segment boundaries.  The policy is **off by default** —
+//! [`RankPolicy::off`] must be digest-invisible everywhere, which
+//! `rust/tests/sched_scale_props.rs` pins — and [`RankPolicy::paper`]
+//! enables the thresholds the quality-ablation bench runs with.
+//!
+//! A decision materializes as a [`RankStep`]: "once the task is
+//! `at_progress` of the way through its simulated work, its rank
+//! becomes `new_rank`, its GPU footprint `new_gpus` and its group
+//! width `new_adapters`".  Steps are *planned* deterministically at
+//! admission (a pure function of the task spec and the policy, so all
+//! three engine loops derive the identical plan) and *applied* by the
+//! inter-scheduler at exit-event boundaries, priced as a checkpoint
+//! transfer ([`crate::perfmodel::StepTimeModel::resize_cost`]).
+
+use anyhow::Result;
+
+use crate::trajsim::RankSignal;
+
+/// Grow/shrink thresholds over the trajectory's rank-sensitivity
+/// signal, with rank clamps and a per-decision cooldown.
+///
+/// `sensitivity > grow_above` doubles the rank (clamped to
+/// `max_rank`); `sensitivity < shrink_below` halves it (clamped to
+/// `min_rank`); in between the rank holds.  After any decision the
+/// policy holds for `cooldown_segments` further segments.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RankPolicy {
+    /// Master switch — `false` must leave every digest bitwise
+    /// unchanged (no steps are ever planned).
+    pub enabled: bool,
+    /// Sensitivity above which the rank doubles.
+    pub grow_above: f64,
+    /// Sensitivity below which the rank halves.
+    pub shrink_below: f64,
+    /// Lower rank clamp (shrinks never go below this).
+    pub min_rank: usize,
+    /// Upper rank clamp (grows never go above this).
+    pub max_rank: usize,
+    /// Segments to hold after a decision before the next one.
+    pub cooldown_segments: usize,
+}
+
+impl Default for RankPolicy {
+    fn default() -> RankPolicy {
+        RankPolicy::off()
+    }
+}
+
+impl RankPolicy {
+    /// Disabled policy with the paper's (valid) thresholds — the
+    /// default.  `decide` never fires.
+    pub fn off() -> RankPolicy {
+        RankPolicy {
+            enabled: false,
+            ..RankPolicy::paper()
+        }
+    }
+
+    /// The thresholds the quality-ablation bench runs with: grow when
+    /// rank demonstrably binds (`sensitivity > 0.75` — an undersized
+    /// adapter), shrink on plateau/overfit pressure
+    /// (`sensitivity < -0.1`), rank clamped to `[4, 64]`, one-segment
+    /// cooldown.
+    pub fn paper() -> RankPolicy {
+        RankPolicy {
+            enabled: true,
+            grow_above: 0.75,
+            shrink_below: -0.1,
+            min_rank: 4,
+            max_rank: 64,
+            cooldown_segments: 1,
+        }
+    }
+
+    /// Structured validation — rejects non-finite thresholds, an empty
+    /// or inverted rank band, and a zero cooldown, instead of silently
+    /// clamping or panicking later at the resize boundary.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.grow_above.is_finite(),
+            "RankPolicy.grow_above must be finite, got {}",
+            self.grow_above
+        );
+        anyhow::ensure!(
+            self.shrink_below.is_finite(),
+            "RankPolicy.shrink_below must be finite, got {}",
+            self.shrink_below
+        );
+        anyhow::ensure!(
+            self.grow_above > self.shrink_below,
+            "RankPolicy thresholds overlap: grow_above {} <= shrink_below {} \
+             would grow and shrink on the same signal",
+            self.grow_above,
+            self.shrink_below
+        );
+        anyhow::ensure!(self.min_rank >= 1, "RankPolicy.min_rank must be >= 1");
+        anyhow::ensure!(
+            self.min_rank <= self.max_rank,
+            "RankPolicy rank band is inverted: min_rank {} > max_rank {}",
+            self.min_rank,
+            self.max_rank
+        );
+        anyhow::ensure!(
+            self.cooldown_segments >= 1,
+            "RankPolicy.cooldown_segments must be >= 1 (a zero cooldown \
+             re-decides every segment and thrashes)"
+        );
+        Ok(())
+    }
+
+    /// The per-segment decision: `Some(new_rank)` if the signal crosses
+    /// a threshold *and* the clamped target actually differs from the
+    /// current rank, else `None`.  Pure — cooldown is the planner's
+    /// job (it sees the segment sequence; this sees one signal).
+    pub fn decide(&self, sig: &RankSignal, rank: usize) -> Option<usize> {
+        if !self.enabled {
+            return None;
+        }
+        if sig.sensitivity > self.grow_above {
+            let next = rank.saturating_mul(2).min(self.max_rank);
+            if next > rank {
+                return Some(next);
+            }
+        } else if sig.sensitivity < self.shrink_below {
+            let next = (rank / 2).max(self.min_rank);
+            if next < rank {
+                return Some(next);
+            }
+        }
+        None
+    }
+}
+
+/// One planned resize: when the task's simulated progress fraction
+/// reaches `at_progress`, its rank becomes `new_rank`, its GPU
+/// footprint `new_gpus`, and its co-location group width
+/// `new_adapters`.  Planned at admission, applied by the
+/// inter-scheduler at the next exit-event boundary past the fraction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RankStep {
+    /// Progress fraction in `(0, 1)` at which the step fires.
+    pub at_progress: f64,
+    /// The rank after the step (`>= 1`).
+    pub new_rank: usize,
+    /// The GPU footprint after the step (`>= 1`).
+    pub new_gpus: usize,
+    /// The group width after the step (`>= 1`).
+    pub new_adapters: usize,
+}
+
+/// Validate a planned step sequence: every target in range, fractions
+/// finite, strictly inside `(0, 1)` and strictly ascending.  Returns a
+/// structured `Err` naming the offending step — resize targets reach
+/// the scheduler through [`crate::sched::inter::Submission`], and a
+/// malformed plan must be rejected at admission, not discovered as a
+/// panic mid-replay.
+pub fn validate_steps(steps: &[RankStep]) -> Result<()> {
+    let mut prev = 0.0f64;
+    for (i, s) in steps.iter().enumerate() {
+        anyhow::ensure!(
+            s.at_progress.is_finite() && s.at_progress > 0.0 && s.at_progress < 1.0,
+            "rank step {i}: at_progress {} outside (0, 1)",
+            s.at_progress
+        );
+        anyhow::ensure!(
+            s.at_progress > prev,
+            "rank step {i}: at_progress {} not strictly after the previous step ({prev})",
+            s.at_progress
+        );
+        anyhow::ensure!(s.new_rank >= 1, "rank step {i}: new_rank must be >= 1");
+        anyhow::ensure!(s.new_gpus >= 1, "rank step {i}: new_gpus must be >= 1");
+        anyhow::ensure!(
+            s.new_adapters >= 1,
+            "rank step {i}: new_adapters must be >= 1"
+        );
+        prev = s.at_progress;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(sensitivity: f64) -> RankSignal {
+        RankSignal {
+            slope: -1e-3,
+            plateau: false,
+            sensitivity,
+        }
+    }
+
+    fn step(at: f64) -> RankStep {
+        RankStep {
+            at_progress: at,
+            new_rank: 8,
+            new_gpus: 1,
+            new_adapters: 1,
+        }
+    }
+
+    #[test]
+    fn defaults_are_off_and_valid() {
+        let off = RankPolicy::off();
+        assert!(!off.enabled);
+        assert_eq!(off, RankPolicy::default());
+        off.validate().unwrap();
+        RankPolicy::paper().validate().unwrap();
+        // off never decides, whatever the signal says
+        assert_eq!(off.decide(&sig(10.0), 8), None);
+        assert_eq!(off.decide(&sig(-10.0), 8), None);
+    }
+
+    #[test]
+    fn paper_policy_grows_shrinks_and_holds() {
+        let p = RankPolicy::paper();
+        // strong bind: double, clamped to max_rank
+        assert_eq!(p.decide(&sig(1.0), 8), Some(16));
+        assert_eq!(p.decide(&sig(1.0), 64), None, "already at max_rank");
+        assert_eq!(p.decide(&sig(1.0), 48), Some(64), "clamped to max_rank");
+        // plateau pressure: halve, clamped to min_rank
+        assert_eq!(p.decide(&sig(-0.5), 16), Some(8));
+        assert_eq!(p.decide(&sig(-0.5), 4), None, "already at min_rank");
+        assert_eq!(p.decide(&sig(-0.5), 6), Some(4), "clamped to min_rank");
+        // dead band holds
+        assert_eq!(p.decide(&sig(0.0), 16), None);
+        assert_eq!(p.decide(&sig(0.5), 16), None);
+        assert_eq!(p.decide(&sig(-0.05), 16), None);
+    }
+
+    #[test]
+    fn validate_rejects_non_finite_thresholds() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let p = RankPolicy {
+                grow_above: bad,
+                ..RankPolicy::paper()
+            };
+            let err = p.validate().unwrap_err().to_string();
+            assert!(err.contains("grow_above"), "{err}");
+            let p = RankPolicy {
+                shrink_below: bad,
+                ..RankPolicy::paper()
+            };
+            let err = p.validate().unwrap_err().to_string();
+            assert!(err.contains("shrink_below"), "{err}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_overlapping_thresholds() {
+        let p = RankPolicy {
+            grow_above: -0.5,
+            shrink_below: 0.5,
+            ..RankPolicy::paper()
+        };
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("overlap"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_rank_band() {
+        let p = RankPolicy {
+            min_rank: 0,
+            ..RankPolicy::paper()
+        };
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("min_rank"), "{err}");
+        let p = RankPolicy {
+            min_rank: 32,
+            max_rank: 16,
+            ..RankPolicy::paper()
+        };
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("inverted"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_zero_cooldown() {
+        let p = RankPolicy {
+            cooldown_segments: 0,
+            ..RankPolicy::paper()
+        };
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("cooldown"), "{err}");
+    }
+
+    #[test]
+    fn step_validation_rejects_each_malformation() {
+        validate_steps(&[]).unwrap();
+        validate_steps(&[step(0.25), step(0.5), step(0.75)]).unwrap();
+        // fraction outside (0, 1)
+        for bad in [0.0, 1.0, -0.5, 1.5, f64::NAN, f64::INFINITY] {
+            let err = validate_steps(&[step(bad)]).unwrap_err().to_string();
+            assert!(err.contains("at_progress"), "{bad}: {err}");
+        }
+        // not strictly ascending
+        let err = validate_steps(&[step(0.5), step(0.5)])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("strictly after"), "{err}");
+        let err = validate_steps(&[step(0.5), step(0.25)])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("strictly after"), "{err}");
+        // zero targets
+        let z = RankStep {
+            new_rank: 0,
+            ..step(0.5)
+        };
+        assert!(validate_steps(&[z]).unwrap_err().to_string().contains("new_rank"));
+        let z = RankStep {
+            new_gpus: 0,
+            ..step(0.5)
+        };
+        assert!(validate_steps(&[z]).unwrap_err().to_string().contains("new_gpus"));
+        let z = RankStep {
+            new_adapters: 0,
+            ..step(0.5)
+        };
+        assert!(validate_steps(&[z])
+            .unwrap_err()
+            .to_string()
+            .contains("new_adapters"));
+    }
+}

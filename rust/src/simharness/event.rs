@@ -137,6 +137,19 @@ pub enum EventKind {
         placement: Placement,
         reason: EvictReason,
     },
+    /// A running task's LoRA rank was re-allocated at a segment
+    /// boundary (dynamic rank reallocation, `RankPolicy`): `gpus` is
+    /// the footprint *after* the step and `placement` the GPUs it
+    /// holds afterwards — empty when the resize could not be applied
+    /// in place (a grow that no longer fits) and the task was
+    /// evicted-and-requeued instead (the paired `Evict` follows).
+    Resize {
+        task: usize,
+        gpus: usize,
+        old_rank: usize,
+        new_rank: usize,
+        placement: Placement,
+    },
 }
 
 impl EventKind {
@@ -158,6 +171,7 @@ impl EventKind {
             EventKind::Slowdown { .. } => "slowdown",
             EventKind::Restore { .. } => "restore",
             EventKind::Evict { .. } => "evict",
+            EventKind::Resize { .. } => "resize",
         }
     }
 
@@ -174,7 +188,8 @@ impl EventKind {
             | EventKind::JobExit { task, .. }
             | EventKind::Adopt { task, .. }
             | EventKind::Merge { task, .. }
-            | EventKind::Evict { task, .. } => task,
+            | EventKind::Evict { task, .. }
+            | EventKind::Resize { task, .. } => task,
             // cluster-level fault events name no task
             EventKind::Fail { .. }
             | EventKind::Recover { .. }
@@ -196,7 +211,8 @@ impl EventKind {
             | EventKind::JobExit { gpus, .. }
             | EventKind::Adopt { gpus, .. }
             | EventKind::Merge { gpus, .. }
-            | EventKind::Evict { gpus, .. } => gpus,
+            | EventKind::Evict { gpus, .. }
+            | EventKind::Resize { gpus, .. } => gpus,
             EventKind::Fail { .. }
             | EventKind::Recover { .. }
             | EventKind::Slowdown { .. }
@@ -213,6 +229,11 @@ impl EventKind {
             | EventKind::Placed { placement, .. }
             | EventKind::Adopt { placement, .. } => Some(placement),
             EventKind::Migrate { to, .. } | EventKind::Merge { to, .. } => Some(to),
+            // an in-place/shrink resize pins the post-step GPUs; a
+            // grow-eviction carries an empty placement and pins nothing
+            EventKind::Resize { placement, .. } if !placement.is_empty() => {
+                Some(placement)
+            }
             _ => None,
         }
     }
@@ -235,6 +256,7 @@ impl EventKind {
             EventKind::Slowdown { .. } => 13,
             EventKind::Restore { .. } => 14,
             EventKind::Evict { .. } => 15,
+            EventKind::Resize { .. } => 16,
         }
     }
 
@@ -305,6 +327,13 @@ impl EventKind {
             EventKind::Evict { placement, reason, .. } => {
                 mix_placement(h, placement);
                 fnv1a_mix(h, reason.code());
+            }
+            // both rank endpoints and the post-step placement are
+            // replay-contract state
+            EventKind::Resize { old_rank, new_rank, placement, .. } => {
+                fnv1a_mix(h, *old_rank as u64);
+                fnv1a_mix(h, *new_rank as u64);
+                mix_placement(h, placement);
             }
         }
     }
@@ -450,6 +479,19 @@ impl Event {
                 num(out, "task", self.kind.task() as f64);
                 num(out, "time", self.time);
             }
+            EventKind::Resize { old_rank, new_rank, placement, .. } => {
+                num(out, "gpus", self.kind.gpus() as f64);
+                text(out, "kind", self.kind.label());
+                num(out, "new_rank", *new_rank as f64);
+                num(out, "old_rank", *old_rank as f64);
+                // grow-evictions hold nothing afterwards: no placement key
+                if !placement.is_empty() {
+                    arr(out, "placement", placement);
+                }
+                num(out, "seq", self.seq as f64);
+                num(out, "task", self.kind.task() as f64);
+                num(out, "time", self.time);
+            }
         }
         // every kind wrote at least one trailing comma
         out.pop();
@@ -494,6 +536,13 @@ impl fmt::Display for Event {
                 write!(f, " {}", reason.as_str())?;
                 if !placement.is_empty() {
                     write!(f, " off={placement}")?;
+                }
+                Ok(())
+            }
+            EventKind::Resize { old_rank, new_rank, placement, .. } => {
+                write!(f, " r{old_rank}->r{new_rank}")?;
+                if !placement.is_empty() {
+                    write!(f, " on={placement}")?;
                 }
                 Ok(())
             }
@@ -650,6 +699,11 @@ impl EventLog {
                 r.p1 = self.push_placement(placement);
                 r.reason = reason.code() as u8;
             }
+            EventKind::Resize { old_rank, new_rank, placement, .. } => {
+                r.aux = *old_rank as u64;
+                r.x_bits = *new_rank as u64;
+                r.p1 = self.push_placement(placement);
+            }
         }
         r
     }
@@ -730,6 +784,13 @@ impl EventLog {
                 factor: f64::from_bits(r.x_bits),
             },
             14 => EventKind::Restore { island: r.aux as usize },
+            16 => EventKind::Resize {
+                task,
+                gpus,
+                old_rank: r.aux as usize,
+                new_rank: r.x_bits as usize,
+                placement: self.placement_at(r.p1),
+            },
             _ => EventKind::Evict {
                 task,
                 gpus,
@@ -784,9 +845,11 @@ impl EventLog {
             }
             match r.code {
                 // Start / Placed / Adopt pin `p1`; Migrate / Merge pin
-                // their `to` side, `p2`.
+                // their `to` side, `p2`; an in-place/shrink Resize pins
+                // its post-step `p1` (empty for a grow-eviction).
                 1 | 4 | 9 => Some(self.placement_at(r.p1)),
                 5 | 10 => Some(self.placement_at(r.p2)),
+                16 if r.p1.1 > 0 => Some(self.placement_at(r.p1)),
                 _ => None,
             }
         })
@@ -977,6 +1040,22 @@ impl EventLog {
                         anyhow::anyhow!("line {}: 'island' not an index", lineno + 1)
                     })?,
                 },
+                Some("resize") => EventKind::Resize {
+                    task,
+                    gpus,
+                    old_rank: j.req("old_rank")?.as_usize().ok_or_else(|| {
+                        anyhow::anyhow!("line {}: 'old_rank' not an index", lineno + 1)
+                    })?,
+                    new_rank: j.req("new_rank")?.as_usize().ok_or_else(|| {
+                        anyhow::anyhow!("line {}: 'new_rank' not an index", lineno + 1)
+                    })?,
+                    // grow-evictions hold nothing and dump no placement
+                    placement: if j.get("placement").is_some() {
+                        Self::placement_from(&j, "placement", gpus)?
+                    } else {
+                        Placement::default()
+                    },
+                },
                 Some("evict") => EventKind::Evict {
                     task,
                     gpus,
@@ -1128,6 +1207,7 @@ mod tests {
             body_sample(),
             sharing_sample(),
             fault_sample(),
+            resize_sample(),
         ];
         for log in &logs {
             let evs = log.events();
@@ -1258,6 +1338,13 @@ mod tests {
                     }
                     fields.push(("reason", Json::Str(reason.as_str().to_string())));
                 }
+                EventKind::Resize { old_rank, new_rank, placement, .. } => {
+                    fields.push(("old_rank", Json::Num(*old_rank as f64)));
+                    fields.push(("new_rank", Json::Num(*new_rank as f64)));
+                    if !placement.is_empty() {
+                        fields.push(("placement", placement_json(placement)));
+                    }
+                }
             }
             Json::obj(fields).to_string()
         }
@@ -1307,6 +1394,9 @@ mod tests {
             },
         );
         for e in fault_sample().events() {
+            log.record(e.time, e.kind);
+        }
+        for e in resize_sample().events() {
             log.record(e.time, e.kind);
         }
         let mut buf = String::new();
@@ -1567,6 +1657,105 @@ mod tests {
         let bad = r#"{"gpus":0,"island":0,"kind":"slowdown","seq":0,"task":0,"time":0}"#;
         assert!(EventLog::from_jsonl(bad).is_err());
         let bad = r#"{"gpus":1,"kind":"evict","reason":"warp","seq":0,"task":0,"time":0}"#;
+        assert!(EventLog::from_jsonl(bad).is_err());
+    }
+
+    fn resize_sample() -> EventLog {
+        let mut log = sample();
+        // a shrink applied in place: the task keeps a GPU subset
+        log.record(
+            2.0,
+            EventKind::Resize {
+                task: 0,
+                gpus: 1,
+                old_rank: 32,
+                new_rank: 16,
+                placement: p(&[0]),
+            },
+        );
+        // a grow that no longer fits: empty placement, paired eviction
+        log.record(
+            3.0,
+            EventKind::Resize {
+                task: 0,
+                gpus: 2,
+                old_rank: 16,
+                new_rank: 32,
+                placement: Placement::default(),
+            },
+        );
+        log.record(
+            3.0,
+            EventKind::Evict {
+                task: 0,
+                gpus: 1,
+                placement: p(&[0]),
+                reason: EvictReason::RankGrow,
+            },
+        );
+        log
+    }
+
+    #[test]
+    fn resize_events_roundtrip_digest_and_render() {
+        let log = resize_sample();
+        assert_ne!(log.digest(), sample().digest());
+        let back = EventLog::from_jsonl(&log.to_jsonl()).unwrap();
+        assert_eq!(back, log);
+        assert_eq!(back.digest(), log.digest());
+        // both rank endpoints are digest-bearing
+        let mk = |old_rank: usize, new_rank: usize| {
+            let mut l = sample();
+            l.record(
+                2.0,
+                EventKind::Resize {
+                    task: 0,
+                    gpus: 1,
+                    old_rank,
+                    new_rank,
+                    placement: p(&[0]),
+                },
+            );
+            l
+        };
+        assert_ne!(mk(32, 16).digest(), mk(16, 16).digest(), "old_rank must be hashed");
+        assert_ne!(mk(32, 16).digest(), mk(32, 8).digest(), "new_rank must be hashed");
+        // so is the post-step placement
+        let mut other = sample();
+        other.record(
+            2.0,
+            EventKind::Resize {
+                task: 0,
+                gpus: 1,
+                old_rank: 32,
+                new_rank: 16,
+                placement: p(&[1]), // differs
+            },
+        );
+        assert_ne!(other.digest(), mk(32, 16).digest(), "placement must be hashed");
+        let lines = log.lines();
+        assert!(
+            lines[3].contains("resize")
+                && lines[3].contains("r32->r16")
+                && lines[3].contains("on=[0]"),
+            "{}",
+            lines[3]
+        );
+        assert!(
+            lines[4].contains("r16->r32") && !lines[4].contains("on="),
+            "{}",
+            lines[4]
+        );
+        assert!(lines[5].contains("rank-grow"), "{}", lines[5]);
+        // an in-place resize pins the task's final GPUs; the trailing
+        // grow-eviction (empty placement) pins nothing past it
+        assert_eq!(log.final_placement(0), Some(p(&[0])));
+        // malformed resize events are rejected on reload
+        let bad = r#"{"gpus":1,"kind":"resize","new_rank":16,"seq":0,"task":0,"time":0}"#;
+        assert!(EventLog::from_jsonl(bad).is_err());
+        let bad = r#"{"gpus":1,"kind":"resize","old_rank":32,"seq":0,"task":0,"time":0}"#;
+        assert!(EventLog::from_jsonl(bad).is_err());
+        let bad = r#"{"gpus":2,"kind":"resize","new_rank":16,"old_rank":32,"placement":[0],"seq":0,"task":0,"time":0}"#;
         assert!(EventLog::from_jsonl(bad).is_err());
     }
 

@@ -57,6 +57,20 @@
 //!   placement).  All are digest-bearing; with `FaultPlan::none()` and
 //!   overload off, none is ever emitted and every timeline is
 //!   bit-identical to before.
+//! * **Resize** — with [`HarnessConfig`]`::rank` enabled (and pricing
+//!   on), dynamic rank reallocation fires a planned
+//!   [`crate::sched::RankStep`] at the first completion boundary past
+//!   its progress fraction: the event carries the old and new rank,
+//!   the post-resize GPU width, and the placement the task keeps (a
+//!   shrink's released suffix is backfillable immediately; an
+//!   empty placement marks a grow that no longer fit in place and was
+//!   evicted-and-requeued with full progress credit — its paired
+//!   `Evict` with reason `rank-grow` follows).  Resizes are priced as
+//!   checkpoint transfers
+//!   ([`crate::perfmodel::StepTimeModel::resize_cost`]).  Digest
+//!   code 16; with [`crate::sched::RankPolicy::off`] (the default)
+//!   none is ever emitted and every timeline is bit-identical to the
+//!   pre-resize engine.
 //!
 //! Time ties resolve completions before arrivals (capacity frees before
 //! the arriving task plans over it) and preemptions before the starts
@@ -217,13 +231,14 @@ pub mod trace;
 
 pub use crate::cluster::{PlacePolicy, Placement, Topology};
 pub use crate::sched::inter::Pricing;
+pub use crate::sched::{RankPolicy, RankStep};
 pub use engine::{
     BodyMark, HarnessConfig, HarnessReport, SimEngine, SourceReport, StreamReport, TaskSummary,
-    Timeline,
+    Timeline, RANK_PLAN_SEGMENTS,
 };
 pub use event::{Event, EventKind, EventLog};
 pub use faults::{FaultEvent, FaultPlan, TimedFault};
 pub use trace::{
-    colocatable_mix, duplicate_mix, frag_mix, hetero_mix, uniform_mix, StreamingTrace, Trace,
-    TraceCursor, TraceEntry, TraceSource,
+    colocatable_mix, duplicate_mix, frag_mix, hetero_mix, rank_mix, uniform_mix, StreamingTrace,
+    Trace, TraceCursor, TraceEntry, TraceSource,
 };

@@ -482,6 +482,71 @@ fn colocatable_mix_iter(
     })
 }
 
+/// Rank-adaptation-heavy tenant stream: the workload dynamic rank
+/// reallocation is measured on.  Three of every four tasks are 2-GPU
+/// 32B sweeps whose search space tops out at rank 64 — their
+/// trajectories plateau mid-run (or overfit), so the planner's
+/// mid-segment signal calls a shrink, and 64 → 32 on a 2-GPU footprint
+/// releases exactly one GPU (LoRA state is proportional to rank).
+/// Every fourth task is a 1-GPU rank-2 sweep sitting on the simulator's
+/// hard rank<4 underfit cliff, so the signal calls a grow — which
+/// doubles the footprint and exercises the evict-and-requeue path.
+/// `train_samples` around 2800 (≈ 4200 steps at 3 epochs / batch 2)
+/// keeps the per-segment slope estimate far enough below the plateau
+/// threshold that shrinks fire for every seed.  Pure function of
+/// (n_tasks, train_samples, seed).
+pub fn rank_mix(n_tasks: usize, train_samples: usize, seed: u64) -> Vec<TaskSpec> {
+    rank_mix_iter(n_tasks, train_samples, seed).collect()
+}
+
+fn rank_mix_iter(
+    n_tasks: usize,
+    train_samples: usize,
+    seed: u64,
+) -> impl Iterator<Item = TaskSpec> {
+    let mut rng = Pcg32::new(seed, 0x7a9c);
+    (0..n_tasks).map(move |i| {
+        let grower = i % 4 == 3;
+        let samples = (train_samples as f64 * rng.uniform(0.8, 1.2)) as usize;
+        if grower {
+            TaskSpec {
+                name: format!("grow-{i}"),
+                model: "llama-8b".into(),
+                dataset: "gsm-syn".into(),
+                num_gpus: 1,
+                // rank 2 sits below the rank<4 cliff: grow pressure 1.0
+                search_space: SearchSpace {
+                    lrs: vec![5e-5, 2e-4],
+                    ranks: vec![2],
+                    batch_sizes: vec![2, 4],
+                },
+                seq_len: 256,
+                train_samples: samples.max(16),
+                seed: seed.wrapping_add(i as u64 * 151),
+                ..TaskSpec::default()
+            }
+        } else {
+            TaskSpec {
+                name: format!("shrink-{i}"),
+                model: "qwen-32b".into(),
+                dataset: "gsm-syn".into(),
+                num_gpus: 2,
+                // lr stays at/below LR_OPT so trajectories converge and
+                // plateau instead of diverging
+                search_space: SearchSpace {
+                    lrs: vec![5e-5, 2e-4],
+                    ranks: vec![16, 64],
+                    batch_sizes: vec![2, 4],
+                },
+                seq_len: 512,
+                train_samples: samples.max(16),
+                seed: seed.wrapping_add(i as u64 * 151),
+                ..TaskSpec::default()
+            }
+        }
+    })
+}
+
 /// Lazy twin of [`Trace::preemption_stress`]: the t = 0 wave followed by
 /// the urgent stream.  Emission order is construction order, which is
 /// already nondecreasing in arrival time (0.0s, then a strictly
@@ -596,6 +661,25 @@ impl Trace {
             colocatable_mix(n_tasks, n_distinct, train_samples, seed),
             mean_interarrival,
             seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(13),
+        )
+    }
+
+    /// Rank-adaptation-heavy Poisson stream over [`rank_mix`] — the
+    /// dynamic-rank-reallocation stressor: plateau-bound rank-64
+    /// shrink candidates interleaved with rank-2 grow candidates.  The
+    /// quality ablation replays it with the rank policy off and on to
+    /// measure the GPU-seconds the shrinks return.  Pure function of
+    /// its arguments.
+    pub fn rank_heavy(
+        n_tasks: usize,
+        train_samples: usize,
+        mean_interarrival: f64,
+        seed: u64,
+    ) -> Trace {
+        Trace::poisson(
+            rank_mix(n_tasks, train_samples, seed),
+            mean_interarrival,
+            seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(23),
         )
     }
 
@@ -787,6 +871,23 @@ impl StreamingTrace {
                 colocatable_mix_iter(n_tasks, n_distinct, train_samples, seed),
                 mean_interarrival,
                 seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(13),
+            ),
+            n_tasks,
+        )
+    }
+
+    /// Streaming twin of [`Trace::rank_heavy`].
+    pub fn rank_heavy(
+        n_tasks: usize,
+        train_samples: usize,
+        mean_interarrival: f64,
+        seed: u64,
+    ) -> StreamingTrace {
+        StreamingTrace::new(
+            poisson_arrivals(
+                rank_mix_iter(n_tasks, train_samples, seed),
+                mean_interarrival,
+                seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(23),
             ),
             n_tasks,
         )
@@ -1064,6 +1165,55 @@ mod tests {
         assert_ne!(
             t.fingerprint(),
             Trace::colocatable(24, 6, 48, 20.0, 8).fingerprint()
+        );
+    }
+
+    #[test]
+    fn rank_heavy_mixes_shrink_and_grow_candidates() {
+        let t = Trace::rank_heavy(16, 2800, 60.0, 11);
+        assert_eq!(t.len(), 16);
+        let shrinkers: Vec<_> = t
+            .entries
+            .iter()
+            .filter(|e| e.spec.name.starts_with("shrink-"))
+            .collect();
+        let growers: Vec<_> = t
+            .entries
+            .iter()
+            .filter(|e| e.spec.name.starts_with("grow-"))
+            .collect();
+        assert_eq!(shrinkers.len(), 12);
+        assert_eq!(growers.len(), 4);
+        // shrink candidates: 2-GPU, rank band topping out at 64, lr
+        // capped at LR_OPT so they converge and plateau
+        for e in &shrinkers {
+            assert_eq!(e.spec.num_gpus, 2);
+            assert_eq!(e.spec.search_space.ranks.iter().max(), Some(&64));
+            assert!(e.spec.search_space.lrs.iter().all(|&lr| lr <= 2e-4));
+        }
+        // grow candidates: 1-GPU, pinned below the rank<4 cliff
+        for e in &growers {
+            assert_eq!(e.spec.num_gpus, 1);
+            assert_eq!(e.spec.search_space.ranks, vec![2]);
+        }
+        // ≈ 4200 steps at 3 epochs / batch 2: enough for the plateau
+        // detector even at the bottom of the size jitter
+        assert!(t.entries.iter().all(|e| e.spec.train_samples >= 2240));
+        assert_eq!(
+            t.fingerprint(),
+            Trace::rank_heavy(16, 2800, 60.0, 11).fingerprint()
+        );
+        assert_ne!(
+            t.fingerprint(),
+            Trace::rank_heavy(16, 2800, 60.0, 12).fingerprint()
+        );
+    }
+
+    #[test]
+    fn streaming_rank_heavy_matches_materialized() {
+        assert_streams_exactly(
+            StreamingTrace::rank_heavy(24, 2800, 60.0, 11),
+            &Trace::rank_heavy(24, 2800, 60.0, 11),
         );
     }
 

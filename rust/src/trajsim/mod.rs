@@ -52,7 +52,29 @@ pub struct SimJob {
     overfit_step: usize,
     overfit_rate: f64,
     noise: f64,
+    rank_penalty: f64,
 }
+
+/// Per-segment signal the rank-adaptation policy
+/// ([`crate::sched::rank::RankPolicy`]) consumes.  `sensitivity` is
+/// signed: positive means rank binds (growing would lower the loss
+/// floor), negative means capacity is wasted (overfitting onset or a
+/// plateaued high-rank config) and shrinking is safe.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RankSignal {
+    /// Relative per-step val-loss slope over the segment (negative =
+    /// still improving).
+    pub slope: f64,
+    /// `|slope|` below [`PLATEAU_SLOPE`] — the trajectory has flattened.
+    pub plateau: bool,
+    /// Signed rank-sensitivity: + grow, − shrink (see above).
+    pub sensitivity: f64,
+}
+
+/// Relative per-step slope below which a segment counts as plateaued.
+/// Late converged segments sit around 1e-4; early descending segments
+/// around 1e-3 and above.
+pub const PLATEAU_SLOPE: f64 = 2e-4;
 
 /// The lr the simulator treats as optimal (paper-scale: 2e-4 sits at the
 /// center of the sensible band in §A.4).
@@ -140,6 +162,7 @@ impl SimJob {
             },
             overfit_rate: 1.2 / total_steps as f64 * (0.5 + rng.f64()),
             noise: 0.015 + 0.02 / (hp.batch_size as f64).sqrt(),
+            rank_penalty,
         }
     }
 
@@ -193,6 +216,43 @@ impl SimJob {
         (start..end)
             .map(|s| (self.train_loss(s), self.val_loss(s)))
             .collect()
+    }
+
+    /// Per-segment rank-adaptation signal (see [`RankSignal`]): the
+    /// relative val-loss slope over `[start, end)`, a plateau flag, and
+    /// a rank-sensitivity term derived from the same `rank_penalty` /
+    /// overfit machinery that shaped this trajectory.  Pure function of
+    /// (config, seed, segment bounds) — same bits on every evaluation,
+    /// which is what lets all three engine paths plan identical resize
+    /// schedules from it.
+    pub fn rank_signal(&self, start: usize, end: usize) -> RankSignal {
+        let end = end.min(self.total_steps).max(start + 1);
+        let vals: Vec<f64> = (start..end).map(|s| self.val_loss(s)).collect();
+        let half = (vals.len() / 2).max(1);
+        let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+        let head = mean(&vals[..half]);
+        let tail = mean(&vals[half.min(vals.len() - 1)..]);
+        // relative per-step slope between the segment's two halves;
+        // negative = still improving, ~0 = flat
+        let slope = (tail - head) / (head.max(1e-9) * half as f64);
+        let plateau = slope.abs() < PLATEAU_SLOPE;
+        // grow pressure: how much the loss floor is inflated because
+        // rank binds (1.0 at the hard rank<4 cliff, ≤ ~0.07 otherwise)
+        let grow = self.rank_penalty / 0.15;
+        // shrink pressure: overfitting past onset wants less capacity;
+        // a plateaued high-rank config holds capacity it no longer uses
+        let shrink = if self.regime == Regime::Overfitting && end > self.overfit_step {
+            1.0
+        } else if plateau {
+            0.5 * (self.hp.rank as f64 / 16.0).sqrt().min(1.5)
+        } else {
+            0.0
+        };
+        RankSignal {
+            slope,
+            plateau,
+            sensitivity: grow - shrink,
+        }
     }
 
     /// Best (minimum) validation loss over the whole run — what a
@@ -478,6 +538,92 @@ mod tests {
                 assert_eq!(v.to_bits(), full[i].1.to_bits(), "val step {i} cut {cut}");
             }
         }
+    }
+
+    #[test]
+    fn rank_signal_is_deterministic_and_bounded() {
+        let prof = dataset_profile("gsm-syn").unwrap();
+        let hp = HyperParams {
+            lr: 2e-4,
+            rank: 16,
+            batch_size: 2,
+        };
+        let a = SimJob::new(&hp, prof, 400, 13);
+        let b = SimJob::new(&hp, prof, 400, 13);
+        for seg in 0..4 {
+            let s = seg * 100;
+            let x = a.rank_signal(s, s + 100);
+            let y = b.rank_signal(s, s + 100);
+            // the signal is part of the resize-plan determinism story:
+            // bitwise, not approximately, equal
+            assert_eq!(x.slope.to_bits(), y.slope.to_bits());
+            assert_eq!(x.sensitivity.to_bits(), y.sensitivity.to_bits());
+            assert_eq!(x.plateau, y.plateau);
+            assert!(x.slope.is_finite() && x.sensitivity.is_finite());
+        }
+        // out-of-range bounds clamp instead of panicking
+        assert!(a.rank_signal(390, 10_000).slope.is_finite());
+        assert!(a.rank_signal(399, 399).slope.is_finite());
+    }
+
+    #[test]
+    fn rank_signal_direction_matches_the_regime_machinery() {
+        // (1) rank-starved (rank < 4 cliff): grow pressure dominates
+        let prof = dataset_profile("gsm-syn").unwrap();
+        let hp = HyperParams {
+            lr: 2e-4,
+            rank: 2,
+            batch_size: 2,
+        };
+        let starved = (0..100)
+            .map(|s| SimJob::new(&hp, prof, 400, s))
+            .find(|j| j.regime != Regime::Overfitting && j.regime != Regime::Diverging)
+            .expect("a sane-lr rank-2 config should usually not overfit/diverge");
+        let sig = starved.rank_signal(0, 100);
+        assert!(
+            sig.sensitivity > 0.75,
+            "starved rank must demand growth: {sig:?}"
+        );
+        // and the early descent is visible in the slope
+        assert!(sig.slope < 0.0, "{sig:?}");
+
+        // (2) a converged high-rank config plateaus late: shrink is safe
+        let hp = HyperParams {
+            lr: 2e-4,
+            rank: 64,
+            batch_size: 4,
+        };
+        let sig = (0..200)
+            .map(|s| SimJob::new(&hp, prof, 400, s))
+            .find_map(|j| {
+                if j.regime != Regime::Converging {
+                    return None;
+                }
+                let sig = j.rank_signal(300, 400);
+                sig.plateau.then_some(sig)
+            })
+            .expect("some converged high-rank job should plateau late");
+        assert!(
+            sig.sensitivity < -0.1,
+            "plateaued high rank must shed capacity: {sig:?}"
+        );
+
+        // (3) overfitting past onset: shrink hard, whatever the slope
+        let prof = dataset_profile("pref-syn").unwrap();
+        let hp = HyperParams {
+            lr: 3e-4,
+            rank: 128,
+            batch_size: 2,
+        };
+        let over = (0..200)
+            .map(|s| SimJob::new(&hp, prof, 400, s))
+            .find(|j| j.regime == Regime::Overfitting)
+            .expect("high-rank aggressive config should sometimes overfit");
+        let sig = over.rank_signal(over.overfit_step, over.overfit_step + 50);
+        assert!(
+            sig.sensitivity < -0.5,
+            "overfitting past onset must shed capacity: {sig:?}"
+        );
     }
 
     #[test]

@@ -119,6 +119,60 @@ fn check_bitmap_consistency(log: &alto::simharness::EventLog, total_gpus: usize)
                 // must only ever name a task that is currently running
                 assert!(held.contains_key(task), "repriced a non-running task: {e}");
             }
+            // body-level events and cluster-level fault/straggler marks
+            // never move the bitmap
+            EventKind::Segment { .. }
+            | EventKind::JobExit { .. }
+            | EventKind::Fail { .. }
+            | EventKind::Recover { .. }
+            | EventKind::Slowdown { .. }
+            | EventKind::Restore { .. } => {}
+            EventKind::Adopt { .. } | EventKind::Merge { .. } => {
+                // shared-executor rosters alias one placement across
+                // tasks; this walker checks exclusive ownership only
+                panic!("walker does not model shared-executor groups: {e}")
+            }
+            EventKind::Evict { task, placement, .. } => {
+                // `gpus` is the task's *requested* footprint (post-step
+                // for rank-grow evictions) — only `placement` says what
+                // was actually released, so free by that alone
+                if placement.is_empty() {
+                    assert!(!held.contains_key(task), "shed task {task} still held: {e}");
+                } else {
+                    let p = held
+                        .remove(task)
+                        .unwrap_or_else(|| panic!("task {task} evicted without holding: {e}"));
+                    assert_eq!(placement, &p, "evict released wrong GPUs: {e}");
+                    for &g in p.gpus() {
+                        assert!(!free[g], "GPU {g} freed while free: {e}");
+                        free[g] = true;
+                    }
+                }
+            }
+            EventKind::Resize { task, gpus, placement, .. } => {
+                if placement.is_empty() {
+                    // grow past the held placement: the paired rank-grow
+                    // Evict (next in the log) releases the old GPUs
+                    assert!(held.contains_key(task), "resized a non-running task: {e}");
+                } else {
+                    // in place or shrink: the new placement replaces the
+                    // old (a prefix of it — free-then-claim checks that)
+                    assert_eq!(placement.len(), *gpus, "event {e}");
+                    let old = held
+                        .remove(task)
+                        .unwrap_or_else(|| panic!("task {task} resized without holding: {e}"));
+                    for &g in old.gpus() {
+                        assert!(!free[g], "GPU {g} freed while free: {e}");
+                        free[g] = true;
+                    }
+                    for &g in placement.gpus() {
+                        assert!(g < total_gpus, "GPU {g} out of range: {e}");
+                        assert!(free[g], "GPU {g} double-booked by resize: {e}");
+                        free[g] = false;
+                    }
+                    held.insert(*task, placement.clone());
+                }
+            }
         }
     }
     assert!(held.is_empty(), "timeline ended with live allocations: {held:?}");
@@ -382,6 +436,7 @@ fn preemption_evicts_youngest_and_migrates() {
                 EventKind::Placed { .. } => "placed",
                 EventKind::Migrate { .. } => "migrate",
                 EventKind::Reprice { .. } => "reprice",
+                _ => "other",
             };
             (label, e.kind.task(), e.time)
         })

@@ -48,9 +48,19 @@
 //!   streaming and source-driven engine paths; and under GPU failures
 //!   with overload off, every evicted runner is checkpoint-restored —
 //!   no task is ever lost.
+//! * **Dynamic rank reallocation** — an armed-but-never-firing
+//!   [`RankPolicy`] (and the explicit [`RankPolicy::off`]) changes not
+//!   one digest bit on any trace family; [`RankPolicy::paper`] on the
+//!   rank-heavy trace replays bit-identically across all three engine
+//!   paths with equal resize counters; every `Resize` event keeps an
+//!   independently re-derived GPU bitmap consistent and the live
+//!   footprint within capacity; and every rank-grow eviction
+//!   checkpoint-restores — no task is ever lost to a resize.
+
+use std::collections::BTreeMap;
 
 use alto::cluster::gpu::GpuSpec;
-use alto::cluster::{PlacePolicy, SimCluster, Topology};
+use alto::cluster::{PlacePolicy, Placement, SimCluster, Topology};
 use alto::config::MODEL_FAMILY;
 use alto::coordinator::shared::SharingConfig;
 use alto::perfmodel::{task_workload, ContentionCtx, StepTimeModel};
@@ -59,8 +69,8 @@ use alto::sched::inter::{
     RepriceDecision, SchedTuning, StartDecision, Submission, TaskShape,
 };
 use alto::simharness::{
-    uniform_mix, EventKind, FaultEvent, FaultPlan, HarnessConfig, SimEngine, StreamingTrace,
-    TimedFault, Trace,
+    uniform_mix, EventKind, FaultEvent, FaultPlan, HarnessConfig, RankPolicy, SimEngine,
+    StreamingTrace, TimedFault, Trace,
 };
 use alto::util::rng::Pcg32;
 
@@ -989,6 +999,388 @@ fn failed_runners_are_checkpoint_restored_and_no_task_is_lost() {
         assert!(
             s.actual_duration.is_finite(),
             "task '{}' never resolved — it was shed, not restored",
+            s.name
+        );
+    }
+}
+
+/// Re-derive the GPU bitmap from an event log alone, resize events
+/// included: every allocation must claim free in-range GPUs, every
+/// release must free exactly what its task holds — by `placement`
+/// payloads, never by `gpus` (a rank-grow eviction's `gpus` is already
+/// the *post-step* footprint while its `placement` is the old one) —
+/// and the live footprint can never exceed capacity.
+fn walk_rank_bitmap(log: &alto::simharness::EventLog, total_gpus: usize) {
+    let mut free = vec![true; total_gpus];
+    let mut held: BTreeMap<usize, Placement> = BTreeMap::new();
+    for e in log.events() {
+        match &e.kind {
+            EventKind::Arrival { .. } => {}
+            EventKind::Start { task, gpus, placement }
+            | EventKind::Placed { task, gpus, placement } => {
+                assert_eq!(placement.len(), *gpus, "event {e}");
+                assert!(!held.contains_key(task), "task {task} started while held: {e}");
+                for &g in placement.gpus() {
+                    assert!(g < total_gpus, "GPU {g} out of range: {e}");
+                    assert!(free[g], "GPU {g} double-booked: {e}");
+                    free[g] = false;
+                }
+                held.insert(*task, placement.clone());
+            }
+            EventKind::Migrate { task, gpus, to, .. } => {
+                // the old GPUs were already freed by the Preempt/Evict
+                // that took this task off the cluster
+                assert_eq!(to.len(), *gpus, "event {e}");
+                assert!(!held.contains_key(task), "migrating task {task} still held: {e}");
+                for &g in to.gpus() {
+                    assert!(g < total_gpus, "GPU {g} out of range: {e}");
+                    assert!(free[g], "GPU {g} double-booked by migration: {e}");
+                    free[g] = false;
+                }
+                held.insert(*task, to.clone());
+            }
+            EventKind::Complete { task, .. } => {
+                let p = held
+                    .remove(task)
+                    .unwrap_or_else(|| panic!("task {task} completed without holding: {e}"));
+                for &g in p.gpus() {
+                    assert!(!free[g], "GPU {g} freed while free: {e}");
+                    free[g] = true;
+                }
+            }
+            EventKind::Preempt { task, placement, .. } => {
+                let p = held
+                    .remove(task)
+                    .unwrap_or_else(|| panic!("task {task} preempted without holding: {e}"));
+                assert_eq!(placement, &p, "preempt released wrong GPUs: {e}");
+                for &g in p.gpus() {
+                    assert!(!free[g], "GPU {g} freed while free: {e}");
+                    free[g] = true;
+                }
+            }
+            EventKind::Evict { task, placement, .. } => {
+                if placement.is_empty() {
+                    // queue shed: the task never held GPUs
+                    assert!(!held.contains_key(task), "shed task {task} still held: {e}");
+                } else {
+                    let p = held
+                        .remove(task)
+                        .unwrap_or_else(|| panic!("task {task} evicted without holding: {e}"));
+                    assert_eq!(placement, &p, "evict released wrong GPUs: {e}");
+                    for &g in p.gpus() {
+                        assert!(!free[g], "GPU {g} freed while free: {e}");
+                        free[g] = true;
+                    }
+                }
+            }
+            EventKind::Resize { task, gpus, placement, .. } => {
+                if placement.is_empty() {
+                    // grow past the held placement: the paired rank-grow
+                    // Evict (same drain cycle) releases the old GPUs
+                    assert!(held.contains_key(task), "resized a non-running task: {e}");
+                } else {
+                    // in place or shrink: the new placement replaces the
+                    // old (a prefix of it — free-then-claim checks that)
+                    assert_eq!(placement.len(), *gpus, "event {e}");
+                    let old = held
+                        .remove(task)
+                        .unwrap_or_else(|| panic!("task {task} resized without holding: {e}"));
+                    for &g in old.gpus() {
+                        assert!(!free[g], "GPU {g} freed while free: {e}");
+                        free[g] = true;
+                    }
+                    for &g in placement.gpus() {
+                        assert!(g < total_gpus, "GPU {g} out of range: {e}");
+                        assert!(free[g], "GPU {g} double-booked by resize: {e}");
+                        free[g] = false;
+                    }
+                    held.insert(*task, placement.clone());
+                }
+            }
+            EventKind::Reprice { task, .. } => {
+                assert!(held.contains_key(task), "repriced a non-running task: {e}");
+            }
+            EventKind::Segment { .. }
+            | EventKind::JobExit { .. }
+            | EventKind::Fail { .. }
+            | EventKind::Recover { .. }
+            | EventKind::Slowdown { .. }
+            | EventKind::Restore { .. } => {}
+            EventKind::Adopt { .. } | EventKind::Merge { .. } => {
+                // shared-executor rosters alias one placement across
+                // tasks; this walker checks exclusive ownership only
+                panic!("walker does not model shared-executor groups: {e}")
+            }
+        }
+        let live: usize = held.values().map(|p| p.len()).sum();
+        assert!(
+            live <= total_gpus,
+            "live footprint {live} exceeds the {total_gpus}-GPU capacity after {e}"
+        );
+    }
+    assert!(held.is_empty(), "timeline ended with live allocations: {held:?}");
+    assert!(free.iter().all(|&f| f), "timeline ended with a dirty bitmap");
+}
+
+#[test]
+fn idle_rank_policy_changes_no_digest_bits() {
+    // the no-op contract: the explicit off() policy and an enabled
+    // policy whose thresholds can never fire (the sensitivity signal is
+    // bounded by the penalty terms, far inside ±1e300) both replay
+    // every trace family bit-identically to the default configuration —
+    // planning runs, but not one digest bit moves
+    let armed_idle = RankPolicy {
+        grow_above: 1e300,
+        shrink_below: -1e300,
+        ..RankPolicy::paper()
+    };
+    armed_idle.validate().unwrap();
+    let base = HarnessConfig {
+        total_gpus: 16,
+        island_size: 8,
+        policy: Policy::Optimal,
+        place: PlacePolicy::IslandFirst,
+        ..HarnessConfig::default()
+    };
+    for seed in [3u64, 11] {
+        let cases: Vec<(&str, Trace, bool)> = vec![
+            ("uniform", Trace::uniform_large(12, 32, 40.0, seed), false),
+            ("frag", Trace::fragmentation_heavy(10, 32, seed), false),
+            ("preempt", Trace::preemption_stress(3, 4, 32, seed), true),
+            ("rank-heavy", Trace::rank_heavy(12, 2800, 30.0, seed), false),
+        ];
+        for (label, trace, preempt) in cases {
+            let cfg = HarnessConfig {
+                preempt_on_arrival: preempt,
+                ..base.clone()
+            };
+            let clean = SimEngine::new(cfg.clone()).run_streaming(&trace).unwrap();
+            for (which, policy) in [("off", RankPolicy::off()), ("armed-idle", armed_idle)] {
+                let quiet = SimEngine::new(HarnessConfig {
+                    rank: policy,
+                    ..cfg.clone()
+                })
+                .run_streaming(&trace)
+                .unwrap();
+                let tag = format!("{label} seed {seed} ({which})");
+                assert_eq!(
+                    quiet.timeline.log.digest(),
+                    clean.timeline.log.digest(),
+                    "{tag}: idle rank machinery perturbed the digest"
+                );
+                assert_eq!(
+                    quiet.timeline.makespan.to_bits(),
+                    clean.timeline.makespan.to_bits(),
+                    "{tag}: makespan drifted"
+                );
+                assert_eq!(
+                    quiet.timeline.gpu_seconds.to_bits(),
+                    clean.timeline.gpu_seconds.to_bits(),
+                    "{tag}: charged GPU-seconds drifted"
+                );
+                assert_eq!(quiet.timeline.log.len(), clean.timeline.log.len(), "{tag}");
+                assert_eq!(quiet.timeline.resizes, 0, "{tag}");
+            }
+        }
+        // the rank-heavy family additionally through all three engine
+        // paths: off() stays digest-invisible in each loop
+        let trace = Trace::rank_heavy(12, 2800, 30.0, seed);
+        let clean = SimEngine::new(base.clone()).run(&trace).unwrap();
+        let off_cfg = HarnessConfig {
+            rank: RankPolicy::off(),
+            ..base.clone()
+        };
+        let engine = SimEngine::new(off_cfg);
+        let off_batch = engine.run(&trace).unwrap();
+        let off_stream = engine.run_streaming(&trace).unwrap();
+        let mut src = StreamingTrace::rank_heavy(12, 2800, 30.0, seed);
+        let off_src = engine.run_source(&mut src).unwrap();
+        let tag = format!("rank-heavy seed {seed}");
+        assert_eq!(off_batch.log.digest(), clean.log.digest(), "{tag}: batch");
+        assert_eq!(
+            off_stream.timeline.log.digest(),
+            clean.log.digest(),
+            "{tag}: streaming"
+        );
+        assert_eq!(off_src.log.digest(), clean.log.digest(), "{tag}: source");
+    }
+}
+
+#[test]
+fn rank_reallocation_replays_identically_across_all_three_engine_paths() {
+    // the replay contract with the paper policy live: batch `run`,
+    // streaming and the lazy source-driven loop fold Resize events and
+    // rank-grow evictions into bit-identical digests, with the resize
+    // counters agreeing across paths and with each other
+    for seed in [3u64, 11] {
+        let cfg = HarnessConfig {
+            total_gpus: 16,
+            island_size: 8,
+            policy: Policy::Optimal,
+            place: PlacePolicy::IslandFirst,
+            rank: RankPolicy::paper(),
+            ..HarnessConfig::default()
+        };
+        let trace = Trace::rank_heavy(16, 2800, 30.0, seed);
+        let mut src = StreamingTrace::rank_heavy(16, 2800, 30.0, seed);
+        let engine = SimEngine::new(cfg);
+        let batch = engine.run(&trace).unwrap();
+        let stream = engine.run_streaming(&trace).unwrap();
+        let lean = engine.run_source(&mut src).unwrap();
+        let tag = format!("seed {seed}");
+        assert_eq!(
+            stream.timeline.log.digest(),
+            batch.log.digest(),
+            "{tag}: streaming drifted from batch under rank reallocation"
+        );
+        assert_eq!(
+            lean.log.digest(),
+            batch.log.digest(),
+            "{tag}: source-driven drifted from batch under rank reallocation"
+        );
+        assert_eq!(stream.timeline.log.len(), batch.log.len(), "{tag}");
+        assert_eq!(lean.log.len(), batch.log.len(), "{tag}");
+        assert_eq!(
+            stream.timeline.makespan.to_bits(),
+            batch.makespan.to_bits(),
+            "{tag}: makespan drifted"
+        );
+        assert_eq!(lean.makespan.to_bits(), batch.makespan.to_bits(), "{tag}");
+        for (path, resizes, grows, shrinks, evictions) in [
+            (
+                "streaming",
+                stream.timeline.resizes,
+                stream.timeline.rank_grows,
+                stream.timeline.rank_shrinks,
+                stream.timeline.resize_evictions,
+            ),
+            (
+                "source",
+                lean.resizes,
+                lean.rank_grows,
+                lean.rank_shrinks,
+                lean.resize_evictions,
+            ),
+        ] {
+            assert_eq!(resizes, batch.resizes, "{tag}: {path} resize count drifted");
+            assert_eq!(grows, batch.rank_grows, "{tag}: {path} grow count drifted");
+            assert_eq!(shrinks, batch.rank_shrinks, "{tag}: {path} shrink count drifted");
+            assert_eq!(
+                evictions, batch.resize_evictions,
+                "{tag}: {path} eviction count drifted"
+            );
+        }
+        // the trace is built to exercise both directions: every applied
+        // step is a grow or a shrink, and every grow on this trace
+        // outgrows its held placement (1 → 2 or 2 → 4 GPUs)
+        assert!(batch.rank_grows >= 1, "{tag}: no grow ever fired");
+        assert!(batch.rank_shrinks >= 1, "{tag}: no shrink ever fired");
+        assert_eq!(batch.resizes, batch.rank_grows + batch.rank_shrinks, "{tag}");
+        assert_eq!(batch.resize_evictions, batch.rank_grows, "{tag}");
+        assert_eq!(lean.tasks, trace.len(), "{tag}");
+    }
+}
+
+#[test]
+fn rank_resizes_keep_the_rederived_bitmap_consistent_and_within_capacity() {
+    // replay the event log against an independent bitmap: in-place
+    // shrinks hand back their GPU suffix, grow evictions release the
+    // *old* placement (their `gpus` field already reads the post-step
+    // footprint), and no interleaving ever double-books a device or
+    // pushes the live footprint past capacity
+    let trace = Trace::rank_heavy(16, 2800, 30.0, 7);
+    let report = SimEngine::new(HarnessConfig {
+        total_gpus: 16,
+        island_size: 8,
+        policy: Policy::Optimal,
+        place: PlacePolicy::IslandFirst,
+        rank: RankPolicy::paper(),
+        ..HarnessConfig::default()
+    })
+    .run(&trace)
+    .unwrap();
+    assert!(report.rank_shrinks >= 1, "no in-place Resize to walk through");
+    assert!(report.rank_grows >= 1, "no grow eviction to walk through");
+    let events = report.log.events();
+    // grow-shaped Resizes (empty placement) pair 1:1 with rank-grow
+    // evictions; everything else resized in place
+    let empty_resizes = events
+        .iter()
+        .filter(|e| {
+            matches!(&e.kind, EventKind::Resize { placement, .. } if placement.is_empty())
+        })
+        .count();
+    let grow_evicts = events
+        .iter()
+        .filter(|e| {
+            matches!(
+                &e.kind,
+                EventKind::Evict {
+                    reason: EvictReason::RankGrow,
+                    ..
+                }
+            )
+        })
+        .count();
+    assert_eq!(empty_resizes, grow_evicts, "unpaired grow Resize/Evict");
+    assert_eq!(grow_evicts, report.resize_evictions, "counter / event-log mismatch");
+    let in_place = events
+        .iter()
+        .filter(|e| {
+            matches!(&e.kind, EventKind::Resize { placement, .. } if !placement.is_empty())
+        })
+        .count();
+    assert_eq!(in_place + empty_resizes, report.resizes, "counter / event-log mismatch");
+    walk_rank_bitmap(&report.log, 16);
+}
+
+#[test]
+fn rank_grow_evictions_checkpoint_restore_and_no_task_is_lost() {
+    // conservation: with faults and overload off, the only evictions a
+    // rank-heavy run may contain are planned rank-grow requeues — and
+    // every one of them must checkpoint-restore and complete
+    let trace = Trace::rank_heavy(20, 2800, 10.0, 23);
+    let report = SimEngine::new(HarnessConfig {
+        total_gpus: 16,
+        island_size: 8,
+        policy: Policy::Optimal,
+        place: PlacePolicy::IslandFirst,
+        rank: RankPolicy::paper(),
+        ..HarnessConfig::default()
+    })
+    .run_streaming(&trace)
+    .unwrap();
+    let tl = &report.timeline;
+    let (mut completes, mut evicts, mut resizes) = (0usize, 0usize, 0usize);
+    for e in tl.log.events() {
+        match &e.kind {
+            EventKind::Complete { .. } => completes += 1,
+            EventKind::Evict { reason, .. } => {
+                assert_eq!(
+                    *reason,
+                    EvictReason::RankGrow,
+                    "faults and overload are off: only rank-grow evictions may occur"
+                );
+                evicts += 1;
+            }
+            EventKind::Resize { .. } => resizes += 1,
+            _ => {}
+        }
+    }
+    assert_eq!(completes, trace.len(), "a task was lost to a rank resize");
+    assert!(evicts >= 1, "growers must evict-and-requeue at least once");
+    assert_eq!(evicts, tl.resize_evictions, "counter / event-log mismatch");
+    assert_eq!(resizes, tl.resizes, "counter / event-log mismatch");
+    assert_eq!(
+        tl.resize_evictions, tl.rank_grows,
+        "every grow on this trace outgrows its held placement"
+    );
+    assert_eq!(tl.fault_evictions, 0);
+    assert_eq!(tl.sheds, 0);
+    for s in &report.summaries {
+        assert!(
+            s.actual_duration.is_finite(),
+            "task '{}' never resolved — its resize lost the checkpoint",
             s.name
         );
     }
